@@ -1,0 +1,92 @@
+//! Ablations over DIANA's design knobs (DESIGN.md §5 calls these out):
+//!
+//!  A. migration on/off            — §IX's contribution under overload
+//!  B. congestion threshold Thrs   — §X: higher Thrs ⇒ fewer migrations
+//!  C. aging half-life             — §VII starvation control
+//!  D. group division factor      — §VIII (see also bulk_groups)
+//!
+//!     cargo run --release --example ablations
+
+use diana::config::presets;
+use diana::coordinator::{generate_workload, run_simulation_with};
+use diana::metrics::{fmt_secs, render_table};
+use diana::workload::Submission;
+
+fn hot_workload() -> (diana::config::GridConfig, Vec<Submission>) {
+    // Sustained mild overload of one site: arrivals ~0.25 jobs/s vs
+    // ~0.07 jobs/s local service, so the §X imbalance sits mid-range
+    // and the Thrs sweep actually discriminates.
+    let mut cfg = presets::paper_testbed();
+    cfg.workload.jobs = 400;
+    cfg.workload.bulk_size = 5;
+    cfg.workload.arrival_rate = 0.05;
+    cfg.workload.cpu_sec_median = 60.0;
+    cfg.workload.cpu_sec_sigma = 0.3;
+    cfg.workload.in_mb_median = 100.0;
+    let mut subs = generate_workload(&cfg);
+    for s in &mut subs {
+        s.group.pin_site = Some(0); // flood one site; migration must shed
+    }
+    (cfg, subs)
+}
+
+fn main() -> anyhow::Result<()> {
+    diana::util::logging::init();
+
+    // A + B: migration off, then Thrs sweep.
+    let (cfg, subs) = hot_workload();
+    let mut rows = Vec::new();
+    for (label, max_migr, thrs) in [
+        ("migration OFF", 0u32, 0.2),
+        ("thrs=0.05", 1, 0.05),
+        ("thrs=0.2", 1, 0.2),
+        ("thrs=0.5", 1, 0.5),
+        ("thrs=0.9", 1, 0.9),
+    ] {
+        let mut c = cfg.clone();
+        c.scheduler.max_migrations = max_migr;
+        c.scheduler.congestion_thrs = thrs;
+        c.scheduler.migration_period_s = 15.0;
+        let (_, r) = run_simulation_with(&c, subs.clone())?;
+        rows.push(vec![
+            label.to_string(),
+            r.migrations.to_string(),
+            fmt_secs(r.queue_time.mean()),
+            fmt_secs(r.makespan_s),
+        ]);
+    }
+    println!("== Ablation A/B: §IX migration + §X congestion threshold ==");
+    println!("(one flooded site; higher Thrs tolerates more congestion\n\
+              => fewer migrations => longer queues — §X's stated trade)\n");
+    println!("{}", render_table(
+        &["config", "migrations", "queue", "makespan"], &rows));
+
+    // C: aging half-life on a mixed-priority, multi-user queue
+    // (un-pinned: priorities actually spread across Q1..Q4 here).
+    let (cfg_c, subs_c) = {
+        let mut c = cfg.clone();
+        c.workload.users = 8;
+        c.workload.max_procs = 8;
+        (c.clone(), generate_workload(&c))
+    };
+    let mut rows = Vec::new();
+    for halflife in [0.0, 120.0, 600.0, 3600.0] {
+        let mut c = cfg_c.clone();
+        c.scheduler.aging_halflife_s = halflife;
+        let (w, r) = run_simulation_with(&c, subs_c.clone())?;
+        let p95 = w
+            .recorder
+            .summary(diana::metrics::JobRecord::queue_time)
+            .percentile(95.0);
+        rows.push(vec![
+            if halflife == 0.0 { "aging OFF".into() }
+            else { format!("halflife={halflife}s") },
+            fmt_secs(r.queue_time.mean()),
+            fmt_secs(p95),
+        ]);
+    }
+    println!("== Ablation C: §VII aging (tail queue times) ==\n");
+    println!("{}", render_table(&["config", "queue mean", "queue p95"],
+                                &rows));
+    Ok(())
+}

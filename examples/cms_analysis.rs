@@ -1,0 +1,60 @@
+//! CMS physics-analysis scenario (§II case study): a tiered T0/T1/T2
+//! grid with data concentrated at higher tiers, 100 users submitting
+//! bulk analysis jobs over ~30 GB datasets. Compares DIANA against the
+//! §XI baselines on the identical workload.
+//!
+//!     cargo run --release --example cms_analysis
+
+use diana::config::{presets, Policy};
+use diana::coordinator::{generate_workload, run_simulation_with};
+use diana::metrics::{fmt_secs, render_table};
+
+fn main() -> anyhow::Result<()> {
+    diana::util::logging::init();
+
+    let mut cfg = presets::cms_tier_grid();
+    cfg.workload.jobs = 600;        // keep the demo < 1 min
+    cfg.workload.bulk_size = 100;   // physicist submits 100-job bursts
+    cfg.workload.cpu_sec_median = 900.0;
+
+    println!(
+        "CMS tier grid: {} sites / {} CPUs; {} jobs, {} users, \
+         ~{:.0} GB median dataset\n",
+        cfg.sites.len(),
+        cfg.total_cpus(),
+        cfg.workload.jobs,
+        cfg.workload.users,
+        cfg.workload.in_mb_median / 1000.0
+    );
+
+    // One workload, every policy — the §XI comparison.
+    let subs = generate_workload(&cfg);
+    let mut rows = Vec::new();
+    for policy in [Policy::Diana, Policy::FcfsBroker, Policy::Greedy,
+                   Policy::DataLocal, Policy::Random] {
+        let mut c = cfg.clone();
+        c.scheduler.policy = policy;
+        let (_, r) = run_simulation_with(&c, subs.clone())?;
+        rows.push(vec![
+            policy.name().to_string(),
+            fmt_secs(r.queue_time.mean()),
+            fmt_secs(r.exec_time.mean()),
+            fmt_secs(r.turnaround.mean()),
+            fmt_secs(r.makespan_s),
+            format!("{:.3}", r.throughput_jobs_per_s),
+            r.migrations.to_string(),
+        ]);
+        eprintln!("  ran {}", policy.name());
+    }
+    println!("{}", render_table(
+        &["policy", "queue", "exec", "turnaround", "makespan",
+          "jobs/s", "migr"],
+        &rows,
+    ));
+    println!(
+        "Expected shape (§XI): diana's queue time and turnaround beat the\n\
+         network/data-blind baselines; data-local piles queues on replica\n\
+         sites; greedy/random ship TBs across the WAN."
+    );
+    Ok(())
+}

@@ -1,0 +1,27 @@
+//! Coordinator scale check: push a 10 000-job day through the full
+//! stack and report end-to-end wallclock — §II's maximum envelope is
+//! 10 000 jobs *per day*; the coordinator should clear it in well under
+//! a second (EXPERIMENTS.md §Perf).
+//!
+//!     cargo run --release --example flood_bench
+
+fn main() {
+    diana::util::logging::init();
+    let mut cfg = diana::config::presets::uniform_grid(8, 32);
+    cfg.workload.jobs = 10_000;
+    cfg.workload.bulk_size = 2000;
+    cfg.workload.cpu_sec_median = 60.0;
+    cfg.workload.in_mb_median = 50.0;
+    let subs = diana::coordinator::generate_workload(&cfg);
+    let t0 = std::time::Instant::now();
+    let (w, r) = diana::coordinator::run_simulation_with(&cfg, subs).unwrap();
+    let wall = t0.elapsed();
+    println!(
+        "10k-job flood: {wall:?} wall, {} DES events, {} jobs done, \
+         {:.0} jobs/s end-to-end",
+        w.events_processed(),
+        r.jobs,
+        r.jobs as f64 / wall.as_secs_f64()
+    );
+    assert_eq!(r.jobs, 10_000);
+}

@@ -1,0 +1,12 @@
+//! §IX/§X migration dynamics: flood one small site and watch the export
+//! rate track submissions while peers import (Figs 9–11).
+//!
+//!     cargo run --release --example migration_dynamics
+
+fn main() -> anyhow::Result<()> {
+    diana::util::logging::init();
+    for fig in ["fig9", "fig10", "fig11"] {
+        println!("{}", diana::repro::run_figure(fig)?);
+    }
+    Ok(())
+}

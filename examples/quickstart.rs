@@ -1,0 +1,38 @@
+//! Quickstart: build a small grid, submit a bulk workload, print the
+//! standard run report.
+//!
+//!     cargo run --release --example quickstart
+
+use diana::config::presets;
+use diana::coordinator::run_simulation;
+
+fn main() -> anyhow::Result<()> {
+    diana::util::logging::init();
+
+    // The paper's §XI five-site testbed (site1 = 4 nodes, rest = 5).
+    let mut cfg = presets::paper_testbed();
+    cfg.workload.jobs = 200;
+    cfg.workload.bulk_size = 25;
+    cfg.workload.cpu_sec_median = 120.0;
+
+    println!(
+        "grid `{}`: {} sites / {} CPUs, {} jobs in bulks of {}\n",
+        cfg.name,
+        cfg.sites.len(),
+        cfg.total_cpus(),
+        cfg.workload.jobs,
+        cfg.workload.bulk_size
+    );
+
+    let (world, report) = run_simulation(&cfg)?;
+    diana::cli::print_report(&report);
+
+    println!("per-group aggregation results (first 5):");
+    for g in world.group_results.iter().take(5) {
+        println!(
+            "  group {:>3}: {:>8.1} MB aggregated to site {} in {:.1}s",
+            g.group.0, g.total_output_mb, g.output_site, g.aggregation_s
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,1 @@
+"""Build-time compile path: JAX model + Pallas kernels + AOT lowering."""

@@ -1,0 +1,81 @@
+"""AOT: lower the L2 entry points to HLO *text* for the rust PJRT runtime.
+
+HLO text — NOT ``lowered.compile()`` or proto ``.serialize()`` — is the
+interchange format: jax ≥ 0.5 emits HloModuleProto with 64-bit instruction
+ids which xla_extension 0.5.1 (the version the published ``xla`` 0.1.6
+crate binds) rejects (``proto.id() <= INT_MAX``).  The HLO text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR → XlaComputation → HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_schedule_step(jobs=None):
+    f32 = jax.ShapeDtypeStruct
+    import jax.numpy as jnp
+    j = jobs or model.AOT_JOBS
+    args = (
+        f32((j, 6), jnp.float32),                     # job_feats
+        f32((model.AOT_SITES, 8), jnp.float32),       # site_feats
+        f32((j, model.AOT_SITES), jnp.float32),       # link_bw
+        f32((j, model.AOT_SITES), jnp.float32),       # link_loss
+        f32((8,), jnp.float32),                       # weights
+    )
+    return jax.jit(model.schedule_step).lower(*args)
+
+
+def lower_reprioritize():
+    import jax.numpy as jnp
+    f32 = jax.ShapeDtypeStruct
+    args = (
+        f32((model.AOT_QUEUE, 4), jnp.float32),       # jobs
+        f32((4,), jnp.float32),                       # totals
+    )
+    return jax.jit(model.reprioritize).lower(*args)
+
+
+ENTRIES = {
+    "cost_matrix": lower_schedule_step,
+    # Small-batch variant: singleton evaluations (migration checks,
+    # per-group representative costs) waste 97% of the 256-row tile;
+    # the runtime picks this one for batches ≤ AOT_JOBS_SMALL.
+    "cost_matrix_small": lambda: lower_schedule_step(model.AOT_JOBS_SMALL),
+    "priority": lower_reprioritize,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", choices=sorted(ENTRIES), default=None)
+    ns = ap.parse_args()
+    os.makedirs(ns.out_dir, exist_ok=True)
+    for name, lower in ENTRIES.items():
+        if ns.only and name != ns.only:
+            continue
+        text = to_hlo_text(lower())
+        path = os.path.join(ns.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {len(text):>8} chars  {path}")
+
+
+if __name__ == "__main__":
+    main()

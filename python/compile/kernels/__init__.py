@@ -1,0 +1,7 @@
+"""DIANA Pallas kernels (L1) and their pure-jnp oracles."""
+
+from .cost_matrix import cost_matrix
+from .priority import priority
+from .ref import cost_matrix_ref, priority_ref
+
+__all__ = ["cost_matrix", "priority", "cost_matrix_ref", "priority_ref"]

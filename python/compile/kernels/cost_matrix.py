@@ -1,0 +1,109 @@
+"""Pallas kernel: fused DIANA J×S cost-matrix evaluation (§IV).
+
+One pass over a (job_block × S) tile computes all three cost terms —
+network, computation, data transfer — plus the dead-site penalty, fused in
+VMEM.  The grid iterates over job blocks; site features and weights are
+small and broadcast to every block.
+
+TPU shape of the computation (DESIGN.md §Hardware-Adaptation): there is no
+matmul — this is VPU element-wise work, roofline-bound on HBM bandwidth.
+The BlockSpec schedule reads each job-feature row and link row exactly once
+and writes each output tile exactly once; with J=256, S=32 the whole
+problem is a single VMEM-resident tile (~160 KiB for all outputs), so the
+block size is chosen for occupancy on larger J (pipelined 128-row blocks).
+
+interpret=True everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls; numerics are identical to the TPU path.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# §Perf: one block for the whole AOT tile (256×32 f32 ≈ 32 KiB ≪ VMEM).
+# A single block lowers to straight-line HLO — no grid while-loop — which
+# both the CPU PJRT backend and a real TPU pipeline prefer at this size.
+# Larger J (interactive sweeps) still tiles via the block_j argument.
+DEFAULT_BLOCK_J = 256
+
+
+def _cost_kernel(job_ref, site_ref, bw_ref, loss_ref, w_ref,
+                 total_ref, comp_ref, dtc_ref, net_ref):
+    """One job-block tile: job_ref[BJ,6], site_ref[S,8], bw/loss[BJ,S]."""
+    w = w_ref[...]
+    w5, w6, w7 = w[0], w[1], w[2]
+    q_total, w_net, w_dtc = w[3], w[4], w[5]
+    eps, big = w[6], w[7]
+
+    site = site_ref[...]
+    qi = site[:, 0]
+    pi = jnp.maximum(site[:, 1], eps)
+    load = site[:, 2]
+    cbw = jnp.maximum(site[:, 3], eps)
+    closs = site[:, 4]
+    alive = site[:, 5]
+
+    bw = jnp.maximum(bw_ref[...], eps)
+    loss = loss_ref[...]
+
+    # §IV NetworkCost = Losses / Bandwidth (pairwise replica→site path).
+    net = loss / bw
+    # §IV ComputationCost = (Qi/Pi)·W5 + (Q/Pi)·W6 + SiteLoad·W7 (per site).
+    comp = (qi / pi) * w5 + (q_total / pi) * w6 + load * w7
+    # §IV DTC = input + output + executable transfer costs.
+    job = job_ref[...]
+    in_mb = job[:, 0:1]
+    out_mb = job[:, 1:2]
+    exe_mb = job[:, 2:3]
+    client = (1.0 + closs) / cbw
+    dtc = (in_mb / bw) * (1.0 + loss) + (out_mb + exe_mb) * client[None, :]
+
+    total = w_net * net + comp[None, :] + w_dtc * dtc
+    total = total + (1.0 - alive)[None, :] * big
+
+    total_ref[...] = total
+    comp_ref[...] = comp
+    dtc_ref[...] = dtc
+    net_ref[...] = net
+
+
+@functools.partial(jax.jit, static_argnames=("block_j",))
+def cost_matrix(job_feats, site_feats, link_bw, link_loss, weights,
+                block_j=DEFAULT_BLOCK_J):
+    """Fused cost matrix via Pallas; returns (total, best, comp, dtc, net).
+
+    Shapes: job_feats[J,6] site_feats[S,8] link_bw/link_loss[J,S] weights[8],
+    J divisible by block_j.  Output comp is [S] (site-only term); argmin is
+    computed outside the kernel (cheap reduction XLA fuses anyway).
+    """
+    j, s = link_bw.shape
+    bj = min(block_j, j)
+    grid = (j // bj,)
+    total, comp, dtc, net = pl.pallas_call(
+        _cost_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bj, job_feats.shape[1]), lambda i: (i, 0)),
+            pl.BlockSpec((s, site_feats.shape[1]), lambda i: (0, 0)),
+            pl.BlockSpec((bj, s), lambda i: (i, 0)),
+            pl.BlockSpec((bj, s), lambda i: (i, 0)),
+            pl.BlockSpec((weights.shape[0],), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bj, s), lambda i: (i, 0)),
+            pl.BlockSpec((s,), lambda i: (0,)),
+            pl.BlockSpec((bj, s), lambda i: (i, 0)),
+            pl.BlockSpec((bj, s), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((j, s), jnp.float32),
+            jax.ShapeDtypeStruct((s,), jnp.float32),
+            jax.ShapeDtypeStruct((j, s), jnp.float32),
+            jax.ShapeDtypeStruct((j, s), jnp.float32),
+        ],
+        interpret=True,
+    )(job_feats, site_feats, link_bw, link_loss, weights)
+    best = jnp.argmin(total, axis=1).astype(jnp.int32)
+    return total, best, comp, dtc, net

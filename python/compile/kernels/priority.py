@@ -1,0 +1,68 @@
+"""Pallas kernel: batch re-prioritization Pr(n) over all queued jobs (§X).
+
+On every arrival DIANA recomputes the priority of *every* queued job — an
+O(L) sweep that is the second hot spot of the coordinator.  The kernel
+evaluates the piecewise Pr(n) branch-free (select) over L-sized blocks and
+bins each job into its feedback queue Q1..Q4.
+
+interpret=True (CPU PJRT; see cost_matrix.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# §Perf: single block for the whole AOT queue (512×4 f32 = 8 KiB ≪ VMEM);
+# see cost_matrix.py for the rationale.
+DEFAULT_BLOCK_L = 512
+
+
+def _priority_kernel(jobs_ref, totals_ref, pr_ref, queue_ref):
+    jobs = jobs_ref[...]
+    totals = totals_ref[...]
+    n = jobs[:, 0]
+    t = jnp.maximum(jobs[:, 1], 1e-6)
+    q = jobs[:, 2]
+    cap_t = jnp.maximum(totals[0], 1e-6)
+    cap_q = jnp.maximum(totals[1], 1e-6)
+
+    # §X eq (VI): N = (q·T)/(Q·t); the threshold is per-job ("dynamic").
+    big_n = (q * cap_t) / (cap_q * t)
+    # Pr(n) = (N-n)/N if n ≤ N else (N-n)/n — branch-free select.
+    pr = jnp.where(n <= big_n, (big_n - n) / jnp.maximum(big_n, 1e-6),
+                   (big_n - n) / jnp.maximum(n, 1e-6))
+
+    # Queue ranges (§X): Q1 [0.5,1] Q2 [0,0.5) Q3 [-0.5,0) Q4 [-1,-0.5).
+    queue = jnp.where(
+        pr >= 0.5, 0, jnp.where(pr >= 0.0, 1, jnp.where(pr >= -0.5, 2, 3))
+    ).astype(jnp.int32)
+
+    pr_ref[...] = pr
+    queue_ref[...] = queue
+
+
+@functools.partial(jax.jit, static_argnames=("block_l",))
+def priority(jobs, totals, block_l=DEFAULT_BLOCK_L):
+    """Batch Pr(n): jobs[L,4], totals[4] → (pr[L], queue_idx[L] i32)."""
+    l = jobs.shape[0]
+    bl = min(block_l, l)
+    grid = (l // bl,)
+    return pl.pallas_call(
+        _priority_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bl, jobs.shape[1]), lambda i: (i, 0)),
+            pl.BlockSpec((totals.shape[0],), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bl,), lambda i: (i,)),
+            pl.BlockSpec((bl,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((l,), jnp.float32),
+            jax.ShapeDtypeStruct((l,), jnp.int32),
+        ],
+        interpret=True,
+    )(jobs, totals)

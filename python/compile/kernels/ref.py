@@ -1,0 +1,118 @@
+"""Pure-jnp reference oracle for the DIANA cost-model and priority kernels.
+
+This file is the *numerical contract* of the whole stack:
+
+  * ``cost_matrix_ref``   — eq. (§IV) of the paper: Network / Computation /
+    Data-Transfer costs fused into a J×S total-cost matrix.
+  * ``priority_ref``      — eq. (VI) + the Pr(n) algorithm of §X.
+
+The Pallas kernels in ``cost_matrix.py`` / ``priority.py`` are checked
+against these functions by pytest (exact same op order), and the rust
+``cost::model`` / ``priority::formula`` modules mirror the same f32
+expressions; the rust↔XLA cross-check test tolerates 1e-5 relative.
+
+Feature layouts (mirrored in rust/src/cost/engine.rs — keep in sync!):
+
+  job_feats[J, 6]  : 0 in_mb      input dataset size (MB) from its replica
+                     1 out_mb     output size (MB), shipped to the client
+                     2 exe_mb     executable/sandbox size (MB)
+                     3 cpu_sec    estimated CPU seconds (used by SJF, not cost)
+                     4 class      0=compute, 1=data, 2=both (not used in kernel)
+                     5 reserved
+  site_feats[S, 8] : 0 queue_len  Qi — jobs waiting at the site
+                     1 capability Pi — normalised compute capability (>0)
+                     2 load       current site load in [0,1]
+                     3 client_bw  achievable bandwidth site→client (Mbps)
+                     4 client_loss loss fraction on that path [0,1)
+                     5 alive      1.0 = alive, 0.0 = dead (cost forced huge)
+                     6 reserved
+                     7 reserved
+  link_bw[J, S]    : achievable bandwidth (Mbps) data-replica(j) → site s
+  link_loss[J, S]  : loss fraction on the same path
+  weights[8]       : 0 w5   queue-length weight       (§IV computation cost)
+                     1 w6   global-queue weight
+                     2 w7   site-load weight
+                     3 q_total  global queued jobs Q (scalar smuggled here)
+                     4 w_net    weight of the network-cost term
+                     5 w_dtc    weight of the data-transfer term
+                     6 eps      bandwidth guard (e.g. 1e-6)
+                     7 big      dead-site penalty (e.g. 1e9)
+"""
+
+import jax.numpy as jnp
+
+# Dead-site penalty / bandwidth guard defaults (also in rust cost/model.rs).
+DEFAULT_EPS = 1e-6
+DEFAULT_BIG = 1e9
+
+JOB_FEATS = 6
+SITE_FEATS = 8
+WEIGHTS = 8
+
+
+def cost_matrix_ref(job_feats, site_feats, link_bw, link_loss, weights):
+    """Return (total[J,S], best[J] i32, comp[S], dtc[J,S], net[J,S]).
+
+    total = w_net·net + comp + w_dtc·dtc  (+ BIG where the site is dead)
+      net[j,s]  = loss[j,s] / bw[j,s]                      (§IV NetworkCost)
+      comp[s]   = (Qi/Pi)·w5 + (Q/Pi)·w6 + load·w7          (§IV ComputationCost)
+      dtc[j,s]  = in_mb/bw·(1+loss) + (out_mb+exe_mb)·(1+closs)/cbw   (§IV DTC)
+    """
+    w5, w6, w7 = weights[0], weights[1], weights[2]
+    q_total, w_net, w_dtc = weights[3], weights[4], weights[5]
+    eps, big = weights[6], weights[7]
+
+    qi = site_feats[:, 0]
+    pi = jnp.maximum(site_feats[:, 1], eps)
+    load = site_feats[:, 2]
+    cbw = jnp.maximum(site_feats[:, 3], eps)
+    closs = site_feats[:, 4]
+    alive = site_feats[:, 5]
+
+    bw = jnp.maximum(link_bw, eps)
+    loss = link_loss
+
+    net = loss / bw                                          # [J,S]
+    comp = (qi / pi) * w5 + (q_total / pi) * w6 + load * w7  # [S]
+
+    in_mb = job_feats[:, 0:1]                                # [J,1]
+    out_mb = job_feats[:, 1:2]
+    exe_mb = job_feats[:, 2:3]
+    client = (1.0 + closs) / cbw                             # [S]
+    dtc = (in_mb / bw) * (1.0 + loss) + (out_mb + exe_mb) * client[None, :]
+
+    total = w_net * net + comp[None, :] + w_dtc * dtc
+    total = total + (1.0 - alive)[None, :] * big
+    best = jnp.argmin(total, axis=1).astype(jnp.int32)
+    return total, best, comp, dtc, net
+
+
+def priority_ref(jobs, totals):
+    """Return (pr[L], queue_idx[L] i32) — §X priority + queue assignment.
+
+    jobs[L, 4]: 0 n  — jobs currently queued by this job's user (incl. it)
+                1 t  — processors this job demands (>0)
+                2 q  — the user's quota
+                3 arrival timestamp (tie-break only; unused here)
+    totals[4] : 0 T  — processors demanded by ALL queued jobs
+                1 Q  — sum of quotas of all *distinct* users with queued jobs
+                2 L  — total jobs in all queues (unused by the formula)
+                3 reserved
+
+    N = (q·T)/(Q·t); Pr = (N-n)/N if n ≤ N else (N-n)/n.  Pr ∈ (-1, 1].
+    Queues (§X): Q1 [0.5,1] → 0, Q2 [0,0.5) → 1, Q3 [-0.5,0) → 2, Q4 → 3.
+    """
+    n = jobs[:, 0]
+    t = jnp.maximum(jobs[:, 1], 1e-6)
+    q = jobs[:, 2]
+    cap_t = jnp.maximum(totals[0], 1e-6)
+    cap_q = jnp.maximum(totals[1], 1e-6)
+
+    big_n = (q * cap_t) / (cap_q * t)
+    pr = jnp.where(n <= big_n, (big_n - n) / jnp.maximum(big_n, 1e-6),
+                   (big_n - n) / jnp.maximum(n, 1e-6))
+
+    queue_idx = jnp.where(
+        pr >= 0.5, 0, jnp.where(pr >= 0.0, 1, jnp.where(pr >= -0.5, 2, 3))
+    ).astype(jnp.int32)
+    return pr, queue_idx

@@ -1,0 +1,49 @@
+"""L2: the DIANA scheduling compute graph (build-time JAX).
+
+Two AOT entry points consumed by the rust coordinator:
+
+  * ``schedule_step``  — the per-round matchmaking computation: J×S cost
+    matrix (Pallas kernel) + per-class sort keys + best-site argmins.
+  * ``reprioritize``   — the per-arrival whole-queue Pr(n) sweep.
+
+Both are lowered once to HLO text by ``aot.py`` with the fixed shapes
+AOT_JOBS×AOT_SITES / AOT_QUEUE; rust pads (dead sites cost +BIG, padded
+jobs are ignored rows) and slices the outputs.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import cost_matrix, priority
+
+# Fixed AOT shapes — mirrored in rust/src/runtime/pad.rs.
+AOT_JOBS = 256
+AOT_JOBS_SMALL = 8   # singleton/representative evaluations (§Perf)
+AOT_SITES = 32
+AOT_QUEUE = 512
+
+
+def schedule_step(job_feats, site_feats, link_bw, link_loss, weights):
+    """Full matchmaking round.
+
+    Returns a 7-tuple:
+      total[J,S]      combined §IV cost
+      best_total[J]   argmin site per job, class 'both'
+      best_compute[J] argmin of comp+net — compute-intensive jobs (§V)
+      best_data[J]    argmin of dtc+net — data-intensive jobs (§V)
+      comp[S], dtc[J,S], net[J,S]   individual cost terms (for L3 policies)
+    """
+    total, best_total, comp, dtc, net = cost_matrix(
+        job_feats, site_feats, link_bw, link_loss, weights)
+    # §V: per-class orderings reuse the fused terms — no recomputation.
+    dead = (1.0 - site_feats[:, 5]) * weights[7]
+    compute_key = comp[None, :] + weights[4] * net + dead[None, :]
+    data_key = weights[5] * dtc + weights[4] * net + dead[None, :]
+    best_compute = jnp.argmin(compute_key, axis=1).astype(jnp.int32)
+    best_data = jnp.argmin(data_key, axis=1).astype(jnp.int32)
+    return (total, best_total, best_compute, best_data, comp, dtc, net)
+
+
+def reprioritize(jobs, totals):
+    """Whole-queue Pr(n) sweep → (pr[L], queue_idx[L])."""
+    pr, queue_idx = priority(jobs, totals)
+    return (pr, queue_idx)

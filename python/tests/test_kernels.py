@@ -1,0 +1,202 @@
+"""Kernel-vs-oracle correctness: the CORE numeric signal of the stack.
+
+Pallas kernels (interpret=True) must match the pure-jnp oracle in ref.py
+bit-near; hypothesis sweeps shapes and value ranges.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import (cost_matrix, cost_matrix_ref, priority,
+                             priority_ref)
+from compile.kernels.ref import DEFAULT_BIG, DEFAULT_EPS
+
+
+def make_inputs(rng, j, s):
+    job = np.zeros((j, 6), np.float32)
+    job[:, 0] = rng.uniform(0, 30_000, j)       # in_mb (up to 30 GB, §II)
+    job[:, 1] = rng.uniform(0, 2_000, j)        # out_mb
+    job[:, 2] = rng.uniform(1, 200, j)          # exe_mb
+    job[:, 3] = rng.uniform(1, 7200, j)         # cpu_sec
+    site = np.zeros((s, 8), np.float32)
+    site[:, 0] = rng.integers(0, 500, s)        # queue_len
+    site[:, 1] = rng.uniform(1, 600, s)         # capability
+    site[:, 2] = rng.uniform(0, 1, s)           # load
+    site[:, 3] = rng.uniform(10, 10_000, s)     # client_bw
+    site[:, 4] = rng.uniform(0, 0.1, s)         # client_loss
+    site[:, 5] = (rng.uniform(0, 1, s) > 0.2).astype(np.float32)  # alive
+    bw = rng.uniform(1, 10_000, (j, s)).astype(np.float32)
+    loss = rng.uniform(0, 0.1, (j, s)).astype(np.float32)
+    w = np.array([1.0, 0.5, 2.0, float(rng.integers(0, 2000)),
+                  1.0, 1.0, DEFAULT_EPS, DEFAULT_BIG], np.float32)
+    return job, site, bw, loss, w
+
+
+class TestCostMatrix:
+    def test_matches_ref_basic(self):
+        rng = np.random.default_rng(0)
+        args = make_inputs(rng, 256, 32)
+        got = cost_matrix(*args)
+        want = cost_matrix_ref(*args)
+        for g, w_ in zip(got, want):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(w_),
+                                       rtol=1e-6, atol=1e-6)
+
+    def test_single_block(self):
+        rng = np.random.default_rng(1)
+        args = make_inputs(rng, 64, 8)
+        got = cost_matrix(*args, block_j=64)
+        want = cost_matrix_ref(*args)
+        np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want[0]),
+                                   rtol=1e-6)
+
+    def test_dead_site_never_best(self):
+        rng = np.random.default_rng(2)
+        job, site, bw, loss, w = make_inputs(rng, 128, 16)
+        site[:, 5] = 1.0
+        site[3, 5] = 0.0          # kill site 3
+        _, best, _, _, _ = cost_matrix(job, site, bw, loss, w)
+        assert not np.any(np.asarray(best) == 3)
+
+    def test_zero_bandwidth_guarded(self):
+        rng = np.random.default_rng(3)
+        job, site, bw, loss, w = make_inputs(rng, 128, 16)
+        bw[:, 0] = 0.0
+        total, _, _, _, _ = cost_matrix(job, site, bw, loss, w)
+        assert np.all(np.isfinite(np.asarray(total)))
+
+    def test_comp_cost_formula(self):
+        """comp[s] = (Qi/Pi)·w5 + (Q/Pi)·w6 + load·w7, exactly."""
+        rng = np.random.default_rng(4)
+        job, site, bw, loss, w = make_inputs(rng, 128, 16)
+        _, _, comp, _, _ = cost_matrix(job, site, bw, loss, w)
+        expect = (site[:, 0] / np.maximum(site[:, 1], w[6])) * w[0] \
+            + (w[3] / np.maximum(site[:, 1], w[6])) * w[1] \
+            + site[:, 2] * w[2]
+        np.testing.assert_allclose(np.asarray(comp), expect, rtol=1e-6)
+
+    def test_net_cost_is_loss_over_bw(self):
+        rng = np.random.default_rng(5)
+        job, site, bw, loss, w = make_inputs(rng, 128, 16)
+        _, _, _, _, net = cost_matrix(job, site, bw, loss, w)
+        np.testing.assert_allclose(np.asarray(net),
+                                   loss / np.maximum(bw, w[6]), rtol=1e-6)
+
+    def test_data_local_site_wins_for_data_job(self):
+        """A huge-input job must be routed to the replica-local site."""
+        rng = np.random.default_rng(6)
+        job, site, bw, loss, w = make_inputs(rng, 128, 16)
+        site[:, :] = [10, 100, 0.5, 1000, 0.01, 1, 0, 0]   # uniform sites
+        job[:, 0] = 1e6                                    # 1 TB inputs
+        bw[:, :] = 100.0
+        loss[:, :] = 0.05
+        bw[:, 7] = 100_000.0                               # site 7 is local
+        loss[:, 7] = 0.0
+        _, best, _, _, _ = cost_matrix(job, site, bw, loss, w)
+        assert np.all(np.asarray(best) == 7)
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(1, 8), st.integers(1, 48), st.integers(0, 2**32 - 1))
+    def test_hypothesis_shapes_match_ref(self, jblocks, s, seed):
+        j = 32 * jblocks
+        rng = np.random.default_rng(seed)
+        args = make_inputs(rng, j, s)
+        got = cost_matrix(*args, block_j=32)
+        want = cost_matrix_ref(*args)
+        for g, w_ in zip(got, want):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(w_),
+                                       rtol=1e-5, atol=1e-5)
+
+
+def make_queue(rng, l):
+    jobs = np.zeros((l, 4), np.float32)
+    jobs[:, 0] = rng.integers(1, 50, l)            # n
+    jobs[:, 1] = rng.integers(1, 32, l)            # t
+    jobs[:, 2] = rng.uniform(100, 5000, l)         # q
+    jobs[:, 3] = rng.uniform(0, 1e6, l)            # arrival ts
+    totals = np.array([jobs[:, 1].sum(),
+                       rng.uniform(1000, 50_000),
+                       l, 0.0], np.float32)
+    return jobs, totals
+
+
+class TestPriority:
+    def test_matches_ref(self):
+        rng = np.random.default_rng(0)
+        jobs, totals = make_queue(rng, 512)
+        pr, qi = priority(jobs, totals)
+        rpr, rqi = priority_ref(jobs, totals)
+        np.testing.assert_allclose(np.asarray(pr), np.asarray(rpr), rtol=1e-6)
+        np.testing.assert_array_equal(np.asarray(qi), np.asarray(rqi))
+
+    def test_priority_in_unit_interval(self):
+        rng = np.random.default_rng(1)
+        jobs, totals = make_queue(rng, 256)
+        pr, _ = priority(jobs, totals)
+        pr = np.asarray(pr)
+        assert np.all(pr > -1.0 - 1e-6) and np.all(pr <= 1.0 + 1e-6)
+
+    def test_paper_fig6_worked_example(self):
+        """§X worked example — must match Fig 6 EXACTLY (4 decimals)."""
+        # Final state: A1 (n=2,t=1,q=1900), A2 (n=2,t=5,q=1900),
+        # B1 (n=1,t=1,q=1700); T=7, Q=3600.
+        jobs = np.array([[2, 1, 1900, 0],
+                         [2, 5, 1900, 1],
+                         [1, 1, 1700, 2]], np.float32)
+        totals = np.array([7, 3600, 3, 0], np.float32)
+        pr, qi = priority(jobs, totals)
+        pr = np.asarray(pr)
+        np.testing.assert_allclose(pr, [0.4586, -0.6305, 0.6974], atol=1e-4)
+        np.testing.assert_array_equal(np.asarray(qi), [1, 3, 0])  # Q2 Q4 Q1
+
+    def test_paper_intermediate_states(self):
+        """The two intermediate Fig-6 states: Pr=0 → Q2, then -0.4/0.6667."""
+        # State 1: single job A1, t=1, q=1900 alone: N=1, n=1 → Pr=0 → Q2.
+        jobs = np.zeros((1, 4), np.float32)
+        jobs[0] = [1, 1, 1900, 0]
+        pr, qi = priority_ref(jnp.asarray(jobs),
+                              jnp.asarray([1, 1900, 1, 0], jnp.float32))
+        assert abs(float(pr[0])) < 1e-6 and int(qi[0]) == 1
+        # State 2: A1 (n=2,t=1) and A2 (n=2,t=5): T=6, Q=1900.
+        jobs2 = np.array([[2, 1, 1900, 0], [2, 5, 1900, 1]], np.float32)
+        pr2, qi2 = priority_ref(jnp.asarray(jobs2),
+                                jnp.asarray([6, 1900, 2, 0], jnp.float32))
+        np.testing.assert_allclose(np.asarray(pr2), [2.0 / 3.0, -0.4],
+                                   atol=1e-4)
+        np.testing.assert_array_equal(np.asarray(qi2), [0, 2])  # Q1, Q3
+
+    def test_more_jobs_lower_priority(self):
+        """§VII: priority decreases monotonically with a user's job count."""
+        prs = []
+        for n in range(1, 20):
+            jobs = np.array([[n, 1, 1000, 0]], np.float32)
+            totals = np.array([10, 2000, n, 0], np.float32)
+            pr, _ = priority_ref(jnp.asarray(jobs), jnp.asarray(totals))
+            prs.append(float(pr[0]))
+        assert all(a > b for a, b in zip(prs, prs[1:]))
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(1, 8), st.integers(0, 2**32 - 1))
+    def test_hypothesis_matches_ref(self, lblocks, seed):
+        l = 64 * lblocks
+        rng = np.random.default_rng(seed)
+        jobs, totals = make_queue(rng, l)
+        pr, qi = priority(jobs, totals, block_l=64)
+        rpr, rqi = priority_ref(jobs, totals)
+        np.testing.assert_allclose(np.asarray(pr), np.asarray(rpr),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(qi), np.asarray(rqi))
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(0, 2**32 - 1))
+    def test_hypothesis_queue_ranges(self, seed):
+        rng = np.random.default_rng(seed)
+        jobs, totals = make_queue(rng, 128)
+        pr, qi = priority(jobs, totals)
+        pr, qi = np.asarray(pr), np.asarray(qi)
+        lo = np.array([0.5, 0.0, -0.5, -np.inf])[qi]
+        hi = np.array([np.inf, 0.5, 0.0, -0.5])[qi]
+        assert np.all(pr >= lo - 1e-6) and np.all(pr < hi + 1e-6)

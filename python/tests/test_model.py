@@ -1,0 +1,64 @@
+"""L2 model tests: schedule_step composition + AOT lowering round-trip."""
+
+import numpy as np
+
+from compile import model
+from compile.aot import ENTRIES, to_hlo_text
+from tests.test_kernels import make_inputs
+
+
+class TestScheduleStep:
+    def test_output_arity_and_shapes(self):
+        rng = np.random.default_rng(0)
+        job, site, bw, loss, w = make_inputs(rng, model.AOT_JOBS,
+                                             model.AOT_SITES)
+        out = model.schedule_step(job, site, bw, loss, w)
+        assert len(out) == 7
+        total, bt, bc, bd, comp, dtc, net = out
+        assert total.shape == (model.AOT_JOBS, model.AOT_SITES)
+        assert bt.shape == bc.shape == bd.shape == (model.AOT_JOBS,)
+        assert comp.shape == (model.AOT_SITES,)
+        assert dtc.shape == net.shape == (model.AOT_JOBS, model.AOT_SITES)
+
+    def test_class_keys_consistent(self):
+        """best_total minimises the total; per-class keys minimise theirs."""
+        rng = np.random.default_rng(1)
+        job, site, bw, loss, w = make_inputs(rng, 256, 32)
+        total, bt, bc, bd, comp, dtc, net = [np.asarray(x) for x in
+                                             model.schedule_step(job, site,
+                                                                 bw, loss, w)]
+        assert np.array_equal(bt, total.argmin(1))
+        dead = (1.0 - site[:, 5]) * w[7]
+        ckey = comp[None, :] + w[4] * net + dead[None, :]
+        dkey = w[5] * dtc + w[4] * net + dead[None, :]
+        assert np.array_equal(bc, ckey.argmin(1))
+        assert np.array_equal(bd, dkey.argmin(1))
+
+    def test_dead_sites_excluded_from_class_keys(self):
+        rng = np.random.default_rng(2)
+        job, site, bw, loss, w = make_inputs(rng, 128, 8)
+        site[:, 5] = 1.0
+        site[2, 5] = 0.0
+        _, bt, bc, bd, _, _, _ = model.schedule_step(job, site, bw, loss, w)
+        for arr in (bt, bc, bd):
+            assert not np.any(np.asarray(arr) == 2)
+
+
+class TestAot:
+    def test_lower_all_entries_to_hlo_text(self):
+        for name, lower in ENTRIES.items():
+            text = to_hlo_text(lower())
+            assert text.startswith("HloModule"), name
+            assert "ENTRY" in text, name
+            # f32 params present; no Mosaic custom-calls may survive
+            assert "mosaic" not in text.lower(), name
+
+    def test_schedule_step_hlo_shapes(self):
+        text = to_hlo_text(ENTRIES["cost_matrix"]())
+        assert f"f32[{model.AOT_JOBS},6]" in text
+        assert f"f32[{model.AOT_SITES},8]" in text
+        assert f"f32[{model.AOT_JOBS},{model.AOT_SITES}]" in text
+
+    def test_priority_hlo_shapes(self):
+        text = to_hlo_text(ENTRIES["priority"]())
+        assert f"f32[{model.AOT_QUEUE},4]" in text

@@ -1,0 +1,66 @@
+//! Bench: one §V matchmaking round (the L1 kernel's job) — rust mirror
+//! vs the AOT Pallas/XLA artifact via PJRT, across batch shapes. This is
+//! the per-scheduling-round hot path of the coordinator.
+
+mod common;
+use common::{bench, black_box};
+
+use diana::cost::{CostEngine, CostInputs, RustEngine, Weights};
+use diana::util::Pcg64;
+
+fn inputs(rng: &mut Pcg64, nj: usize, ns: usize) -> CostInputs {
+    let mut inp = CostInputs::new(nj, ns);
+    for j in 0..nj {
+        let row = inp.job_row_mut(j);
+        row[0] = rng.uniform(0.0, 30_000.0) as f32;
+        row[1] = rng.uniform(0.0, 2_000.0) as f32;
+        row[2] = rng.uniform(1.0, 200.0) as f32;
+        row[3] = rng.uniform(1.0, 7200.0) as f32;
+    }
+    for s in 0..ns {
+        let row = inp.site_row_mut(s);
+        row[0] = rng.below(500) as f32;
+        row[1] = rng.uniform(1.0, 600.0) as f32;
+        row[2] = rng.next_f64() as f32;
+        row[3] = rng.uniform(10.0, 10_000.0) as f32;
+        row[4] = rng.uniform(0.0, 0.1) as f32;
+        row[5] = 1.0;
+    }
+    for v in inp.link_bw.iter_mut() {
+        *v = rng.uniform(1.0, 10_000.0) as f32;
+    }
+    for v in inp.link_loss.iter_mut() {
+        *v = rng.uniform(0.0, 0.1) as f32;
+    }
+    inp
+}
+
+fn main() {
+    println!("== bench_cost_engine: J×S fused cost matrix ==");
+    let mut rng = Pcg64::new(1);
+    let w = Weights { q_total: 500.0, ..Weights::default() };
+
+    for (nj, ns) in [(25, 5), (256, 32), (1024, 32)] {
+        let inp = inputs(&mut rng, nj, ns);
+        let mut rust = RustEngine::new();
+        let r = bench(&format!("rust  schedule_step {nj}x{ns}"), 20, 200,
+                      || {
+            black_box(rust.schedule_step(&inp, &w).unwrap());
+        });
+        r.throughput(nj as f64, "jobs");
+    }
+
+    if diana::runtime::artifacts_available() {
+        let mut xla = diana::runtime::XlaEngine::load_default().unwrap();
+        for (nj, ns) in [(1, 32), (25, 5), (256, 32), (1024, 32)] {
+            let inp = inputs(&mut rng, nj, ns);
+            let r = bench(&format!("xla   schedule_step {nj}x{ns}"), 5, 50,
+                          || {
+                black_box(xla.schedule_step(&inp, &w).unwrap());
+            });
+            r.throughput(nj as f64, "jobs");
+        }
+    } else {
+        println!("(artifacts missing — xla engine skipped)");
+    }
+}

@@ -1,0 +1,25 @@
+//! Bench: one end-to-end timing per paper table/figure — how long each
+//! §XI reproduction takes to regenerate (and that it still SUCCEEDS).
+
+mod common;
+use common::bench;
+
+fn main() {
+    println!("== bench_figures: end-to-end figure regeneration ==");
+    // Cheap, closed-form figures: tight loop.
+    for fig in ["fig3", "fig6"] {
+        bench(&format!("repro {fig}"), 2, 20, || {
+            diana::repro::run_figure(fig).unwrap();
+        });
+    }
+    // Simulation-backed figures: one timed run each.
+    for fig in ["fig4", "fig9", "fig10", "fig11"] {
+        bench(&format!("repro {fig}"), 0, 3, || {
+            diana::repro::run_figure(fig).unwrap();
+        });
+    }
+    // The fig7/8 sweep is the heavyweight (12 full simulations).
+    bench("repro fig7 (6-point sweep, 2 policies)", 0, 1, || {
+        diana::repro::run_figure("fig7").unwrap();
+    });
+}

@@ -1,0 +1,48 @@
+//! Bench: §X whole-queue re-prioritization (runs on EVERY arrival) —
+//! rust mirror vs the AOT priority kernel, across queue lengths.
+
+mod common;
+use common::{bench, black_box};
+
+use diana::cost::{CostEngine, RustEngine};
+use diana::util::Pcg64;
+
+fn queue(rng: &mut Pcg64, l: usize) -> (Vec<f32>, [f32; 4]) {
+    let mut jobs = Vec::with_capacity(l * 4);
+    for _ in 0..l {
+        jobs.extend_from_slice(&[
+            1.0 + rng.below(50) as f32,
+            1.0 + rng.below(32) as f32,
+            rng.uniform(100.0, 5000.0) as f32,
+            0.0,
+        ]);
+    }
+    let totals = [rng.uniform(50.0, 500.0) as f32,
+                  rng.uniform(1000.0, 50_000.0) as f32, l as f32, 0.0];
+    (jobs, totals)
+}
+
+fn main() {
+    println!("== bench_priority: §X re-prioritization sweep ==");
+    let mut rng = Pcg64::new(2);
+    for l in [16usize, 128, 512, 4096] {
+        let (jobs, totals) = queue(&mut rng, l);
+        let mut rust = RustEngine::new();
+        let r = bench(&format!("rust  reprioritize L={l}"), 20, 200, || {
+            black_box(rust.reprioritize(&jobs, &totals).unwrap());
+        });
+        r.throughput(l as f64, "jobs");
+    }
+    if diana::runtime::artifacts_available() {
+        let mut xla = diana::runtime::XlaEngine::load_default().unwrap();
+        for l in [16usize, 512, 4096] {
+            let (jobs, totals) = queue(&mut rng, l);
+            let r = bench(&format!("xla   reprioritize L={l}"), 5, 50, || {
+                black_box(xla.reprioritize(&jobs, &totals).unwrap());
+            });
+            r.throughput(l as f64, "jobs");
+        }
+    } else {
+        println!("(artifacts missing — xla engine skipped)");
+    }
+}

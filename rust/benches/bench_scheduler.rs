@@ -1,0 +1,77 @@
+//! Bench: end-to-end matchmaking throughput of the L3 coordinator —
+//! picker.pick() for a full bulk batch, per policy (jobs scheduled per
+//! second, the §XI "frequency of potentially millions of jobs" claim).
+
+mod common;
+use common::{bench, black_box};
+
+use diana::config::{presets, Policy, SchedulerConfig};
+use diana::cost::RustEngine;
+use diana::data::Catalog;
+use diana::job::{Job, JobClass, JobId, UserId};
+use diana::network::{PingerMonitor, Topology};
+use diana::scheduler::{make_picker, GridView, SiteSnapshot};
+use diana::util::Pcg64;
+
+fn main() {
+    println!("== bench_scheduler: matchmaking rounds per policy ==");
+    let cfg = presets::uniform_grid(16, 32);
+    let topo = Topology::from_config(&cfg);
+    let monitor = PingerMonitor::new(&topo, 0.0, 1);
+    let mut rng = Pcg64::new(3);
+    let mut catalog = Catalog::new();
+    for d in 0..50 {
+        catalog.add(&format!("d{d}"), rng.uniform(100.0, 30_000.0),
+                    vec![rng.below(16) as usize]);
+    }
+    let sites: Vec<SiteSnapshot> = (0..16)
+        .map(|_| SiteSnapshot {
+            queue_len: rng.below(100) as usize,
+            capability: 32.0,
+            load: rng.next_f64(),
+            free_slots: rng.below(33) as usize,
+            cpus: 32,
+            alive: true,
+        })
+        .collect();
+    let jobs: Vec<Job> = (0..256)
+        .map(|i| Job {
+            id: JobId(i),
+            user: UserId((i % 10) as u32),
+            group: None,
+            class: match i % 3 {
+                0 => JobClass::ComputeIntensive,
+                1 => JobClass::DataIntensive,
+                _ => JobClass::Both,
+            },
+            input: Some(rng.below(50) as usize),
+            in_mb: rng.uniform(10.0, 10_000.0),
+            out_mb: 50.0,
+            exe_mb: 20.0,
+            cpu_sec: rng.uniform(60.0, 3600.0),
+            procs: 1 + (i % 4) as usize,
+            submit_site: 0,
+            submit_time: 0.0,
+            quota: 1000.0,
+            migrations: 0,
+        })
+        .collect();
+    let view = GridView {
+        now: 0.0,
+        sites: &sites,
+        monitor: &monitor,
+        catalog: &catalog,
+        q_total: 500,
+    };
+
+    for policy in [Policy::Diana, Policy::FcfsBroker, Policy::Greedy,
+                   Policy::DataLocal, Policy::Random] {
+        let mut picker = make_picker(policy, Box::new(RustEngine::new()),
+                                     &SchedulerConfig::default(), 1);
+        let r = bench(&format!("{:<11} pick 256 jobs x 16 sites",
+                               policy.name()), 10, 200, || {
+            black_box(picker.pick(&jobs, &view).unwrap());
+        });
+        r.throughput(256.0, "jobs");
+    }
+}

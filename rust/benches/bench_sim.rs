@@ -1,0 +1,45 @@
+//! Bench: DES substrate — raw event-queue throughput and whole-world
+//! simulation rate (events/s), the L3 backbone.
+
+mod common;
+use common::{bench, black_box};
+
+use diana::config::presets;
+use diana::coordinator::{generate_workload, run_simulation_with};
+use diana::sim::EventQueue;
+
+fn main() {
+    println!("== bench_sim: DES event throughput ==");
+
+    // Raw heap: schedule+pop churn at three queue depths.
+    for depth in [1_000usize, 10_000, 100_000] {
+        let r = bench(&format!("event heap churn depth={depth}"), 3, 30,
+                      || {
+            let mut q = EventQueue::new();
+            for i in 0..depth {
+                q.schedule(i as f64 * 0.5, i);
+            }
+            let mut acc = 0usize;
+            while let Some((_, e)) = q.pop() {
+                acc = acc.wrapping_add(e);
+            }
+            black_box(acc);
+        });
+        r.throughput(2.0 * depth as f64, "events");
+    }
+
+    // Whole-world: the §XI testbed with 500 jobs.
+    let mut cfg = presets::paper_testbed();
+    cfg.workload.jobs = 500;
+    cfg.workload.bulk_size = 25;
+    cfg.workload.cpu_sec_median = 120.0;
+    let subs = generate_workload(&cfg);
+    let mut events = 0u64;
+    let r = bench("world run 500 jobs (diana)", 1, 10, || {
+        let (w, _) = run_simulation_with(&cfg, subs.clone()).unwrap();
+        events = w.events_processed();
+        black_box(&w);
+    });
+    r.throughput(events as f64, "events");
+    println!("  ({events} DES events per run)");
+}

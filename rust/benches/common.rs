@@ -1,0 +1,83 @@
+//! Shared micro-bench harness for the `harness = false` benches (the
+//! offline crate set has no criterion). Warmup + N timed samples;
+//! reports mean / p50 / p95 / min plus a derived throughput line.
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub samples_ns: Vec<f64>,
+}
+
+impl BenchResult {
+    fn pct(&self, p: f64) -> f64 {
+        let mut s = self.samples_ns.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = (p / 100.0) * (s.len() - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        let frac = rank - lo as f64;
+        s[lo] * (1.0 - frac) + s[hi] * frac
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        self.samples_ns.iter().sum::<f64>() / self.samples_ns.len() as f64
+    }
+
+    pub fn report(&self) {
+        let fmt = |ns: f64| {
+            if ns >= 1e9 {
+                format!("{:.3} s", ns / 1e9)
+            } else if ns >= 1e6 {
+                format!("{:.3} ms", ns / 1e6)
+            } else if ns >= 1e3 {
+                format!("{:.3} µs", ns / 1e3)
+            } else {
+                format!("{ns:.0} ns")
+            }
+        };
+        println!(
+            "{:<44} mean {:>12}  p50 {:>12}  p95 {:>12}  min {:>12}  (n={})",
+            self.name,
+            fmt(self.mean_ns()),
+            fmt(self.pct(50.0)),
+            fmt(self.pct(95.0)),
+            fmt(self.pct(0.0)),
+            self.samples_ns.len()
+        );
+    }
+
+    /// Print an items-per-second line derived from the mean.
+    pub fn throughput(&self, items: f64, unit: &str) {
+        let per_s = items / (self.mean_ns() / 1e9);
+        println!("{:<44} {:>14.0} {unit}/s", format!("  └ {}", self.name),
+                 per_s);
+    }
+}
+
+/// Run `f` for `warmup` + `samples` iterations, timing each sample.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, samples: usize,
+                         mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut out = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        f();
+        out.push(t0.elapsed().as_nanos() as f64);
+    }
+    let r = BenchResult { name: name.to_string(), samples_ns: out };
+    r.report();
+    r
+}
+
+/// `black_box` without nightly: volatile read defeats const-prop.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    unsafe {
+        let y = std::ptr::read_volatile(&x);
+        std::mem::forget(x);
+        y
+    }
+}

@@ -1,0 +1,126 @@
+//! §VIII output aggregation: "all the data from the subgroup execution
+//! sites is aggregated to a user specified location" — tracks per-group
+//! completion and computes the aggregation transfer bill.
+
+use std::collections::BTreeMap;
+
+use crate::job::{GroupId, JobId};
+use crate::network::Topology;
+
+/// One group's aggregation state.
+#[derive(Clone, Debug)]
+struct GroupAgg {
+    expected: usize,
+    done: Vec<(JobId, usize, f64)>, // (job, exec site, output MB)
+    output_site: usize,
+}
+
+/// Aggregator over all in-flight groups.
+#[derive(Clone, Debug, Default)]
+pub struct Aggregator {
+    groups: BTreeMap<u64, GroupAgg>,
+}
+
+/// Result of a completed group.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GroupResult {
+    pub group: GroupId,
+    pub output_site: usize,
+    pub total_output_mb: f64,
+    /// Aggregation transfer time (s): slowest site→output transfer
+    /// (site transfers run in parallel).
+    pub aggregation_s: f64,
+}
+
+impl Aggregator {
+    pub fn new() -> Aggregator {
+        Aggregator::default()
+    }
+
+    pub fn open(&mut self, group: GroupId, expected: usize, output_site: usize) {
+        self.groups.insert(
+            group.0,
+            GroupAgg { expected, done: Vec::new(), output_site },
+        );
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// Record one job's completion; when the group is complete, return
+    /// its aggregated result (transfer bill priced on `topo`).
+    pub fn complete_job(
+        &mut self,
+        group: GroupId,
+        job: JobId,
+        exec_site: usize,
+        output_mb: f64,
+        topo: &Topology,
+    ) -> Option<GroupResult> {
+        let g = self.groups.get_mut(&group.0)?;
+        g.done.push((job, exec_site, output_mb));
+        if g.done.len() < g.expected {
+            return None;
+        }
+        let g = self.groups.remove(&group.0).unwrap();
+        // Per-site parallel transfers: bill each site's total output on
+        // its link to the output location; the slowest dominates.
+        let mut per_site: BTreeMap<usize, f64> = BTreeMap::new();
+        for &(_, site, mb) in &g.done {
+            *per_site.entry(site).or_insert(0.0) += mb;
+        }
+        let aggregation_s = per_site
+            .iter()
+            .map(|(&site, &mb)| topo.transfer_seconds(site, g.output_site, mb))
+            .fold(0.0, f64::max);
+        Some(GroupResult {
+            group,
+            output_site: g.output_site,
+            total_output_mb: g.done.iter().map(|d| d.2).sum(),
+            aggregation_s,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    fn topo() -> Topology {
+        Topology::from_config(&presets::uniform_grid(3, 4))
+    }
+
+    #[test]
+    fn completes_only_when_all_jobs_done() {
+        let t = topo();
+        let mut a = Aggregator::new();
+        a.open(GroupId(1), 3, 0);
+        assert!(a.complete_job(GroupId(1), JobId(1), 1, 10.0, &t).is_none());
+        assert!(a.complete_job(GroupId(1), JobId(2), 2, 20.0, &t).is_none());
+        let r = a.complete_job(GroupId(1), JobId(3), 1, 30.0, &t).unwrap();
+        assert_eq!(r.total_output_mb, 60.0);
+        assert_eq!(r.output_site, 0);
+        assert!(r.aggregation_s > 0.0);
+        assert_eq!(a.in_flight(), 0);
+    }
+
+    #[test]
+    fn local_outputs_aggregate_faster() {
+        let t = topo();
+        let mut a = Aggregator::new();
+        a.open(GroupId(1), 1, 0);
+        let local = a.complete_job(GroupId(1), JobId(1), 0, 100.0, &t).unwrap();
+        a.open(GroupId(2), 1, 0);
+        let remote = a.complete_job(GroupId(2), JobId(2), 2, 100.0, &t).unwrap();
+        assert!(local.aggregation_s < remote.aggregation_s);
+    }
+
+    #[test]
+    fn unknown_group_ignored() {
+        let t = topo();
+        let mut a = Aggregator::new();
+        assert!(a.complete_job(GroupId(9), JobId(1), 0, 1.0, &t).is_none());
+    }
+}

@@ -1,0 +1,343 @@
+//! §VIII bulk scheduling: place a whole group on one site when that is
+//! cost-effective, otherwise divide it into subgroups (VO-configured
+//! division factor) and place each subgroup independently via DIANA.
+//!
+//! The §VIII pseudo-code, concretely:
+//!   1. rank sites by the group's representative cost (§V SortSites);
+//!   2. if the best site can accommodate the whole group within its
+//!      per-site cap → submit there;
+//!   3. else split into `division_factor` equal subgroups and walk the
+//!      ranked sites, assigning each subgroup to the next site with room
+//!      (spilling to the best site when capacity runs out everywhere).
+
+use anyhow::Result;
+
+use crate::job::{Group, Job};
+use crate::scheduler::{GridView, SitePicker};
+
+/// Placement plan: per-subgroup (site, job indices into the group).
+#[derive(Clone, Debug, PartialEq)]
+pub struct GroupPlan {
+    pub assignments: Vec<(usize, Vec<usize>)>,
+    /// True when the whole group landed on a single site.
+    pub single_site: bool,
+}
+
+impl GroupPlan {
+    pub fn n_subgroups(&self) -> usize {
+        self.assignments.len()
+    }
+
+    /// Site for each job index in the group.
+    pub fn per_job_sites(&self, n_jobs: usize) -> Vec<usize> {
+        let mut out = vec![usize::MAX; n_jobs];
+        for (site, idxs) in &self.assignments {
+            for &i in idxs {
+                out[i] = *site;
+            }
+        }
+        out
+    }
+}
+
+/// How many group jobs a site can take: the JDL cap if set, else the
+/// site's CPU count (the §VIII "size of the group … handled by a site").
+fn site_cap(group: &Group, view: &GridView<'_>, site: usize) -> usize {
+    if group.max_per_site > 0 {
+        group.max_per_site
+    } else {
+        view.sites[site].cpus
+    }
+}
+
+/// Plan the placement of one bulk group (§VIII algorithm).
+///
+/// `jobs` are the group's jobs (same user, same submit site — §VIII:
+/// "the priority of the burst … is always the same since each batch has
+/// the same execution requirements"); `rep` indexes the representative
+/// job used for cost ranking.
+pub fn plan_group(
+    picker: &mut dyn SitePicker,
+    group: &Group,
+    jobs: &[Job],
+    view: &GridView<'_>,
+) -> Result<GroupPlan> {
+    assert_eq!(group.jobs.len(), jobs.len());
+    if jobs.is_empty() {
+        return Ok(GroupPlan { assignments: Vec::new(), single_site: true });
+    }
+    if let Some(site) = group.pin_site {
+        // Pinned submission (local meta-scheduler); §IX migration will
+        // shed load later if the site congests.
+        return Ok(GroupPlan {
+            assignments: vec![(site, (0..jobs.len()).collect())],
+            single_site: true,
+        });
+    }
+    let costs = picker.site_costs(&jobs[0], view)?;
+    let mut ranked: Vec<usize> =
+        (0..view.n_sites()).filter(|&s| costs[s].is_finite()).collect();
+    ranked.sort_by(|&a, &b| costs[a].partial_cmp(&costs[b]).unwrap());
+    if ranked.is_empty() {
+        anyhow::bail!("no alive sites to place group {:?}", group.id);
+    }
+
+    // Whole group on the best site if it fits its cap.
+    let best = ranked[0];
+    if jobs.len() <= site_cap(group, view, best) {
+        return Ok(GroupPlan {
+            assignments: vec![(best, (0..jobs.len()).collect())],
+            single_site: true,
+        });
+    }
+
+    // Split over the top-`division_factor` ranked sites, sizing each
+    // subgroup in *inverse proportion to its relative cost*: on a
+    // uniform grid this degenerates to §VIII's "equal but relatively
+    // smaller subgroups"; on Fig-4's idle heterogeneous grid the
+    // compute cost is ∝ 1/Pi so the shares become the table's
+    // capability-proportional 4000/6000 and 1000/…/4000; and for a
+    // data-intensive group the replica sites' tiny DTC keeps the bulk
+    // of the group with its data. Per-site JDL caps are respected;
+    // overflow spills to the best-ranked site's queue.
+    let k = group.division_factor.max(1).min(ranked.len());
+    let chosen: Vec<usize> = ranked[..k].to_vec();
+    let total = jobs.len();
+    let best_cost = costs[chosen[0]];
+    let mean_cost =
+        chosen.iter().map(|&s| costs[s]).sum::<f64>() / k as f64;
+    let delta = (0.01 * mean_cost).max(1e-9);
+    let weights: Vec<f64> = chosen
+        .iter()
+        .map(|&s| (best_cost + delta) / (costs[s] + delta))
+        .collect();
+    let w_sum: f64 = weights.iter().sum();
+    // Split-phase cap: the JDL limit if set; otherwise unlimited — a
+    // subgroup larger than a site's CPU count simply queues there
+    // (the single-site fast path above already used the CPU count).
+    let split_cap = |s: usize| {
+        if group.max_per_site > 0 {
+            group.max_per_site
+        } else {
+            usize::MAX
+        }
+        .min(if view.sites[s].alive { usize::MAX } else { 0 })
+    };
+    let mut sizes: Vec<usize> = chosen
+        .iter()
+        .zip(&weights)
+        .map(|(&s, w)| {
+            ((total as f64 * w / w_sum).floor() as usize).min(split_cap(s))
+        })
+        .collect();
+    // Distribute the rounding remainder (heaviest weight first, caps
+    // permitting); whatever still remains spills to the best site.
+    let mut assigned: usize = sizes.iter().sum();
+    let mut order: Vec<usize> = (0..k).collect();
+    order.sort_by(|&a, &b| weights[b].partial_cmp(&weights[a]).unwrap());
+    'outer: while assigned < total {
+        let mut progressed = false;
+        for &i in &order {
+            if assigned >= total {
+                break 'outer;
+            }
+            if sizes[i] < split_cap(chosen[i]) {
+                sizes[i] += 1;
+                assigned += 1;
+                progressed = true;
+            }
+        }
+        if !progressed {
+            sizes[0] += total - assigned; // spill: best site queues it
+            break;
+        }
+    }
+    let mut assignments: Vec<(usize, Vec<usize>)> = Vec::new();
+    let mut next = 0usize;
+    for (i, &site) in chosen.iter().enumerate() {
+        if sizes[i] == 0 {
+            continue;
+        }
+        let idxs: Vec<usize> = (next..next + sizes[i]).collect();
+        next += sizes[i];
+        assignments.push((site, idxs));
+    }
+    let single = assignments.len() == 1;
+    Ok(GroupPlan { assignments, single_site: single })
+}
+
+/// Makespan of an assignment on dedicated sites — the §VIII Fig-4
+/// quantity: each site s processes its jobs in ceil(n_s/cpus_s) waves of
+/// `job_hours` each; total time is the slowest site.
+pub fn makespan_hours(
+    assignment: &[(usize, usize)], // (site_cpus, n_jobs)
+    job_hours: f64,
+) -> f64 {
+    assignment
+        .iter()
+        .map(|&(cpus, n)| {
+            if n == 0 {
+                0.0
+            } else {
+                (n as f64 / cpus as f64).ceil() * job_hours
+            }
+        })
+        .fold(0.0, f64::max)
+}
+
+/// Continuous (non-quantised) makespan — what the paper's Fig-4 table
+/// actually reports (10 000/600 = 16.6 h, not 17 h).
+pub fn makespan_hours_continuous(
+    assignment: &[(usize, usize)],
+    job_hours: f64,
+) -> f64 {
+    assignment
+        .iter()
+        .map(|&(cpus, n)| n as f64 * job_hours / cpus as f64)
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::data::Catalog;
+    use crate::job::{GroupId, JobClass, JobId, UserId};
+    use crate::network::{PingerMonitor, Topology};
+    use crate::scheduler::{FcfsBroker, SiteSnapshot};
+
+    fn job(id: u64) -> Job {
+        Job {
+            id: JobId(id),
+            user: UserId(1),
+            group: Some(GroupId(1)),
+            class: JobClass::ComputeIntensive,
+            input: None,
+            in_mb: 0.0,
+            out_mb: 1.0,
+            exe_mb: 1.0,
+            cpu_sec: 3600.0,
+            procs: 1,
+            submit_site: 0,
+            submit_time: 0.0,
+            quota: 1000.0,
+            migrations: 0,
+        }
+    }
+
+    fn group(n: u64, max_per_site: usize, division: usize) -> (Group, Vec<Job>) {
+        let jobs: Vec<Job> = (0..n).map(job).collect();
+        let g = Group {
+            id: GroupId(1),
+            user: UserId(1),
+            jobs: jobs.iter().map(|j| j.id).collect(),
+            max_per_site,
+            division_factor: division,
+            output_site: 0,
+            pin_site: None,
+        };
+        (g, jobs)
+    }
+
+    struct Fx {
+        monitor: PingerMonitor,
+        catalog: Catalog,
+        sites: Vec<SiteSnapshot>,
+    }
+
+    fn fx(cpus: &[usize]) -> Fx {
+        let cfg = presets::uniform_grid(cpus.len(), 8);
+        let topo = Topology::from_config(&cfg);
+        Fx {
+            monitor: PingerMonitor::new(&topo, 0.0, 1),
+            catalog: Catalog::new(),
+            sites: cpus
+                .iter()
+                .map(|&c| SiteSnapshot {
+                    queue_len: 0,
+                    capability: c as f64,
+                    load: 0.0,
+                    free_slots: c,
+                    cpus: c,
+                    alive: true,
+                })
+                .collect(),
+        }
+    }
+
+    fn view<'a>(f: &'a Fx) -> GridView<'a> {
+        GridView {
+            now: 0.0,
+            sites: &f.sites,
+            monitor: &f.monitor,
+            catalog: &f.catalog,
+            q_total: 0,
+        }
+    }
+
+    #[test]
+    fn small_group_single_site() {
+        let f = fx(&[100, 200]);
+        let (g, jobs) = group(50, 0, 4);
+        let plan = plan_group(&mut FcfsBroker, &g, &jobs, &view(&f)).unwrap();
+        assert!(plan.single_site);
+        assert_eq!(plan.n_subgroups(), 1);
+        assert_eq!(plan.assignments[0].1.len(), 50);
+    }
+
+    #[test]
+    fn large_group_splits_across_sites() {
+        let f = fx(&[100, 200, 400, 600]);
+        let (g, jobs) = group(1000, 0, 4);
+        let plan = plan_group(&mut FcfsBroker, &g, &jobs, &view(&f)).unwrap();
+        assert!(!plan.single_site);
+        assert!(plan.n_subgroups() >= 2);
+        // All jobs placed exactly once.
+        let sites = plan.per_job_sites(1000);
+        assert!(sites.iter().all(|&s| s != usize::MAX));
+        let total: usize =
+            plan.assignments.iter().map(|(_, v)| v.len()).sum();
+        assert_eq!(total, 1000);
+    }
+
+    #[test]
+    fn jdl_cap_forces_split() {
+        let f = fx(&[1000, 1000]);
+        let (g, jobs) = group(100, 30, 4); // cap 30/site despite huge sites
+        let plan = plan_group(&mut FcfsBroker, &g, &jobs, &view(&f)).unwrap();
+        assert!(!plan.single_site);
+    }
+
+    #[test]
+    fn empty_group_is_trivial() {
+        let f = fx(&[4]);
+        let (g, jobs) = group(0, 0, 4);
+        let plan = plan_group(&mut FcfsBroker, &g, &jobs, &view(&f)).unwrap();
+        assert_eq!(plan.n_subgroups(), 0);
+    }
+
+    #[test]
+    fn fig4_makespans() {
+        // The §VIII table: 10 000 × 1 h jobs on A/B/C/D = 100/200/400/600.
+        // 1 group → all on D: 16.6 h.
+        let one = makespan_hours_continuous(&[(600, 10_000)], 1.0);
+        assert!((one - 16.666).abs() < 0.01, "one={one}");
+        // 2 groups → C:4000 D:6000 → 10 h.
+        let two = makespan_hours_continuous(&[(400, 4000), (600, 6000)], 1.0);
+        assert!((two - 10.0).abs() < 1e-9, "two={two}");
+        // 10 groups, paper's allocation 1000/2000/3000/4000 → 10 h by the
+        // continuous formula; the paper reports 8.5 (partially
+        // proportional). Capacity-proportional split → ~7.7 h.
+        let prop = makespan_hours_continuous(
+            &[(100, 770), (200, 1538), (400, 3077), (600, 4615)], 1.0);
+        assert!(prop < 8.0, "prop={prop}");
+        // Monotone improvement with more groups — the table's shape.
+        assert!(two < one && prop < two);
+    }
+
+    #[test]
+    fn quantised_makespan_rounds_up() {
+        assert_eq!(makespan_hours(&[(100, 150)], 1.0), 2.0);
+        assert_eq!(makespan_hours(&[(100, 0)], 1.0), 0.0);
+    }
+}

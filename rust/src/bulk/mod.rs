@@ -1,0 +1,9 @@
+//! §VIII bulk scheduling: group split/placement planning and output
+//! aggregation.
+
+pub mod aggregate;
+pub mod group;
+
+pub use aggregate::{Aggregator, GroupResult};
+pub use group::{makespan_hours, makespan_hours_continuous, plan_group,
+                GroupPlan};

@@ -1,0 +1,203 @@
+//! CLI subcommand implementations for the `diana` binary.
+
+use anyhow::Result;
+
+use crate::config::{self, GridConfig, Policy};
+use crate::coordinator::{run_simulation, RunReport};
+use crate::metrics::{fmt_secs, render_table};
+use crate::priority::{aging_curve, frequency_curve};
+use crate::util::Args;
+
+pub const USAGE: &str = "\
+diana — Data Intensive and Network Aware bulk meta-scheduler
+
+USAGE:
+  diana simulate [--config FILE | --preset NAME] [--policy P] [--jobs N]
+                 [--bulk N] [--seed S] [--engine rust|xla|auto]
+  diana repro --figure fig3|fig4|fig6|fig7|fig8|fig9|fig10|fig11|all
+              [--out DIR] [--engine rust|xla|auto]
+  diana serve [--config FILE | --preset NAME] [--addr HOST:PORT]
+  diana priority-demo [--quota Q] [--jobs N]
+
+PRESETS: paper-testbed (default) | fig4 | cms-tiers | uniform
+";
+
+/// Resolve the config from --config / --preset / flags.
+pub fn load_config(args: &Args) -> Result<GridConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => config::load_file(path)?,
+        None => match args.get_or("preset", "paper-testbed") {
+            "fig4" => config::presets::fig4_grid(),
+            "cms-tiers" => config::presets::cms_tier_grid(),
+            "uniform" => config::presets::uniform_grid(
+                args.get_usize("sites", 4),
+                args.get_usize("cpus", 8),
+            ),
+            _ => config::presets::paper_testbed(),
+        },
+    };
+    if let Some(p) = args.get("policy") {
+        cfg.scheduler.policy = Policy::from_name(p)
+            .ok_or_else(|| anyhow::anyhow!("unknown policy {p}"))?;
+    }
+    if let Some(e) = args.get("engine") {
+        cfg.scheduler.engine = config::EngineKind::from_name(e)
+            .ok_or_else(|| anyhow::anyhow!("unknown engine {e}"))?;
+    }
+    if let Some(j) = args.get("jobs") {
+        cfg.workload.jobs = j.parse()?;
+    }
+    if let Some(b) = args.get("bulk") {
+        cfg.workload.bulk_size = b.parse()?;
+    }
+    cfg.seed = args.get_u64("seed", cfg.seed);
+    cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
+    Ok(cfg)
+}
+
+pub fn print_report(r: &RunReport) {
+    let rows = vec![
+        vec!["policy".into(), r.policy.into()],
+        vec!["jobs completed".into(), r.jobs.to_string()],
+        vec!["makespan".into(), fmt_secs(r.makespan_s)],
+        vec!["queue time (mean)".into(), fmt_secs(r.queue_time.mean())],
+        vec!["queue time (p95)".into(), fmt_secs(r.queue_time.percentile(95.0))],
+        vec!["exec time (mean)".into(), fmt_secs(r.exec_time.mean())],
+        vec!["turnaround (mean)".into(), fmt_secs(r.turnaround.mean())],
+        vec!["response (mean)".into(), fmt_secs(r.response_time.mean())],
+        vec![
+            "throughput".into(),
+            format!("{:.3} jobs/s", r.throughput_jobs_per_s),
+        ],
+        vec!["migrations".into(), r.migrations.to_string()],
+        vec![
+            "groups (whole/split)".into(),
+            format!("{}/{}", r.groups_whole, r.groups_split),
+        ],
+        vec!["DES events".into(), r.events.to_string()],
+    ];
+    println!("{}", render_table(&["metric", "value"], &rows));
+}
+
+pub fn simulate(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    println!(
+        "simulating `{}` — {} sites, {} jobs, policy {}",
+        cfg.name,
+        cfg.sites.len(),
+        cfg.workload.jobs,
+        cfg.scheduler.policy.name()
+    );
+    let (_, report) = run_simulation(&cfg)?;
+    print_report(&report);
+    Ok(())
+}
+
+pub fn repro(args: &Args) -> Result<()> {
+    let fig = args.get_or("figure", "all");
+    let figures: Vec<&str> = if fig == "all" {
+        crate::repro::available_figures()
+    } else {
+        vec![fig]
+    };
+    for f in figures {
+        let text = crate::repro::run_figure(f)?;
+        println!("{text}");
+        if let Some(dir) = args.get("out") {
+            std::fs::create_dir_all(dir)?;
+            std::fs::write(format!("{dir}/{f}.txt"), &text)?;
+        }
+    }
+    Ok(())
+}
+
+pub fn serve(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let addr = args.get_or("addr", "127.0.0.1:7077").to_string();
+    let engine = crate::runtime::make_engine(cfg.scheduler.engine)?;
+    let picker = crate::scheduler::make_picker(
+        cfg.scheduler.policy,
+        engine,
+        &cfg.scheduler,
+        cfg.seed,
+    );
+    crate::coordinator::serve::Server::new(cfg, picker).serve(&addr)
+}
+
+/// Print the Fig-3 priority curves (frequency + aging) as small tables.
+pub fn priority_demo(args: &Args) -> Result<()> {
+    let quota = args.get_f64("quota", 1900.0) as f32;
+    let n = args.get_usize("jobs", 12);
+    println!("Priority vs job frequency (q={quota}, t=1, T=50, Q=5000):");
+    let rows: Vec<Vec<String>> = frequency_curve(quota, 1.0, 50.0, 5000.0, n)
+        .into_iter()
+        .map(|(i, p)| vec![i.to_string(), format!("{p:+.4}")])
+        .collect();
+    println!("{}", render_table(&["n", "Pr(n)"], &rows));
+    println!("Aged priority over wait time (Pr0=-0.6, halflife=600s):");
+    let rows: Vec<Vec<String>> = aging_curve(-0.6, 600.0, 3600.0, 6)
+        .into_iter()
+        .map(|(t, p)| vec![fmt_secs(t), format!("{p:+.4}")])
+        .collect();
+    println!("{}", render_table(&["wait", "priority"], &rows));
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn load_config_presets_and_overrides() {
+        let cfg = load_config(&parse(
+            "simulate --preset fig4 --jobs 100 --policy fcfs --seed 9",
+        ))
+        .unwrap();
+        assert_eq!(cfg.name, "fig4");
+        assert_eq!(cfg.workload.jobs, 100);
+        assert_eq!(cfg.scheduler.policy, Policy::FcfsBroker);
+        assert_eq!(cfg.seed, 9);
+    }
+
+    #[test]
+    fn bad_policy_rejected() {
+        assert!(load_config(&parse("simulate --policy magic")).is_err());
+    }
+
+    #[test]
+    fn priority_demo_runs() {
+        priority_demo(&parse("priority-demo --jobs 5")).unwrap();
+    }
+
+    #[test]
+    fn repro_writes_output_files() {
+        let dir = std::env::temp_dir().join("diana-repro-out");
+        std::fs::create_dir_all(&dir).unwrap();
+        let cmd = format!("repro --figure fig6 --out {}", dir.display());
+        repro(&parse(&cmd)).unwrap();
+        let text =
+            std::fs::read_to_string(dir.join("fig6.txt")).unwrap();
+        assert!(text.contains("all values match the paper: true"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn repro_unknown_figure_fails() {
+        assert!(repro(&parse("repro --figure fig99")).is_err());
+    }
+
+    #[test]
+    fn config_file_loading_through_cli() {
+        let cfg = load_config(&parse(
+            "simulate --config examples/configs/two_tier.toml",
+        ))
+        .unwrap();
+        assert_eq!(cfg.name, "two-tier");
+        assert_eq!(cfg.sites.len(), 3);
+        assert_eq!(cfg.network.links.len(), 1);
+    }
+}

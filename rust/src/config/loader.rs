@@ -1,0 +1,267 @@
+//! Load a `GridConfig` from a TOML-subset file.
+//!
+//! File layout (see `examples/configs/*.toml` for full samples):
+//!
+//! ```toml
+//! name = "my-grid"
+//! seed = 42
+//!
+//! [[site]]
+//! name = "cern"
+//! cpus = 100
+//! cpu_speed = 1.0
+//! datasets = ["ds0", "ds1"]
+//!
+//! [network]
+//! default_rtt_ms = 50.0
+//!
+//! [[network.link]]
+//! from = "cern"
+//! to = "fnal"
+//! rtt_ms = 30.0
+//!
+//! [scheduler]
+//! policy = "diana"
+//!
+//! [workload]
+//! jobs = 1000
+//! ```
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::schema::*;
+use super::toml::{self, Table, Value};
+
+pub fn load_file(path: impl AsRef<Path>) -> Result<GridConfig> {
+    let text = std::fs::read_to_string(path.as_ref())
+        .with_context(|| format!("reading {}", path.as_ref().display()))?;
+    load_str(&text)
+}
+
+pub fn load_str(text: &str) -> Result<GridConfig> {
+    let root = toml::parse(text).map_err(|e| anyhow!("{e}"))?;
+    let mut cfg = GridConfig {
+        name: str_or(&root, "name", "unnamed"),
+        seed: int_or(&root, "seed", 1) as u64,
+        sites: Vec::new(),
+        network: NetworkConfig::default(),
+        scheduler: SchedulerConfig::default(),
+        workload: WorkloadConfig::default(),
+    };
+
+    let sites = root
+        .get("site")
+        .and_then(Value::as_array)
+        .ok_or_else(|| anyhow!("config needs at least one [[site]]"))?;
+    for (i, sv) in sites.iter().enumerate() {
+        let t = sv
+            .as_table()
+            .ok_or_else(|| anyhow!("[[site]] #{i} is not a table"))?;
+        cfg.sites.push(SiteConfig {
+            name: str_or(t, "name", &format!("site{i}")),
+            cpus: int_or(t, "cpus", 1) as usize,
+            cpu_speed: float_or(t, "cpu_speed", 1.0),
+            datasets: str_array(t, "datasets"),
+            standby: bool_or(t, "standby", false),
+        });
+    }
+
+    if let Some(net) = root.get("network").and_then(Value::as_table) {
+        let d = &mut cfg.network;
+        d.default_rtt_ms = float_or(net, "default_rtt_ms", d.default_rtt_ms);
+        d.default_loss = float_or(net, "default_loss", d.default_loss);
+        d.default_capacity_mbps =
+            float_or(net, "default_capacity_mbps", d.default_capacity_mbps);
+        d.local_bw_mbps = float_or(net, "local_bw_mbps", d.local_bw_mbps);
+        d.local_loss = float_or(net, "local_loss", d.local_loss);
+        d.mss_bytes = float_or(net, "mss_bytes", d.mss_bytes);
+        d.monitor_noise = float_or(net, "monitor_noise", d.monitor_noise);
+        d.monitor_period_s =
+            float_or(net, "monitor_period_s", d.monitor_period_s);
+        let (def_rtt, def_loss, def_cap) =
+            (d.default_rtt_ms, d.default_loss, d.default_capacity_mbps);
+        if let Some(links) = net.get("link").and_then(Value::as_array) {
+            for lv in links {
+                let t = lv
+                    .as_table()
+                    .ok_or_else(|| anyhow!("[[network.link]] not a table"))?;
+                d.links.push(LinkConfig {
+                    from: str_or(t, "from", ""),
+                    to: str_or(t, "to", ""),
+                    rtt_ms: float_or(t, "rtt_ms", def_rtt),
+                    loss: float_or(t, "loss", def_loss),
+                    capacity_mbps: float_or(t, "capacity_mbps", def_cap),
+                });
+            }
+        }
+    }
+
+    if let Some(s) = root.get("scheduler").and_then(Value::as_table) {
+        let d = &mut cfg.scheduler;
+        if let Some(p) = s.get("policy").and_then(Value::as_str) {
+            d.policy = Policy::from_name(p)
+                .ok_or_else(|| anyhow!("unknown policy `{p}`"))?;
+        }
+        if let Some(e) = s.get("engine").and_then(Value::as_str) {
+            d.engine = EngineKind::from_name(e)
+                .ok_or_else(|| anyhow!("unknown engine `{e}`"))?;
+        }
+        d.w5 = float_or(s, "w5", d.w5);
+        d.w6 = float_or(s, "w6", d.w6);
+        d.w7 = float_or(s, "w7", d.w7);
+        d.w_net = float_or(s, "w_net", d.w_net);
+        d.w_dtc = float_or(s, "w_dtc", d.w_dtc);
+        d.congestion_thrs = float_or(s, "congestion_thrs", d.congestion_thrs);
+        d.group_division_factor =
+            int_or(s, "group_division_factor", d.group_division_factor as i64)
+                as usize;
+        d.max_group_per_site =
+            int_or(s, "max_group_per_site", d.max_group_per_site as i64)
+                as usize;
+        d.aging_halflife_s = float_or(s, "aging_halflife_s", d.aging_halflife_s);
+        d.default_quota = float_or(s, "default_quota", d.default_quota);
+        d.migration_period_s =
+            float_or(s, "migration_period_s", d.migration_period_s);
+        d.max_migrations =
+            int_or(s, "max_migrations", d.max_migrations as i64) as u32;
+    }
+
+    if let Some(w) = root.get("workload").and_then(Value::as_table) {
+        let d = &mut cfg.workload;
+        d.users = int_or(w, "users", d.users as i64) as usize;
+        d.jobs = int_or(w, "jobs", d.jobs as i64) as usize;
+        d.bulk_size = int_or(w, "bulk_size", d.bulk_size as i64) as usize;
+        d.arrival_rate = float_or(w, "arrival_rate", d.arrival_rate);
+        d.frac_compute = float_or(w, "frac_compute", d.frac_compute);
+        d.frac_data = float_or(w, "frac_data", d.frac_data);
+        d.frac_both = float_or(w, "frac_both", d.frac_both);
+        d.in_mb_median = float_or(w, "in_mb_median", d.in_mb_median);
+        d.in_mb_sigma = float_or(w, "in_mb_sigma", d.in_mb_sigma);
+        d.out_mb_median = float_or(w, "out_mb_median", d.out_mb_median);
+        d.exe_mb = float_or(w, "exe_mb", d.exe_mb);
+        d.cpu_sec_median = float_or(w, "cpu_sec_median", d.cpu_sec_median);
+        d.cpu_sec_sigma = float_or(w, "cpu_sec_sigma", d.cpu_sec_sigma);
+        d.max_procs = int_or(w, "max_procs", d.max_procs as i64) as usize;
+        d.datasets = int_or(w, "datasets", d.datasets as i64) as usize;
+        d.replicas = int_or(w, "replicas", d.replicas as i64) as usize;
+    }
+
+    if let Err(e) = cfg.validate() {
+        bail!("invalid config: {e}");
+    }
+    Ok(cfg)
+}
+
+fn str_or(t: &Table, key: &str, default: &str) -> String {
+    t.get(key)
+        .and_then(Value::as_str)
+        .map(str::to_string)
+        .unwrap_or_else(|| default.to_string())
+}
+
+fn int_or(t: &Table, key: &str, default: i64) -> i64 {
+    t.get(key).and_then(Value::as_int).unwrap_or(default)
+}
+
+fn float_or(t: &Table, key: &str, default: f64) -> f64 {
+    t.get(key).and_then(Value::as_float).unwrap_or(default)
+}
+
+fn bool_or(t: &Table, key: &str, default: bool) -> bool {
+    t.get(key).and_then(Value::as_bool).unwrap_or(default)
+}
+
+fn str_array(t: &Table, key: &str) -> Vec<String> {
+    t.get(key)
+        .and_then(Value::as_array)
+        .map(|a| {
+            a.iter()
+                .filter_map(Value::as_str)
+                .map(str::to_string)
+                .collect()
+        })
+        .unwrap_or_default()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+name = "test-grid"
+seed = 99
+
+[[site]]
+name = "a"
+cpus = 10
+datasets = ["ds0"]
+
+[[site]]
+name = "b"
+cpus = 20
+cpu_speed = 2.0
+
+[network]
+default_rtt_ms = 25.0
+
+[[network.link]]
+from = "a"
+to = "b"
+rtt_ms = 5.0
+loss = 0.001
+
+[scheduler]
+policy = "diana"
+engine = "rust"
+w5 = 1.5
+congestion_thrs = 0.3
+
+[workload]
+jobs = 42
+bulk_size = 7
+"#;
+
+    #[test]
+    fn full_roundtrip() {
+        let cfg = load_str(SAMPLE).unwrap();
+        assert_eq!(cfg.name, "test-grid");
+        assert_eq!(cfg.seed, 99);
+        assert_eq!(cfg.sites.len(), 2);
+        assert_eq!(cfg.sites[1].capability(), 40.0);
+        assert_eq!(cfg.sites[0].datasets, vec!["ds0"]);
+        assert_eq!(cfg.network.default_rtt_ms, 25.0);
+        assert_eq!(cfg.network.links.len(), 1);
+        assert_eq!(cfg.network.links[0].rtt_ms, 5.0);
+        assert_eq!(cfg.scheduler.w5, 1.5);
+        assert_eq!(cfg.scheduler.congestion_thrs, 0.3);
+        assert_eq!(cfg.workload.jobs, 42);
+        assert_eq!(cfg.workload.bulk_size, 7);
+    }
+
+    #[test]
+    fn missing_sites_is_error() {
+        assert!(load_str("name = \"x\"\n").is_err());
+    }
+
+    #[test]
+    fn unknown_policy_is_error() {
+        let bad = SAMPLE.replace("policy = \"diana\"", "policy = \"magic\"");
+        assert!(load_str(&bad).is_err());
+    }
+
+    #[test]
+    fn defaults_fill_gaps() {
+        let cfg = load_str("[[site]]\nname = \"only\"\ncpus = 1\n").unwrap();
+        assert_eq!(cfg.scheduler.policy, Policy::Diana);
+        assert_eq!(cfg.workload.users, WorkloadConfig::default().users);
+    }
+
+    #[test]
+    fn invalid_cross_field_rejected() {
+        let bad = SAMPLE.replace("congestion_thrs = 0.3",
+                                 "congestion_thrs = 3.0");
+        assert!(load_str(&bad).is_err());
+    }
+}

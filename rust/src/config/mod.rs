@@ -1,0 +1,13 @@
+//! Configuration: TOML-subset parser, typed schema, file loader and the
+//! canonical per-figure presets.
+
+pub mod loader;
+pub mod presets;
+pub mod schema;
+pub mod toml;
+
+pub use loader::{load_file, load_str};
+pub use schema::{
+    EngineKind, GridConfig, LinkConfig, NetworkConfig, Policy,
+    SchedulerConfig, SiteConfig, WorkloadConfig,
+};

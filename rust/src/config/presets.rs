@@ -1,0 +1,195 @@
+//! Canonical configurations: the paper's §XI testbed, the §VIII Fig-4
+//! grid, the §II CMS tier model, and parametric uniform grids for tests.
+
+use super::schema::*;
+
+/// §XI: "Site 1 has four nodes and the remaining four sites have five
+/// nodes each" — the five-site test Grid behind Figs 7–11.
+pub fn paper_testbed() -> GridConfig {
+    let mut sites = Vec::new();
+    for i in 0..5 {
+        sites.push(SiteConfig {
+            name: format!("site{}", i + 1),
+            cpus: if i == 0 { 4 } else { 5 },
+            cpu_speed: 1.0,
+            datasets: Vec::new(),
+            standby: i == 1,
+        });
+    }
+    GridConfig {
+        name: "paper-testbed".into(),
+        seed: 20060101,
+        sites,
+        network: NetworkConfig::default(),
+        scheduler: SchedulerConfig::default(),
+        workload: WorkloadConfig {
+            users: 5,
+            jobs: 100,
+            bulk_size: 25,
+            arrival_rate: 0.5,
+            cpu_sec_median: 300.0,
+            ..WorkloadConfig::default()
+        },
+    }
+}
+
+/// §VIII Fig-4 example: four sites A/B/C/D with 100/200/400/600 CPUs,
+/// identical network and data conditions, 1-hour jobs.
+pub fn fig4_grid() -> GridConfig {
+    let cpus = [100usize, 200, 400, 600];
+    let names = ["A", "B", "C", "D"];
+    let sites = names
+        .iter()
+        .zip(cpus)
+        .map(|(n, c)| SiteConfig {
+            name: n.to_string(),
+            cpus: c,
+            cpu_speed: 1.0,
+            datasets: Vec::new(),
+            standby: false,
+        })
+        .collect();
+    GridConfig {
+        name: "fig4".into(),
+        seed: 4,
+        sites,
+        network: NetworkConfig {
+            // "network and data conditions of all sites are the same"
+            default_rtt_ms: 10.0,
+            default_loss: 1e-4,
+            default_capacity_mbps: 10_000.0,
+            ..NetworkConfig::default()
+        },
+        scheduler: SchedulerConfig::default(),
+        workload: WorkloadConfig {
+            users: 1,
+            jobs: 10_000,
+            bulk_size: 10_000,
+            arrival_rate: 1000.0,
+            frac_compute: 1.0,
+            frac_data: 0.0,
+            frac_both: 0.0,
+            cpu_sec_median: 3600.0,
+            cpu_sec_sigma: 0.0,
+            max_procs: 1,
+            ..WorkloadConfig::default()
+        },
+    }
+}
+
+/// A CMS-like tiered grid (§II): one T0, two T1s, four T2s with data
+/// concentrated at the higher tiers — exercises data-aware placement.
+pub fn cms_tier_grid() -> GridConfig {
+    let mut sites = vec![SiteConfig {
+        name: "T0-CERN".into(),
+        cpus: 200,
+        cpu_speed: 1.0,
+        datasets: (0..40).map(|d| format!("ds{d}")).collect(),
+        standby: false,
+    }];
+    for (i, name) in ["T1-FNAL", "T1-RAL"].iter().enumerate() {
+        sites.push(SiteConfig {
+            name: name.to_string(),
+            cpus: 120,
+            cpu_speed: 1.0,
+            datasets: (0..40).filter(|d| d % 2 == i).map(|d| format!("ds{d}"))
+                .collect(),
+            standby: i == 0,
+        });
+    }
+    for i in 0..4 {
+        sites.push(SiteConfig {
+            name: format!("T2-{}", i + 1),
+            cpus: 40,
+            cpu_speed: 0.8,
+            datasets: (0..40).filter(|d| d % 4 == i).map(|d| format!("ds{d}"))
+                .collect(),
+            standby: false,
+        });
+    }
+    let mut network = NetworkConfig {
+        default_rtt_ms: 80.0,
+        default_loss: 0.02,
+        default_capacity_mbps: 622.0, // ~OC-12 era WAN
+        ..NetworkConfig::default()
+    };
+    // T0↔T1 links are the fat research backbones.
+    for t1 in ["T1-FNAL", "T1-RAL"] {
+        network.links.push(LinkConfig {
+            from: "T0-CERN".into(),
+            to: t1.into(),
+            rtt_ms: 30.0,
+            loss: 0.001,
+            capacity_mbps: 2500.0,
+        });
+    }
+    GridConfig {
+        name: "cms-tiers".into(),
+        seed: 2006,
+        sites,
+        network,
+        scheduler: SchedulerConfig::default(),
+        workload: WorkloadConfig {
+            users: 100,           // §II: simultaneously active users
+            jobs: 2000,
+            bulk_size: 100,
+            arrival_rate: 3.0,
+            in_mb_median: 30_000.0, // §II: ~30 GB average dataset
+            in_mb_sigma: 1.0,
+            datasets: 40,
+            replicas: 2,
+            ..WorkloadConfig::default()
+        },
+    }
+}
+
+/// Parametric uniform grid for tests/benches: `n` sites × `cpus` each.
+pub fn uniform_grid(n: usize, cpus: usize) -> GridConfig {
+    let sites = (0..n)
+        .map(|i| SiteConfig {
+            name: format!("s{i}"),
+            cpus,
+            cpu_speed: 1.0,
+            datasets: Vec::new(),
+            standby: i == 1,
+        })
+        .collect();
+    GridConfig {
+        name: format!("uniform-{n}x{cpus}"),
+        seed: 7,
+        sites,
+        network: NetworkConfig::default(),
+        scheduler: SchedulerConfig::default(),
+        workload: WorkloadConfig::default(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_testbed_matches_section_xi() {
+        let cfg = paper_testbed();
+        assert_eq!(cfg.sites.len(), 5);
+        assert_eq!(cfg.sites[0].cpus, 4);
+        assert!(cfg.sites[1..].iter().all(|s| s.cpus == 5));
+        assert_eq!(cfg.total_cpus(), 24);
+    }
+
+    #[test]
+    fn fig4_capacities() {
+        let cfg = fig4_grid();
+        let caps: Vec<usize> = cfg.sites.iter().map(|s| s.cpus).collect();
+        assert_eq!(caps, vec![100, 200, 400, 600]);
+        assert_eq!(cfg.workload.jobs, 10_000);
+        assert_eq!(cfg.workload.cpu_sec_median, 3600.0);
+    }
+
+    #[test]
+    fn cms_grid_has_tiered_data() {
+        let cfg = cms_tier_grid();
+        assert_eq!(cfg.sites[0].datasets.len(), 40);
+        assert!(cfg.sites.iter().skip(3).all(|s| s.datasets.len() == 10));
+    }
+}

@@ -1,0 +1,364 @@
+//! Typed configuration schema for a DIANA deployment: grid topology, site
+//! capacities, network characteristics, scheduler policy and workload.
+//!
+//! Parsed from the TOML subset (`config::toml`) by `config::loader`, or
+//! built programmatically (`config::presets` holds the per-figure setups).
+
+/// Scheduling policy selector (DIANA + the paper's §XI baselines).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    /// The paper's contribution: cost-driven matchmaking (§IV, §V)
+    /// + multilevel feedback queues + migration.
+    Diana,
+    /// EGEE-WMS-like baseline: single global FCFS queue, compute-only
+    /// matchmaking, no network awareness (what §XI compares against).
+    FcfsBroker,
+    /// Greedy "best single resource now" (related-work strawman, §I).
+    Greedy,
+    /// MyGrid-like: always move the job to the data (§III).
+    DataLocal,
+    /// Uniform random site choice (sanity floor).
+    Random,
+}
+
+impl Policy {
+    pub fn from_name(name: &str) -> Option<Policy> {
+        match name {
+            "diana" => Some(Policy::Diana),
+            "fcfs" | "fcfs-broker" | "egee" => Some(Policy::FcfsBroker),
+            "greedy" => Some(Policy::Greedy),
+            "data-local" | "datalocal" | "mygrid" => Some(Policy::DataLocal),
+            "random" => Some(Policy::Random),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::Diana => "diana",
+            Policy::FcfsBroker => "fcfs",
+            Policy::Greedy => "greedy",
+            Policy::DataLocal => "data-local",
+            Policy::Random => "random",
+        }
+    }
+}
+
+/// Which cost-engine backend evaluates the §IV cost matrix.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Pure-rust mirror of the kernel formulas (always available).
+    Rust,
+    /// AOT-compiled JAX/Pallas module executed via PJRT (artifacts/).
+    Xla,
+    /// Prefer XLA, fall back to rust if artifacts are missing.
+    Auto,
+}
+
+impl EngineKind {
+    pub fn from_name(name: &str) -> Option<EngineKind> {
+        match name {
+            "rust" => Some(EngineKind::Rust),
+            "xla" => Some(EngineKind::Xla),
+            "auto" => Some(EngineKind::Auto),
+            _ => None,
+        }
+    }
+}
+
+/// One Grid site: a local batch system with `cpus` single-job slots.
+#[derive(Clone, Debug)]
+pub struct SiteConfig {
+    pub name: String,
+    pub cpus: usize,
+    /// Normalised per-CPU speed; site capability Pi = cpus × speed.
+    pub cpu_speed: f64,
+    /// Names of datasets hosted (replicated) at this site.
+    pub datasets: Vec<String>,
+    /// Whether this site hosts a standby RootGrid replica (§IX failover).
+    pub standby: bool,
+}
+
+impl SiteConfig {
+    pub fn capability(&self) -> f64 {
+        self.cpus as f64 * self.cpu_speed
+    }
+}
+
+/// Pairwise link override (defaults come from `NetworkConfig`).
+#[derive(Clone, Debug)]
+pub struct LinkConfig {
+    pub from: String,
+    pub to: String,
+    pub rtt_ms: f64,
+    pub loss: f64,
+    /// Optional hard capacity cap (Mbps); Mathis may predict higher.
+    pub capacity_mbps: f64,
+}
+
+/// WAN model parameters (consumed by `network::`).
+#[derive(Clone, Debug)]
+pub struct NetworkConfig {
+    /// Default WAN round-trip time between distinct sites (ms).
+    pub default_rtt_ms: f64,
+    /// Default WAN packet-loss fraction.
+    pub default_loss: f64,
+    /// Default WAN link capacity cap (Mbps).
+    pub default_capacity_mbps: f64,
+    /// Intra-site ("local") bandwidth (Mbps) and loss.
+    pub local_bw_mbps: f64,
+    pub local_loss: f64,
+    /// TCP maximum segment size (bytes) for the Mathis model.
+    pub mss_bytes: f64,
+    /// Relative std-dev of the PingER monitor's noisy samples.
+    pub monitor_noise: f64,
+    /// Seconds between PingER monitoring sweeps.
+    pub monitor_period_s: f64,
+    pub links: Vec<LinkConfig>,
+}
+
+impl Default for NetworkConfig {
+    fn default() -> Self {
+        Self {
+            default_rtt_ms: 50.0,
+            default_loss: 0.01,
+            default_capacity_mbps: 1000.0,
+            local_bw_mbps: 10_000.0,
+            local_loss: 1e-4,
+            mss_bytes: 1460.0,
+            monitor_noise: 0.05,
+            monitor_period_s: 30.0,
+            links: Vec::new(),
+        }
+    }
+}
+
+/// §IV/§X scheduler parameters.
+#[derive(Clone, Debug)]
+pub struct SchedulerConfig {
+    pub policy: Policy,
+    pub engine: EngineKind,
+    /// §IV computation-cost weights.
+    pub w5: f64,
+    pub w6: f64,
+    pub w7: f64,
+    /// Term weights for the total cost.
+    pub w_net: f64,
+    pub w_dtc: f64,
+    /// §X congestion threshold Thrs ∈ {0,1}:
+    /// migrate when (arrival-service)/arrival > Thrs.
+    pub congestion_thrs: f64,
+    /// §VIII: group division factor (number of subgroups when splitting).
+    pub group_division_factor: usize,
+    /// §VIII: max jobs of one group a single site may take (0 = its CPUs).
+    pub max_group_per_site: usize,
+    /// §VII aging: seconds of waiting that buy +1.0 priority (time
+    /// threshold); 0 disables aging.
+    pub aging_halflife_s: f64,
+    /// Per-user default quota (used when users don't specify one).
+    pub default_quota: f64,
+    /// Seconds between migration checks at each meta-scheduler.
+    pub migration_period_s: f64,
+    /// Upper bound on migrations of a single job (paper: 1 — no cycling).
+    pub max_migrations: u32,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        Self {
+            policy: Policy::Diana,
+            engine: EngineKind::Rust,
+            w5: 1.0,
+            w6: 0.25,
+            w7: 2.0,
+            w_net: 1.0,
+            w_dtc: 1.0,
+            congestion_thrs: 0.2,
+            group_division_factor: 4,
+            max_group_per_site: 0,
+            aging_halflife_s: 600.0,
+            default_quota: 1000.0,
+            migration_period_s: 30.0,
+            max_migrations: 1,
+        }
+    }
+}
+
+/// Job class mix and size distributions (§II CMS estimates by default).
+#[derive(Clone, Debug)]
+pub struct WorkloadConfig {
+    pub users: usize,
+    /// Total jobs to submit over the run.
+    pub jobs: usize,
+    /// Jobs per bulk submission (0 = all individual).
+    pub bulk_size: usize,
+    /// Mean arrival rate of submissions (per second); Poisson process.
+    pub arrival_rate: f64,
+    /// Fractions of compute / data / both job classes (must sum to 1).
+    pub frac_compute: f64,
+    pub frac_data: f64,
+    pub frac_both: f64,
+    /// Input dataset size: log-normal (median MB, sigma).
+    pub in_mb_median: f64,
+    pub in_mb_sigma: f64,
+    /// Output size: fraction of input for data jobs, absolute for compute.
+    pub out_mb_median: f64,
+    pub exe_mb: f64,
+    /// CPU time: log-normal (median s, sigma). §II: seconds → hours.
+    pub cpu_sec_median: f64,
+    pub cpu_sec_sigma: f64,
+    /// Processors demanded per job: 1..=max_procs uniform.
+    pub max_procs: usize,
+    /// Number of distinct datasets in the catalog.
+    pub datasets: usize,
+    /// Replicas per dataset.
+    pub replicas: usize,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        Self {
+            users: 10,
+            jobs: 500,
+            bulk_size: 50,
+            arrival_rate: 1.0,
+            frac_compute: 0.2,
+            frac_data: 0.5,
+            frac_both: 0.3,
+            in_mb_median: 1000.0,
+            in_mb_sigma: 1.2,
+            out_mb_median: 50.0,
+            exe_mb: 20.0,
+            cpu_sec_median: 600.0,
+            cpu_sec_sigma: 1.0,
+            max_procs: 4,
+            datasets: 50,
+            replicas: 2,
+        }
+    }
+}
+
+/// Top-level deployment config.
+#[derive(Clone, Debug)]
+pub struct GridConfig {
+    pub name: String,
+    pub seed: u64,
+    pub sites: Vec<SiteConfig>,
+    pub network: NetworkConfig,
+    pub scheduler: SchedulerConfig,
+    pub workload: WorkloadConfig,
+}
+
+impl GridConfig {
+    /// Validate cross-field invariants; returns human-readable problems.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.sites.is_empty() {
+            return Err("at least one site is required".into());
+        }
+        if self.sites.iter().any(|s| s.cpus == 0) {
+            return Err("every site needs ≥ 1 CPU".into());
+        }
+        let mut names: Vec<&str> =
+            self.sites.iter().map(|s| s.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        if names.len() != self.sites.len() {
+            return Err("site names must be unique".into());
+        }
+        let w = &self.workload;
+        let mix = w.frac_compute + w.frac_data + w.frac_both;
+        if (mix - 1.0).abs() > 1e-6 {
+            return Err(format!("job-class fractions sum to {mix}, want 1"));
+        }
+        if !(0.0..=1.0).contains(&self.scheduler.congestion_thrs) {
+            return Err("congestion_thrs must be in [0,1]".into());
+        }
+        if self.scheduler.group_division_factor == 0 {
+            return Err("group_division_factor must be ≥ 1".into());
+        }
+        for l in &self.network.links {
+            let known = |n: &str| self.sites.iter().any(|s| s.name == n);
+            if !known(&l.from) || !known(&l.to) {
+                return Err(format!("link {}→{} names unknown site", l.from, l.to));
+            }
+        }
+        Ok(())
+    }
+
+    pub fn site_index(&self, name: &str) -> Option<usize> {
+        self.sites.iter().position(|s| s.name == name)
+    }
+
+    pub fn total_cpus(&self) -> usize {
+        self.sites.iter().map(|s| s.cpus).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn presets_validate() {
+        for cfg in [
+            presets::paper_testbed(),
+            presets::fig4_grid(),
+            presets::uniform_grid(4, 8),
+            presets::cms_tier_grid(),
+        ] {
+            cfg.validate().unwrap_or_else(|e| panic!("{}: {e}", cfg.name));
+        }
+    }
+
+    #[test]
+    fn validation_catches_problems() {
+        let mut cfg = presets::uniform_grid(2, 4);
+        cfg.sites[0].cpus = 0;
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = presets::uniform_grid(2, 4);
+        cfg.sites[1].name = cfg.sites[0].name.clone();
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = presets::uniform_grid(2, 4);
+        cfg.workload.frac_compute = 0.9;
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = presets::uniform_grid(2, 4);
+        cfg.scheduler.congestion_thrs = 1.5;
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = presets::uniform_grid(2, 4);
+        cfg.network.links.push(LinkConfig {
+            from: "nosuch".into(),
+            to: cfg.sites[0].name.clone(),
+            rtt_ms: 1.0,
+            loss: 0.0,
+            capacity_mbps: 1.0,
+        });
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn policy_names_roundtrip() {
+        for p in [Policy::Diana, Policy::FcfsBroker, Policy::Greedy,
+                  Policy::DataLocal, Policy::Random] {
+            assert_eq!(Policy::from_name(p.name()), Some(p));
+        }
+        assert_eq!(Policy::from_name("egee"), Some(Policy::FcfsBroker));
+        assert_eq!(Policy::from_name("nope"), None);
+    }
+
+    #[test]
+    fn capability_is_cpus_times_speed() {
+        let s = SiteConfig {
+            name: "x".into(),
+            cpus: 10,
+            cpu_speed: 1.5,
+            datasets: vec![],
+            standby: false,
+        };
+        assert_eq!(s.capability(), 15.0);
+    }
+}

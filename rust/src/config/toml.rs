@@ -1,0 +1,393 @@
+//! Minimal TOML-subset parser (the offline crate set has no `toml`/`serde`).
+//!
+//! Supported: `[table]` and `[table.sub]` headers, `[[array-of-tables]]`,
+//! `key = value` with strings, integers, floats, booleans, and flat arrays.
+//! Comments (`#`) and blank lines are skipped. This covers the whole DIANA
+//! config surface; anything fancier is a parse error, not silent data loss.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+    Table(Table),
+}
+
+pub type Table = BTreeMap<String, Value>;
+
+#[derive(Debug, thiserror::Error)]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+fn err(line: usize, msg: impl Into<String>) -> ParseError {
+    ParseError { line, msg: msg.into() }
+}
+
+/// Parse a TOML-subset document into a nested table.
+pub fn parse(input: &str) -> Result<Table, ParseError> {
+    let mut root = Table::new();
+    // Path of the currently open table ([] = root).
+    let mut path: Vec<String> = Vec::new();
+    let mut path_is_array = false;
+
+    for (idx, raw) in input.lines().enumerate() {
+        let lineno = idx + 1;
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(inner) = line.strip_prefix("[[") {
+            let name = inner
+                .strip_suffix("]]")
+                .ok_or_else(|| err(lineno, "unterminated [[table]]"))?;
+            path = split_path(name, lineno)?;
+            path_is_array = true;
+            push_array_table(&mut root, &path, lineno)?;
+        } else if let Some(inner) = line.strip_prefix('[') {
+            let name = inner
+                .strip_suffix(']')
+                .ok_or_else(|| err(lineno, "unterminated [table]"))?;
+            path = split_path(name, lineno)?;
+            path_is_array = false;
+            ensure_table(&mut root, &path, lineno)?;
+        } else {
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| err(lineno, "expected key = value"))?;
+            let key = k.trim();
+            if key.is_empty() {
+                return Err(err(lineno, "empty key"));
+            }
+            let value = parse_value(v.trim(), lineno)?;
+            let tbl = open_table(&mut root, &path, path_is_array, lineno)?;
+            if tbl.insert(key.to_string(), value).is_some() {
+                return Err(err(lineno, format!("duplicate key `{key}`")));
+            }
+        }
+    }
+    Ok(root)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A `#` inside a quoted string must not start a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn split_path(name: &str, lineno: usize) -> Result<Vec<String>, ParseError> {
+    let parts: Vec<String> =
+        name.split('.').map(|p| p.trim().to_string()).collect();
+    if parts.iter().any(|p| p.is_empty()) {
+        return Err(err(lineno, "empty table-name component"));
+    }
+    Ok(parts)
+}
+
+fn ensure_table<'a>(
+    root: &'a mut Table,
+    path: &[String],
+    lineno: usize,
+) -> Result<&'a mut Table, ParseError> {
+    let mut cur = root;
+    for part in path {
+        let entry = cur
+            .entry(part.clone())
+            .or_insert_with(|| Value::Table(Table::new()));
+        cur = match entry {
+            Value::Table(t) => t,
+            Value::Array(arr) => match arr.last_mut() {
+                Some(Value::Table(t)) => t,
+                _ => return Err(err(lineno, format!("`{part}` is not a table"))),
+            },
+            _ => return Err(err(lineno, format!("`{part}` is not a table"))),
+        };
+    }
+    Ok(cur)
+}
+
+fn push_array_table(
+    root: &mut Table,
+    path: &[String],
+    lineno: usize,
+) -> Result<(), ParseError> {
+    let (last, prefix) =
+        path.split_last().ok_or_else(|| err(lineno, "empty table name"))?;
+    let parent = ensure_table(root, prefix, lineno)?;
+    match parent
+        .entry(last.clone())
+        .or_insert_with(|| Value::Array(Vec::new()))
+    {
+        Value::Array(arr) => {
+            arr.push(Value::Table(Table::new()));
+            Ok(())
+        }
+        _ => Err(err(lineno, format!("`{last}` is not an array of tables"))),
+    }
+}
+
+fn open_table<'a>(
+    root: &'a mut Table,
+    path: &[String],
+    is_array: bool,
+    lineno: usize,
+) -> Result<&'a mut Table, ParseError> {
+    if is_array {
+        let (last, prefix) =
+            path.split_last().ok_or_else(|| err(lineno, "empty path"))?;
+        let parent = ensure_table(root, prefix, lineno)?;
+        match parent.get_mut(last) {
+            Some(Value::Array(arr)) => match arr.last_mut() {
+                Some(Value::Table(t)) => Ok(t),
+                _ => Err(err(lineno, "array of tables is empty")),
+            },
+            _ => Err(err(lineno, format!("`{last}` is not an array of tables"))),
+        }
+    } else {
+        ensure_table(root, path, lineno)
+    }
+}
+
+fn parse_value(s: &str, lineno: usize) -> Result<Value, ParseError> {
+    if s.is_empty() {
+        return Err(err(lineno, "empty value"));
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| err(lineno, "unterminated string"))?;
+        return Ok(Value::Str(unescape(inner)));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest
+            .strip_suffix(']')
+            .ok_or_else(|| err(lineno, "unterminated array"))?;
+        let mut items = Vec::new();
+        for part in split_array_items(inner) {
+            let part = part.trim();
+            if !part.is_empty() {
+                items.push(parse_value(part, lineno)?);
+            }
+        }
+        return Ok(Value::Array(items));
+    }
+    let cleaned = s.replace('_', "");
+    if let Ok(i) = cleaned.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = cleaned.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(err(lineno, format!("cannot parse value `{s}`")))
+}
+
+/// Split array items at top-level commas (strings may contain commas).
+fn split_array_items(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+fn unescape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c == '\\' {
+            match chars.next() {
+                Some('n') => out.push('\n'),
+                Some('t') => out.push('\t'),
+                Some('"') => out.push('"'),
+                Some('\\') => out.push('\\'),
+                Some(other) => {
+                    out.push('\\');
+                    out.push(other);
+                }
+                None => out.push('\\'),
+            }
+        } else {
+            out.push(c);
+        }
+    }
+    out
+}
+
+// ---- typed accessors -------------------------------------------------
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    /// Floats accept integer literals too (`42` is a valid float value).
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    pub fn as_table(&self) -> Option<&Table> {
+        match self {
+            Value::Table(t) => Some(t),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars_and_comments() {
+        let t = parse(
+            r#"
+# a comment
+name = "grid-a"   # trailing
+seed = 42
+rate = 2.5
+big = 1_000_000
+on = true
+off = false
+"#,
+        )
+        .unwrap();
+        assert_eq!(t["name"].as_str(), Some("grid-a"));
+        assert_eq!(t["seed"].as_int(), Some(42));
+        assert_eq!(t["rate"].as_float(), Some(2.5));
+        assert_eq!(t["big"].as_int(), Some(1_000_000));
+        assert_eq!(t["on"].as_bool(), Some(true));
+        assert_eq!(t["off"].as_bool(), Some(false));
+    }
+
+    #[test]
+    fn nested_tables() {
+        let t = parse("[a.b]\nx = 1\n[a.c]\ny = 2\n").unwrap();
+        let a = t["a"].as_table().unwrap();
+        assert_eq!(a["b"].as_table().unwrap()["x"].as_int(), Some(1));
+        assert_eq!(a["c"].as_table().unwrap()["y"].as_int(), Some(2));
+    }
+
+    #[test]
+    fn array_of_tables() {
+        let t = parse("[[site]]\nname = \"s1\"\n[[site]]\nname = \"s2\"\n")
+            .unwrap();
+        let sites = t["site"].as_array().unwrap();
+        assert_eq!(sites.len(), 2);
+        assert_eq!(
+            sites[1].as_table().unwrap()["name"].as_str(),
+            Some("s2")
+        );
+    }
+
+    #[test]
+    fn flat_arrays() {
+        let t = parse("xs = [1, 2, 3]\nys = [1.5, 2.5]\nss = [\"a\", \"b,c\"]\n")
+            .unwrap();
+        assert_eq!(t["xs"].as_array().unwrap().len(), 3);
+        assert_eq!(t["ys"].as_array().unwrap()[1].as_float(), Some(2.5));
+        assert_eq!(t["ss"].as_array().unwrap()[1].as_str(), Some("b,c"));
+    }
+
+    #[test]
+    fn int_literal_readable_as_float() {
+        let t = parse("x = 3\n").unwrap();
+        assert_eq!(t["x"].as_float(), Some(3.0));
+    }
+
+    #[test]
+    fn string_escapes() {
+        let t = parse(r#"s = "a\nb\t\"c\"""#).unwrap();
+        assert_eq!(t["s"].as_str(), Some("a\nb\t\"c\""));
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let t = parse("s = \"a#b\"\n").unwrap();
+        assert_eq!(t["s"].as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = parse("x = 1\ny = @bad\n").unwrap_err();
+        assert_eq!(e.line, 2);
+        assert!(parse("[unclosed\n").is_err());
+        assert!(parse("= 3\n").is_err());
+        assert!(parse("x = 1\nx = 2\n").is_err()); // duplicate key
+    }
+
+    #[test]
+    fn keys_under_array_table_go_to_last_element() {
+        let t = parse("[[s]]\na = 1\n[[s]]\na = 2\nb = 3\n").unwrap();
+        let arr = t["s"].as_array().unwrap();
+        assert_eq!(arr[0].as_table().unwrap()["a"].as_int(), Some(1));
+        let last = arr[1].as_table().unwrap();
+        assert_eq!(last["a"].as_int(), Some(2));
+        assert_eq!(last["b"].as_int(), Some(3));
+    }
+}

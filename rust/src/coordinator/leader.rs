@@ -1,0 +1,142 @@
+//! Leader: assemble a full run (config → engine → picker → workload →
+//! world) and produce the standard report. Every example, bench and
+//! repro figure goes through this entry point.
+
+use anyhow::Result;
+
+use crate::config::GridConfig;
+use crate::data::Catalog;
+use crate::metrics::JobRecord;
+use crate::runtime::make_engine;
+use crate::scheduler::make_picker;
+use crate::sim::World;
+use crate::util::{Pcg64, Summary};
+use crate::workload::{Submission, WorkloadGen};
+
+/// Summary of one end-to-end run.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    pub policy: &'static str,
+    pub jobs: usize,
+    pub makespan_s: f64,
+    pub queue_time: Summary,
+    pub exec_time: Summary,
+    pub turnaround: Summary,
+    pub response_time: Summary,
+    pub throughput_jobs_per_s: f64,
+    pub migrations: u64,
+    pub groups_split: u64,
+    pub groups_whole: u64,
+    pub events: u64,
+}
+
+impl RunReport {
+    pub fn from_world(w: &World) -> RunReport {
+        let makespan = w
+            .recorder
+            .completed_records()
+            .map(|r| r.delivered)
+            .fold(0.0, f64::max);
+        RunReport {
+            policy: w.policy_name(),
+            jobs: w.recorder.n_completed(),
+            makespan_s: makespan,
+            queue_time: w.recorder.summary(JobRecord::queue_time),
+            exec_time: w.recorder.summary(JobRecord::exec_time),
+            turnaround: w.recorder.summary(JobRecord::turnaround),
+            response_time: w.recorder.summary(JobRecord::response_time),
+            throughput_jobs_per_s: w.recorder.throughput(),
+            migrations: w.recorder.migrations,
+            groups_split: w.recorder.groups_split,
+            groups_whole: w.recorder.groups_whole,
+            events: w.events_processed(),
+        }
+    }
+}
+
+/// Build a world for `cfg` (engine + picker per the config) with a
+/// generated workload, run it to completion, and report.
+pub fn run_simulation(cfg: &GridConfig) -> Result<(World, RunReport)> {
+    let subs = generate_workload(cfg);
+    run_simulation_with(cfg, subs)
+}
+
+/// Same, but with an explicit (replayed) workload.
+pub fn run_simulation_with(
+    cfg: &GridConfig,
+    subs: Vec<Submission>,
+) -> Result<(World, RunReport)> {
+    let engine_for_picker = make_engine(cfg.scheduler.engine)?;
+    let engine_for_world = make_engine(cfg.scheduler.engine)?;
+    let picker = make_picker(
+        cfg.scheduler.policy,
+        engine_for_picker,
+        &cfg.scheduler,
+        cfg.seed,
+    );
+    let mut world = World::new(cfg.clone(), picker, engine_for_world);
+    world.load_submissions(subs);
+    world.run()?;
+    let report = RunReport::from_world(&world);
+    Ok((world, report))
+}
+
+/// The workload a config implies (same catalog construction as `World`,
+/// so replica references resolve identically).
+pub fn generate_workload(cfg: &GridConfig) -> Vec<Submission> {
+    let mut rng = Pcg64::new(cfg.seed ^ 0xca7a);
+    let catalog = Catalog::from_config(cfg, &mut rng);
+    WorkloadGen::new(cfg.seed).schedule(cfg, &catalog)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{presets, Policy};
+
+    #[test]
+    fn end_to_end_report() {
+        let mut cfg = presets::uniform_grid(3, 4);
+        cfg.workload.jobs = 30;
+        cfg.workload.bulk_size = 10;
+        cfg.workload.cpu_sec_median = 30.0;
+        let (_, report) = run_simulation(&cfg).unwrap();
+        assert_eq!(report.jobs, 30);
+        assert!(report.makespan_s > 0.0);
+        assert!(report.throughput_jobs_per_s > 0.0);
+        assert!(report.events > 30);
+        assert_eq!(report.policy, "diana");
+    }
+
+    #[test]
+    fn replayed_workload_reproduces_report() {
+        let mut cfg = presets::uniform_grid(3, 4);
+        cfg.workload.jobs = 20;
+        cfg.workload.cpu_sec_median = 30.0;
+        let subs = generate_workload(&cfg);
+        let (_, a) = run_simulation_with(&cfg, subs.clone()).unwrap();
+        let (_, b) = run_simulation_with(&cfg, subs).unwrap();
+        assert_eq!(a.makespan_s, b.makespan_s);
+        assert_eq!(a.queue_time.mean(), b.queue_time.mean());
+    }
+
+    #[test]
+    fn policies_are_comparable_on_same_workload() {
+        let mut cfg = presets::paper_testbed();
+        cfg.workload.jobs = 50;
+        cfg.workload.bulk_size = 25;
+        cfg.workload.cpu_sec_median = 120.0;
+        cfg.workload.cpu_sec_sigma = 0.2;
+        let subs = generate_workload(&cfg);
+        let (_, diana) = run_simulation_with(&cfg, subs.clone()).unwrap();
+        let mut fcfs_cfg = cfg.clone();
+        fcfs_cfg.scheduler.policy = Policy::FcfsBroker;
+        let (_, fcfs) = run_simulation_with(&fcfs_cfg, subs).unwrap();
+        assert_eq!(diana.jobs, fcfs.jobs);
+        // The §XI claim, at smoke-test scale: DIANA queues no worse than
+        // the single-queue broker.
+        assert!(diana.queue_time.mean() <= fcfs.queue_time.mean() * 1.5,
+                "diana {} vs fcfs {}", diana.queue_time.mean(),
+                fcfs.queue_time.mean());
+    }
+}

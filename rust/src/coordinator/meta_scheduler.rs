@@ -1,0 +1,203 @@
+//! The per-site DIANA layer (§IV Fig 1): multilevel feedback queues +
+//! §X re-prioritization + §X congestion tracking, sitting on top of the
+//! site's local batch system.
+
+use anyhow::Result;
+
+use crate::cost::CostEngine;
+use crate::job::{Job, JobId};
+use crate::migration::CongestionTracker;
+use crate::priority;
+use crate::queues::{MetaJob, MultilevelQueue};
+
+pub struct MetaScheduler {
+    pub site: usize,
+    pub queues: MultilevelQueue,
+    pub congestion: CongestionTracker,
+}
+
+impl MetaScheduler {
+    pub fn new(site: usize, aging_halflife_s: f64, window_s: f64)
+        -> MetaScheduler {
+        MetaScheduler {
+            site,
+            queues: MultilevelQueue::new(aging_halflife_s),
+            congestion: CongestionTracker::new(window_s),
+        }
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queues.len()
+    }
+
+    /// Enqueue a batch (one bulk subgroup arrives as a unit, §VIII) and
+    /// run ONE §X re-prioritization sweep over the whole population.
+    pub fn enqueue_batch(
+        &mut self,
+        engine: &mut dyn CostEngine,
+        jobs: &[&Job],
+        now: f64,
+    ) -> Result<()> {
+        for job in jobs {
+            // Staged unsorted — the sweep below rebuilds global order.
+            self.queues.stage(MetaJob {
+                job: job.id,
+                user: job.user,
+                procs: job.procs as u32,
+                quota: job.quota as f32,
+                priority: 0.0, // set by the sweep below
+                enqueued_at: now,
+            });
+            self.congestion.record_arrival(now);
+        }
+        self.reprioritize(engine)
+    }
+
+    /// Re-insert a job handed over by a peer (§IX migration: "increase
+    /// the job's priority" — the sweep recomputes it; the bumped
+    /// enqueue timestamp keeps FCFS fairness at the new site).
+    pub fn accept_migrated(
+        &mut self,
+        engine: &mut dyn CostEngine,
+        meta: MetaJob,
+        now: f64,
+    ) -> Result<()> {
+        self.queues.insert(MetaJob { enqueued_at: now, ..meta });
+        self.congestion.record_arrival(now);
+        self.reprioritize(engine)
+    }
+
+    /// §X: recompute every queued job's priority and re-bucket.
+    pub fn reprioritize(&mut self, engine: &mut dyn CostEngine) -> Result<()> {
+        let facts = self.queues.all_facts();
+        if facts.is_empty() {
+            return Ok(());
+        }
+        let assignments = priority::sweep(engine, &facts)?;
+        self.queues.apply(&assignments);
+        Ok(())
+    }
+
+    /// Pop the best job for dispatch to the local batch system.
+    pub fn pop(&mut self, now: f64) -> Option<MetaJob> {
+        let j = self.queues.pop_best(now);
+        if j.is_some() {
+            self.congestion.record_service(now);
+        }
+        j
+    }
+
+    pub fn remove(&mut self, job: JobId) -> Option<MetaJob> {
+        self.queues.remove(job)
+    }
+
+    /// §IX peer poll: jobs queued here that would run before a job with
+    /// priority `pr` (enqueued at `ts`; peers pass `+inf`).
+    pub fn jobs_ahead(&self, pr: f32, ts: f64) -> usize {
+        self.queues.jobs_ahead(pr, ts)
+    }
+
+    /// §X congestion predicate.
+    pub fn is_congested(&mut self, now: f64, thrs: f64) -> bool {
+        self.congestion.is_congested(now, thrs)
+    }
+
+    /// Candidates for migration: up to `max` low-priority jobs (Q4→Q3).
+    pub fn migration_candidates(&mut self, max: usize) -> Vec<MetaJob> {
+        self.queues.drain_low_priority(max)
+    }
+
+    /// Put back candidates that didn't migrate.
+    pub fn reinsert(&mut self, jobs: Vec<MetaJob>) {
+        for j in jobs {
+            self.queues.insert(j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::RustEngine;
+    use crate::job::{JobClass, UserId};
+
+    fn job(id: u64, user: u32, procs: usize) -> Job {
+        Job {
+            id: JobId(id),
+            user: UserId(user),
+            group: None,
+            class: JobClass::Both,
+            input: None,
+            in_mb: 0.0,
+            out_mb: 1.0,
+            exe_mb: 1.0,
+            cpu_sec: 60.0,
+            procs,
+            submit_site: 0,
+            submit_time: 0.0,
+            quota: 1900.0,
+            migrations: 0,
+        }
+    }
+
+    #[test]
+    fn batch_enqueue_prioritizes_fig6_style() {
+        let mut ms = MetaScheduler::new(0, 0.0, 60.0);
+        let mut e = RustEngine::new();
+        let a1 = job(1, 1, 1);
+        let a2 = job(2, 1, 5);
+        let mut b1 = job(3, 2, 1);
+        b1.quota = 1700.0;
+        ms.enqueue_batch(&mut e, &[&a1, &a2, &b1], 0.0).unwrap();
+        assert_eq!(ms.queue_len(), 3);
+        // Fig 6: B1 lands in Q1 and is dispatched first.
+        let first = ms.pop(1.0).unwrap();
+        assert_eq!(first.job, JobId(3));
+    }
+
+    #[test]
+    fn service_and_arrival_feed_congestion() {
+        let mut ms = MetaScheduler::new(0, 0.0, 100.0);
+        let mut e = RustEngine::new();
+        let jobs: Vec<Job> = (0..20).map(|i| job(i, 1, 1)).collect();
+        let refs: Vec<&Job> = jobs.iter().collect();
+        ms.enqueue_batch(&mut e, &refs, 0.0).unwrap();
+        // No services yet → fully congested at any threshold < 1.
+        assert!(ms.is_congested(10.0, 0.5));
+        for t in 0..20 {
+            ms.pop(10.0 + t as f64);
+        }
+        assert!(!ms.is_congested(30.0, 0.5));
+    }
+
+    #[test]
+    fn migration_candidates_roundtrip() {
+        let mut ms = MetaScheduler::new(0, 0.0, 60.0);
+        let mut e = RustEngine::new();
+        // One user floods with *heavy* (high-t) jobs: for those,
+        // N = T/t < n, so Pr(n) goes negative → Q3/Q4 populate.
+        let jobs: Vec<Job> =
+            (0..10).map(|i| job(i, 1, 1 + (i as usize % 8))).collect();
+        let refs: Vec<&Job> = jobs.iter().collect();
+        ms.enqueue_batch(&mut e, &refs, 0.0).unwrap();
+        let before = ms.queue_len();
+        let cands = ms.migration_candidates(3);
+        assert!(!cands.is_empty());
+        assert_eq!(ms.queue_len() + cands.len(), before);
+        ms.reinsert(cands);
+        assert_eq!(ms.queue_len(), before);
+    }
+
+    #[test]
+    fn accept_migrated_requeues() {
+        let mut ms = MetaScheduler::new(1, 0.0, 60.0);
+        let mut e = RustEngine::new();
+        let j = job(7, 3, 1);
+        ms.enqueue_batch(&mut e, &[&j], 0.0).unwrap();
+        let meta = ms.remove(JobId(7)).unwrap();
+        assert_eq!(ms.queue_len(), 0);
+        ms.accept_migrated(&mut e, meta, 50.0).unwrap();
+        assert_eq!(ms.queue_len(), 1);
+        assert!(ms.queues.iter().next().unwrap().enqueued_at == 50.0);
+    }
+}

@@ -1,0 +1,10 @@
+//! The DIANA coordinator: per-site meta-scheduler (queues + priority +
+//! congestion) and the leader/serve front ends.
+
+pub mod leader;
+pub mod meta_scheduler;
+pub mod serve;
+
+pub use leader::{generate_workload, run_simulation, run_simulation_with,
+                 RunReport};
+pub use meta_scheduler::MetaScheduler;

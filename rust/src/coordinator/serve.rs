@@ -1,0 +1,265 @@
+//! `diana serve`: a line-protocol TCP front end to the meta-scheduler —
+//! the deployable face of the coordinator (std::net; the offline crate
+//! set has no tokio, and the request path is synchronous by design:
+//! Python never appears here, and each request is one matchmaking round).
+//!
+//! Protocol (one request per line, one reply per line):
+//!   SUBMIT <jdl-classad-on-one-line>  → OK <group-id> site=<name> …
+//!   STATUS                            → sites + queue depths
+//!   QUIT                              → closes the connection
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use crate::config::GridConfig;
+use crate::data::Catalog;
+use crate::job::{BulkSpec, Jdl, Job, JobClass, JobId, UserId};
+use crate::network::{PingerMonitor, Topology};
+use crate::scheduler::{GridView, SitePicker, SiteSnapshot};
+use crate::util::Pcg64;
+
+/// Shared server state: one picker + a live (synthetic) grid snapshot.
+pub struct Server {
+    cfg: GridConfig,
+    picker: Mutex<Box<dyn SitePicker>>,
+    monitor: PingerMonitor,
+    catalog: Catalog,
+    queue_depths: Vec<AtomicU64>,
+    next_id: AtomicU64,
+}
+
+impl Server {
+    pub fn new(cfg: GridConfig, picker: Box<dyn SitePicker>) -> Server {
+        let topo = Topology::from_config(&cfg);
+        let monitor = PingerMonitor::new(&topo, 0.0, cfg.seed);
+        let mut rng = Pcg64::new(cfg.seed ^ 0xca7a);
+        let catalog = Catalog::from_config(&cfg, &mut rng);
+        let queue_depths = (0..cfg.sites.len()).map(|_| AtomicU64::new(0))
+            .collect();
+        Server {
+            cfg,
+            picker: Mutex::new(picker),
+            monitor,
+            catalog,
+            queue_depths,
+            next_id: AtomicU64::new(1),
+        }
+    }
+
+    fn snapshot(&self) -> Vec<SiteSnapshot> {
+        self.cfg
+            .sites
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                let q = self.queue_depths[i].load(Ordering::Relaxed) as usize;
+                SiteSnapshot {
+                    queue_len: q,
+                    capability: s.capability(),
+                    load: (q as f64 / s.cpus as f64).min(1.0),
+                    free_slots: s.cpus.saturating_sub(q),
+                    cpus: s.cpus,
+                    alive: true,
+                }
+            })
+            .collect()
+    }
+
+    /// Handle one SUBMIT: parse the JDL, build the job batch, matchmake.
+    pub fn submit(&self, jdl_text: &str) -> Result<String> {
+        let jdl = Jdl::parse(jdl_text).context("bad JDL")?;
+        let spec = BulkSpec::from_jdl(&jdl);
+        let class = match jdl.get_str("JobClass") {
+            Some("compute") => JobClass::ComputeIntensive,
+            Some("data") => JobClass::DataIntensive,
+            _ => JobClass::Both,
+        };
+        let input = jdl
+            .get_str_list("InputData")
+            .first()
+            .and_then(|n| self.catalog.lookup(n));
+        let base = self.next_id.fetch_add(spec.group_size as u64,
+                                          Ordering::Relaxed);
+        let job = Job {
+            id: JobId(base),
+            user: UserId(0),
+            group: None,
+            class,
+            input,
+            in_mb: input.map(|d| self.catalog.get(d).size_mb).unwrap_or(0.0),
+            out_mb: spec.output_mb,
+            exe_mb: 20.0,
+            cpu_sec: spec.cpu_seconds,
+            procs: spec.processors,
+            submit_site: 0,
+            submit_time: 0.0,
+            quota: self.cfg.scheduler.default_quota,
+            migrations: 0,
+        };
+        let snap = self.snapshot();
+        let view = GridView {
+            now: 0.0,
+            sites: &snap,
+            monitor: &self.monitor,
+            catalog: &self.catalog,
+            q_total: snap.iter().map(|s| s.queue_len).sum(),
+        };
+        let site = {
+            let mut picker = self.picker.lock().unwrap();
+            picker.pick(std::slice::from_ref(&job), &view)?[0]
+        };
+        self.queue_depths[site]
+            .fetch_add(spec.group_size as u64, Ordering::Relaxed);
+        Ok(format!(
+            "OK group={} jobs={} site={} class={:?}",
+            base, spec.group_size, self.cfg.sites[site].name, class
+        ))
+    }
+
+    pub fn status(&self) -> String {
+        let cells: Vec<String> = self
+            .cfg
+            .sites
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                format!("{}={}", s.name,
+                        self.queue_depths[i].load(Ordering::Relaxed))
+            })
+            .collect();
+        format!("QUEUES {}", cells.join(" "))
+    }
+
+    fn handle_conn(&self, stream: TcpStream) -> Result<()> {
+        let mut reader = BufReader::new(stream.try_clone()?);
+        let mut stream = stream;
+        let mut line = String::new();
+        loop {
+            line.clear();
+            if reader.read_line(&mut line)? == 0 {
+                return Ok(());
+            }
+            let reply = match line.trim() {
+                "" => continue,
+                "QUIT" => return Ok(()),
+                "STATUS" => self.status(),
+                cmd if cmd.starts_with("SUBMIT ") => {
+                    match self.submit(&cmd[7..]) {
+                        Ok(r) => r,
+                        Err(e) => format!("ERR {e:#}"),
+                    }
+                }
+                other => format!("ERR unknown command {other:?}"),
+            };
+            writeln!(stream, "{reply}")?;
+        }
+    }
+
+    /// Serve until the process is killed. `addr` e.g. "127.0.0.1:7077".
+    /// Connections are handled sequentially: the picker may hold a PJRT
+    /// client (`Rc` internally, not `Send`), and a matchmaking round is
+    /// micro-seconds — a accept-loop is the right shape here.
+    pub fn serve(self, addr: &str) -> Result<()> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding {addr}"))?;
+        log::info!("diana serving on {addr}");
+        for stream in listener.incoming() {
+            let stream = stream?;
+            if let Err(e) = self.handle_conn(stream) {
+                log::warn!("connection error: {e:#}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::cost::RustEngine;
+    use crate::scheduler::make_picker;
+
+    fn server() -> Server {
+        let cfg = presets::uniform_grid(3, 8);
+        let picker = make_picker(
+            cfg.scheduler.policy,
+            Box::new(RustEngine::new()),
+            &cfg.scheduler,
+            1,
+        );
+        Server::new(cfg, picker)
+    }
+
+    #[test]
+    fn submit_roundtrip() {
+        let s = server();
+        let reply = s
+            .submit("[ Executable = \"cmsRun\"; GroupSize = 5; \
+                     CpuSeconds = 60; JobClass = \"compute\"; ]")
+            .unwrap();
+        assert!(reply.starts_with("OK group=1 jobs=5 site="), "{reply}");
+        // Queue depth is visible in STATUS.
+        assert!(s.status().contains('5'), "{}", s.status());
+    }
+
+    #[test]
+    fn bad_jdl_is_an_error() {
+        let s = server();
+        assert!(s.submit("[ oops").is_err());
+    }
+
+    #[test]
+    fn load_spreads_across_submissions() {
+        let s = server();
+        for _ in 0..6 {
+            s.submit("[ GroupSize = 8; CpuSeconds = 60; \
+                      JobClass = \"compute\"; ]").unwrap();
+        }
+        let total: u64 = (0..3)
+            .map(|i| s.queue_depths[i].load(Ordering::Relaxed))
+            .sum();
+        assert_eq!(total, 48);
+        // More than one site must have been used as queues built up.
+        let used = (0..3)
+            .filter(|&i| s.queue_depths[i].load(Ordering::Relaxed) > 0)
+            .count();
+        assert!(used >= 2, "all load on one site");
+    }
+
+    #[test]
+    fn tcp_end_to_end() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        drop(listener);
+        // Build the server inside the thread: it is !Send (PJRT Rc).
+        std::thread::spawn(move || server().serve(&addr.to_string()).ok());
+        // Retry until the server is up.
+        let mut stream = None;
+        for _ in 0..50 {
+            match TcpStream::connect(addr) {
+                Ok(s) => {
+                    stream = Some(s);
+                    break;
+                }
+                Err(_) => std::thread::sleep(
+                    std::time::Duration::from_millis(20)),
+            }
+        }
+        let mut stream = stream.expect("server did not start");
+        writeln!(stream, "SUBMIT [ GroupSize = 2; ]").unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.starts_with("OK"), "{line}");
+        writeln!(stream, "STATUS").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.starts_with("QUEUES"), "{line}");
+        writeln!(stream, "QUIT").unwrap();
+    }
+}

@@ -1,0 +1,139 @@
+//! `CostEngine` — the pluggable backend evaluating one §V matchmaking
+//! round. Two implementations:
+//!
+//!  * [`RustEngine`] — the pure-rust mirror in `cost::model` (always on).
+//!  * `runtime::XlaEngine` — the AOT-compiled JAX/Pallas artifact executed
+//!    via PJRT (the production hot path; lives in `runtime/` because it
+//!    owns a PJRT client).
+//!
+//! Schedulers talk to the trait only, so the whole stack can run with or
+//! without artifacts and the cross-check suite can diff the two backends.
+
+use anyhow::Result;
+
+use super::model::{schedule_step_rust, CostInputs, ScheduleOut, Weights};
+
+// NOTE: not `Send` — the XLA backend holds a PJRT client (internally an
+// `Rc`); each thread builds its own engine instead of sharing one.
+pub trait CostEngine {
+    /// Evaluate the full cost matrix + per-class argmins for one round.
+    fn schedule_step(&mut self, inputs: &CostInputs, weights: &Weights)
+        -> Result<ScheduleOut>;
+
+    /// Batch re-prioritization (§X): jobs[L,4] + totals[4] → (pr, queue).
+    fn reprioritize(&mut self, jobs: &[f32], totals: &[f32; 4])
+        -> Result<(Vec<f32>, Vec<i32>)>;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-rust backend.
+#[derive(Default)]
+pub struct RustEngine;
+
+impl RustEngine {
+    pub fn new() -> RustEngine {
+        RustEngine
+    }
+}
+
+impl CostEngine for RustEngine {
+    fn schedule_step(&mut self, inputs: &CostInputs, weights: &Weights)
+        -> Result<ScheduleOut> {
+        Ok(schedule_step_rust(inputs, weights))
+    }
+
+    fn reprioritize(&mut self, jobs: &[f32], totals: &[f32; 4])
+        -> Result<(Vec<f32>, Vec<i32>)> {
+        Ok(reprioritize_rust(jobs, totals))
+    }
+
+    fn name(&self) -> &'static str {
+        "rust"
+    }
+}
+
+/// Pure-rust mirror of `kernels/priority.py` (same guards, same order).
+pub fn reprioritize_rust(jobs: &[f32], totals: &[f32; 4]) -> (Vec<f32>, Vec<i32>) {
+    assert_eq!(jobs.len() % 4, 0, "jobs must be [L,4] row-major");
+    let l = jobs.len() / 4;
+    let cap_t = totals[0].max(1e-6);
+    let cap_q = totals[1].max(1e-6);
+    let mut pr = vec![0.0f32; l];
+    let mut queue = vec![0i32; l];
+    for i in 0..l {
+        let n = jobs[i * 4];
+        let t = jobs[i * 4 + 1].max(1e-6);
+        let q = jobs[i * 4 + 2];
+        let big_n = (q * cap_t) / (cap_q * t);
+        let p = if n <= big_n {
+            (big_n - n) / big_n.max(1e-6)
+        } else {
+            (big_n - n) / n.max(1e-6)
+        };
+        pr[i] = p;
+        queue[i] = if p >= 0.5 {
+            0
+        } else if p >= 0.0 {
+            1
+        } else if p >= -0.5 {
+            2
+        } else {
+            3
+        };
+    }
+    (pr, queue)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rust_engine_runs_both_entries() {
+        let mut e = RustEngine::new();
+        let inp = CostInputs::new(4, 2);
+        let out = e.schedule_step(&inp, &Weights::default()).unwrap();
+        assert_eq!(out.total.len(), 8);
+        let jobs = vec![1.0, 1.0, 1000.0, 0.0];
+        let (pr, q) = e.reprioritize(&jobs, &[1.0, 1000.0, 1.0, 0.0]).unwrap();
+        assert_eq!(pr.len(), 1);
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn fig6_worked_example_exact() {
+        // Final Fig-6 state: A1(n=2,t=1,q=1900) A2(n=2,t=5,q=1900)
+        // B1(n=1,t=1,q=1700); T=7 Q=3600.
+        let jobs = vec![
+            2.0, 1.0, 1900.0, 0.0,
+            2.0, 5.0, 1900.0, 0.0,
+            1.0, 1.0, 1700.0, 0.0,
+        ];
+        let (pr, q) = reprioritize_rust(&jobs, &[7.0, 3600.0, 3.0, 0.0]);
+        assert!((pr[0] - 0.4586).abs() < 1e-4, "A1 {}", pr[0]);
+        assert!((pr[1] + 0.6305).abs() < 1e-4, "A2 {}", pr[1]);
+        assert!((pr[2] - 0.6974).abs() < 1e-4, "B1 {}", pr[2]);
+        assert_eq!(q, vec![1, 3, 0]); // Q2, Q4, Q1
+    }
+
+    #[test]
+    fn priority_bounds() {
+        // Many jobs, extreme values — Pr must stay in (-1, 1].
+        let mut jobs = Vec::new();
+        for n in 1..50 {
+            jobs.extend_from_slice(&[n as f32, 1.0, 500.0, 0.0]);
+        }
+        let (pr, _) = reprioritize_rust(&jobs, &[100.0, 5000.0, 49.0, 0.0]);
+        assert!(pr.iter().all(|&p| p > -1.0 - 1e-6 && p <= 1.0 + 1e-6));
+    }
+
+    #[test]
+    fn first_sole_job_gets_priority_zero() {
+        // §X: first job, alone in the queues, t=1: N=1, n=1 → Pr=0 → Q2.
+        let (pr, q) = reprioritize_rust(&[1.0, 1.0, 1900.0, 0.0],
+                                        &[1.0, 1900.0, 1.0, 0.0]);
+        assert!(pr[0].abs() < 1e-6);
+        assert_eq!(q[0], 1);
+    }
+}

@@ -1,0 +1,11 @@
+//! §IV cost model: pure-rust formulas (the kernel's twin) and the
+//! pluggable `CostEngine` trait the schedulers consume.
+
+pub mod engine;
+pub mod model;
+
+pub use engine::{reprioritize_rust, CostEngine, RustEngine};
+pub use model::{
+    schedule_step_rust, sort_sites_by_cost, CostInputs, ScheduleOut, Weights,
+    BIG, EPS, JOB_FEATS, N_WEIGHTS, SITE_FEATS,
+};

@@ -1,0 +1,281 @@
+//! §IV cost model — pure-rust mirror of the Pallas kernel numerics.
+//!
+//! KEEP IN SYNC with `python/compile/kernels/ref.py` (the authoritative
+//! contract): same feature layouts, same f32 expressions in the same
+//! order, same guards. The integration suite cross-checks this module
+//! against the XLA-executed artifact to 1e-5 relative.
+
+/// Bandwidth guard and dead-site penalty (mirrors ref.py defaults).
+pub const EPS: f32 = 1e-6;
+pub const BIG: f32 = 1e9;
+
+pub const JOB_FEATS: usize = 6;
+pub const SITE_FEATS: usize = 8;
+pub const N_WEIGHTS: usize = 8;
+
+/// §IV weight vector, laid out exactly as the kernel's `weights[8]`.
+#[derive(Clone, Copy, Debug)]
+pub struct Weights {
+    pub w5: f32,
+    pub w6: f32,
+    pub w7: f32,
+    /// Global queued-job count Q (a runtime scalar, not a weight — it
+    /// travels in the weight vector to keep the kernel signature fixed).
+    pub q_total: f32,
+    pub w_net: f32,
+    pub w_dtc: f32,
+    pub eps: f32,
+    pub big: f32,
+}
+
+impl Weights {
+    pub fn from_scheduler(
+        cfg: &crate::config::SchedulerConfig,
+        q_total: f32,
+    ) -> Weights {
+        Weights {
+            w5: cfg.w5 as f32,
+            w6: cfg.w6 as f32,
+            w7: cfg.w7 as f32,
+            q_total,
+            w_net: cfg.w_net as f32,
+            w_dtc: cfg.w_dtc as f32,
+            eps: EPS,
+            big: BIG,
+        }
+    }
+
+    pub fn to_array(self) -> [f32; N_WEIGHTS] {
+        [self.w5, self.w6, self.w7, self.q_total, self.w_net, self.w_dtc,
+         self.eps, self.big]
+    }
+}
+
+impl Default for Weights {
+    fn default() -> Self {
+        Weights {
+            w5: 1.0,
+            w6: 0.25,
+            w7: 2.0,
+            q_total: 0.0,
+            w_net: 1.0,
+            w_dtc: 1.0,
+            eps: EPS,
+            big: BIG,
+        }
+    }
+}
+
+/// Row-major feature matrices for one scheduling round.
+#[derive(Clone, Debug, Default)]
+pub struct CostInputs {
+    pub n_jobs: usize,
+    pub n_sites: usize,
+    /// [n_jobs × JOB_FEATS]: in_mb, out_mb, exe_mb, cpu_sec, class, _.
+    pub job_feats: Vec<f32>,
+    /// [n_sites × SITE_FEATS]: Qi, Pi, load, client_bw, client_loss,
+    /// alive, _, _.
+    pub site_feats: Vec<f32>,
+    /// [n_jobs × n_sites]: best-replica path bandwidth / loss per pair.
+    pub link_bw: Vec<f32>,
+    pub link_loss: Vec<f32>,
+}
+
+impl CostInputs {
+    pub fn new(n_jobs: usize, n_sites: usize) -> CostInputs {
+        CostInputs {
+            n_jobs,
+            n_sites,
+            job_feats: vec![0.0; n_jobs * JOB_FEATS],
+            site_feats: vec![0.0; n_sites * SITE_FEATS],
+            link_bw: vec![1.0; n_jobs * n_sites],
+            link_loss: vec![0.0; n_jobs * n_sites],
+        }
+    }
+
+    #[inline]
+    pub fn job_row_mut(&mut self, j: usize) -> &mut [f32] {
+        &mut self.job_feats[j * JOB_FEATS..(j + 1) * JOB_FEATS]
+    }
+
+    #[inline]
+    pub fn site_row_mut(&mut self, s: usize) -> &mut [f32] {
+        &mut self.site_feats[s * SITE_FEATS..(s + 1) * SITE_FEATS]
+    }
+}
+
+/// Outputs of one §V matchmaking round (shapes mirror the AOT tuple).
+#[derive(Clone, Debug, Default)]
+pub struct ScheduleOut {
+    pub n_jobs: usize,
+    pub n_sites: usize,
+    pub total: Vec<f32>,        // [J×S]
+    pub best_total: Vec<i32>,   // [J]
+    pub best_compute: Vec<i32>, // [J]
+    pub best_data: Vec<i32>,    // [J]
+    pub comp: Vec<f32>,         // [S]
+    pub dtc: Vec<f32>,          // [J×S]
+    pub net: Vec<f32>,          // [J×S]
+}
+
+impl ScheduleOut {
+    #[inline]
+    pub fn total_at(&self, j: usize, s: usize) -> f32 {
+        self.total[j * self.n_sites + s]
+    }
+}
+
+/// Pure-rust evaluation of the full §V matchmaking round.
+/// Mirrors `model.schedule_step` (kernel + class keys) op-for-op in f32.
+pub fn schedule_step_rust(inp: &CostInputs, w: &Weights) -> ScheduleOut {
+    let (nj, ns) = (inp.n_jobs, inp.n_sites);
+    let mut out = ScheduleOut {
+        n_jobs: nj,
+        n_sites: ns,
+        total: vec![0.0; nj * ns],
+        best_total: vec![0; nj],
+        best_compute: vec![0; nj],
+        best_data: vec![0; nj],
+        comp: vec![0.0; ns],
+        dtc: vec![0.0; nj * ns],
+        net: vec![0.0; nj * ns],
+    };
+
+    // comp[s] = (Qi/Pi)·w5 + (Q/Pi)·w6 + load·w7  — site-only term.
+    let mut client = vec![0.0f32; ns];
+    let mut dead = vec![0.0f32; ns];
+    for s in 0..ns {
+        let row = &inp.site_feats[s * SITE_FEATS..(s + 1) * SITE_FEATS];
+        let (qi, pi_raw, load) = (row[0], row[1], row[2]);
+        let (cbw_raw, closs, alive) = (row[3], row[4], row[5]);
+        let pi = pi_raw.max(w.eps);
+        let cbw = cbw_raw.max(w.eps);
+        out.comp[s] = (qi / pi) * w.w5 + (w.q_total / pi) * w.w6 + load * w.w7;
+        client[s] = (1.0 + closs) / cbw;
+        dead[s] = (1.0 - alive) * w.big;
+    }
+
+    for j in 0..nj {
+        let jrow = &inp.job_feats[j * JOB_FEATS..(j + 1) * JOB_FEATS];
+        let (in_mb, out_mb, exe_mb) = (jrow[0], jrow[1], jrow[2]);
+        let base = j * ns;
+        let (mut bt, mut bc, mut bd) = (0usize, 0usize, 0usize);
+        let (mut mt, mut mc, mut md) =
+            (f32::INFINITY, f32::INFINITY, f32::INFINITY);
+        for s in 0..ns {
+            let bw = inp.link_bw[base + s].max(w.eps);
+            let loss = inp.link_loss[base + s];
+            let net = loss / bw;
+            let dtc = (in_mb / bw) * (1.0 + loss) + (out_mb + exe_mb) * client[s];
+            let total = w.w_net * net + out.comp[s] + w.w_dtc * dtc + dead[s];
+            out.net[base + s] = net;
+            out.dtc[base + s] = dtc;
+            out.total[base + s] = total;
+            // §V class-specific sort keys (same dead-site masking as L2).
+            let ckey = out.comp[s] + w.w_net * net + dead[s];
+            let dkey = w.w_dtc * dtc + w.w_net * net + dead[s];
+            if total < mt {
+                mt = total;
+                bt = s;
+            }
+            if ckey < mc {
+                mc = ckey;
+                bc = s;
+            }
+            if dkey < md {
+                md = dkey;
+                bd = s;
+            }
+        }
+        out.best_total[j] = bt as i32;
+        out.best_compute[j] = bc as i32;
+        out.best_data[j] = bd as i32;
+    }
+    out
+}
+
+/// Rank all sites for one job by a cost row, ascending — the §V
+/// "SortSites" step (the scheduler walks this order looking for an alive
+/// site with room).
+pub fn sort_sites_by_cost(cost_row: &[f32]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..cost_row.len()).collect();
+    idx.sort_by(|&a, &b| {
+        cost_row[a].partial_cmp(&cost_row[b]).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_inputs() -> (CostInputs, Weights) {
+        let mut inp = CostInputs::new(2, 3);
+        // job 0: big data job; job 1: pure compute.
+        inp.job_row_mut(0).copy_from_slice(&[10_000.0, 50.0, 10.0, 3600.0, 1.0, 0.0]);
+        inp.job_row_mut(1).copy_from_slice(&[0.0, 5.0, 10.0, 60.0, 0.0, 0.0]);
+        // sites: 0 idle+fast, 1 busy, 2 dead.
+        inp.site_row_mut(0).copy_from_slice(&[0.0, 100.0, 0.1, 1000.0, 0.001, 1.0, 0.0, 0.0]);
+        inp.site_row_mut(1).copy_from_slice(&[50.0, 100.0, 0.9, 1000.0, 0.001, 1.0, 0.0, 0.0]);
+        inp.site_row_mut(2).copy_from_slice(&[0.0, 100.0, 0.0, 1000.0, 0.001, 0.0, 0.0, 0.0]);
+        for j in 0..2 {
+            for s in 0..3 {
+                inp.link_bw[j * 3 + s] = 100.0;
+                inp.link_loss[j * 3 + s] = 0.01;
+            }
+        }
+        // Job 0's replica is local at site 1.
+        inp.link_bw[0 * 3 + 1] = 10_000.0;
+        inp.link_loss[0 * 3 + 1] = 0.0001;
+        (inp, Weights { q_total: 50.0, ..Weights::default() })
+    }
+
+    #[test]
+    fn dead_site_never_chosen() {
+        let (inp, w) = tiny_inputs();
+        let out = schedule_step_rust(&inp, &w);
+        for arr in [&out.best_total, &out.best_compute, &out.best_data] {
+            assert!(arr.iter().all(|&s| s != 2));
+        }
+    }
+
+    #[test]
+    fn data_job_goes_to_its_data() {
+        let (inp, w) = tiny_inputs();
+        let out = schedule_step_rust(&inp, &w);
+        // Job 0 has 10 GB at site 1 — data-intensive key must pick it
+        // despite the queue.
+        assert_eq!(out.best_data[0], 1);
+        // Job 1 (no data) prefers the idle site on the compute key.
+        assert_eq!(out.best_compute[1], 0);
+    }
+
+    #[test]
+    fn comp_cost_formula_exact() {
+        let (inp, w) = tiny_inputs();
+        let out = schedule_step_rust(&inp, &w);
+        // site 1: (50/100)*1 + (50/100)*0.25 + 0.9*2 = 0.5+0.125+1.8
+        assert!((out.comp[1] - 2.425).abs() < 1e-6);
+    }
+
+    #[test]
+    fn net_is_loss_over_bw() {
+        let (inp, w) = tiny_inputs();
+        let out = schedule_step_rust(&inp, &w);
+        assert!((out.net[0] - 0.01 / 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sort_sites_ascending() {
+        let order = sort_sites_by_cost(&[3.0, 1.0, 2.0]);
+        assert_eq!(order, vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn weights_roundtrip_array() {
+        let w = Weights { q_total: 7.0, ..Weights::default() };
+        let a = w.to_array();
+        assert_eq!(a[3], 7.0);
+        assert_eq!(a.len(), N_WEIGHTS);
+    }
+}

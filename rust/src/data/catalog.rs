@@ -1,0 +1,175 @@
+//! Dataset catalog: which sites hold replicas of which datasets, and how
+//! big each dataset is. Stands in for the Grid replica catalogue the CMS
+//! case study (§II) assumes — subjobs exchange data exclusively through
+//! datasets, so replica placement drives the DTC term.
+
+use std::collections::BTreeMap;
+
+use crate::config::GridConfig;
+use crate::util::Pcg64;
+
+/// Identifier of a dataset in the catalog.
+pub type DatasetId = usize;
+
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub size_mb: f64,
+    /// Site indices hosting a replica (sorted, non-empty).
+    pub replicas: Vec<usize>,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Catalog {
+    datasets: Vec<Dataset>,
+    by_name: BTreeMap<String, DatasetId>,
+}
+
+impl Catalog {
+    pub fn new() -> Catalog {
+        Catalog::default()
+    }
+
+    /// Build from the per-site `datasets` lists in the config; any dataset
+    /// named nowhere gets `replicas` random homes so every dataset is
+    /// resolvable. Sizes are log-normal around the workload median.
+    pub fn from_config(cfg: &GridConfig, rng: &mut Pcg64) -> Catalog {
+        let mut cat = Catalog::new();
+        // Datasets explicitly pinned in site configs.
+        for (si, site) in cfg.sites.iter().enumerate() {
+            for name in &site.datasets {
+                let id = cat.ensure(name, 0.0);
+                if !cat.datasets[id].replicas.contains(&si) {
+                    cat.datasets[id].replicas.push(si);
+                }
+            }
+        }
+        // Top up to the workload's dataset count.
+        let want = cfg.workload.datasets;
+        let mut i = 0;
+        while cat.datasets.len() < want {
+            let name = format!("gen-ds{i}");
+            i += 1;
+            if cat.by_name.contains_key(&name) {
+                continue;
+            }
+            let id = cat.ensure(&name, 0.0);
+            let k = cfg.workload.replicas.clamp(1, cfg.sites.len());
+            let mut sites: Vec<usize> = (0..cfg.sites.len()).collect();
+            rng.shuffle(&mut sites);
+            cat.datasets[id].replicas = sites[..k].to_vec();
+            cat.datasets[id].replicas.sort_unstable();
+        }
+        // Sizes for everything (pinned ones included).
+        for ds in &mut cat.datasets {
+            if ds.size_mb == 0.0 {
+                ds.size_mb = rng.lognormal(
+                    cfg.workload.in_mb_median.max(1.0).ln(),
+                    cfg.workload.in_mb_sigma,
+                );
+            }
+            ds.replicas.sort_unstable();
+            ds.replicas.dedup();
+        }
+        cat
+    }
+
+    fn ensure(&mut self, name: &str, size_mb: f64) -> DatasetId {
+        if let Some(&id) = self.by_name.get(name) {
+            return id;
+        }
+        let id = self.datasets.len();
+        self.datasets.push(Dataset {
+            name: name.to_string(),
+            size_mb,
+            replicas: Vec::new(),
+        });
+        self.by_name.insert(name.to_string(), id);
+        id
+    }
+
+    pub fn add(&mut self, name: &str, size_mb: f64, replicas: Vec<usize>) -> DatasetId {
+        let id = self.ensure(name, size_mb);
+        self.datasets[id].size_mb = size_mb;
+        self.datasets[id].replicas = replicas;
+        self.datasets[id].replicas.sort_unstable();
+        self.datasets[id].replicas.dedup();
+        id
+    }
+
+    /// Register a *new* replica (output datasets land where jobs ran).
+    pub fn add_replica(&mut self, id: DatasetId, site: usize) {
+        let reps = &mut self.datasets[id].replicas;
+        if !reps.contains(&site) {
+            reps.push(site);
+            reps.sort_unstable();
+        }
+    }
+
+    pub fn get(&self, id: DatasetId) -> &Dataset {
+        &self.datasets[id]
+    }
+
+    pub fn lookup(&self, name: &str) -> Option<DatasetId> {
+        self.by_name.get(name).copied()
+    }
+
+    pub fn len(&self) -> usize {
+        self.datasets.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.datasets.is_empty()
+    }
+
+    pub fn datasets(&self) -> &[Dataset] {
+        &self.datasets
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn pinned_datasets_resolve_to_their_sites() {
+        let cfg = presets::cms_tier_grid();
+        let mut rng = Pcg64::new(1);
+        let cat = Catalog::from_config(&cfg, &mut rng);
+        let id = cat.lookup("ds0").unwrap();
+        let t0 = cfg.site_index("T0-CERN").unwrap();
+        assert!(cat.get(id).replicas.contains(&t0));
+    }
+
+    #[test]
+    fn generated_datasets_fill_quota() {
+        let cfg = presets::uniform_grid(4, 4); // no pinned datasets
+        let mut rng = Pcg64::new(2);
+        let cat = Catalog::from_config(&cfg, &mut rng);
+        assert_eq!(cat.len(), cfg.workload.datasets);
+        for ds in cat.datasets() {
+            assert!(!ds.replicas.is_empty());
+            assert!(ds.replicas.len() <= cfg.sites.len());
+            assert!(ds.size_mb > 0.0);
+        }
+    }
+
+    #[test]
+    fn replica_count_matches_config() {
+        let mut cfg = presets::uniform_grid(6, 2);
+        cfg.workload.replicas = 3;
+        let mut rng = Pcg64::new(3);
+        let cat = Catalog::from_config(&cfg, &mut rng);
+        assert!(cat.datasets().iter().all(|d| d.replicas.len() == 3));
+    }
+
+    #[test]
+    fn add_replica_dedups() {
+        let mut cat = Catalog::new();
+        let id = cat.add("x", 10.0, vec![0]);
+        cat.add_replica(id, 1);
+        cat.add_replica(id, 1);
+        assert_eq!(cat.get(id).replicas, vec![0, 1]);
+    }
+}

@@ -1,0 +1,8 @@
+//! Data substrate: dataset catalog (replica locations + sizes) and the
+//! replica-selection policy feeding the DTC cost term.
+
+pub mod catalog;
+pub mod placement;
+
+pub use catalog::{Catalog, Dataset, DatasetId};
+pub use placement::{best_replica, replica_rows};

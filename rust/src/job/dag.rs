@@ -1,0 +1,135 @@
+//! Intra-job dataflow DAG (§II): "Within a job there is always an acyclic
+//! data flow arrangement between subjobs … datasets and subjobs appear
+//! alternately". The Grid scheduler must sequence subjobs so a subjob only
+//! starts when its input datasets exist.
+
+use std::collections::VecDeque;
+
+/// Node indices are subjob positions inside one analysis job.
+#[derive(Clone, Debug, Default)]
+pub struct DataflowDag {
+    n: usize,
+    /// edges[u] = subjobs consuming a dataset produced by u.
+    edges: Vec<Vec<usize>>,
+    indeg: Vec<usize>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum DagError {
+    #[error("edge ({0}, {1}) out of range")]
+    OutOfRange(usize, usize),
+    #[error("dataflow graph has a cycle (§II requires acyclic)")]
+    Cycle,
+}
+
+impl DataflowDag {
+    pub fn new(n: usize) -> DataflowDag {
+        DataflowDag { n, edges: vec![Vec::new(); n], indeg: vec![0; n] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// `u` produces a dataset consumed by `v`.
+    pub fn add_edge(&mut self, u: usize, v: usize) -> Result<(), DagError> {
+        if u >= self.n || v >= self.n {
+            return Err(DagError::OutOfRange(u, v));
+        }
+        self.edges[u].push(v);
+        self.indeg[v] += 1;
+        Ok(())
+    }
+
+    /// Kahn topological order; Err(Cycle) if the graph isn't a DAG.
+    pub fn topo_order(&self) -> Result<Vec<usize>, DagError> {
+        let mut indeg = self.indeg.clone();
+        let mut q: VecDeque<usize> =
+            (0..self.n).filter(|&i| indeg[i] == 0).collect();
+        let mut order = Vec::with_capacity(self.n);
+        while let Some(u) = q.pop_front() {
+            order.push(u);
+            for &v in &self.edges[u] {
+                indeg[v] -= 1;
+                if indeg[v] == 0 {
+                    q.push_back(v);
+                }
+            }
+        }
+        if order.len() == self.n { Ok(order) } else { Err(DagError::Cycle) }
+    }
+
+    /// Waves of subjobs that "can start and run in parallel" (§II):
+    /// level i contains subjobs whose longest dependency chain is i.
+    pub fn parallel_waves(&self) -> Result<Vec<Vec<usize>>, DagError> {
+        let order = self.topo_order()?;
+        let mut level = vec![0usize; self.n];
+        for &u in &order {
+            for &v in &self.edges[u] {
+                level[v] = level[v].max(level[u] + 1);
+            }
+        }
+        let depth = level.iter().copied().max().map_or(0, |d| d + 1);
+        let mut waves = vec![Vec::new(); depth];
+        for (node, &l) in level.iter().enumerate() {
+            waves[l].push(node);
+        }
+        Ok(waves)
+    }
+
+    /// Critical-path length in subjob count (bounds job turnaround).
+    pub fn critical_path_len(&self) -> Result<usize, DagError> {
+        Ok(self.parallel_waves()?.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chain_topo_order() {
+        let mut d = DataflowDag::new(3);
+        d.add_edge(0, 1).unwrap();
+        d.add_edge(1, 2).unwrap();
+        assert_eq!(d.topo_order().unwrap(), vec![0, 1, 2]);
+        assert_eq!(d.critical_path_len().unwrap(), 3);
+    }
+
+    #[test]
+    fn diamond_waves() {
+        let mut d = DataflowDag::new(4);
+        d.add_edge(0, 1).unwrap();
+        d.add_edge(0, 2).unwrap();
+        d.add_edge(1, 3).unwrap();
+        d.add_edge(2, 3).unwrap();
+        let waves = d.parallel_waves().unwrap();
+        assert_eq!(waves, vec![vec![0], vec![1, 2], vec![3]]);
+    }
+
+    #[test]
+    fn cycle_detected() {
+        let mut d = DataflowDag::new(2);
+        d.add_edge(0, 1).unwrap();
+        d.add_edge(1, 0).unwrap();
+        assert!(matches!(d.topo_order(), Err(DagError::Cycle)));
+    }
+
+    #[test]
+    fn out_of_range_edge() {
+        let mut d = DataflowDag::new(2);
+        assert!(d.add_edge(0, 5).is_err());
+    }
+
+    #[test]
+    fn independent_subjobs_form_one_wave() {
+        let d = DataflowDag::new(5);
+        let waves = d.parallel_waves().unwrap();
+        assert_eq!(waves.len(), 1);
+        assert_eq!(waves[0].len(), 5);
+    }
+}

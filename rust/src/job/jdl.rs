@@ -1,0 +1,292 @@
+//! Job Description Language (JDL) parser — §VIII: "The size of the group
+//! is specified in the job description language file."
+//!
+//! Classad-flavoured `Key = value;` syntax as used by EDG/gLite:
+//!
+//! ```text
+//! [
+//!   Executable   = "cmsRun";
+//!   Arguments    = "higgs.cfg";
+//!   InputData    = {"ds3", "ds7"};
+//!   OutputMB     = 120.5;
+//!   CpuSeconds   = 3600;
+//!   Processors   = 2;
+//!   JobClass     = "data";       // compute | data | both
+//!   GroupSize    = 500;          // §VIII group size field
+//!   GroupDivisionFactor = 4;
+//! ]
+//! ```
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum JdlValue {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    List(Vec<JdlValue>),
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("jdl parse error: {0}")]
+pub struct JdlError(pub String);
+
+/// A parsed JDL classad.
+#[derive(Clone, Debug, Default)]
+pub struct Jdl {
+    pub attrs: BTreeMap<String, JdlValue>,
+}
+
+impl Jdl {
+    pub fn parse(text: &str) -> Result<Jdl, JdlError> {
+        // Comments are line-scoped: strip them *before* joining into
+        // statements (a `;` never un-comments the rest of the line).
+        let cleaned: String = text
+            .lines()
+            .map(strip_comments)
+            .collect::<Vec<_>>()
+            .join("\n");
+        let mut body = cleaned.trim();
+        // Optional surrounding [ ... ].
+        if let Some(stripped) = body.strip_prefix('[') {
+            body = stripped
+                .strip_suffix(']')
+                .ok_or_else(|| JdlError("unterminated [ ... ]".into()))?;
+        }
+        let mut attrs = BTreeMap::new();
+        for stmt in split_statements(body) {
+            let stmt = strip_comments(&stmt);
+            let stmt = stmt.trim();
+            if stmt.is_empty() {
+                continue;
+            }
+            let (k, v) = stmt
+                .split_once('=')
+                .ok_or_else(|| JdlError(format!("expected `=` in `{stmt}`")))?;
+            let key = k.trim().to_string();
+            if key.is_empty() {
+                return Err(JdlError("empty attribute name".into()));
+            }
+            let value = parse_value(v.trim())?;
+            attrs.insert(key, value);
+        }
+        Ok(Jdl { attrs })
+    }
+
+    pub fn get_str(&self, key: &str) -> Option<&str> {
+        match self.attrs.get(key) {
+            Some(JdlValue::Str(s)) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn get_num(&self, key: &str) -> Option<f64> {
+        match self.attrs.get(key) {
+            Some(JdlValue::Num(n)) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn get_list(&self, key: &str) -> Option<&[JdlValue]> {
+        match self.attrs.get(key) {
+            Some(JdlValue::List(l)) => Some(l),
+            _ => None,
+        }
+    }
+
+    pub fn get_str_list(&self, key: &str) -> Vec<String> {
+        self.get_list(key)
+            .map(|l| {
+                l.iter()
+                    .filter_map(|v| match v {
+                        JdlValue::Str(s) => Some(s.clone()),
+                        _ => None,
+                    })
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+}
+
+/// Split on `;` outside strings/braces.
+fn split_statements(s: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut cur = String::new();
+    for c in s.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            '{' if !in_str => {
+                depth += 1;
+                cur.push(c);
+            }
+            '}' if !in_str => {
+                depth = depth.saturating_sub(1);
+                cur.push(c);
+            }
+            ';' if !in_str && depth == 0 => {
+                out.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+fn strip_comments(s: &str) -> String {
+    let mut out = String::new();
+    let mut in_str = false;
+    let mut chars = s.chars().peekable();
+    while let Some(c) = chars.next() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                out.push(c);
+            }
+            '/' if !in_str && chars.peek() == Some(&'/') => break,
+            '#' if !in_str => break,
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+fn parse_value(s: &str) -> Result<JdlValue, JdlError> {
+    if s.is_empty() {
+        return Err(JdlError("empty value".into()));
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| JdlError(format!("unterminated string `{s}`")))?;
+        return Ok(JdlValue::Str(inner.to_string()));
+    }
+    if s.eq_ignore_ascii_case("true") {
+        return Ok(JdlValue::Bool(true));
+    }
+    if s.eq_ignore_ascii_case("false") {
+        return Ok(JdlValue::Bool(false));
+    }
+    if let Some(rest) = s.strip_prefix('{') {
+        let inner = rest
+            .strip_suffix('}')
+            .ok_or_else(|| JdlError(format!("unterminated list `{s}`")))?;
+        let mut items = Vec::new();
+        for part in inner.split(',') {
+            let part = part.trim();
+            if !part.is_empty() {
+                items.push(parse_value(part)?);
+            }
+        }
+        return Ok(JdlValue::List(items));
+    }
+    s.parse::<f64>()
+        .map(JdlValue::Num)
+        .map_err(|_| JdlError(format!("cannot parse value `{s}`")))
+}
+
+/// Bulk-submission parameters extracted from a JDL (§VIII knobs).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BulkSpec {
+    pub group_size: usize,
+    pub division_factor: usize,
+    pub processors: usize,
+    pub cpu_seconds: f64,
+    pub output_mb: f64,
+}
+
+impl BulkSpec {
+    pub fn from_jdl(jdl: &Jdl) -> BulkSpec {
+        BulkSpec {
+            group_size: jdl.get_num("GroupSize").unwrap_or(1.0).max(1.0) as usize,
+            division_factor: jdl
+                .get_num("GroupDivisionFactor")
+                .unwrap_or(4.0)
+                .max(1.0) as usize,
+            processors: jdl.get_num("Processors").unwrap_or(1.0).max(1.0) as usize,
+            cpu_seconds: jdl.get_num("CpuSeconds").unwrap_or(600.0),
+            output_mb: jdl.get_num("OutputMB").unwrap_or(10.0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+[
+  Executable = "cmsRun";      // the CMS executable
+  Arguments  = "higgs.cfg";
+  InputData  = {"ds3", "ds7"};
+  OutputMB   = 120.5;
+  CpuSeconds = 3600;
+  Processors = 2;
+  JobClass   = "data";
+  GroupSize  = 500;
+  GroupDivisionFactor = 4;
+]
+"#;
+
+    #[test]
+    fn parses_full_classad() {
+        let jdl = Jdl::parse(SAMPLE).unwrap();
+        assert_eq!(jdl.get_str("Executable"), Some("cmsRun"));
+        assert_eq!(jdl.get_num("CpuSeconds"), Some(3600.0));
+        assert_eq!(jdl.get_str_list("InputData"), vec!["ds3", "ds7"]);
+        assert_eq!(jdl.get_str("JobClass"), Some("data"));
+    }
+
+    #[test]
+    fn bulk_spec_extraction() {
+        let jdl = Jdl::parse(SAMPLE).unwrap();
+        let spec = BulkSpec::from_jdl(&jdl);
+        assert_eq!(spec.group_size, 500);
+        assert_eq!(spec.division_factor, 4);
+        assert_eq!(spec.processors, 2);
+        assert_eq!(spec.output_mb, 120.5);
+    }
+
+    #[test]
+    fn bulk_spec_defaults() {
+        let jdl = Jdl::parse("[ Executable = \"x\"; ]").unwrap();
+        let spec = BulkSpec::from_jdl(&jdl);
+        assert_eq!(spec.group_size, 1);
+        assert_eq!(spec.division_factor, 4);
+        assert_eq!(spec.processors, 1);
+    }
+
+    #[test]
+    fn no_brackets_ok() {
+        let jdl = Jdl::parse("A = 1; B = \"x\"").unwrap();
+        assert_eq!(jdl.get_num("A"), Some(1.0));
+        assert_eq!(jdl.get_str("B"), Some("x"));
+    }
+
+    #[test]
+    fn semicolon_inside_string_ok() {
+        let jdl = Jdl::parse("Args = \"a;b\"; N = 2;").unwrap();
+        assert_eq!(jdl.get_str("Args"), Some("a;b"));
+        assert_eq!(jdl.get_num("N"), Some(2.0));
+    }
+
+    #[test]
+    fn hash_comments_stripped() {
+        let jdl = Jdl::parse("A = 1; # tail\nB = 2;").unwrap();
+        assert_eq!(jdl.get_num("B"), Some(2.0));
+    }
+
+    #[test]
+    fn errors() {
+        assert!(Jdl::parse("[ A = ; ]").is_err());
+        assert!(Jdl::parse("[ A ]").is_err());
+        assert!(Jdl::parse("[ A = \"unterminated ]").is_err());
+    }
+}

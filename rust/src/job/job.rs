@@ -1,0 +1,168 @@
+//! Core job model: jobs, users, bulk groups and job classes.
+//!
+//! §II: a *job* is the unit the physicist submits; bulk submission splits
+//! into many jobs (the paper's subjobs each run one executable — our `Job`
+//! corresponds to a schedulable subjob; the `dag` module models the
+//! intra-job dataflow between them).
+
+use crate::data::DatasetId;
+
+/// Globally unique job identifier.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct JobId(pub u64);
+
+/// Submitting user.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct UserId(pub u32);
+
+/// Bulk-submission group (§VIII: "each bulk submission … a single group").
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct GroupId(pub u64);
+
+/// §V job classes, deciding which cost terms dominate matchmaking.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobClass {
+    ComputeIntensive,
+    DataIntensive,
+    Both,
+}
+
+impl JobClass {
+    pub fn as_f32(self) -> f32 {
+        match self {
+            JobClass::ComputeIntensive => 0.0,
+            JobClass::DataIntensive => 1.0,
+            JobClass::Both => 2.0,
+        }
+    }
+}
+
+/// Lifecycle of a job inside the DES (§VI turnaround accounting).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobState {
+    /// In a meta-scheduler queue, not yet placed.
+    Queued,
+    /// Input/executable staging in flight to the chosen site.
+    Staging,
+    /// Waiting in the chosen site's local batch queue.
+    SiteQueued,
+    Running,
+    /// Output transfer back to the client location.
+    Delivering,
+    Done,
+}
+
+/// A schedulable job (paper's subjob granularity).
+#[derive(Clone, Debug)]
+pub struct Job {
+    pub id: JobId,
+    pub user: UserId,
+    pub group: Option<GroupId>,
+    pub class: JobClass,
+    /// Input dataset (None → pure compute, nothing to stage).
+    pub input: Option<DatasetId>,
+    pub in_mb: f64,
+    pub out_mb: f64,
+    pub exe_mb: f64,
+    /// CPU seconds at unit speed.
+    pub cpu_sec: f64,
+    /// Processors demanded — the paper's `t`, also the SJF criterion
+    /// ("fewer processors required means job execution time is shorter").
+    pub procs: usize,
+    /// Site index of the submitting client (output returns here).
+    pub submit_site: usize,
+    pub submit_time: f64,
+    /// User quota `q` (§X).
+    pub quota: f64,
+    /// How many times this job was migrated (§IX: capped to avoid cycling).
+    pub migrations: u32,
+}
+
+impl Job {
+    /// SJF key (§VII): order by processors required, then CPU estimate.
+    pub fn sjf_key(&self) -> (usize, u64) {
+        (self.procs, self.cpu_sec.max(0.0) as u64)
+    }
+
+    /// Wall-clock runtime on a site with per-CPU speed `cpu_speed`.
+    pub fn runtime_at(&self, cpu_speed: f64) -> f64 {
+        self.cpu_sec / cpu_speed.max(1e-9)
+    }
+}
+
+/// A bulk group as the meta-scheduler sees it (§VIII): jobs plus the
+/// JDL-specified handling parameters.
+#[derive(Clone, Debug)]
+pub struct Group {
+    pub id: GroupId,
+    pub user: UserId,
+    pub jobs: Vec<JobId>,
+    /// §VIII: "The size of the group is specified in the job description
+    /// language file" — max jobs a single site may take before splitting.
+    pub max_per_site: usize,
+    /// §VIII: group division factor set by the VO administrator.
+    pub division_factor: usize,
+    /// Where aggregated output must be returned.
+    pub output_site: usize,
+    /// Force placement at a specific site (used by the §XI flood
+    /// experiments, where users submit straight to their local
+    /// meta-scheduler and load-shedding happens via §IX migration).
+    pub pin_site: Option<usize>,
+}
+
+impl Group {
+    pub fn len(&self) -> usize {
+        self.jobs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.jobs.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(procs: usize, cpu: f64) -> Job {
+        Job {
+            id: JobId(1),
+            user: UserId(1),
+            group: None,
+            class: JobClass::Both,
+            input: None,
+            in_mb: 0.0,
+            out_mb: 0.0,
+            exe_mb: 1.0,
+            cpu_sec: cpu,
+            procs,
+            submit_site: 0,
+            submit_time: 0.0,
+            quota: 1000.0,
+            migrations: 0,
+        }
+    }
+
+    #[test]
+    fn sjf_orders_by_procs_then_cpu() {
+        let a = job(1, 100.0);
+        let b = job(2, 10.0);
+        let c = job(1, 50.0);
+        assert!(a.sjf_key() > c.sjf_key());
+        assert!(b.sjf_key() > a.sjf_key());
+    }
+
+    #[test]
+    fn runtime_scales_with_speed() {
+        let j = job(1, 100.0);
+        assert_eq!(j.runtime_at(1.0), 100.0);
+        assert_eq!(j.runtime_at(2.0), 50.0);
+    }
+
+    #[test]
+    fn class_encoding_matches_kernel_contract() {
+        assert_eq!(JobClass::ComputeIntensive.as_f32(), 0.0);
+        assert_eq!(JobClass::DataIntensive.as_f32(), 1.0);
+        assert_eq!(JobClass::Both.as_f32(), 2.0);
+    }
+}

@@ -1,0 +1,11 @@
+//! Job model: jobs/groups/classes, the intra-job dataflow DAG and the JDL
+//! (job description language) front end.
+
+pub mod dag;
+pub mod jdl;
+#[allow(clippy::module_inception)]
+pub mod job;
+
+pub use dag::{DagError, DataflowDag};
+pub use jdl::{BulkSpec, Jdl, JdlError, JdlValue};
+pub use job::{Group, GroupId, Job, JobClass, JobId, JobState, UserId};

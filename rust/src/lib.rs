@@ -1,0 +1,45 @@
+//! # DIANA — Data Intensive and Network Aware bulk meta-scheduler
+//!
+//! A production-shaped reproduction of *"Bulk Scheduling with the DIANA
+//! Scheduler"* (Anjum, McClatchey, Ali, Willers — IEEE TNS 2006) as a
+//! three-layer rust + JAX + Pallas stack:
+//!
+//!  * **L3 (this crate)** — the DIANA coordinator: §IV cost-driven
+//!    matchmaking, §VIII bulk group handling, §X multilevel feedback
+//!    queues + re-prioritization, §IX P2P migration, and the MONARC-style
+//!    Grid simulator + workload generator it is evaluated on.
+//!  * **L2/L1 (python/compile, build-time only)** — the J×S cost-matrix
+//!    and Pr(n) re-prioritization kernels in JAX/Pallas, AOT-lowered to
+//!    HLO text and executed from rust via PJRT (`runtime`).
+//!
+//! Quickstart:
+//!
+//! ```no_run
+//! use diana::config::presets;
+//! use diana::coordinator::run_simulation;
+//!
+//! let mut cfg = presets::paper_testbed();
+//! cfg.workload.jobs = 100;
+//! let (_world, report) = run_simulation(&cfg).unwrap();
+//! println!("mean queue time: {:.1}s", report.queue_time.mean());
+//! ```
+
+pub mod bulk;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod cost;
+pub mod data;
+pub mod job;
+pub mod metrics;
+pub mod migration;
+pub mod network;
+pub mod p2p;
+pub mod priority;
+pub mod queues;
+pub mod repro;
+pub mod runtime;
+pub mod scheduler;
+pub mod sim;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,20 @@
+//! `diana` CLI — see README for usage.
+
+use anyhow::Result;
+
+use diana::util::Args;
+
+fn main() -> Result<()> {
+    diana::util::logging::init();
+    let args = Args::parse(std::env::args().skip(1));
+    match args.subcommand.as_deref() {
+        Some("simulate") => diana::cli::simulate(&args),
+        Some("repro") => diana::cli::repro(&args),
+        Some("serve") => diana::cli::serve(&args),
+        Some("priority-demo") => diana::cli::priority_demo(&args),
+        _ => {
+            eprintln!("{}", diana::cli::USAGE);
+            Ok(())
+        }
+    }
+}

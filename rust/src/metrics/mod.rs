@@ -1,0 +1,8 @@
+//! Metrics: per-job lifecycle records, per-site rate series and report
+//! rendering.
+
+pub mod recorder;
+pub mod report;
+
+pub use recorder::{JobRecord, Recorder, SiteSeries};
+pub use report::{fmt_secs, render_csv, render_table};

@@ -1,0 +1,222 @@
+//! Per-job lifecycle metrics (§VI definitions): queue time, execution
+//! time, turnaround, waiting and response time; plus per-site counters
+//! and the Fig-9/10/11 rate series.
+
+use std::collections::BTreeMap;
+
+use crate::job::JobId;
+use crate::util::{RateSeries, Summary};
+
+/// Timestamps of one job's lifecycle.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct JobRecord {
+    pub submit: f64,
+    /// When the meta-scheduler placed it on a site.
+    pub placed: f64,
+    /// When it entered the chosen site's local queue.
+    pub enqueued_local: f64,
+    /// When CPUs were allocated (staging starts).
+    pub started: f64,
+    /// When execution (incl. staging) finished.
+    pub finished: f64,
+    /// When output delivery to the client completed.
+    pub delivered: f64,
+    pub exec_site: usize,
+    pub migrations: u32,
+}
+
+impl JobRecord {
+    /// §VI queue/waiting time: submission → CPU allocation (meta queue +
+    /// local queue; the paper's Fig-7 quantity).
+    pub fn queue_time(&self) -> f64 {
+        (self.started - self.submit).max(0.0)
+    }
+
+    /// §XI execution (wall) time on the execution node.
+    pub fn exec_time(&self) -> f64 {
+        (self.finished - self.started).max(0.0)
+    }
+
+    /// §VI turnaround: submission → output delivered.
+    pub fn turnaround(&self) -> f64 {
+        (self.delivered - self.submit).max(0.0)
+    }
+
+    /// §VI response time: submission → first response (placement).
+    pub fn response_time(&self) -> f64 {
+        (self.placed - self.submit).max(0.0)
+    }
+}
+
+/// Per-site activity counters for the Fig 9–11 series.
+#[derive(Clone, Debug)]
+pub struct SiteSeries {
+    pub submitted: RateSeries,
+    pub executed: RateSeries,
+    pub exported: RateSeries,
+    pub imported: RateSeries,
+}
+
+impl SiteSeries {
+    fn new(bucket_s: f64) -> SiteSeries {
+        SiteSeries {
+            submitted: RateSeries::new(bucket_s),
+            executed: RateSeries::new(bucket_s),
+            exported: RateSeries::new(bucket_s),
+            imported: RateSeries::new(bucket_s),
+        }
+    }
+}
+
+/// The run-wide recorder.
+#[derive(Clone, Debug)]
+pub struct Recorder {
+    jobs: BTreeMap<u64, JobRecord>,
+    sites: Vec<SiteSeries>,
+    pub migrations: u64,
+    pub groups_split: u64,
+    pub groups_whole: u64,
+}
+
+impl Recorder {
+    pub fn new(n_sites: usize, bucket_s: f64) -> Recorder {
+        Recorder {
+            jobs: BTreeMap::new(),
+            sites: (0..n_sites).map(|_| SiteSeries::new(bucket_s)).collect(),
+            migrations: 0,
+            groups_split: 0,
+            groups_whole: 0,
+        }
+    }
+
+    pub fn job_mut(&mut self, id: JobId) -> &mut JobRecord {
+        self.jobs.entry(id.0).or_default()
+    }
+
+    pub fn job(&self, id: JobId) -> Option<&JobRecord> {
+        self.jobs.get(&id.0)
+    }
+
+    pub fn on_submit(&mut self, id: JobId, site: usize, t: f64) {
+        self.job_mut(id).submit = t;
+        if site < self.sites.len() {
+            self.sites[site].submitted.record(t, 1.0);
+        }
+    }
+
+    pub fn on_execute(&mut self, site: usize, t: f64) {
+        if site < self.sites.len() {
+            self.sites[site].executed.record(t, 1.0);
+        }
+    }
+
+    pub fn on_export(&mut self, from: usize, to: usize, t: f64) {
+        self.migrations += 1;
+        if from < self.sites.len() {
+            self.sites[from].exported.record(t, 1.0);
+        }
+        if to < self.sites.len() {
+            self.sites[to].imported.record(t, 1.0);
+        }
+    }
+
+    pub fn site_series(&self, site: usize) -> &SiteSeries {
+        &self.sites[site]
+    }
+
+    pub fn completed_records(&self) -> impl Iterator<Item = &JobRecord> {
+        self.jobs.values().filter(|r| r.delivered > 0.0)
+    }
+
+    pub fn n_completed(&self) -> usize {
+        self.completed_records().count()
+    }
+
+    pub fn n_tracked(&self) -> usize {
+        self.jobs.len()
+    }
+
+    /// Summary of a per-job metric over completed jobs.
+    pub fn summary<F: Fn(&JobRecord) -> f64>(&self, f: F) -> Summary {
+        Summary::from_values(self.completed_records().map(f))
+    }
+
+    /// §VI throughput: completed jobs per second over the span.
+    pub fn throughput(&self) -> f64 {
+        let mut last = 0.0f64;
+        let mut n = 0usize;
+        for r in self.completed_records() {
+            last = last.max(r.delivered);
+            n += 1;
+        }
+        if last <= 0.0 { 0.0 } else { n as f64 / last }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle_metrics() {
+        let mut rec = Recorder::new(2, 10.0);
+        let id = JobId(1);
+        rec.on_submit(id, 0, 100.0);
+        {
+            let r = rec.job_mut(id);
+            r.placed = 101.0;
+            r.enqueued_local = 102.0;
+            r.started = 150.0;
+            r.finished = 250.0;
+            r.delivered = 260.0;
+            r.exec_site = 1;
+        }
+        let r = *rec.job(id).unwrap();
+        assert_eq!(r.queue_time(), 50.0);
+        assert_eq!(r.exec_time(), 100.0);
+        assert_eq!(r.turnaround(), 160.0);
+        assert_eq!(r.response_time(), 1.0);
+        assert_eq!(rec.n_completed(), 1);
+    }
+
+    #[test]
+    fn rate_series_track_sites() {
+        let mut rec = Recorder::new(2, 10.0);
+        rec.on_submit(JobId(1), 0, 5.0);
+        rec.on_execute(1, 6.0);
+        rec.on_export(0, 1, 7.0);
+        assert_eq!(rec.migrations, 1);
+        assert!(rec.site_series(0).submitted.series()[0].1 > 0.0);
+        assert!(rec.site_series(0).exported.series()[0].1 > 0.0);
+        assert!(rec.site_series(1).imported.series()[0].1 > 0.0);
+    }
+
+    #[test]
+    fn summaries_only_count_completed() {
+        let mut rec = Recorder::new(1, 10.0);
+        rec.on_submit(JobId(1), 0, 0.0); // never completes
+        rec.on_submit(JobId(2), 0, 0.0);
+        {
+            let r = rec.job_mut(JobId(2));
+            r.started = 10.0;
+            r.finished = 20.0;
+            r.delivered = 21.0;
+        }
+        let s = rec.summary(JobRecord::queue_time);
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.mean(), 10.0);
+    }
+
+    #[test]
+    fn throughput() {
+        let mut rec = Recorder::new(1, 10.0);
+        for i in 1..=4u64 {
+            rec.on_submit(JobId(i), 0, 0.0);
+            let r = rec.job_mut(JobId(i));
+            r.started = 1.0;
+            r.finished = 2.0;
+            r.delivered = 100.0;
+        }
+        assert!((rec.throughput() - 0.04).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,85 @@
+//! Plain-text table/series rendering for the repro harness and examples
+//! (CSV out for plotting, aligned tables for the terminal).
+
+use std::fmt::Write as _;
+
+/// Render an aligned table: `header` then rows of equal arity.
+pub fn render_table(header: &[&str], rows: &[Vec<String>]) -> String {
+    let ncol = header.len();
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(ncol) {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let line = |cells: &[String], out: &mut String| {
+        for (i, c) in cells.iter().enumerate().take(ncol) {
+            let _ = write!(out, "{:>w$}  ", c, w = widths[i]);
+        }
+        out.push('\n');
+    };
+    line(&header.iter().map(|s| s.to_string()).collect::<Vec<_>>(), &mut out);
+    let total: usize = widths.iter().sum::<usize>() + 2 * ncol;
+    out.push_str(&"-".repeat(total));
+    out.push('\n');
+    for row in rows {
+        line(row, &mut out);
+    }
+    out
+}
+
+/// Render an (x, y…) series as CSV with a header.
+pub fn render_csv(header: &[&str], rows: &[Vec<f64>]) -> String {
+    let mut out = String::new();
+    out.push_str(&header.join(","));
+    out.push('\n');
+    for row in rows {
+        let cells: Vec<String> = row.iter().map(|v| format!("{v}")).collect();
+        out.push_str(&cells.join(","));
+        out.push('\n');
+    }
+    out
+}
+
+/// Format seconds human-readably (for table cells).
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 3600.0 {
+        format!("{:.2}h", s / 3600.0)
+    } else if s >= 60.0 {
+        format!("{:.1}m", s / 60.0)
+    } else {
+        format!("{s:.1}s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_aligns_columns() {
+        let t = render_table(
+            &["jobs", "queue"],
+            &[vec!["25".into(), "1.5".into()],
+              vec!["1000".into(), "123.4".into()]],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].contains("jobs"));
+        assert!(lines[3].contains("1000"));
+    }
+
+    #[test]
+    fn csv_rows() {
+        let c = render_csv(&["x", "y"], &[vec![1.0, 2.0], vec![3.0, 4.5]]);
+        assert_eq!(c, "x,y\n1,2\n3,4.5\n");
+    }
+
+    #[test]
+    fn secs_formatting() {
+        assert_eq!(fmt_secs(30.0), "30.0s");
+        assert_eq!(fmt_secs(90.0), "1.5m");
+        assert_eq!(fmt_secs(7200.0), "2.00h");
+    }
+}

@@ -1,0 +1,133 @@
+//! §X congestion detection: migrate when
+//! `(ArrivalRate − ServiceRate) / ArrivalRate > Thrs`, with rates
+//! measured over a sliding window.
+
+use std::collections::VecDeque;
+
+/// Sliding-window arrival/service rate tracker for one site.
+#[derive(Clone, Debug)]
+pub struct CongestionTracker {
+    window_s: f64,
+    arrivals: VecDeque<f64>,
+    services: VecDeque<f64>,
+}
+
+impl CongestionTracker {
+    pub fn new(window_s: f64) -> CongestionTracker {
+        CongestionTracker {
+            window_s: window_s.max(1e-9),
+            arrivals: VecDeque::new(),
+            services: VecDeque::new(),
+        }
+    }
+
+    pub fn record_arrival(&mut self, t: f64) {
+        self.arrivals.push_back(t);
+    }
+
+    pub fn record_service(&mut self, t: f64) {
+        self.services.push_back(t);
+    }
+
+    fn evict(&mut self, now: f64) {
+        let cutoff = now - self.window_s;
+        while self.arrivals.front().is_some_and(|&t| t < cutoff) {
+            self.arrivals.pop_front();
+        }
+        while self.services.front().is_some_and(|&t| t < cutoff) {
+            self.services.pop_front();
+        }
+    }
+
+    pub fn arrival_rate(&mut self, now: f64) -> f64 {
+        self.evict(now);
+        self.arrivals.len() as f64 / self.window_s
+    }
+
+    pub fn service_rate(&mut self, now: f64) -> f64 {
+        self.evict(now);
+        self.services.len() as f64 / self.window_s
+    }
+
+    /// The §X predicate: `(R_a − R_s)/R_a > thrs` (no arrivals → calm).
+    pub fn is_congested(&mut self, now: f64, thrs: f64) -> bool {
+        let ra = self.arrival_rate(now);
+        if ra <= 0.0 {
+            return false;
+        }
+        let rs = self.service_rate(now);
+        (ra - rs) / ra > thrs
+    }
+
+    /// Imbalance value itself (for metrics / Fig-9 style traces).
+    pub fn imbalance(&mut self, now: f64) -> f64 {
+        let ra = self.arrival_rate(now);
+        if ra <= 0.0 {
+            return 0.0;
+        }
+        (ra - self.service_rate(now)) / ra
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn balanced_site_is_calm() {
+        let mut c = CongestionTracker::new(100.0);
+        for i in 0..10 {
+            c.record_arrival(i as f64 * 10.0);
+            c.record_service(i as f64 * 10.0 + 1.0);
+        }
+        assert!(!c.is_congested(100.0, 0.2));
+        assert!(c.imbalance(100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn overloaded_site_is_congested() {
+        let mut c = CongestionTracker::new(100.0);
+        for i in 0..50 {
+            c.record_arrival(i as f64 * 2.0);
+        }
+        for i in 0..5 {
+            c.record_service(i as f64 * 20.0);
+        }
+        // (0.5 - 0.05)/0.5 = 0.9 > 0.2.
+        assert!(c.is_congested(100.0, 0.2));
+        assert!((c.imbalance(100.0) - 0.9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn higher_threshold_tolerates_more() {
+        let mut c = CongestionTracker::new(100.0);
+        for i in 0..20 {
+            c.record_arrival(i as f64 * 5.0);
+        }
+        for i in 0..10 {
+            c.record_service(i as f64 * 10.0);
+        }
+        // Imbalance = 0.5: congested at 0.2, calm at 0.8 (§X: raising
+        // Thrs → "more jobs in the queues and consequently less migration").
+        assert!(c.is_congested(100.0, 0.2));
+        assert!(!c.is_congested(100.0, 0.8));
+    }
+
+    #[test]
+    fn window_evicts_old_events() {
+        let mut c = CongestionTracker::new(10.0);
+        for i in 0..100 {
+            c.record_arrival(i as f64 * 0.1); // burst in [0, 10)
+        }
+        assert!(c.arrival_rate(10.0) > 5.0);
+        assert_eq!(c.arrival_rate(50.0), 0.0);
+        assert!(!c.is_congested(50.0, 0.0));
+    }
+
+    #[test]
+    fn no_arrivals_never_congested() {
+        let mut c = CongestionTracker::new(10.0);
+        c.record_service(1.0);
+        assert!(!c.is_congested(5.0, 0.0));
+    }
+}

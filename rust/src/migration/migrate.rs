@@ -1,0 +1,123 @@
+//! §IX job migration: peer polling + the min-jobsAhead/min-cost decision.
+//!
+//! "The Scheduler will communicate with its peers and ask about their
+//! current queue length and the number of jobs with priorities greater
+//! than the current job's priority. The site with minimum queue length
+//! and minimum total cost is considered the best site…; once a job has
+//! been submitted on a remote site, the site … will not attempt to
+//! schedule it again" (no cycling).
+
+/// What a peer reports when polled about one candidate job (§IX).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PeerReport {
+    pub site: usize,
+    /// Jobs queued at the peer with priority > the candidate's.
+    pub jobs_ahead: usize,
+    pub queue_len: usize,
+    /// Peer's §IV total cost for this job (placement cost).
+    pub total_cost: f32,
+    pub alive: bool,
+}
+
+/// Outcome of the §IX decision.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum MigrationDecision {
+    /// Move the job to this peer (and bump its priority — §IX:
+    /// "increase the job's priority; migrate the job to that site").
+    Migrate { to: usize },
+    /// "the other sites are already congested … remain in the local
+    /// queue".
+    StayLocal,
+}
+
+/// §IX algorithm: find the alive peer with minimum (jobs_ahead,
+/// total_cost); migrate only if it strictly beats the local site on
+/// jobs-ahead and does not lose on cost.
+pub fn decide(
+    local: PeerReport,
+    peers: &[PeerReport],
+    max_migrations: u32,
+    migrations_so_far: u32,
+) -> MigrationDecision {
+    if migrations_so_far >= max_migrations {
+        return MigrationDecision::StayLocal; // no cycling (§IX)
+    }
+    let best = peers
+        .iter()
+        .filter(|p| p.alive && p.site != local.site)
+        .min_by(|a, b| {
+            (a.jobs_ahead, a.total_cost)
+                .partial_cmp(&(b.jobs_ahead, b.total_cost))
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+    match best {
+        Some(p)
+            if p.jobs_ahead < local.jobs_ahead
+                && p.total_cost <= local.total_cost =>
+        {
+            MigrationDecision::Migrate { to: p.site }
+        }
+        _ => MigrationDecision::StayLocal,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(site: usize, ahead: usize, cost: f32) -> PeerReport {
+        PeerReport { site, jobs_ahead: ahead, queue_len: ahead,
+                     total_cost: cost, alive: true }
+    }
+
+    #[test]
+    fn migrates_to_least_loaded_cheaper_peer() {
+        let local = report(0, 10, 5.0);
+        let peers = [report(1, 3, 4.0), report(2, 6, 1.0)];
+        assert_eq!(decide(local, &peers, 1, 0),
+                   MigrationDecision::Migrate { to: 1 });
+    }
+
+    #[test]
+    fn stays_when_peers_are_congested() {
+        let local = report(0, 2, 5.0);
+        let peers = [report(1, 30, 4.0), report(2, 60, 1.0)];
+        assert_eq!(decide(local, &peers, 1, 0), MigrationDecision::StayLocal);
+    }
+
+    #[test]
+    fn stays_when_peer_cheap_on_queue_but_pricier() {
+        // Fewer jobs ahead but higher total cost → §IX keeps it local
+        // ("If the number of jobs and total cost of the remote site is
+        // more than the local cost, then this job is scheduled to the
+        // local site" — both criteria must favour the move).
+        let local = report(0, 10, 1.0);
+        let peers = [report(1, 2, 50.0)];
+        assert_eq!(decide(local, &peers, 1, 0), MigrationDecision::StayLocal);
+    }
+
+    #[test]
+    fn dead_peers_ignored() {
+        let local = report(0, 10, 5.0);
+        let mut p = report(1, 0, 0.1);
+        p.alive = false;
+        assert_eq!(decide(local, &[p], 1, 0), MigrationDecision::StayLocal);
+    }
+
+    #[test]
+    fn no_cycling_after_max_migrations() {
+        let local = report(0, 10, 5.0);
+        let peers = [report(1, 0, 0.1)];
+        assert_eq!(decide(local, &peers, 1, 1), MigrationDecision::StayLocal);
+        assert!(matches!(decide(local, &peers, 2, 1),
+                         MigrationDecision::Migrate { .. }));
+    }
+
+    #[test]
+    fn ties_broken_by_cost() {
+        let local = report(0, 10, 5.0);
+        let peers = [report(1, 3, 4.0), report(2, 3, 2.0)];
+        assert_eq!(decide(local, &peers, 1, 0),
+                   MigrationDecision::Migrate { to: 2 });
+    }
+}

@@ -1,0 +1,8 @@
+//! §IX/§X job migration: congestion detection and the peer-polling
+//! migration decision.
+
+pub mod congestion;
+pub mod migrate;
+
+pub use congestion::CongestionTracker;
+pub use migrate::{decide, MigrationDecision, PeerReport};

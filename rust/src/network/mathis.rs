@@ -1,0 +1,87 @@
+//! Mathis TCP-throughput model — the paper's ref [13]:
+//! "The macroscopic behaviour of the TCP congestion avoidance algorithm".
+//!
+//! Achievable bandwidth of a loss-limited TCP flow:
+//!
+//! ```text
+//! BW ≤ (MSS / RTT) · (C / √loss)      with C ≈ √(3/2) for delayed-ACK=1
+//! ```
+//!
+//! DIANA uses this to turn the PingER monitor's (RTT, loss) observations
+//! into the achievable-bandwidth figure that feeds NetworkCost and DTC.
+
+/// Mathis constant C = sqrt(3/2).
+pub const MATHIS_C: f64 = 1.224_744_871_391_589;
+
+/// Achievable TCP bandwidth in Mbps given MSS (bytes), RTT (ms) and loss
+/// fraction; capped by the link capacity (Mbps).
+pub fn achievable_bandwidth_mbps(
+    mss_bytes: f64,
+    rtt_ms: f64,
+    loss: f64,
+    capacity_mbps: f64,
+) -> f64 {
+    debug_assert!(mss_bytes > 0.0 && capacity_mbps >= 0.0);
+    let rtt_s = (rtt_ms / 1000.0).max(1e-6);
+    // Loss → 0 means the flow is capacity-limited, not loss-limited.
+    if loss <= 1e-12 {
+        return capacity_mbps;
+    }
+    let bytes_per_s = (mss_bytes / rtt_s) * (MATHIS_C / loss.sqrt());
+    let mbps = bytes_per_s * 8.0 / 1e6;
+    mbps.min(capacity_mbps)
+}
+
+/// Transfer time in seconds for `mb` megabytes at `bw_mbps`, inflating by
+/// the loss fraction for retransmissions (matches the kernel's
+/// `(1+loss)/bw` DTC shape).
+pub fn transfer_seconds(mb: f64, bw_mbps: f64, loss: f64) -> f64 {
+    if mb <= 0.0 {
+        return 0.0;
+    }
+    let bw = bw_mbps.max(1e-6);
+    (mb * 8.0 / bw) * (1.0 + loss)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_hand_computed_value() {
+        // MSS 1460 B, RTT 100 ms, loss 1%:
+        // 1460/0.1 * 1.2247/0.1 = 178_810 B/s ≈ 1.43 Mbps
+        let bw = achievable_bandwidth_mbps(1460.0, 100.0, 0.01, 10_000.0);
+        assert!((bw - 1.4305).abs() < 0.01, "bw={bw}");
+    }
+
+    #[test]
+    fn zero_loss_is_capacity_limited() {
+        assert_eq!(achievable_bandwidth_mbps(1460.0, 10.0, 0.0, 622.0), 622.0);
+    }
+
+    #[test]
+    fn capped_by_capacity() {
+        // Tiny RTT + tiny loss would predict astronomic bandwidth.
+        let bw = achievable_bandwidth_mbps(1460.0, 0.1, 1e-6, 1000.0);
+        assert_eq!(bw, 1000.0);
+    }
+
+    #[test]
+    fn monotone_in_loss_and_rtt() {
+        let f = |rtt, loss| achievable_bandwidth_mbps(1460.0, rtt, loss, 1e9);
+        assert!(f(50.0, 0.01) > f(50.0, 0.04));
+        assert!(f(20.0, 0.01) > f(80.0, 0.01));
+        // Quadrupling loss halves bandwidth (inverse-sqrt law).
+        let r = f(50.0, 0.01) / f(50.0, 0.04);
+        assert!((r - 2.0).abs() < 1e-9, "ratio={r}");
+    }
+
+    #[test]
+    fn transfer_time_scales() {
+        let t = transfer_seconds(100.0, 100.0, 0.0);
+        assert!((t - 8.0).abs() < 1e-12); // 100 MB over 100 Mbps = 8 s
+        assert!(transfer_seconds(100.0, 100.0, 0.5) > t);
+        assert_eq!(transfer_seconds(0.0, 100.0, 0.0), 0.0);
+    }
+}

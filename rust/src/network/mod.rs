@@ -1,0 +1,10 @@
+//! WAN substrate: ground-truth topology, Mathis TCP throughput model and
+//! the simulated PingER monitor that schedulers actually consult.
+
+pub mod mathis;
+pub mod pinger;
+pub mod topology;
+
+pub use mathis::{achievable_bandwidth_mbps, transfer_seconds};
+pub use pinger::{LinkObs, PingerMonitor};
+pub use topology::{Link, Topology};

@@ -1,0 +1,160 @@
+//! Simulated PingER monitor (the paper's ref [20]).
+//!
+//! The real DIANA deployment read historical loss/RTT summaries from
+//! PingER via MonALISA. Here the monitor *samples* the ground-truth
+//! topology with configurable measurement noise and keeps an exponentially
+//! weighted history per link — schedulers consume the monitor's *beliefs*
+//! (like the real system), not the topology's ground truth, so stale or
+//! noisy network data degrades placement exactly as it would in the field.
+
+use crate::util::Pcg64;
+
+use super::mathis;
+use super::topology::Topology;
+
+/// Smoothed per-link observation.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LinkObs {
+    pub rtt_ms: f64,
+    pub loss: f64,
+    pub bandwidth_mbps: f64,
+    pub samples: u64,
+}
+
+/// EWMA network monitor over all site pairs.
+#[derive(Clone, Debug)]
+pub struct PingerMonitor {
+    n: usize,
+    obs: Vec<LinkObs>,
+    /// EWMA factor for new samples.
+    alpha: f64,
+    /// Relative std-dev of measurement noise.
+    noise: f64,
+    rng: Pcg64,
+    mss_bytes: f64,
+}
+
+impl PingerMonitor {
+    pub fn new(topo: &Topology, noise: f64, seed: u64) -> PingerMonitor {
+        let n = topo.n_sites();
+        let mut m = PingerMonitor {
+            n,
+            obs: vec![LinkObs::default(); n * n],
+            alpha: 0.3,
+            noise,
+            rng: Pcg64::new(seed),
+            mss_bytes: topo.mss_bytes(),
+        };
+        // Bootstrap with one clean sweep so early decisions aren't blind.
+        m.sweep_with_noise(topo, 0.0);
+        m
+    }
+
+    /// One monitoring sweep: sample every link with noise and fold into
+    /// the EWMA history.
+    pub fn sweep(&mut self, topo: &Topology) {
+        self.sweep_with_noise(topo, self.noise);
+    }
+
+    fn sweep_with_noise(&mut self, topo: &Topology, noise: f64) {
+        for from in 0..self.n {
+            for to in 0..self.n {
+                let link = topo.link(from, to);
+                let jitter = |rng: &mut Pcg64, v: f64| {
+                    if noise <= 0.0 {
+                        v
+                    } else {
+                        (v * (1.0 + noise * rng.normal())).max(0.0)
+                    }
+                };
+                let rtt = jitter(&mut self.rng, link.rtt_ms).max(0.01);
+                let loss = jitter(&mut self.rng, link.loss).clamp(0.0, 0.99);
+                let bw = mathis::achievable_bandwidth_mbps(
+                    self.mss_bytes,
+                    rtt,
+                    loss,
+                    link.capacity_mbps,
+                );
+                let o = &mut self.obs[from * self.n + to];
+                if o.samples == 0 {
+                    *o = LinkObs { rtt_ms: rtt, loss, bandwidth_mbps: bw, samples: 1 };
+                } else {
+                    let a = self.alpha;
+                    o.rtt_ms = (1.0 - a) * o.rtt_ms + a * rtt;
+                    o.loss = (1.0 - a) * o.loss + a * loss;
+                    o.bandwidth_mbps = (1.0 - a) * o.bandwidth_mbps + a * bw;
+                    o.samples += 1;
+                }
+            }
+        }
+    }
+
+    #[inline]
+    pub fn observe(&self, from: usize, to: usize) -> LinkObs {
+        self.obs[from * self.n + to]
+    }
+
+    /// The §IV NetworkCost = Losses / Bandwidth for a path, from beliefs.
+    #[inline]
+    pub fn network_cost(&self, from: usize, to: usize) -> f64 {
+        let o = self.observe(from, to);
+        o.loss / o.bandwidth_mbps.max(1e-6)
+    }
+
+    pub fn n_sites(&self) -> usize {
+        self.n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    fn topo() -> Topology {
+        Topology::from_config(&presets::uniform_grid(4, 4))
+    }
+
+    #[test]
+    fn bootstrap_sweep_matches_ground_truth() {
+        let t = topo();
+        let m = PingerMonitor::new(&t, 0.1, 1);
+        let o = m.observe(0, 1);
+        assert!((o.rtt_ms - t.link(0, 1).rtt_ms).abs() < 1e-9);
+        assert!((o.bandwidth_mbps - t.bandwidth_mbps(0, 1)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn noisy_sweeps_stay_near_truth() {
+        let t = topo();
+        let mut m = PingerMonitor::new(&t, 0.05, 2);
+        for _ in 0..50 {
+            m.sweep(&t);
+        }
+        let truth = t.link(0, 1).rtt_ms;
+        let o = m.observe(0, 1);
+        assert!((o.rtt_ms - truth).abs() / truth < 0.15,
+                "ewma drifted: {} vs {}", o.rtt_ms, truth);
+        assert_eq!(o.samples, 51);
+    }
+
+    #[test]
+    fn network_cost_prefers_clean_links() {
+        let t = topo();
+        let m = PingerMonitor::new(&t, 0.0, 3);
+        // Local path (0→0) has ~zero loss → much cheaper than WAN.
+        assert!(m.network_cost(0, 0) < m.network_cost(0, 1));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let t = topo();
+        let mut a = PingerMonitor::new(&t, 0.1, 42);
+        let mut b = PingerMonitor::new(&t, 0.1, 42);
+        for _ in 0..5 {
+            a.sweep(&t);
+            b.sweep(&t);
+        }
+        assert_eq!(a.observe(1, 2).rtt_ms, b.observe(1, 2).rtt_ms);
+    }
+}

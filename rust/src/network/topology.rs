@@ -1,0 +1,127 @@
+//! WAN topology: per-site-pair link state (RTT, loss, capacity) built from
+//! `NetworkConfig`, with symmetric overrides and a fast dense lookup.
+
+use crate::config::GridConfig;
+
+use super::mathis;
+
+/// Immutable link parameters between two sites (or a site and itself).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Link {
+    pub rtt_ms: f64,
+    pub loss: f64,
+    pub capacity_mbps: f64,
+}
+
+/// Dense `n×n` link table; index by site indices.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    n: usize,
+    links: Vec<Link>,
+    mss_bytes: f64,
+}
+
+impl Topology {
+    pub fn from_config(cfg: &GridConfig) -> Topology {
+        let n = cfg.sites.len();
+        let net = &cfg.network;
+        let wan = Link {
+            rtt_ms: net.default_rtt_ms,
+            loss: net.default_loss,
+            capacity_mbps: net.default_capacity_mbps,
+        };
+        let local = Link {
+            rtt_ms: 0.1,
+            loss: net.local_loss,
+            capacity_mbps: net.local_bw_mbps,
+        };
+        let mut links = vec![wan; n * n];
+        for i in 0..n {
+            links[i * n + i] = local;
+        }
+        for l in &net.links {
+            let (Some(a), Some(b)) =
+                (cfg.site_index(&l.from), cfg.site_index(&l.to))
+            else {
+                continue; // validated earlier; ignore defensively
+            };
+            let link = Link {
+                rtt_ms: l.rtt_ms,
+                loss: l.loss,
+                capacity_mbps: l.capacity_mbps,
+            };
+            links[a * n + b] = link;
+            links[b * n + a] = link; // symmetric
+        }
+        Topology { n, links, mss_bytes: net.mss_bytes }
+    }
+
+    pub fn n_sites(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn link(&self, from: usize, to: usize) -> Link {
+        self.links[from * self.n + to]
+    }
+
+    /// Ground-truth achievable bandwidth (Mbps) via the Mathis model.
+    #[inline]
+    pub fn bandwidth_mbps(&self, from: usize, to: usize) -> f64 {
+        let l = self.link(from, to);
+        mathis::achievable_bandwidth_mbps(
+            self.mss_bytes,
+            l.rtt_ms,
+            l.loss,
+            l.capacity_mbps,
+        )
+    }
+
+    /// Ground-truth transfer time for `mb` megabytes.
+    pub fn transfer_seconds(&self, from: usize, to: usize, mb: f64) -> f64 {
+        let l = self.link(from, to);
+        mathis::transfer_seconds(mb, self.bandwidth_mbps(from, to), l.loss)
+    }
+
+    pub fn mss_bytes(&self) -> f64 {
+        self.mss_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn local_links_are_fast() {
+        let cfg = presets::uniform_grid(3, 4);
+        let t = Topology::from_config(&cfg);
+        assert!(t.bandwidth_mbps(0, 0) > t.bandwidth_mbps(0, 1));
+        assert!(t.link(1, 1).loss < t.link(0, 1).loss);
+    }
+
+    #[test]
+    fn overrides_are_symmetric() {
+        let cfg = presets::cms_tier_grid();
+        let t = Topology::from_config(&cfg);
+        let a = cfg.site_index("T0-CERN").unwrap();
+        let b = cfg.site_index("T1-FNAL").unwrap();
+        assert_eq!(t.link(a, b), t.link(b, a));
+        assert_eq!(t.link(a, b).rtt_ms, 30.0);
+        // Non-overridden pair uses WAN defaults.
+        let c = cfg.site_index("T2-1").unwrap();
+        assert_eq!(t.link(a, c).rtt_ms, cfg.network.default_rtt_ms);
+    }
+
+    #[test]
+    fn transfer_seconds_positive_and_monotone() {
+        let cfg = presets::uniform_grid(2, 4);
+        let t = Topology::from_config(&cfg);
+        let t1 = t.transfer_seconds(0, 1, 100.0);
+        let t2 = t.transfer_seconds(0, 1, 200.0);
+        assert!(t1 > 0.0 && (t2 / t1 - 2.0).abs() < 1e-9);
+        // Local transfer beats WAN transfer.
+        assert!(t.transfer_seconds(0, 0, 100.0) < t1);
+    }
+}

@@ -1,0 +1,130 @@
+//! Discovery service (stands in for Clarens/MonALISA/Jini, §XI): an
+//! in-process registry where meta-schedulers register, discover peers and
+//! publish their state; propagation latency is modelled by the caller
+//! (the DES delivers state updates as events).
+
+use std::collections::BTreeMap;
+
+use super::table::PeerState;
+
+/// Registration record.
+#[derive(Clone, Debug)]
+pub struct Registration {
+    pub site: usize,
+    pub endpoint: String,
+    pub registered_at: f64,
+}
+
+/// The decentralised-registry stand-in. One instance per simulation; the
+/// P2P aspect (every meta-scheduler can reach it) matches MonALISA's
+//  replicated-repository behaviour without modelling its internals.
+#[derive(Clone, Debug, Default)]
+pub struct Discovery {
+    registrations: BTreeMap<usize, Registration>,
+    states: BTreeMap<usize, PeerState>,
+}
+
+impl Discovery {
+    pub fn new() -> Discovery {
+        Discovery::default()
+    }
+
+    /// Register a meta-scheduler ("DIANA instances can register with any
+    /// of the MonALISA peers through the discovery service").
+    pub fn register(&mut self, site: usize, endpoint: &str, now: f64) {
+        self.registrations.insert(
+            site,
+            Registration {
+                site,
+                endpoint: endpoint.to_string(),
+                registered_at: now,
+            },
+        );
+    }
+
+    pub fn deregister(&mut self, site: usize) {
+        self.registrations.remove(&site);
+        self.states.remove(&site);
+    }
+
+    /// Publish a state update (heartbeat).
+    pub fn publish(&mut self, state: PeerState) {
+        if self.registrations.contains_key(&state.site) {
+            self.states.insert(state.site, state);
+        }
+    }
+
+    /// Discover all registered peers except the caller.
+    pub fn peers_of(&self, site: usize) -> Vec<&Registration> {
+        self.registrations
+            .values()
+            .filter(|r| r.site != site)
+            .collect()
+    }
+
+    /// Latest published state of a peer.
+    pub fn state_of(&self, site: usize) -> Option<&PeerState> {
+        self.states.get(&site)
+    }
+
+    pub fn registered(&self) -> usize {
+        self.registrations.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn state(site: usize) -> PeerState {
+        PeerState {
+            site,
+            queue_len: 1,
+            free_slots: 2,
+            capability: 4.0,
+            load: 0.5,
+            alive: true,
+            last_update: 0.0,
+        }
+    }
+
+    #[test]
+    fn register_discover() {
+        let mut d = Discovery::new();
+        d.register(0, "tcp://s0", 0.0);
+        d.register(1, "tcp://s1", 1.0);
+        d.register(2, "tcp://s2", 2.0);
+        let peers = d.peers_of(1);
+        assert_eq!(peers.len(), 2);
+        assert!(peers.iter().all(|r| r.site != 1));
+    }
+
+    #[test]
+    fn publish_requires_registration() {
+        let mut d = Discovery::new();
+        d.publish(state(5));
+        assert!(d.state_of(5).is_none());
+        d.register(5, "tcp://s5", 0.0);
+        d.publish(state(5));
+        assert_eq!(d.state_of(5).unwrap().queue_len, 1);
+    }
+
+    #[test]
+    fn deregister_removes_state() {
+        let mut d = Discovery::new();
+        d.register(0, "tcp://s0", 0.0);
+        d.publish(state(0));
+        d.deregister(0);
+        assert!(d.state_of(0).is_none());
+        assert_eq!(d.registered(), 0);
+    }
+
+    #[test]
+    fn reregistration_overwrites() {
+        let mut d = Discovery::new();
+        d.register(0, "tcp://old", 0.0);
+        d.register(0, "tcp://new", 9.0);
+        assert_eq!(d.registered(), 1);
+        assert_eq!(d.peers_of(1)[0].endpoint, "tcp://new");
+    }
+}

@@ -1,0 +1,10 @@
+//! P2P layer (§IV Fig 1, §IX Fig 5): RootGrid/SubGrid overlay, peer-state
+//! tables and the discovery-service stand-in.
+
+pub mod discovery;
+pub mod node;
+pub mod table;
+
+pub use discovery::{Discovery, Registration};
+pub use node::{Node, Overlay, Role, SubGrid};
+pub use table::{PeerState, PeerTable};

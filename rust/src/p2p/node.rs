@@ -1,0 +1,207 @@
+//! §IX topological structure: RootGrids and SubGrids.
+//!
+//! "The nodes are divided into SubGrids, each SubGrid having its own
+//! RootGrid. … The Meta-Scheduler works at the RootGrid level … Local
+//! schedulers work at the SubGrid level." A joining peer creates the
+//! RootGrid if none exists, otherwise joins the nearest SubGrid; each
+//! RootGrid replicates to a standby node for failover.
+
+/// A node's role inside the overlay.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Role {
+    RootGrid,
+    Standby,
+    Worker,
+}
+
+/// One overlay node (one machine at a site).
+#[derive(Clone, Debug)]
+pub struct Node {
+    /// Unique ID "assigned at the time of its joining the Grid".
+    pub id: u64,
+    pub site: usize,
+    pub role: Role,
+    /// Availability score — "the RootGrid should always be the machine
+    /// with the largest availability within that SubGrid".
+    pub availability: f64,
+}
+
+/// A SubGrid: the nodes of (usually) one site with a RootGrid master.
+#[derive(Clone, Debug)]
+pub struct SubGrid {
+    pub site: usize,
+    pub nodes: Vec<Node>,
+}
+
+impl SubGrid {
+    pub fn root(&self) -> Option<&Node> {
+        self.nodes.iter().find(|n| n.role == Role::RootGrid)
+    }
+
+    pub fn standby(&self) -> Option<&Node> {
+        self.nodes.iter().find(|n| n.role == Role::Standby)
+    }
+
+    /// Elect roles: highest availability becomes RootGrid, second becomes
+    /// the standby replica.
+    pub fn elect(&mut self) {
+        for n in &mut self.nodes {
+            n.role = Role::Worker;
+        }
+        let mut order: Vec<usize> = (0..self.nodes.len()).collect();
+        order.sort_by(|&a, &b| {
+            self.nodes[b]
+                .availability
+                .partial_cmp(&self.nodes[a].availability)
+                .unwrap()
+                .then(self.nodes[a].id.cmp(&self.nodes[b].id))
+        });
+        if let Some(&first) = order.first() {
+            self.nodes[first].role = Role::RootGrid;
+        }
+        if let Some(&second) = order.get(1) {
+            self.nodes[second].role = Role::Standby;
+        }
+    }
+
+    /// §IX failover: "In case a RootGrid crashes, a standby node in the
+    /// SubGrid can take over as a RootGrid." Returns the new root id.
+    pub fn fail_root(&mut self) -> Option<u64> {
+        let root_pos = self.nodes.iter().position(|n| n.role == Role::RootGrid)?;
+        self.nodes.remove(root_pos);
+        self.elect();
+        self.root().map(|n| n.id)
+    }
+}
+
+/// The whole overlay: one SubGrid per site (§IX: "Roughly each site has
+/// one RootGrid").
+#[derive(Clone, Debug, Default)]
+pub struct Overlay {
+    pub subgrids: Vec<SubGrid>,
+    next_id: u64,
+}
+
+impl Overlay {
+    pub fn new() -> Overlay {
+        Overlay::default()
+    }
+
+    /// A peer joins: finds (or creates) its site's SubGrid, gets a unique
+    /// id, and roles are re-elected. Returns the node id.
+    pub fn join(&mut self, site: usize, availability: f64) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        let node = Node { id, site, role: Role::Worker, availability };
+        match self.subgrids.iter_mut().find(|sg| sg.site == site) {
+            Some(sg) => {
+                sg.nodes.push(node);
+                sg.elect();
+            }
+            None => {
+                let mut sg = SubGrid { site, nodes: vec![node] };
+                sg.elect(); // first peer creates + becomes the RootGrid
+                self.subgrids.push(sg);
+            }
+        }
+        id
+    }
+
+    /// A node leaves (crash or shutdown); roles re-elected in its SubGrid.
+    pub fn leave(&mut self, id: u64) -> bool {
+        for sg in &mut self.subgrids {
+            if let Some(pos) = sg.nodes.iter().position(|n| n.id == id) {
+                sg.nodes.remove(pos);
+                sg.elect();
+                return true;
+            }
+        }
+        false
+    }
+
+    pub fn subgrid(&self, site: usize) -> Option<&SubGrid> {
+        self.subgrids.iter().find(|sg| sg.site == site)
+    }
+
+    /// All RootGrid node ids — the P2P meta-scheduler set (Fig 5).
+    pub fn roots(&self) -> Vec<u64> {
+        self.subgrids
+            .iter()
+            .filter_map(|sg| sg.root().map(|n| n.id))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_joiner_creates_rootgrid() {
+        let mut o = Overlay::new();
+        let id = o.join(0, 0.9);
+        let sg = o.subgrid(0).unwrap();
+        assert_eq!(sg.root().unwrap().id, id);
+        assert!(sg.standby().is_none());
+    }
+
+    #[test]
+    fn highest_availability_is_root() {
+        let mut o = Overlay::new();
+        o.join(0, 0.5);
+        let best = o.join(0, 0.99);
+        o.join(0, 0.7);
+        let sg = o.subgrid(0).unwrap();
+        assert_eq!(sg.root().unwrap().id, best);
+        // Standby is the second-best (availability 0.7).
+        assert_eq!(sg.standby().unwrap().availability, 0.7);
+    }
+
+    #[test]
+    fn failover_promotes_standby() {
+        let mut o = Overlay::new();
+        o.join(0, 0.9);
+        let second = o.join(0, 0.8);
+        o.join(0, 0.1);
+        let sg = o.subgrids.iter_mut().find(|s| s.site == 0).unwrap();
+        let new_root = sg.fail_root().unwrap();
+        assert_eq!(new_root, second);
+        assert!(sg.standby().is_some()); // the 0.1 node became standby
+    }
+
+    #[test]
+    fn one_root_per_site() {
+        let mut o = Overlay::new();
+        for site in 0..4 {
+            for k in 0..3 {
+                o.join(site, 0.5 + k as f64 * 0.1);
+            }
+        }
+        assert_eq!(o.roots().len(), 4);
+        for sg in &o.subgrids {
+            let roots = sg.nodes.iter().filter(|n| n.role == Role::RootGrid)
+                .count();
+            assert_eq!(roots, 1);
+        }
+    }
+
+    #[test]
+    fn leave_reelects() {
+        let mut o = Overlay::new();
+        let a = o.join(0, 0.9);
+        let b = o.join(0, 0.8);
+        assert!(o.leave(a));
+        assert_eq!(o.subgrid(0).unwrap().root().unwrap().id, b);
+        assert!(!o.leave(a));
+    }
+
+    #[test]
+    fn unique_monotone_ids() {
+        let mut o = Overlay::new();
+        let ids: Vec<u64> = (0..10).map(|s| o.join(s % 3, 0.5)).collect();
+        let mut sorted = ids.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 10);
+    }
+}

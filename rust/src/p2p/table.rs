@@ -1,0 +1,120 @@
+//! §IX peer-state table: "Each RootGrid maintains a table of entries
+//! about the status of the nodes which is updated in real time when a
+//! node joins or leaves the system."
+
+use std::collections::BTreeMap;
+
+/// One peer's advertised state (what MonALISA would propagate).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PeerState {
+    pub site: usize,
+    pub queue_len: usize,
+    pub free_slots: usize,
+    pub capability: f64,
+    pub load: f64,
+    pub alive: bool,
+    pub last_update: f64,
+}
+
+/// The real-time peer table one meta-scheduler maintains.
+#[derive(Clone, Debug, Default)]
+pub struct PeerTable {
+    peers: BTreeMap<usize, PeerState>,
+    /// Seconds without update after which a peer is presumed dead.
+    pub staleness_s: f64,
+}
+
+impl PeerTable {
+    pub fn new(staleness_s: f64) -> PeerTable {
+        PeerTable { peers: BTreeMap::new(), staleness_s }
+    }
+
+    pub fn update(&mut self, state: PeerState) {
+        self.peers.insert(state.site, state);
+    }
+
+    pub fn remove(&mut self, site: usize) -> bool {
+        self.peers.remove(&site).is_some()
+    }
+
+    pub fn get(&self, site: usize) -> Option<&PeerState> {
+        self.peers.get(&site)
+    }
+
+    pub fn len(&self) -> usize {
+        self.peers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.peers.is_empty()
+    }
+
+    /// Peers considered alive at time `now` (explicit flag + freshness).
+    pub fn alive_peers(&self, now: f64) -> Vec<PeerState> {
+        self.peers
+            .values()
+            .filter(|p| p.alive && (now - p.last_update) <= self.staleness_s)
+            .copied()
+            .collect()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &PeerState> {
+        self.peers.values()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn state(site: usize, t: f64) -> PeerState {
+        PeerState {
+            site,
+            queue_len: 0,
+            free_slots: 4,
+            capability: 4.0,
+            load: 0.0,
+            alive: true,
+            last_update: t,
+        }
+    }
+
+    #[test]
+    fn update_overwrites() {
+        let mut t = PeerTable::new(60.0);
+        t.update(state(1, 0.0));
+        let mut s = state(1, 5.0);
+        s.queue_len = 9;
+        t.update(s);
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.get(1).unwrap().queue_len, 9);
+    }
+
+    #[test]
+    fn stale_peers_dropped_from_alive() {
+        let mut t = PeerTable::new(60.0);
+        t.update(state(1, 0.0));
+        t.update(state(2, 100.0));
+        let alive = t.alive_peers(120.0);
+        assert_eq!(alive.len(), 1);
+        assert_eq!(alive[0].site, 2);
+    }
+
+    #[test]
+    fn dead_flag_respected() {
+        let mut t = PeerTable::new(60.0);
+        let mut s = state(1, 10.0);
+        s.alive = false;
+        t.update(s);
+        assert!(t.alive_peers(10.0).is_empty());
+    }
+
+    #[test]
+    fn remove_on_leave() {
+        let mut t = PeerTable::new(60.0);
+        t.update(state(1, 0.0));
+        assert!(t.remove(1));
+        assert!(!t.remove(1));
+        assert!(t.is_empty());
+    }
+}

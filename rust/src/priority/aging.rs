@@ -1,0 +1,83 @@
+//! §VII aging: "with the passage of time, the priority of jobs in the
+//! lower priority queues is increased so that it can also have a chance
+//! of being executed after a certain wait time" (Fig 3's rising curve).
+//!
+//! The aged priority approaches 1 exponentially with waiting time:
+//! `aged = pr + (1 - pr)·(1 - 2^(-wait/halflife))` — after one halflife a
+//! job has closed half its gap to top priority. §X's re-prioritization
+//! already militates against starvation; aging is the belt-and-braces
+//! knob (disabled with halflife = 0) used when queues are long-lived.
+
+/// Aged effective priority (used for dispatch ordering, not queue binning).
+#[inline]
+pub fn aged_priority(pr: f32, wait_s: f64, halflife_s: f64) -> f32 {
+    if halflife_s <= 0.0 || wait_s <= 0.0 {
+        return pr;
+    }
+    let closed = 1.0 - (-(wait_s / halflife_s) * std::f64::consts::LN_2).exp();
+    pr + (1.0 - pr) * closed as f32
+}
+
+/// Fig-3 "priority vs job frequency" series: Pr(n) for n = 1..=max_n.
+pub fn frequency_curve(q: f32, t: f32, cap_t: f32, cap_q: f32, max_n: usize)
+    -> Vec<(usize, f32)> {
+    (1..=max_n)
+        .map(|n| (n, super::formula::pr(n as f32, q, t, cap_t, cap_q)))
+        .collect()
+}
+
+/// Fig-3 "priority vs wait time" series for a job starting at `pr0`.
+pub fn aging_curve(pr0: f32, halflife_s: f64, horizon_s: f64, steps: usize)
+    -> Vec<(f64, f32)> {
+    (0..=steps)
+        .map(|i| {
+            let t = horizon_s * i as f64 / steps as f64;
+            (t, aged_priority(pr0, t, halflife_s))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_aging_at_zero_wait_or_disabled() {
+        assert_eq!(aged_priority(-0.4, 0.0, 100.0), -0.4);
+        assert_eq!(aged_priority(-0.4, 1e6, 0.0), -0.4);
+    }
+
+    #[test]
+    fn halflife_closes_half_the_gap() {
+        let aged = aged_priority(0.0, 100.0, 100.0);
+        assert!((aged - 0.5).abs() < 1e-6);
+        let aged2 = aged_priority(-1.0, 100.0, 100.0);
+        assert!((aged2 - 0.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn aging_is_monotone_and_bounded() {
+        let mut last = -0.9;
+        for w in [1.0, 10.0, 100.0, 1000.0, 10_000.0] {
+            let a = aged_priority(-0.9, w, 300.0);
+            assert!(a >= last);
+            assert!(a <= 1.0);
+            last = a;
+        }
+        assert!(aged_priority(-0.9, 1e9, 300.0) > 0.999);
+    }
+
+    #[test]
+    fn fig3_frequency_curve_decreases() {
+        let c = frequency_curve(1000.0, 1.0, 50.0, 5000.0, 30);
+        assert_eq!(c.len(), 30);
+        assert!(c.windows(2).all(|w| w[1].1 < w[0].1));
+    }
+
+    #[test]
+    fn fig3_aging_curve_increases() {
+        let c = aging_curve(-0.8, 600.0, 3600.0, 36);
+        assert!(c.windows(2).all(|w| w[1].1 >= w[0].1));
+        assert!(c.last().unwrap().1 > 0.0);
+    }
+}

@@ -1,0 +1,131 @@
+//! §X priority formula — scalar twin of `kernels/priority.py`.
+//!
+//! `N = (q·T)/(Q·t)` is the *dynamic threshold*; the new job's priority is
+//! `Pr(n) = (N-n)/N` while the user is under threshold and `(N-n)/n`
+//! beyond it, always in (-1, 1].
+
+/// Queue index for a priority value (§X ranges).
+#[inline]
+pub fn queue_for_priority(pr: f32) -> usize {
+    if pr >= 0.5 {
+        0 // Q1: [0.5, 1]
+    } else if pr >= 0.0 {
+        1 // Q2: [0, 0.5)
+    } else if pr >= -0.5 {
+        2 // Q3: [-0.5, 0)
+    } else {
+        3 // Q4: [-1, -0.5)
+    }
+}
+
+/// The §X dynamic threshold N for one job.
+#[inline]
+pub fn threshold(q: f32, t: f32, cap_t: f32, cap_q: f32) -> f32 {
+    (q * cap_t.max(1e-6)) / (cap_q.max(1e-6) * t.max(1e-6))
+}
+
+/// Pr(n) — scalar version (identical guards to the kernel).
+#[inline]
+pub fn pr(n: f32, q: f32, t: f32, cap_t: f32, cap_q: f32) -> f32 {
+    let big_n = threshold(q, t, cap_t, cap_q);
+    if n <= big_n {
+        (big_n - n) / big_n.max(1e-6)
+    } else {
+        (big_n - n) / n.max(1e-6)
+    }
+}
+
+/// Aggregate state needed by the formula, derived from the current queue
+/// contents (§X definitions of T, Q, L and per-user n).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct QueueTotals {
+    /// T: processors demanded by all queued jobs.
+    pub t_sum: f32,
+    /// Q: sum of quotas of *distinct* users with queued jobs.
+    pub q_sum: f32,
+    /// L: total queued jobs.
+    pub l: usize,
+}
+
+impl QueueTotals {
+    pub fn to_array(&self) -> [f32; 4] {
+        [self.t_sum, self.q_sum, self.l as f32, 0.0]
+    }
+}
+
+/// Per-user occupancy (n values).
+pub fn user_counts<I>(users: I) -> std::collections::BTreeMap<u32, u32>
+where
+    I: IntoIterator<Item = u32>,
+{
+    let mut m = std::collections::BTreeMap::new();
+    for u in users {
+        *m.entry(u).or_insert(0) += 1;
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig6_values() {
+        // B1: q=1700, t=1, T=7, Q=3600, n=1.
+        assert!((pr(1.0, 1700.0, 1.0, 7.0, 3600.0) - 0.6974).abs() < 1e-4);
+        // A1 final: n=2, t=1 → 0.4586.
+        assert!((pr(2.0, 1900.0, 1.0, 7.0, 3600.0) - 0.4586).abs() < 1e-4);
+        // A2 final: n=2, t=5 → -0.6305.
+        assert!((pr(2.0, 1900.0, 5.0, 7.0, 3600.0) + 0.6305).abs() < 1e-4);
+    }
+
+    #[test]
+    fn threshold_is_dynamic_per_job() {
+        let n1 = threshold(1900.0, 1.0, 6.0, 1900.0);
+        let n5 = threshold(1900.0, 5.0, 6.0, 1900.0);
+        assert!((n1 - 6.0).abs() < 1e-6);
+        assert!((n5 - 1.2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn queue_binning_edges() {
+        assert_eq!(queue_for_priority(1.0), 0);
+        assert_eq!(queue_for_priority(0.5), 0);
+        assert_eq!(queue_for_priority(0.4999), 1);
+        assert_eq!(queue_for_priority(0.0), 1);
+        assert_eq!(queue_for_priority(-1e-6), 2);
+        // §X: Q3 is -0.5 ≤ p < 0, so -0.5 itself is Q3.
+        assert_eq!(queue_for_priority(-0.5), 2);
+        assert_eq!(queue_for_priority(-0.5001), 3);
+        assert_eq!(queue_for_priority(-0.9999), 3);
+    }
+
+    #[test]
+    fn pr_bounded() {
+        for n in 1..100 {
+            for t in [1.0, 4.0, 16.0] {
+                let p = pr(n as f32, 1000.0, t, 50.0, 10_000.0);
+                assert!(p > -1.0 - 1e-6 && p <= 1.0 + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn monotone_decreasing_in_n() {
+        let f = |n: f32| pr(n, 1000.0, 2.0, 100.0, 5000.0);
+        let mut last = f(1.0);
+        for n in 2..40 {
+            let cur = f(n as f32);
+            assert!(cur < last, "n={n}: {cur} !< {last}");
+            last = cur;
+        }
+    }
+
+    #[test]
+    fn user_counts_aggregates() {
+        let m = user_counts([1, 2, 1, 3, 1]);
+        assert_eq!(m[&1], 3);
+        assert_eq!(m[&2], 1);
+        assert_eq!(m[&3], 1);
+    }
+}

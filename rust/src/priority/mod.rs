@@ -1,0 +1,10 @@
+//! §X priority machinery: the Pr(n) formula, aging curves (§VII/Fig 3)
+//! and the whole-queue re-prioritization sweep.
+
+pub mod aging;
+pub mod formula;
+pub mod reprioritize;
+
+pub use aging::{aged_priority, aging_curve, frequency_curve};
+pub use formula::{pr, queue_for_priority, threshold, QueueTotals};
+pub use reprioritize::{sweep, totals, Assignment, QueuedFacts};

@@ -1,0 +1,138 @@
+//! §X re-prioritization: "On the arrival of each new job, the priorities
+//! of all the other jobs will be recalculated."
+//!
+//! Builds the [L,4] job matrix + totals from queue contents (per-user n,
+//! T over all queued jobs, Q over *distinct* users) and runs it through a
+//! `CostEngine` — the XLA priority kernel on the hot path, the rust
+//! mirror otherwise.
+
+use anyhow::Result;
+
+use crate::cost::CostEngine;
+use crate::job::{JobId, UserId};
+
+use super::formula::{user_counts, QueueTotals};
+
+/// The queue-resident facts about one job that the formula needs.
+#[derive(Clone, Copy, Debug)]
+pub struct QueuedFacts {
+    pub job: JobId,
+    pub user: UserId,
+    pub procs: u32,
+    pub quota: f32,
+    pub enqueued_at: f64,
+}
+
+/// Result row of a re-prioritization sweep.
+#[derive(Clone, Copy, Debug)]
+pub struct Assignment {
+    pub job: JobId,
+    pub priority: f32,
+    pub queue: usize,
+}
+
+/// Compute §X totals from the queued population.
+pub fn totals(queue: &[QueuedFacts]) -> QueueTotals {
+    let t_sum: f32 = queue.iter().map(|f| f.procs as f32).sum();
+    // Q sums each distinct user's quota once.
+    let mut seen = std::collections::BTreeMap::new();
+    for f in queue {
+        seen.entry(f.user.0).or_insert(f.quota);
+    }
+    QueueTotals {
+        t_sum,
+        q_sum: seen.values().sum(),
+        l: queue.len(),
+    }
+}
+
+/// Re-prioritize every queued job through the engine. `queue` must
+/// already include any newly arrived job.
+pub fn sweep(
+    engine: &mut dyn CostEngine,
+    queue: &[QueuedFacts],
+) -> Result<Vec<Assignment>> {
+    if queue.is_empty() {
+        return Ok(Vec::new());
+    }
+    let tot = totals(queue);
+    let counts = user_counts(queue.iter().map(|f| f.user.0));
+    let mut rows = Vec::with_capacity(queue.len() * 4);
+    for f in queue {
+        rows.extend_from_slice(&[
+            counts[&f.user.0] as f32,
+            f.procs as f32,
+            f.quota,
+            f.enqueued_at as f32,
+        ]);
+    }
+    let (pr, qidx) = engine.reprioritize(&rows, &tot.to_array())?;
+    Ok(queue
+        .iter()
+        .zip(pr.iter().zip(qidx.iter()))
+        .map(|(f, (&p, &q))| Assignment {
+            job: f.job,
+            priority: p,
+            queue: q as usize,
+        })
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::RustEngine;
+
+    fn facts(job: u64, user: u32, procs: u32, quota: f32) -> QueuedFacts {
+        QueuedFacts {
+            job: JobId(job),
+            user: UserId(user),
+            procs,
+            quota,
+            enqueued_at: job as f64,
+        }
+    }
+
+    #[test]
+    fn totals_count_distinct_users_once() {
+        let q = vec![facts(1, 1, 1, 1900.0), facts(2, 1, 5, 1900.0),
+                     facts(3, 2, 1, 1700.0)];
+        let t = totals(&q);
+        assert_eq!(t.t_sum, 7.0);
+        assert_eq!(t.q_sum, 3600.0);
+        assert_eq!(t.l, 3);
+    }
+
+    #[test]
+    fn fig6_sweep_through_engine() {
+        let mut e = RustEngine::new();
+        let q = vec![facts(1, 1, 1, 1900.0), facts(2, 1, 5, 1900.0),
+                     facts(3, 2, 1, 1700.0)];
+        let out = sweep(&mut e, &q).unwrap();
+        assert_eq!(out.len(), 3);
+        assert!((out[0].priority - 0.4586).abs() < 1e-4);
+        assert!((out[1].priority + 0.6305).abs() < 1e-4);
+        assert!((out[2].priority - 0.6974).abs() < 1e-4);
+        assert_eq!(out[0].queue, 1);
+        assert_eq!(out[1].queue, 3);
+        assert_eq!(out[2].queue, 0);
+    }
+
+    #[test]
+    fn empty_queue_is_noop() {
+        let mut e = RustEngine::new();
+        assert!(sweep(&mut e, &[]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn arrival_of_second_user_demotes_first() {
+        // §X narrative: B's arrival reshuffles A's jobs downward.
+        let mut e = RustEngine::new();
+        let before = vec![facts(1, 1, 1, 1900.0), facts(2, 1, 5, 1900.0)];
+        let a1_before = sweep(&mut e, &before).unwrap()[0].priority;
+        let after = vec![facts(1, 1, 1, 1900.0), facts(2, 1, 5, 1900.0),
+                         facts(3, 2, 1, 1700.0)];
+        let a1_after = sweep(&mut e, &after).unwrap()[0].priority;
+        assert!(a1_after < a1_before);
+    }
+}

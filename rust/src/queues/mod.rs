@@ -1,0 +1,8 @@
+//! Queue management (§X): multilevel feedback queues and the §VII SJF
+//! pre-arrangement.
+
+pub mod multilevel;
+pub mod sjf;
+
+pub use multilevel::{MetaJob, MultilevelQueue, N_QUEUES};
+pub use sjf::{arrange_sjf, mean_wait_sequential, sjf_order};

@@ -1,0 +1,350 @@
+//! §X multilevel feedback queues Q1..Q4.
+//!
+//! Jobs live in the queue matching their priority range; within a queue
+//! the order is descending priority with FCFS (older first) tie-break.
+//! On every arrival the whole population is re-prioritized and jobs
+//! migrate between queues ("feedback", §VI-B); dispatch pops the best job
+//! of the highest non-empty queue.
+
+use crate::job::{JobId, UserId};
+use crate::priority::{aged_priority, queue_for_priority, Assignment,
+                      QueuedFacts};
+
+pub const N_QUEUES: usize = 4;
+
+/// A queue-resident job.
+#[derive(Clone, Copy, Debug)]
+pub struct MetaJob {
+    pub job: JobId,
+    pub user: UserId,
+    pub procs: u32,
+    pub quota: f32,
+    pub priority: f32,
+    pub enqueued_at: f64,
+}
+
+impl MetaJob {
+    pub fn facts(&self) -> QueuedFacts {
+        QueuedFacts {
+            job: self.job,
+            user: self.user,
+            procs: self.procs,
+            quota: self.quota,
+            enqueued_at: self.enqueued_at,
+        }
+    }
+}
+
+/// The four feedback queues of one meta-scheduler.
+#[derive(Clone, Debug, Default)]
+pub struct MultilevelQueue {
+    queues: [Vec<MetaJob>; N_QUEUES],
+    /// Aging halflife (s); 0 disables (§X re-prioritization only).
+    pub aging_halflife_s: f64,
+}
+
+impl MultilevelQueue {
+    pub fn new(aging_halflife_s: f64) -> MultilevelQueue {
+        MultilevelQueue { aging_halflife_s, ..Default::default() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.queues.iter().map(Vec::len).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queues.iter().all(Vec::is_empty)
+    }
+
+    pub fn queue_len(&self, q: usize) -> usize {
+        self.queues[q].len()
+    }
+
+    /// Insert an already-prioritized job into its range queue, keeping
+    /// the descending-priority / FCFS order.
+    pub fn insert(&mut self, job: MetaJob) {
+        let qi = queue_for_priority(job.priority);
+        let v = &mut self.queues[qi];
+        // Position: after all jobs with strictly greater priority, and
+        // after equal-priority jobs that are older (§X FCFS tie-break).
+        let pos = v
+            .iter()
+            .position(|x| {
+                x.priority < job.priority
+                    || (x.priority == job.priority
+                        && x.enqueued_at > job.enqueued_at)
+            })
+            .unwrap_or(v.len());
+        v.insert(pos, job);
+    }
+
+    /// Snapshot of everything queued (for re-prioritization sweeps).
+    pub fn all_facts(&self) -> Vec<QueuedFacts> {
+        let mut out = Vec::with_capacity(self.len());
+        for q in &self.queues {
+            out.extend(q.iter().map(MetaJob::facts));
+        }
+        out
+    }
+
+    /// Stage a job without maintaining order — ONLY valid when an
+    /// `apply` sweep follows immediately (batch enqueue path); keeps the
+    /// §VIII bulk arrival O(n log n) instead of O(n²).
+    pub fn stage(&mut self, job: MetaJob) {
+        self.queues[queue_for_priority(job.priority)].push(job);
+    }
+
+    /// Apply a re-prioritization sweep: every job gets its new priority
+    /// and is re-bucketed (jobs may move up or down, §X). One global
+    /// sort instead of per-job positional inserts.
+    pub fn apply(&mut self, assignments: &[Assignment]) {
+        let mut jobs: Vec<MetaJob> = Vec::with_capacity(self.len());
+        for q in &mut self.queues {
+            jobs.append(q);
+        }
+        let new_pr: std::collections::HashMap<u64, f32> = assignments
+            .iter()
+            .map(|a| (a.job.0, a.priority))
+            .collect();
+        for j in &mut jobs {
+            if let Some(&p) = new_pr.get(&j.job.0) {
+                j.priority = p;
+            }
+        }
+        // Descending priority, FCFS (older first) within equal priority.
+        jobs.sort_by(|a, b| {
+            b.priority
+                .partial_cmp(&a.priority)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.enqueued_at.partial_cmp(&b.enqueued_at).unwrap())
+        });
+        for j in jobs {
+            // Already globally sorted → plain push keeps queue order.
+            self.queues[queue_for_priority(j.priority)].push(j);
+        }
+    }
+
+    /// Pop the best job for dispatch: highest non-empty queue first; the
+    /// dispatch order inside uses the *aged* priority so long-waiting
+    /// jobs percolate forward (§VII) while queue membership stays §X.
+    pub fn pop_best(&mut self, now: f64) -> Option<MetaJob> {
+        for q in &mut self.queues {
+            if q.is_empty() {
+                continue;
+            }
+            let hl = self.aging_halflife_s;
+            let idx = if hl > 0.0 {
+                let mut best = 0;
+                let mut best_key = f32::NEG_INFINITY;
+                for (i, j) in q.iter().enumerate() {
+                    let aged =
+                        aged_priority(j.priority, now - j.enqueued_at, hl);
+                    if aged > best_key {
+                        best_key = aged;
+                        best = i;
+                    }
+                }
+                best
+            } else {
+                0
+            };
+            return Some(q.remove(idx));
+        }
+        None
+    }
+
+    /// Peek the job that `pop_best` would return.
+    pub fn peek_best(&self, now: f64) -> Option<&MetaJob> {
+        for q in &self.queues {
+            if q.is_empty() {
+                continue;
+            }
+            let hl = self.aging_halflife_s;
+            if hl > 0.0 {
+                return q.iter().max_by(|a, b| {
+                    let ka = aged_priority(a.priority, now - a.enqueued_at, hl);
+                    let kb = aged_priority(b.priority, now - b.enqueued_at, hl);
+                    ka.partial_cmp(&kb).unwrap()
+                });
+            }
+            return q.first();
+        }
+        None
+    }
+
+    /// §IX "jobsAhead": queued jobs that would be dispatched before a job
+    /// with priority `pr` enqueued at `enqueued_at` — strictly higher
+    /// priority, or equal priority with an earlier FCFS timestamp. Peers
+    /// evaluate an arriving job with `enqueued_at = +inf` (it would join
+    /// the back of its priority class).
+    pub fn jobs_ahead(&self, pr: f32, enqueued_at: f64) -> usize {
+        self.queues
+            .iter()
+            .flatten()
+            .filter(|j| {
+                j.priority > pr
+                    || (j.priority == pr && j.enqueued_at < enqueued_at)
+            })
+            .count()
+    }
+
+    /// Drain up to `max` *low-priority* jobs (Q4 first, then Q3) for
+    /// migration — §X: "only low priority jobs are migrated". When the
+    /// population is priority-degenerate (one user, uniform jobs → all
+    /// Pr = 0 in Q2), fall back to the back of the lowest non-empty
+    /// queue: under congestion the §X intent — shed the least-deserving
+    /// work — still holds, and the back of a FCFS queue is exactly that.
+    pub fn drain_low_priority(&mut self, max: usize) -> Vec<MetaJob> {
+        let mut out = Vec::new();
+        for qi in [3, 2] {
+            while out.len() < max {
+                match self.queues[qi].pop() {
+                    Some(j) => out.push(j),
+                    None => break,
+                }
+            }
+        }
+        if out.is_empty() {
+            for qi in [1, 0] {
+                while out.len() < max {
+                    match self.queues[qi].pop() {
+                        Some(j) => out.push(j),
+                        None => break,
+                    }
+                }
+                if !out.is_empty() {
+                    break;
+                }
+            }
+        }
+        out
+    }
+
+    /// Remove a specific job (e.g. accepted by a remote site).
+    pub fn remove(&mut self, job: JobId) -> Option<MetaJob> {
+        for q in &mut self.queues {
+            if let Some(pos) = q.iter().position(|j| j.job == job) {
+                return Some(q.remove(pos));
+            }
+        }
+        None
+    }
+
+    /// Iterate all queued jobs (Q1 → Q4, in-queue order).
+    pub fn iter(&self) -> impl Iterator<Item = &MetaJob> {
+        self.queues.iter().flatten()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mj(id: u64, pr: f32, at: f64) -> MetaJob {
+        MetaJob {
+            job: JobId(id),
+            user: UserId(1),
+            procs: 1,
+            quota: 1000.0,
+            priority: pr,
+            enqueued_at: at,
+        }
+    }
+
+    #[test]
+    fn insert_routes_to_range_queue() {
+        let mut m = MultilevelQueue::new(0.0);
+        m.insert(mj(1, 0.7, 0.0));
+        m.insert(mj(2, 0.2, 0.0));
+        m.insert(mj(3, -0.2, 0.0));
+        m.insert(mj(4, -0.7, 0.0));
+        assert_eq!(
+            [m.queue_len(0), m.queue_len(1), m.queue_len(2), m.queue_len(3)],
+            [1, 1, 1, 1]
+        );
+    }
+
+    #[test]
+    fn pop_best_highest_queue_first() {
+        let mut m = MultilevelQueue::new(0.0);
+        m.insert(mj(1, -0.7, 0.0));
+        m.insert(mj(2, 0.6, 1.0));
+        m.insert(mj(3, 0.1, 2.0));
+        assert_eq!(m.pop_best(10.0).unwrap().job, JobId(2));
+        assert_eq!(m.pop_best(10.0).unwrap().job, JobId(3));
+        assert_eq!(m.pop_best(10.0).unwrap().job, JobId(1));
+        assert!(m.pop_best(10.0).is_none());
+    }
+
+    #[test]
+    fn fcfs_tie_break_within_queue() {
+        let mut m = MultilevelQueue::new(0.0);
+        m.insert(mj(1, 0.3, 5.0));
+        m.insert(mj(2, 0.3, 1.0)); // older, same priority → first
+        m.insert(mj(3, 0.4, 9.0)); // higher priority → very first
+        assert_eq!(m.pop_best(10.0).unwrap().job, JobId(3));
+        assert_eq!(m.pop_best(10.0).unwrap().job, JobId(2));
+        assert_eq!(m.pop_best(10.0).unwrap().job, JobId(1));
+    }
+
+    #[test]
+    fn jobs_ahead_counts_priority_then_fcfs() {
+        let mut m = MultilevelQueue::new(0.0);
+        m.insert(mj(1, 0.9, 0.0));
+        m.insert(mj(2, 0.3, 5.0));
+        m.insert(mj(3, -0.3, 0.0));
+        assert_eq!(m.jobs_ahead(0.0, f64::INFINITY), 2);
+        assert_eq!(m.jobs_ahead(0.3, f64::INFINITY), 2); // ties ahead
+        assert_eq!(m.jobs_ahead(0.3, 1.0), 1); // older than the tie
+        assert_eq!(m.jobs_ahead(1.0, f64::INFINITY), 0);
+    }
+
+    #[test]
+    fn drain_low_priority_takes_q4_then_q3() {
+        let mut m = MultilevelQueue::new(0.0);
+        m.insert(mj(1, 0.9, 0.0));
+        m.insert(mj(2, -0.3, 0.0));
+        m.insert(mj(3, -0.8, 0.0));
+        m.insert(mj(4, -0.9, 0.0));
+        let drained = m.drain_low_priority(3);
+        assert_eq!(drained.len(), 3);
+        // Q4 jobs first (3 and 4), then the Q3 job (2).
+        assert!(drained[..2].iter().all(|j| j.priority < -0.5));
+        assert_eq!(drained[2].job, JobId(2));
+        assert_eq!(m.len(), 1); // the high-priority job stays
+    }
+
+    #[test]
+    fn apply_rebuckets_jobs() {
+        let mut m = MultilevelQueue::new(0.0);
+        m.insert(mj(1, 0.2, 0.0));
+        m.insert(mj(2, 0.1, 1.0));
+        // Sweep: job 1 rises to Q1, job 2 falls to Q4.
+        m.apply(&[
+            Assignment { job: JobId(1), priority: 0.8, queue: 0 },
+            Assignment { job: JobId(2), priority: -0.9, queue: 3 },
+        ]);
+        assert_eq!(m.queue_len(0), 1);
+        assert_eq!(m.queue_len(1), 0);
+        assert_eq!(m.queue_len(3), 1);
+    }
+
+    #[test]
+    fn aging_lets_old_job_jump_within_queue() {
+        let mut m = MultilevelQueue::new(60.0);
+        m.insert(mj(1, 0.4, 1000.0)); // fresh, higher pr
+        m.insert(mj(2, 0.1, 0.0));    // ancient, lower pr
+        // At t=1000, job 2 has waited 1000 s ≫ halflife → aged ≈ 1.
+        assert_eq!(m.pop_best(1000.0).unwrap().job, JobId(2));
+    }
+
+    #[test]
+    fn remove_specific_job() {
+        let mut m = MultilevelQueue::new(0.0);
+        m.insert(mj(1, 0.2, 0.0));
+        m.insert(mj(2, -0.6, 0.0));
+        assert!(m.remove(JobId(2)).is_some());
+        assert!(m.remove(JobId(2)).is_none());
+        assert_eq!(m.len(), 1);
+    }
+}

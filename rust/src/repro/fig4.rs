@@ -1,0 +1,132 @@
+//! Fig 4 (table): "Job groups and execution improvements" — 10 000 × 1 h
+//! jobs over sites A/B/C/D with 100/200/400/600 CPUs; splitting the bulk
+//! group into more subgroups reduces total execution time
+//! (paper: 16.6 h → 10 h → 8.5 h).
+//!
+//! Two reproductions:
+//!  1. *analytic* — the §VIII arithmetic on the bulk planner's actual
+//!     allocations;
+//!  2. *simulated* — the full DES on the fig4 grid (scaled to 1/10 the
+//!     jobs with 1/10 the CPUs per site to keep the test quick: the
+//!     ratio, which is what the table shows, is identical).
+
+use anyhow::Result;
+
+use crate::bulk::{makespan_hours_continuous, plan_group};
+use crate::config::presets;
+use crate::coordinator::{run_simulation_with, generate_workload};
+use crate::cost::RustEngine;
+use crate::data::Catalog;
+use crate::metrics::render_table;
+use crate::network::{PingerMonitor, Topology};
+use crate::scheduler::{DianaScheduler, GridView, SiteSnapshot};
+
+/// The §VIII allocation for a given division factor, via the real bulk
+/// planner, then the continuous makespan (the paper's arithmetic).
+fn analytic_makespan(division: usize) -> Result<(Vec<usize>, f64)> {
+    let cfg = presets::fig4_grid();
+    let topo = Topology::from_config(&cfg);
+    let monitor = PingerMonitor::new(&topo, 0.0, 1);
+    let catalog = Catalog::new();
+    let snaps: Vec<SiteSnapshot> = cfg
+        .sites
+        .iter()
+        .map(|s| SiteSnapshot {
+            queue_len: 0,
+            capability: s.capability(),
+            load: 0.0,
+            free_slots: s.cpus,
+            cpus: s.cpus,
+            alive: true,
+        })
+        .collect();
+    let view = GridView {
+        now: 0.0,
+        sites: &snaps,
+        monitor: &monitor,
+        catalog: &catalog,
+        q_total: 10_000, // the bulk being scheduled is the queue pressure
+    };
+    let mut gen = crate::workload::WorkloadGen::new(4);
+    let mut sub = gen.bulk(&cfg, &catalog, crate::job::UserId(0), 0, 0.0, 10_000);
+    sub.group.division_factor = division;
+    sub.group.max_per_site = 0;
+    let mut picker = DianaScheduler::new(Box::new(RustEngine::new()),
+                                         cfg.scheduler.clone());
+    let plan = plan_group(&mut picker, &sub.group, &sub.jobs, &view)?;
+    let mut per_site = vec![0usize; 4];
+    let mut pairs = Vec::new();
+    for (site, idxs) in &plan.assignments {
+        per_site[*site] = idxs.len();
+        pairs.push((cfg.sites[*site].cpus, idxs.len()));
+    }
+    Ok((per_site, makespan_hours_continuous(&pairs, 1.0)))
+}
+
+/// Full-DES makespan on the 1/10-scaled fig4 grid.
+fn simulated_makespan(division: usize) -> Result<f64> {
+    let mut cfg = presets::fig4_grid();
+    for s in &mut cfg.sites {
+        s.cpus /= 10; // 10/20/40/60
+    }
+    cfg.workload.jobs = 1000;
+    cfg.workload.bulk_size = 1000;
+    cfg.scheduler.group_division_factor = division;
+    cfg.scheduler.max_migrations = 0; // isolate the splitting effect
+    let subs = generate_workload(&cfg);
+    let (_, report) = run_simulation_with(&cfg, subs)?;
+    Ok(report.makespan_s / 3600.0)
+}
+
+pub fn run() -> Result<String> {
+    let mut out = String::from(
+        "== Fig 4: job groups and execution improvement ==\n\
+         10,000 x 1h jobs; sites A/B/C/D = 100/200/400/600 CPUs.\n\
+         Paper reports: 1 group -> 16.6 h; 2 -> 10 h; 10 -> 8.5 h.\n\n",
+    );
+    let mut rows = Vec::new();
+    let paper = [(1usize, 16.6), (2, 10.0), (10, 8.5)];
+    let mut measured = Vec::new();
+    for (division, paper_h) in paper {
+        let (alloc, analytic) = analytic_makespan(division)?;
+        let sim = simulated_makespan(division)?;
+        measured.push(analytic);
+        rows.push(vec![
+            division.to_string(),
+            format!("{}/{}/{}/{}", alloc[0], alloc[1], alloc[2], alloc[3]),
+            format!("{paper_h:.1}"),
+            format!("{analytic:.2}"),
+            format!("{sim:.2}"),
+        ]);
+    }
+    out.push_str(&render_table(
+        &["groups", "alloc A/B/C/D", "paper (h)", "analytic (h)", "DES (h)"],
+        &rows,
+    ));
+    let monotone = measured.windows(2).all(|w| w[1] <= w[0] + 1e-9);
+    out.push_str(&format!(
+        "\nshape check — more groups never slower: {monotone}\n\
+         (paper row 3 assumes the 1000/2000/3000/4000 allocation; our\n\
+         capability-proportional split achieves the optimum ~7.7 h)\n",
+    ));
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn fig4_shape_reproduced() {
+        let report = super::run().unwrap();
+        assert!(report.contains("never slower: true"), "{report}");
+    }
+
+    #[test]
+    fn analytic_rows_match_paper_band() {
+        let (_, one) = super::analytic_makespan(1).unwrap();
+        assert!((one - 16.666).abs() < 0.05, "one-group {one}");
+        let (_, two) = super::analytic_makespan(2).unwrap();
+        assert!((two - 10.0).abs() < 0.5, "two-group {two}");
+        let (_, ten) = super::analytic_makespan(10).unwrap();
+        assert!(ten < 8.6, "ten-group {ten}"); // paper: 8.5
+    }
+}

@@ -1,0 +1,12 @@
+//! Figure/table reproduction harness: one module per §XI figure (plus
+//! the worked examples), each printing paper-vs-measured series.
+//! See DESIGN.md §5 for the experiment index.
+
+pub mod fig3;
+pub mod fig4;
+pub mod fig6;
+pub mod fig78;
+pub mod fig91011;
+pub mod runner;
+
+pub use runner::{available_figures, run_figure};

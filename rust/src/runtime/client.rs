@@ -1,0 +1,170 @@
+//! PJRT runtime: load the AOT HLO-text artifacts, compile them once on
+//! the CPU PJRT client, and execute them from the coordinator hot path.
+//!
+//! Interchange is HLO *text* (see python/compile/aot.py and
+//! /opt/xla-example/README.md): jax ≥ 0.5 emits 64-bit instruction ids in
+//! serialized protos which xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// Artifact names produced by `make artifacts`.
+pub const COST_MATRIX_HLO: &str = "cost_matrix.hlo.txt";
+pub const COST_MATRIX_SMALL_HLO: &str = "cost_matrix_small.hlo.txt";
+pub const PRIORITY_HLO: &str = "priority.hlo.txt";
+
+/// Resolve the artifacts directory: `$DIANA_ARTIFACTS`, else `artifacts/`
+/// relative to the current dir, else relative to the crate root.
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("DIANA_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    let cwd = PathBuf::from("artifacts");
+    if cwd.exists() {
+        return cwd;
+    }
+    // Fall back to the workspace root (tests run from target dirs).
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+pub fn artifacts_available() -> bool {
+    let dir = artifacts_dir();
+    dir.join(COST_MATRIX_HLO).exists() && dir.join(PRIORITY_HLO).exists()
+}
+
+/// A compiled PJRT program.
+pub struct Program {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Program {
+    pub fn execute(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(args)
+            .with_context(|| format!("executing {}", self.name))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching {} result", self.name))?;
+        Ok(tuple.to_tuple()?)
+    }
+}
+
+/// The shared PJRT client plus the compiled DIANA programs.
+pub struct Runtime {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    pub cost_matrix: Program,
+    /// §Perf: small-batch variant (J=8) for singleton evaluations; falls
+    /// back to the big tile when the artifact predates the variant.
+    pub cost_matrix_small: Option<Program>,
+    pub priority: Program,
+}
+
+impl Runtime {
+    /// Load + compile both artifacts from the default directory.
+    pub fn load_default() -> Result<Runtime> {
+        Self::load(&artifacts_dir())
+    }
+
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let compile = |file: &str| -> Result<Program> {
+            let path = dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {file}"))?;
+            Ok(Program { exe, name: file.to_string() })
+        };
+        let cost_matrix_small = if dir.join(COST_MATRIX_SMALL_HLO).exists() {
+            Some(compile(COST_MATRIX_SMALL_HLO)?)
+        } else {
+            None
+        };
+        Ok(Runtime {
+            cost_matrix: compile(COST_MATRIX_HLO)?,
+            cost_matrix_small,
+            priority: compile(PRIORITY_HLO)?,
+            client,
+        })
+    }
+}
+
+/// Build a rank-2 f32 literal from a row-major slice.
+pub fn literal_2d(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    anyhow::ensure!(data.len() == rows * cols, "shape mismatch");
+    Ok(xla::Literal::vec1(data).reshape(&[rows as i64, cols as i64])?)
+}
+
+/// Build a rank-1 f32 literal.
+pub fn literal_1d(data: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // These tests need `make artifacts` to have run; they are skipped
+    // (not failed) otherwise so `cargo test` works on a fresh checkout.
+    fn runtime() -> Option<Runtime> {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(Runtime::load_default().expect("artifacts exist but failed to load"))
+    }
+
+    #[test]
+    fn loads_and_compiles_artifacts() {
+        let Some(rt) = runtime() else { return };
+        assert_eq!(rt.cost_matrix.name, COST_MATRIX_HLO);
+        assert_eq!(rt.priority.name, PRIORITY_HLO);
+        assert!(rt.cost_matrix_small.is_some(),
+                "small-tile variant missing — rerun `make artifacts`");
+    }
+
+    #[test]
+    fn missing_artifacts_dir_is_a_clean_error() {
+        match Runtime::load(std::path::Path::new("/nonexistent-dir")) {
+            Ok(_) => panic!("loaded from a nonexistent dir"),
+            Err(e) => {
+                let msg = format!("{e:#}");
+                assert!(msg.contains("nonexistent-dir"), "{msg}");
+            }
+        }
+    }
+
+    #[test]
+    fn priority_program_runs_fig6() {
+        let Some(rt) = runtime() else { return };
+        // Pad the Fig-6 trio to the AOT queue shape.
+        let mut jobs = vec![0.0f32; 512 * 4];
+        for (i, row) in [[2.0, 1.0, 1900.0, 0.0],
+                         [2.0, 5.0, 1900.0, 0.0],
+                         [1.0, 1.0, 1700.0, 0.0]].iter().enumerate() {
+            jobs[i * 4..(i + 1) * 4].copy_from_slice(row);
+        }
+        for r in 3..512 {
+            jobs[r * 4 + 1] = 1.0;
+        }
+        let args = vec![
+            literal_2d(&jobs, 512, 4).unwrap(),
+            literal_1d(&[7.0, 3600.0, 3.0, 0.0]),
+        ];
+        let out = rt.priority.execute(&args).unwrap();
+        assert_eq!(out.len(), 2);
+        let pr: Vec<f32> = out[0].to_vec().unwrap();
+        assert!((pr[0] - 0.4586).abs() < 1e-4);
+        assert!((pr[1] + 0.6305).abs() < 1e-4);
+        assert!((pr[2] - 0.6974).abs() < 1e-4);
+        let qi: Vec<i32> = out[1].to_vec().unwrap();
+        assert_eq!(&qi[..3], &[1, 3, 0]);
+    }
+}

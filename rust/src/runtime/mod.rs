@@ -1,0 +1,11 @@
+//! PJRT runtime: artifact loading/compilation, shape padding and the
+//! XLA-backed `CostEngine`.
+
+pub mod client;
+pub mod pad;
+pub mod xla_engine;
+
+pub use client::{artifacts_available, artifacts_dir, Program, Runtime};
+pub use pad::{pad_inputs, pad_queue, tiles, unpad_matrix, AOT_JOBS,
+              AOT_QUEUE, AOT_SITES};
+pub use xla_engine::{make_engine, XlaEngine};

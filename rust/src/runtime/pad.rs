@@ -1,0 +1,152 @@
+//! Shape padding between dynamic coordinator batches and the fixed AOT
+//! artifact shapes (J=256, S=32, L=512 — see python/compile/model.py).
+//!
+//! Padding rules (mirrored in DESIGN.md §6):
+//!  * sites  → padded rows are dead (`alive = 0`) so their cost is +BIG
+//!    and argmin never selects them while any real site is alive;
+//!  * jobs   → zero rows with link_bw = 1 (finite, sliced off afterwards);
+//!  * queue  → zero rows (Pr = 0, sliced off afterwards).
+
+use crate::cost::{CostInputs, JOB_FEATS, SITE_FEATS};
+
+/// AOT shapes — must match python/compile/model.py.
+pub const AOT_JOBS: usize = 256;
+pub const AOT_JOBS_SMALL: usize = 8;
+pub const AOT_SITES: usize = 32;
+pub const AOT_QUEUE: usize = 512;
+
+/// Pad one batch of cost inputs to (AOT_JOBS, AOT_SITES).
+pub fn pad_inputs(inp: &CostInputs) -> CostInputs {
+    pad_inputs_to(inp, AOT_JOBS)
+}
+
+/// Pad to an arbitrary AOT job tile (the §Perf small variant uses J=8).
+/// Panics if `n_sites > AOT_SITES` or `n_jobs > aot_jobs` (the engine
+/// tiles bigger batches *before* padding).
+pub fn pad_inputs_to(inp: &CostInputs, aot_jobs: usize) -> CostInputs {
+    assert!(inp.n_jobs <= aot_jobs, "job tile too large: {}", inp.n_jobs);
+    assert!(inp.n_sites <= AOT_SITES, "too many sites: {}", inp.n_sites);
+    let mut out = CostInputs::new(aot_jobs, AOT_SITES);
+    for j in 0..inp.n_jobs {
+        out.job_feats[j * JOB_FEATS..(j + 1) * JOB_FEATS]
+            .copy_from_slice(&inp.job_feats[j * JOB_FEATS..(j + 1) * JOB_FEATS]);
+    }
+    for s in 0..inp.n_sites {
+        out.site_feats[s * SITE_FEATS..(s + 1) * SITE_FEATS].copy_from_slice(
+            &inp.site_feats[s * SITE_FEATS..(s + 1) * SITE_FEATS],
+        );
+    }
+    // Padded sites stay all-zero: alive = 0 → +BIG in the kernel.
+    for j in 0..inp.n_jobs {
+        for s in 0..inp.n_sites {
+            out.link_bw[j * AOT_SITES + s] = inp.link_bw[j * inp.n_sites + s];
+            out.link_loss[j * AOT_SITES + s] =
+                inp.link_loss[j * inp.n_sites + s];
+        }
+    }
+    out
+}
+
+/// Slice a padded [AOT_JOBS × AOT_SITES] matrix back to [j × s].
+pub fn unpad_matrix(m: &[f32], j: usize, s: usize) -> Vec<f32> {
+    let mut out = vec![0.0; j * s];
+    for row in 0..j {
+        out[row * s..(row + 1) * s]
+            .copy_from_slice(&m[row * AOT_SITES..row * AOT_SITES + s]);
+    }
+    out
+}
+
+/// Pad a [L × 4] priority-job matrix to [AOT_QUEUE × 4].
+pub fn pad_queue(jobs: &[f32]) -> Vec<f32> {
+    assert_eq!(jobs.len() % 4, 0);
+    let l = jobs.len() / 4;
+    assert!(l <= AOT_QUEUE, "queue tile too large: {l}");
+    let mut out = vec![0.0f32; AOT_QUEUE * 4];
+    out[..jobs.len()].copy_from_slice(jobs);
+    // Padded rows: t = 1 keeps the division benign (Pr = 0, discarded).
+    for row in l..AOT_QUEUE {
+        out[row * 4 + 1] = 1.0;
+    }
+    out
+}
+
+/// Split `n` items into tiles of at most `cap`.
+pub fn tiles(n: usize, cap: usize) -> Vec<std::ops::Range<usize>> {
+    let mut out = Vec::new();
+    let mut start = 0;
+    while start < n {
+        let end = (start + cap).min(n);
+        out.push(start..end);
+        start = end;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::{schedule_step_rust, Weights};
+
+    #[test]
+    fn padded_run_matches_unpadded() {
+        // The padded problem must give identical answers on the real rows.
+        let mut inp = CostInputs::new(3, 2);
+        inp.job_row_mut(0).copy_from_slice(&[100.0, 1.0, 1.0, 60.0, 2.0, 0.0]);
+        inp.job_row_mut(1).copy_from_slice(&[0.0, 1.0, 1.0, 60.0, 0.0, 0.0]);
+        inp.job_row_mut(2).copy_from_slice(&[50.0, 2.0, 1.0, 30.0, 1.0, 0.0]);
+        inp.site_row_mut(0)
+            .copy_from_slice(&[1.0, 10.0, 0.2, 100.0, 0.01, 1.0, 0.0, 0.0]);
+        inp.site_row_mut(1)
+            .copy_from_slice(&[5.0, 20.0, 0.8, 200.0, 0.02, 1.0, 0.0, 0.0]);
+        for v in inp.link_bw.iter_mut() {
+            *v = 123.0;
+        }
+        for v in inp.link_loss.iter_mut() {
+            *v = 0.01;
+        }
+        let w = Weights { q_total: 6.0, ..Weights::default() };
+
+        let direct = schedule_step_rust(&inp, &w);
+        let padded = schedule_step_rust(&pad_inputs(&inp), &w);
+
+        let total = unpad_matrix(&padded.total, 3, 2);
+        for i in 0..6 {
+            assert!((total[i] - direct.total[i]).abs() < 1e-3,
+                    "{i}: {} vs {}", total[i], direct.total[i]);
+        }
+        for j in 0..3 {
+            assert_eq!(padded.best_total[j], direct.best_total[j]);
+            assert_eq!(padded.best_compute[j], direct.best_compute[j]);
+            assert_eq!(padded.best_data[j], direct.best_data[j]);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "too many sites")]
+    fn too_many_sites_panics() {
+        pad_inputs(&CostInputs::new(1, AOT_SITES + 1));
+    }
+
+    #[test]
+    fn queue_padding_is_benign() {
+        let jobs = vec![2.0, 1.0, 1900.0, 0.0];
+        let padded = pad_queue(&jobs);
+        assert_eq!(padded.len(), AOT_QUEUE * 4);
+        assert_eq!(&padded[..4], &jobs[..]);
+        assert_eq!(padded[4 + 1], 1.0); // padded t = 1
+        let (pr, _) = crate::cost::reprioritize_rust(&padded,
+                                                     &[1.0, 1900.0, 1.0, 0.0]);
+        assert!((pr[0] - crate::priority::pr(2.0, 1900.0, 1.0, 1.0, 1900.0))
+            .abs() < 1e-6);
+        assert!(pr[1..].iter().all(|&p| p == 0.0)); // padded rows inert
+    }
+
+    #[test]
+    fn tiling_covers_everything() {
+        assert_eq!(tiles(0, 256).len(), 0);
+        assert_eq!(tiles(256, 256), vec![0..256]);
+        let t = tiles(600, 256);
+        assert_eq!(t, vec![0..256, 256..512, 512..600]);
+    }
+}

@@ -1,0 +1,245 @@
+//! `XlaEngine`: the `CostEngine` backed by the AOT-compiled JAX/Pallas
+//! artifacts — the production hot path. Bigger batches tile over the
+//! fixed AOT shapes; smaller ones are padded (see `pad`).
+
+use anyhow::Result;
+
+use crate::cost::{CostEngine, CostInputs, ScheduleOut, Weights, JOB_FEATS,
+                  SITE_FEATS};
+
+use super::client::{literal_1d, literal_2d, Runtime};
+use super::pad::{pad_inputs_to, pad_queue, tiles, unpad_matrix, AOT_JOBS,
+                 AOT_JOBS_SMALL, AOT_QUEUE, AOT_SITES};
+
+pub struct XlaEngine {
+    rt: Runtime,
+}
+
+impl XlaEngine {
+    pub fn load_default() -> Result<XlaEngine> {
+        Ok(XlaEngine { rt: Runtime::load_default()? })
+    }
+
+    pub fn new(rt: Runtime) -> XlaEngine {
+        XlaEngine { rt }
+    }
+
+    fn run_tile(&mut self, inp: &CostInputs, w: &Weights) -> Result<ScheduleOut> {
+        // §Perf: singleton/representative evaluations (migration checks,
+        // per-group cost rows) route to the J=8 variant — 32× less
+        // padded compute per call.
+        let (program, tile_jobs) = if inp.n_jobs <= AOT_JOBS_SMALL
+            && self.rt.cost_matrix_small.is_some()
+        {
+            (self.rt.cost_matrix_small.as_ref().unwrap(), AOT_JOBS_SMALL)
+        } else {
+            (&self.rt.cost_matrix, AOT_JOBS)
+        };
+        let padded = pad_inputs_to(inp, tile_jobs);
+        let args = vec![
+            literal_2d(&padded.job_feats, tile_jobs, JOB_FEATS)?,
+            literal_2d(&padded.site_feats, AOT_SITES, SITE_FEATS)?,
+            literal_2d(&padded.link_bw, tile_jobs, AOT_SITES)?,
+            literal_2d(&padded.link_loss, tile_jobs, AOT_SITES)?,
+            literal_1d(&w.to_array()),
+        ];
+        let out = program.execute(&args)?;
+        anyhow::ensure!(out.len() == 7, "want 7-tuple, got {}", out.len());
+        let (nj, ns) = (inp.n_jobs, inp.n_sites);
+        let total_pad: Vec<f32> = out[0].to_vec()?;
+        let best_total: Vec<i32> = out[1].to_vec()?;
+        let best_compute: Vec<i32> = out[2].to_vec()?;
+        let best_data: Vec<i32> = out[3].to_vec()?;
+        let comp_pad: Vec<f32> = out[4].to_vec()?;
+        let dtc_pad: Vec<f32> = out[5].to_vec()?;
+        let net_pad: Vec<f32> = out[6].to_vec()?;
+        Ok(ScheduleOut {
+            n_jobs: nj,
+            n_sites: ns,
+            total: unpad_matrix(&total_pad, nj, ns),
+            best_total: best_total[..nj].to_vec(),
+            best_compute: best_compute[..nj].to_vec(),
+            best_data: best_data[..nj].to_vec(),
+            comp: comp_pad[..ns].to_vec(),
+            dtc: unpad_matrix(&dtc_pad, nj, ns),
+            net: unpad_matrix(&net_pad, nj, ns),
+        })
+    }
+}
+
+impl CostEngine for XlaEngine {
+    fn schedule_step(&mut self, inputs: &CostInputs, weights: &Weights)
+        -> Result<ScheduleOut> {
+        anyhow::ensure!(
+            inputs.n_sites <= AOT_SITES,
+            "XlaEngine supports ≤ {AOT_SITES} sites (got {})",
+            inputs.n_sites
+        );
+        if inputs.n_jobs <= AOT_JOBS {
+            return self.run_tile(inputs, weights);
+        }
+        // Tile big batches over the fixed job dimension.
+        let mut acc = ScheduleOut {
+            n_jobs: inputs.n_jobs,
+            n_sites: inputs.n_sites,
+            ..Default::default()
+        };
+        for range in tiles(inputs.n_jobs, AOT_JOBS) {
+            let mut tile = CostInputs::new(range.len(), inputs.n_sites);
+            tile.site_feats.copy_from_slice(&inputs.site_feats);
+            tile.job_feats.copy_from_slice(
+                &inputs.job_feats[range.start * JOB_FEATS..range.end * JOB_FEATS],
+            );
+            let (a, b) =
+                (range.start * inputs.n_sites, range.end * inputs.n_sites);
+            tile.link_bw.copy_from_slice(&inputs.link_bw[a..b]);
+            tile.link_loss.copy_from_slice(&inputs.link_loss[a..b]);
+            let out = self.run_tile(&tile, weights)?;
+            acc.total.extend(out.total);
+            acc.best_total.extend(out.best_total);
+            acc.best_compute.extend(out.best_compute);
+            acc.best_data.extend(out.best_data);
+            acc.dtc.extend(out.dtc);
+            acc.net.extend(out.net);
+            if acc.comp.is_empty() {
+                acc.comp = out.comp;
+            }
+        }
+        Ok(acc)
+    }
+
+    fn reprioritize(&mut self, jobs: &[f32], totals: &[f32; 4])
+        -> Result<(Vec<f32>, Vec<i32>)> {
+        assert_eq!(jobs.len() % 4, 0);
+        let l = jobs.len() / 4;
+        let mut pr = Vec::with_capacity(l);
+        let mut qi = Vec::with_capacity(l);
+        // Tile queues longer than the AOT shape (totals stay global).
+        for range in tiles(l, AOT_QUEUE) {
+            let padded = pad_queue(&jobs[range.start * 4..range.end * 4]);
+            let args = vec![
+                literal_2d(&padded, AOT_QUEUE, 4)?,
+                literal_1d(totals),
+            ];
+            let out = self.rt.priority.execute(&args)?;
+            anyhow::ensure!(out.len() == 2, "want 2-tuple");
+            let p: Vec<f32> = out[0].to_vec()?;
+            let q: Vec<i32> = out[1].to_vec()?;
+            pr.extend_from_slice(&p[..range.len()]);
+            qi.extend_from_slice(&q[..range.len()]);
+        }
+        Ok((pr, qi))
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}
+
+/// Build the configured engine: `Xla` (hard requirement), `Rust`, or
+/// `Auto` (XLA when artifacts exist, rust otherwise).
+pub fn make_engine(kind: crate::config::EngineKind)
+    -> Result<Box<dyn CostEngine>> {
+    use crate::config::EngineKind;
+    match kind {
+        EngineKind::Rust => Ok(Box::new(crate::cost::RustEngine::new())),
+        EngineKind::Xla => Ok(Box::new(XlaEngine::load_default()?)),
+        EngineKind::Auto => {
+            if super::client::artifacts_available() {
+                Ok(Box::new(XlaEngine::load_default()?))
+            } else {
+                log::warn!("artifacts missing — falling back to rust engine");
+                Ok(Box::new(crate::cost::RustEngine::new()))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::{schedule_step_rust, reprioritize_rust};
+    use crate::runtime::client::artifacts_available;
+    use crate::util::Pcg64;
+
+    fn engine() -> Option<XlaEngine> {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(XlaEngine::load_default().unwrap())
+    }
+
+    fn random_inputs(rng: &mut Pcg64, nj: usize, ns: usize) -> CostInputs {
+        let mut inp = CostInputs::new(nj, ns);
+        for j in 0..nj {
+            let row = inp.job_row_mut(j);
+            row[0] = rng.uniform(0.0, 30_000.0) as f32;
+            row[1] = rng.uniform(0.0, 2_000.0) as f32;
+            row[2] = rng.uniform(1.0, 200.0) as f32;
+            row[3] = rng.uniform(1.0, 7200.0) as f32;
+        }
+        for s in 0..ns {
+            let row = inp.site_row_mut(s);
+            row[0] = rng.below(500) as f32;
+            row[1] = rng.uniform(1.0, 600.0) as f32;
+            row[2] = rng.next_f64() as f32;
+            row[3] = rng.uniform(10.0, 10_000.0) as f32;
+            row[4] = rng.uniform(0.0, 0.1) as f32;
+            row[5] = 1.0;
+        }
+        for v in inp.link_bw.iter_mut() {
+            *v = rng.uniform(1.0, 10_000.0) as f32;
+        }
+        for v in inp.link_loss.iter_mut() {
+            *v = rng.uniform(0.0, 0.1) as f32;
+        }
+        inp
+    }
+
+    /// THE cross-check: XLA artifact vs pure-rust mirror to 1e-5 rel.
+    #[test]
+    fn xla_matches_rust_engine() {
+        let Some(mut e) = engine() else { return };
+        let mut rng = Pcg64::new(42);
+        for (nj, ns) in [(256, 32), (64, 5), (1, 1), (300, 7)] {
+            let inp = random_inputs(&mut rng, nj, ns);
+            let w = Weights { q_total: 321.0, ..Weights::default() };
+            let xla = e.schedule_step(&inp, &w).unwrap();
+            let rust = schedule_step_rust(&inp, &w);
+            assert_eq!(xla.best_total, rust.best_total, "({nj},{ns}) best");
+            assert_eq!(xla.best_compute, rust.best_compute);
+            assert_eq!(xla.best_data, rust.best_data);
+            for (a, b) in xla.total.iter().zip(&rust.total) {
+                let rel = (a - b).abs() / b.abs().max(1e-3);
+                assert!(rel < 1e-5, "({nj},{ns}): {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn xla_priority_matches_rust() {
+        let Some(mut e) = engine() else { return };
+        let mut rng = Pcg64::new(7);
+        for l in [1usize, 100, 512, 700] {
+            let mut jobs = Vec::with_capacity(l * 4);
+            for _ in 0..l {
+                jobs.extend_from_slice(&[
+                    rng.range_u64(1, 50) as f32,
+                    rng.range_u64(1, 32) as f32,
+                    rng.uniform(100.0, 5000.0) as f32,
+                    0.0,
+                ]);
+            }
+            let totals = [rng.uniform(50.0, 500.0) as f32,
+                          rng.uniform(1000.0, 50_000.0) as f32,
+                          l as f32, 0.0];
+            let (xp, xq) = e.reprioritize(&jobs, &totals).unwrap();
+            let (rp, rq) = reprioritize_rust(&jobs, &totals);
+            assert_eq!(xq, rq, "L={l}");
+            for (a, b) in xp.iter().zip(&rp) {
+                assert!((a - b).abs() < 1e-5, "L={l}: {a} vs {b}");
+            }
+        }
+    }
+}

@@ -1,0 +1,319 @@
+//! §XI / §III baseline policies DIANA is compared against.
+//!
+//! * [`FcfsBroker`] — the EGEE-WMS-like comparator of §XI: one global
+//!   FCFS queue, compute-only matchmaking (queue-per-capability), no
+//!   network or data awareness.
+//! * [`Greedy`] — "best single resource now" (§I's greedy strawman).
+//! * [`DataLocal`] — MyGrid-like, always moves the job to its data (§III).
+//! * [`RandomPick`] — uniform random alive site (sanity floor).
+
+use anyhow::Result;
+
+use crate::job::Job;
+use crate::util::Pcg64;
+
+use super::traits::{GridView, Placement, SitePicker};
+
+/// EGEE-like resource broker: rank sites by estimated queue delay
+/// `queue_len / capability` only (no network, no data).
+pub struct FcfsBroker;
+
+impl SitePicker for FcfsBroker {
+    fn pick(&mut self, jobs: &[Job], view: &GridView<'_>)
+        -> Result<Vec<Placement>> {
+        let best = view
+            .alive_sites()
+            .min_by(|&a, &b| {
+                let ka = view.sites[a].queue_len as f64
+                    / view.sites[a].capability.max(1e-9);
+                let kb = view.sites[b].queue_len as f64
+                    / view.sites[b].capability.max(1e-9);
+                ka.partial_cmp(&kb).unwrap()
+            })
+            .unwrap_or(0);
+        Ok(vec![best; jobs.len()])
+    }
+
+    fn rank_sites(&mut self, _job: &Job, view: &GridView<'_>)
+        -> Result<Vec<usize>> {
+        let mut order: Vec<usize> = view.alive_sites().collect();
+        order.sort_by(|&a, &b| {
+            let ka = view.sites[a].queue_len as f64
+                / view.sites[a].capability.max(1e-9);
+            let kb = view.sites[b].queue_len as f64
+                / view.sites[b].capability.max(1e-9);
+            ka.partial_cmp(&kb).unwrap()
+        });
+        Ok(order)
+    }
+
+    fn name(&self) -> &'static str {
+        "fcfs"
+    }
+}
+
+/// Greedy: the site with the most free slots right now, per job —
+/// no global-cost view, which is exactly the §I criticism.
+pub struct Greedy;
+
+impl SitePicker for Greedy {
+    fn pick(&mut self, jobs: &[Job], view: &GridView<'_>)
+        -> Result<Vec<Placement>> {
+        let best = view
+            .alive_sites()
+            .max_by_key(|&s| (view.sites[s].free_slots, view.sites[s].cpus))
+            .unwrap_or(0);
+        Ok(vec![best; jobs.len()])
+    }
+
+    fn rank_sites(&mut self, _job: &Job, view: &GridView<'_>)
+        -> Result<Vec<usize>> {
+        let mut order: Vec<usize> = view.alive_sites().collect();
+        order.sort_by_key(|&s| std::cmp::Reverse(view.sites[s].free_slots));
+        Ok(order)
+    }
+
+    fn name(&self) -> &'static str {
+        "greedy"
+    }
+}
+
+/// MyGrid-like: always run where the (best replica of the) data is;
+/// jobs without data fall back to the least-loaded site. §III: "results
+/// in long job queues and adds undesired load on the site".
+pub struct DataLocal;
+
+impl SitePicker for DataLocal {
+    fn pick(&mut self, jobs: &[Job], view: &GridView<'_>)
+        -> Result<Vec<Placement>> {
+        Ok(jobs
+            .iter()
+            .map(|job| match job.input {
+                Some(ds) => {
+                    let reps = &view.catalog.get(ds).replicas;
+                    // First *alive* replica site; data-local or bust.
+                    reps.iter()
+                        .copied()
+                        .find(|&s| view.sites[s].alive)
+                        .unwrap_or_else(|| {
+                            view.alive_sites().next().unwrap_or(0)
+                        })
+                }
+                None => view
+                    .alive_sites()
+                    .min_by(|&a, &b| {
+                        view.sites[a]
+                            .load
+                            .partial_cmp(&view.sites[b].load)
+                            .unwrap()
+                    })
+                    .unwrap_or(0),
+            })
+            .collect())
+    }
+
+    fn name(&self) -> &'static str {
+        "data-local"
+    }
+}
+
+/// Uniform random alive site.
+pub struct RandomPick {
+    rng: Pcg64,
+}
+
+impl RandomPick {
+    pub fn new(seed: u64) -> RandomPick {
+        RandomPick { rng: Pcg64::new(seed) }
+    }
+}
+
+impl SitePicker for RandomPick {
+    fn pick(&mut self, jobs: &[Job], view: &GridView<'_>)
+        -> Result<Vec<Placement>> {
+        let alive: Vec<usize> = view.alive_sites().collect();
+        Ok(jobs
+            .iter()
+            .map(|_| {
+                if alive.is_empty() {
+                    0
+                } else {
+                    alive[self.rng.below(alive.len() as u64) as usize]
+                }
+            })
+            .collect())
+    }
+
+    fn name(&self) -> &'static str {
+        "random"
+    }
+}
+
+/// Build the picker configured by `Policy` (DIANA needs an engine).
+pub fn make_picker(
+    policy: crate::config::Policy,
+    engine: Box<dyn crate::cost::CostEngine>,
+    cfg: &crate::config::SchedulerConfig,
+    seed: u64,
+) -> Box<dyn SitePicker> {
+    use crate::config::Policy;
+    match policy {
+        Policy::Diana => {
+            Box::new(super::diana::DianaScheduler::new(engine, cfg.clone()))
+        }
+        Policy::FcfsBroker => Box::new(FcfsBroker),
+        Policy::Greedy => Box::new(Greedy),
+        Policy::DataLocal => Box::new(DataLocal),
+        Policy::Random => Box::new(RandomPick::new(seed)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::data::Catalog;
+    use crate::job::{JobClass, JobId, UserId};
+    use crate::network::{PingerMonitor, Topology};
+    use crate::scheduler::traits::SiteSnapshot;
+
+    fn snap(free: usize, queue: usize, alive: bool) -> SiteSnapshot {
+        SiteSnapshot {
+            queue_len: queue,
+            capability: 8.0,
+            load: (8 - free) as f64 / 8.0,
+            free_slots: free,
+            cpus: 8,
+            alive,
+        }
+    }
+
+    fn job(input: Option<usize>) -> Job {
+        Job {
+            id: JobId(1),
+            user: UserId(1),
+            group: None,
+            class: JobClass::Both,
+            input,
+            in_mb: 100.0,
+            out_mb: 1.0,
+            exe_mb: 1.0,
+            cpu_sec: 60.0,
+            procs: 1,
+            submit_site: 0,
+            submit_time: 0.0,
+            quota: 1.0,
+            migrations: 0,
+        }
+    }
+
+    struct Fx {
+        monitor: PingerMonitor,
+        catalog: Catalog,
+    }
+
+    fn fx() -> Fx {
+        let cfg = presets::uniform_grid(3, 8);
+        let topo = Topology::from_config(&cfg);
+        let monitor = PingerMonitor::new(&topo, 0.0, 1);
+        let mut catalog = Catalog::new();
+        catalog.add("d", 100.0, vec![2]);
+        Fx { monitor, catalog }
+    }
+
+    #[test]
+    fn fcfs_picks_min_queue_per_capability() {
+        let f = fx();
+        let sites = [snap(0, 10, true), snap(0, 2, true), snap(0, 5, true)];
+        let view = GridView {
+            now: 0.0,
+            sites: &sites,
+            monitor: &f.monitor,
+            catalog: &f.catalog,
+            q_total: 17,
+        };
+        assert_eq!(FcfsBroker.pick(&[job(None)], &view).unwrap(), vec![1]);
+        let order = FcfsBroker.rank_sites(&job(None), &view).unwrap();
+        assert_eq!(order, vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn greedy_picks_most_free() {
+        let f = fx();
+        let sites = [snap(1, 0, true), snap(7, 0, true), snap(3, 0, true)];
+        let view = GridView {
+            now: 0.0,
+            sites: &sites,
+            monitor: &f.monitor,
+            catalog: &f.catalog,
+            q_total: 0,
+        };
+        assert_eq!(Greedy.pick(&[job(None)], &view).unwrap(), vec![1]);
+    }
+
+    #[test]
+    fn data_local_follows_replica() {
+        let f = fx();
+        let sites = [snap(8, 0, true), snap(8, 0, true), snap(0, 99, true)];
+        let view = GridView {
+            now: 0.0,
+            sites: &sites,
+            monitor: &f.monitor,
+            catalog: &f.catalog,
+            q_total: 99,
+        };
+        let ds = f.catalog.lookup("d");
+        // Even with a huge queue at site 2, data-local goes there.
+        assert_eq!(DataLocal.pick(&[job(ds)], &view).unwrap(), vec![2]);
+        // No data → least loaded.
+        assert_eq!(DataLocal.pick(&[job(None)], &view).unwrap(), vec![0]);
+    }
+
+    #[test]
+    fn dead_sites_avoided_by_all() {
+        let f = fx();
+        let sites = [snap(8, 0, false), snap(1, 5, true), snap(2, 3, true)];
+        let view = GridView {
+            now: 0.0,
+            sites: &sites,
+            monitor: &f.monitor,
+            catalog: &f.catalog,
+            q_total: 8,
+        };
+        assert_ne!(FcfsBroker.pick(&[job(None)], &view).unwrap()[0], 0);
+        assert_ne!(Greedy.pick(&[job(None)], &view).unwrap()[0], 0);
+        let mut r = RandomPick::new(1);
+        for _ in 0..20 {
+            assert_ne!(r.pick(&[job(None)], &view).unwrap()[0], 0);
+        }
+    }
+
+    #[test]
+    fn random_is_deterministic_per_seed() {
+        let f = fx();
+        let sites = [snap(8, 0, true), snap(8, 0, true), snap(8, 0, true)];
+        let view = GridView {
+            now: 0.0,
+            sites: &sites,
+            monitor: &f.monitor,
+            catalog: &f.catalog,
+            q_total: 0,
+        };
+        let jobs: Vec<Job> = (0..10).map(|_| job(None)).collect();
+        let a = RandomPick::new(9).pick(&jobs, &view).unwrap();
+        let b = RandomPick::new(9).pick(&jobs, &view).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn factory_builds_all_policies() {
+        use crate::config::{Policy, SchedulerConfig};
+        use crate::cost::RustEngine;
+        for p in [Policy::Diana, Policy::FcfsBroker, Policy::Greedy,
+                  Policy::DataLocal, Policy::Random] {
+            let picker = make_picker(p, Box::new(RustEngine::new()),
+                                     &SchedulerConfig::default(), 1);
+            assert!(!picker.name().is_empty());
+        }
+    }
+}

@@ -1,0 +1,322 @@
+//! §V: the DIANA matchmaking algorithm.
+//!
+//! Per job class the scheduler sorts sites by the matching cost
+//! combination (compute: comp+net; data: dtc+net; both: total) and takes
+//! the first alive site. The heavy lifting — the J×S fused cost matrix —
+//! runs through a `CostEngine`: the AOT Pallas/XLA artifact on the hot
+//! path or the pure-rust mirror.
+
+use anyhow::Result;
+
+use crate::cost::{sort_sites_by_cost, CostEngine, CostInputs, ScheduleOut,
+                  Weights};
+use crate::data::replica_rows;
+use crate::job::{Job, JobClass};
+
+use super::traits::{GridView, Placement, SitePicker};
+
+/// Build the §IV kernel input matrices for a batch of jobs (shared
+/// submitting client). Free function so the migration checker and the
+/// runtime cross-check suite can build inputs without a scheduler.
+pub fn build_cost_inputs(jobs: &[Job], view: &GridView<'_>) -> CostInputs {
+    let ns = view.n_sites();
+    let mut inp = CostInputs::new(jobs.len(), ns);
+    for (s, snap) in view.sites.iter().enumerate() {
+        let row = inp.site_row_mut(s);
+        row[0] = snap.queue_len as f32;
+        row[1] = snap.capability as f32;
+        row[2] = snap.load as f32;
+        row[5] = if snap.alive { 1.0 } else { 0.0 };
+    }
+    if let Some(first) = jobs.first() {
+        // Client link: execution site → submitting client (§IV output
+        // cost). One client per round — bulk groups share the submitter.
+        for s in 0..ns {
+            let o = view.monitor.observe(s, first.submit_site);
+            let row = inp.site_row_mut(s);
+            row[3] = o.bandwidth_mbps as f32;
+            row[4] = o.loss as f32;
+        }
+    }
+    for (j, job) in jobs.iter().enumerate() {
+        let row = inp.job_row_mut(j);
+        row[0] = job.in_mb as f32;
+        row[1] = job.out_mb as f32;
+        row[2] = job.exe_mb as f32;
+        row[3] = job.cpu_sec as f32;
+        row[4] = job.class.as_f32();
+        let (bw, loss) =
+            replica_rows(view.catalog, view.monitor, job.input, ns);
+        for s in 0..ns {
+            inp.link_bw[j * ns + s] = bw[s] as f32;
+            inp.link_loss[j * ns + s] = loss[s] as f32;
+        }
+    }
+    inp
+}
+
+pub struct DianaScheduler {
+    engine: Box<dyn CostEngine>,
+    cfg: crate::config::SchedulerConfig,
+}
+
+impl DianaScheduler {
+    pub fn new(
+        engine: Box<dyn CostEngine>,
+        cfg: crate::config::SchedulerConfig,
+    ) -> DianaScheduler {
+        DianaScheduler { engine, cfg }
+    }
+
+    /// Build the kernel input matrices for a batch (shared submit site).
+    pub fn build_inputs(&self, jobs: &[Job], view: &GridView<'_>) -> CostInputs {
+        build_cost_inputs(jobs, view)
+    }
+
+    pub fn weights(&self, view: &GridView<'_>) -> Weights {
+        Weights::from_scheduler(&self.cfg, view.q_total as f32)
+    }
+
+    /// Run one full matchmaking round and return the raw cost outputs
+    /// (used by the bulk splitter, which needs the whole matrix).
+    pub fn evaluate(&mut self, jobs: &[Job], view: &GridView<'_>)
+        -> Result<ScheduleOut> {
+        let inp = self.build_inputs(jobs, view);
+        let w = self.weights(view);
+        self.engine.schedule_step(&inp, &w)
+    }
+
+    pub fn engine_mut(&mut self) -> &mut dyn CostEngine {
+        self.engine.as_mut()
+    }
+
+    /// Class-matched per-site cost row for one job (§V sort key).
+    fn cost_row(&mut self, job: &Job, view: &GridView<'_>) -> Result<Vec<f32>> {
+        let out = self.evaluate(std::slice::from_ref(job), view)?;
+        let ns = view.n_sites();
+        let mut row = vec![0.0f32; ns];
+        for s in 0..ns {
+            row[s] = match job.class {
+                JobClass::ComputeIntensive => out.comp[s] + out.net[s],
+                JobClass::DataIntensive => out.dtc[s] + out.net[s],
+                JobClass::Both => out.total_at(0, s),
+            };
+        }
+        Ok(row)
+    }
+
+    /// §V per-class choice from an evaluated round.
+    pub fn choose(out: &ScheduleOut, jobs: &[Job]) -> Vec<Placement> {
+        jobs.iter()
+            .enumerate()
+            .map(|(j, job)| match job.class {
+                JobClass::ComputeIntensive => out.best_compute[j] as usize,
+                JobClass::DataIntensive => out.best_data[j] as usize,
+                JobClass::Both => out.best_total[j] as usize,
+            })
+            .collect()
+    }
+}
+
+impl SitePicker for DianaScheduler {
+    fn pick(&mut self, jobs: &[Job], view: &GridView<'_>)
+        -> Result<Vec<Placement>> {
+        if jobs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let out = self.evaluate(jobs, view)?;
+        Ok(Self::choose(&out, jobs))
+    }
+
+    fn rank_sites(&mut self, job: &Job, view: &GridView<'_>)
+        -> Result<Vec<usize>> {
+        let row = self.cost_row(job, view)?;
+        // §V SortSites on the class-matched cost row, alive sites only.
+        let order = sort_sites_by_cost(&row);
+        Ok(order.into_iter().filter(|&s| view.sites[s].alive).collect())
+    }
+
+    fn site_costs(&mut self, job: &Job, view: &GridView<'_>)
+        -> Result<Vec<f64>> {
+        let row = self.cost_row(job, view)?;
+        Ok(row
+            .iter()
+            .enumerate()
+            .map(|(s, &c)| {
+                if view.sites[s].alive { c as f64 } else { f64::INFINITY }
+            })
+            .collect())
+    }
+
+    fn name(&self) -> &'static str {
+        "diana"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{presets, SchedulerConfig};
+    use crate::cost::RustEngine;
+    use crate::data::Catalog;
+    use crate::job::{JobId, UserId};
+    use crate::network::{PingerMonitor, Topology};
+    use crate::scheduler::traits::SiteSnapshot;
+
+    fn snapshot(free: usize, cpus: usize, queue: usize) -> SiteSnapshot {
+        SiteSnapshot {
+            queue_len: queue,
+            capability: cpus as f64,
+            load: (cpus - free) as f64 / cpus as f64,
+            free_slots: free,
+            cpus,
+            alive: true,
+        }
+    }
+
+    fn job(id: u64, class: JobClass, in_mb: f64, input: Option<usize>) -> Job {
+        Job {
+            id: JobId(id),
+            user: UserId(1),
+            group: None,
+            class,
+            input,
+            in_mb,
+            out_mb: 10.0,
+            exe_mb: 5.0,
+            cpu_sec: 600.0,
+            procs: 1,
+            submit_site: 0,
+            submit_time: 0.0,
+            quota: 1000.0,
+            migrations: 0,
+        }
+    }
+
+    struct Fixture {
+        monitor: PingerMonitor,
+        catalog: Catalog,
+        sites: Vec<SiteSnapshot>,
+    }
+
+    fn fixture() -> Fixture {
+        let cfg = presets::uniform_grid(4, 8);
+        let topo = Topology::from_config(&cfg);
+        let monitor = PingerMonitor::new(&topo, 0.0, 1);
+        let mut catalog = Catalog::new();
+        catalog.add("ds-at-2", 5000.0, vec![2]);
+        Fixture {
+            monitor,
+            catalog,
+            sites: vec![
+                snapshot(8, 8, 0),
+                snapshot(4, 8, 2),
+                snapshot(2, 8, 10),
+                snapshot(0, 8, 50),
+            ],
+        }
+    }
+
+    fn diana() -> DianaScheduler {
+        DianaScheduler::new(Box::new(RustEngine::new()),
+                            SchedulerConfig::default())
+    }
+
+    #[test]
+    fn compute_job_prefers_idle_site() {
+        let f = fixture();
+        let view = GridView {
+            now: 0.0,
+            sites: &f.sites,
+            monitor: &f.monitor,
+            catalog: &f.catalog,
+            q_total: 62,
+        };
+        let mut d = diana();
+        let picks = d
+            .pick(&[job(1, JobClass::ComputeIntensive, 0.0, None)], &view)
+            .unwrap();
+        assert_eq!(picks, vec![0]);
+    }
+
+    #[test]
+    fn data_job_follows_its_replica() {
+        let f = fixture();
+        let view = GridView {
+            now: 0.0,
+            sites: &f.sites,
+            monitor: &f.monitor,
+            catalog: &f.catalog,
+            q_total: 62,
+        };
+        let mut d = diana();
+        let ds = f.catalog.lookup("ds-at-2");
+        let picks = d
+            .pick(&[job(1, JobClass::DataIntensive, 5000.0, ds)], &view)
+            .unwrap();
+        assert_eq!(picks, vec![2]); // data lives at site 2
+    }
+
+    #[test]
+    fn dead_sites_are_skipped() {
+        let mut f = fixture();
+        f.sites[0].alive = false;
+        let view = GridView {
+            now: 0.0,
+            sites: &f.sites,
+            monitor: &f.monitor,
+            catalog: &f.catalog,
+            q_total: 0,
+        };
+        let mut d = diana();
+        let picks = d
+            .pick(&[job(1, JobClass::ComputeIntensive, 0.0, None)], &view)
+            .unwrap();
+        assert_ne!(picks[0], 0);
+        let order = d
+            .rank_sites(&job(1, JobClass::Both, 0.0, None), &view)
+            .unwrap();
+        assert!(!order.contains(&0));
+    }
+
+    #[test]
+    fn rank_sites_returns_ascending_cost() {
+        let f = fixture();
+        let view = GridView {
+            now: 0.0,
+            sites: &f.sites,
+            monitor: &f.monitor,
+            catalog: &f.catalog,
+            q_total: 62,
+        };
+        let mut d = diana();
+        let order = d
+            .rank_sites(&job(1, JobClass::ComputeIntensive, 0.0, None), &view)
+            .unwrap();
+        assert_eq!(order.len(), 4);
+        assert_eq!(order[0], 0); // idle site cheapest
+        assert_eq!(*order.last().unwrap(), 3); // overloaded site last
+    }
+
+    #[test]
+    fn batch_pick_is_consistent_with_singletons() {
+        let f = fixture();
+        let view = GridView {
+            now: 0.0,
+            sites: &f.sites,
+            monitor: &f.monitor,
+            catalog: &f.catalog,
+            q_total: 62,
+        };
+        let mut d = diana();
+        let jobs = vec![
+            job(1, JobClass::ComputeIntensive, 0.0, None),
+            job(2, JobClass::DataIntensive, 5000.0, f.catalog.lookup("ds-at-2")),
+        ];
+        let batch = d.pick(&jobs, &view).unwrap();
+        for (i, j) in jobs.iter().enumerate() {
+            let single = d.pick(std::slice::from_ref(j), &view).unwrap();
+            assert_eq!(batch[i], single[0]);
+        }
+    }
+}

@@ -1,0 +1,9 @@
+//! Matchmaking policies: the §V DIANA algorithm and the §XI baselines.
+
+pub mod baselines;
+pub mod diana;
+pub mod traits;
+
+pub use baselines::{make_picker, DataLocal, FcfsBroker, Greedy, RandomPick};
+pub use diana::{build_cost_inputs, DianaScheduler};
+pub use traits::{GridView, Placement, SitePicker, SiteSnapshot};

@@ -1,0 +1,88 @@
+//! The `SitePicker` abstraction: given a batch of jobs (sharing a
+//! submitting client location — one bulk group, §VIII) and a snapshot of
+//! the grid, choose an execution site per job.
+
+use anyhow::Result;
+
+use crate::data::Catalog;
+use crate::job::Job;
+use crate::network::PingerMonitor;
+
+/// Per-site snapshot the pickers see (meta + local queue state).
+#[derive(Clone, Copy, Debug)]
+pub struct SiteSnapshot {
+    /// Qi — jobs waiting (local batch queue + meta queues).
+    pub queue_len: usize,
+    /// Pi — cpus × speed.
+    pub capability: f64,
+    /// Busy-slot fraction [0,1].
+    pub load: f64,
+    pub free_slots: usize,
+    pub cpus: usize,
+    pub alive: bool,
+}
+
+/// Read-only view of the grid for one scheduling round.
+pub struct GridView<'a> {
+    pub now: f64,
+    pub sites: &'a [SiteSnapshot],
+    pub monitor: &'a PingerMonitor,
+    pub catalog: &'a Catalog,
+    /// Total queued jobs across the grid (the §IV global Q).
+    pub q_total: usize,
+}
+
+impl GridView<'_> {
+    pub fn n_sites(&self) -> usize {
+        self.sites.len()
+    }
+
+    pub fn alive_sites(&self) -> impl Iterator<Item = usize> + '_ {
+        self.sites
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.alive)
+            .map(|(i, _)| i)
+    }
+}
+
+/// A placement decision for one job.
+pub type Placement = usize;
+
+/// The matchmaking policy (DIANA §V or a §XI baseline).
+/// Not `Send`: DIANA's picker may hold a PJRT client (see `CostEngine`).
+pub trait SitePicker {
+    /// Choose a site per job. All jobs share `jobs[i].submit_site`.
+    fn pick(&mut self, jobs: &[Job], view: &GridView<'_>)
+        -> Result<Vec<Placement>>;
+
+    /// Ranked site order (ascending cost) for one representative job —
+    /// used by the §VIII bulk splitter to spread subgroups. The default
+    /// ranks by whatever `pick` would choose, falling back to free-slot
+    /// order.
+    fn rank_sites(&mut self, job: &Job, view: &GridView<'_>)
+        -> Result<Vec<usize>> {
+        let choice = self.pick(std::slice::from_ref(job), view)?[0];
+        let mut order: Vec<usize> = view.alive_sites().collect();
+        order.sort_by_key(|&s| {
+            (if s == choice { 0 } else { 1 }, std::cmp::Reverse(view.sites[s].free_slots))
+        });
+        Ok(order)
+    }
+
+    /// Per-site placement cost for one representative job (class-matched
+    /// for DIANA) — lets the §VIII splitter weight subgroup sizes by how
+    /// *competitive* each site is, not just its CPU count. Default:
+    /// rank position (1, 2, 3…; dead sites +inf).
+    fn site_costs(&mut self, job: &Job, view: &GridView<'_>)
+        -> Result<Vec<f64>> {
+        let ranked = self.rank_sites(job, view)?;
+        let mut costs = vec![f64::INFINITY; view.n_sites()];
+        for (pos, &s) in ranked.iter().enumerate() {
+            costs[s] = 1.0 + pos as f64;
+        }
+        Ok(costs)
+    }
+
+    fn name(&self) -> &'static str;
+}

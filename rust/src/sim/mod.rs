@@ -1,0 +1,10 @@
+//! MONARC-style discrete-event Grid simulator: event engine, per-site
+//! local batch systems and the composed `World`.
+
+pub mod engine;
+pub mod site;
+pub mod world;
+
+pub use engine::{EventQueue, SimTime};
+pub use site::{LocalEntry, SiteSim};
+pub use world::World;

@@ -1,0 +1,204 @@
+//! Local batch system of one Grid site: `cpus` slots, FCFS local queue —
+//! the Condor/gLite layer DIANA sits on top of (§IV: "We do not replace
+//! the local Schedulers; rather we have added a layer over each").
+
+use std::collections::VecDeque;
+
+use crate::job::JobId;
+
+/// A job occupying slots on the site.
+#[derive(Clone, Copy, Debug)]
+struct Running {
+    job: JobId,
+    procs: usize,
+}
+
+/// Local-queue entry: a job with its slot demand and service time
+/// (staging + execution), decided at dispatch time.
+#[derive(Clone, Copy, Debug)]
+pub struct LocalEntry {
+    pub job: JobId,
+    pub procs: usize,
+    /// Seconds of input/executable staging before CPU work starts.
+    pub stage_s: f64,
+    /// Seconds of CPU execution at this site's speed.
+    pub run_s: f64,
+    pub enqueued_at: f64,
+}
+
+/// The site simulator. The world calls `offer` / `complete` and receives
+/// newly started entries to schedule completion events for.
+#[derive(Clone, Debug)]
+pub struct SiteSim {
+    pub name: String,
+    pub cpus: usize,
+    pub cpu_speed: f64,
+    free: usize,
+    queue: VecDeque<LocalEntry>,
+    running: Vec<Running>,
+    /// Lifetime counters for metrics.
+    pub started: u64,
+    pub completed: u64,
+}
+
+impl SiteSim {
+    pub fn new(name: impl Into<String>, cpus: usize, cpu_speed: f64) -> SiteSim {
+        SiteSim {
+            name: name.into(),
+            cpus,
+            cpu_speed,
+            free: cpus,
+            queue: VecDeque::new(),
+            running: Vec::new(),
+            started: 0,
+            completed: 0,
+        }
+    }
+
+    pub fn free_slots(&self) -> usize {
+        self.free
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn running_len(&self) -> usize {
+        self.running.len()
+    }
+
+    /// Fraction of slots busy — the §IV SiteLoad input.
+    pub fn load(&self) -> f64 {
+        if self.cpus == 0 {
+            return 1.0;
+        }
+        (self.cpus - self.free) as f64 / self.cpus as f64
+    }
+
+    /// §IV capability Pi.
+    pub fn capability(&self) -> f64 {
+        self.cpus as f64 * self.cpu_speed
+    }
+
+    /// Offer a job to the local system. Returns the entries that *start*
+    /// right now (the offered one and/or queued ones that now fit).
+    pub fn offer(&mut self, entry: LocalEntry) -> Vec<LocalEntry> {
+        self.queue.push_back(entry);
+        self.drain_startable()
+    }
+
+    /// A running job finished: release slots, start whatever now fits.
+    pub fn complete(&mut self, job: JobId) -> Vec<LocalEntry> {
+        if let Some(pos) = self.running.iter().position(|r| r.job == job) {
+            let r = self.running.swap_remove(pos);
+            self.free += r.procs;
+            self.completed += 1;
+        }
+        self.drain_startable()
+    }
+
+    /// FCFS head-of-line start: strict order, no backfilling (the simple
+    /// local model the paper assumes; backfilling would blur queue-time
+    /// attribution between layers).
+    fn drain_startable(&mut self) -> Vec<LocalEntry> {
+        let mut started = Vec::new();
+        while let Some(head) = self.queue.front() {
+            let procs = head.procs.min(self.cpus).max(1);
+            if procs <= self.free {
+                let e = self.queue.pop_front().unwrap();
+                self.free -= procs;
+                self.running.push(Running { job: e.job, procs });
+                self.started += 1;
+                started.push(e);
+            } else {
+                break;
+            }
+        }
+        started
+    }
+
+    /// Remove a not-yet-started job (meta-layer migration pulls it back).
+    pub fn cancel_queued(&mut self, job: JobId) -> Option<LocalEntry> {
+        let pos = self.queue.iter().position(|e| e.job == job)?;
+        self.queue.remove(pos)
+    }
+
+    pub fn queued_jobs(&self) -> impl Iterator<Item = &LocalEntry> {
+        self.queue.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(id: u64, procs: usize) -> LocalEntry {
+        LocalEntry {
+            job: JobId(id),
+            procs,
+            stage_s: 0.0,
+            run_s: 100.0,
+            enqueued_at: 0.0,
+        }
+    }
+
+    #[test]
+    fn starts_until_full_then_queues() {
+        let mut s = SiteSim::new("x", 4, 1.0);
+        assert_eq!(s.offer(entry(1, 2)).len(), 1);
+        assert_eq!(s.offer(entry(2, 2)).len(), 1);
+        assert_eq!(s.offer(entry(3, 1)).len(), 0); // full
+        assert_eq!(s.free_slots(), 0);
+        assert_eq!(s.queue_len(), 1);
+        assert_eq!(s.load(), 1.0);
+    }
+
+    #[test]
+    fn completion_releases_and_starts_queued() {
+        let mut s = SiteSim::new("x", 4, 1.0);
+        s.offer(entry(1, 4));
+        s.offer(entry(2, 2));
+        s.offer(entry(3, 2));
+        let started = s.complete(JobId(1));
+        assert_eq!(started.len(), 2); // both queued jobs fit now
+        assert_eq!(s.free_slots(), 0);
+        assert_eq!(s.completed, 1);
+    }
+
+    #[test]
+    fn fcfs_no_backfill() {
+        let mut s = SiteSim::new("x", 4, 1.0);
+        s.offer(entry(1, 3));
+        s.offer(entry(2, 4)); // blocks (only 1 free)
+        s.offer(entry(3, 1)); // would fit but must wait behind job 2
+        assert_eq!(s.queue_len(), 2);
+        assert_eq!(s.running_len(), 1);
+    }
+
+    #[test]
+    fn oversized_job_clamped_to_site() {
+        let mut s = SiteSim::new("x", 2, 1.0);
+        let started = s.offer(entry(1, 10));
+        assert_eq!(started.len(), 1); // clamped to 2 slots, runs
+        assert_eq!(s.free_slots(), 0);
+    }
+
+    #[test]
+    fn cancel_queued_job() {
+        let mut s = SiteSim::new("x", 1, 1.0);
+        s.offer(entry(1, 1));
+        s.offer(entry(2, 1));
+        assert!(s.cancel_queued(JobId(2)).is_some());
+        assert!(s.cancel_queued(JobId(2)).is_none());
+        assert!(s.cancel_queued(JobId(1)).is_none()); // already running
+        assert_eq!(s.queue_len(), 0);
+    }
+
+    #[test]
+    fn load_fraction() {
+        let mut s = SiteSim::new("x", 4, 2.0);
+        s.offer(entry(1, 1));
+        assert_eq!(s.load(), 0.25);
+        assert_eq!(s.capability(), 8.0);
+    }
+}

@@ -1,0 +1,782 @@
+//! The Grid world: a MONARC-style discrete-event simulation composing
+//! every substrate — sites, WAN, monitor, catalog, per-site
+//! meta-schedulers, the matchmaking policy, bulk planning, migration and
+//! metrics. This is the harness behind every §XI figure.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::bulk::{plan_group, Aggregator, GroupResult};
+use crate::config::{GridConfig, Policy};
+use crate::coordinator::MetaScheduler;
+use crate::cost::{CostEngine, Weights};
+use crate::data::Catalog;
+use crate::job::{Job, JobId};
+use crate::metrics::Recorder;
+use crate::migration::{decide, MigrationDecision, PeerReport};
+use crate::network::{PingerMonitor, Topology};
+use crate::p2p::{Discovery, Overlay, PeerState};
+use crate::scheduler::{build_cost_inputs, GridView, SitePicker, SiteSnapshot};
+use crate::util::Pcg64;
+use crate::workload::Submission;
+
+use super::engine::EventQueue;
+use super::site::{LocalEntry, SiteSim};
+
+#[derive(Clone, Debug)]
+enum Ev {
+    Submit(usize),
+    Dispatch(usize),
+    Finish { job: u64, site: usize },
+    Deliver { job: u64 },
+    Monitor,
+    MigrationCheck,
+}
+
+/// Safety valve: a run processing more events than this aborts (a bug,
+/// not a workload, reaches this).
+const MAX_EVENTS: u64 = 50_000_000;
+
+/// Max migration candidates examined per site per check.
+const MIGRATION_BATCH: usize = 8;
+
+pub struct World {
+    pub cfg: GridConfig,
+    pub topo: Topology,
+    pub monitor: PingerMonitor,
+    pub catalog: Catalog,
+    pub recorder: Recorder,
+    jobs: BTreeMap<u64, Job>,
+    sites: Vec<SiteSim>,
+    metas: Vec<MetaScheduler>,
+    alive: Vec<bool>,
+    picker: Box<dyn SitePicker>,
+    engine: Box<dyn CostEngine>,
+    events: EventQueue<Ev>,
+    aggregator: Aggregator,
+    /// §IX RootGrid/SubGrid overlay + discovery registry: one
+    /// meta-scheduler node per site (plus standby replicas from the
+    /// config), kept in sync with site liveness.
+    pub overlay: Overlay,
+    pub discovery: Discovery,
+    pub group_results: Vec<GroupResult>,
+    submissions: Vec<Submission>,
+    delivered: usize,
+    total_jobs: usize,
+    migration_on: bool,
+    /// §II dataflow gating: job → count of undelivered parents.
+    blocked: BTreeMap<u64, usize>,
+    /// parent job → dependent children.
+    children: BTreeMap<u64, Vec<u64>>,
+}
+
+impl World {
+    /// Build a world from a config; picker and engine are injected so the
+    /// same world runs DIANA/XLA, DIANA/rust or any §XI baseline.
+    pub fn new(
+        cfg: GridConfig,
+        picker: Box<dyn SitePicker>,
+        engine: Box<dyn CostEngine>,
+    ) -> World {
+        let topo = Topology::from_config(&cfg);
+        let monitor =
+            PingerMonitor::new(&topo, cfg.network.monitor_noise, cfg.seed ^ 0x5eed);
+        let mut rng = Pcg64::new(cfg.seed ^ 0xca7a);
+        let catalog = Catalog::from_config(&cfg, &mut rng);
+        let sites: Vec<SiteSim> = cfg
+            .sites
+            .iter()
+            .map(|s| SiteSim::new(s.name.clone(), s.cpus, s.cpu_speed))
+            .collect();
+        let metas = (0..cfg.sites.len())
+            .map(|i| {
+                MetaScheduler::new(
+                    i,
+                    cfg.scheduler.aging_halflife_s,
+                    (cfg.scheduler.migration_period_s * 4.0).max(60.0),
+                )
+            })
+            .collect();
+        let n = cfg.sites.len();
+        let migration_on = cfg.scheduler.policy == Policy::Diana
+            && cfg.scheduler.max_migrations > 0;
+        // §IX join protocol: each site's meta-scheduler node joins the
+        // overlay (first joiner per site creates its RootGrid); sites
+        // flagged `standby` contribute a second, replica node.
+        let mut overlay = Overlay::new();
+        let mut discovery = Discovery::new();
+        for (i, site) in cfg.sites.iter().enumerate() {
+            overlay.join(i, 0.9);
+            if site.standby {
+                overlay.join(i, 0.8);
+            }
+            discovery.register(i, &format!("diana://{}", site.name), 0.0);
+        }
+        World {
+            recorder: Recorder::new(n, 60.0),
+            alive: vec![true; n],
+            topo,
+            monitor,
+            catalog,
+            jobs: BTreeMap::new(),
+            sites,
+            metas,
+            picker,
+            engine,
+            events: EventQueue::new(),
+            aggregator: Aggregator::new(),
+            overlay,
+            discovery,
+            group_results: Vec::new(),
+            submissions: Vec::new(),
+            delivered: 0,
+            total_jobs: 0,
+            migration_on,
+            blocked: BTreeMap::new(),
+            children: BTreeMap::new(),
+            cfg,
+        }
+    }
+
+    pub fn now(&self) -> f64 {
+        self.events.now()
+    }
+
+    pub fn events_processed(&self) -> u64 {
+        self.events.processed()
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.picker.name()
+    }
+
+    /// Inject a site failure / recovery (exercises dead-site masking and
+    /// §IX failover behaviour: the crashed RootGrid's standby takes over
+    /// if one exists; recovery re-joins the overlay).
+    pub fn set_alive(&mut self, site: usize, alive: bool) {
+        self.alive[site] = alive;
+        if !alive {
+            if let Some(sg) =
+                self.overlay.subgrids.iter_mut().find(|sg| sg.site == site)
+            {
+                sg.fail_root();
+            }
+            self.discovery.deregister(site);
+        } else {
+            self.overlay.join(site, 0.9);
+            self.discovery.register(
+                site,
+                &format!("diana://{}", self.cfg.sites[site].name),
+                self.events.now(),
+            );
+        }
+        self.publish_state(site);
+    }
+
+    /// Publish a site's state to the discovery registry (what MonALISA
+    /// would propagate to peers).
+    fn publish_state(&mut self, site: usize) {
+        self.discovery.publish(PeerState {
+            site,
+            queue_len: self.sites[site].queue_len()
+                + self.metas[site].queue_len(),
+            free_slots: self.sites[site].free_slots(),
+            capability: self.sites[site].capability(),
+            load: self.sites[site].load(),
+            alive: self.alive[site],
+            last_update: self.events.now(),
+        });
+    }
+
+    /// Queue a workload; call before `run`.
+    pub fn load_submissions(&mut self, subs: Vec<Submission>) {
+        for (i, s) in subs.iter().enumerate() {
+            self.events.schedule(s.at, Ev::Submit(i));
+            self.total_jobs += s.jobs.len();
+        }
+        self.submissions = subs;
+    }
+
+    fn snapshot(&self) -> Vec<SiteSnapshot> {
+        self.sites
+            .iter()
+            .enumerate()
+            .map(|(i, s)| SiteSnapshot {
+                queue_len: s.queue_len() + self.metas[i].queue_len(),
+                capability: s.capability(),
+                load: s.load(),
+                free_slots: s.free_slots(),
+                cpus: s.cpus,
+                alive: self.alive[i],
+            })
+            .collect()
+    }
+
+    fn q_total(&self) -> usize {
+        self.sites
+            .iter()
+            .zip(&self.metas)
+            .map(|(s, m)| s.queue_len() + m.queue_len())
+            .sum()
+    }
+
+    /// Run to completion (all jobs delivered). Returns delivered count.
+    pub fn run(&mut self) -> Result<usize> {
+        // Periodic services only while work remains.
+        self.events
+            .schedule(self.cfg.network.monitor_period_s, Ev::Monitor);
+        if self.migration_on {
+            self.events
+                .schedule(self.cfg.scheduler.migration_period_s, Ev::MigrationCheck);
+        }
+        while let Some((t, ev)) = self.events.pop() {
+            anyhow::ensure!(
+                self.events.processed() < MAX_EVENTS,
+                "event budget exceeded — livelock?"
+            );
+            match ev {
+                Ev::Submit(i) => self.on_submit(i, t)?,
+                Ev::Dispatch(site) => self.dispatch(site, t),
+                Ev::Finish { job, site } => self.on_finish(JobId(job), site, t),
+                Ev::Deliver { job } => self.on_deliver(JobId(job), t),
+                Ev::Monitor => {
+                    self.monitor.sweep(&self.topo);
+                    for s in 0..self.sites.len() {
+                        self.publish_state(s); // heartbeat to discovery
+                    }
+                    if self.delivered < self.total_jobs {
+                        self.events
+                            .schedule_in(self.cfg.network.monitor_period_s, Ev::Monitor);
+                    }
+                }
+                Ev::MigrationCheck => {
+                    self.migration_check(t)?;
+                    if self.delivered < self.total_jobs {
+                        self.events.schedule_in(
+                            self.cfg.scheduler.migration_period_s,
+                            Ev::MigrationCheck,
+                        );
+                    }
+                }
+            }
+            if self.delivered >= self.total_jobs {
+                break;
+            }
+        }
+        Ok(self.delivered)
+    }
+
+    fn on_submit(&mut self, idx: usize, t: f64) -> Result<()> {
+        let sub = self.submissions[idx].clone();
+        for job in &sub.jobs {
+            self.recorder.on_submit(job.id, job.submit_site, t);
+            self.jobs.insert(job.id.0, job.clone());
+        }
+        self.aggregator
+            .open(sub.group.id, sub.jobs.len(), sub.group.output_site);
+
+        // §II dataflow gating: only subjobs with all parents delivered
+        // are schedulable now; the rest wait for dependency release.
+        let mut indegree = vec![0usize; sub.jobs.len()];
+        for &(parent, child) in &sub.deps {
+            indegree[child] += 1;
+            self.children
+                .entry(sub.jobs[parent].id.0)
+                .or_default()
+                .push(sub.jobs[child].id.0);
+        }
+        for (i, job) in sub.jobs.iter().enumerate() {
+            if indegree[i] > 0 {
+                self.blocked.insert(job.id.0, indegree[i]);
+            }
+        }
+
+        // §VII SJF pre-arrangement before queue placement (ready set).
+        let mut jobs: Vec<Job> = sub
+            .jobs
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| indegree[*i] == 0)
+            .map(|(_, j)| j.clone())
+            .collect();
+        crate::queues::arrange_sjf(&mut jobs);
+        if jobs.is_empty() {
+            return Ok(());
+        }
+
+        let snap = self.snapshot();
+        let view = GridView {
+            now: t,
+            sites: &snap,
+            monitor: &self.monitor,
+            catalog: &self.catalog,
+            // The incoming batch is part of the global queue pressure Q
+            // (§IV): on an idle grid this is what makes capability Pi
+            // matter (Q/Pi·W6 term — the Fig-4 "pick the 600-CPU site").
+            q_total: self.q_total() + sub.jobs.len(),
+        };
+
+        // DIANA treats the group as one unit (§VIII plan); baselines place
+        // per-job like the EGEE broker.
+        let mut by_site: BTreeMap<usize, Vec<JobId>> = BTreeMap::new();
+        if self.cfg.scheduler.policy == Policy::Diana {
+            // Plan the *ready* subset as the group (§VIII); gated
+            // subjobs are placed individually on release.
+            let ready_group = crate::job::Group {
+                jobs: jobs.iter().map(|j| j.id).collect(),
+                ..sub.group.clone()
+            };
+            let plan =
+                plan_group(self.picker.as_mut(), &ready_group, &jobs, &view)?;
+            if plan.single_site {
+                self.recorder.groups_whole += 1;
+            } else {
+                self.recorder.groups_split += 1;
+            }
+            for (site, idxs) in &plan.assignments {
+                by_site
+                    .entry(*site)
+                    .or_default()
+                    .extend(idxs.iter().map(|&i| jobs[i].id));
+            }
+        } else {
+            let picks = self.picker.pick(&jobs, &view)?;
+            for (job, site) in jobs.iter().zip(picks) {
+                by_site.entry(site).or_default().push(job.id);
+            }
+        }
+
+        for (site, ids) in by_site {
+            let batch: Vec<&Job> = ids.iter().map(|id| &self.jobs[&id.0]).collect();
+            for id in &ids {
+                // `placed` = first response (§VI response time).
+                self.recorder.job_mut(*id).placed = t;
+            }
+            self.metas[site].enqueue_batch(self.engine.as_mut(), &batch, t)?;
+            self.events.schedule(t, Ev::Dispatch(site));
+        }
+        Ok(())
+    }
+
+    /// Feed the local batch system from the meta queues, keeping at most
+    /// one extra wave buffered locally so the remainder stays migratable.
+    fn dispatch(&mut self, site: usize, t: f64) {
+        if !self.alive[site] {
+            return;
+        }
+        loop {
+            let buffered = self.sites[site].queue_len();
+            if buffered >= self.sites[site].cpus.max(1) {
+                break;
+            }
+            let Some(meta) = self.metas[site].pop(t) else { break };
+            let job = &self.jobs[&meta.job.0];
+            // Ground-truth staging: input from the *closest* replica +
+            // executable from the submitter.
+            let stage_in = match job.input {
+                Some(ds) => {
+                    let reps = &self.catalog.get(ds).replicas;
+                    reps.iter()
+                        .map(|&r| self.topo.transfer_seconds(r, site, job.in_mb))
+                        .fold(f64::INFINITY, f64::min)
+                        .min(1e12)
+                }
+                None => 0.0,
+            };
+            let stage =
+                stage_in + self.topo.transfer_seconds(job.submit_site, site, job.exe_mb);
+            let entry = LocalEntry {
+                job: meta.job,
+                procs: job.procs,
+                stage_s: stage,
+                run_s: job.runtime_at(self.sites[site].cpu_speed),
+                enqueued_at: t,
+            };
+            self.recorder.job_mut(meta.job).enqueued_local = t;
+            for started in self.sites[site].offer(entry) {
+                self.start_entry(started, site, t);
+            }
+        }
+    }
+
+    fn start_entry(&mut self, e: LocalEntry, site: usize, t: f64) {
+        let rec = self.recorder.job_mut(e.job);
+        rec.started = t;
+        rec.exec_site = site;
+        self.recorder.on_execute(site, t);
+        self.events
+            .schedule(t + e.stage_s + e.run_s, Ev::Finish { job: e.job.0, site });
+    }
+
+    fn on_finish(&mut self, job: JobId, site: usize, t: f64) {
+        self.recorder.job_mut(job).finished = t;
+        for started in self.sites[site].complete(job) {
+            self.start_entry(started, site, t);
+        }
+        let j = &self.jobs[&job.0];
+        let deliver = self.topo.transfer_seconds(site, j.submit_site, j.out_mb);
+        self.events.schedule(t + deliver, Ev::Deliver { job: job.0 });
+        self.events.schedule(t, Ev::Dispatch(site));
+    }
+
+    fn on_deliver(&mut self, job: JobId, t: f64) {
+        self.recorder.job_mut(job).delivered = t;
+        self.delivered += 1;
+        let j = self.jobs[&job.0].clone();
+        if let Some(g) = j.group {
+            let site = self.recorder.job(job).map(|r| r.exec_site).unwrap_or(0);
+            if let Some(res) = self.aggregator.complete_job(
+                g, job, site, j.out_mb, &self.topo,
+            ) {
+                self.group_results.push(res);
+            }
+        }
+        // §II dataflow release: the output becomes a new dataset at the
+        // execution site ("the bulk of the CMS job output remains inside
+        // the Grid"); dependent subjobs consume it and become ready.
+        if let Some(kids) = self.children.remove(&job.0) {
+            let exec_site =
+                self.recorder.job(job).map(|r| r.exec_site).unwrap_or(0);
+            let ds = self.catalog.add(
+                &format!("out-{}", job.0),
+                j.out_mb.max(1.0),
+                vec![exec_site],
+            );
+            for kid in kids {
+                {
+                    let child = self.jobs.get_mut(&kid).unwrap();
+                    child.input = Some(ds);
+                    child.in_mb += j.out_mb;
+                }
+                let remaining = self.blocked.get_mut(&kid).unwrap();
+                *remaining -= 1;
+                if *remaining == 0 {
+                    self.blocked.remove(&kid);
+                    if let Err(e) = self.release_job(JobId(kid), t) {
+                        log::error!("release of {kid} failed: {e:#}");
+                    }
+                }
+            }
+        }
+    }
+
+    /// Place a dependency-released subjob (individually, via the
+    /// configured policy) and enqueue it.
+    fn release_job(&mut self, job: JobId, t: f64) -> Result<()> {
+        let j = self.jobs[&job.0].clone();
+        let snap = self.snapshot();
+        let view = GridView {
+            now: t,
+            sites: &snap,
+            monitor: &self.monitor,
+            catalog: &self.catalog,
+            q_total: self.q_total() + 1,
+        };
+        let site = self.picker.pick(std::slice::from_ref(&j), &view)?[0];
+        self.recorder.job_mut(job).placed = t;
+        let batch = [&self.jobs[&job.0]];
+        self.metas[site].enqueue_batch(self.engine.as_mut(), &batch, t)?;
+        self.events.schedule(t, Ev::Dispatch(site));
+        Ok(())
+    }
+
+    /// §IX/§X migration sweep over all congested (or dead) sites.
+    fn migration_check(&mut self, t: f64) -> Result<()> {
+        let thrs = self.cfg.scheduler.congestion_thrs;
+        for site in 0..self.sites.len() {
+            let force = !self.alive[site] && self.metas[site].queue_len() > 0;
+            if !force
+                && !(self.metas[site].queue_len() > 0
+                    && self.metas[site].is_congested(t, thrs))
+            {
+                continue;
+            }
+            let cands = self.metas[site].migration_candidates(MIGRATION_BATCH);
+            if cands.is_empty() {
+                continue;
+            }
+            let snap = self.snapshot();
+            let mut keep = Vec::new();
+            for meta in cands {
+                let job = self.jobs[&meta.job.0].clone();
+                if job.migrations >= self.cfg.scheduler.max_migrations && !force {
+                    keep.push(meta);
+                    continue;
+                }
+                // One-job cost row across all sites (§IX "minimum cost").
+                let view = GridView {
+                    now: t,
+                    sites: &snap,
+                    monitor: &self.monitor,
+                    catalog: &self.catalog,
+                    q_total: self.q_total(),
+                };
+                let inp = build_cost_inputs(std::slice::from_ref(&job), &view);
+                let w = Weights::from_scheduler(
+                    &self.cfg.scheduler,
+                    view.q_total as f32,
+                );
+                let out = self.engine.schedule_step(&inp, &w)?;
+                let report = |s: usize| PeerReport {
+                    site: s,
+                    // An arriving job joins the back of its class (+inf).
+                    jobs_ahead: self.metas[s]
+                        .jobs_ahead(meta.priority, f64::INFINITY)
+                        + self.sites[s].queue_len(),
+                    queue_len: self.metas[s].queue_len()
+                        + self.sites[s].queue_len(),
+                    total_cost: out.total_at(0, s),
+                    alive: self.alive[s],
+                };
+                let mut local = report(site);
+                // Locally the job keeps its FCFS slot.
+                local.jobs_ahead = self.metas[site]
+                    .jobs_ahead(meta.priority, meta.enqueued_at)
+                    + self.sites[site].queue_len();
+                if force {
+                    // A dead site is an impossible host: poison its report
+                    // so any alive peer wins the §IX comparison.
+                    local.jobs_ahead = usize::MAX;
+                    local.total_cost = f32::INFINITY;
+                }
+                let peers: Vec<PeerReport> = (0..self.sites.len())
+                    .filter(|&s| s != site)
+                    .map(report)
+                    .collect();
+                match decide(
+                    local,
+                    &peers,
+                    self.cfg.scheduler.max_migrations + u32::from(force),
+                    job.migrations,
+                ) {
+                    MigrationDecision::Migrate { to } => {
+                        self.jobs.get_mut(&meta.job.0).unwrap().migrations += 1;
+                        // A migrated job *leaves* this queue — it counts
+                        // as service in the §X rate balance, which makes
+                        // Thrs self-limiting (migration relieves the
+                        // congestion signal that triggered it).
+                        self.metas[site].congestion.record_service(t);
+                        self.recorder.on_export(site, to, t);
+                        self.recorder.job_mut(meta.job).migrations += 1;
+                        self.metas[to].accept_migrated(
+                            self.engine.as_mut(),
+                            meta,
+                            t,
+                        )?;
+                        self.events.schedule(t, Ev::Dispatch(to));
+                    }
+                    MigrationDecision::StayLocal => keep.push(meta),
+                }
+            }
+            self.metas[site].reinsert(keep);
+        }
+        Ok(())
+    }
+
+    /// Convenience: fraction of jobs fully delivered.
+    pub fn completion(&self) -> f64 {
+        if self.total_jobs == 0 {
+            1.0
+        } else {
+            self.delivered as f64 / self.total_jobs as f64
+        }
+    }
+
+    pub fn total_jobs(&self) -> usize {
+        self.total_jobs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::cost::RustEngine;
+    use crate::scheduler::make_picker;
+    use crate::workload::WorkloadGen;
+
+    fn build_world(mut cfg: GridConfig, policy: Policy) -> World {
+        cfg.scheduler.policy = policy;
+        let picker = make_picker(
+            policy,
+            Box::new(RustEngine::new()),
+            &cfg.scheduler,
+            cfg.seed,
+        );
+        World::new(cfg, picker, Box::new(RustEngine::new()))
+    }
+
+    fn run_with(cfg: GridConfig, policy: Policy) -> World {
+        let mut world = build_world(cfg, policy);
+        let mut rng = Pcg64::new(world.cfg.seed);
+        let cat = Catalog::from_config(&world.cfg, &mut rng);
+        world.catalog = cat.clone();
+        let subs = WorkloadGen::new(world.cfg.seed)
+            .schedule(&world.cfg, &world.catalog);
+        world.load_submissions(subs);
+        world.run().unwrap();
+        world
+    }
+
+    fn small_cfg(jobs: usize) -> GridConfig {
+        let mut cfg = presets::uniform_grid(4, 4);
+        cfg.workload.jobs = jobs;
+        cfg.workload.bulk_size = 10;
+        cfg.workload.cpu_sec_median = 60.0;
+        cfg.workload.cpu_sec_sigma = 0.3;
+        cfg.workload.in_mb_median = 50.0;
+        cfg
+    }
+
+    #[test]
+    fn diana_runs_all_jobs_to_completion() {
+        let w = run_with(small_cfg(60), Policy::Diana);
+        assert_eq!(w.completion(), 1.0);
+        assert_eq!(w.recorder.n_completed(), 60);
+        // Every completed job has a sane lifecycle ordering.
+        for r in w.recorder.completed_records() {
+            assert!(r.placed >= r.submit);
+            assert!(r.started >= r.placed);
+            assert!(r.finished > r.started);
+            assert!(r.delivered >= r.finished);
+        }
+    }
+
+    #[test]
+    fn all_baselines_complete() {
+        for p in [Policy::FcfsBroker, Policy::Greedy, Policy::DataLocal,
+                  Policy::Random] {
+            let w = run_with(small_cfg(40), p);
+            assert_eq!(w.completion(), 1.0, "policy {:?}", p);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = run_with(small_cfg(40), Policy::Diana);
+        let b = run_with(small_cfg(40), Policy::Diana);
+        let qa = a.recorder.summary(crate::metrics::JobRecord::queue_time);
+        let qb = b.recorder.summary(crate::metrics::JobRecord::queue_time);
+        assert_eq!(qa.mean(), qb.mean());
+        assert_eq!(a.events_processed(), b.events_processed());
+    }
+
+    #[test]
+    fn overload_triggers_migration() {
+        let mut cfg = small_cfg(200);
+        // All submissions from one site, heavy and bursty → congestion.
+        cfg.workload.bulk_size = 100;
+        cfg.workload.arrival_rate = 10.0;
+        cfg.workload.cpu_sec_median = 600.0;
+        cfg.scheduler.max_group_per_site = 100; // keep groups whole…
+        cfg.scheduler.congestion_thrs = 0.05;
+        cfg.scheduler.migration_period_s = 10.0;
+        let w = run_with(cfg, Policy::Diana);
+        assert_eq!(w.completion(), 1.0);
+        // …so the meta queues back up and migration must fire.
+        assert!(w.recorder.migrations > 0, "no migrations happened");
+    }
+
+    #[test]
+    fn dead_site_receives_nothing() {
+        let mut world = build_world(small_cfg(40), Policy::Diana);
+        let mut rng = Pcg64::new(1);
+        world.catalog = Catalog::from_config(&world.cfg, &mut rng);
+        world.set_alive(2, false);
+        let subs = WorkloadGen::new(7).schedule(&world.cfg, &world.catalog);
+        world.load_submissions(subs);
+        world.run().unwrap();
+        assert_eq!(world.completion(), 1.0);
+        for r in world.recorder.completed_records() {
+            assert_ne!(r.exec_site, 2);
+        }
+    }
+
+    #[test]
+    fn overlay_failover_on_site_death() {
+        let mut world = build_world(small_cfg(10), Policy::Diana);
+        // Preset uniform_grid marks site 1 as standby → 2 nodes there.
+        let root_before =
+            world.overlay.subgrid(1).unwrap().root().unwrap().id;
+        world.set_alive(1, false);
+        let root_after =
+            world.overlay.subgrid(1).unwrap().root().unwrap().id;
+        assert_ne!(root_before, root_after, "standby did not take over");
+        assert!(world.discovery.state_of(1).is_none(), "still registered");
+        world.set_alive(1, true);
+        assert!(world.discovery.peers_of(0).iter().any(|r| r.site == 1));
+    }
+
+    #[test]
+    fn discovery_heartbeats_published_during_run() {
+        let w = run_with(small_cfg(30), Policy::Diana);
+        for s in 0..4 {
+            let st = w.discovery.state_of(s).expect("no heartbeat");
+            assert!(st.alive);
+            assert!(st.last_update >= 0.0);
+        }
+    }
+
+    #[test]
+    fn dag_children_run_after_parents_near_their_data() {
+        let mut world = build_world(small_cfg(0), Policy::Diana);
+        let mut rng = Pcg64::new(3);
+        world.catalog = Catalog::from_config(&world.cfg, &mut rng);
+        let mut gen = WorkloadGen::new(5);
+        let cat = world.catalog.clone();
+        let subs: Vec<_> = (0..3)
+            .map(|i| {
+                gen.analysis_dag(&world.cfg, &cat,
+                                 crate::job::UserId(i), 0,
+                                 i as f64 * 10.0, 8)
+            })
+            .collect();
+        let merge_ids: Vec<u64> =
+            subs.iter().map(|s| s.jobs.last().unwrap().id.0).collect();
+        world.load_submissions(subs);
+        world.run().unwrap();
+        assert_eq!(world.completion(), 1.0);
+        for mid in merge_ids {
+            let merge = world.recorder.job(JobId(mid)).unwrap();
+            // The merge subjob starts only after every map finished.
+            assert!(merge.placed > 0.0);
+            assert!(merge.started >= merge.placed);
+            // Its input dataset exists in the catalog at a real site.
+            let ds = world.jobs[&mid].input.expect("merge has input");
+            assert!(!world.catalog.get(ds).replicas.is_empty());
+        }
+    }
+
+    #[test]
+    fn dag_merge_waits_for_all_parents() {
+        let mut world = build_world(small_cfg(0), Policy::Diana);
+        let mut rng = Pcg64::new(4);
+        world.catalog = Catalog::from_config(&world.cfg, &mut rng);
+        let mut gen = WorkloadGen::new(6);
+        let cat = world.catalog.clone();
+        let sub = gen.analysis_dag(&world.cfg, &cat,
+                                   crate::job::UserId(0), 0, 0.0, 10);
+        let map_ids: Vec<u64> =
+            sub.jobs[..10].iter().map(|j| j.id.0).collect();
+        let merge_id = sub.jobs.last().unwrap().id.0;
+        world.load_submissions(vec![sub]);
+        world.run().unwrap();
+        let merge_start = world.recorder.job(JobId(merge_id)).unwrap().started;
+        for mid in map_ids {
+            let parent = world.recorder.job(JobId(mid)).unwrap();
+            assert!(parent.delivered <= merge_start + 1e-9,
+                    "merge started before parent delivered");
+        }
+    }
+
+    #[test]
+    fn group_results_aggregate() {
+        let w = run_with(small_cfg(30), Policy::Diana);
+        // 30 jobs in bulks of 10 → 3 groups, all aggregated.
+        assert_eq!(w.group_results.len(), 3);
+        for g in &w.group_results {
+            assert!(g.total_output_mb > 0.0);
+        }
+    }
+}

@@ -1,0 +1,111 @@
+//! Minimal CLI flag parser (the offline crate set has no `clap`).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, positional
+//! arguments and subcommands. Only what the `diana` binary needs.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse raw args (without argv[0]); the first non-flag token is the
+    /// subcommand.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|nxt| !nxt.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.flags.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.insert(stripped.to_string(), "true".into());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("repro --figure fig7 --jobs=500 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("repro"));
+        assert_eq!(a.get("figure"), Some("fig7"));
+        assert_eq!(a.get_usize("jobs", 0), 500);
+        assert!(a.get_bool("verbose"));
+    }
+
+    #[test]
+    fn flag_equals_form() {
+        let a = parse("simulate --seed=99");
+        assert_eq!(a.get_u64("seed", 0), 99);
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = parse("serve cfg.toml extra");
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.positional, vec!["cfg.toml", "extra"]);
+    }
+
+    #[test]
+    fn boolean_flag_at_end() {
+        let a = parse("simulate --fast");
+        assert!(a.get_bool("fast"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("x");
+        assert_eq!(a.get_f64("missing", 1.5), 1.5);
+        assert_eq!(a.get_or("missing", "d"), "d");
+    }
+}

@@ -1,0 +1,10 @@
+//! Shared utilities: deterministic RNGs, statistics, CLI parsing, logging.
+
+pub mod cli;
+pub mod logging;
+pub mod rng;
+pub mod stats;
+
+pub use cli::Args;
+pub use rng::{Pcg64, SplitMix64};
+pub use stats::{Histogram, RateSeries, Summary};

@@ -1,0 +1,278 @@
+//! Deterministic PRNGs for the simulator: PCG64 (main stream) and
+//! SplitMix64 (seeding / cheap streams).
+//!
+//! The offline crate set has no `rand`; these are standard, well-tested
+//! generators (O'Neill PCG-XSL-RR 128/64 and Steele et al. SplitMix64)
+//! implemented from the published constants. Every simulation component
+//! derives its own stream from a root seed so runs are reproducible.
+
+/// SplitMix64 — used to expand a root seed into per-component seeds.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// PCG-XSL-RR 128/64: the simulator's main random stream.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360_ED05_1FC6_5DA4_4385_DF64_9FCC_F645;
+
+impl Pcg64 {
+    /// Seed with distinct state/stream values (derived via SplitMix64).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        let state = ((sm.next_u64() as u128) << 64) | sm.next_u64() as u128;
+        let stream = ((sm.next_u64() as u128) << 64) | sm.next_u64() as u128;
+        let mut rng = Self { state: 0, inc: (stream << 1) | 1 };
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(rng.inc);
+        rng.state = rng.state.wrapping_add(state);
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(rng.inc);
+        rng
+    }
+
+    /// Derive an independent child stream (component isolation).
+    pub fn fork(&mut self, tag: u64) -> Pcg64 {
+        Pcg64::new(self.next_u64() ^ tag.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xsl = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xsl.rotate_right(rot)
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f64 in [lo, hi).
+    #[inline]
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Uniform integer in [lo, hi) (hi > lo). Lemire-style rejection-free
+    /// bound via 128-bit multiply is overkill here; modulo bias is ≤ 2^-53
+    /// for the simulator's small ranges — use widening multiply anyway.
+    #[inline]
+    pub fn below(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0);
+        ((self.next_u64() as u128 * bound as u128) >> 64) as u64
+    }
+
+    #[inline]
+    pub fn range_u64(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + self.below(hi - lo)
+    }
+
+    /// Standard normal via Box–Muller (one value per call; simple > fast).
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.next_f64();
+            if u1 > 1e-300 {
+                let u2 = self.next_f64();
+                return (-2.0 * u1.ln()).sqrt()
+                    * (2.0 * std::f64::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    /// Normal with mean/std.
+    pub fn normal_ms(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// Exponential with the given rate (λ): inter-arrival sampling.
+    pub fn exponential(&mut self, rate: f64) -> f64 {
+        debug_assert!(rate > 0.0);
+        -self.next_f64().max(1e-300).ln_1p_neg() / rate
+    }
+
+    /// Log-normal (parameters of the underlying normal).
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        (mu + sigma * self.normal()).exp()
+    }
+
+    /// Poisson (Knuth for small λ, normal approx for large).
+    pub fn poisson(&mut self, lambda: f64) -> u64 {
+        if lambda < 30.0 {
+            let l = (-lambda).exp();
+            let mut k = 0u64;
+            let mut p = 1.0;
+            loop {
+                p *= self.next_f64();
+                if p <= l {
+                    return k;
+                }
+                k += 1;
+            }
+        } else {
+            self.normal_ms(lambda, lambda.sqrt()).max(0.0).round() as u64
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Pick an index with the given (unnormalised) weights.
+    pub fn weighted_index(&mut self, weights: &[f64]) -> usize {
+        let sum: f64 = weights.iter().sum();
+        let mut x = self.next_f64() * sum;
+        for (i, w) in weights.iter().enumerate() {
+            x -= w;
+            if x <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+}
+
+/// `ln(1-x)` helper with the sign flipped, used by `exponential`.
+trait Ln1pNeg {
+    fn ln_1p_neg(self) -> f64;
+}
+
+impl Ln1pNeg for f64 {
+    #[inline]
+    fn ln_1p_neg(self) -> f64 {
+        (1.0 - self).ln()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = Pcg64::new(42);
+        let mut b = Pcg64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Pcg64::new(1);
+        let mut b = Pcg64::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn fork_streams_are_independent() {
+        let mut root = Pcg64::new(7);
+        let mut a = root.fork(1);
+        let mut b = root.fork(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn uniform_bounds() {
+        let mut r = Pcg64::new(3);
+        for _ in 0..1000 {
+            let x = r.uniform(2.0, 5.0);
+            assert!((2.0..5.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn uniform_mean_is_centered() {
+        let mut r = Pcg64::new(4);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| r.next_f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn below_in_range() {
+        let mut r = Pcg64::new(5);
+        for _ in 0..1000 {
+            assert!(r.below(7) < 7);
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg64::new(6);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut r = Pcg64::new(8);
+        let n = 50_000;
+        let mean = (0..n).map(|_| r.exponential(2.0)).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.02, "mean={mean}");
+    }
+
+    #[test]
+    fn poisson_mean_small_and_large() {
+        let mut r = Pcg64::new(9);
+        for lambda in [3.0, 80.0] {
+            let n = 20_000;
+            let mean =
+                (0..n).map(|_| r.poisson(lambda) as f64).sum::<f64>() / n as f64;
+            assert!((mean - lambda).abs() < lambda * 0.05, "λ={lambda} mean={mean}");
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg64::new(10);
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn weighted_index_respects_weights() {
+        let mut r = Pcg64::new(11);
+        let w = [0.0, 0.0, 1.0];
+        for _ in 0..100 {
+            assert_eq!(r.weighted_index(&w), 2);
+        }
+        let w2 = [1.0, 3.0];
+        let hits1 = (0..40_000).filter(|_| r.weighted_index(&w2) == 1).count();
+        let frac = hits1 as f64 / 40_000.0;
+        assert!((frac - 0.75).abs() < 0.02, "frac={frac}");
+    }
+}

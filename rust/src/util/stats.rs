@@ -1,0 +1,222 @@
+//! Summary statistics, percentiles and fixed-width histograms used by the
+//! metrics recorder and the bench harness.
+
+/// Running summary of a scalar series.
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    values: Vec<f64>,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn from_values(values: impl IntoIterator<Item = f64>) -> Self {
+        Self { values: values.into_iter().collect() }
+    }
+
+    pub fn push(&mut self, v: f64) {
+        self.values.push(v);
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.values.iter().sum()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.values.is_empty() { 0.0 } else { self.sum() / self.len() as f64 }
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.values.len() < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        self.values.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+            / (self.len() - 1) as f64
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.values.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.values.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Percentile via linear interpolation on the sorted values (p in [0,100]).
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.values.is_empty() {
+            return 0.0;
+        }
+        let mut sorted = self.values.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = (p / 100.0) * (sorted.len() - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        if lo == hi {
+            sorted[lo]
+        } else {
+            let frac = rank - lo as f64;
+            sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+        }
+    }
+
+    pub fn median(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn values(&self) -> &[f64] {
+        &self.values
+    }
+}
+
+/// Fixed-width histogram over [lo, hi) with `bins` buckets
+/// (+ under/overflow buckets).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    lo: f64,
+    hi: f64,
+    counts: Vec<u64>,
+    underflow: u64,
+    overflow: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
+        assert!(hi > lo && bins > 0);
+        Self { lo, hi, counts: vec![0; bins], underflow: 0, overflow: 0 }
+    }
+
+    pub fn record(&mut self, v: f64) {
+        if v < self.lo {
+            self.underflow += 1;
+        } else if v >= self.hi {
+            self.overflow += 1;
+        } else {
+            let bin = ((v - self.lo) / (self.hi - self.lo)
+                * self.counts.len() as f64) as usize;
+            let idx = bin.min(self.counts.len() - 1);
+            self.counts[idx] += 1;
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum::<u64>() + self.underflow + self.overflow
+    }
+
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    pub fn bin_edges(&self, i: usize) -> (f64, f64) {
+        let w = (self.hi - self.lo) / self.counts.len() as f64;
+        (self.lo + w * i as f64, self.lo + w * (i + 1) as f64)
+    }
+}
+
+/// Time-bucketed rate counter: events per bucket over sim time.
+/// Used for the Fig 9–11 submission/execution/export/import rate series.
+#[derive(Clone, Debug)]
+pub struct RateSeries {
+    bucket: f64,
+    counts: Vec<f64>,
+}
+
+impl RateSeries {
+    pub fn new(bucket_seconds: f64) -> Self {
+        assert!(bucket_seconds > 0.0);
+        Self { bucket: bucket_seconds, counts: Vec::new() }
+    }
+
+    pub fn record(&mut self, t: f64, weight: f64) {
+        let idx = (t / self.bucket).max(0.0) as usize;
+        if idx >= self.counts.len() {
+            self.counts.resize(idx + 1, 0.0);
+        }
+        self.counts[idx] += weight;
+    }
+
+    /// (bucket_start_time, events_per_second) series.
+    pub fn series(&self) -> Vec<(f64, f64)> {
+        self.counts
+            .iter()
+            .enumerate()
+            .map(|(i, c)| (i as f64 * self.bucket, c / self.bucket))
+            .collect()
+    }
+
+    pub fn bucket_seconds(&self) -> f64 {
+        self.bucket
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic_moments() {
+        let s = Summary::from_values([1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.mean(), 2.5);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 4.0);
+        assert!((s.variance() - 5.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_empty_is_safe() {
+        let s = Summary::new();
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.percentile(50.0), 0.0);
+    }
+
+    #[test]
+    fn percentiles_interpolate() {
+        let s = Summary::from_values([0.0, 10.0]);
+        assert_eq!(s.percentile(0.0), 0.0);
+        assert_eq!(s.percentile(50.0), 5.0);
+        assert_eq!(s.percentile(100.0), 10.0);
+        let s2 = Summary::from_values((0..101).map(|i| i as f64));
+        assert_eq!(s2.percentile(95.0), 95.0);
+        assert_eq!(s2.median(), 50.0);
+    }
+
+    #[test]
+    fn histogram_binning() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for i in 0..10 {
+            h.record(i as f64 + 0.5);
+        }
+        h.record(-1.0);
+        h.record(11.0);
+        assert_eq!(h.total(), 12);
+        assert!(h.counts().iter().all(|&c| c == 1));
+        assert_eq!(h.bin_edges(0), (0.0, 1.0));
+    }
+
+    #[test]
+    fn rate_series_buckets() {
+        let mut r = RateSeries::new(10.0);
+        r.record(0.0, 1.0);
+        r.record(5.0, 1.0);
+        r.record(15.0, 1.0);
+        let s = r.series();
+        assert_eq!(s.len(), 2);
+        assert!((s[0].1 - 0.2).abs() < 1e-12); // 2 events / 10 s
+        assert!((s[1].1 - 0.1).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,295 @@
+//! CMS-like workload generator (§II): users submit bulk bursts of jobs
+//! with log-normal dataset/CPU distributions; submissions arrive as a
+//! Poisson process.
+
+use crate::config::GridConfig;
+use crate::data::Catalog;
+use crate::job::{Group, GroupId, Job, JobClass, JobId, UserId};
+use crate::util::Pcg64;
+
+/// A bulk submission: one group of jobs arriving together.
+///
+/// `deps` encodes the §II intra-job dataflow DAG as (parent, child)
+/// index pairs: a child subjob becomes schedulable only when all its
+/// parents have delivered, and its input is the dataset the parent
+/// produced (registered at the parent's execution site — "all data is
+/// passed, asynchronously, via datasets").
+#[derive(Clone, Debug)]
+pub struct Submission {
+    pub at: f64,
+    pub group: Group,
+    pub jobs: Vec<Job>,
+    pub deps: Vec<(usize, usize)>,
+}
+
+/// Deterministic workload generator.
+pub struct WorkloadGen {
+    rng: Pcg64,
+    next_job: u64,
+    next_group: u64,
+}
+
+impl WorkloadGen {
+    pub fn new(seed: u64) -> WorkloadGen {
+        WorkloadGen { rng: Pcg64::new(seed), next_job: 0, next_group: 0 }
+    }
+
+    fn draw_class(&mut self, cfg: &GridConfig) -> JobClass {
+        let w = &cfg.workload;
+        let x = self.rng.next_f64();
+        if x < w.frac_compute {
+            JobClass::ComputeIntensive
+        } else if x < w.frac_compute + w.frac_data {
+            JobClass::DataIntensive
+        } else {
+            JobClass::Both
+        }
+    }
+
+    /// One job for `user` submitted from `submit_site` at time `t`.
+    pub fn job(
+        &mut self,
+        cfg: &GridConfig,
+        catalog: &Catalog,
+        user: UserId,
+        submit_site: usize,
+        t: f64,
+        group: Option<GroupId>,
+    ) -> Job {
+        let class = self.draw_class(cfg);
+        let input = self.draw_input(catalog, class);
+        self.job_with(cfg, catalog, user, submit_site, t, group, class, input)
+    }
+
+    fn draw_input(&mut self, catalog: &Catalog, class: JobClass)
+        -> Option<usize> {
+        match class {
+            JobClass::ComputeIntensive => None,
+            _ if catalog.is_empty() => None,
+            _ => Some(self.rng.below(catalog.len() as u64) as usize),
+        }
+    }
+
+    /// One job with a fixed class/dataset (bulk groups share them —
+    /// §VII: "each batch of jobs has the same execution requirements").
+    #[allow(clippy::too_many_arguments)]
+    pub fn job_with(
+        &mut self,
+        cfg: &GridConfig,
+        catalog: &Catalog,
+        user: UserId,
+        submit_site: usize,
+        t: f64,
+        group: Option<GroupId>,
+        class: JobClass,
+        input: Option<usize>,
+    ) -> Job {
+        let w = &cfg.workload;
+        let in_mb = input.map(|ds| catalog.get(ds).size_mb).unwrap_or(0.0);
+        let cpu_sec = if w.cpu_sec_sigma <= 0.0 {
+            w.cpu_sec_median
+        } else {
+            self.rng
+                .lognormal(w.cpu_sec_median.max(1e-9).ln(), w.cpu_sec_sigma)
+                .clamp(1.0, 30.0 * 24.0 * 3600.0) // §II: seconds → months
+        };
+        let out_mb = if w.out_mb_median <= 0.0 {
+            0.0
+        } else {
+            self.rng.lognormal(w.out_mb_median.ln(), 0.5)
+        };
+        let id = JobId(self.next_job);
+        self.next_job += 1;
+        Job {
+            id,
+            user,
+            group,
+            class,
+            input,
+            in_mb,
+            out_mb,
+            exe_mb: w.exe_mb,
+            cpu_sec,
+            procs: 1 + self.rng.below(w.max_procs.max(1) as u64) as usize,
+            submit_site,
+            submit_time: t,
+            quota: cfg.scheduler.default_quota,
+            migrations: 0,
+        }
+    }
+
+    /// One bulk submission of `n` jobs from `user` at time `t`.
+    pub fn bulk(
+        &mut self,
+        cfg: &GridConfig,
+        catalog: &Catalog,
+        user: UserId,
+        submit_site: usize,
+        t: f64,
+        n: usize,
+    ) -> Submission {
+        let gid = GroupId(self.next_group);
+        self.next_group += 1;
+        // §VII: a bulk burst is homogeneous — one class, one dataset
+        // (the physicist's N subjobs over one dataset family).
+        let class = self.draw_class(cfg);
+        let input = self.draw_input(catalog, class);
+        let jobs: Vec<Job> = (0..n)
+            .map(|_| {
+                self.job_with(cfg, catalog, user, submit_site, t, Some(gid),
+                              class, input)
+            })
+            .collect();
+        let group = Group {
+            id: gid,
+            user,
+            jobs: jobs.iter().map(|j| j.id).collect(),
+            max_per_site: cfg.scheduler.max_group_per_site,
+            division_factor: cfg.scheduler.group_division_factor,
+            output_site: submit_site,
+            pin_site: None,
+        };
+        Submission { at: t, group, jobs, deps: Vec::new() }
+    }
+
+    /// A §II analysis job with intra-job dataflow: `n_map` parallel
+    /// feature-extraction subjobs over the group's dataset feeding one
+    /// merge subjob ("datasets and subjobs appear alternately"). The
+    /// merge subjob's input is resolved at run time to the dataset the
+    /// map stage produced (see `sim::World` dependency release).
+    pub fn analysis_dag(
+        &mut self,
+        cfg: &GridConfig,
+        catalog: &Catalog,
+        user: UserId,
+        submit_site: usize,
+        t: f64,
+        n_map: usize,
+    ) -> Submission {
+        let mut sub = self.bulk(cfg, catalog, user, submit_site, t, n_map);
+        // The merge subjob: compute-light, consumes the map outputs.
+        let merge = self.job_with(cfg, catalog, user, submit_site, t,
+                                  Some(sub.group.id),
+                                  crate::job::JobClass::DataIntensive, None);
+        sub.group.jobs.push(merge.id);
+        sub.jobs.push(merge);
+        let merge_idx = sub.jobs.len() - 1;
+        sub.deps = (0..n_map).map(|i| (i, merge_idx)).collect();
+        sub
+    }
+
+    /// The full submission schedule for a run: Poisson arrivals of bulk
+    /// groups, users round-robin, submit sites uniform, until
+    /// `cfg.workload.jobs` jobs have been generated.
+    pub fn schedule(&mut self, cfg: &GridConfig, catalog: &Catalog)
+        -> Vec<Submission> {
+        let w = &cfg.workload;
+        let mut out = Vec::new();
+        let mut t = 0.0;
+        let mut emitted = 0usize;
+        let mut user = 0u32;
+        while emitted < w.jobs {
+            let n = if w.bulk_size == 0 {
+                1
+            } else {
+                w.bulk_size.min(w.jobs - emitted)
+            };
+            let site = self.rng.below(cfg.sites.len() as u64) as usize;
+            let sub = self.bulk(cfg, catalog,
+                                UserId(user % w.users.max(1) as u32),
+                                site, t, n);
+            emitted += n;
+            user += 1;
+            out.push(sub);
+            t += self.rng.exponential(w.arrival_rate.max(1e-9));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    fn setup() -> (GridConfig, Catalog) {
+        let cfg = presets::uniform_grid(4, 8);
+        let mut rng = Pcg64::new(1);
+        let cat = Catalog::from_config(&cfg, &mut rng);
+        (cfg, cat)
+    }
+
+    #[test]
+    fn schedule_emits_requested_jobs() {
+        let (cfg, cat) = setup();
+        let mut g = WorkloadGen::new(1);
+        let subs = g.schedule(&cfg, &cat);
+        let total: usize = subs.iter().map(|s| s.jobs.len()).sum();
+        assert_eq!(total, cfg.workload.jobs);
+        // Arrival times strictly non-decreasing.
+        assert!(subs.windows(2).all(|w| w[0].at <= w[1].at));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let (cfg, cat) = setup();
+        let a = WorkloadGen::new(9).schedule(&cfg, &cat);
+        let b = WorkloadGen::new(9).schedule(&cfg, &cat);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.at, y.at);
+            assert_eq!(x.jobs.len(), y.jobs.len());
+            assert_eq!(x.jobs[0].cpu_sec, y.jobs[0].cpu_sec);
+        }
+    }
+
+    #[test]
+    fn class_mix_roughly_matches_config() {
+        let (cfg, cat) = setup();
+        let mut g = WorkloadGen::new(5);
+        let jobs: Vec<Job> = (0..4000)
+            .map(|i| g.job(&cfg, &cat, UserId(0), 0, i as f64, None))
+            .collect();
+        let data = jobs.iter()
+            .filter(|j| j.class == JobClass::DataIntensive).count();
+        let frac = data as f64 / jobs.len() as f64;
+        assert!((frac - cfg.workload.frac_data).abs() < 0.05, "frac={frac}");
+    }
+
+    #[test]
+    fn compute_jobs_have_no_input() {
+        let (cfg, cat) = setup();
+        let mut g = WorkloadGen::new(6);
+        for i in 0..500 {
+            let j = g.job(&cfg, &cat, UserId(0), 0, i as f64, None);
+            if j.class == JobClass::ComputeIntensive {
+                assert!(j.input.is_none());
+                assert_eq!(j.in_mb, 0.0);
+            } else {
+                assert!(j.input.is_some());
+                assert!(j.in_mb > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn group_ids_unique_and_jobs_linked() {
+        let (cfg, cat) = setup();
+        let mut g = WorkloadGen::new(7);
+        let a = g.bulk(&cfg, &cat, UserId(1), 0, 0.0, 10);
+        let b = g.bulk(&cfg, &cat, UserId(2), 1, 1.0, 10);
+        assert_ne!(a.group.id, b.group.id);
+        assert!(a.jobs.iter().all(|j| j.group == Some(a.group.id)));
+        assert_eq!(a.group.jobs.len(), 10);
+    }
+
+    #[test]
+    fn procs_within_bounds() {
+        let (cfg, cat) = setup();
+        let mut g = WorkloadGen::new(8);
+        for i in 0..200 {
+            let j = g.job(&cfg, &cat, UserId(0), 0, i as f64, None);
+            assert!(j.procs >= 1 && j.procs <= cfg.workload.max_procs);
+        }
+    }
+}

@@ -1,0 +1,8 @@
+//! Workload substrate: the CMS-like bulk generator (§II) and replayable
+//! trace I/O.
+
+pub mod generator;
+pub mod trace;
+
+pub use generator::{Submission, WorkloadGen};
+pub use trace::{read_trace, write_trace};

@@ -1,0 +1,169 @@
+//! Workload trace I/O: persist a generated submission schedule as CSV so
+//! runs are replayable and figures are regenerable from identical inputs.
+
+use std::io::{BufRead, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::job::{Group, GroupId, Job, JobClass, JobId, UserId};
+
+use super::generator::Submission;
+
+const HEADER: &str = "at,group,user,job,class,input,in_mb,out_mb,exe_mb,\
+cpu_sec,procs,submit_site,quota,max_per_site,division_factor";
+
+fn class_code(c: JobClass) -> u8 {
+    match c {
+        JobClass::ComputeIntensive => 0,
+        JobClass::DataIntensive => 1,
+        JobClass::Both => 2,
+    }
+}
+
+fn class_from(code: u8) -> JobClass {
+    match code {
+        0 => JobClass::ComputeIntensive,
+        1 => JobClass::DataIntensive,
+        _ => JobClass::Both,
+    }
+}
+
+pub fn write_trace(path: impl AsRef<Path>, subs: &[Submission]) -> Result<()> {
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path.as_ref())
+            .with_context(|| format!("creating {}", path.as_ref().display()))?,
+    );
+    writeln!(f, "{HEADER}")?;
+    for s in subs {
+        for j in &s.jobs {
+            writeln!(
+                f,
+                "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
+                s.at,
+                s.group.id.0,
+                j.user.0,
+                j.id.0,
+                class_code(j.class),
+                j.input.map(|d| d as i64).unwrap_or(-1),
+                j.in_mb,
+                j.out_mb,
+                j.exe_mb,
+                j.cpu_sec,
+                j.procs,
+                j.submit_site,
+                j.quota,
+                s.group.max_per_site,
+                s.group.division_factor,
+            )?;
+        }
+    }
+    Ok(())
+}
+
+pub fn read_trace(path: impl AsRef<Path>) -> Result<Vec<Submission>> {
+    let f = std::io::BufReader::new(
+        std::fs::File::open(path.as_ref())
+            .with_context(|| format!("opening {}", path.as_ref().display()))?,
+    );
+    let mut subs: Vec<Submission> = Vec::new();
+    for (ln, line) in f.lines().enumerate() {
+        let line = line?;
+        if ln == 0 || line.trim().is_empty() {
+            continue;
+        }
+        let cols: Vec<&str> = line.split(',').collect();
+        anyhow::ensure!(cols.len() == 15, "line {}: want 15 cols", ln + 1);
+        let at: f64 = cols[0].parse()?;
+        let gid = GroupId(cols[1].parse()?);
+        let input: i64 = cols[5].parse()?;
+        let job = Job {
+            id: JobId(cols[3].parse()?),
+            user: UserId(cols[2].parse()?),
+            group: Some(gid),
+            class: class_from(cols[4].parse()?),
+            input: (input >= 0).then_some(input as usize),
+            in_mb: cols[6].parse()?,
+            out_mb: cols[7].parse()?,
+            exe_mb: cols[8].parse()?,
+            cpu_sec: cols[9].parse()?,
+            procs: cols[10].parse()?,
+            submit_site: cols[11].parse()?,
+            submit_time: at,
+            quota: cols[12].parse()?,
+            migrations: 0,
+        };
+        match subs.last_mut().filter(|s| s.group.id == gid) {
+            Some(s) => {
+                s.group.jobs.push(job.id);
+                s.jobs.push(job);
+            }
+            None => {
+                subs.push(Submission {
+                    at,
+                    deps: Vec::new(),
+                    group: Group {
+                        id: gid,
+                        user: job.user,
+                        jobs: vec![job.id],
+                        max_per_site: cols[13].parse()?,
+                        division_factor: cols[14].parse()?,
+                        output_site: job.submit_site,
+                        pin_site: None,
+                    },
+                    jobs: vec![job],
+                });
+            }
+        }
+    }
+    Ok(subs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::data::Catalog;
+    use crate::util::Pcg64;
+    use crate::workload::WorkloadGen;
+
+    #[test]
+    fn roundtrip_preserves_everything() {
+        let cfg = presets::uniform_grid(3, 4);
+        let mut rng = Pcg64::new(1);
+        let cat = Catalog::from_config(&cfg, &mut rng);
+        let subs = WorkloadGen::new(2).schedule(&cfg, &cat);
+
+        let dir = std::env::temp_dir().join("diana-trace-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.csv");
+        write_trace(&path, &subs).unwrap();
+        let back = read_trace(&path).unwrap();
+
+        assert_eq!(subs.len(), back.len());
+        for (a, b) in subs.iter().zip(&back) {
+            assert_eq!(a.at, b.at);
+            assert_eq!(a.group.id, b.group.id);
+            assert_eq!(a.group.division_factor, b.group.division_factor);
+            assert_eq!(a.jobs.len(), b.jobs.len());
+            for (x, y) in a.jobs.iter().zip(&b.jobs) {
+                assert_eq!(x.id, y.id);
+                assert_eq!(x.class, y.class);
+                assert_eq!(x.input, y.input);
+                assert_eq!(x.cpu_sec, y.cpu_sec);
+                assert_eq!(x.procs, y.procs);
+            }
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn read_rejects_malformed() {
+        let dir = std::env::temp_dir().join("diana-trace-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.csv");
+        std::fs::write(&path, "header\n1,2,3\n").unwrap();
+        assert!(read_trace(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

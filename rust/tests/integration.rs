@@ -1,0 +1,211 @@
+//! Integration tests: full runs across layers and policies.
+
+use diana::config::{presets, EngineKind, GridConfig, Policy};
+use diana::coordinator::{generate_workload, run_simulation,
+                         run_simulation_with};
+use diana::metrics::JobRecord;
+
+fn small(jobs: usize) -> GridConfig {
+    let mut cfg = presets::paper_testbed();
+    cfg.workload.jobs = jobs;
+    cfg.workload.bulk_size = 25;
+    cfg.workload.cpu_sec_median = 60.0;
+    cfg.workload.cpu_sec_sigma = 0.4;
+    cfg.workload.in_mb_median = 100.0;
+    cfg
+}
+
+#[test]
+fn every_policy_completes_the_same_workload() {
+    let cfg = small(100);
+    let subs = generate_workload(&cfg);
+    for policy in [Policy::Diana, Policy::FcfsBroker, Policy::Greedy,
+                   Policy::DataLocal, Policy::Random] {
+        let mut c = cfg.clone();
+        c.scheduler.policy = policy;
+        let (_, r) = run_simulation_with(&c, subs.clone()).unwrap();
+        assert_eq!(r.jobs, 100, "{policy:?} lost jobs");
+        assert!(r.makespan_s > 0.0);
+    }
+}
+
+#[test]
+fn diana_beats_fcfs_on_data_heavy_workload() {
+    let mut cfg = small(300);
+    cfg.workload.in_mb_median = 1000.0;
+    cfg.workload.frac_compute = 0.1;
+    cfg.workload.frac_data = 0.7;
+    cfg.workload.frac_both = 0.2;
+    let subs = generate_workload(&cfg);
+    let (_, diana) = run_simulation_with(&cfg, subs.clone()).unwrap();
+    let mut fcfs = cfg.clone();
+    fcfs.scheduler.policy = Policy::FcfsBroker;
+    let (_, fcfs) = run_simulation_with(&fcfs, subs).unwrap();
+    assert!(
+        diana.turnaround.mean() < fcfs.turnaround.mean(),
+        "diana {:.0}s !< fcfs {:.0}s",
+        diana.turnaround.mean(),
+        fcfs.turnaround.mean()
+    );
+}
+
+#[test]
+fn lifecycle_timestamps_are_ordered_for_every_job() {
+    let (world, _) = run_simulation(&small(120)).unwrap();
+    let mut n = 0;
+    for r in world.recorder.completed_records() {
+        assert!(r.submit <= r.placed);
+        assert!(r.placed <= r.started);
+        assert!(r.started < r.finished);
+        assert!(r.finished <= r.delivered);
+        n += 1;
+    }
+    assert_eq!(n, 120);
+}
+
+#[test]
+fn conservation_no_job_executes_twice() {
+    let (world, report) = run_simulation(&small(150)).unwrap();
+    assert_eq!(report.jobs, 150);
+    assert_eq!(world.recorder.n_tracked(), 150);
+    // Sum of per-site executed events equals total jobs.
+    let executed: f64 = (0..5)
+        .map(|s| {
+            world.recorder.site_series(s).executed.series().iter()
+                .map(|p| p.1 * 60.0)
+                .sum::<f64>()
+        })
+        .sum();
+    assert!((executed - 150.0).abs() < 1.0, "executed sum {executed}");
+}
+
+#[test]
+fn seeds_change_outcomes_but_runs_are_reproducible() {
+    let mut a = small(60);
+    a.seed = 1;
+    let mut b = small(60);
+    b.seed = 2;
+    let (_, ra1) = run_simulation(&a).unwrap();
+    let (_, ra2) = run_simulation(&a).unwrap();
+    let (_, rb) = run_simulation(&b).unwrap();
+    assert_eq!(ra1.makespan_s, ra2.makespan_s);
+    assert_ne!(ra1.makespan_s, rb.makespan_s);
+}
+
+#[test]
+fn xla_engine_drives_identical_schedule() {
+    if !diana::runtime::artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let cfg = small(80);
+    let subs = generate_workload(&cfg);
+    let mut xla = cfg.clone();
+    xla.scheduler.engine = EngineKind::Xla;
+    let (_, rx) = run_simulation_with(&xla, subs.clone()).unwrap();
+    let mut rust = cfg;
+    rust.scheduler.engine = EngineKind::Rust;
+    let (_, rr) = run_simulation_with(&rust, subs).unwrap();
+    assert_eq!(rx.jobs, rr.jobs);
+    assert_eq!(rx.makespan_s, rr.makespan_s, "engines disagree");
+    assert_eq!(rx.migrations, rr.migrations);
+    assert_eq!(rx.queue_time.mean(), rr.queue_time.mean());
+}
+
+#[test]
+fn cms_tier_grid_respects_data_gravity() {
+    let mut cfg = presets::cms_tier_grid();
+    cfg.workload.jobs = 200;
+    cfg.workload.bulk_size = 50;
+    cfg.workload.cpu_sec_median = 300.0;
+    let (world, report) = run_simulation(&cfg).unwrap();
+    assert_eq!(report.jobs, 200);
+    // Data-heavy CMS jobs should mostly execute at the data-rich tiers
+    // (T0/T1 = sites 0–2 hold 100% of datasets between them).
+    let at_data_tiers = world
+        .recorder
+        .completed_records()
+        .filter(|r| r.exec_site <= 2)
+        .count();
+    assert!(
+        at_data_tiers * 2 > 200,
+        "only {at_data_tiers}/200 ran at data tiers"
+    );
+}
+
+#[test]
+fn failure_injection_dead_site_is_never_used() {
+    use diana::cost::RustEngine;
+    use diana::scheduler::make_picker;
+    use diana::sim::World;
+
+    let cfg = small(60);
+    let picker = make_picker(
+        cfg.scheduler.policy,
+        Box::new(RustEngine::new()),
+        &cfg.scheduler,
+        cfg.seed,
+    );
+    let mut world = World::new(cfg.clone(), picker,
+                               Box::new(RustEngine::new()));
+    world.set_alive(1, false);
+    world.load_submissions(generate_workload(&cfg));
+    world.run().unwrap();
+    for r in world.recorder.completed_records() {
+        assert_ne!(r.exec_site, 1);
+    }
+}
+
+#[test]
+fn trace_replay_reproduces_simulation() {
+    let cfg = small(50);
+    let subs = generate_workload(&cfg);
+    let dir = std::env::temp_dir().join("diana-integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("replay.csv");
+    diana::workload::write_trace(&path, &subs).unwrap();
+    let replayed = diana::workload::read_trace(&path).unwrap();
+    let (_, a) = run_simulation_with(&cfg, subs).unwrap();
+    let (_, b) = run_simulation_with(&cfg, replayed).unwrap();
+    assert_eq!(a.makespan_s, b.makespan_s);
+    assert_eq!(a.queue_time.mean(), b.queue_time.mean());
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn summary_metrics_are_internally_consistent() {
+    let (world, report) = run_simulation(&small(90)).unwrap();
+    // Turnaround ≥ queue + exec for every job (delivery adds time).
+    for r in world.recorder.completed_records() {
+        let lhs = r.turnaround();
+        let rhs = r.queue_time() + r.exec_time();
+        assert!(lhs + 1e-6 >= rhs, "{lhs} < {rhs}");
+    }
+    assert!(report.turnaround.mean() + 1e-6
+        >= report.queue_time.mean());
+    assert_eq!(report.jobs, world.recorder.n_completed());
+}
+
+#[test]
+fn overload_produces_migrations_and_balanced_finish() {
+    let mut cfg = small(200);
+    cfg.workload.bulk_size = 200;
+    cfg.workload.arrival_rate = 100.0;
+    cfg.scheduler.congestion_thrs = 0.05;
+    cfg.scheduler.migration_period_s = 10.0;
+    // All 200 jobs pinned to site 0 (a flood).
+    let mut subs = generate_workload(&cfg);
+    for s in &mut subs {
+        s.group.pin_site = Some(0);
+    }
+    let (world, report) = run_simulation_with(&cfg, subs).unwrap();
+    assert_eq!(report.jobs, 200);
+    assert!(report.migrations > 0, "flood produced no migration");
+    // At least two sites participated in execution.
+    let sites_used: std::collections::BTreeSet<usize> = world
+        .recorder
+        .completed_records()
+        .map(|r| r.exec_site)
+        .collect();
+    assert!(sites_used.len() >= 2, "all work stayed at {sites_used:?}");
+}

@@ -1,0 +1,347 @@
+//! Property-based tests over the DIANA invariants.
+//!
+//! The offline crate set has no `proptest`; `prop!` below is a seeded
+//! random-case harness (PCG64 per case, failing seed reported) covering
+//! the same ground: generate → check invariant → shrink-by-reseed.
+
+use diana::cost::{reprioritize_rust, schedule_step_rust, CostInputs,
+                  Weights};
+use diana::job::{JobId, UserId};
+use diana::migration::{decide, MigrationDecision, PeerReport};
+use diana::priority::{self, queue_for_priority};
+use diana::queues::{MetaJob, MultilevelQueue};
+use diana::util::Pcg64;
+
+/// Run `cases` random cases; panics with the failing seed.
+fn prop<F: Fn(&mut Pcg64) -> Result<(), String>>(name: &str, cases: u64, f: F) {
+    for case in 0..cases {
+        let seed = 0xD1A7A ^ (case.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut rng = Pcg64::new(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!("property `{name}` failed (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+fn random_inputs(rng: &mut Pcg64) -> (CostInputs, Weights) {
+    let nj = 1 + rng.below(64) as usize;
+    let ns = 1 + rng.below(16) as usize;
+    let mut inp = CostInputs::new(nj, ns);
+    for j in 0..nj {
+        let row = inp.job_row_mut(j);
+        row[0] = rng.uniform(0.0, 50_000.0) as f32;
+        row[1] = rng.uniform(0.0, 5_000.0) as f32;
+        row[2] = rng.uniform(0.0, 500.0) as f32;
+        row[3] = rng.uniform(1.0, 7200.0) as f32;
+    }
+    let mut any_alive = false;
+    for s in 0..ns {
+        let row = inp.site_row_mut(s);
+        row[0] = rng.below(1000) as f32;
+        row[1] = rng.uniform(0.5, 1000.0) as f32;
+        row[2] = rng.next_f64() as f32;
+        row[3] = rng.uniform(1.0, 10_000.0) as f32;
+        row[4] = rng.uniform(0.0, 0.2) as f32;
+        row[5] = if rng.next_f64() < 0.8 { 1.0 } else { 0.0 };
+        any_alive |= row[5] == 1.0;
+    }
+    if !any_alive {
+        inp.site_row_mut(0)[5] = 1.0;
+    }
+    for v in inp.link_bw.iter_mut() {
+        *v = rng.uniform(0.0, 10_000.0) as f32; // 0 exercises the guard
+    }
+    for v in inp.link_loss.iter_mut() {
+        *v = rng.uniform(0.0, 0.3) as f32;
+    }
+    let w = Weights {
+        w5: rng.uniform(0.1, 4.0) as f32,
+        w6: rng.uniform(0.0, 2.0) as f32,
+        w7: rng.uniform(0.0, 4.0) as f32,
+        q_total: rng.below(5000) as f32,
+        w_net: rng.uniform(0.1, 2.0) as f32,
+        w_dtc: rng.uniform(0.1, 2.0) as f32,
+        ..Weights::default()
+    };
+    (inp, w)
+}
+
+#[test]
+fn prop_cost_matrix_finite_and_argmin_consistent() {
+    prop("cost finite + argmin", 200, |rng| {
+        let (inp, w) = random_inputs(rng);
+        let out = schedule_step_rust(&inp, &w);
+        for (i, &t) in out.total.iter().enumerate() {
+            if !t.is_finite() {
+                return Err(format!("total[{i}] = {t}"));
+            }
+        }
+        for j in 0..inp.n_jobs {
+            let best = out.best_total[j] as usize;
+            for s in 0..inp.n_sites {
+                if out.total_at(j, best) > out.total_at(j, s) {
+                    return Err(format!(
+                        "job {j}: best {best} not minimal vs {s}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dead_sites_never_selected_while_alive_exists() {
+    prop("dead site exclusion", 200, |rng| {
+        let (inp, w) = random_inputs(rng);
+        let alive: Vec<bool> =
+            (0..inp.n_sites).map(|s| inp.site_feats[s * 8 + 5] == 1.0)
+                .collect();
+        if !alive.iter().any(|&a| a) {
+            return Ok(());
+        }
+        let out = schedule_step_rust(&inp, &w);
+        for j in 0..inp.n_jobs {
+            for (name, arr) in [("total", &out.best_total),
+                                ("compute", &out.best_compute),
+                                ("data", &out.best_data)] {
+                let s = arr[j] as usize;
+                if !alive[s] {
+                    return Err(format!("job {j}: {name} chose dead {s}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_priority_always_in_unit_interval() {
+    prop("Pr ∈ (-1, 1]", 300, |rng| {
+        let l = 1 + rng.below(200) as usize;
+        let mut jobs = Vec::with_capacity(l * 4);
+        for _ in 0..l {
+            jobs.extend_from_slice(&[
+                1.0 + rng.below(100) as f32,
+                1.0 + rng.below(64) as f32,
+                rng.uniform(1.0, 10_000.0) as f32,
+                0.0,
+            ]);
+        }
+        let totals = [rng.uniform(1.0, 2000.0) as f32,
+                      rng.uniform(1.0, 100_000.0) as f32, l as f32, 0.0];
+        let (pr, qi) = reprioritize_rust(&jobs, &totals);
+        for (i, &p) in pr.iter().enumerate() {
+            if !(p > -1.0 - 1e-5 && p <= 1.0 + 1e-5) {
+                return Err(format!("pr[{i}] = {p}"));
+            }
+            if qi[i] != queue_for_priority(p) as i32 {
+                return Err(format!("queue mismatch at {i}: {p} → {}", qi[i]));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_priority_monotone_in_user_job_count() {
+    prop("Pr decreasing in n", 200, |rng| {
+        let t = 1.0 + rng.below(32) as f32;
+        let q = rng.uniform(10.0, 5000.0) as f32;
+        let cap_t = rng.uniform(1.0, 1000.0) as f32;
+        let cap_q = rng.uniform(10.0, 50_000.0) as f32;
+        let mut last = f32::INFINITY;
+        for n in 1..60 {
+            let p = priority::pr(n as f32, q, t, cap_t, cap_q);
+            if p >= last {
+                return Err(format!("n={n}: {p} !< {last}"));
+            }
+            last = p;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_multilevel_queue_conserves_jobs() {
+    prop("queue conservation", 150, |rng| {
+        let mut q = MultilevelQueue::new(0.0);
+        let n = 1 + rng.below(100) as usize;
+        for i in 0..n {
+            q.insert(MetaJob {
+                job: JobId(i as u64),
+                user: UserId(rng.below(5) as u32),
+                procs: 1 + rng.below(8) as u32,
+                quota: rng.uniform(10.0, 5000.0) as f32,
+                priority: rng.uniform(-0.999, 1.0) as f32,
+                enqueued_at: rng.uniform(0.0, 1000.0),
+            });
+        }
+        if q.len() != n {
+            return Err(format!("after insert: {} != {n}", q.len()));
+        }
+        // A re-prioritization sweep must not create or lose jobs.
+        let mut e = diana::cost::RustEngine::new();
+        let sweep = priority::sweep(&mut e, &q.all_facts())
+            .map_err(|e| e.to_string())?;
+        q.apply(&sweep);
+        if q.len() != n {
+            return Err(format!("after sweep: {} != {n}", q.len()));
+        }
+        // Drain + reinsert conserves too.
+        let drained = q.drain_low_priority(1 + rng.below(10) as usize);
+        let d = drained.len();
+        for j in drained {
+            q.insert(j);
+        }
+        if q.len() != n {
+            return Err(format!("after drain({d})+reinsert: {}", q.len()));
+        }
+        // Popping everything yields each job exactly once.
+        let mut seen = std::collections::BTreeSet::new();
+        while let Some(j) = q.pop_best(2000.0) {
+            if !seen.insert(j.job.0) {
+                return Err(format!("job {:?} popped twice", j.job));
+            }
+        }
+        if seen.len() != n {
+            return Err(format!("popped {} of {n}", seen.len()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pop_order_respects_queue_levels() {
+    prop("pop order", 150, |rng| {
+        let mut q = MultilevelQueue::new(0.0);
+        let n = 2 + rng.below(60) as usize;
+        for i in 0..n {
+            q.insert(MetaJob {
+                job: JobId(i as u64),
+                user: UserId(0),
+                procs: 1,
+                quota: 1.0,
+                priority: rng.uniform(-0.999, 1.0) as f32,
+                enqueued_at: i as f64,
+            });
+        }
+        let mut last_queue = 0usize;
+        while let Some(j) = q.pop_best(1e9) {
+            let qi = queue_for_priority(j.priority);
+            if qi < last_queue {
+                return Err(format!(
+                    "Q{} popped after Q{}", qi + 1, last_queue + 1
+                ));
+            }
+            last_queue = qi;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_migration_never_cycles_and_never_picks_dead() {
+    prop("migration sanity", 200, |rng| {
+        let mk = |site: usize, rng: &mut Pcg64| PeerReport {
+            site,
+            jobs_ahead: rng.below(50) as usize,
+            queue_len: rng.below(100) as usize,
+            total_cost: rng.uniform(0.0, 100.0) as f32,
+            alive: rng.next_f64() < 0.8,
+        };
+        let mut local = mk(0, rng);
+        local.alive = true;
+        let peers: Vec<PeerReport> = (1..6).map(|s| mk(s, rng)).collect();
+        // Exhausted migration budget → always stay.
+        if decide(local, &peers, 1, 1) != MigrationDecision::StayLocal {
+            return Err("migrated past budget".into());
+        }
+        match decide(local, &peers, 1, 0) {
+            MigrationDecision::Migrate { to } => {
+                let p = peers.iter().find(|p| p.site == to).unwrap();
+                if !p.alive {
+                    return Err(format!("picked dead peer {to}"));
+                }
+                if p.jobs_ahead >= local.jobs_ahead {
+                    return Err("peer not strictly better".into());
+                }
+                if p.total_cost > local.total_cost {
+                    return Err("peer costs more".into());
+                }
+            }
+            MigrationDecision::StayLocal => {}
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_toml_numbers_roundtrip() {
+    prop("toml numbers", 100, |rng| {
+        let i = rng.next_u64() as i64 / 2;
+        let f = rng.uniform(-1e6, 1e6);
+        let text = format!("a = {i}\nb = {f}\nc = true\n");
+        let t = diana::config::toml::parse(&text).map_err(|e| e.to_string())?;
+        if t["a"].as_int() != Some(i) {
+            return Err(format!("int {i} mangled"));
+        }
+        let back = t["b"].as_float().unwrap();
+        if (back - f).abs() > 1e-9 * f.abs().max(1.0) {
+            return Err(format!("float {f} → {back}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sjf_minimises_mean_wait_among_random_orders() {
+    prop("SJF optimality", 100, |rng| {
+        use diana::queues::{mean_wait_sequential, sjf_order};
+        let n = 2 + rng.below(20) as usize;
+        let jobs: Vec<diana::job::Job> = (0..n)
+            .map(|i| diana::job::Job {
+                id: JobId(i as u64),
+                user: UserId(0),
+                group: None,
+                class: diana::job::JobClass::Both,
+                input: None,
+                in_mb: 0.0,
+                out_mb: 0.0,
+                exe_mb: 0.0,
+                cpu_sec: rng.uniform(1.0, 1000.0),
+                // procs ties to cpu so the proc-based key is aligned:
+                procs: 1,
+                submit_site: 0,
+                submit_time: 0.0,
+                quota: 1.0,
+                migrations: 0,
+            })
+            .collect();
+        let sjf = sjf_order(&jobs);
+        let sjf_wait = mean_wait_sequential(&jobs, &sjf);
+        let mut order: Vec<usize> = (0..n).collect();
+        for _ in 0..10 {
+            rng.shuffle(&mut order);
+            if sjf_wait > mean_wait_sequential(&jobs, &order) + 1e-6 {
+                return Err("random order beat SJF".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_padding_preserves_results() {
+    prop("padding equivalence", 100, |rng| {
+        let (inp, w) = random_inputs(rng);
+        let direct = schedule_step_rust(&inp, &w);
+        let padded = schedule_step_rust(&diana::runtime::pad_inputs(&inp), &w);
+        for j in 0..inp.n_jobs {
+            if padded.best_total[j] != direct.best_total[j] {
+                return Err(format!("job {j} argmin changed by padding"));
+            }
+        }
+        Ok(())
+    });
+}
