@@ -1,0 +1,19 @@
+#!/usr/bin/env bash
+# Tier-1 gate + doc/bench guards. Run from anywhere; operates on the
+# workspace at this script's directory.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+echo "== tier-1: build =="
+cargo build --release
+
+echo "== bench wiring (harness = false targets compile) =="
+cargo build --release --benches
+
+echo "== tier-1: tests =="
+cargo test -q
+
+echo "== docs (warnings are errors) =="
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+
+echo "ci.sh: all green"

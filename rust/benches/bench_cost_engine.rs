@@ -50,7 +50,7 @@ fn main() {
         r.throughput(nj as f64, "jobs");
     }
 
-    if diana::runtime::artifacts_available() {
+    if cfg!(feature = "xla") && diana::runtime::artifacts_available() {
         let mut xla = diana::runtime::XlaEngine::load_default().unwrap();
         for (nj, ns) in [(1, 32), (25, 5), (256, 32), (1024, 32)] {
             let inp = inputs(&mut rng, nj, ns);
@@ -61,6 +61,6 @@ fn main() {
             r.throughput(nj as f64, "jobs");
         }
     } else {
-        println!("(artifacts missing — xla engine skipped)");
+        println!("(xla feature off or artifacts missing — xla engine skipped)");
     }
 }

@@ -33,7 +33,7 @@ fn main() {
         });
         r.throughput(l as f64, "jobs");
     }
-    if diana::runtime::artifacts_available() {
+    if cfg!(feature = "xla") && diana::runtime::artifacts_available() {
         let mut xla = diana::runtime::XlaEngine::load_default().unwrap();
         for l in [16usize, 512, 4096] {
             let (jobs, totals) = queue(&mut rng, l);
@@ -43,6 +43,6 @@ fn main() {
             r.throughput(l as f64, "jobs");
         }
     } else {
-        println!("(artifacts missing — xla engine skipped)");
+        println!("(xla feature off or artifacts missing — xla engine skipped)");
     }
 }

@@ -10,10 +10,9 @@
 //!      ranked sites, assigning each subgroup to the next site with room
 //!      (spilling to the best site when capacity runs out everywhere).
 
-use anyhow::Result;
-
 use crate::job::{Group, Job};
 use crate::scheduler::{GridView, SitePicker};
+use crate::util::error::Result;
 
 /// Placement plan: per-subgroup (site, job indices into the group).
 #[derive(Clone, Debug, PartialEq)]
@@ -79,7 +78,7 @@ pub fn plan_group(
         (0..view.n_sites()).filter(|&s| costs[s].is_finite()).collect();
     ranked.sort_by(|&a, &b| costs[a].partial_cmp(&costs[b]).unwrap());
     if ranked.is_empty() {
-        anyhow::bail!("no alive sites to place group {:?}", group.id);
+        crate::bail!("no alive sites to place group {:?}", group.id);
     }
 
     // Whole group on the best site if it fits its cap.

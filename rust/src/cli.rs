@@ -1,11 +1,10 @@
 //! CLI subcommand implementations for the `diana` binary.
 
-use anyhow::Result;
-
 use crate::config::{self, GridConfig, Policy};
 use crate::coordinator::{run_simulation, RunReport};
 use crate::metrics::{fmt_secs, render_table};
 use crate::priority::{aging_curve, frequency_curve};
+use crate::util::error::{DianaError, Result};
 use crate::util::Args;
 
 pub const USAGE: &str = "\
@@ -38,11 +37,11 @@ pub fn load_config(args: &Args) -> Result<GridConfig> {
     };
     if let Some(p) = args.get("policy") {
         cfg.scheduler.policy = Policy::from_name(p)
-            .ok_or_else(|| anyhow::anyhow!("unknown policy {p}"))?;
+            .ok_or_else(|| crate::err!("unknown policy {p}"))?;
     }
     if let Some(e) = args.get("engine") {
         cfg.scheduler.engine = config::EngineKind::from_name(e)
-            .ok_or_else(|| anyhow::anyhow!("unknown engine {e}"))?;
+            .ok_or_else(|| crate::err!("unknown engine {e}"))?;
     }
     if let Some(j) = args.get("jobs") {
         cfg.workload.jobs = j.parse()?;
@@ -51,7 +50,7 @@ pub fn load_config(args: &Args) -> Result<GridConfig> {
         cfg.workload.bulk_size = b.parse()?;
     }
     cfg.seed = args.get_u64("seed", cfg.seed);
-    cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
+    cfg.validate().map_err(DianaError::msg)?;
     Ok(cfg)
 }
 

@@ -29,7 +29,8 @@
 
 use std::path::Path;
 
-use anyhow::{anyhow, bail, Context, Result};
+use crate::util::error::{Context, Result};
+use crate::{bail, err};
 
 use super::schema::*;
 use super::toml::{self, Table, Value};
@@ -41,7 +42,7 @@ pub fn load_file(path: impl AsRef<Path>) -> Result<GridConfig> {
 }
 
 pub fn load_str(text: &str) -> Result<GridConfig> {
-    let root = toml::parse(text).map_err(|e| anyhow!("{e}"))?;
+    let root = toml::parse(text).map_err(|e| err!("{e}"))?;
     let mut cfg = GridConfig {
         name: str_or(&root, "name", "unnamed"),
         seed: int_or(&root, "seed", 1) as u64,
@@ -54,11 +55,11 @@ pub fn load_str(text: &str) -> Result<GridConfig> {
     let sites = root
         .get("site")
         .and_then(Value::as_array)
-        .ok_or_else(|| anyhow!("config needs at least one [[site]]"))?;
+        .ok_or_else(|| err!("config needs at least one [[site]]"))?;
     for (i, sv) in sites.iter().enumerate() {
         let t = sv
             .as_table()
-            .ok_or_else(|| anyhow!("[[site]] #{i} is not a table"))?;
+            .ok_or_else(|| err!("[[site]] #{i} is not a table"))?;
         cfg.sites.push(SiteConfig {
             name: str_or(t, "name", &format!("site{i}")),
             cpus: int_or(t, "cpus", 1) as usize,
@@ -86,7 +87,7 @@ pub fn load_str(text: &str) -> Result<GridConfig> {
             for lv in links {
                 let t = lv
                     .as_table()
-                    .ok_or_else(|| anyhow!("[[network.link]] not a table"))?;
+                    .ok_or_else(|| err!("[[network.link]] not a table"))?;
                 d.links.push(LinkConfig {
                     from: str_or(t, "from", ""),
                     to: str_or(t, "to", ""),
@@ -102,11 +103,11 @@ pub fn load_str(text: &str) -> Result<GridConfig> {
         let d = &mut cfg.scheduler;
         if let Some(p) = s.get("policy").and_then(Value::as_str) {
             d.policy = Policy::from_name(p)
-                .ok_or_else(|| anyhow!("unknown policy `{p}`"))?;
+                .ok_or_else(|| err!("unknown policy `{p}`"))?;
         }
         if let Some(e) = s.get("engine").and_then(Value::as_str) {
             d.engine = EngineKind::from_name(e)
-                .ok_or_else(|| anyhow!("unknown engine `{e}`"))?;
+                .ok_or_else(|| err!("unknown engine `{e}`"))?;
         }
         d.w5 = float_or(s, "w5", d.w5);
         d.w6 = float_or(s, "w6", d.w6);

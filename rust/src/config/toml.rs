@@ -20,7 +20,7 @@ pub enum Value {
 
 pub type Table = BTreeMap<String, Value>;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub struct ParseError {
     pub line: usize,
     pub msg: String,
@@ -31,6 +31,8 @@ impl fmt::Display for ParseError {
         write!(f, "toml parse error at line {}: {}", self.line, self.msg)
     }
 }
+
+impl std::error::Error for ParseError {}
 
 fn err(line: usize, msg: impl Into<String>) -> ParseError {
     ParseError { line, msg: msg.into() }

@@ -2,7 +2,7 @@
 //! world) and produce the standard report. Every example, bench and
 //! repro figure goes through this entry point.
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use crate::config::GridConfig;
 use crate::data::Catalog;

@@ -2,7 +2,7 @@
 //! §X re-prioritization + §X congestion tracking, sitting on top of the
 //! site's local batch system.
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use crate::cost::CostEngine;
 use crate::job::{Job, JobId};

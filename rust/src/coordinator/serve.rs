@@ -4,22 +4,24 @@
 //! Python never appears here, and each request is one matchmaking round).
 //!
 //! Protocol (one request per line, one reply per line):
-//!   SUBMIT <jdl-classad-on-one-line>  → OK <group-id> site=<name> …
-//!   STATUS                            → sites + queue depths
-//!   QUIT                              → closes the connection
+//!
+//! ```text
+//! SUBMIT <jdl-classad-on-one-line>  → OK <group-id> site=<name> …
+//! STATUS                            → sites + queue depths
+//! QUIT                              → closes the connection
+//! ```
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
-use anyhow::{Context, Result};
-
 use crate::config::GridConfig;
 use crate::data::Catalog;
 use crate::job::{BulkSpec, Jdl, Job, JobClass, JobId, UserId};
 use crate::network::{PingerMonitor, Topology};
 use crate::scheduler::{GridView, SitePicker, SiteSnapshot};
+use crate::util::error::{Context, Result};
 use crate::util::Pcg64;
 
 /// Shared server state: one picker + a live (synthetic) grid snapshot.
@@ -166,11 +168,11 @@ impl Server {
     pub fn serve(self, addr: &str) -> Result<()> {
         let listener = TcpListener::bind(addr)
             .with_context(|| format!("binding {addr}"))?;
-        log::info!("diana serving on {addr}");
+        crate::info!("diana serving on {addr}");
         for stream in listener.incoming() {
             let stream = stream?;
             if let Err(e) = self.handle_conn(stream) {
-                log::warn!("connection error: {e:#}");
+                crate::warn!("connection error: {e:#}");
             }
         }
         Ok(())

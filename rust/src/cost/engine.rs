@@ -9,7 +9,7 @@
 //! Schedulers talk to the trait only, so the whole stack can run with or
 //! without artifacts and the cross-check suite can diff the two backends.
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use super::model::{schedule_step_rust, CostInputs, ScheduleOut, Weights};
 

@@ -1,16 +1,40 @@
 //! §IV cost model — pure-rust mirror of the Pallas kernel numerics.
 //!
+//! This is the crate's second extension point (the first is
+//! [`SitePicker`](crate::scheduler::SitePicker)): alternative cost
+//! backends implement [`CostEngine`](crate::cost::CostEngine) against
+//! the [`CostInputs`] / [`ScheduleOut`] shapes defined here.
+//!
+//! The §IV formulas evaluated per (job j, site s) pair:
+//!
+//! ```text
+//! comp[s]     = (Qi/Pi)·w5 + (Q/Pi)·w6 + load·w7        (site-only)
+//! net[j,s]    = loss / bw                                (NetworkCost)
+//! dtc[j,s]    = (in_mb/bw)·(1+loss)
+//!             + (out_mb+exe_mb)·(1+client_loss)/client_bw
+//! total[j,s]  = w_net·net + comp[s] + w_dtc·dtc + dead[s]
+//! ```
+//!
+//! where `dead[s] = (1 - alive)·BIG` masks failed sites out of every
+//! argmin while any alive site exists.
+//!
 //! KEEP IN SYNC with `python/compile/kernels/ref.py` (the authoritative
 //! contract): same feature layouts, same f32 expressions in the same
 //! order, same guards. The integration suite cross-checks this module
 //! against the XLA-executed artifact to 1e-5 relative.
 
-/// Bandwidth guard and dead-site penalty (mirrors ref.py defaults).
+/// Division guard for bandwidths/capabilities (mirrors ref.py defaults).
 pub const EPS: f32 = 1e-6;
+/// Dead-site penalty added to every cost of a non-alive site.
 pub const BIG: f32 = 1e9;
 
+/// Columns per job row in [`CostInputs::job_feats`]:
+/// `in_mb, out_mb, exe_mb, cpu_sec, class, _pad`.
 pub const JOB_FEATS: usize = 6;
+/// Columns per site row in [`CostInputs::site_feats`]:
+/// `Qi, Pi, load, client_bw, client_loss, alive, _pad, _pad`.
 pub const SITE_FEATS: usize = 8;
+/// Length of the packed weight vector ([`Weights::to_array`]).
 pub const N_WEIGHTS: usize = 8;
 
 /// §IV weight vector, laid out exactly as the kernel's `weights[8]`.
@@ -29,6 +53,8 @@ pub struct Weights {
 }
 
 impl Weights {
+    /// Build the kernel weight vector from the §IV/§X scheduler config
+    /// plus the current global queued-job count Q.
     pub fn from_scheduler(
         cfg: &crate::config::SchedulerConfig,
         q_total: f32,
@@ -45,6 +71,8 @@ impl Weights {
         }
     }
 
+    /// Pack into the kernel's fixed `weights[8]` layout:
+    /// `[w5, w6, w7, Q, w_net, w_dtc, eps, big]`.
     pub fn to_array(self) -> [f32; N_WEIGHTS] {
         [self.w5, self.w6, self.w7, self.q_total, self.w_net, self.w_dtc,
          self.eps, self.big]
@@ -67,6 +95,12 @@ impl Default for Weights {
 }
 
 /// Row-major feature matrices for one scheduling round.
+///
+/// Invariants a [`CostEngine`](crate::cost::CostEngine) may rely on:
+/// `job_feats.len() == n_jobs × JOB_FEATS`, `site_feats.len() ==
+/// n_sites × SITE_FEATS`, and both link matrices are `n_jobs × n_sites`
+/// row-major. [`CostInputs::new`] establishes them; the row accessors
+/// preserve them.
 #[derive(Clone, Debug, Default)]
 pub struct CostInputs {
     pub n_jobs: usize,
@@ -82,6 +116,8 @@ pub struct CostInputs {
 }
 
 impl CostInputs {
+    /// Zeroed matrices of the right shapes (link bandwidth defaults to 1
+    /// so untouched entries stay finite).
     pub fn new(n_jobs: usize, n_sites: usize) -> CostInputs {
         CostInputs {
             n_jobs,
@@ -93,11 +129,13 @@ impl CostInputs {
         }
     }
 
+    /// Mutable view of job `j`'s feature row (length [`JOB_FEATS`]).
     #[inline]
     pub fn job_row_mut(&mut self, j: usize) -> &mut [f32] {
         &mut self.job_feats[j * JOB_FEATS..(j + 1) * JOB_FEATS]
     }
 
+    /// Mutable view of site `s`'s feature row (length [`SITE_FEATS`]).
     #[inline]
     pub fn site_row_mut(&mut self, s: usize) -> &mut [f32] {
         &mut self.site_feats[s * SITE_FEATS..(s + 1) * SITE_FEATS]
@@ -105,6 +143,11 @@ impl CostInputs {
 }
 
 /// Outputs of one §V matchmaking round (shapes mirror the AOT tuple).
+///
+/// `best_*` hold per-job argmin site indices under the three §V class
+/// keys: `best_compute` minimises `comp + w_net·net`, `best_data`
+/// minimises `w_dtc·dtc + w_net·net`, `best_total` minimises the full
+/// total — all with dead-site masking applied.
 #[derive(Clone, Debug, Default)]
 pub struct ScheduleOut {
     pub n_jobs: usize,
@@ -119,6 +162,7 @@ pub struct ScheduleOut {
 }
 
 impl ScheduleOut {
+    /// Total cost of placing job `j` at site `s`.
     #[inline]
     pub fn total_at(&self, j: usize, s: usize) -> f32 {
         self.total[j * self.n_sites + s]

@@ -14,13 +14,26 @@ pub struct DataflowDag {
     indeg: Vec<usize>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum DagError {
-    #[error("edge ({0}, {1}) out of range")]
     OutOfRange(usize, usize),
-    #[error("dataflow graph has a cycle (§II requires acyclic)")]
     Cycle,
 }
+
+impl std::fmt::Display for DagError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DagError::OutOfRange(u, v) => {
+                write!(f, "edge ({u}, {v}) out of range")
+            }
+            DagError::Cycle => {
+                write!(f, "dataflow graph has a cycle (§II requires acyclic)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for DagError {}
 
 impl DataflowDag {
     pub fn new(n: usize) -> DataflowDag {

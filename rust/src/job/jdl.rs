@@ -27,9 +27,16 @@ pub enum JdlValue {
     List(Vec<JdlValue>),
 }
 
-#[derive(Debug, thiserror::Error)]
-#[error("jdl parse error: {0}")]
+#[derive(Debug)]
 pub struct JdlError(pub String);
+
+impl std::fmt::Display for JdlError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "jdl parse error: {}", self.0)
+    }
+}
+
+impl std::error::Error for JdlError {}
 
 /// A parsed JDL classad.
 #[derive(Clone, Debug, Default)]

@@ -12,7 +12,8 @@
 //!    and Pr(n) re-prioritization kernels in JAX/Pallas, AOT-lowered to
 //!    HLO text and executed from rust via PJRT (`runtime`).
 //!
-//! Quickstart:
+//! Quickstart (library; for the CLI see README.md — `cargo run
+//! --release -- simulate`):
 //!
 //! ```no_run
 //! use diana::config::presets;
@@ -20,9 +21,19 @@
 //!
 //! let mut cfg = presets::paper_testbed();
 //! cfg.workload.jobs = 100;
-//! let (_world, report) = run_simulation(&cfg).unwrap();
+//! let (_world, report) = run_simulation(&cfg).expect("simulation failed");
+//! println!("policy: {}", report.policy);
 //! println!("mean queue time: {:.1}s", report.queue_time.mean());
+//! println!("makespan: {:.0}s over {} jobs", report.makespan_s, report.jobs);
 //! ```
+//!
+//! The paper-section → module map lives in `docs/ARCHITECTURE.md`; the
+//! two extension points future work implements against are
+//! [`scheduler::SitePicker`] and [`cost::CostEngine`].
+//!
+//! The crate has **no external dependencies** (offline build): errors
+//! are [`util::error`], logging is [`util::logging`], RNG is
+//! [`util::rng`], and the TOML/JDL parsers are in-tree subsets.
 
 pub mod bulk;
 pub mod cli;

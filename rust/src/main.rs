@@ -1,8 +1,6 @@
 //! `diana` CLI — see README for usage.
 
-use anyhow::Result;
-
-use diana::util::Args;
+use diana::util::{Args, Result};
 
 fn main() -> Result<()> {
     diana::util::logging::init();

@@ -17,7 +17,7 @@ pub struct Registration {
 
 /// The decentralised-registry stand-in. One instance per simulation; the
 /// P2P aspect (every meta-scheduler can reach it) matches MonALISA's
-//  replicated-repository behaviour without modelling its internals.
+/// replicated-repository behaviour without modelling its internals.
 #[derive(Clone, Debug, Default)]
 pub struct Discovery {
     registrations: BTreeMap<usize, Registration>,

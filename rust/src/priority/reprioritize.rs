@@ -6,7 +6,7 @@
 //! `CostEngine` — the XLA priority kernel on the hot path, the rust
 //! mirror otherwise.
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use crate::cost::CostEngine;
 use crate::job::{JobId, UserId};

@@ -10,8 +10,6 @@
 //!     jobs with 1/10 the CPUs per site to keep the test quick: the
 //!     ratio, which is what the table shows, is identical).
 
-use anyhow::Result;
-
 use crate::bulk::{makespan_hours_continuous, plan_group};
 use crate::config::presets;
 use crate::coordinator::{run_simulation_with, generate_workload};
@@ -20,6 +18,7 @@ use crate::data::Catalog;
 use crate::metrics::render_table;
 use crate::network::{PingerMonitor, Topology};
 use crate::scheduler::{DianaScheduler, GridView, SiteSnapshot};
+use crate::util::error::Result;
 
 /// The §VIII allocation for a given division factor, via the real bulk
 /// planner, then the continuous makespan (the paper's arithmetic).

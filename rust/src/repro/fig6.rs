@@ -5,12 +5,11 @@
 //! user B (q=1700) submits a 1-CPU job. After each arrival the whole
 //! queue re-prioritizes; the final table is the paper's Fig 6.
 
-use anyhow::Result;
-
 use crate::cost::RustEngine;
 use crate::job::{JobId, UserId};
 use crate::metrics::render_table;
 use crate::priority::{sweep, QueuedFacts};
+use crate::util::error::Result;
 
 struct Step {
     label: &'static str,

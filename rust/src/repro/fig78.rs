@@ -7,11 +7,10 @@
 //! to DIANA Scheduling"), and execution times improve through better
 //! placement (Fig 8).
 
-use anyhow::Result;
-
 use crate::config::{presets, GridConfig, Policy};
 use crate::coordinator::{generate_workload, run_simulation_with};
 use crate::metrics::{render_table, JobRecord};
+use crate::util::error::Result;
 
 pub const JOB_COUNTS: &[usize] = &[25, 50, 100, 200, 500, 1000];
 

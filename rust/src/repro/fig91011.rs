@@ -8,14 +8,13 @@
 //!    constant peak rate and simultaneously exports and imports
 //!    (data-affinity exchange).
 
-use anyhow::Result;
-
 use crate::config::{presets, GridConfig, Policy};
 use crate::coordinator::run_simulation_with;
 use crate::data::Catalog;
 use crate::job::UserId;
 use crate::metrics::render_table;
 use crate::sim::World;
+use crate::util::error::Result;
 use crate::util::Pcg64;
 use crate::workload::{Submission, WorkloadGen};
 

@@ -1,7 +1,7 @@
 //! Dispatch table for the figure-reproduction harness
 //! (`diana repro --figure <id>`; `all` runs everything).
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 pub fn available_figures() -> Vec<&'static str> {
     vec!["fig3", "fig4", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11"]
@@ -17,7 +17,7 @@ pub fn run_figure(name: &str) -> Result<String> {
         "fig9" => super::fig91011::run_fig9(),
         "fig10" => super::fig91011::run_fig10(),
         "fig11" => super::fig91011::run_fig11(),
-        other => anyhow::bail!(
+        other => crate::bail!(
             "unknown figure `{other}` (have: {})",
             available_figures().join(", ")
         ),

@@ -1,14 +1,20 @@
 //! PJRT runtime: load the AOT HLO-text artifacts, compile them once on
 //! the CPU PJRT client, and execute them from the coordinator hot path.
 //!
-//! Interchange is HLO *text* (see python/compile/aot.py and
-//! /opt/xla-example/README.md): jax ≥ 0.5 emits 64-bit instruction ids in
-//! serialized protos which xla_extension 0.5.1 rejects; the text parser
-//! reassigns ids.
+//! Interchange is HLO *text* (see python/compile/aot.py): jax ≥ 0.5
+//! emits 64-bit instruction ids in serialized protos which xla_extension
+//! 0.5.1 rejects; the text parser reassigns ids.
+//!
+//! Everything touching the `xla` crate is behind the `xla` cargo feature
+//! (the offline build has no PJRT); artifact discovery stays available so
+//! `EngineKind::Auto` can make its decision either way.
 
-use std::path::{Path, PathBuf};
+use std::path::PathBuf;
+#[cfg(feature = "xla")]
+use std::path::Path;
 
-use anyhow::{Context, Result};
+#[cfg(feature = "xla")]
+use crate::util::error::{Context, Result};
 
 /// Artifact names produced by `make artifacts`.
 pub const COST_MATRIX_HLO: &str = "cost_matrix.hlo.txt";
@@ -29,17 +35,20 @@ pub fn artifacts_dir() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }
 
+/// Whether both required AOT artifacts exist on disk.
 pub fn artifacts_available() -> bool {
     let dir = artifacts_dir();
     dir.join(COST_MATRIX_HLO).exists() && dir.join(PRIORITY_HLO).exists()
 }
 
 /// A compiled PJRT program.
+#[cfg(feature = "xla")]
 pub struct Program {
     exe: xla::PjRtLoadedExecutable,
     pub name: String,
 }
 
+#[cfg(feature = "xla")]
 impl Program {
     pub fn execute(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
         let result = self
@@ -54,6 +63,7 @@ impl Program {
 }
 
 /// The shared PJRT client plus the compiled DIANA programs.
+#[cfg(feature = "xla")]
 pub struct Runtime {
     #[allow(dead_code)]
     client: xla::PjRtClient,
@@ -64,6 +74,7 @@ pub struct Runtime {
     pub priority: Program,
 }
 
+#[cfg(feature = "xla")]
 impl Runtime {
     /// Load + compile both artifacts from the default directory.
     pub fn load_default() -> Result<Runtime> {
@@ -97,17 +108,19 @@ impl Runtime {
 }
 
 /// Build a rank-2 f32 literal from a row-major slice.
+#[cfg(feature = "xla")]
 pub fn literal_2d(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
-    anyhow::ensure!(data.len() == rows * cols, "shape mismatch");
+    crate::ensure!(data.len() == rows * cols, "shape mismatch");
     Ok(xla::Literal::vec1(data).reshape(&[rows as i64, cols as i64])?)
 }
 
 /// Build a rank-1 f32 literal.
+#[cfg(feature = "xla")]
 pub fn literal_1d(data: &[f32]) -> xla::Literal {
     xla::Literal::vec1(data)
 }
 
-#[cfg(test)]
+#[cfg(all(test, feature = "xla"))]
 mod tests {
     use super::*;
 

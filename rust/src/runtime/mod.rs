@@ -1,11 +1,25 @@
 //! PJRT runtime: artifact loading/compilation, shape padding and the
 //! XLA-backed `CostEngine`.
 
+// Fail fast with instructions on `--features xla` / --all-features: the
+// feature needs a vendored PJRT crate the offline image doesn't ship.
+// (rustc will also print unresolved-`xla` errors from client.rs — this
+// message is the one that says what to do about them.)
+#[cfg(feature = "xla")]
+compile_error!(
+    "the `xla` feature requires a vendored `xla` (PJRT) crate: add it to \
+     rust/Cargo.toml [dependencies] as `xla = { path = \"...\", optional = \
+     true }`, change the feature to `xla = [\"dep:xla\"]`, and remove this \
+     guard (src/runtime/mod.rs)"
+);
+
 pub mod client;
 pub mod pad;
 pub mod xla_engine;
 
-pub use client::{artifacts_available, artifacts_dir, Program, Runtime};
+pub use client::{artifacts_available, artifacts_dir};
+#[cfg(feature = "xla")]
+pub use client::{Program, Runtime};
 pub use pad::{pad_inputs, pad_queue, tiles, unpad_matrix, AOT_JOBS,
               AOT_QUEUE, AOT_SITES};
 pub use xla_engine::{make_engine, XlaEngine};

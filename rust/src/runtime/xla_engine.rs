@@ -1,20 +1,28 @@
 //! `XlaEngine`: the `CostEngine` backed by the AOT-compiled JAX/Pallas
 //! artifacts — the production hot path. Bigger batches tile over the
 //! fixed AOT shapes; smaller ones are padded (see `pad`).
+//!
+//! Without the `xla` cargo feature (the offline build), `XlaEngine` is a
+//! stub whose constructor fails with a clear message and
+//! `EngineKind::Auto` resolves to the pure-rust engine.
 
-use anyhow::Result;
+use crate::cost::{CostEngine, CostInputs, ScheduleOut, Weights};
+use crate::util::error::Result;
 
-use crate::cost::{CostEngine, CostInputs, ScheduleOut, Weights, JOB_FEATS,
-                  SITE_FEATS};
-
+#[cfg(feature = "xla")]
+use crate::cost::{JOB_FEATS, SITE_FEATS};
+#[cfg(feature = "xla")]
 use super::client::{literal_1d, literal_2d, Runtime};
+#[cfg(feature = "xla")]
 use super::pad::{pad_inputs_to, pad_queue, tiles, unpad_matrix, AOT_JOBS,
                  AOT_JOBS_SMALL, AOT_QUEUE, AOT_SITES};
 
+#[cfg(feature = "xla")]
 pub struct XlaEngine {
     rt: Runtime,
 }
 
+#[cfg(feature = "xla")]
 impl XlaEngine {
     pub fn load_default() -> Result<XlaEngine> {
         Ok(XlaEngine { rt: Runtime::load_default()? })
@@ -44,7 +52,7 @@ impl XlaEngine {
             literal_1d(&w.to_array()),
         ];
         let out = program.execute(&args)?;
-        anyhow::ensure!(out.len() == 7, "want 7-tuple, got {}", out.len());
+        crate::ensure!(out.len() == 7, "want 7-tuple, got {}", out.len());
         let (nj, ns) = (inp.n_jobs, inp.n_sites);
         let total_pad: Vec<f32> = out[0].to_vec()?;
         let best_total: Vec<i32> = out[1].to_vec()?;
@@ -67,10 +75,11 @@ impl XlaEngine {
     }
 }
 
+#[cfg(feature = "xla")]
 impl CostEngine for XlaEngine {
     fn schedule_step(&mut self, inputs: &CostInputs, weights: &Weights)
         -> Result<ScheduleOut> {
-        anyhow::ensure!(
+        crate::ensure!(
             inputs.n_sites <= AOT_SITES,
             "XlaEngine supports ≤ {AOT_SITES} sites (got {})",
             inputs.n_sites
@@ -122,7 +131,7 @@ impl CostEngine for XlaEngine {
                 literal_1d(totals),
             ];
             let out = self.rt.priority.execute(&args)?;
-            anyhow::ensure!(out.len() == 2, "want 2-tuple");
+            crate::ensure!(out.len() == 2, "want 2-tuple");
             let p: Vec<f32> = out[0].to_vec()?;
             let q: Vec<i32> = out[1].to_vec()?;
             pr.extend_from_slice(&p[..range.len()]);
@@ -136,8 +145,46 @@ impl CostEngine for XlaEngine {
     }
 }
 
+/// Stub used when the crate is built without the `xla` feature: it
+/// type-checks everywhere the real engine does, and every entry point
+/// fails loudly. Tests and benches that want the real engine must gate
+/// on `cfg!(feature = "xla") && artifacts_available()` — the artifact
+/// check alone is not enough to avoid the stub.
+#[cfg(not(feature = "xla"))]
+pub struct XlaEngine {
+    _private: (),
+}
+
+#[cfg(not(feature = "xla"))]
+impl XlaEngine {
+    pub fn load_default() -> Result<XlaEngine> {
+        crate::bail!(
+            "diana was built without the `xla` feature — the PJRT engine \
+             is unavailable; use --engine rust (or auto) instead"
+        )
+    }
+}
+
+#[cfg(not(feature = "xla"))]
+impl CostEngine for XlaEngine {
+    fn schedule_step(&mut self, _inputs: &CostInputs, _weights: &Weights)
+        -> Result<ScheduleOut> {
+        crate::bail!("XlaEngine stub: built without the `xla` feature")
+    }
+
+    fn reprioritize(&mut self, _jobs: &[f32], _totals: &[f32; 4])
+        -> Result<(Vec<f32>, Vec<i32>)> {
+        crate::bail!("XlaEngine stub: built without the `xla` feature")
+    }
+
+    fn name(&self) -> &'static str {
+        "xla-unavailable"
+    }
+}
+
 /// Build the configured engine: `Xla` (hard requirement), `Rust`, or
-/// `Auto` (XLA when artifacts exist, rust otherwise).
+/// `Auto` (XLA when the feature is on and artifacts exist, rust
+/// otherwise).
 pub fn make_engine(kind: crate::config::EngineKind)
     -> Result<Box<dyn CostEngine>> {
     use crate::config::EngineKind;
@@ -145,17 +192,20 @@ pub fn make_engine(kind: crate::config::EngineKind)
         EngineKind::Rust => Ok(Box::new(crate::cost::RustEngine::new())),
         EngineKind::Xla => Ok(Box::new(XlaEngine::load_default()?)),
         EngineKind::Auto => {
-            if super::client::artifacts_available() {
+            if cfg!(feature = "xla") && super::client::artifacts_available() {
                 Ok(Box::new(XlaEngine::load_default()?))
             } else {
-                log::warn!("artifacts missing — falling back to rust engine");
+                crate::warn!(
+                    "XLA unavailable (feature off or artifacts missing) — \
+                     falling back to rust engine"
+                );
                 Ok(Box::new(crate::cost::RustEngine::new()))
             }
         }
     }
 }
 
-#[cfg(test)]
+#[cfg(all(test, feature = "xla"))]
 mod tests {
     use super::*;
     use crate::cost::{schedule_step_rust, reprioritize_rust};

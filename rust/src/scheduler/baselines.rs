@@ -7,9 +7,8 @@
 //! * [`DataLocal`] — MyGrid-like, always moves the job to its data (§III).
 //! * [`RandomPick`] — uniform random alive site (sanity floor).
 
-use anyhow::Result;
-
 use crate::job::Job;
+use crate::util::error::Result;
 use crate::util::Pcg64;
 
 use super::traits::{GridView, Placement, SitePicker};

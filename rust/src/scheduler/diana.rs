@@ -6,7 +6,7 @@
 //! runs through a `CostEngine`: the AOT Pallas/XLA artifact on the hot
 //! path or the pure-rust mirror.
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use crate::cost::{sort_sites_by_cost, CostEngine, CostInputs, ScheduleOut,
                   Weights};

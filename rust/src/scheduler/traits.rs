@@ -1,42 +1,67 @@
 //! The `SitePicker` abstraction: given a batch of jobs (sharing a
 //! submitting client location — one bulk group, §VIII) and a snapshot of
 //! the grid, choose an execution site per job.
+//!
+//! This is one of the crate's two extension points (the other is
+//! [`CostEngine`](crate::cost::CostEngine)): a new scheduling policy is
+//! a new `SitePicker` implementation, registered in
+//! [`make_picker`](crate::scheduler::make_picker). Pickers are consumed
+//! by the DES ([`World`](crate::sim::World)), by the §VIII bulk splitter
+//! ([`plan_group`](crate::bulk::plan_group)) and by the TCP front end
+//! ([`coordinator::serve`](crate::coordinator::serve)).
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use crate::data::Catalog;
 use crate::job::Job;
 use crate::network::PingerMonitor;
 
 /// Per-site snapshot the pickers see (meta + local queue state).
+///
+/// Field names follow §IV of the paper: `queue_len` is Qi, `capability`
+/// is Pi = cpus × speed, `load` is the busy-slot fraction feeding the
+/// SiteLoad cost term.
 #[derive(Clone, Copy, Debug)]
 pub struct SiteSnapshot {
     /// Qi — jobs waiting (local batch queue + meta queues).
     pub queue_len: usize,
     /// Pi — cpus × speed.
     pub capability: f64,
-    /// Busy-slot fraction [0,1].
+    /// Busy-slot fraction in `[0, 1]`.
     pub load: f64,
+    /// Slots free right now (capability minus running work).
     pub free_slots: usize,
+    /// Raw CPU count (used for caps, independent of speed).
     pub cpus: usize,
+    /// False once the site failed or was drained; pickers must never
+    /// choose a dead site while an alive one exists.
     pub alive: bool,
 }
 
 /// Read-only view of the grid for one scheduling round.
+///
+/// Pickers must base decisions on the *monitor's beliefs* (`monitor`),
+/// not ground truth — stale or noisy network data is part of the model.
 pub struct GridView<'a> {
+    /// Simulation (or wall-clock) time of this round, seconds.
     pub now: f64,
+    /// One snapshot per site, indexed by site id.
     pub sites: &'a [SiteSnapshot],
+    /// The PingER/MonALISA stand-in: per-link RTT/loss/bandwidth beliefs.
     pub monitor: &'a PingerMonitor,
+    /// Replica catalog for resolving each job's input dataset.
     pub catalog: &'a Catalog,
     /// Total queued jobs across the grid (the §IV global Q).
     pub q_total: usize,
 }
 
 impl GridView<'_> {
+    /// Number of sites in the view.
     pub fn n_sites(&self) -> usize {
         self.sites.len()
     }
 
+    /// Indices of the sites currently alive, ascending.
     pub fn alive_sites(&self) -> impl Iterator<Item = usize> + '_ {
         self.sites
             .iter()
@@ -46,11 +71,23 @@ impl GridView<'_> {
     }
 }
 
-/// A placement decision for one job.
+/// A placement decision for one job: the chosen site index.
 pub type Placement = usize;
 
 /// The matchmaking policy (DIANA §V or a §XI baseline).
-/// Not `Send`: DIANA's picker may hold a PJRT client (see `CostEngine`).
+///
+/// Implementor contract:
+///
+///  * `pick` must return exactly one [`Placement`] per input job, each a
+///    valid index into `view.sites`, and must avoid dead sites whenever
+///    an alive one exists.
+///  * All jobs of one call share `jobs[i].submit_site` (a bulk group has
+///    one submitting client); implementations may rely on that.
+///  * Implementations should be deterministic given the same view and
+///    their own seed/state — the DES depends on reproducibility.
+///
+/// Not `Send`: DIANA's picker may hold a PJRT client (see
+/// [`CostEngine`](crate::cost::CostEngine)); each thread builds its own.
 pub trait SitePicker {
     /// Choose a site per job. All jobs share `jobs[i].submit_site`.
     fn pick(&mut self, jobs: &[Job], view: &GridView<'_>)
@@ -72,8 +109,8 @@ pub trait SitePicker {
 
     /// Per-site placement cost for one representative job (class-matched
     /// for DIANA) — lets the §VIII splitter weight subgroup sizes by how
-    /// *competitive* each site is, not just its CPU count. Default:
-    /// rank position (1, 2, 3…; dead sites +inf).
+    /// *competitive* each site is, not just its CPU count. Dead sites
+    /// must cost `f64::INFINITY`. Default: rank position (1, 2, 3…).
     fn site_costs(&mut self, job: &Job, view: &GridView<'_>)
         -> Result<Vec<f64>> {
         let ranked = self.rank_sites(job, view)?;
@@ -84,5 +121,6 @@ pub trait SitePicker {
         Ok(costs)
     }
 
+    /// Short stable policy name (used in reports and the CLI).
     fn name(&self) -> &'static str;
 }

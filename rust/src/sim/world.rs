@@ -5,8 +5,6 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::Result;
-
 use crate::bulk::{plan_group, Aggregator, GroupResult};
 use crate::config::{GridConfig, Policy};
 use crate::coordinator::MetaScheduler;
@@ -18,6 +16,7 @@ use crate::migration::{decide, MigrationDecision, PeerReport};
 use crate::network::{PingerMonitor, Topology};
 use crate::p2p::{Discovery, Overlay, PeerState};
 use crate::scheduler::{build_cost_inputs, GridView, SitePicker, SiteSnapshot};
+use crate::util::error::Result;
 use crate::util::Pcg64;
 use crate::workload::Submission;
 
@@ -231,7 +230,7 @@ impl World {
                 .schedule(self.cfg.scheduler.migration_period_s, Ev::MigrationCheck);
         }
         while let Some((t, ev)) = self.events.pop() {
-            anyhow::ensure!(
+            crate::ensure!(
                 self.events.processed() < MAX_EVENTS,
                 "event budget exceeded — livelock?"
             );
@@ -454,7 +453,7 @@ impl World {
                 if *remaining == 0 {
                     self.blocked.remove(&kid);
                     if let Err(e) = self.release_job(JobId(kid), t) {
-                        log::error!("release of {kid} failed: {e:#}");
+                        crate::error!("release of {kid} failed: {e:#}");
                     }
                 }
             }

@@ -1,0 +1,157 @@
+//! Minimal internal error handling (the offline crate set has no
+//! `anyhow`).
+//!
+//! [`DianaError`] carries a human-readable message chain; the crate-wide
+//! [`Result`] alias defaults its error type to it. The [`Context`] trait
+//! mirrors anyhow's `.context(...)` / `.with_context(...)`, and the
+//! crate-root macros `err!`, `bail!` and `ensure!` build or return errors
+//! from format strings:
+//!
+//! ```
+//! use diana::util::error::{Context, Result};
+//!
+//! fn parse_port(s: &str) -> Result<u16> {
+//!     let port: u16 = s.parse().context("bad port")?;
+//!     diana::ensure!(port != 0, "port 0 is reserved");
+//!     Ok(port)
+//! }
+//!
+//! assert!(parse_port("7077").is_ok());
+//! assert!(parse_port("x").unwrap_err().to_string().contains("bad port"));
+//! ```
+
+use std::fmt;
+
+/// The crate-wide error type: a flattened message chain.
+///
+/// Deliberately NOT `std::error::Error`: that keeps the blanket
+/// `From<E: Error>` impl below coherent (the same trick anyhow uses), so
+/// `?` converts any standard error into a `DianaError` automatically.
+pub struct DianaError {
+    msg: String,
+}
+
+impl DianaError {
+    /// Build an error from any displayable message.
+    pub fn msg(m: impl Into<String>) -> DianaError {
+        DianaError { msg: m.into() }
+    }
+}
+
+impl fmt::Display for DianaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for DianaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error> From<E> for DianaError {
+    fn from(e: E) -> DianaError {
+        DianaError::msg(e.to_string())
+    }
+}
+
+/// Crate-wide result alias (error type defaults to [`DianaError`]).
+pub type Result<T, E = DianaError> = std::result::Result<T, E>;
+
+/// Attach context to a failing `Result`, anyhow-style: the context is
+/// prepended to the underlying error message (`"context: cause"`).
+pub trait Context<T> {
+    /// Wrap the error with a fixed context message.
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+
+    /// Wrap the error with a lazily-built context message.
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| DianaError::msg(format!("{ctx}: {e}")))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| DianaError::msg(format!("{}: {e}", f())))
+    }
+}
+
+/// Build a [`DianaError`](crate::util::error::DianaError) from a format
+/// string: `err!("unknown policy {p}")`.
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::util::error::DianaError::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an error built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::err!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        Ok(std::fs::read_to_string("/nonexistent/diana-error-test")?)
+    }
+
+    #[test]
+    fn std_errors_convert_via_question_mark() {
+        let e = io_fail().unwrap_err();
+        assert!(!e.to_string().is_empty());
+    }
+
+    #[test]
+    fn context_prepends_message() {
+        let r: std::result::Result<(), std::fmt::Error> =
+            Err(std::fmt::Error);
+        let e = r.context("rendering table").unwrap_err();
+        assert!(e.to_string().starts_with("rendering table: "));
+        let r: std::result::Result<(), String> = Err("inner".into());
+        let e = r.with_context(|| format!("step {}", 3)).unwrap_err();
+        assert_eq!(e.to_string(), "step 3: inner");
+    }
+
+    #[test]
+    fn macros_build_and_bail() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x >= 0, "negative input {x}");
+            if x > 100 {
+                bail!("too big: {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(5).unwrap(), 5);
+        assert_eq!(f(-1).unwrap_err().to_string(), "negative input -1");
+        assert_eq!(f(101).unwrap_err().to_string(), "too big: 101");
+        let e = err!("plain {}", "message");
+        assert_eq!(format!("{e}"), "plain message");
+        assert_eq!(format!("{e:?}"), "plain message");
+    }
+}

@@ -1,32 +1,40 @@
-//! Tiny stderr logger for the `log` facade (no `env_logger` offline).
-//! Level comes from `DIANA_LOG` (error|warn|info|debug|trace), default info.
+//! Tiny self-contained stderr logger (the offline crate set has no `log`
+//! facade or `env_logger`). Level comes from `DIANA_LOG`
+//! (error|warn|info|debug|trace), default info.
+//!
+//! Use through the crate-root macros: `crate::info!("...")`,
+//! `crate::warn!("...")`, etc. — they are free, lock-free checks against
+//! one atomic when the level is disabled.
 
-use log::{Level, LevelFilter, Log, Metadata, Record};
+use std::sync::atomic::{AtomicUsize, Ordering};
 
-struct StderrLogger {
-    max: Level,
+/// Log severity, most severe first.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
 }
 
-impl Log for StderrLogger {
-    fn enabled(&self, metadata: &Metadata) -> bool {
-        metadata.level() <= self.max
-    }
-
-    fn log(&self, record: &Record) {
-        if self.enabled(record.metadata()) {
-            eprintln!(
-                "[{:5}] {}: {}",
-                record.level(),
-                record.target(),
-                record.args()
-            );
+impl Level {
+    /// Fixed-width label used in the stderr line.
+    pub fn label(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
         }
     }
-
-    fn flush(&self) {}
 }
 
-/// Install the logger once; later calls are no-ops.
+static MAX_LEVEL: AtomicUsize = AtomicUsize::new(Level::Info as usize);
+
+/// Install the level from `DIANA_LOG`; calling again re-reads the env
+/// (the logger itself is stateless, so init is idempotent).
 pub fn init() {
     let level = match std::env::var("DIANA_LOG").as_deref() {
         Ok("error") => Level::Error,
@@ -35,18 +43,97 @@ pub fn init() {
         Ok("trace") => Level::Trace,
         _ => Level::Info,
     };
-    let logger = Box::new(StderrLogger { max: level });
-    if log::set_boxed_logger(logger).is_ok() {
-        log::set_max_level(LevelFilter::Trace);
+    set_max_level(level);
+}
+
+pub fn set_max_level(level: Level) {
+    MAX_LEVEL.store(level as usize, Ordering::Relaxed);
+}
+
+#[inline]
+pub fn enabled(level: Level) -> bool {
+    level as usize <= MAX_LEVEL.load(Ordering::Relaxed)
+}
+
+/// Emit one line to stderr if `level` is enabled. Called by the macros;
+/// `target` is the logging module's path.
+pub fn log(level: Level, target: &str, args: std::fmt::Arguments<'_>) {
+    if enabled(level) {
+        eprintln!("[{:5}] {}: {}", level.label(), target, args);
     }
+}
+
+/// Log at an explicit [`Level`](crate::util::logging::Level).
+#[macro_export]
+macro_rules! log_at {
+    ($lvl:expr, $($arg:tt)*) => {
+        $crate::util::logging::log($lvl, module_path!(), format_args!($($arg)*))
+    };
+}
+
+/// Log at error level.
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)*) => {
+        $crate::log_at!($crate::util::logging::Level::Error, $($arg)*)
+    };
+}
+
+/// Log at warn level.
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => {
+        $crate::log_at!($crate::util::logging::Level::Warn, $($arg)*)
+    };
+}
+
+/// Log at info level.
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => {
+        $crate::log_at!($crate::util::logging::Level::Info, $($arg)*)
+    };
+}
+
+/// Log at debug level.
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => {
+        $crate::log_at!($crate::util::logging::Level::Debug, $($arg)*)
+    };
+}
+
+/// Log at trace level.
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)*) => {
+        $crate::log_at!($crate::util::logging::Level::Trace, $($arg)*)
+    };
 }
 
 #[cfg(test)]
 mod tests {
+    use super::*;
+
+    // One test, not three: the level is a process-wide atomic and cargo
+    // runs tests concurrently — separate tests would race on it.
     #[test]
-    fn init_is_idempotent() {
-        super::init();
-        super::init();
-        log::info!("logger ok");
+    fn init_gating_and_macros() {
+        init();
+        init(); // idempotent
+        crate::info!("logger ok");
+
+        set_max_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        assert!(!enabled(Level::Trace));
+        set_max_level(Level::Info); // restore the default
+
+        crate::error!("e {}", 1);
+        crate::warn!("w");
+        crate::info!("i");
+        crate::debug!("d");
+        crate::trace!("t");
     }
 }

@@ -1,10 +1,13 @@
-//! Shared utilities: deterministic RNGs, statistics, CLI parsing, logging.
+//! Shared utilities: deterministic RNGs, statistics, CLI parsing,
+//! logging and the internal error type.
 
 pub mod cli;
+pub mod error;
 pub mod logging;
 pub mod rng;
 pub mod stats;
 
 pub use cli::Args;
+pub use error::{Context, DianaError, Result};
 pub use rng::{Pcg64, SplitMix64};
 pub use stats::{Histogram, RateSeries, Summary};

@@ -4,9 +4,8 @@
 use std::io::{BufRead, Write};
 use std::path::Path;
 
-use anyhow::{Context, Result};
-
 use crate::job::{Group, GroupId, Job, JobClass, JobId, UserId};
+use crate::util::error::{Context, Result};
 
 use super::generator::Submission;
 
@@ -73,7 +72,7 @@ pub fn read_trace(path: impl AsRef<Path>) -> Result<Vec<Submission>> {
             continue;
         }
         let cols: Vec<&str> = line.split(',').collect();
-        anyhow::ensure!(cols.len() == 15, "line {}: want 15 cols", ln + 1);
+        crate::ensure!(cols.len() == 15, "line {}: want 15 cols", ln + 1);
         let at: f64 = cols[0].parse()?;
         let gid = GroupId(cols[1].parse()?);
         let input: i64 = cols[5].parse()?;

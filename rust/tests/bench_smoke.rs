@@ -1,0 +1,159 @@
+//! Smoke tests mirroring the five `harness = false` bench binaries
+//! (benches/bench_*.rs): each test constructs the same workload the
+//! bench constructs (at a reduced scale) and runs one iteration of the
+//! benched operation. This guards the bench wiring — the types, builder
+//! recipes and entry points the benches depend on — from silently
+//! rotting, since `cargo test` does not compile bench targets.
+//! (`ci.sh` additionally runs `cargo build --benches` to compile the
+//! real binaries.)
+
+use diana::config::{presets, Policy, SchedulerConfig};
+use diana::cost::{CostEngine, CostInputs, RustEngine, Weights};
+use diana::data::Catalog;
+use diana::job::{Job, JobClass, JobId, UserId};
+use diana::network::{PingerMonitor, Topology};
+use diana::scheduler::{make_picker, GridView, SiteSnapshot};
+use diana::sim::EventQueue;
+use diana::util::Pcg64;
+
+/// bench_cost_engine: one §V matchmaking round over random inputs.
+#[test]
+fn cost_engine_workload_constructs_and_runs() {
+    let mut rng = Pcg64::new(1);
+    let (nj, ns) = (25, 5);
+    let mut inp = CostInputs::new(nj, ns);
+    for j in 0..nj {
+        let row = inp.job_row_mut(j);
+        row[0] = rng.uniform(0.0, 30_000.0) as f32;
+        row[1] = rng.uniform(0.0, 2_000.0) as f32;
+        row[2] = rng.uniform(1.0, 200.0) as f32;
+        row[3] = rng.uniform(1.0, 7200.0) as f32;
+    }
+    for s in 0..ns {
+        let row = inp.site_row_mut(s);
+        row[0] = rng.below(500) as f32;
+        row[1] = rng.uniform(1.0, 600.0) as f32;
+        row[5] = 1.0;
+    }
+    let w = Weights { q_total: 500.0, ..Weights::default() };
+    let mut engine = RustEngine::new();
+    let out = engine.schedule_step(&inp, &w).unwrap();
+    assert_eq!(out.total.len(), nj * ns);
+    assert_eq!(out.best_total.len(), nj);
+}
+
+/// bench_priority: one §X re-prioritization sweep over a random queue.
+#[test]
+fn priority_workload_constructs_and_runs() {
+    let mut rng = Pcg64::new(2);
+    let l = 16usize;
+    let mut jobs = Vec::with_capacity(l * 4);
+    for _ in 0..l {
+        jobs.extend_from_slice(&[
+            1.0 + rng.below(50) as f32,
+            1.0 + rng.below(32) as f32,
+            rng.uniform(100.0, 5000.0) as f32,
+            0.0,
+        ]);
+    }
+    let totals = [rng.uniform(50.0, 500.0) as f32,
+                  rng.uniform(1000.0, 50_000.0) as f32, l as f32, 0.0];
+    let mut engine = RustEngine::new();
+    let (pr, qi) = engine.reprioritize(&jobs, &totals).unwrap();
+    assert_eq!(pr.len(), l);
+    assert_eq!(qi.len(), l);
+}
+
+/// bench_scheduler: the per-policy matchmaking fixture + one pick each.
+#[test]
+fn scheduler_workload_constructs_and_runs() {
+    let cfg = presets::uniform_grid(4, 8);
+    let topo = Topology::from_config(&cfg);
+    let monitor = PingerMonitor::new(&topo, 0.0, 1);
+    let mut rng = Pcg64::new(3);
+    let mut catalog = Catalog::new();
+    for d in 0..10 {
+        catalog.add(&format!("d{d}"), rng.uniform(100.0, 30_000.0),
+                    vec![rng.below(4) as usize]);
+    }
+    let sites: Vec<SiteSnapshot> = (0..4)
+        .map(|_| SiteSnapshot {
+            queue_len: rng.below(20) as usize,
+            capability: 8.0,
+            load: rng.next_f64(),
+            free_slots: rng.below(9) as usize,
+            cpus: 8,
+            alive: true,
+        })
+        .collect();
+    let jobs: Vec<Job> = (0..32)
+        .map(|i| Job {
+            id: JobId(i),
+            user: UserId((i % 4) as u32),
+            group: None,
+            class: match i % 3 {
+                0 => JobClass::ComputeIntensive,
+                1 => JobClass::DataIntensive,
+                _ => JobClass::Both,
+            },
+            input: Some(rng.below(10) as usize),
+            in_mb: rng.uniform(10.0, 10_000.0),
+            out_mb: 50.0,
+            exe_mb: 20.0,
+            cpu_sec: rng.uniform(60.0, 3600.0),
+            procs: 1 + (i % 4) as usize,
+            submit_site: 0,
+            submit_time: 0.0,
+            quota: 1000.0,
+            migrations: 0,
+        })
+        .collect();
+    let view = GridView {
+        now: 0.0,
+        sites: &sites,
+        monitor: &monitor,
+        catalog: &catalog,
+        q_total: 50,
+    };
+    for policy in [Policy::Diana, Policy::FcfsBroker, Policy::Greedy,
+                   Policy::DataLocal, Policy::Random] {
+        let mut picker = make_picker(policy, Box::new(RustEngine::new()),
+                                     &SchedulerConfig::default(), 1);
+        let picks = picker.pick(&jobs, &view).unwrap();
+        assert_eq!(picks.len(), jobs.len(), "{policy:?}");
+        assert!(picks.iter().all(|&s| s < 4), "{policy:?}");
+    }
+}
+
+/// bench_sim: event-heap churn plus a miniature whole-world run.
+#[test]
+fn sim_workload_constructs_and_runs() {
+    let mut q = EventQueue::new();
+    for i in 0..500usize {
+        q.schedule(i as f64 * 0.5, i);
+    }
+    let mut popped = 0;
+    while q.pop().is_some() {
+        popped += 1;
+    }
+    assert_eq!(popped, 500);
+
+    let mut cfg = presets::paper_testbed();
+    cfg.workload.jobs = 20;
+    cfg.workload.bulk_size = 10;
+    cfg.workload.cpu_sec_median = 30.0;
+    let subs = diana::coordinator::generate_workload(&cfg);
+    let (w, report) =
+        diana::coordinator::run_simulation_with(&cfg, subs).unwrap();
+    assert_eq!(report.jobs, 20);
+    assert!(w.events_processed() > 20);
+}
+
+/// bench_figures: the cheap closed-form figures regenerate.
+#[test]
+fn figures_workload_constructs_and_runs() {
+    for fig in ["fig3", "fig6"] {
+        let text = diana::repro::run_figure(fig).unwrap();
+        assert!(!text.is_empty(), "{fig} produced no output");
+    }
+}

@@ -94,8 +94,8 @@ fn seeds_change_outcomes_but_runs_are_reproducible() {
 
 #[test]
 fn xla_engine_drives_identical_schedule() {
-    if !diana::runtime::artifacts_available() {
-        eprintln!("skipping: artifacts not built");
+    if !cfg!(feature = "xla") || !diana::runtime::artifacts_available() {
+        eprintln!("skipping: xla feature off or artifacts not built");
         return;
     }
     let cfg = small(80);
