@@ -16,4 +16,24 @@ cargo test -q
 echo "== docs (warnings are errors) =="
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 
+echo "== smoke sweep (thread-count determinism + golden schema) =="
+SWEEP_OUT=$(mktemp -d)
+trap 'rm -rf "$SWEEP_OUT"' EXIT
+./target/release/diana sweep rust/examples/sweeps/smoke.toml -j 1 \
+    --out "$SWEEP_OUT/j1"
+./target/release/diana sweep rust/examples/sweeps/smoke.toml -j 2 \
+    --out "$SWEEP_OUT/j2"
+for f in smoke_runs.csv smoke_aggregate.csv smoke.json; do
+  cmp "$SWEEP_OUT/j1/$f" "$SWEEP_OUT/j2/$f" \
+    || { echo "ci.sh: $f differs between -j 1 and -j 2"; exit 1; }
+done
+head -n 1 "$SWEEP_OUT/j1/smoke_runs.csv" \
+  | diff - rust/tests/golden/smoke_runs_header.csv
+head -n 1 "$SWEEP_OUT/j1/smoke_aggregate.csv" \
+  | diff - rust/tests/golden/smoke_aggregate_header.csv
+while read -r key; do
+  grep -q "\"$key\"" "$SWEEP_OUT/j1/smoke.json" \
+    || { echo "ci.sh: smoke.json lost key $key"; exit 1; }
+done < rust/tests/golden/smoke_json_keys.txt
+
 echo "ci.sh: all green"

@@ -1,0 +1,36 @@
+//! Bench: sweep-runner scaling — the same smoke matrix at increasing
+//! worker counts. The interesting number is runs/s levelling off once
+//! workers exceed the matrix width.
+
+mod common;
+use common::{bench, black_box};
+
+use diana::scenario::{library, run_sweep};
+
+fn main() {
+    println!("== bench_sweep: scenario sweep runner ==");
+    let spec = library::load("smoke").unwrap();
+    let n_runs = spec.expand().unwrap().len();
+    let mut baseline_ns = 0.0;
+    for j in [1usize, 2, 4, 8] {
+        let r = bench(&format!("smoke sweep ({n_runs} runs) -j {j}"), 1, 8,
+                      || {
+            let rep = run_sweep(&spec, j).unwrap();
+            black_box(rep.runs.len());
+        });
+        r.throughput(n_runs as f64, "runs");
+        if j == 1 {
+            baseline_ns = r.mean_ns();
+        } else {
+            println!("  └ speedup over -j 1: {:.2}x",
+                     baseline_ns / r.mean_ns());
+        }
+    }
+
+    // Spec expansion alone (pure config cloning, no simulation).
+    let flash = library::load("flash-crowd").unwrap();
+    let r = bench("flash-crowd expand (8-run matrix)", 3, 30, || {
+        black_box(flash.expand().unwrap().len());
+    });
+    r.throughput(8.0, "runs");
+}

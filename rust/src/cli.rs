@@ -2,7 +2,7 @@
 
 use crate::config::{self, GridConfig, Policy};
 use crate::coordinator::{run_simulation, RunReport};
-use crate::metrics::{fmt_secs, render_table};
+use crate::metrics::{fmt_secs, render_table, SummaryStats};
 use crate::priority::{aging_curve, frequency_curve};
 use crate::util::error::{DianaError, Result};
 use crate::util::Args;
@@ -13,27 +13,35 @@ diana — Data Intensive and Network Aware bulk meta-scheduler
 USAGE:
   diana simulate [--config FILE | --preset NAME] [--policy P] [--jobs N]
                  [--bulk N] [--seed S] [--engine rust|xla|auto]
+  diana sweep <spec.toml> [-j N] [--out DIR]
+  diana sweep --scenario NAME [-j N] [--out DIR]
   diana repro --figure fig3|fig4|fig6|fig7|fig8|fig9|fig10|fig11|all
               [--out DIR] [--engine rust|xla|auto]
   diana serve [--config FILE | --preset NAME] [--addr HOST:PORT]
   diana priority-demo [--quota Q] [--jobs N]
 
 PRESETS: paper-testbed (default) | fig4 | cms-tiers | uniform
+SCENARIOS: flash-crowd | diurnal-load | black-hole-site |
+           cascading-failure | wan-partition | hetero-tiers | smoke
+           (spec files in rust/examples/sweeps/)
 ";
 
 /// Resolve the config from --config / --preset / flags.
 pub fn load_config(args: &Args) -> Result<GridConfig> {
     let mut cfg = match args.get("config") {
         Some(path) => config::load_file(path)?,
-        None => match args.get_or("preset", "paper-testbed") {
-            "fig4" => config::presets::fig4_grid(),
-            "cms-tiers" => config::presets::cms_tier_grid(),
-            "uniform" => config::presets::uniform_grid(
-                args.get_usize("sites", 4),
-                args.get_usize("cpus", 8),
-            ),
-            _ => config::presets::paper_testbed(),
-        },
+        None => {
+            let name = args.get_or("preset", "paper-testbed");
+            if name == "uniform" {
+                // The CLI's `uniform` takes its shape from flags.
+                config::presets::uniform_grid(
+                    args.get_usize("sites", 4),
+                    args.get_usize("cpus", 8),
+                )
+            } else {
+                config::presets::by_name(name)?
+            }
+        }
     };
     if let Some(p) = args.get("policy") {
         cfg.scheduler.policy = Policy::from_name(p)
@@ -55,12 +63,14 @@ pub fn load_config(args: &Args) -> Result<GridConfig> {
 }
 
 pub fn print_report(r: &RunReport) {
+    let q = SummaryStats::of(&r.queue_time);
     let rows = vec![
         vec!["policy".into(), r.policy.into()],
         vec!["jobs completed".into(), r.jobs.to_string()],
         vec!["makespan".into(), fmt_secs(r.makespan_s)],
-        vec!["queue time (mean)".into(), fmt_secs(r.queue_time.mean())],
-        vec!["queue time (p95)".into(), fmt_secs(r.queue_time.percentile(95.0))],
+        vec!["queue time (mean)".into(), fmt_secs(q.mean)],
+        vec!["queue time (p95)".into(), fmt_secs(q.p95)],
+        vec!["queue time (p99)".into(), fmt_secs(q.p99)],
         vec!["exec time (mean)".into(), fmt_secs(r.exec_time.mean())],
         vec!["turnaround (mean)".into(), fmt_secs(r.turnaround.mean())],
         vec!["response (mean)".into(), fmt_secs(r.response_time.mean())],
@@ -90,6 +100,46 @@ pub fn simulate(args: &Args) -> Result<()> {
     let (_, report) = run_simulation(&cfg)?;
     print_report(&report);
     Ok(())
+}
+
+/// `diana sweep`: expand a declarative spec into a run matrix, execute
+/// it on a worker pool and write CSV + JSON aggregates.
+pub fn sweep(args: &Args) -> Result<()> {
+    let spec = if let Some(name) = args.get("scenario") {
+        crate::scenario::library::load(name)?
+    } else {
+        let path = args
+            .positional
+            .first()
+            .map(String::as_str)
+            .or_else(|| args.get("spec"))
+            .ok_or_else(|| {
+                crate::err!(
+                    "usage: diana sweep <spec.toml> [-j N] [--out DIR], or \
+                     diana sweep --scenario NAME (see `diana` for names)"
+                )
+            })?;
+        crate::scenario::SweepSpec::from_file(path)?
+    };
+    let threads = args.get_usize("j", default_threads());
+    println!(
+        "sweep `{}` — {} runs ({} fault events) on {} threads",
+        spec.name,
+        spec.matrix_size(),
+        spec.faults.events.len(),
+        threads
+    );
+    let report = crate::scenario::run_sweep(&spec, threads)?;
+    println!("{}", report.aggregate_table());
+    let out = args.get_or("out", "sweep-out");
+    for path in report.write_files(out)? {
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
 pub fn repro(args: &Args) -> Result<()> {
@@ -168,6 +218,15 @@ mod tests {
     }
 
     #[test]
+    fn unknown_preset_rejected_not_silently_defaulted() {
+        assert!(load_config(&parse("simulate --preset cms-teirs")).is_err());
+        // Parametric uniform presets resolve through the shared table.
+        let cfg = load_config(&parse("simulate --preset uniform-3x5"))
+            .unwrap();
+        assert_eq!(cfg.sites.len(), 3);
+    }
+
+    #[test]
     fn priority_demo_runs() {
         priority_demo(&parse("priority-demo --jobs 5")).unwrap();
     }
@@ -187,6 +246,26 @@ mod tests {
     #[test]
     fn repro_unknown_figure_fails() {
         assert!(repro(&parse("repro --figure fig99")).is_err());
+    }
+
+    #[test]
+    fn sweep_scenario_end_to_end_writes_files() {
+        let dir = std::env::temp_dir().join("diana-sweep-cli-test");
+        std::fs::remove_dir_all(&dir).ok();
+        let cmd = format!("sweep --scenario smoke -j 2 --out {}", dir.display());
+        sweep(&parse(&cmd)).unwrap();
+        for f in ["smoke_runs.csv", "smoke_aggregate.csv", "smoke.json"] {
+            let text = std::fs::read_to_string(dir.join(f))
+                .unwrap_or_else(|e| panic!("{f}: {e}"));
+            assert!(!text.is_empty());
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sweep_without_spec_or_scenario_fails() {
+        assert!(sweep(&parse("sweep")).is_err());
+        assert!(sweep(&parse("sweep --scenario nope")).is_err());
     }
 
     #[test]

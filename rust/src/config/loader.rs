@@ -43,9 +43,15 @@ pub fn load_file(path: impl AsRef<Path>) -> Result<GridConfig> {
 
 pub fn load_str(text: &str) -> Result<GridConfig> {
     let root = toml::parse(text).map_err(|e| err!("{e}"))?;
+    let max_events =
+        int_or(&root, "max_events", DEFAULT_MAX_EVENTS as i64);
+    if max_events <= 0 {
+        bail!("invalid config: max_events must be >= 1, got {max_events}");
+    }
     let mut cfg = GridConfig {
         name: str_or(&root, "name", "unnamed"),
         seed: int_or(&root, "seed", 1) as u64,
+        max_events: max_events as u64,
         sites: Vec::new(),
         network: NetworkConfig::default(),
         scheduler: SchedulerConfig::default(),
@@ -257,6 +263,20 @@ bulk_size = 7
         let cfg = load_str("[[site]]\nname = \"only\"\ncpus = 1\n").unwrap();
         assert_eq!(cfg.scheduler.policy, Policy::Diana);
         assert_eq!(cfg.workload.users, WorkloadConfig::default().users);
+        assert_eq!(cfg.max_events, DEFAULT_MAX_EVENTS);
+    }
+
+    #[test]
+    fn max_events_knob_loads_and_validates() {
+        let cfg = load_str(
+            "max_events = 1234\n[[site]]\nname = \"a\"\ncpus = 1\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.max_events, 1234);
+        assert!(load_str(
+            "max_events = 0\n[[site]]\nname = \"a\"\ncpus = 1\n"
+        )
+        .is_err());
     }
 
     #[test]

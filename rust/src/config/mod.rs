@@ -9,5 +9,5 @@ pub mod toml;
 pub use loader::{load_file, load_str};
 pub use schema::{
     EngineKind, GridConfig, LinkConfig, NetworkConfig, Policy,
-    SchedulerConfig, SiteConfig, WorkloadConfig,
+    SchedulerConfig, SiteConfig, WorkloadConfig, DEFAULT_MAX_EVENTS,
 };

@@ -1,7 +1,35 @@
 //! Canonical configurations: the paper's §XI testbed, the §VIII Fig-4
 //! grid, the §II CMS tier model, and parametric uniform grids for tests.
 
+use crate::util::error::Result;
+
 use super::schema::*;
+
+/// Resolve a preset by name — the one dispatch table the CLI
+/// (`--preset`) and sweep specs (`preset = "..."`) both go through.
+/// Accepts `paper-testbed`, `fig4`, `cms-tiers`, `uniform`, or the
+/// parametric `uniform-<n>x<cpus>`; unknown names are an error.
+pub fn by_name(name: &str) -> Result<GridConfig> {
+    match name {
+        "paper-testbed" | "paper_testbed" => Ok(paper_testbed()),
+        "fig4" => Ok(fig4_grid()),
+        "cms-tiers" | "cms_tiers" => Ok(cms_tier_grid()),
+        "uniform" => Ok(uniform_grid(4, 8)),
+        _ => {
+            if let Some(rest) = name.strip_prefix("uniform-") {
+                if let Some((n, c)) = rest.split_once('x') {
+                    if let (Ok(n), Ok(c)) = (n.parse(), c.parse()) {
+                        return Ok(uniform_grid(n, c));
+                    }
+                }
+            }
+            crate::bail!(
+                "unknown preset `{name}` (paper-testbed | fig4 | cms-tiers \
+                 | uniform | uniform-<n>x<cpus>)"
+            )
+        }
+    }
+}
 
 /// §XI: "Site 1 has four nodes and the remaining four sites have five
 /// nodes each" — the five-site test Grid behind Figs 7–11.
@@ -19,6 +47,7 @@ pub fn paper_testbed() -> GridConfig {
     GridConfig {
         name: "paper-testbed".into(),
         seed: 20060101,
+        max_events: DEFAULT_MAX_EVENTS,
         sites,
         network: NetworkConfig::default(),
         scheduler: SchedulerConfig::default(),
@@ -52,6 +81,7 @@ pub fn fig4_grid() -> GridConfig {
     GridConfig {
         name: "fig4".into(),
         seed: 4,
+        max_events: DEFAULT_MAX_EVENTS,
         sites,
         network: NetworkConfig {
             // "network and data conditions of all sites are the same"
@@ -126,6 +156,7 @@ pub fn cms_tier_grid() -> GridConfig {
     GridConfig {
         name: "cms-tiers".into(),
         seed: 2006,
+        max_events: DEFAULT_MAX_EVENTS,
         sites,
         network,
         scheduler: SchedulerConfig::default(),
@@ -157,6 +188,7 @@ pub fn uniform_grid(n: usize, cpus: usize) -> GridConfig {
     GridConfig {
         name: format!("uniform-{n}x{cpus}"),
         seed: 7,
+        max_events: DEFAULT_MAX_EVENTS,
         sites,
         network: NetworkConfig::default(),
         scheduler: SchedulerConfig::default(),
@@ -167,6 +199,18 @@ pub fn uniform_grid(n: usize, cpus: usize) -> GridConfig {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn by_name_resolves_and_rejects() {
+        assert_eq!(by_name("paper-testbed").unwrap().name, "paper-testbed");
+        assert_eq!(by_name("fig4").unwrap().name, "fig4");
+        assert_eq!(by_name("cms-tiers").unwrap().name, "cms-tiers");
+        assert_eq!(by_name("uniform").unwrap().sites.len(), 4);
+        let g = by_name("uniform-3x5").unwrap();
+        assert_eq!((g.sites.len(), g.sites[0].cpus), (3, 5));
+        assert!(by_name("cms-teirs").is_err()); // typos error, no fallback
+        assert!(by_name("uniform-x").is_err());
+    }
 
     #[test]
     fn paper_testbed_matches_section_xi() {

@@ -238,11 +238,17 @@ impl Default for WorkloadConfig {
     }
 }
 
+/// Default simulation event budget (see [`GridConfig::max_events`]).
+pub const DEFAULT_MAX_EVENTS: u64 = 50_000_000;
+
 /// Top-level deployment config.
 #[derive(Clone, Debug)]
 pub struct GridConfig {
     pub name: String,
     pub seed: u64,
+    /// Safety valve: a run processing more DES events than this aborts
+    /// with a diagnostic (a bug, not a workload, reaches the default).
+    pub max_events: u64,
     pub sites: Vec<SiteConfig>,
     pub network: NetworkConfig,
     pub scheduler: SchedulerConfig,
@@ -272,6 +278,9 @@ impl GridConfig {
         }
         if !(0.0..=1.0).contains(&self.scheduler.congestion_thrs) {
             return Err("congestion_thrs must be in [0,1]".into());
+        }
+        if self.max_events == 0 {
+            return Err("max_events must be >= 1".into());
         }
         if self.scheduler.group_division_factor == 0 {
             return Err("group_division_factor must be ≥ 1".into());
@@ -327,6 +336,10 @@ mod tests {
 
         let mut cfg = presets::uniform_grid(2, 4);
         cfg.scheduler.congestion_thrs = 1.5;
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = presets::uniform_grid(2, 4);
+        cfg.max_events = 0;
         assert!(cfg.validate().is_err());
 
         let mut cfg = presets::uniform_grid(2, 4);

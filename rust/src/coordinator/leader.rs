@@ -8,6 +8,7 @@ use crate::config::GridConfig;
 use crate::data::Catalog;
 use crate::metrics::JobRecord;
 use crate::runtime::make_engine;
+use crate::scenario::faults::FaultPlan;
 use crate::scheduler::make_picker;
 use crate::sim::World;
 use crate::util::{Pcg64, Summary};
@@ -66,6 +67,16 @@ pub fn run_simulation_with(
     cfg: &GridConfig,
     subs: Vec<Submission>,
 ) -> Result<(World, RunReport)> {
+    run_simulation_with_faults(cfg, subs, &FaultPlan::default())
+}
+
+/// Same, with a fault-injection plan loaded before the run (the sweep
+/// runner's entry point; an empty plan is a plain run).
+pub fn run_simulation_with_faults(
+    cfg: &GridConfig,
+    subs: Vec<Submission>,
+    faults: &FaultPlan,
+) -> Result<(World, RunReport)> {
     let engine_for_picker = make_engine(cfg.scheduler.engine)?;
     let engine_for_world = make_engine(cfg.scheduler.engine)?;
     let picker = make_picker(
@@ -75,6 +86,7 @@ pub fn run_simulation_with(
         cfg.seed,
     );
     let mut world = World::new(cfg.clone(), picker, engine_for_world);
+    world.load_faults(faults)?;
     world.load_submissions(subs);
     world.run()?;
     let report = RunReport::from_world(&world);

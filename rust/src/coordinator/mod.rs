@@ -6,5 +6,5 @@ pub mod meta_scheduler;
 pub mod serve;
 
 pub use leader::{generate_workload, run_simulation, run_simulation_with,
-                 RunReport};
+                 run_simulation_with_faults, RunReport};
 pub use meta_scheduler::MetaScheduler;

@@ -50,6 +50,7 @@ pub mod priority;
 pub mod queues;
 pub mod repro;
 pub mod runtime;
+pub mod scenario;
 pub mod scheduler;
 pub mod sim;
 pub mod util;

@@ -7,6 +7,7 @@ fn main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1));
     match args.subcommand.as_deref() {
         Some("simulate") => diana::cli::simulate(&args),
+        Some("sweep") => diana::cli::sweep(&args),
         Some("repro") => diana::cli::repro(&args),
         Some("serve") => diana::cli::serve(&args),
         Some("priority-demo") => diana::cli::priority_demo(&args),

@@ -1,7 +1,52 @@
 //! Plain-text table/series rendering for the repro harness and examples
-//! (CSV out for plotting, aligned tables for the terminal).
+//! (CSV out for plotting, aligned tables for the terminal), plus the
+//! [`SummaryStats`] snapshot that exposes tail percentiles alongside the
+//! mean so downstream consumers (CLI tables, the sweep aggregator) never
+//! re-derive them from raw records.
 
 use std::fmt::Write as _;
+
+use crate::util::Summary;
+
+/// Compact distribution snapshot of a [`Summary`]: mean plus p50/p95/p99
+/// and the range, computed with a single sort.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SummaryStats {
+    pub n: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl SummaryStats {
+    /// Snapshot `s` (all-zero for an empty summary).
+    pub fn of(s: &Summary) -> SummaryStats {
+        let mut v: Vec<f64> = s.values().to_vec();
+        if v.is_empty() {
+            return SummaryStats::default();
+        }
+        v.sort_by(f64::total_cmp);
+        let pct = |p: f64| {
+            let rank = (p / 100.0) * (v.len() - 1) as f64;
+            let lo = rank.floor() as usize;
+            let hi = rank.ceil() as usize;
+            let frac = rank - lo as f64;
+            v[lo] * (1.0 - frac) + v[hi] * frac
+        };
+        SummaryStats {
+            n: v.len(),
+            mean: v.iter().sum::<f64>() / v.len() as f64,
+            p50: pct(50.0),
+            p95: pct(95.0),
+            p99: pct(99.0),
+            min: v[0],
+            max: v[v.len() - 1],
+        }
+    }
+}
 
 /// Render an aligned table: `header` then rows of equal arity.
 pub fn render_table(header: &[&str], rows: &[Vec<String>]) -> String {
@@ -81,5 +126,22 @@ mod tests {
         assert_eq!(fmt_secs(30.0), "30.0s");
         assert_eq!(fmt_secs(90.0), "1.5m");
         assert_eq!(fmt_secs(7200.0), "2.00h");
+    }
+
+    #[test]
+    fn summary_stats_match_summary_percentiles() {
+        let s = Summary::from_values((0..101).map(|i| i as f64));
+        let st = SummaryStats::of(&s);
+        assert_eq!(st.n, 101);
+        assert_eq!(st.mean, s.mean());
+        assert_eq!(st.p50, s.percentile(50.0));
+        assert_eq!(st.p95, s.percentile(95.0));
+        assert_eq!(st.p99, s.percentile(99.0));
+        assert_eq!((st.min, st.max), (0.0, 100.0));
+    }
+
+    #[test]
+    fn summary_stats_empty_is_zero() {
+        assert_eq!(SummaryStats::of(&Summary::new()), SummaryStats::default());
     }
 }

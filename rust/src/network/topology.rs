@@ -86,6 +86,38 @@ impl Topology {
     pub fn mss_bytes(&self) -> f64 {
         self.mss_bytes
     }
+
+    /// Symmetrically overwrite the link between `a` and `b` — the
+    /// fault-injection hook for partitions and hard outages.
+    pub fn set_link(&mut self, a: usize, b: usize, link: Link) {
+        self.links[a * self.n + b] = link;
+        self.links[b * self.n + a] = link;
+    }
+
+    /// Degrade a link in place (fault injection): RTT × `rtt_factor`,
+    /// loss + `loss_add` (clamped to [0, 0.99]), capacity ×
+    /// `capacity_factor`. Factors < 1 on capacity / > 1 on RTT degrade;
+    /// the inverse values model an upgrade or repair.
+    pub fn degrade_link(
+        &mut self,
+        a: usize,
+        b: usize,
+        rtt_factor: f64,
+        loss_add: f64,
+        capacity_factor: f64,
+    ) {
+        let l = self.link(a, b);
+        self.set_link(
+            a,
+            b,
+            Link {
+                rtt_ms: (l.rtt_ms * rtt_factor.max(0.0)).max(0.01),
+                loss: (l.loss + loss_add).clamp(0.0, 0.99),
+                capacity_mbps: (l.capacity_mbps * capacity_factor.max(0.0))
+                    .max(1e-3),
+            },
+        );
+    }
 }
 
 #[cfg(test)]
@@ -112,6 +144,30 @@ mod tests {
         // Non-overridden pair uses WAN defaults.
         let c = cfg.site_index("T2-1").unwrap();
         assert_eq!(t.link(a, c).rtt_ms, cfg.network.default_rtt_ms);
+    }
+
+    #[test]
+    fn set_and_degrade_link_are_symmetric() {
+        let cfg = presets::uniform_grid(3, 4);
+        let mut t = Topology::from_config(&cfg);
+        let before = t.transfer_seconds(0, 1, 100.0);
+        t.degrade_link(0, 1, 10.0, 0.05, 0.01);
+        assert_eq!(t.link(0, 1), t.link(1, 0));
+        assert!(t.link(0, 1).rtt_ms > cfg.network.default_rtt_ms * 9.0);
+        assert!(t.transfer_seconds(0, 1, 100.0) > before);
+        // Other links untouched.
+        assert_eq!(t.link(0, 2).rtt_ms, cfg.network.default_rtt_ms);
+        // Hard overwrite restores.
+        t.set_link(
+            0,
+            1,
+            Link {
+                rtt_ms: cfg.network.default_rtt_ms,
+                loss: cfg.network.default_loss,
+                capacity_mbps: cfg.network.default_capacity_mbps,
+            },
+        );
+        assert_eq!(t.transfer_seconds(0, 1, 100.0), before);
     }
 
     #[test]

@@ -1,0 +1,316 @@
+//! Timed fault-injection plans: site crashes and recoveries, link
+//! degradation, WAN partitions and monitor blackouts, delivered as
+//! first-class DES events by [`crate::sim::World::load_faults`] — the
+//! harness behind the §IX failover and migration experiments.
+
+use crate::config::GridConfig;
+use crate::config::toml::{Table, Value};
+use crate::util::error::Result;
+use crate::{bail, err};
+
+/// One timed fault. Site names are strings here; they are resolved to
+/// indices against the concrete config at load time ([`FaultPlan::resolve`]).
+#[derive(Clone, Debug)]
+pub struct FaultEvent {
+    /// Absolute simulation time (seconds) at which the fault fires.
+    pub at: f64,
+    pub kind: FaultKind,
+}
+
+/// What goes wrong (or recovers).
+#[derive(Clone, Debug)]
+pub enum FaultKind {
+    /// Site crash: the site stops accepting dispatches, its RootGrid
+    /// fails over to a standby if one exists, and queued jobs become
+    /// force-migration candidates (§IX).
+    SiteDown { site: String },
+    /// Site recovery: re-joins the overlay and discovery registry.
+    SiteUp { site: String },
+    /// In-place link degradation: RTT × `rtt_factor`, loss + `loss_add`,
+    /// capacity × `capacity_factor` (inverse values model a repair).
+    LinkDegrade {
+        from: String,
+        to: String,
+        rtt_factor: f64,
+        loss_add: f64,
+        capacity_factor: f64,
+    },
+    /// WAN partition: every link between `members` and the rest of the
+    /// grid collapses to the given (terrible) parameters. Heal with a
+    /// later [`FaultKind::Heal`] event.
+    Partition {
+        members: Vec<String>,
+        rtt_ms: f64,
+        loss: f64,
+        capacity_mbps: f64,
+    },
+    /// Restore the pristine (config-derived) topology.
+    Heal,
+    /// MonALISA outage: monitor sweeps and discovery heartbeats are
+    /// suppressed for `duration_s` — schedulers run on stale beliefs.
+    MonitorBlackout { duration_s: f64 },
+}
+
+/// A [`FaultKind`] with site names resolved to indices — what the
+/// simulator actually consumes.
+#[derive(Clone, Debug)]
+pub enum ResolvedFault {
+    SiteDown(usize),
+    SiteUp(usize),
+    LinkDegrade {
+        from: usize,
+        to: usize,
+        rtt_factor: f64,
+        loss_add: f64,
+        capacity_factor: f64,
+    },
+    Partition {
+        members: Vec<usize>,
+        rtt_ms: f64,
+        loss: f64,
+        capacity_mbps: f64,
+    },
+    Heal,
+    MonitorBlackout { duration_s: f64 },
+}
+
+/// An ordered fault schedule (part of a sweep spec; empty by default).
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    pub events: Vec<FaultEvent>,
+}
+
+fn req_str(t: &Table, key: &str, i: usize) -> Result<String> {
+    t.get(key)
+        .and_then(Value::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| err!("[[fault]] #{i}: missing string key `{key}`"))
+}
+
+fn float_or(t: &Table, key: &str, default: f64) -> f64 {
+    t.get(key).and_then(Value::as_float).unwrap_or(default)
+}
+
+impl FaultPlan {
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Parse from the `[[fault]]` array-of-tables of a sweep spec.
+    /// Events are sorted by time (stable — simultaneous faults keep
+    /// file order).
+    pub fn from_tables(tables: &[Value]) -> Result<FaultPlan> {
+        let mut events = Vec::with_capacity(tables.len());
+        for (i, tv) in tables.iter().enumerate() {
+            let t = tv
+                .as_table()
+                .ok_or_else(|| err!("[[fault]] #{i} is not a table"))?;
+            let at = t
+                .get("at")
+                .and_then(Value::as_float)
+                .ok_or_else(|| err!("[[fault]] #{i}: missing `at` (seconds)"))?;
+            crate::ensure!(
+                at.is_finite() && at >= 0.0,
+                "[[fault]] #{i}: `at` must be finite and >= 0, got {at}"
+            );
+            let kind = t
+                .get("kind")
+                .and_then(Value::as_str)
+                .ok_or_else(|| err!("[[fault]] #{i}: missing `kind`"))?;
+            let kind = match kind {
+                "site-down" => FaultKind::SiteDown { site: req_str(t, "site", i)? },
+                "site-up" => FaultKind::SiteUp { site: req_str(t, "site", i)? },
+                "link-degrade" => FaultKind::LinkDegrade {
+                    from: req_str(t, "from", i)?,
+                    to: req_str(t, "to", i)?,
+                    rtt_factor: float_or(t, "rtt_factor", 1.0),
+                    loss_add: float_or(t, "loss_add", 0.0),
+                    capacity_factor: float_or(t, "capacity_factor", 1.0),
+                },
+                "partition" => {
+                    let members: Vec<String> = t
+                        .get("group")
+                        .and_then(Value::as_array)
+                        .unwrap_or(&[])
+                        .iter()
+                        .map(|v| {
+                            v.as_str().map(str::to_string).ok_or_else(|| {
+                                err!(
+                                    "[[fault]] #{i}: `group` entries must \
+                                     be site-name strings, got {v:?}"
+                                )
+                            })
+                        })
+                        .collect::<Result<_>>()?;
+                    crate::ensure!(
+                        !members.is_empty(),
+                        "[[fault]] #{i}: partition needs a non-empty \
+                         `group` of site names"
+                    );
+                    FaultKind::Partition {
+                        members,
+                        rtt_ms: float_or(t, "rtt_ms", 2000.0),
+                        loss: float_or(t, "loss", 0.3).clamp(0.0, 0.99),
+                        capacity_mbps: float_or(t, "capacity_mbps", 1.0),
+                    }
+                }
+                "heal" => FaultKind::Heal,
+                "monitor-blackout" => FaultKind::MonitorBlackout {
+                    duration_s: float_or(t, "duration_s", 300.0),
+                },
+                other => bail!(
+                    "[[fault]] #{i}: unknown kind `{other}` (site-down | \
+                     site-up | link-degrade | partition | heal | \
+                     monitor-blackout)"
+                ),
+            };
+            events.push(FaultEvent { at, kind });
+        }
+        events.sort_by(|a, b| a.at.total_cmp(&b.at));
+        Ok(FaultPlan { events })
+    }
+
+    /// Resolve site names against `cfg`, yielding `(time, fault)` pairs
+    /// ready to schedule. Unknown site names are an error.
+    pub fn resolve(&self, cfg: &GridConfig) -> Result<Vec<(f64, ResolvedFault)>> {
+        let site = |n: &str| {
+            cfg.site_index(n)
+                .ok_or_else(|| err!("fault plan names unknown site `{n}`"))
+        };
+        self.events
+            .iter()
+            .map(|e| {
+                let r = match &e.kind {
+                    FaultKind::SiteDown { site: s } => {
+                        ResolvedFault::SiteDown(site(s)?)
+                    }
+                    FaultKind::SiteUp { site: s } => {
+                        ResolvedFault::SiteUp(site(s)?)
+                    }
+                    FaultKind::LinkDegrade {
+                        from,
+                        to,
+                        rtt_factor,
+                        loss_add,
+                        capacity_factor,
+                    } => ResolvedFault::LinkDegrade {
+                        from: site(from)?,
+                        to: site(to)?,
+                        rtt_factor: *rtt_factor,
+                        loss_add: *loss_add,
+                        capacity_factor: *capacity_factor,
+                    },
+                    FaultKind::Partition {
+                        members,
+                        rtt_ms,
+                        loss,
+                        capacity_mbps,
+                    } => ResolvedFault::Partition {
+                        members: members
+                            .iter()
+                            .map(|m| site(m))
+                            .collect::<Result<Vec<_>>>()?,
+                        rtt_ms: *rtt_ms,
+                        loss: *loss,
+                        capacity_mbps: *capacity_mbps,
+                    },
+                    FaultKind::Heal => ResolvedFault::Heal,
+                    FaultKind::MonitorBlackout { duration_s } => {
+                        ResolvedFault::MonitorBlackout { duration_s: *duration_s }
+                    }
+                };
+                Ok((e.at, r))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::config::toml;
+
+    fn plan(src: &str) -> Result<FaultPlan> {
+        let root = toml::parse(src).unwrap();
+        let tables = root["fault"].as_array().unwrap().to_vec();
+        FaultPlan::from_tables(&tables)
+    }
+
+    #[test]
+    fn parses_and_sorts_by_time() {
+        let p = plan(
+            "[[fault]]\nat = 200.0\nkind = \"site-up\"\nsite = \"s1\"\n\
+             [[fault]]\nat = 50.0\nkind = \"site-down\"\nsite = \"s1\"\n",
+        )
+        .unwrap();
+        assert_eq!(p.events.len(), 2);
+        assert_eq!(p.events[0].at, 50.0);
+        assert!(matches!(p.events[0].kind, FaultKind::SiteDown { .. }));
+    }
+
+    #[test]
+    fn unknown_kind_and_missing_keys_are_errors() {
+        assert!(plan("[[fault]]\nat = 1.0\nkind = \"explode\"\n").is_err());
+        assert!(plan("[[fault]]\nat = 1.0\nkind = \"site-down\"\n").is_err());
+        assert!(plan("[[fault]]\nkind = \"heal\"\n").is_err()); // no `at`
+        assert!(plan("[[fault]]\nat = -1.0\nkind = \"heal\"\n").is_err());
+        // Partition groups must be all strings — no silent drops.
+        let e = plan(
+            "[[fault]]\nat = 1.0\nkind = \"partition\"\n\
+             group = [\"s1\", 2]\n",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("site-name strings"), "got: {e}");
+    }
+
+    #[test]
+    fn resolve_maps_names_to_indices() {
+        let cfg = presets::uniform_grid(4, 4); // sites s0..s3
+        let p = plan(
+            "[[fault]]\nat = 10.0\nkind = \"partition\"\n\
+             group = [\"s0\", \"s1\"]\n\
+             [[fault]]\nat = 20.0\nkind = \"link-degrade\"\n\
+             from = \"s0\"\nto = \"s2\"\ncapacity_factor = 0.1\n",
+        )
+        .unwrap();
+        let r = p.resolve(&cfg).unwrap();
+        assert_eq!(r.len(), 2);
+        match &r[0].1 {
+            ResolvedFault::Partition { members, .. } => {
+                assert_eq!(members, &vec![0, 1])
+            }
+            other => panic!("wrong resolution: {other:?}"),
+        }
+        // Unknown site is an error.
+        let bad = plan(
+            "[[fault]]\nat = 1.0\nkind = \"site-down\"\nsite = \"nope\"\n",
+        )
+        .unwrap();
+        assert!(bad.resolve(&cfg).is_err());
+    }
+
+    #[test]
+    fn defaults_fill_degrade_and_blackout() {
+        let p = plan(
+            "[[fault]]\nat = 5.0\nkind = \"monitor-blackout\"\n\
+             [[fault]]\nat = 6.0\nkind = \"link-degrade\"\n\
+             from = \"a\"\nto = \"b\"\n",
+        )
+        .unwrap();
+        match &p.events[0].kind {
+            FaultKind::MonitorBlackout { duration_s } => {
+                assert_eq!(*duration_s, 300.0)
+            }
+            other => panic!("{other:?}"),
+        }
+        match &p.events[1].kind {
+            FaultKind::LinkDegrade { rtt_factor, loss_add, capacity_factor, .. } => {
+                assert_eq!((*rtt_factor, *loss_add, *capacity_factor),
+                           (1.0, 0.0, 1.0));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+}

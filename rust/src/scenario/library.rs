@@ -1,0 +1,101 @@
+//! Named scenario library. Every entry embeds its declarative spec from
+//! `rust/examples/sweeps/` at compile time, so the shipped TOML files
+//! and the built-in names can never drift apart.
+
+use crate::util::error::Result;
+
+use super::spec::SweepSpec;
+
+/// `(name, spec TOML)` pairs; `diana sweep --scenario <name>` and
+/// [`load`] resolve against this table.
+pub const SCENARIOS: &[(&str, &str)] = &[
+    (
+        "flash-crowd",
+        include_str!("../../examples/sweeps/flash_crowd.toml"),
+    ),
+    (
+        "diurnal-load",
+        include_str!("../../examples/sweeps/diurnal_load.toml"),
+    ),
+    (
+        "black-hole-site",
+        include_str!("../../examples/sweeps/black_hole_site.toml"),
+    ),
+    (
+        "cascading-failure",
+        include_str!("../../examples/sweeps/cascading_failure.toml"),
+    ),
+    (
+        "wan-partition",
+        include_str!("../../examples/sweeps/wan_partition.toml"),
+    ),
+    (
+        "hetero-tiers",
+        include_str!("../../examples/sweeps/hetero_tiers.toml"),
+    ),
+    ("smoke", include_str!("../../examples/sweeps/smoke.toml")),
+];
+
+/// Names of all built-in scenarios.
+pub fn names() -> Vec<&'static str> {
+    SCENARIOS.iter().map(|(n, _)| *n).collect()
+}
+
+/// Parse a built-in scenario by name.
+pub fn load(name: &str) -> Result<SweepSpec> {
+    let text = SCENARIOS
+        .iter()
+        .find(|(n, _)| *n == name)
+        .map(|(_, t)| *t)
+        .ok_or_else(|| {
+            crate::err!(
+                "unknown scenario `{name}` (available: {})",
+                names().join(" | ")
+            )
+        })?;
+    SweepSpec::from_str_named(text, name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_scenario_parses_and_expands() {
+        for (name, _) in SCENARIOS {
+            let spec = load(name)
+                .unwrap_or_else(|e| panic!("scenario {name}: {e}"));
+            assert_eq!(&spec.name, name, "file name key mismatch");
+            let runs = spec
+                .expand()
+                .unwrap_or_else(|e| panic!("scenario {name}: {e}"));
+            assert!(!runs.is_empty());
+            assert!(
+                runs.len() <= 12,
+                "scenario {name} too large for the library ({})",
+                runs.len()
+            );
+            // Library scenarios stay test-sized.
+            for r in &runs {
+                assert!(
+                    r.cfg.workload.jobs <= 200,
+                    "scenario {name} oversizes jobs"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fault_scenarios_carry_plans() {
+        assert!(!load("cascading-failure").unwrap().faults.is_empty());
+        assert!(!load("wan-partition").unwrap().faults.is_empty());
+        assert!(!load("black-hole-site").unwrap().faults.is_empty());
+        assert!(load("smoke").unwrap().faults.is_empty());
+    }
+
+    #[test]
+    fn unknown_scenario_is_an_error() {
+        let e = load("nope").unwrap_err().to_string();
+        assert!(e.contains("flash-crowd"));
+    }
+}

@@ -1,0 +1,27 @@
+//! Scenario & sweep subsystem: declarative experiment specs, fault
+//! injection and a multi-threaded sweep runner.
+//!
+//! Pipeline: a spec file ([`spec::SweepSpec`], parsed by the in-tree
+//! TOML subset) names a base preset/config plus parameter axes and
+//! expands into a deterministic run matrix; an optional
+//! [`faults::FaultPlan`] schedules timed site crashes, link degradation,
+//! partitions and monitor blackouts as first-class DES events inside
+//! [`crate::sim::World`]; [`runner::run_sweep`] drains the matrix on a
+//! scoped worker pool (`-j`), bit-identical for any thread count; and
+//! [`report::SweepReport`] aggregates per-point statistics with CSV and
+//! JSON writers. [`library`] ships the named built-in scenarios
+//! (mirrored as files in `rust/examples/sweeps/`).
+
+pub mod faults;
+pub mod library;
+pub mod report;
+pub mod runner;
+pub mod spec;
+
+pub use faults::{FaultEvent, FaultKind, FaultPlan, ResolvedFault};
+pub use report::{AggregateRow, RunResult, SweepReport};
+pub use runner::{run_one, run_sweep};
+pub use spec::{
+    apply_param, preset_by_name, Axis, BaseConfig, ParamValue, RunSpec,
+    SweepSpec,
+};

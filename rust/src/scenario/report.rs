@@ -1,0 +1,517 @@
+//! Sweep results: per-run rows, per-point aggregates (mean/p50/p95
+//! makespan, queue and turnaround tails) and deterministic CSV + JSON
+//! writers. Aggregation always happens single-threaded in matrix order,
+//! so the output is byte-identical for any `-j`.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use crate::metrics::{fmt_secs, render_table, SummaryStats};
+use crate::util::error::{Context, Result};
+use crate::util::Summary;
+
+use super::spec::SweepSpec;
+
+/// Metrics of one run of the matrix.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub index: usize,
+    pub seed: u64,
+    /// `(axis key, value label)` pairs, aligned with
+    /// [`SweepReport::axis_keys`].
+    pub labels: Vec<(String, String)>,
+    pub policy: String,
+    /// Jobs completed (delivered).
+    pub jobs: usize,
+    pub makespan_s: f64,
+    pub queue: SummaryStats,
+    pub exec: SummaryStats,
+    pub turnaround: SummaryStats,
+    pub response: SummaryStats,
+    pub throughput_jobs_per_s: f64,
+    pub migrations: u64,
+    pub groups_whole: u64,
+    pub groups_split: u64,
+    pub events: u64,
+}
+
+impl RunResult {
+    /// Matrix-point key: the labels minus the seed column, so repeats
+    /// collapse onto one aggregate row.
+    fn point_key(&self) -> String {
+        let parts: Vec<String> = self
+            .labels
+            .iter()
+            .filter(|(k, _)| k != "seed")
+            .map(|(k, v)| format!("{k}={v}"))
+            .collect();
+        if parts.is_empty() {
+            "base".into()
+        } else {
+            parts.join(" ")
+        }
+    }
+}
+
+/// Aggregate statistics across one matrix point's repeats.
+#[derive(Clone, Debug)]
+pub struct AggregateRow {
+    pub point: String,
+    pub runs: usize,
+    /// Total completed jobs across the point's runs.
+    pub jobs: usize,
+    /// Makespan distribution across the runs.
+    pub makespan: SummaryStats,
+    /// Means of the per-run queue/turnaround statistics.
+    pub queue_mean: f64,
+    pub queue_p95: f64,
+    pub queue_p99: f64,
+    pub turnaround_mean: f64,
+    pub turnaround_p95: f64,
+    pub response_mean: f64,
+    pub throughput_mean: f64,
+    pub migrations: u64,
+    pub events: u64,
+}
+
+/// The full sweep report.
+#[derive(Clone, Debug)]
+pub struct SweepReport {
+    pub name: String,
+    /// Label columns, in run-label order (axes sorted by key, then
+    /// `seed` unless seed was an axis).
+    pub axis_keys: Vec<String>,
+    pub runs: Vec<RunResult>,
+    pub aggregates: Vec<AggregateRow>,
+}
+
+impl SweepReport {
+    /// Aggregate `runs` (already in matrix order) into per-point rows.
+    pub fn build(spec: &SweepSpec, runs: Vec<RunResult>) -> SweepReport {
+        let axis_keys: Vec<String> = runs
+            .first()
+            .map(|r| r.labels.iter().map(|(k, _)| k.clone()).collect())
+            .unwrap_or_default();
+        // Order-preserving group-by on the point key.
+        let mut groups: Vec<(String, Vec<usize>)> = Vec::new();
+        for (i, r) in runs.iter().enumerate() {
+            let key = r.point_key();
+            match groups.iter_mut().find(|(k, _)| *k == key) {
+                Some((_, v)) => v.push(i),
+                None => groups.push((key, vec![i])),
+            }
+        }
+        let aggregates = groups
+            .iter()
+            .map(|(key, idxs)| {
+                let rs: Vec<&RunResult> =
+                    idxs.iter().map(|&i| &runs[i]).collect();
+                let n = rs.len() as f64;
+                let mean_of = |sel: &dyn Fn(&RunResult) -> f64| {
+                    rs.iter().map(|r| sel(r)).sum::<f64>() / n
+                };
+                AggregateRow {
+                    point: key.clone(),
+                    runs: rs.len(),
+                    jobs: rs.iter().map(|r| r.jobs).sum(),
+                    makespan: SummaryStats::of(&Summary::from_values(
+                        rs.iter().map(|r| r.makespan_s),
+                    )),
+                    queue_mean: mean_of(&|r| r.queue.mean),
+                    queue_p95: mean_of(&|r| r.queue.p95),
+                    queue_p99: mean_of(&|r| r.queue.p99),
+                    turnaround_mean: mean_of(&|r| r.turnaround.mean),
+                    turnaround_p95: mean_of(&|r| r.turnaround.p95),
+                    response_mean: mean_of(&|r| r.response.mean),
+                    throughput_mean: mean_of(&|r| r.throughput_jobs_per_s),
+                    migrations: rs.iter().map(|r| r.migrations).sum(),
+                    events: rs.iter().map(|r| r.events).sum(),
+                }
+            })
+            .collect();
+        SweepReport { name: spec.name.clone(), axis_keys, runs, aggregates }
+    }
+
+    pub fn total_migrations(&self) -> u64 {
+        self.runs.iter().map(|r| r.migrations).sum()
+    }
+
+    /// Per-run CSV (one row per run; axis labels as `axis_*` columns).
+    pub fn runs_csv(&self) -> String {
+        let mut out = String::from("index");
+        for k in &self.axis_keys {
+            out.push_str(",axis_");
+            out.push_str(&csv_escape(k));
+        }
+        out.push_str(
+            ",policy,completed,makespan_s,queue_mean_s,queue_p50_s,\
+             queue_p95_s,queue_p99_s,exec_mean_s,turnaround_mean_s,\
+             turnaround_p95_s,response_mean_s,throughput_jobs_per_s,\
+             migrations,groups_whole,groups_split,events\n",
+        );
+        for r in &self.runs {
+            let _ = write!(out, "{}", r.index);
+            for (_, v) in &r.labels {
+                out.push(',');
+                out.push_str(&csv_escape(v));
+            }
+            let _ = writeln!(
+                out,
+                ",{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
+                csv_escape(&r.policy),
+                r.jobs,
+                r.makespan_s,
+                r.queue.mean,
+                r.queue.p50,
+                r.queue.p95,
+                r.queue.p99,
+                r.exec.mean,
+                r.turnaround.mean,
+                r.turnaround.p95,
+                r.response.mean,
+                r.throughput_jobs_per_s,
+                r.migrations,
+                r.groups_whole,
+                r.groups_split,
+                r.events
+            );
+        }
+        out
+    }
+
+    /// Aggregate CSV (one row per matrix point).
+    pub fn aggregate_csv(&self) -> String {
+        let mut out = String::from(
+            "point,runs,completed,makespan_mean_s,makespan_p50_s,\
+             makespan_p95_s,queue_mean_s,queue_p95_s,queue_p99_s,\
+             turnaround_mean_s,turnaround_p95_s,response_mean_s,\
+             throughput_mean_jobs_per_s,migrations,events\n",
+        );
+        for a in &self.aggregates {
+            let _ = writeln!(
+                out,
+                "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
+                csv_escape(&a.point),
+                a.runs,
+                a.jobs,
+                a.makespan.mean,
+                a.makespan.p50,
+                a.makespan.p95,
+                a.queue_mean,
+                a.queue_p95,
+                a.queue_p99,
+                a.turnaround_mean,
+                a.turnaround_p95,
+                a.response_mean,
+                a.throughput_mean,
+                a.migrations,
+                a.events
+            );
+        }
+        out
+    }
+
+    /// Full report as JSON (hand-rolled — the crate is dependency-free).
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n");
+        let _ = write!(out, "  \"name\": {},\n  \"axes\": [", jstr(&self.name));
+        for (i, k) in self.axis_keys.iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            out.push_str(&jstr(k));
+        }
+        out.push_str("],\n  \"runs\": [\n");
+        for (i, r) in self.runs.iter().enumerate() {
+            let _ = write!(
+                out,
+                "    {{\"index\": {}, \"seed\": {}, \"labels\": {{",
+                r.index, r.seed
+            );
+            for (j, (k, v)) in r.labels.iter().enumerate() {
+                if j > 0 {
+                    out.push_str(", ");
+                }
+                let _ = write!(out, "{}: {}", jstr(k), jstr(v));
+            }
+            let _ = write!(
+                out,
+                "}}, \"policy\": {}, \"completed\": {}, \"makespan_s\": {}, \
+                 \"queue\": {}, \"exec\": {}, \"turnaround\": {}, \
+                 \"response\": {}, \"throughput_jobs_per_s\": {}, \
+                 \"migrations\": {}, \"groups_whole\": {}, \
+                 \"groups_split\": {}, \"events\": {}}}",
+                jstr(&r.policy),
+                r.jobs,
+                jnum(r.makespan_s),
+                jstats(&r.queue),
+                jstats(&r.exec),
+                jstats(&r.turnaround),
+                jstats(&r.response),
+                jnum(r.throughput_jobs_per_s),
+                r.migrations,
+                r.groups_whole,
+                r.groups_split,
+                r.events
+            );
+            out.push_str(if i + 1 < self.runs.len() { ",\n" } else { "\n" });
+        }
+        out.push_str("  ],\n  \"aggregates\": [\n");
+        for (i, a) in self.aggregates.iter().enumerate() {
+            let _ = write!(
+                out,
+                "    {{\"point\": {}, \"runs\": {}, \"completed\": {}, \
+                 \"makespan\": {}, \"queue_mean_s\": {}, \
+                 \"queue_p95_s\": {}, \"queue_p99_s\": {}, \
+                 \"turnaround_mean_s\": {}, \"turnaround_p95_s\": {}, \
+                 \"response_mean_s\": {}, \
+                 \"throughput_mean_jobs_per_s\": {}, \"migrations\": {}, \
+                 \"events\": {}}}",
+                jstr(&a.point),
+                a.runs,
+                a.jobs,
+                jstats(&a.makespan),
+                jnum(a.queue_mean),
+                jnum(a.queue_p95),
+                jnum(a.queue_p99),
+                jnum(a.turnaround_mean),
+                jnum(a.turnaround_p95),
+                jnum(a.response_mean),
+                jnum(a.throughput_mean),
+                a.migrations,
+                a.events
+            );
+            out.push_str(if i + 1 < self.aggregates.len() {
+                ",\n"
+            } else {
+                "\n"
+            });
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Aligned terminal table of the aggregate rows.
+    pub fn aggregate_table(&self) -> String {
+        let rows: Vec<Vec<String>> = self
+            .aggregates
+            .iter()
+            .map(|a| {
+                vec![
+                    a.point.clone(),
+                    a.runs.to_string(),
+                    fmt_secs(a.makespan.mean),
+                    fmt_secs(a.queue_mean),
+                    fmt_secs(a.queue_p95),
+                    fmt_secs(a.turnaround_mean),
+                    a.migrations.to_string(),
+                    a.events.to_string(),
+                ]
+            })
+            .collect();
+        render_table(
+            &["point", "runs", "makespan", "queue", "q-p95", "turnaround",
+              "migr", "events"],
+            &rows,
+        )
+    }
+
+    /// Filesystem-safe stem derived from the sweep name.
+    pub fn file_stem(&self) -> String {
+        let s: String = self
+            .name
+            .chars()
+            .map(|c| {
+                if c.is_ascii_alphanumeric() || c == '-' || c == '_' {
+                    c
+                } else {
+                    '-'
+                }
+            })
+            .collect();
+        if s.is_empty() { "sweep".into() } else { s }
+    }
+
+    /// Write `<stem>_runs.csv`, `<stem>_aggregate.csv` and `<stem>.json`
+    /// under `dir`; returns the three paths.
+    pub fn write_files(&self, dir: impl AsRef<Path>) -> Result<Vec<String>> {
+        let dir = dir.as_ref();
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+        let stem = self.file_stem();
+        let paths = [
+            (dir.join(format!("{stem}_runs.csv")), self.runs_csv()),
+            (dir.join(format!("{stem}_aggregate.csv")), self.aggregate_csv()),
+            (dir.join(format!("{stem}.json")), self.to_json()),
+        ];
+        let mut out = Vec::with_capacity(3);
+        for (p, text) in paths {
+            std::fs::write(&p, text)
+                .with_context(|| format!("writing {}", p.display()))?;
+            out.push(p.display().to_string());
+        }
+        Ok(out)
+    }
+}
+
+/// CSV-escape a cell (quote when it contains a comma/quote/newline).
+fn csv_escape(s: &str) -> String {
+    if s.contains([',', '"', '\n']) {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+/// JSON string literal.
+fn jstr(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// JSON number (non-finite values become null).
+fn jnum(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".into()
+    }
+}
+
+/// A [`SummaryStats`] as a JSON object.
+fn jstats(s: &SummaryStats) -> String {
+    format!(
+        "{{\"n\": {}, \"mean\": {}, \"p50\": {}, \"p95\": {}, \"p99\": {}, \
+         \"min\": {}, \"max\": {}}}",
+        s.n,
+        jnum(s.mean),
+        jnum(s.p50),
+        jnum(s.p95),
+        jnum(s.p99),
+        jnum(s.min),
+        jnum(s.max)
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::spec::SweepSpec;
+
+    fn stats(mean: f64) -> SummaryStats {
+        SummaryStats { n: 1, mean, p50: mean, p95: mean, p99: mean,
+                       min: mean, max: mean }
+    }
+
+    fn run(index: usize, seed: u64, jobs_label: &str, q: f64) -> RunResult {
+        RunResult {
+            index,
+            seed,
+            labels: vec![
+                ("jobs".into(), jobs_label.into()),
+                ("seed".into(), seed.to_string()),
+            ],
+            policy: "diana".into(),
+            jobs: 10,
+            makespan_s: 100.0 + q,
+            queue: stats(q),
+            exec: stats(1.0),
+            turnaround: stats(q + 2.0),
+            response: stats(0.5),
+            throughput_jobs_per_s: 0.1,
+            migrations: 3,
+            groups_whole: 1,
+            groups_split: 0,
+            events: 50,
+        }
+    }
+
+    fn spec() -> SweepSpec {
+        SweepSpec::from_str_named(
+            "name = \"t\"\npreset = \"uniform-2x2\"\n",
+            "t",
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn aggregates_collapse_repeats() {
+        let rep = SweepReport::build(
+            &spec(),
+            vec![run(0, 1, "10", 4.0), run(1, 2, "10", 6.0),
+                 run(2, 3, "20", 8.0)],
+        );
+        assert_eq!(rep.aggregates.len(), 2);
+        let a = &rep.aggregates[0];
+        assert_eq!(a.point, "jobs=10");
+        assert_eq!(a.runs, 2);
+        assert_eq!(a.jobs, 20);
+        assert_eq!(a.queue_mean, 5.0);
+        assert_eq!(a.migrations, 6);
+        assert_eq!(a.makespan.mean, 105.0);
+        assert_eq!(rep.aggregates[1].runs, 1);
+        assert_eq!(rep.total_migrations(), 9);
+    }
+
+    #[test]
+    fn csv_shapes_are_stable() {
+        let rep = SweepReport::build(&spec(), vec![run(0, 1, "10", 4.0)]);
+        let runs = rep.runs_csv();
+        let header = runs.lines().next().unwrap();
+        assert!(header.starts_with("index,axis_jobs,axis_seed,policy,"));
+        assert!(header.ends_with(",events"));
+        assert_eq!(runs.lines().count(), 2);
+        assert_eq!(
+            header.split(',').count(),
+            runs.lines().nth(1).unwrap().split(',').count()
+        );
+        let agg = rep.aggregate_csv();
+        assert!(agg.starts_with("point,runs,completed,makespan_mean_s,"));
+        assert_eq!(agg.lines().count(), 2);
+    }
+
+    #[test]
+    fn json_is_balanced_and_escaped() {
+        let mut r = run(0, 1, "a\"b", 4.0);
+        r.policy = "di\\ana".into();
+        let rep = SweepReport::build(&spec(), vec![r]);
+        let j = rep.to_json();
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert_eq!(j.matches('[').count(), j.matches(']').count());
+        assert!(j.contains("a\\\"b"));
+        assert!(j.contains("di\\\\ana"));
+        for key in ["\"name\"", "\"axes\"", "\"runs\"", "\"aggregates\""] {
+            assert!(j.contains(key), "missing {key}");
+        }
+    }
+
+    #[test]
+    fn csv_escaping() {
+        assert_eq!(csv_escape("plain"), "plain");
+        assert_eq!(csv_escape("a,b"), "\"a,b\"");
+        assert_eq!(csv_escape("a\"b"), "\"a\"\"b\"");
+    }
+
+    #[test]
+    fn empty_report_has_headers_only() {
+        let rep = SweepReport::build(&spec(), Vec::new());
+        assert_eq!(rep.runs_csv().lines().count(), 1);
+        assert_eq!(rep.aggregate_csv().lines().count(), 1);
+        assert!(rep.to_json().contains("\"runs\": [\n  ]"));
+    }
+}

@@ -1,0 +1,138 @@
+//! Parallel sweep executor: a scoped `std::thread` worker pool drains
+//! the expanded run matrix. Results are **bit-identical for any thread
+//! count** because (1) every run is fully self-contained and self-seeded
+//! from the spec expansion (never from worker identity or timing),
+//! (2) workers write each result into its own pre-indexed slot, and
+//! (3) aggregation happens single-threaded in matrix order after the
+//! pool drains.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::coordinator::{generate_workload, run_simulation_with_faults};
+use crate::metrics::SummaryStats;
+use crate::util::error::Result;
+
+use super::faults::FaultPlan;
+use super::report::{RunResult, SweepReport};
+use super::spec::{RunSpec, SweepSpec};
+
+/// Execute one run of the matrix — a pure function of `run.cfg` and the
+/// fault plan (assembly and reporting go through `coordinator::leader`,
+/// the same path every example and repro figure uses).
+pub fn run_one(run: &RunSpec, faults: &FaultPlan) -> Result<RunResult> {
+    let subs = generate_workload(&run.cfg);
+    let (_world, report) = run_simulation_with_faults(&run.cfg, subs, faults)?;
+    Ok(RunResult {
+        index: run.index,
+        seed: run.seed,
+        labels: run.labels.clone(),
+        policy: report.policy.to_string(),
+        jobs: report.jobs,
+        makespan_s: report.makespan_s,
+        queue: SummaryStats::of(&report.queue_time),
+        exec: SummaryStats::of(&report.exec_time),
+        turnaround: SummaryStats::of(&report.turnaround),
+        response: SummaryStats::of(&report.response_time),
+        throughput_jobs_per_s: report.throughput_jobs_per_s,
+        migrations: report.migrations,
+        groups_whole: report.groups_whole,
+        groups_split: report.groups_split,
+        events: report.events,
+    })
+}
+
+/// Run the whole sweep on up to `threads` workers and aggregate.
+pub fn run_sweep(spec: &SweepSpec, threads: usize) -> Result<SweepReport> {
+    let runs = spec.expand()?;
+    let n = runs.len();
+    let workers = threads.clamp(1, n.max(1));
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<Result<RunResult>>>> =
+        (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                // Work-stealing by atomic counter: which worker takes
+                // which index is timing-dependent, but the result of
+                // index i never is.
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let res = run_one(&runs[i], &spec.faults);
+                *slots[i].lock().unwrap() = Some(res);
+            });
+        }
+    });
+    let mut results = Vec::with_capacity(n);
+    for (i, slot) in slots.into_iter().enumerate() {
+        match slot.into_inner().unwrap() {
+            Some(Ok(r)) => results.push(r),
+            Some(Err(e)) => {
+                return Err(crate::err!("sweep run {i} failed: {e}"))
+            }
+            None => {
+                return Err(crate::err!(
+                    "sweep run {i} was never executed (worker died?)"
+                ))
+            }
+        }
+    }
+    Ok(SweepReport::build(spec, results))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::spec::SweepSpec;
+
+    fn tiny_spec() -> SweepSpec {
+        SweepSpec::from_str_named(
+            "name = \"tiny\"\npreset = \"uniform-4x4\"\nrepeats = 2\n\
+             base_seed = 11\n\
+             [axes]\npolicy = [\"diana\", \"fcfs\"]\n\
+             [set]\njobs = 20\nbulk_size = 10\ncpu_sec_median = 60.0\n\
+             cpu_sec_sigma = 0.3\nin_mb_median = 50.0\n",
+            "tiny",
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn runs_complete_and_report_aggregates() {
+        let spec = tiny_spec();
+        let rep = run_sweep(&spec, 2).unwrap();
+        assert_eq!(rep.runs.len(), 4);
+        assert_eq!(rep.aggregates.len(), 2); // one row per policy
+        for r in &rep.runs {
+            assert_eq!(r.jobs, 20, "run {} incomplete", r.index);
+            assert!(r.makespan_s > 0.0);
+            assert!(r.queue.p95 >= r.queue.p50);
+            assert!(r.queue.p99 >= r.queue.p95);
+        }
+        assert_eq!(rep.aggregates[0].point, "policy=diana");
+        assert_eq!(rep.aggregates[1].point, "policy=fcfs");
+        assert_eq!(rep.aggregates[0].jobs, 40);
+    }
+
+    #[test]
+    fn thread_count_does_not_change_results() {
+        let spec = tiny_spec();
+        let a = run_sweep(&spec, 1).unwrap();
+        let b = run_sweep(&spec, 4).unwrap();
+        assert_eq!(a.runs_csv(), b.runs_csv());
+        assert_eq!(a.aggregate_csv(), b.aggregate_csv());
+        assert_eq!(a.to_json(), b.to_json());
+    }
+
+    #[test]
+    fn failing_run_surfaces_as_error() {
+        let mut spec = tiny_spec();
+        // An impossible event budget aborts every run.
+        spec.set.push(("max_events".into(),
+                       crate::scenario::spec::ParamValue::Int(1)));
+        let err = run_sweep(&spec, 2).unwrap_err().to_string();
+        assert!(err.contains("event budget"), "got: {err}");
+    }
+}

@@ -1,0 +1,708 @@
+//! Declarative experiment specs: a base config (preset or file) plus
+//! parameter axes, scalar overrides, site/link overrides and a fault
+//! plan, expanded into a deterministic run matrix.
+//!
+//! File layout (see `rust/examples/sweeps/*.toml` for full samples):
+//!
+//! ```toml
+//! name = "flash-crowd"
+//! preset = "paper-testbed"   # or: config = "examples/configs/x.toml"
+//! repeats = 2                # seeds per matrix point
+//! base_seed = 100
+//!
+//! [axes]                     # cross-product; keys see `apply_param`
+//! arrival_rate = [2.0, 10.0]
+//! bulk_size = [25, 50]
+//!
+//! [set]                      # scalar overrides applied to every run
+//! jobs = 100
+//!
+//! [[site_override]]
+//! site = "site5"
+//! cpus = 16
+//!
+//! [[link_override]]
+//! from = "site1"
+//! to = "site5"
+//! rtt_ms = 800.0
+//!
+//! [[fault]]
+//! at = 60.0
+//! kind = "site-down"
+//! site = "site3"
+//! ```
+
+use std::path::Path;
+
+use crate::config::{self, EngineKind, GridConfig, LinkConfig, Policy};
+use crate::config::toml::{self, Table, Value};
+use crate::util::error::{Context, Result};
+use crate::{bail, err};
+
+use super::faults::FaultPlan;
+
+/// Where the base [`GridConfig`] comes from.
+#[derive(Clone, Debug)]
+pub enum BaseConfig {
+    /// A named preset (see [`preset_by_name`]).
+    Preset(String),
+    /// A config TOML file (relative paths resolve against the spec file).
+    File(String),
+}
+
+/// A scalar axis/override value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ParamValue {
+    Int(i64),
+    Float(f64),
+    Str(String),
+    Bool(bool),
+}
+
+impl ParamValue {
+    fn from_toml(v: &Value) -> Option<ParamValue> {
+        match v {
+            Value::Int(i) => Some(ParamValue::Int(*i)),
+            Value::Float(f) => Some(ParamValue::Float(*f)),
+            Value::Str(s) => Some(ParamValue::Str(s.clone())),
+            Value::Bool(b) => Some(ParamValue::Bool(*b)),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            ParamValue::Int(i) => Some(*i as f64),
+            ParamValue::Float(f) => Some(*f),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            ParamValue::Int(i) => Some(*i),
+            ParamValue::Float(f) if f.fract() == 0.0 => Some(*f as i64),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            ParamValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Stable label rendering for CSV/JSON columns.
+    pub fn label(&self) -> String {
+        match self {
+            ParamValue::Int(i) => i.to_string(),
+            ParamValue::Float(f) => format!("{f}"),
+            ParamValue::Str(s) => s.clone(),
+            ParamValue::Bool(b) => b.to_string(),
+        }
+    }
+}
+
+/// One swept parameter: a key (see [`apply_param`]) and its values.
+#[derive(Clone, Debug)]
+pub struct Axis {
+    pub key: String,
+    pub values: Vec<ParamValue>,
+}
+
+/// Structural override of one named site.
+#[derive(Clone, Debug)]
+pub struct SiteOverride {
+    pub site: String,
+    pub cpus: Option<usize>,
+    pub cpu_speed: Option<f64>,
+    pub standby: Option<bool>,
+}
+
+/// Structural override of one site pair's link (fields default to the
+/// pair's current effective values).
+#[derive(Clone, Debug)]
+pub struct LinkOverride {
+    pub from: String,
+    pub to: String,
+    pub rtt_ms: Option<f64>,
+    pub loss: Option<f64>,
+    pub capacity_mbps: Option<f64>,
+}
+
+/// A parsed sweep spec (see the module docs for the file layout).
+#[derive(Clone, Debug)]
+pub struct SweepSpec {
+    pub name: String,
+    pub base: BaseConfig,
+    /// Seeds per matrix point (>= 1).
+    pub repeats: usize,
+    /// First seed; run `i` of the matrix uses `base_seed + i`. Defaults
+    /// to the base config's seed.
+    pub base_seed: Option<u64>,
+    /// Axes in deterministic (sorted-key) order.
+    pub axes: Vec<Axis>,
+    /// Scalar `[set]` overrides, applied before the axes.
+    pub set: Vec<(String, ParamValue)>,
+    pub site_overrides: Vec<SiteOverride>,
+    pub link_overrides: Vec<LinkOverride>,
+    pub faults: FaultPlan,
+}
+
+/// One fully-resolved run of the matrix.
+#[derive(Clone, Debug)]
+pub struct RunSpec {
+    /// Position in the deterministic matrix order.
+    pub index: usize,
+    pub seed: u64,
+    /// Which repeat of the matrix point this run is.
+    pub repeat: usize,
+    /// `(axis key, value label)` in axis order; a trailing `seed` label
+    /// is appended unless `seed` is itself an axis.
+    pub labels: Vec<(String, String)>,
+    pub cfg: GridConfig,
+}
+
+fn str_key(t: &Table, key: &str) -> Option<String> {
+    t.get(key).and_then(Value::as_str).map(str::to_string)
+}
+
+fn opt_float(t: &Table, key: &str) -> Option<f64> {
+    t.get(key).and_then(Value::as_float)
+}
+
+/// A present-but-invalid integer is an error, not a silent clamp.
+fn opt_usize(t: &Table, key: &str) -> Result<Option<usize>> {
+    match t.get(key) {
+        None => Ok(None),
+        Some(v) => match v.as_int() {
+            Some(i) if i >= 0 => Ok(Some(i as usize)),
+            _ => Err(err!(
+                "`{key}` wants a non-negative integer, got {v:?}"
+            )),
+        },
+    }
+}
+
+impl SweepSpec {
+    /// Load a spec from a file; a relative `config = "..."` base path is
+    /// resolved against the spec file's directory.
+    pub fn from_file(path: impl AsRef<Path>) -> Result<SweepSpec> {
+        let p = path.as_ref();
+        let text = std::fs::read_to_string(p)
+            .with_context(|| format!("reading {}", p.display()))?;
+        let default_name = p
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .unwrap_or("sweep");
+        let mut spec = Self::from_str_named(&text, default_name)
+            .with_context(|| format!("parsing {}", p.display()))?;
+        if let BaseConfig::File(f) = &spec.base {
+            let fp = Path::new(f);
+            if fp.is_relative() {
+                if let Some(dir) = p.parent() {
+                    spec.base = BaseConfig::File(
+                        dir.join(fp).to_string_lossy().into_owned(),
+                    );
+                }
+            }
+        }
+        Ok(spec)
+    }
+
+    /// Parse a spec from TOML text.
+    pub fn from_str_named(text: &str, default_name: &str) -> Result<SweepSpec> {
+        let root = toml::parse(text).map_err(|e| err!("{e}"))?;
+        let name = str_key(&root, "name")
+            .unwrap_or_else(|| default_name.to_string());
+
+        let base = match (str_key(&root, "preset"), str_key(&root, "config")) {
+            (Some(_), Some(_)) => {
+                bail!("spec `{name}`: give either `preset` or `config`, not both")
+            }
+            (Some(p), None) => BaseConfig::Preset(p),
+            (None, Some(f)) => BaseConfig::File(f),
+            (None, None) => BaseConfig::Preset("paper-testbed".into()),
+        };
+
+        let repeats = match root.get("repeats") {
+            None => 1,
+            Some(v) => match v.as_int() {
+                Some(i) if i >= 1 => i as usize,
+                _ => bail!("`repeats` wants an integer >= 1, got {v:?}"),
+            },
+        };
+        let base_seed = match root.get("base_seed") {
+            None => None,
+            Some(v) => match v.as_int() {
+                Some(i) if i >= 0 => Some(i as u64),
+                _ => bail!(
+                    "`base_seed` wants a non-negative integer, got {v:?}"
+                ),
+            },
+        };
+
+        let mut axes = Vec::new();
+        if let Some(at) = root.get("axes").and_then(Value::as_table) {
+            // BTreeMap iteration → axes in sorted-key order (deterministic).
+            for (k, v) in at {
+                let values: Vec<ParamValue> = match v {
+                    Value::Array(a) => a
+                        .iter()
+                        .map(|x| {
+                            ParamValue::from_toml(x).ok_or_else(|| {
+                                err!("axis `{k}`: values must be scalars")
+                            })
+                        })
+                        .collect::<Result<_>>()?,
+                    scalar => vec![ParamValue::from_toml(scalar)
+                        .ok_or_else(|| err!("axis `{k}`: not a scalar"))?],
+                };
+                crate::ensure!(!values.is_empty(), "axis `{k}` is empty");
+                axes.push(Axis { key: k.clone(), values });
+            }
+        }
+        if axes.iter().any(|a| a.key == "seed") && repeats > 1 {
+            bail!(
+                "spec `{name}`: a `seed` axis and `repeats > 1` conflict — \
+                 drop one of them"
+            );
+        }
+
+        let mut set = Vec::new();
+        if let Some(st) = root.get("set").and_then(Value::as_table) {
+            for (k, v) in st {
+                let pv = ParamValue::from_toml(v)
+                    .ok_or_else(|| err!("[set] `{k}`: must be a scalar"))?;
+                set.push((k.clone(), pv));
+            }
+        }
+
+        let mut site_overrides = Vec::new();
+        if let Some(arr) = root.get("site_override").and_then(Value::as_array) {
+            for (i, sv) in arr.iter().enumerate() {
+                let t = sv.as_table().ok_or_else(|| {
+                    err!("[[site_override]] #{i} is not a table")
+                })?;
+                site_overrides.push(SiteOverride {
+                    site: str_key(t, "site").ok_or_else(|| {
+                        err!("[[site_override]] #{i}: missing `site`")
+                    })?,
+                    cpus: opt_usize(t, "cpus")?,
+                    cpu_speed: opt_float(t, "cpu_speed"),
+                    standby: t.get("standby").and_then(Value::as_bool),
+                });
+            }
+        }
+
+        let mut link_overrides = Vec::new();
+        if let Some(arr) = root.get("link_override").and_then(Value::as_array) {
+            for (i, lv) in arr.iter().enumerate() {
+                let t = lv.as_table().ok_or_else(|| {
+                    err!("[[link_override]] #{i} is not a table")
+                })?;
+                let req = |key: &str| {
+                    str_key(t, key).ok_or_else(|| {
+                        err!("[[link_override]] #{i}: missing `{key}`")
+                    })
+                };
+                link_overrides.push(LinkOverride {
+                    from: req("from")?,
+                    to: req("to")?,
+                    rtt_ms: opt_float(t, "rtt_ms"),
+                    loss: opt_float(t, "loss"),
+                    capacity_mbps: opt_float(t, "capacity_mbps"),
+                });
+            }
+        }
+
+        let faults = match root.get("fault").and_then(Value::as_array) {
+            Some(arr) => FaultPlan::from_tables(arr)?,
+            None => FaultPlan::default(),
+        };
+
+        Ok(SweepSpec {
+            name,
+            base,
+            repeats,
+            base_seed,
+            axes,
+            set,
+            site_overrides,
+            link_overrides,
+            faults,
+        })
+    }
+
+    /// Materialise the base config with `[set]` and structural overrides
+    /// applied (axes not yet).
+    pub fn base_config(&self) -> Result<GridConfig> {
+        let mut cfg = match &self.base {
+            BaseConfig::Preset(p) => preset_by_name(p)?,
+            BaseConfig::File(f) => config::load_file(f)?,
+        };
+        for (k, v) in &self.set {
+            apply_param(&mut cfg, k, v)?;
+        }
+        for o in &self.site_overrides {
+            apply_site_override(&mut cfg, o)?;
+        }
+        for o in &self.link_overrides {
+            apply_link_override(&mut cfg, o)?;
+        }
+        Ok(cfg)
+    }
+
+    /// Number of runs the matrix expands to.
+    pub fn matrix_size(&self) -> usize {
+        self.axes.iter().map(|a| a.values.len()).product::<usize>()
+            * self.repeats.max(1)
+    }
+
+    /// Expand the cross-product of all axes × repeats into concrete runs.
+    ///
+    /// The order is deterministic: axes vary odometer-style (last sorted
+    /// key fastest) with repeats innermost, and run `i`'s seed is
+    /// `base_seed + i` — a pure function of the matrix position, never of
+    /// worker scheduling.
+    pub fn expand(&self) -> Result<Vec<RunSpec>> {
+        let base = self.base_config()?;
+        let repeats = self.repeats.max(1);
+        let total = self.matrix_size();
+        crate::ensure!(
+            total <= 100_000,
+            "sweep `{}` expands to {total} runs — the cap is 100000",
+            self.name
+        );
+        let base_seed = self.base_seed.unwrap_or(base.seed);
+        let has_seed_axis = self.axes.iter().any(|a| a.key == "seed");
+        let mut runs: Vec<RunSpec> = Vec::with_capacity(total);
+        let mut counters = vec![0usize; self.axes.len()];
+        'outer: loop {
+            for rep in 0..repeats {
+                let mut cfg = base.clone();
+                let mut labels = Vec::with_capacity(self.axes.len() + 1);
+                for (ai, axis) in self.axes.iter().enumerate() {
+                    let v = &axis.values[counters[ai]];
+                    apply_param(&mut cfg, &axis.key, v).with_context(|| {
+                        format!("sweep `{}`, axis `{}`", self.name, axis.key)
+                    })?;
+                    labels.push((axis.key.clone(), v.label()));
+                }
+                let index = runs.len();
+                let seed = if has_seed_axis {
+                    cfg.seed // set by the `seed` axis (repeats == 1)
+                } else {
+                    base_seed.wrapping_add(index as u64)
+                };
+                cfg.seed = seed;
+                if !has_seed_axis {
+                    labels.push(("seed".into(), seed.to_string()));
+                }
+                cfg.validate()
+                    .map_err(|e| err!("sweep `{}` run {index}: {e}", self.name))?;
+                runs.push(RunSpec { index, seed, repeat: rep, labels, cfg });
+            }
+            // Odometer increment: last axis fastest.
+            let mut i = self.axes.len();
+            loop {
+                if i == 0 {
+                    break 'outer;
+                }
+                i -= 1;
+                counters[i] += 1;
+                if counters[i] < self.axes[i].values.len() {
+                    continue 'outer;
+                }
+                counters[i] = 0;
+            }
+        }
+        Ok(runs)
+    }
+}
+
+/// Resolve a preset name — delegates to the single dispatch table in
+/// [`config::presets::by_name`].
+pub use crate::config::presets::by_name as preset_by_name;
+
+/// Apply one named parameter to a config. Axes and `[set]` share this
+/// key table; unknown keys are an error.
+pub fn apply_param(cfg: &mut GridConfig, key: &str, v: &ParamValue) -> Result<()> {
+    fn f(key: &str, v: &ParamValue) -> Result<f64> {
+        v.as_f64()
+            .ok_or_else(|| err!("`{key}` wants a number, got {v:?}"))
+    }
+    fn u(key: &str, v: &ParamValue) -> Result<usize> {
+        v.as_i64()
+            .filter(|&i| i >= 0)
+            .map(|i| i as usize)
+            .ok_or_else(|| err!("`{key}` wants a non-negative integer, got {v:?}"))
+    }
+    fn s<'a>(key: &str, v: &'a ParamValue) -> Result<&'a str> {
+        v.as_str()
+            .ok_or_else(|| err!("`{key}` wants a string, got {v:?}"))
+    }
+    match key {
+        // top level
+        "seed" => cfg.seed = u(key, v)? as u64,
+        "max_events" => cfg.max_events = u(key, v)? as u64,
+        // workload
+        "jobs" => cfg.workload.jobs = u(key, v)?,
+        "bulk_size" | "group_size" => cfg.workload.bulk_size = u(key, v)?,
+        "users" => cfg.workload.users = u(key, v)?,
+        "arrival_rate" => cfg.workload.arrival_rate = f(key, v)?,
+        "frac_compute" => cfg.workload.frac_compute = f(key, v)?,
+        "frac_data" => cfg.workload.frac_data = f(key, v)?,
+        "frac_both" => cfg.workload.frac_both = f(key, v)?,
+        "in_mb_median" => cfg.workload.in_mb_median = f(key, v)?,
+        "in_mb_sigma" => cfg.workload.in_mb_sigma = f(key, v)?,
+        "out_mb_median" => cfg.workload.out_mb_median = f(key, v)?,
+        "exe_mb" => cfg.workload.exe_mb = f(key, v)?,
+        "cpu_sec_median" => cfg.workload.cpu_sec_median = f(key, v)?,
+        "cpu_sec_sigma" => cfg.workload.cpu_sec_sigma = f(key, v)?,
+        "max_procs" => cfg.workload.max_procs = u(key, v)?,
+        "datasets" => cfg.workload.datasets = u(key, v)?,
+        "replicas" => cfg.workload.replicas = u(key, v)?,
+        // scheduler
+        "policy" => {
+            let p = s(key, v)?;
+            cfg.scheduler.policy = Policy::from_name(p)
+                .ok_or_else(|| err!("unknown policy `{p}`"))?;
+        }
+        "engine" => {
+            let e = s(key, v)?;
+            cfg.scheduler.engine = EngineKind::from_name(e)
+                .ok_or_else(|| err!("unknown engine `{e}`"))?;
+        }
+        "w5" => cfg.scheduler.w5 = f(key, v)?,
+        "w6" => cfg.scheduler.w6 = f(key, v)?,
+        "w7" => cfg.scheduler.w7 = f(key, v)?,
+        "w_net" => cfg.scheduler.w_net = f(key, v)?,
+        "w_dtc" => cfg.scheduler.w_dtc = f(key, v)?,
+        "congestion_thrs" => cfg.scheduler.congestion_thrs = f(key, v)?,
+        "group_division_factor" => {
+            cfg.scheduler.group_division_factor = u(key, v)?
+        }
+        "max_group_per_site" => cfg.scheduler.max_group_per_site = u(key, v)?,
+        "aging_halflife_s" => cfg.scheduler.aging_halflife_s = f(key, v)?,
+        "default_quota" => cfg.scheduler.default_quota = f(key, v)?,
+        "migration_period_s" => cfg.scheduler.migration_period_s = f(key, v)?,
+        "max_migrations" => cfg.scheduler.max_migrations = u(key, v)? as u32,
+        // network defaults
+        "default_rtt_ms" => cfg.network.default_rtt_ms = f(key, v)?,
+        "default_loss" => cfg.network.default_loss = f(key, v)?,
+        "default_capacity_mbps" => {
+            cfg.network.default_capacity_mbps = f(key, v)?
+        }
+        "local_bw_mbps" => cfg.network.local_bw_mbps = f(key, v)?,
+        "local_loss" => cfg.network.local_loss = f(key, v)?,
+        "mss_bytes" => cfg.network.mss_bytes = f(key, v)?,
+        "monitor_noise" => cfg.network.monitor_noise = f(key, v)?,
+        "monitor_period_s" => cfg.network.monitor_period_s = f(key, v)?,
+        _ => bail!(
+            "unknown sweep parameter `{key}` (workload: jobs, bulk_size, \
+             users, arrival_rate, frac_*, in_mb_*, out_mb_median, exe_mb, \
+             cpu_sec_*, max_procs, datasets, replicas; scheduler: policy, \
+             engine, w5..w7, w_net, w_dtc, congestion_thrs, \
+             group_division_factor, max_group_per_site, aging_halflife_s, \
+             default_quota, migration_period_s, max_migrations; network: \
+             default_rtt_ms, default_loss, default_capacity_mbps, \
+             local_bw_mbps, local_loss, mss_bytes, monitor_noise, \
+             monitor_period_s; top level: seed, max_events)"
+        ),
+    }
+    Ok(())
+}
+
+fn apply_site_override(cfg: &mut GridConfig, o: &SiteOverride) -> Result<()> {
+    let i = cfg
+        .site_index(&o.site)
+        .ok_or_else(|| err!("[[site_override]] names unknown site `{}`", o.site))?;
+    let site = &mut cfg.sites[i];
+    if let Some(c) = o.cpus {
+        site.cpus = c;
+    }
+    if let Some(s) = o.cpu_speed {
+        site.cpu_speed = s;
+    }
+    if let Some(b) = o.standby {
+        site.standby = b;
+    }
+    Ok(())
+}
+
+fn apply_link_override(cfg: &mut GridConfig, o: &LinkOverride) -> Result<()> {
+    for name in [&o.from, &o.to] {
+        crate::ensure!(
+            cfg.site_index(name).is_some(),
+            "[[link_override]] names unknown site `{name}`"
+        );
+    }
+    let existing = cfg.network.links.iter().position(|l| {
+        (l.from == o.from && l.to == o.to)
+            || (l.from == o.to && l.to == o.from)
+    });
+    let base = match existing {
+        Some(i) => cfg.network.links[i].clone(),
+        None => LinkConfig {
+            from: o.from.clone(),
+            to: o.to.clone(),
+            rtt_ms: cfg.network.default_rtt_ms,
+            loss: cfg.network.default_loss,
+            capacity_mbps: cfg.network.default_capacity_mbps,
+        },
+    };
+    let link = LinkConfig {
+        rtt_ms: o.rtt_ms.unwrap_or(base.rtt_ms),
+        loss: o.loss.unwrap_or(base.loss),
+        capacity_mbps: o.capacity_mbps.unwrap_or(base.capacity_mbps),
+        ..base
+    };
+    match existing {
+        Some(i) => cfg.network.links[i] = link,
+        None => cfg.network.links.push(link),
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SPEC: &str = r#"
+name = "t"
+preset = "uniform-4x4"
+repeats = 2
+base_seed = 1000
+
+[axes]
+jobs = [10, 20]
+policy = ["diana", "fcfs"]
+
+[set]
+bulk_size = 5
+
+[[site_override]]
+site = "s1"
+cpus = 16
+
+[[link_override]]
+from = "s0"
+to = "s1"
+rtt_ms = 200.0
+"#;
+
+    #[test]
+    fn parse_and_expand_matrix() {
+        let spec = SweepSpec::from_str_named(SPEC, "x").unwrap();
+        assert_eq!(spec.name, "t");
+        assert_eq!(spec.matrix_size(), 8); // 2 × 2 axes × 2 repeats
+        let runs = spec.expand().unwrap();
+        assert_eq!(runs.len(), 8);
+        // Axes in sorted-key order: jobs before policy; policy fastest.
+        assert_eq!(runs[0].labels[0], ("jobs".into(), "10".into()));
+        assert_eq!(runs[0].labels[1], ("policy".into(), "diana".into()));
+        assert_eq!(runs[2].labels[1], ("policy".into(), "fcfs".into()));
+        assert_eq!(runs[4].labels[0], ("jobs".into(), "20".into()));
+        // Seeds are base_seed + index, independent of everything else.
+        for (i, r) in runs.iter().enumerate() {
+            assert_eq!(r.index, i);
+            assert_eq!(r.seed, 1000 + i as u64);
+            assert_eq!(r.cfg.seed, r.seed);
+            assert_eq!(r.cfg.workload.bulk_size, 5);
+            assert_eq!(r.cfg.sites[1].cpus, 16);
+            assert_eq!(r.cfg.network.links[0].rtt_ms, 200.0);
+            // Unspecified link fields fall back to network defaults.
+            assert_eq!(
+                r.cfg.network.links[0].loss,
+                r.cfg.network.default_loss
+            );
+        }
+        assert_eq!(runs[3].cfg.workload.jobs, 10);
+        assert_eq!(runs[4].cfg.workload.jobs, 20);
+        assert_eq!(runs[2].cfg.scheduler.policy, Policy::FcfsBroker);
+    }
+
+    #[test]
+    fn repeats_are_adjacent_runs_of_one_point() {
+        let spec = SweepSpec::from_str_named(SPEC, "x").unwrap();
+        let runs = spec.expand().unwrap();
+        assert_eq!(runs[0].repeat, 0);
+        assert_eq!(runs[1].repeat, 1);
+        // Same point labels, different seed label.
+        assert_eq!(runs[0].labels[..2], runs[1].labels[..2]);
+        assert_ne!(runs[0].seed, runs[1].seed);
+    }
+
+    #[test]
+    fn no_axes_is_a_single_point() {
+        let spec =
+            SweepSpec::from_str_named("preset = \"uniform-2x2\"\n", "solo")
+                .unwrap();
+        assert_eq!(spec.name, "solo");
+        let runs = spec.expand().unwrap();
+        assert_eq!(runs.len(), 1);
+        assert_eq!(runs[0].labels.len(), 1); // just the seed label
+    }
+
+    #[test]
+    fn seed_axis_conflicts_with_repeats() {
+        let bad = "repeats = 2\n[axes]\nseed = [1, 2]\n";
+        assert!(SweepSpec::from_str_named(bad, "x").is_err());
+        let ok = "[axes]\nseed = [5, 9]\n";
+        let runs = SweepSpec::from_str_named(ok, "x")
+            .unwrap()
+            .expand()
+            .unwrap();
+        assert_eq!(runs.len(), 2);
+        assert_eq!((runs[0].seed, runs[1].seed), (5, 9));
+        // No duplicate seed label when seed is an axis.
+        assert_eq!(runs[0].labels.len(), 1);
+    }
+
+    #[test]
+    fn unknown_keys_and_presets_are_errors() {
+        let mut cfg = config::presets::uniform_grid(2, 2);
+        assert!(apply_param(&mut cfg, "nope", &ParamValue::Int(1)).is_err());
+        assert!(
+            apply_param(&mut cfg, "jobs", &ParamValue::Str("x".into()))
+                .is_err()
+        );
+        assert!(apply_param(
+            &mut cfg,
+            "policy",
+            &ParamValue::Str("magic".into())
+        )
+        .is_err());
+        assert!(preset_by_name("nope").is_err());
+        assert!(preset_by_name("uniform-3x5").is_ok());
+        let bad = "preset = \"x\"\nconfig = \"y\"\n";
+        assert!(SweepSpec::from_str_named(bad, "x").is_err());
+    }
+
+    #[test]
+    fn invalid_expanded_config_is_rejected() {
+        let bad = "preset = \"uniform-2x2\"\n[axes]\nfrac_compute = [0.9]\n";
+        let spec = SweepSpec::from_str_named(bad, "x").unwrap();
+        assert!(spec.expand().is_err()); // class mix no longer sums to 1
+    }
+
+    #[test]
+    fn overrides_of_unknown_sites_are_errors() {
+        let bad = "preset = \"uniform-2x2\"\n[[site_override]]\nsite = \"zz\"\n";
+        let spec = SweepSpec::from_str_named(bad, "x").unwrap();
+        assert!(spec.expand().is_err());
+    }
+
+    #[test]
+    fn negative_integers_are_rejected_not_clamped() {
+        let bad =
+            "preset = \"uniform-2x2\"\n[[site_override]]\nsite = \"s0\"\n\
+             cpus = -4\n";
+        assert!(SweepSpec::from_str_named(bad, "x").is_err());
+        assert!(SweepSpec::from_str_named("repeats = -3\n", "x").is_err());
+        assert!(SweepSpec::from_str_named("repeats = 0\n", "x").is_err());
+        assert!(SweepSpec::from_str_named("base_seed = -10\n", "x").is_err());
+    }
+}

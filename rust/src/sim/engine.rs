@@ -25,11 +25,13 @@ impl<E> Eq for Entry<E> {}
 
 impl<E> Ord for Entry<E> {
     fn cmp(&self, other: &Self) -> Ordering {
-        // Reverse for a min-heap on (time, seq).
+        // Reverse for a min-heap on (time, seq). `schedule` rejects
+        // non-finite times, so `total_cmp` is a plain numeric order here
+        // — never the silent `unwrap_or(Equal)` that would let a NaN
+        // corrupt the heap invariant.
         other
             .time
-            .partial_cmp(&self.time)
-            .unwrap_or(Ordering::Equal)
+            .total_cmp(&self.time)
             .then_with(|| other.seq.cmp(&self.seq))
     }
 }
@@ -77,9 +79,14 @@ impl<E> EventQueue<E> {
     }
 
     /// Schedule `event` at absolute time `at` (clamped to now — the past
-    /// is not addressable).
+    /// is not addressable). Non-finite or negative times are a caller
+    /// bug and are rejected here, before they can corrupt the heap order.
     pub fn schedule(&mut self, at: SimTime, event: E) {
-        debug_assert!(at.is_finite());
+        assert!(
+            at.is_finite() && at >= 0.0,
+            "EventQueue::schedule: invalid event time {at} \
+             (must be finite and >= 0)"
+        );
         let t = if at < self.now { self.now } else { at };
         self.heap.push(Entry { time: t, seq: self.seq, event });
         self.seq += 1;
@@ -150,6 +157,27 @@ mod tests {
         q.schedule(3.0, "late");
         let (t, _) = q.pop().unwrap();
         assert_eq!(t, 10.0); // clamped, time never goes backwards
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid event time")]
+    fn nan_time_is_rejected() {
+        let mut q = EventQueue::new();
+        q.schedule(f64::NAN, "bad");
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid event time")]
+    fn negative_time_is_rejected() {
+        let mut q = EventQueue::new();
+        q.schedule(-1.0, "bad");
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid event time")]
+    fn infinite_time_is_rejected() {
+        let mut q = EventQueue::new();
+        q.schedule(f64::INFINITY, "bad");
     }
 
     #[test]

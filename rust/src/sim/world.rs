@@ -13,8 +13,9 @@ use crate::data::Catalog;
 use crate::job::{Job, JobId};
 use crate::metrics::Recorder;
 use crate::migration::{decide, MigrationDecision, PeerReport};
-use crate::network::{PingerMonitor, Topology};
+use crate::network::{Link, PingerMonitor, Topology};
 use crate::p2p::{Discovery, Overlay, PeerState};
+use crate::scenario::faults::{FaultPlan, ResolvedFault};
 use crate::scheduler::{build_cost_inputs, GridView, SitePicker, SiteSnapshot};
 use crate::util::error::Result;
 use crate::util::Pcg64;
@@ -31,11 +32,9 @@ enum Ev {
     Deliver { job: u64 },
     Monitor,
     MigrationCheck,
+    /// Timed fault injection (index into `World::faults`).
+    Fault(usize),
 }
-
-/// Safety valve: a run processing more events than this aborts (a bug,
-/// not a workload, reaches this).
-const MAX_EVENTS: u64 = 50_000_000;
 
 /// Max migration candidates examined per site per check.
 const MIGRATION_BATCH: usize = 8;
@@ -64,6 +63,14 @@ pub struct World {
     delivered: usize,
     total_jobs: usize,
     migration_on: bool,
+    /// Index-resolved fault schedule (scenario subsystem), delivered as
+    /// `Ev::Fault` events.
+    faults: Vec<ResolvedFault>,
+    /// Monitor sweeps and heartbeats are suppressed until this sim time
+    /// (monitor-blackout fault).
+    blackout_until: f64,
+    /// Config-derived topology, kept pristine for the `heal` fault.
+    pristine_topo: Topology,
     /// §II dataflow gating: job → count of undelivered parents.
     blocked: BTreeMap<u64, usize>,
     /// parent job → dependent children.
@@ -115,6 +122,7 @@ impl World {
         World {
             recorder: Recorder::new(n, 60.0),
             alive: vec![true; n],
+            pristine_topo: topo.clone(),
             topo,
             monitor,
             catalog,
@@ -132,9 +140,83 @@ impl World {
             delivered: 0,
             total_jobs: 0,
             migration_on,
+            faults: Vec::new(),
+            blackout_until: 0.0,
             blocked: BTreeMap::new(),
             children: BTreeMap::new(),
             cfg,
+        }
+    }
+
+    /// Load a fault-injection plan: resolve site names against the
+    /// config and schedule each fault as a first-class DES event. Call
+    /// before `run` (alongside `load_submissions`).
+    pub fn load_faults(&mut self, plan: &FaultPlan) -> Result<()> {
+        for (at, fault) in plan.resolve(&self.cfg)? {
+            let idx = self.faults.len();
+            self.faults.push(fault);
+            self.events.schedule(at, Ev::Fault(idx));
+        }
+        Ok(())
+    }
+
+    /// Apply one resolved fault at sim time `t`.
+    fn apply_fault(&mut self, idx: usize, t: f64) {
+        match self.faults[idx].clone() {
+            ResolvedFault::SiteDown(s) => {
+                crate::info!("t={t:.1}: fault — site {s} down");
+                self.set_alive(s, false);
+            }
+            ResolvedFault::SiteUp(s) => {
+                crate::info!("t={t:.1}: fault — site {s} recovered");
+                self.set_alive(s, true);
+                // Jobs may have been stranded in this site's meta-queue
+                // while it was dead (dispatch early-returns on !alive,
+                // and without migration nothing else drains it) — kick
+                // the dispatch loop explicitly on recovery.
+                self.events.schedule(t, Ev::Dispatch(s));
+            }
+            ResolvedFault::LinkDegrade {
+                from,
+                to,
+                rtt_factor,
+                loss_add,
+                capacity_factor,
+            } => {
+                crate::info!("t={t:.1}: fault — link {from}<->{to} degraded");
+                self.topo.degrade_link(
+                    from, to, rtt_factor, loss_add, capacity_factor,
+                );
+            }
+            ResolvedFault::Partition {
+                members,
+                rtt_ms,
+                loss,
+                capacity_mbps,
+            } => {
+                crate::info!(
+                    "t={t:.1}: fault — partition around sites {members:?}"
+                );
+                let link = Link { rtt_ms, loss, capacity_mbps };
+                let inside = |s: usize| members.contains(&s);
+                for a in 0..self.topo.n_sites() {
+                    for b in (a + 1)..self.topo.n_sites() {
+                        if inside(a) != inside(b) {
+                            self.topo.set_link(a, b, link);
+                        }
+                    }
+                }
+            }
+            ResolvedFault::Heal => {
+                crate::info!("t={t:.1}: fault — topology healed");
+                self.topo = self.pristine_topo.clone();
+            }
+            ResolvedFault::MonitorBlackout { duration_s } => {
+                crate::info!(
+                    "t={t:.1}: fault — monitor blackout for {duration_s:.0}s"
+                );
+                self.blackout_until = self.blackout_until.max(t + duration_s);
+            }
         }
     }
 
@@ -231,18 +313,30 @@ impl World {
         }
         while let Some((t, ev)) = self.events.pop() {
             crate::ensure!(
-                self.events.processed() < MAX_EVENTS,
-                "event budget exceeded — livelock?"
+                self.events.processed() < self.cfg.max_events,
+                "event budget exceeded: {} events processed at sim time \
+                 {:.1}s with {} of {} jobs delivered (max_events = {}) — \
+                 livelock?",
+                self.events.processed(),
+                t,
+                self.delivered,
+                self.total_jobs,
+                self.cfg.max_events
             );
             match ev {
                 Ev::Submit(i) => self.on_submit(i, t)?,
                 Ev::Dispatch(site) => self.dispatch(site, t),
                 Ev::Finish { job, site } => self.on_finish(JobId(job), site, t),
                 Ev::Deliver { job } => self.on_deliver(JobId(job), t),
+                Ev::Fault(i) => self.apply_fault(i, t),
                 Ev::Monitor => {
-                    self.monitor.sweep(&self.topo);
-                    for s in 0..self.sites.len() {
-                        self.publish_state(s); // heartbeat to discovery
+                    // A blacked-out monitor neither sweeps nor heartbeats
+                    // — peers keep acting on stale beliefs (§IX).
+                    if t >= self.blackout_until {
+                        self.monitor.sweep(&self.topo);
+                        for s in 0..self.sites.len() {
+                            self.publish_state(s); // heartbeat to discovery
+                        }
                     }
                     if self.delivered < self.total_jobs {
                         self.events
@@ -767,6 +861,177 @@ mod tests {
             assert!(parent.delivered <= merge_start + 1e-9,
                     "merge started before parent delivered");
         }
+    }
+
+    #[test]
+    fn tiny_event_budget_aborts_with_context() {
+        let mut cfg = small_cfg(40);
+        cfg.max_events = 10;
+        let mut world = build_world(cfg, Policy::Diana);
+        let mut rng = Pcg64::new(1);
+        world.catalog = Catalog::from_config(&world.cfg, &mut rng);
+        let subs = WorkloadGen::new(7).schedule(&world.cfg, &world.catalog);
+        world.load_submissions(subs);
+        let err = world.run().unwrap_err().to_string();
+        assert!(err.contains("event budget"), "got: {err}");
+        assert!(err.contains("max_events = 10"), "got: {err}");
+        assert!(err.contains("sim time"), "got: {err}");
+    }
+
+    #[test]
+    fn fault_plan_crash_and_recovery_completes() {
+        use crate::scenario::faults::{FaultEvent, FaultKind, FaultPlan};
+        let mut world = build_world(small_cfg(60), Policy::Diana);
+        let mut rng = Pcg64::new(2);
+        world.catalog = Catalog::from_config(&world.cfg, &mut rng);
+        let plan = FaultPlan {
+            events: vec![
+                FaultEvent {
+                    at: 10.0,
+                    kind: FaultKind::SiteDown { site: "s2".into() },
+                },
+                FaultEvent {
+                    at: 2000.0,
+                    kind: FaultKind::SiteUp { site: "s2".into() },
+                },
+            ],
+        };
+        world.load_faults(&plan).unwrap();
+        let subs = WorkloadGen::new(7).schedule(&world.cfg, &world.catalog);
+        world.load_submissions(subs);
+        world.run().unwrap();
+        assert_eq!(world.completion(), 1.0);
+        // Unknown site names are rejected at load.
+        let mut w2 = build_world(small_cfg(5), Policy::Diana);
+        let bad = FaultPlan {
+            events: vec![FaultEvent {
+                at: 1.0,
+                kind: FaultKind::SiteDown { site: "nope".into() },
+            }],
+        };
+        assert!(w2.load_faults(&bad).is_err());
+    }
+
+    #[test]
+    fn fcfs_site_recovery_redispatches_stranded_jobs() {
+        // Under a non-migration policy nothing drains a dead site's
+        // meta-queue — recovery must kick the dispatch loop itself.
+        use crate::scenario::faults::{FaultEvent, FaultKind, FaultPlan};
+        let mut cfg = small_cfg(60);
+        // Fail fast (not at 50M events) if recovery strands jobs.
+        cfg.max_events = 100_000;
+        let mut world = build_world(cfg, Policy::FcfsBroker);
+        let mut rng = Pcg64::new(5);
+        world.catalog = Catalog::from_config(&world.cfg, &mut rng);
+        let plan = FaultPlan {
+            events: vec![
+                FaultEvent {
+                    at: 20.0,
+                    kind: FaultKind::SiteDown { site: "s1".into() },
+                },
+                FaultEvent {
+                    at: 500.0,
+                    kind: FaultKind::SiteUp { site: "s1".into() },
+                },
+            ],
+        };
+        world.load_faults(&plan).unwrap();
+        let subs = WorkloadGen::new(9).schedule(&world.cfg, &world.catalog);
+        world.load_submissions(subs);
+        world.run().unwrap();
+        assert_eq!(world.completion(), 1.0);
+    }
+
+    #[test]
+    fn monitor_blackout_suppresses_sweeps() {
+        use crate::scenario::faults::{FaultEvent, FaultKind, FaultPlan};
+        let mut world = build_world(small_cfg(30), Policy::Diana);
+        let mut rng = Pcg64::new(3);
+        world.catalog = Catalog::from_config(&world.cfg, &mut rng);
+        let plan = FaultPlan {
+            events: vec![FaultEvent {
+                at: 0.0,
+                kind: FaultKind::MonitorBlackout { duration_s: 1e9 },
+            }],
+        };
+        world.load_faults(&plan).unwrap();
+        let subs = WorkloadGen::new(7).schedule(&world.cfg, &world.catalog);
+        world.load_submissions(subs);
+        world.run().unwrap();
+        assert_eq!(world.completion(), 1.0);
+        // Only the bootstrap sample ever landed — every periodic sweep
+        // fell inside the blackout.
+        assert_eq!(world.monitor.observe(0, 1).samples, 1);
+    }
+
+    #[test]
+    fn partition_slows_transfers_until_heal_restores_topology() {
+        use crate::scenario::faults::{FaultEvent, FaultKind, FaultPlan};
+        let base = run_with(small_cfg(40), Policy::Diana);
+        let mut world = build_world(small_cfg(40), Policy::Diana);
+        let mut rng = Pcg64::new(world.cfg.seed);
+        world.catalog = Catalog::from_config(&world.cfg, &mut rng);
+        let members = vec!["s0".to_string(), "s1".to_string()];
+        let plan = FaultPlan {
+            events: vec![
+                FaultEvent {
+                    at: 1.0,
+                    kind: FaultKind::Partition {
+                        members,
+                        rtt_ms: 1500.0,
+                        loss: 0.2,
+                        capacity_mbps: 2.0,
+                    },
+                },
+                FaultEvent { at: 50.0, kind: FaultKind::Heal },
+            ],
+        };
+        world.load_faults(&plan).unwrap();
+        let subs = WorkloadGen::new(world.cfg.seed)
+            .schedule(&world.cfg, &world.catalog);
+        world.load_submissions(subs);
+        world.run().unwrap();
+        assert_eq!(world.completion(), 1.0);
+        // Heal fired mid-run: the live topology is pristine again.
+        let d = world.cfg.network.default_rtt_ms;
+        assert_eq!(world.topo.link(0, 2).rtt_ms, d);
+        assert_eq!(world.topo.link(1, 3).rtt_ms, d);
+        // Intra-island links were never touched.
+        assert_eq!(world.topo.link(0, 1).rtt_ms, d);
+        // The partitioned run can only be slower than the clean one.
+        let clean = base.recorder.summary(crate::metrics::JobRecord::turnaround);
+        let faulted =
+            world.recorder.summary(crate::metrics::JobRecord::turnaround);
+        assert!(faulted.mean() >= clean.mean(),
+                "partition sped things up? {} < {}",
+                faulted.mean(), clean.mean());
+    }
+
+    #[test]
+    fn link_degrade_fault_applies_to_ground_truth() {
+        use crate::scenario::faults::{FaultEvent, FaultKind, FaultPlan};
+        let mut world = build_world(small_cfg(20), Policy::Diana);
+        let mut rng = Pcg64::new(4);
+        world.catalog = Catalog::from_config(&world.cfg, &mut rng);
+        let before = world.topo.transfer_seconds(0, 1, 100.0);
+        let plan = FaultPlan {
+            events: vec![FaultEvent {
+                at: 0.5,
+                kind: FaultKind::LinkDegrade {
+                    from: "s0".into(),
+                    to: "s1".into(),
+                    rtt_factor: 10.0,
+                    loss_add: 0.05,
+                    capacity_factor: 0.01,
+                },
+            }],
+        };
+        world.load_faults(&plan).unwrap();
+        let subs = WorkloadGen::new(7).schedule(&world.cfg, &world.catalog);
+        world.load_submissions(subs);
+        world.run().unwrap();
+        assert_eq!(world.completion(), 1.0);
+        assert!(world.topo.transfer_seconds(0, 1, 100.0) > before);
     }
 
     #[test]

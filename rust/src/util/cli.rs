@@ -1,9 +1,23 @@
 //! Minimal CLI flag parser (the offline crate set has no `clap`).
 //!
-//! Supports `--flag value`, `--flag=value`, boolean `--flag`, positional
-//! arguments and subcommands. Only what the `diana` binary needs.
+//! Supports `--flag value`, `--flag=value`, short `-f value`, boolean
+//! `--flag`, positional arguments and subcommands. Only what the `diana`
+//! binary needs.
 
 use std::collections::BTreeMap;
+
+/// True if the token looks like a flag (`--x` or short `-x`) rather than
+/// a positional value (a lone `-`, or a negative number like `-3`).
+fn is_flag_token(tok: &str) -> bool {
+    if let Some(rest) = tok.strip_prefix("--") {
+        !rest.is_empty()
+    } else if let Some(rest) = tok.strip_prefix('-') {
+        !rest.is_empty()
+            && !rest.starts_with(|c: char| c.is_ascii_digit() || c == '.')
+    } else {
+        false
+    }
+}
 
 #[derive(Clone, Debug, Default)]
 pub struct Args {
@@ -19,12 +33,26 @@ impl Args {
         let mut out = Args::default();
         let mut iter = argv.into_iter().peekable();
         while let Some(tok) = iter.next() {
-            if let Some(stripped) = tok.strip_prefix("--") {
+            if is_flag_token(&tok) {
+                let short = !tok.starts_with("--");
+                let stripped = tok.trim_start_matches('-');
                 if let Some((k, v)) = stripped.split_once('=') {
                     out.flags.insert(k.to_string(), v.to_string());
+                } else if short
+                    && stripped.len() > 1
+                    && stripped.as_bytes()[0].is_ascii_alphabetic()
+                    && stripped[1..]
+                        .chars()
+                        .all(|c| c.is_ascii_digit() || c == '.')
+                {
+                    // Make-style attached value: `-j8` == `-j 8`.
+                    out.flags.insert(
+                        stripped[..1].to_string(),
+                        stripped[1..].to_string(),
+                    );
                 } else if iter
                     .peek()
-                    .map(|nxt| !nxt.starts_with("--"))
+                    .map(|nxt| !is_flag_token(nxt))
                     .unwrap_or(false)
                 {
                     let v = iter.next().unwrap();
@@ -107,5 +135,33 @@ mod tests {
         let a = parse("x");
         assert_eq!(a.get_f64("missing", 1.5), 1.5);
         assert_eq!(a.get_or("missing", "d"), "d");
+    }
+
+    #[test]
+    fn short_flags() {
+        let a = parse("sweep spec.toml -j 8 --out dir");
+        assert_eq!(a.subcommand.as_deref(), Some("sweep"));
+        assert_eq!(a.positional, vec!["spec.toml"]);
+        assert_eq!(a.get_usize("j", 1), 8);
+        assert_eq!(a.get("out"), Some("dir"));
+        let a = parse("sweep -j=4");
+        assert_eq!(a.get_usize("j", 1), 4);
+        // Make-style attached value, before or after the positional.
+        let a = parse("sweep spec.toml -j8");
+        assert_eq!(a.get_usize("j", 1), 8);
+        assert_eq!(a.positional, vec!["spec.toml"]);
+        let a = parse("sweep -j4 spec.toml");
+        assert_eq!(a.get_usize("j", 1), 4);
+        assert_eq!(a.positional, vec!["spec.toml"]);
+        // Lone boolean short flag.
+        let a = parse("sweep -v");
+        assert!(a.get_bool("v"));
+    }
+
+    #[test]
+    fn negative_numbers_stay_positional() {
+        let a = parse("cmd --offset -5 -0.5");
+        assert_eq!(a.get("offset"), Some("-5"));
+        assert_eq!(a.positional, vec!["-0.5"]);
     }
 }

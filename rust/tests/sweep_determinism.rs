@@ -1,0 +1,114 @@
+//! Sweep subsystem properties: the aggregate report is bit-identical
+//! for any `-j`, per-run seeds depend only on the matrix position (never
+//! on worker scheduling), and the fault-injection scenarios actually
+//! exercise §IX failover/migration.
+
+use diana::scenario::{library, run_sweep, SweepSpec};
+
+/// Tier-1 acceptance property: `-j 1` and `-j 8` produce byte-identical
+/// CSV and JSON output for the same spec.
+#[test]
+fn smoke_sweep_j1_equals_j8_bit_for_bit() {
+    let spec = library::load("smoke").unwrap();
+    let a = run_sweep(&spec, 1).unwrap();
+    let b = run_sweep(&spec, 8).unwrap();
+    assert_eq!(a.runs_csv(), b.runs_csv());
+    assert_eq!(a.aggregate_csv(), b.aggregate_csv());
+    assert_eq!(a.to_json(), b.to_json());
+}
+
+/// Repeated parallel execution of the same spec is stable (no hidden
+/// global state, no wall-clock leakage into the report).
+#[test]
+fn parallel_sweep_is_reproducible_across_invocations() {
+    let spec = library::load("smoke").unwrap();
+    let a = run_sweep(&spec, 3).unwrap();
+    let b = run_sweep(&spec, 5).unwrap();
+    assert_eq!(a.to_json(), b.to_json());
+}
+
+/// Seeds are a pure function of the matrix position: `base_seed + index`
+/// with repeats innermost — regardless of how workers pick up runs.
+#[test]
+fn per_run_seeds_follow_matrix_position() {
+    let spec = library::load("flash-crowd").unwrap();
+    let runs = spec.expand().unwrap();
+    assert_eq!(runs.len(), 8); // 2 rates × 2 bulk sizes × 2 repeats
+    for (i, r) in runs.iter().enumerate() {
+        assert_eq!(r.index, i);
+        assert_eq!(r.seed, 100 + i as u64); // flash-crowd base_seed = 100
+        assert_eq!(r.cfg.seed, r.seed);
+        assert_eq!(r.repeat, i % 2);
+    }
+    // The parallel runner reports exactly those seeds, in matrix order.
+    let rep = run_sweep(&library::load("smoke").unwrap(), 4).unwrap();
+    let expanded = library::load("smoke").unwrap().expand().unwrap();
+    assert_eq!(rep.runs.len(), expanded.len());
+    for (res, spec_run) in rep.runs.iter().zip(&expanded) {
+        assert_eq!(res.index, spec_run.index);
+        assert_eq!(res.seed, spec_run.seed);
+        assert_eq!(res.labels, spec_run.labels);
+    }
+}
+
+/// Acceptance: the cascading-failure scenario drives §IX forced
+/// migration off dead sites — nonzero migrations in the report — and
+/// still delivers every job.
+#[test]
+fn cascading_failure_scenario_migrates_and_completes() {
+    let spec = library::load("cascading-failure").unwrap();
+    let rep = run_sweep(&spec, 2).unwrap();
+    assert!(
+        rep.total_migrations() > 0,
+        "no migrations despite two site crashes"
+    );
+    for r in &rep.runs {
+        assert_eq!(r.jobs, 150, "run {} lost jobs", r.index);
+    }
+    // Migrations also surface in the aggregate rows.
+    assert!(rep.aggregates.iter().map(|a| a.migrations).sum::<u64>() > 0);
+}
+
+/// The emitted CSV/JSON schema matches the checked-in golden files that
+/// ci.sh also validates against.
+#[test]
+fn smoke_sweep_matches_golden_schema() {
+    let rep = run_sweep(&library::load("smoke").unwrap(), 2).unwrap();
+    let runs_header = rep.runs_csv().lines().next().unwrap().to_string();
+    assert_eq!(
+        runs_header,
+        include_str!("golden/smoke_runs_header.csv").trim_end(),
+        "runs CSV header drifted from golden"
+    );
+    let agg_header =
+        rep.aggregate_csv().lines().next().unwrap().to_string();
+    assert_eq!(
+        agg_header,
+        include_str!("golden/smoke_aggregate_header.csv").trim_end(),
+        "aggregate CSV header drifted from golden"
+    );
+    let json = rep.to_json();
+    for key in include_str!("golden/smoke_json_keys.txt").lines() {
+        assert!(
+            json.contains(&format!("\"{key}\"")),
+            "JSON lost golden key {key}"
+        );
+    }
+    // 2 job counts × 2 policies, one repeat each.
+    assert_eq!(rep.runs.len(), 4);
+    assert_eq!(rep.aggregates.len(), 4);
+}
+
+/// A custom inline spec exercises file-free parsing and the `[set]` +
+/// axes override order (axes win over `[set]`).
+#[test]
+fn axes_override_set_values() {
+    let spec = SweepSpec::from_str_named(
+        "preset = \"uniform-2x2\"\n[axes]\njobs = [7]\n[set]\njobs = 99\n",
+        "t",
+    )
+    .unwrap();
+    let runs = spec.expand().unwrap();
+    assert_eq!(runs.len(), 1);
+    assert_eq!(runs[0].cfg.workload.jobs, 7);
+}
