@@ -36,4 +36,39 @@ while read -r key; do
     || { echo "ci.sh: smoke.json lost key $key"; exit 1; }
 done < rust/tests/golden/smoke_json_keys.txt
 
+echo "== federation smoke sweep (peers 1+2, -j determinism + golden) =="
+./target/release/diana sweep rust/examples/sweeps/federation_smoke.toml \
+    -j 1 --out "$SWEEP_OUT/fed-j1"
+./target/release/diana sweep rust/examples/sweeps/federation_smoke.toml \
+    -j 2 --out "$SWEEP_OUT/fed-j2"
+for f in federation-smoke_runs.csv federation-smoke_aggregate.csv \
+         federation-smoke.json; do
+  cmp "$SWEEP_OUT/fed-j1/$f" "$SWEEP_OUT/fed-j2/$f" \
+    || { echo "ci.sh: $f differs between -j 1 and -j 2"; exit 1; }
+done
+head -n 1 "$SWEEP_OUT/fed-j1/federation-smoke_runs.csv" \
+  | diff - rust/tests/golden/federation_smoke_runs_header.csv
+# Full-content golden: record on the first run (commit the file), then
+# byte-compare every run after — any drift in the federated schedule,
+# gossip cadence or report format fails CI loudly.
+FED_GOLDEN=rust/tests/golden/federation_smoke_runs.csv
+if [ -f "$FED_GOLDEN" ]; then
+  cmp "$SWEEP_OUT/fed-j1/federation-smoke_runs.csv" "$FED_GOLDEN" \
+    || { echo "ci.sh: federation smoke output drifted from $FED_GOLDEN"; exit 1; }
+else
+  cp "$SWEEP_OUT/fed-j1/federation-smoke_runs.csv" "$FED_GOLDEN"
+  echo "ci.sh: bootstrapped $FED_GOLDEN — commit it"
+fi
+
+echo "== federation 1-peer == central (CLI, bit-for-bit) =="
+./target/release/diana run --preset uniform --jobs 40 --seed 11 \
+    > "$SWEEP_OUT/central.txt"
+./target/release/diana run --preset uniform --jobs 40 --seed 11 \
+    --federation 1 > "$SWEEP_OUT/fed1.txt"
+# Only the mode banner line may differ; every metric row must match.
+if ! diff <(tail -n +2 "$SWEEP_OUT/central.txt") \
+          <(tail -n +2 "$SWEEP_OUT/fed1.txt"); then
+  echo "ci.sh: --federation 1 diverged from the central run"; exit 1
+fi
+
 echo "ci.sh: all green"

@@ -11,8 +11,9 @@ pub const USAGE: &str = "\
 diana — Data Intensive and Network Aware bulk meta-scheduler
 
 USAGE:
-  diana simulate [--config FILE | --preset NAME] [--policy P] [--jobs N]
-                 [--bulk N] [--seed S] [--engine rust|xla|auto]
+  diana run|simulate [--config FILE | --preset NAME] [--policy P]
+                 [--jobs N] [--bulk N] [--seed S] [--engine rust|xla|auto]
+                 [--federation N] [--fed-topology flat|tree|ring]
   diana sweep <spec.toml> [-j N] [--out DIR]
   diana sweep --scenario NAME [-j N] [--out DIR]
   diana repro --figure fig3|fig4|fig6|fig7|fig8|fig9|fig10|fig11|all
@@ -20,9 +21,14 @@ USAGE:
   diana serve [--config FILE | --preset NAME] [--addr HOST:PORT]
   diana priority-demo [--quota Q] [--jobs N]
 
+`--federation N` splits the grid across N peer meta-schedulers that
+gossip state and delegate submissions (0 = classic central leader;
+1 reproduces the central run bit-for-bit). See docs/FEDERATION.md.
+
 PRESETS: paper-testbed (default) | fig4 | cms-tiers | uniform
 SCENARIOS: flash-crowd | diurnal-load | black-hole-site |
-           cascading-failure | wan-partition | hetero-tiers | smoke
+           cascading-failure | wan-partition | hetero-tiers |
+           central-vs-federated | federation-smoke | smoke
            (spec files in rust/examples/sweeps/)
 ";
 
@@ -57,6 +63,17 @@ pub fn load_config(args: &Args) -> Result<GridConfig> {
     if let Some(b) = args.get("bulk") {
         cfg.workload.bulk_size = b.parse()?;
     }
+    if let Some(n) = args.get("federation") {
+        cfg.federation.peers = n
+            .parse()
+            .map_err(|_| crate::err!("--federation wants a peer count, got `{n}`"))?;
+    }
+    if let Some(t) = args.get("fed-topology") {
+        cfg.federation.topology = config::PeerTopology::from_name(t)
+            .ok_or_else(|| {
+                crate::err!("unknown federation topology `{t}` (flat | tree | ring)")
+            })?;
+    }
     cfg.seed = args.get_u64("seed", cfg.seed);
     cfg.validate().map_err(DianaError::msg)?;
     Ok(cfg)
@@ -79,6 +96,7 @@ pub fn print_report(r: &RunReport) {
             format!("{:.3} jobs/s", r.throughput_jobs_per_s),
         ],
         vec!["migrations".into(), r.migrations.to_string()],
+        vec!["delegations".into(), r.delegations.to_string()],
         vec![
             "groups (whole/split)".into(),
             format!("{}/{}", r.groups_whole, r.groups_split),
@@ -88,10 +106,19 @@ pub fn print_report(r: &RunReport) {
     println!("{}", render_table(&["metric", "value"], &rows));
 }
 
+/// `diana run` / `diana simulate`: one end-to-end run (central, or
+/// federated with `--federation N`) and the metrics table.
 pub fn simulate(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
+    let mode = match cfg.federation.peers {
+        0 => "central".to_string(),
+        n => format!(
+            "federated ({n} peers, {})",
+            cfg.federation.topology.name()
+        ),
+    };
     println!(
-        "simulating `{}` — {} sites, {} jobs, policy {}",
+        "simulating `{}` — {} sites, {} jobs, policy {}, {mode}",
         cfg.name,
         cfg.sites.len(),
         cfg.workload.jobs,
@@ -215,6 +242,30 @@ mod tests {
     #[test]
     fn bad_policy_rejected() {
         assert!(load_config(&parse("simulate --policy magic")).is_err());
+    }
+
+    #[test]
+    fn federation_flags_load_and_validate() {
+        let cfg = load_config(&parse(
+            "run --preset uniform --federation 2 --fed-topology tree",
+        ))
+        .unwrap();
+        assert_eq!(cfg.federation.peers, 2);
+        assert_eq!(
+            cfg.federation.topology,
+            crate::config::PeerTopology::Tree
+        );
+        // Default stays central.
+        let cfg = load_config(&parse("run --preset uniform")).unwrap();
+        assert_eq!(cfg.federation.peers, 0);
+        // Bad values are errors, not silent defaults.
+        assert!(load_config(&parse("run --federation many")).is_err());
+        assert!(load_config(&parse("run --fed-topology star")).is_err());
+        // validate(): more peers than sites.
+        assert!(
+            load_config(&parse("run --preset uniform --federation 9"))
+                .is_err()
+        );
     }
 
     #[test]

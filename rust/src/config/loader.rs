@@ -56,6 +56,7 @@ pub fn load_str(text: &str) -> Result<GridConfig> {
         network: NetworkConfig::default(),
         scheduler: SchedulerConfig::default(),
         workload: WorkloadConfig::default(),
+        federation: FederationConfig::default(),
     };
 
     let sites = root
@@ -153,6 +154,31 @@ pub fn load_str(text: &str) -> Result<GridConfig> {
         d.max_procs = int_or(w, "max_procs", d.max_procs as i64) as usize;
         d.datasets = int_or(w, "datasets", d.datasets as i64) as usize;
         d.replicas = int_or(w, "replicas", d.replicas as i64) as usize;
+    }
+
+    if let Some(f) = root.get("federation").and_then(Value::as_table) {
+        let d = &mut cfg.federation;
+        // Negative counts must error, not wrap (`-1 as usize` would read
+        // as a huge peer/hop budget and produce baffling messages).
+        let peers = int_or(f, "peers", d.peers as i64);
+        if peers < 0 {
+            bail!("invalid config: federation.peers must be >= 0, got {peers}");
+        }
+        d.peers = peers as usize;
+        if let Some(t) = f.get("topology").and_then(Value::as_str) {
+            d.topology = PeerTopology::from_name(t).ok_or_else(|| {
+                err!("unknown federation topology `{t}` (flat | tree | ring)")
+            })?;
+        }
+        d.gossip_period_s =
+            float_or(f, "gossip_period_s", d.gossip_period_s);
+        d.delegation_threshold =
+            float_or(f, "delegation_threshold", d.delegation_threshold);
+        let hops = int_or(f, "max_hops", d.max_hops as i64);
+        if hops < 0 {
+            bail!("invalid config: federation.max_hops must be >= 0, got {hops}");
+        }
+        d.max_hops = hops as u32;
     }
 
     if let Err(e) = cfg.validate() {
@@ -277,6 +303,40 @@ bulk_size = 7
             "max_events = 0\n[[site]]\nname = \"a\"\ncpus = 1\n"
         )
         .is_err());
+    }
+
+    #[test]
+    fn federation_section_loads_and_validates() {
+        let cfg = load_str(
+            "[[site]]\nname = \"a\"\ncpus = 4\n\
+             [[site]]\nname = \"b\"\ncpus = 4\n\
+             [federation]\npeers = 2\ntopology = \"ring\"\n\
+             gossip_period_s = 15.0\ndelegation_threshold = 0.9\n\
+             max_hops = 3\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.federation.peers, 2);
+        assert_eq!(cfg.federation.topology, PeerTopology::Ring);
+        assert_eq!(cfg.federation.gossip_period_s, 15.0);
+        assert_eq!(cfg.federation.delegation_threshold, 0.9);
+        assert_eq!(cfg.federation.max_hops, 3);
+        // Unknown topology and peers > sites are errors.
+        assert!(load_str(
+            "[[site]]\nname = \"a\"\ncpus = 1\n\
+             [federation]\npeers = 1\ntopology = \"star\"\n"
+        )
+        .is_err());
+        assert!(load_str(
+            "[[site]]\nname = \"a\"\ncpus = 1\n[federation]\npeers = 5\n"
+        )
+        .is_err());
+        // Negative integers error instead of wrapping to huge values.
+        for bad in ["peers = -1", "max_hops = -2"] {
+            let cfg = format!(
+                "[[site]]\nname = \"a\"\ncpus = 1\n[federation]\n{bad}\n"
+            );
+            assert!(load_str(&cfg).is_err(), "accepted `{bad}`");
+        }
     }
 
     #[test]

@@ -8,6 +8,7 @@ pub mod toml;
 
 pub use loader::{load_file, load_str};
 pub use schema::{
-    EngineKind, GridConfig, LinkConfig, NetworkConfig, Policy,
-    SchedulerConfig, SiteConfig, WorkloadConfig, DEFAULT_MAX_EVENTS,
+    EngineKind, FederationConfig, GridConfig, LinkConfig, NetworkConfig,
+    PeerTopology, Policy, SchedulerConfig, SiteConfig, WorkloadConfig,
+    DEFAULT_MAX_EVENTS,
 };

@@ -59,6 +59,7 @@ pub fn paper_testbed() -> GridConfig {
             cpu_sec_median: 300.0,
             ..WorkloadConfig::default()
         },
+        federation: FederationConfig::default(),
     }
 }
 
@@ -104,6 +105,7 @@ pub fn fig4_grid() -> GridConfig {
             max_procs: 1,
             ..WorkloadConfig::default()
         },
+        federation: FederationConfig::default(),
     }
 }
 
@@ -171,6 +173,7 @@ pub fn cms_tier_grid() -> GridConfig {
             replicas: 2,
             ..WorkloadConfig::default()
         },
+        federation: FederationConfig::default(),
     }
 }
 
@@ -193,6 +196,7 @@ pub fn uniform_grid(n: usize, cpus: usize) -> GridConfig {
         network: NetworkConfig::default(),
         scheduler: SchedulerConfig::default(),
         workload: WorkloadConfig::default(),
+        federation: FederationConfig::default(),
     }
 }
 

@@ -66,6 +66,78 @@ impl EngineKind {
     }
 }
 
+/// How federation peers are wired to each other (who gossips with whom
+/// and who may receive a delegated job — see `federation::adjacency`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PeerTopology {
+    /// Full mesh: every peer exchanges state with every other peer.
+    Flat,
+    /// Two-level hierarchy (arXiv 0707.0743): peer 0 is the root, all
+    /// other peers are leaves that talk only to the root. Leaf→leaf
+    /// delegation takes two hops through the root.
+    Tree,
+    /// Ring: peer i talks to peers i±1 only.
+    Ring,
+}
+
+impl PeerTopology {
+    pub fn from_name(name: &str) -> Option<PeerTopology> {
+        match name {
+            "flat" | "mesh" => Some(PeerTopology::Flat),
+            "tree" | "hierarchy" => Some(PeerTopology::Tree),
+            "ring" => Some(PeerTopology::Ring),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PeerTopology::Flat => "flat",
+            PeerTopology::Tree => "tree",
+            PeerTopology::Ring => "ring",
+        }
+    }
+}
+
+/// Hierarchical meta-scheduling federation (arXiv 0707.0743 / 0707.0862):
+/// `peers` cooperating meta-schedulers each own a contiguous partition of
+/// the sites, schedule arrivals locally, and delegate to a better-ranked
+/// remote peer based on periodically-gossiped (stale) peer state.
+///
+/// `peers == 0` (the default) keeps the classic central single-leader
+/// assembly. `peers == 1` runs the federation machinery degenerately —
+/// one peer owning every site — and is guaranteed (and tested) to be
+/// event-for-event identical to the central path.
+#[derive(Clone, Debug)]
+pub struct FederationConfig {
+    /// Number of peer meta-schedulers (0 = central, must be ≤ sites).
+    pub peers: usize,
+    /// Peer wiring: flat mesh, 2-level tree or ring.
+    pub topology: PeerTopology,
+    /// Seconds between peer-state gossip exchanges; between exchanges
+    /// every remote view is stale by up to this much.
+    pub gossip_period_s: f64,
+    /// Delegate only when the best remote cost (plus the inter-peer
+    /// transfer penalty) is below `threshold × local best` — values < 1
+    /// demand strict improvement and damp ping-pong.
+    pub delegation_threshold: f64,
+    /// Maximum forward hops per submission (≥ 1); prevents delegation
+    /// cycles outright.
+    pub max_hops: u32,
+}
+
+impl Default for FederationConfig {
+    fn default() -> Self {
+        Self {
+            peers: 0,
+            topology: PeerTopology::Flat,
+            gossip_period_s: 60.0,
+            delegation_threshold: 0.8,
+            max_hops: 2,
+        }
+    }
+}
+
 /// One Grid site: a local batch system with `cpus` single-job slots.
 #[derive(Clone, Debug)]
 pub struct SiteConfig {
@@ -253,6 +325,7 @@ pub struct GridConfig {
     pub network: NetworkConfig,
     pub scheduler: SchedulerConfig,
     pub workload: WorkloadConfig,
+    pub federation: FederationConfig,
 }
 
 impl GridConfig {
@@ -289,6 +362,36 @@ impl GridConfig {
             let known = |n: &str| self.sites.iter().any(|s| s.name == n);
             if !known(&l.from) || !known(&l.to) {
                 return Err(format!("link {}→{} names unknown site", l.from, l.to));
+            }
+        }
+        let fed = &self.federation;
+        if fed.peers > self.sites.len() {
+            return Err(format!(
+                "federation.peers = {} exceeds the {} sites (every peer \
+                 needs a non-empty partition)",
+                fed.peers,
+                self.sites.len()
+            ));
+        }
+        if fed.peers > 0 {
+            if !(fed.gossip_period_s > 0.0 && fed.gossip_period_s.is_finite()) {
+                return Err(format!(
+                    "federation.gossip_period_s must be finite and > 0, \
+                     got {}",
+                    fed.gossip_period_s
+                ));
+            }
+            if !(fed.delegation_threshold > 0.0
+                && fed.delegation_threshold.is_finite())
+            {
+                return Err(format!(
+                    "federation.delegation_threshold must be finite and > 0, \
+                     got {}",
+                    fed.delegation_threshold
+                ));
+            }
+            if fed.max_hops == 0 {
+                return Err("federation.max_hops must be ≥ 1".into());
             }
         }
         Ok(())
@@ -351,6 +454,45 @@ mod tests {
             capacity_mbps: 1.0,
         });
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn federation_validation() {
+        // More peers than sites is rejected.
+        let mut cfg = presets::uniform_grid(2, 4);
+        cfg.federation.peers = 3;
+        assert!(cfg.validate().is_err());
+        cfg.federation.peers = 2;
+        cfg.validate().unwrap();
+
+        let mut cfg = presets::uniform_grid(4, 4);
+        cfg.federation.peers = 2;
+        cfg.federation.gossip_period_s = 0.0;
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = presets::uniform_grid(4, 4);
+        cfg.federation.peers = 2;
+        cfg.federation.delegation_threshold = f64::NAN;
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = presets::uniform_grid(4, 4);
+        cfg.federation.peers = 2;
+        cfg.federation.max_hops = 0;
+        assert!(cfg.validate().is_err());
+
+        // The federation knobs are ignored while peers == 0 (central).
+        let mut cfg = presets::uniform_grid(4, 4);
+        cfg.federation.max_hops = 0;
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn peer_topology_names_roundtrip() {
+        for t in [PeerTopology::Flat, PeerTopology::Tree, PeerTopology::Ring] {
+            assert_eq!(PeerTopology::from_name(t.name()), Some(t));
+        }
+        assert_eq!(PeerTopology::from_name("mesh"), Some(PeerTopology::Flat));
+        assert_eq!(PeerTopology::from_name("star"), None);
     }
 
     #[test]

@@ -1,6 +1,26 @@
 //! Leader: assemble a full run (config → engine → picker → workload →
-//! world) and produce the standard report. Every example, bench and
-//! repro figure goes through this entry point.
+//! world) and produce the standard report. Every example, bench, sweep
+//! run and repro figure goes through this entry point.
+//!
+//! # The two assembly modes
+//!
+//! The leader assembles **one** [`World`] either way; the difference is
+//! who schedules inside it, selected by
+//! [`GridConfig::federation`](crate::config::FederationConfig):
+//!
+//! * **Central** (`federation.peers == 0`, the default): a single
+//!   meta-scheduler sees every site fresh — the original DIANA paper's
+//!   Meta Scheduler, and the path all §XI figures reproduce.
+//! * **Federated** (`federation.peers >= 1`): N peer meta-schedulers
+//!   each own a partition of the sites, schedule arrivals against their
+//!   partition with the same `SitePicker`/`CostEngine` pair, and
+//!   delegate submissions to better-ranked remote peers based on
+//!   gossiped (stale) state — see [`crate::federation`]. With one peer
+//!   the federation degenerates to the central event stream
+//!   bit-for-bit, which `rust/tests/federation.rs` asserts.
+//!
+//! Both modes flow through [`run_simulation`]; there is deliberately no
+//! second assembly function to drift from this one.
 
 use crate::util::error::Result;
 
@@ -14,20 +34,33 @@ use crate::sim::World;
 use crate::util::{Pcg64, Summary};
 use crate::workload::{Submission, WorkloadGen};
 
-/// Summary of one end-to-end run.
+/// Summary of one end-to-end run (central or federated — the report
+/// shape is identical so modes compare column-for-column).
 #[derive(Clone, Debug)]
 pub struct RunReport {
+    /// Stable policy name from [`SitePicker::name`](crate::scheduler::SitePicker::name).
     pub policy: &'static str,
+    /// Jobs fully delivered.
     pub jobs: usize,
     pub makespan_s: f64,
+    /// §VI queue/waiting time distribution (submission → CPU allocation).
     pub queue_time: Summary,
     pub exec_time: Summary,
+    /// §VI turnaround (submission → output delivered).
     pub turnaround: Summary,
+    /// §VI response time (submission → first placement).
     pub response_time: Summary,
     pub throughput_jobs_per_s: f64,
+    /// §IX queue-to-queue migrations performed.
     pub migrations: u64,
+    /// §VIII groups split across sites vs placed whole.
     pub groups_split: u64,
     pub groups_whole: u64,
+    /// Jobs delegated away from their home federation peer (each job
+    /// counted once, at its first forward — never exceeds `jobs`; 0 on
+    /// central runs and on the degenerate 1-peer federation).
+    pub delegations: u64,
+    /// DES events processed.
     pub events: u64,
 }
 
@@ -50,6 +83,7 @@ impl RunReport {
             migrations: w.recorder.migrations,
             groups_split: w.recorder.groups_split,
             groups_whole: w.recorder.groups_whole,
+            delegations: w.recorder.delegations,
             events: w.events_processed(),
         }
     }
@@ -57,6 +91,10 @@ impl RunReport {
 
 /// Build a world for `cfg` (engine + picker per the config) with a
 /// generated workload, run it to completion, and report.
+///
+/// `cfg.federation.peers` selects the assembly mode (see the module
+/// docs): 0 runs the central leader, N ≥ 1 the peer federation. CLI:
+/// `diana run [--federation N]`.
 pub fn run_simulation(cfg: &GridConfig) -> Result<(World, RunReport)> {
     let subs = generate_workload(cfg);
     run_simulation_with(cfg, subs)

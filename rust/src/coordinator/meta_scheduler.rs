@@ -1,6 +1,11 @@
 //! The per-site DIANA layer (§IV Fig 1): multilevel feedback queues +
 //! §X re-prioritization + §X congestion tracking, sitting on top of the
 //! site's local batch system.
+//!
+//! Both assembly modes drive this layer identically (see
+//! [`super::leader`]): the central leader enqueues into every site's
+//! `MetaScheduler`, a federation peer only into its partition's — the
+//! queues themselves are mode-agnostic.
 
 use crate::util::error::Result;
 

@@ -1,5 +1,17 @@
 //! The DIANA coordinator: per-site meta-scheduler (queues + priority +
-//! congestion) and the leader/serve front ends.
+//! congestion) and the front ends that assemble it into a running
+//! system.
+//!
+//! Assembly happens in exactly one place — [`leader`] — and comes in
+//! two modes selected by `GridConfig::federation`:
+//!
+//! * **central**: one leader schedules every site (the 2006 paper);
+//! * **federated**: N peers each schedule a partition and delegate
+//!   across the federation ([`crate::federation`], the follow-up
+//!   hierarchy papers).
+//!
+//! [`serve`] is the deployable TCP face of the same matchmaking;
+//! [`meta_scheduler`] is the per-site §IV/§X layer both modes drive.
 
 pub mod leader;
 pub mod meta_scheduler;

@@ -10,6 +10,12 @@
 //! STATUS                            → sites + queue depths
 //! QUIT                              → closes the connection
 //! ```
+//!
+//! The server always matchmakes over its full site set — it *is* one
+//! meta-scheduler. In a federated deployment you run one `diana serve`
+//! per peer over that peer's partition config; the simulation-side
+//! federation (gossip + delegation, [`crate::federation`]) models what
+//! the fleet of servers would do to each other.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};

@@ -1,0 +1,115 @@
+//! The delegation decision: should a peer hand an arriving submission to
+//! a better-ranked remote peer instead of scheduling it locally?
+//!
+//! The rule mirrors the §IX migration decision but acts *before*
+//! placement and across the federation: take the best local §IV cost,
+//! take every visible remote site's cost **plus the inter-peer transfer
+//! penalty** for shipping the job sandbox over the peering link, and
+//! forward only when the best remote beats `threshold × local` — a
+//! threshold below 1 demands strict improvement, which (together with
+//! the hop limit) prevents delegation ping-pong.
+
+use crate::cost::model::EPS;
+
+/// One remote placement option: a site visible through gossip, the peer
+/// that owns it, and its §IV cost with the peering penalty added.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DelegationCandidate {
+    pub site: usize,
+    pub peer: usize,
+    pub cost: f64,
+}
+
+/// Price of pushing one job across the peering link (same units as the
+/// §IV cost row it is added to): the NetworkCost-shaped `loss/bw` term
+/// plus a DTC-shaped sandbox-transfer term for the executable.
+///
+/// Unit caveat: the penalty is in §IV cost-engine units, which matches
+/// DIANA's `site_costs` rows exactly. Baseline pickers that keep the
+/// default ordinal `site_costs` (rank positions 1, 2, 3…) get
+/// rank-scale comparisons in which this penalty acts only as a small
+/// tie-breaker — their delegation decisions are rank-driven, not
+/// link-priced, and central-vs-federated comparisons across *policies*
+/// should keep that in mind (documented in docs/FEDERATION.md).
+pub fn peering_penalty(
+    exe_mb: f64,
+    bandwidth_mbps: f64,
+    loss: f64,
+    w_net: f64,
+    w_dtc: f64,
+) -> f64 {
+    let bw = bandwidth_mbps.max(EPS as f64);
+    w_net * loss / bw + w_dtc * exe_mb * (1.0 + loss) / bw
+}
+
+/// Pick the delegation target, if any: the candidate with minimum
+/// `(cost, site)` wins iff its cost is below `threshold × local_best`.
+/// An infinite `local_best` (no alive local site) makes any finite
+/// remote candidate win.
+pub fn choose_delegation(
+    local_best: f64,
+    candidates: &[DelegationCandidate],
+    threshold: f64,
+) -> Option<usize> {
+    let best = candidates
+        .iter()
+        .filter(|c| c.cost.is_finite())
+        .min_by(|a, b| {
+            a.cost
+                .partial_cmp(&b.cost)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.site.cmp(&b.site))
+        })?;
+    if !local_best.is_finite() || best.cost < threshold * local_best {
+        Some(best.peer)
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cand(site: usize, peer: usize, cost: f64) -> DelegationCandidate {
+        DelegationCandidate { site, peer, cost }
+    }
+
+    #[test]
+    fn delegates_only_on_strict_threshold_improvement() {
+        let cands = [cand(4, 2, 3.0), cand(6, 3, 1.0)];
+        assert_eq!(choose_delegation(10.0, &cands, 0.8), Some(3));
+        // 1.0 is NOT below 0.8 × 1.2 → stay local.
+        assert_eq!(choose_delegation(1.2, &cands, 0.8), None);
+        assert_eq!(choose_delegation(1.3, &cands, 0.8), Some(3));
+    }
+
+    #[test]
+    fn no_candidates_or_infinite_costs_stay_local() {
+        assert_eq!(choose_delegation(5.0, &[], 0.8), None);
+        let dead = [cand(1, 1, f64::INFINITY)];
+        assert_eq!(choose_delegation(5.0, &dead, 0.8), None);
+    }
+
+    #[test]
+    fn dead_local_partition_always_delegates() {
+        let cands = [cand(2, 1, 1e6)];
+        assert_eq!(choose_delegation(f64::INFINITY, &cands, 0.8), Some(1));
+    }
+
+    #[test]
+    fn ties_break_on_site_index() {
+        let cands = [cand(5, 2, 1.0), cand(3, 1, 1.0)];
+        assert_eq!(choose_delegation(10.0, &cands, 0.8), Some(1));
+    }
+
+    #[test]
+    fn penalty_scales_with_sandbox_and_link() {
+        let cheap = peering_penalty(1.0, 1000.0, 0.001, 1.0, 1.0);
+        let dear = peering_penalty(20.0, 2.0, 0.05, 1.0, 1.0);
+        assert!(cheap < dear);
+        assert!(cheap > 0.0);
+        // Zero-bandwidth beliefs stay finite via the kernel EPS guard.
+        assert!(peering_penalty(1.0, 0.0, 0.5, 1.0, 1.0).is_finite());
+    }
+}

@@ -1,0 +1,322 @@
+//! The federation runtime one simulated Grid carries: the partition, the
+//! peer wiring, per-peer gossip tables, peer liveness, and the two views
+//! a peer schedules against:
+//!
+//! * **placement view** — the peer's own sites fresh, everything else
+//!   masked dead: local scheduling never places outside the partition;
+//! * **delegation view** — own sites fresh, *adjacent alive* peers'
+//!   sites as of the last gossip exchange (stale), the rest dead: the
+//!   input to the forward-or-keep decision.
+//!
+//! With one peer both views equal the central snapshot, no gossip is
+//! exchanged and no delegation candidate exists — the federation
+//! degenerates, event for event, to the classic single-leader run.
+
+use crate::config::{FederationConfig, GridConfig};
+use crate::scheduler::SiteSnapshot;
+
+use super::gossip::{GossipTable, PeerDigest};
+use super::partition::{adjacency, Partition};
+
+pub struct Federation {
+    cfg: FederationConfig,
+    pub partition: Partition,
+    /// `neighbors[p]`: sorted peers `p` gossips with / delegates to.
+    pub neighbors: Vec<Vec<usize>>,
+    /// Peer liveness (the discovery-service heartbeat analog; a peer
+    /// fault flips this, site liveness is tracked separately).
+    alive: Vec<bool>,
+    tables: Vec<GossipTable>,
+    /// Gossip exchanges completed (bootstrap round included).
+    pub gossip_rounds: u64,
+    /// Forward events delivered (batches, not jobs).
+    pub forwards: u64,
+    /// Submissions whose dead home peer was re-routed to an alive one.
+    pub rehomed: u64,
+}
+
+impl Federation {
+    /// Build the runtime for `cfg`, or `None` when the config asks for
+    /// the central assembly (`federation.peers == 0`).
+    pub fn from_config(cfg: &GridConfig) -> Option<Federation> {
+        if cfg.federation.peers == 0 || cfg.sites.is_empty() {
+            return None;
+        }
+        // `validate()` already caps peers at the site count; clamp again
+        // defensively for programmatically-built configs.
+        let n_peers = cfg.federation.peers.min(cfg.sites.len());
+        let partition = Partition::contiguous(cfg.sites.len(), n_peers);
+        let neighbors = adjacency(cfg.federation.topology, n_peers);
+        Some(Federation {
+            cfg: cfg.federation.clone(),
+            partition,
+            neighbors,
+            alive: vec![true; n_peers],
+            tables: (0..n_peers).map(|_| GossipTable::new(n_peers)).collect(),
+            gossip_rounds: 0,
+            forwards: 0,
+            rehomed: 0,
+        })
+    }
+
+    pub fn n_peers(&self) -> usize {
+        self.partition.n_peers()
+    }
+
+    pub fn fed_cfg(&self) -> &FederationConfig {
+        &self.cfg
+    }
+
+    pub fn peer_alive(&self, peer: usize) -> bool {
+        self.alive[peer]
+    }
+
+    /// Kill a peer's *scheduler*: it stops accepting home submissions,
+    /// gossiping and receiving delegations. Its sites keep running
+    /// whatever is already dispatched (the sites did not fail).
+    pub fn peer_down(&mut self, peer: usize) {
+        self.alive[peer] = false;
+    }
+
+    /// Revive a peer. It rejoins blind — its gossip table is cleared, so
+    /// it cannot delegate until the next exchange repopulates it.
+    pub fn peer_up(&mut self, peer: usize) {
+        self.alive[peer] = true;
+        self.tables[peer].clear();
+    }
+
+    /// The peer whose partition contains `site`.
+    pub fn home_peer(&self, site: usize) -> usize {
+        self.partition.peer_of(site)
+    }
+
+    /// Route to `peer` if it is alive, else BFS outward over the peer
+    /// wiring (neighbours in sorted order) to the nearest alive peer.
+    /// Falls back to `peer` itself when the whole federation is dead —
+    /// placement then proceeds on its partition as a last resort.
+    pub fn route_alive(&self, peer: usize) -> usize {
+        if self.alive[peer] {
+            return peer;
+        }
+        let n = self.n_peers();
+        let mut visited = vec![false; n];
+        let mut queue = std::collections::VecDeque::from([peer]);
+        visited[peer] = true;
+        while let Some(p) = queue.pop_front() {
+            for &q in &self.neighbors[p] {
+                if visited[q] {
+                    continue;
+                }
+                if self.alive[q] {
+                    return q;
+                }
+                visited[q] = true;
+                queue.push_back(q);
+            }
+        }
+        peer
+    }
+
+    /// Staleness of `observer`'s view of `remote` (None = never gossiped).
+    pub fn staleness(&self, observer: usize, remote: usize, now: f64)
+        -> Option<f64> {
+        self.tables[observer].staleness(remote, now)
+    }
+
+    /// The placement view: `peer`'s own sites fresh, all remote sites
+    /// masked dead so every picker (via its dead-site contract) confines
+    /// placement to the local partition. With one peer this is `fresh`
+    /// unchanged.
+    pub fn placement_view(&self, peer: usize, fresh: &[SiteSnapshot])
+        -> Vec<SiteSnapshot> {
+        let mut out = fresh.to_vec();
+        for (s, snap) in out.iter_mut().enumerate() {
+            if self.partition.peer_of(s) != peer {
+                snap.alive = false;
+            }
+        }
+        out
+    }
+
+    /// The delegation view: own sites fresh; each *adjacent, currently
+    /// alive* peer's sites as of the last gossip digest (stale queue
+    /// depth / load / liveness); everything else dead. Returns `None`
+    /// when no remote site is visible at all (lone peer, no neighbours
+    /// alive, or nothing gossiped yet) — the caller then skips the
+    /// delegation check entirely, keeping the degenerate single-peer
+    /// run free of extra picker calls.
+    pub fn delegation_view(&self, peer: usize, fresh: &[SiteSnapshot])
+        -> Option<Vec<SiteSnapshot>> {
+        let mut any_remote = false;
+        let mut out: Vec<SiteSnapshot> = fresh
+            .iter()
+            .enumerate()
+            .map(|(s, snap)| {
+                let mut sn = *snap;
+                if self.partition.peer_of(s) != peer {
+                    sn.alive = false;
+                }
+                sn
+            })
+            .collect();
+        for &q in &self.neighbors[peer] {
+            if !self.alive[q] {
+                continue;
+            }
+            if let Some(digest) = self.tables[peer].view_of(q) {
+                for &(s, snap) in &digest.sites {
+                    out[s] = snap;
+                    any_remote |= snap.alive;
+                }
+            }
+        }
+        any_remote.then_some(out)
+    }
+
+    /// One gossip round at time `now`: every alive peer sends the
+    /// current state of its partition to each alive neighbour. A dead
+    /// peer neither sends nor receives; its last digests keep aging in
+    /// everyone else's tables.
+    pub fn gossip_round(&mut self, fresh: &[SiteSnapshot], now: f64) {
+        let n = self.n_peers();
+        let digests: Vec<PeerDigest> = (0..n)
+            .map(|q| PeerDigest {
+                at: now,
+                sites: self
+                    .partition
+                    .sites_of(q)
+                    .iter()
+                    .map(|&s| (s, fresh[s]))
+                    .collect(),
+            })
+            .collect();
+        for p in 0..n {
+            if !self.alive[p] {
+                continue;
+            }
+            for &q in &self.neighbors[p] {
+                if self.alive[q] {
+                    self.tables[p].update(q, digests[q].clone());
+                }
+            }
+        }
+        self.gossip_rounds += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{presets, PeerTopology};
+
+    fn fed(n_sites: usize, peers: usize, topo: PeerTopology) -> Federation {
+        let mut cfg = presets::uniform_grid(n_sites, 4);
+        cfg.federation.peers = peers;
+        cfg.federation.topology = topo;
+        Federation::from_config(&cfg).unwrap()
+    }
+
+    fn snaps(n: usize) -> Vec<SiteSnapshot> {
+        (0..n)
+            .map(|i| SiteSnapshot {
+                queue_len: i,
+                capability: 4.0,
+                load: 0.0,
+                free_slots: 4,
+                cpus: 4,
+                alive: true,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn central_config_builds_no_federation() {
+        let cfg = presets::uniform_grid(4, 4);
+        assert!(Federation::from_config(&cfg).is_none());
+    }
+
+    #[test]
+    fn single_peer_views_degenerate_to_central() {
+        let f = fed(4, 1, PeerTopology::Flat);
+        let fresh = snaps(4);
+        let place = f.placement_view(0, &fresh);
+        assert!(place.iter().all(|s| s.alive));
+        assert_eq!(place.len(), 4);
+        // No remote site is ever visible → the delegation check is a
+        // no-op (no extra picker calls on the degenerate path).
+        assert!(f.delegation_view(0, &fresh).is_none());
+    }
+
+    #[test]
+    fn placement_view_masks_remote_partitions() {
+        let f = fed(8, 4, PeerTopology::Flat);
+        let v = f.placement_view(1, &snaps(8));
+        assert!(v[2].alive && v[3].alive);
+        for s in [0, 1, 4, 5, 6, 7] {
+            assert!(!v[s].alive, "site {s} leaked into peer 1's view");
+        }
+    }
+
+    #[test]
+    fn delegation_view_is_stale_gossip() {
+        let mut f = fed(8, 4, PeerTopology::Flat);
+        let fresh = snaps(8);
+        // Before any exchange: nothing remote visible.
+        assert!(f.delegation_view(0, &fresh).is_none());
+        f.gossip_round(&fresh, 10.0);
+        // Now mutate ground truth; the view must keep gossip-time state.
+        let mut later = fresh.clone();
+        later[6].queue_len = 99;
+        let v = f.delegation_view(0, &later).unwrap();
+        assert_eq!(v[6].queue_len, 6, "delegation view leaked fresh state");
+        assert!(v[6].alive);
+        // Own partition stays fresh.
+        assert_eq!(v[0].queue_len, 0);
+        assert_eq!(f.staleness(0, 3, 70.0), Some(60.0));
+    }
+
+    #[test]
+    fn tree_leaves_see_only_the_root() {
+        let mut f = fed(8, 4, PeerTopology::Tree);
+        let fresh = snaps(8);
+        f.gossip_round(&fresh, 0.0);
+        // Leaf 1 (sites 2,3) sees root sites 0,1 — never leaf 3's 6,7.
+        let v = f.delegation_view(1, &fresh).unwrap();
+        assert!(v[0].alive && v[1].alive);
+        assert!(!v[6].alive && !v[7].alive);
+        // The root sees every leaf.
+        let v = f.delegation_view(0, &fresh).unwrap();
+        assert!(v[2].alive && v[7].alive);
+    }
+
+    #[test]
+    fn dead_peers_are_skipped_and_rerouted() {
+        let mut f = fed(8, 4, PeerTopology::Ring);
+        let fresh = snaps(8);
+        f.gossip_round(&fresh, 0.0);
+        f.peer_down(1);
+        assert_eq!(f.route_alive(1), 0); // sorted neighbours: 0 before 2
+        assert_eq!(f.route_alive(2), 2);
+        // A dead peer's sites drop out of its neighbours' delegation view.
+        let v = f.delegation_view(0, &fresh).unwrap();
+        assert!(!v[2].alive && !v[3].alive);
+        // Revival clears its own table: it rejoins blind.
+        f.peer_up(1);
+        assert!(f.delegation_view(1, &fresh).is_none());
+        f.gossip_round(&fresh, 5.0);
+        assert!(f.delegation_view(1, &fresh).is_some());
+    }
+
+    #[test]
+    fn route_alive_walks_the_ring() {
+        let mut f = fed(8, 4, PeerTopology::Ring);
+        f.peer_down(1);
+        f.peer_down(0);
+        // From 1: neighbours {0, 2}; 0 dead → 2 alive.
+        assert_eq!(f.route_alive(1), 2);
+        f.peer_down(2);
+        assert_eq!(f.route_alive(1), 3); // two hops out
+        f.peer_down(3);
+        assert_eq!(f.route_alive(1), 1); // whole federation dead: fall back
+    }
+}

@@ -1,0 +1,85 @@
+//! Periodic peer-state exchange (arXiv 0707.0862 §"peer state exchange"):
+//! each peer keeps a per-remote-peer digest of that peer's site states as
+//! of the last gossip round. Between rounds the digest is **stale** —
+//! delegation decisions deliberately act on these old beliefs, exactly
+//! like the real federation acting on MonALISA snapshots in flight.
+
+use crate::scheduler::SiteSnapshot;
+
+/// One remote peer's partition state as of a gossip exchange.
+#[derive(Clone, Debug)]
+pub struct PeerDigest {
+    /// Simulation time the digest was taken.
+    pub at: f64,
+    /// `(site index, state)` for every site of the remote partition,
+    /// ascending by site. The `alive` flags are as of `at` — a site that
+    /// died since still looks alive here, and that is the point.
+    pub sites: Vec<(usize, SiteSnapshot)>,
+}
+
+/// One peer's view of every other peer — `views[q]` is the last digest
+/// received from peer `q` (None until the first exchange).
+#[derive(Clone, Debug, Default)]
+pub struct GossipTable {
+    views: Vec<Option<PeerDigest>>,
+}
+
+impl GossipTable {
+    pub fn new(n_peers: usize) -> GossipTable {
+        GossipTable { views: vec![None; n_peers] }
+    }
+
+    /// Record a fresh digest from `peer`.
+    pub fn update(&mut self, peer: usize, digest: PeerDigest) {
+        self.views[peer] = Some(digest);
+    }
+
+    /// The last digest received from `peer`, if any.
+    pub fn view_of(&self, peer: usize) -> Option<&PeerDigest> {
+        self.views[peer].as_ref()
+    }
+
+    /// Seconds since the last exchange with `peer` (None = never).
+    pub fn staleness(&self, peer: usize, now: f64) -> Option<f64> {
+        self.views[peer].as_ref().map(|d| (now - d.at).max(0.0))
+    }
+
+    /// Drop every digest (a rejoining peer starts blind).
+    pub fn clear(&mut self) {
+        for v in &mut self.views {
+            *v = None;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(queue_len: usize) -> SiteSnapshot {
+        SiteSnapshot {
+            queue_len,
+            capability: 4.0,
+            load: 0.0,
+            free_slots: 4,
+            cpus: 4,
+            alive: true,
+        }
+    }
+
+    #[test]
+    fn digests_age_until_replaced() {
+        let mut t = GossipTable::new(2);
+        assert!(t.view_of(1).is_none());
+        assert_eq!(t.staleness(1, 100.0), None);
+        t.update(1, PeerDigest { at: 10.0, sites: vec![(2, snap(5))] });
+        assert_eq!(t.staleness(1, 70.0), Some(60.0));
+        // The stored queue length stays at its gossip-time value.
+        assert_eq!(t.view_of(1).unwrap().sites[0].1.queue_len, 5);
+        t.update(1, PeerDigest { at: 70.0, sites: vec![(2, snap(9))] });
+        assert_eq!(t.staleness(1, 70.0), Some(0.0));
+        assert_eq!(t.view_of(1).unwrap().sites[0].1.queue_len, 9);
+        t.clear();
+        assert!(t.view_of(1).is_none());
+    }
+}

@@ -1,0 +1,41 @@
+//! Hierarchical peer-to-peer meta-scheduling federation.
+//!
+//! The follow-up papers to the DIANA scheduler ("DIANA Scheduling
+//! Hierarchies for Optimizing Bulk Job Scheduling", arXiv 0707.0743, and
+//! "Scheduling in DIANA Grid Environments", arXiv 0707.0862) show that a
+//! single central meta-scheduler becomes the bottleneck under bulk load;
+//! the fix is a *hierarchy of cooperating peers* that schedule locally
+//! and delegate across the federation. This subsystem reproduces that
+//! layer on top of the existing DES:
+//!
+//! * [`Partition`] — each of N peers owns a contiguous block of sites
+//!   ([`partition`]); peers are wired flat / 2-level tree / ring
+//!   ([`adjacency`], [`crate::config::PeerTopology`]).
+//! * [`gossip`] — peers periodically exchange partition state; between
+//!   exchanges every remote view is **stale** by up to
+//!   `federation.gossip_period_s`, and delegation deliberately acts on
+//!   those old beliefs.
+//! * [`delegate`] — arrivals are scheduled against the peer's own
+//!   partition with the ordinary DIANA cost engine; when the best remote
+//!   site (seen through gossip, plus the inter-peer transfer penalty)
+//!   beats `delegation_threshold ×` the local best, the whole submission
+//!   is forwarded to the owning peer, up to `max_hops` times.
+//! * [`Federation`] — the per-world runtime tying it together, consumed
+//!   by [`crate::sim::World`]; peer liveness (the `peer-down` fault) and
+//!   home-peer re-routing live here.
+//!
+//! Configuration is `[federation]` in [`crate::config::GridConfig`]
+//! (CLI: `diana run --federation N`); `peers == 0` keeps the classic
+//! central leader and `peers == 1` degenerates to it bit-for-bit (a
+//! tested guarantee). See `docs/FEDERATION.md` for the full model and a
+//! worked central-vs-federated comparison.
+
+pub mod delegate;
+pub mod fed;
+pub mod gossip;
+pub mod partition;
+
+pub use delegate::{choose_delegation, peering_penalty, DelegationCandidate};
+pub use fed::Federation;
+pub use gossip::{GossipTable, PeerDigest};
+pub use partition::{adjacency, Partition};

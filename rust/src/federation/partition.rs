@@ -1,0 +1,157 @@
+//! Site→peer partitioning and peer-to-peer wiring.
+//!
+//! Each federation peer owns a contiguous block of site indices (the
+//! "SubGrid" it is the meta-scheduler for); the first site of the block
+//! is the peer's *gateway* — the host the peering link is priced
+//! against when a delegation crosses the federation. The wiring between
+//! peers ([`adjacency`]) decides who gossips with whom and who may
+//! receive a delegated job directly.
+
+use crate::config::PeerTopology;
+
+/// A fixed assignment of every site to exactly one peer.
+#[derive(Clone, Debug)]
+pub struct Partition {
+    /// site index → owning peer.
+    assign: Vec<usize>,
+    /// peer → its sites, ascending.
+    members: Vec<Vec<usize>>,
+}
+
+impl Partition {
+    /// Contiguous block partition: `n_sites` split into `n_peers` blocks
+    /// of near-equal size (the first `n_sites % n_peers` peers get one
+    /// extra site). Deterministic and order-preserving, so site `s`'s
+    /// peer is a pure function of `(n_sites, n_peers)`.
+    pub fn contiguous(n_sites: usize, n_peers: usize) -> Partition {
+        let p = n_peers.clamp(1, n_sites.max(1));
+        let base = n_sites / p;
+        let extra = n_sites % p;
+        let mut assign = Vec::with_capacity(n_sites);
+        let mut members = vec![Vec::new(); p];
+        let mut site = 0usize;
+        for peer in 0..p {
+            let len = base + usize::from(peer < extra);
+            for _ in 0..len {
+                assign.push(peer);
+                members[peer].push(site);
+                site += 1;
+            }
+        }
+        Partition { assign, members }
+    }
+
+    pub fn n_peers(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn n_sites(&self) -> usize {
+        self.assign.len()
+    }
+
+    /// The peer owning `site`.
+    #[inline]
+    pub fn peer_of(&self, site: usize) -> usize {
+        self.assign[site]
+    }
+
+    /// The sites `peer` owns, ascending.
+    #[inline]
+    pub fn sites_of(&self, peer: usize) -> &[usize] {
+        &self.members[peer]
+    }
+
+    /// The peer's gateway site (lowest site index of its partition) —
+    /// inter-peer link costs and forward latency are priced against the
+    /// gateway↔gateway link.
+    #[inline]
+    pub fn gateway(&self, peer: usize) -> usize {
+        self.members[peer][0]
+    }
+}
+
+/// Peer wiring for `kind`: `out[p]` is the sorted list of peers `p`
+/// exchanges gossip with and may delegate to directly.
+pub fn adjacency(kind: PeerTopology, n_peers: usize) -> Vec<Vec<usize>> {
+    let mut out = vec![Vec::new(); n_peers];
+    if n_peers <= 1 {
+        return out;
+    }
+    match kind {
+        PeerTopology::Flat => {
+            for (p, row) in out.iter_mut().enumerate() {
+                row.extend((0..n_peers).filter(|&q| q != p));
+            }
+        }
+        PeerTopology::Tree => {
+            // Two-level hierarchy: peer 0 is the root.
+            out[0].extend(1..n_peers);
+            for row in out.iter_mut().skip(1) {
+                row.push(0);
+            }
+        }
+        PeerTopology::Ring => {
+            for (p, row) in out.iter_mut().enumerate() {
+                let prev = (p + n_peers - 1) % n_peers;
+                let next = (p + 1) % n_peers;
+                row.push(prev.min(next));
+                if prev != next {
+                    row.push(prev.max(next));
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn contiguous_blocks_cover_all_sites() {
+        let p = Partition::contiguous(8, 4);
+        assert_eq!(p.n_peers(), 4);
+        assert_eq!(p.sites_of(0), &[0, 1]);
+        assert_eq!(p.sites_of(3), &[6, 7]);
+        assert_eq!(p.peer_of(5), 2);
+        assert_eq!(p.gateway(2), 4);
+        // Uneven split: first peers take the remainder.
+        let p = Partition::contiguous(7, 3);
+        assert_eq!(p.sites_of(0), &[0, 1, 2]);
+        assert_eq!(p.sites_of(1), &[3, 4]);
+        assert_eq!(p.sites_of(2), &[5, 6]);
+        let total: usize = (0..3).map(|q| p.sites_of(q).len()).sum();
+        assert_eq!(total, 7);
+    }
+
+    #[test]
+    fn degenerate_single_peer_owns_everything() {
+        let p = Partition::contiguous(5, 1);
+        assert_eq!(p.n_peers(), 1);
+        assert_eq!(p.sites_of(0), &[0, 1, 2, 3, 4]);
+        // More peers than sites clamps rather than creating empty peers.
+        let p = Partition::contiguous(2, 5);
+        assert_eq!(p.n_peers(), 2);
+    }
+
+    #[test]
+    fn adjacency_shapes() {
+        let flat = adjacency(PeerTopology::Flat, 4);
+        assert_eq!(flat[1], vec![0, 2, 3]);
+        let tree = adjacency(PeerTopology::Tree, 4);
+        assert_eq!(tree[0], vec![1, 2, 3]);
+        assert_eq!(tree[2], vec![0]);
+        let ring = adjacency(PeerTopology::Ring, 4);
+        assert_eq!(ring[0], vec![1, 3]);
+        assert_eq!(ring[2], vec![1, 3]);
+        // Two-peer ring has a single (deduplicated) neighbour.
+        let ring2 = adjacency(PeerTopology::Ring, 2);
+        assert_eq!(ring2[0], vec![1]);
+        assert_eq!(ring2[1], vec![0]);
+        // A lone peer has no neighbours under any wiring.
+        for k in [PeerTopology::Flat, PeerTopology::Tree, PeerTopology::Ring] {
+            assert!(adjacency(k, 1)[0].is_empty());
+        }
+    }
+}

@@ -6,8 +6,10 @@
 //!
 //!  * **L3 (this crate)** — the DIANA coordinator: §IV cost-driven
 //!    matchmaking, §VIII bulk group handling, §X multilevel feedback
-//!    queues + re-prioritization, §IX P2P migration, and the MONARC-style
-//!    Grid simulator + workload generator it is evaluated on.
+//!    queues + re-prioritization, §IX P2P migration, the hierarchical
+//!    meta-scheduling federation of the follow-up papers (`federation`,
+//!    arXiv 0707.0743/0707.0862), and the MONARC-style Grid simulator +
+//!    workload generator it is evaluated on.
 //!  * **L2/L1 (python/compile, build-time only)** — the J×S cost-matrix
 //!    and Pr(n) re-prioritization kernels in JAX/Pallas, AOT-lowered to
 //!    HLO text and executed from rust via PJRT (`runtime`).
@@ -41,6 +43,7 @@ pub mod config;
 pub mod coordinator;
 pub mod cost;
 pub mod data;
+pub mod federation;
 pub mod job;
 pub mod metrics;
 pub mod migration;

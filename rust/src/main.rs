@@ -6,7 +6,8 @@ fn main() -> Result<()> {
     diana::util::logging::init();
     let args = Args::parse(std::env::args().skip(1));
     match args.subcommand.as_deref() {
-        Some("simulate") => diana::cli::simulate(&args),
+        // `run` is the canonical name; `simulate` the historical alias.
+        Some("run") | Some("simulate") => diana::cli::simulate(&args),
         Some("sweep") => diana::cli::sweep(&args),
         Some("repro") => diana::cli::repro(&args),
         Some("serve") => diana::cli::serve(&args),

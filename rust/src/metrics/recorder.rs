@@ -74,6 +74,10 @@ pub struct Recorder {
     jobs: BTreeMap<u64, JobRecord>,
     sites: Vec<SiteSeries>,
     pub migrations: u64,
+    /// Jobs delegated away from their home federation peer, counted
+    /// once at the first forward (multi-hop re-delegations are tracked
+    /// as hop-weighted batches in `Federation::forwards`).
+    pub delegations: u64,
     pub groups_split: u64,
     pub groups_whole: u64,
 }
@@ -84,6 +88,7 @@ impl Recorder {
             jobs: BTreeMap::new(),
             sites: (0..n_sites).map(|_| SiteSeries::new(bucket_s)).collect(),
             migrations: 0,
+            delegations: 0,
             groups_split: 0,
             groups_whole: 0,
         }

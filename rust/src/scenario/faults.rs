@@ -1,7 +1,8 @@
 //! Timed fault-injection plans: site crashes and recoveries, link
-//! degradation, WAN partitions and monitor blackouts, delivered as
-//! first-class DES events by [`crate::sim::World::load_faults`] — the
-//! harness behind the §IX failover and migration experiments.
+//! degradation, WAN partitions, monitor blackouts and federation-peer
+//! crashes, delivered as first-class DES events by
+//! [`crate::sim::World::load_faults`] — the harness behind the §IX
+//! failover, migration and federation experiments.
 
 use crate::config::GridConfig;
 use crate::config::toml::{Table, Value};
@@ -49,6 +50,13 @@ pub enum FaultKind {
     /// MonALISA outage: monitor sweeps and discovery heartbeats are
     /// suppressed for `duration_s` — schedulers run on stale beliefs.
     MonitorBlackout { duration_s: f64 },
+    /// Federation-peer crash: the meta-scheduler of peer `peer` dies.
+    /// Its sites keep running dispatched work, but home submissions are
+    /// re-routed to the nearest alive peer, it stops gossiping, and it
+    /// can no longer receive delegations. Needs `federation.peers > 1`.
+    PeerDown { peer: usize },
+    /// Federation-peer recovery: rejoins blind (empty gossip table).
+    PeerUp { peer: usize },
 }
 
 /// A [`FaultKind`] with site names resolved to indices — what the
@@ -72,6 +80,8 @@ pub enum ResolvedFault {
     },
     Heal,
     MonitorBlackout { duration_s: f64 },
+    PeerDown(usize),
+    PeerUp(usize),
 }
 
 /// An ordered fault schedule (part of a sweep spec; empty by default).
@@ -89,6 +99,17 @@ fn req_str(t: &Table, key: &str, i: usize) -> Result<String> {
 
 fn float_or(t: &Table, key: &str, default: f64) -> f64 {
     t.get(key).and_then(Value::as_float).unwrap_or(default)
+}
+
+fn req_peer(t: &Table, i: usize) -> Result<usize> {
+    match t.get("peer").map(|v| (v, v.as_int())) {
+        Some((_, Some(p))) if p >= 0 => Ok(p as usize),
+        Some((v, _)) => Err(err!(
+            "[[fault]] #{i}: `peer` wants a non-negative integer peer \
+             index, got {v:?}"
+        )),
+        None => Err(err!("[[fault]] #{i}: missing integer key `peer`")),
+    }
 }
 
 impl FaultPlan {
@@ -158,10 +179,12 @@ impl FaultPlan {
                 "monitor-blackout" => FaultKind::MonitorBlackout {
                     duration_s: float_or(t, "duration_s", 300.0),
                 },
+                "peer-down" => FaultKind::PeerDown { peer: req_peer(t, i)? },
+                "peer-up" => FaultKind::PeerUp { peer: req_peer(t, i)? },
                 other => bail!(
                     "[[fault]] #{i}: unknown kind `{other}` (site-down | \
                      site-up | link-degrade | partition | heal | \
-                     monitor-blackout)"
+                     monitor-blackout | peer-down | peer-up)"
                 ),
             };
             events.push(FaultEvent { at, kind });
@@ -218,11 +241,34 @@ impl FaultPlan {
                     FaultKind::MonitorBlackout { duration_s } => {
                         ResolvedFault::MonitorBlackout { duration_s: *duration_s }
                     }
+                    FaultKind::PeerDown { peer } => {
+                        ResolvedFault::PeerDown(resolve_peer(cfg, *peer)?)
+                    }
+                    FaultKind::PeerUp { peer } => {
+                        ResolvedFault::PeerUp(resolve_peer(cfg, *peer)?)
+                    }
                 };
                 Ok((e.at, r))
             })
             .collect()
     }
+}
+
+/// Peer faults only make sense against a federated config; validate the
+/// index against the (effective) peer count at resolve time.
+fn resolve_peer(cfg: &GridConfig, peer: usize) -> Result<usize> {
+    let n = cfg.federation.peers.min(cfg.sites.len());
+    crate::ensure!(
+        n > 1,
+        "fault plan has a peer fault but the config is not federated \
+         (federation.peers = {}, need > 1)",
+        cfg.federation.peers
+    );
+    crate::ensure!(
+        peer < n,
+        "fault plan names unknown peer {peer} (federation has {n} peers)"
+    );
+    Ok(peer)
 }
 
 #[cfg(test)]
@@ -289,6 +335,36 @@ mod tests {
         )
         .unwrap();
         assert!(bad.resolve(&cfg).is_err());
+    }
+
+    #[test]
+    fn peer_faults_parse_and_resolve_only_when_federated() {
+        let p = plan(
+            "[[fault]]\nat = 5.0\nkind = \"peer-down\"\npeer = 1\n\
+             [[fault]]\nat = 50.0\nkind = \"peer-up\"\npeer = 1\n",
+        )
+        .unwrap();
+        assert!(matches!(p.events[0].kind, FaultKind::PeerDown { peer: 1 }));
+        // Non-federated config rejects peer faults outright.
+        let central = presets::uniform_grid(4, 4);
+        let e = p.resolve(&central).unwrap_err().to_string();
+        assert!(e.contains("not federated"), "got: {e}");
+        // Federated config resolves them; out-of-range peers error.
+        let mut fed = presets::uniform_grid(4, 4);
+        fed.federation.peers = 2;
+        let r = p.resolve(&fed).unwrap();
+        assert!(matches!(r[0].1, ResolvedFault::PeerDown(1)));
+        let far = plan(
+            "[[fault]]\nat = 1.0\nkind = \"peer-down\"\npeer = 7\n",
+        )
+        .unwrap();
+        assert!(far.resolve(&fed).is_err());
+        // Missing / negative `peer` keys fail at parse.
+        assert!(plan("[[fault]]\nat = 1.0\nkind = \"peer-down\"\n").is_err());
+        assert!(
+            plan("[[fault]]\nat = 1.0\nkind = \"peer-up\"\npeer = -2\n")
+                .is_err()
+        );
     }
 
     #[test]

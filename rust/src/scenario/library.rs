@@ -33,6 +33,14 @@ pub const SCENARIOS: &[(&str, &str)] = &[
         "hetero-tiers",
         include_str!("../../examples/sweeps/hetero_tiers.toml"),
     ),
+    (
+        "central-vs-federated",
+        include_str!("../../examples/sweeps/central_vs_federated.toml"),
+    ),
+    (
+        "federation-smoke",
+        include_str!("../../examples/sweeps/federation_smoke.toml"),
+    ),
     ("smoke", include_str!("../../examples/sweeps/smoke.toml")),
 ];
 

@@ -30,6 +30,9 @@ pub struct RunResult {
     pub response: SummaryStats,
     pub throughput_jobs_per_s: f64,
     pub migrations: u64,
+    /// Jobs delegated away from their home federation peer, counted
+    /// once at the first forward (0 on central runs).
+    pub delegations: u64,
     pub groups_whole: u64,
     pub groups_split: u64,
     pub events: u64,
@@ -71,6 +74,7 @@ pub struct AggregateRow {
     pub response_mean: f64,
     pub throughput_mean: f64,
     pub migrations: u64,
+    pub delegations: u64,
     pub events: u64,
 }
 
@@ -125,6 +129,7 @@ impl SweepReport {
                     response_mean: mean_of(&|r| r.response.mean),
                     throughput_mean: mean_of(&|r| r.throughput_jobs_per_s),
                     migrations: rs.iter().map(|r| r.migrations).sum(),
+                    delegations: rs.iter().map(|r| r.delegations).sum(),
                     events: rs.iter().map(|r| r.events).sum(),
                 }
             })
@@ -147,7 +152,7 @@ impl SweepReport {
             ",policy,completed,makespan_s,queue_mean_s,queue_p50_s,\
              queue_p95_s,queue_p99_s,exec_mean_s,turnaround_mean_s,\
              turnaround_p95_s,response_mean_s,throughput_jobs_per_s,\
-             migrations,groups_whole,groups_split,events\n",
+             migrations,delegations,groups_whole,groups_split,events\n",
         );
         for r in &self.runs {
             let _ = write!(out, "{}", r.index);
@@ -157,7 +162,7 @@ impl SweepReport {
             }
             let _ = writeln!(
                 out,
-                ",{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
+                ",{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
                 csv_escape(&r.policy),
                 r.jobs,
                 r.makespan_s,
@@ -171,6 +176,7 @@ impl SweepReport {
                 r.response.mean,
                 r.throughput_jobs_per_s,
                 r.migrations,
+                r.delegations,
                 r.groups_whole,
                 r.groups_split,
                 r.events
@@ -185,12 +191,12 @@ impl SweepReport {
             "point,runs,completed,makespan_mean_s,makespan_p50_s,\
              makespan_p95_s,queue_mean_s,queue_p95_s,queue_p99_s,\
              turnaround_mean_s,turnaround_p95_s,response_mean_s,\
-             throughput_mean_jobs_per_s,migrations,events\n",
+             throughput_mean_jobs_per_s,migrations,delegations,events\n",
         );
         for a in &self.aggregates {
             let _ = writeln!(
                 out,
-                "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
+                "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
                 csv_escape(&a.point),
                 a.runs,
                 a.jobs,
@@ -205,6 +211,7 @@ impl SweepReport {
                 a.response_mean,
                 a.throughput_mean,
                 a.migrations,
+                a.delegations,
                 a.events
             );
         }
@@ -239,8 +246,9 @@ impl SweepReport {
                 "}}, \"policy\": {}, \"completed\": {}, \"makespan_s\": {}, \
                  \"queue\": {}, \"exec\": {}, \"turnaround\": {}, \
                  \"response\": {}, \"throughput_jobs_per_s\": {}, \
-                 \"migrations\": {}, \"groups_whole\": {}, \
-                 \"groups_split\": {}, \"events\": {}}}",
+                 \"migrations\": {}, \"delegations\": {}, \
+                 \"groups_whole\": {}, \"groups_split\": {}, \
+                 \"events\": {}}}",
                 jstr(&r.policy),
                 r.jobs,
                 jnum(r.makespan_s),
@@ -250,6 +258,7 @@ impl SweepReport {
                 jstats(&r.response),
                 jnum(r.throughput_jobs_per_s),
                 r.migrations,
+                r.delegations,
                 r.groups_whole,
                 r.groups_split,
                 r.events
@@ -266,7 +275,7 @@ impl SweepReport {
                  \"turnaround_mean_s\": {}, \"turnaround_p95_s\": {}, \
                  \"response_mean_s\": {}, \
                  \"throughput_mean_jobs_per_s\": {}, \"migrations\": {}, \
-                 \"events\": {}}}",
+                 \"delegations\": {}, \"events\": {}}}",
                 jstr(&a.point),
                 a.runs,
                 a.jobs,
@@ -279,6 +288,7 @@ impl SweepReport {
                 jnum(a.response_mean),
                 jnum(a.throughput_mean),
                 a.migrations,
+                a.delegations,
                 a.events
             );
             out.push_str(if i + 1 < self.aggregates.len() {
@@ -305,13 +315,14 @@ impl SweepReport {
                     fmt_secs(a.queue_p95),
                     fmt_secs(a.turnaround_mean),
                     a.migrations.to_string(),
+                    a.delegations.to_string(),
                     a.events.to_string(),
                 ]
             })
             .collect();
         render_table(
             &["point", "runs", "makespan", "queue", "q-p95", "turnaround",
-              "migr", "events"],
+              "migr", "deleg", "events"],
             &rows,
         )
     }
@@ -435,6 +446,7 @@ mod tests {
             response: stats(0.5),
             throughput_jobs_per_s: 0.1,
             migrations: 3,
+            delegations: 2,
             groups_whole: 1,
             groups_split: 0,
             events: 50,
@@ -463,6 +475,7 @@ mod tests {
         assert_eq!(a.jobs, 20);
         assert_eq!(a.queue_mean, 5.0);
         assert_eq!(a.migrations, 6);
+        assert_eq!(a.delegations, 4);
         assert_eq!(a.makespan.mean, 105.0);
         assert_eq!(rep.aggregates[1].runs, 1);
         assert_eq!(rep.total_migrations(), 9);

@@ -36,6 +36,7 @@ pub fn run_one(run: &RunSpec, faults: &FaultPlan) -> Result<RunResult> {
         response: SummaryStats::of(&report.response_time),
         throughput_jobs_per_s: report.throughput_jobs_per_s,
         migrations: report.migrations,
+        delegations: report.delegations,
         groups_whole: report.groups_whole,
         groups_split: report.groups_split,
         events: report.events,

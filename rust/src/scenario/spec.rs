@@ -34,7 +34,8 @@
 
 use std::path::Path;
 
-use crate::config::{self, EngineKind, GridConfig, LinkConfig, Policy};
+use crate::config::{self, EngineKind, GridConfig, LinkConfig, PeerTopology,
+                    Policy};
 use crate::config::toml::{self, Table, Value};
 use crate::util::error::{Context, Result};
 use crate::{bail, err};
@@ -367,6 +368,19 @@ impl SweepSpec {
     /// `base_seed + i` — a pure function of the matrix position, never of
     /// worker scheduling.
     pub fn expand(&self) -> Result<Vec<RunSpec>> {
+        // An axis with no values would zero the whole cross-product (and
+        // previously panicked on programmatically-built specs instead of
+        // erroring). Name the offending axis; TOML-parsed specs reject
+        // `key = []` at parse time with the same shape of message.
+        for axis in &self.axes {
+            crate::ensure!(
+                !axis.values.is_empty(),
+                "sweep `{}`: axis `{}` has an empty value list — give it \
+                 at least one value or drop the axis",
+                self.name,
+                axis.key
+            );
+        }
         let base = self.base_config()?;
         let repeats = self.repeats.max(1);
         let total = self.matrix_size();
@@ -489,6 +503,28 @@ pub fn apply_param(cfg: &mut GridConfig, key: &str, v: &ParamValue) -> Result<()
         "default_quota" => cfg.scheduler.default_quota = f(key, v)?,
         "migration_period_s" => cfg.scheduler.migration_period_s = f(key, v)?,
         "max_migrations" => cfg.scheduler.max_migrations = u(key, v)? as u32,
+        // federation (dotted keys are literal in the TOML subset, the
+        // underscore aliases help hand-built specs)
+        "federation.peers" | "federation_peers" => {
+            cfg.federation.peers = u(key, v)?
+        }
+        "federation.topology" | "federation_topology" => {
+            let t = s(key, v)?;
+            cfg.federation.topology = PeerTopology::from_name(t)
+                .ok_or_else(|| {
+                    err!("unknown federation topology `{t}` (flat | tree | ring)")
+                })?;
+        }
+        "federation.gossip_period_s" | "federation_gossip_period_s" => {
+            cfg.federation.gossip_period_s = f(key, v)?
+        }
+        "federation.delegation_threshold"
+        | "federation_delegation_threshold" => {
+            cfg.federation.delegation_threshold = f(key, v)?
+        }
+        "federation.max_hops" | "federation_max_hops" => {
+            cfg.federation.max_hops = u(key, v)? as u32
+        }
         // network defaults
         "default_rtt_ms" => cfg.network.default_rtt_ms = f(key, v)?,
         "default_loss" => cfg.network.default_loss = f(key, v)?,
@@ -506,7 +542,10 @@ pub fn apply_param(cfg: &mut GridConfig, key: &str, v: &ParamValue) -> Result<()
              cpu_sec_*, max_procs, datasets, replicas; scheduler: policy, \
              engine, w5..w7, w_net, w_dtc, congestion_thrs, \
              group_division_factor, max_group_per_site, aging_halflife_s, \
-             default_quota, migration_period_s, max_migrations; network: \
+             default_quota, migration_period_s, max_migrations; \
+             federation: federation.peers, federation.topology, \
+             federation.gossip_period_s, federation.delegation_threshold, \
+             federation.max_hops; network: \
              default_rtt_ms, default_loss, default_capacity_mbps, \
              local_bw_mbps, local_loss, mss_bytes, monitor_noise, \
              monitor_period_s; top level: seed, max_events)"
@@ -679,6 +718,63 @@ rtt_ms = 200.0
         assert!(preset_by_name("uniform-3x5").is_ok());
         let bad = "preset = \"x\"\nconfig = \"y\"\n";
         assert!(SweepSpec::from_str_named(bad, "x").is_err());
+    }
+
+    #[test]
+    fn empty_axis_value_list_is_an_error_naming_the_axis() {
+        // TOML path: `jobs = []` is rejected at parse time.
+        let bad = "preset = \"uniform-2x2\"\n[axes]\njobs = []\n";
+        let e = SweepSpec::from_str_named(bad, "x").unwrap_err().to_string();
+        assert!(e.contains("jobs"), "error must name the axis, got: {e}");
+        // Programmatic path: the same guard fires at expansion instead
+        // of the old index-out-of-bounds panic (or a silent 0-run
+        // matrix via the cross-product).
+        let mut spec =
+            SweepSpec::from_str_named("preset = \"uniform-2x2\"\n", "t")
+                .unwrap();
+        spec.axes.push(Axis { key: "bulk_size".into(), values: vec![] });
+        assert_eq!(spec.matrix_size(), 0);
+        let e = spec.expand().unwrap_err().to_string();
+        assert!(e.contains("bulk_size"), "error must name the axis: {e}");
+        assert!(e.contains("empty"), "got: {e}");
+    }
+
+    #[test]
+    fn federation_axis_keys_apply() {
+        let spec = SweepSpec::from_str_named(
+            "preset = \"uniform-4x4\"\n[axes]\nfederation.peers = [1, 2]\n\
+             [set]\nfederation.topology = \"ring\"\n\
+             federation.gossip_period_s = 15.0\n\
+             federation.delegation_threshold = 0.7\n\
+             federation.max_hops = 3\n",
+            "fed",
+        )
+        .unwrap();
+        let runs = spec.expand().unwrap();
+        assert_eq!(runs.len(), 2);
+        assert_eq!(runs[0].cfg.federation.peers, 1);
+        assert_eq!(runs[1].cfg.federation.peers, 2);
+        assert_eq!(runs[0].labels[0].0, "federation.peers");
+        for r in &runs {
+            assert_eq!(r.cfg.federation.topology, PeerTopology::Ring);
+            assert_eq!(r.cfg.federation.gossip_period_s, 15.0);
+            assert_eq!(r.cfg.federation.delegation_threshold, 0.7);
+            assert_eq!(r.cfg.federation.max_hops, 3);
+        }
+        // Expansion validates: more peers than sites fails.
+        let bad = SweepSpec::from_str_named(
+            "preset = \"uniform-2x2\"\n[axes]\nfederation.peers = [8]\n",
+            "x",
+        )
+        .unwrap();
+        assert!(bad.expand().is_err());
+        let mut cfg = config::presets::uniform_grid(2, 2);
+        assert!(apply_param(
+            &mut cfg,
+            "federation.topology",
+            &ParamValue::Str("star".into())
+        )
+        .is_err());
     }
 
     #[test]

@@ -7,8 +7,31 @@
 //! a new `SitePicker` implementation, registered in
 //! [`make_picker`](crate::scheduler::make_picker). Pickers are consumed
 //! by the DES ([`World`](crate::sim::World)), by the §VIII bulk splitter
-//! ([`plan_group`](crate::bulk::plan_group)) and by the TCP front end
-//! ([`coordinator::serve`](crate::coordinator::serve)).
+//! ([`plan_group`](crate::bulk::plan_group)), by the TCP front end
+//! ([`coordinator::serve`](crate::coordinator::serve)) and — per
+//! partition — by every federation peer ([`crate::federation`]).
+//!
+//! # What a federation peer shows its picker
+//!
+//! Under federation the *same* picker instance is consulted with views
+//! a central leader never produces, and the existing implementor
+//! contract is exactly what makes that safe:
+//!
+//! * **Placement view** — the peer's own sites carry fresh state;
+//!   every site outside the partition has `alive == false`. A picker
+//!   honouring the dead-site rule therefore confines placement to the
+//!   partition without knowing federations exist.
+//! * **Delegation view** — own sites fresh, *adjacent peers'* sites as
+//!   of the last gossip exchange (stale `queue_len`/`load`/`alive` up
+//!   to `gossip_period_s` old), all other sites dead. Only
+//!   [`SitePicker::site_costs`] is called on this view, to compare the
+//!   local best against remote options; no placement happens on it.
+//!
+//! Implementations must therefore treat [`SiteSnapshot::alive`] as
+//! authoritative and must not cache state across calls keyed by site
+//! index "freshness" — a snapshot may be deliberately old. Nothing else
+//! changes: determinism and the one-placement-per-job contract apply to
+//! both views.
 
 use crate::util::error::Result;
 
@@ -42,6 +65,9 @@ pub struct SiteSnapshot {
 ///
 /// Pickers must base decisions on the *monitor's beliefs* (`monitor`),
 /// not ground truth — stale or noisy network data is part of the model.
+/// Under federation the `sites` slice itself may carry deliberately
+/// stale or partition-masked snapshots (see the module docs); `q_total`
+/// is then the *partition-local* queue pressure, not the global Q.
 pub struct GridView<'a> {
     /// Simulation (or wall-clock) time of this round, seconds.
     pub now: f64,

@@ -10,7 +10,9 @@ use crate::config::{GridConfig, Policy};
 use crate::coordinator::MetaScheduler;
 use crate::cost::{CostEngine, Weights};
 use crate::data::Catalog;
-use crate::job::{Job, JobId};
+use crate::federation::{choose_delegation, peering_penalty, Federation};
+use crate::federation::DelegationCandidate;
+use crate::job::{Group, Job, JobId};
 use crate::metrics::Recorder;
 use crate::migration::{decide, MigrationDecision, PeerReport};
 use crate::network::{Link, PingerMonitor, Topology};
@@ -34,10 +36,26 @@ enum Ev {
     MigrationCheck,
     /// Timed fault injection (index into `World::faults`).
     Fault(usize),
+    /// Periodic federation peer-state exchange (scheduled only when
+    /// `federation.peers > 1`, so central and 1-peer runs see an
+    /// unchanged event stream).
+    Gossip,
+    /// A delegated submission arriving at a remote peer after the
+    /// inter-peer forward latency.
+    Forward {
+        jobs: Vec<u64>,
+        group: Option<Group>,
+        peer: usize,
+        hops: u32,
+    },
 }
 
 /// Max migration candidates examined per site per check.
 const MIGRATION_BATCH: usize = 8;
+
+/// Job-descriptor size shipped per job when a submission is forwarded to
+/// a remote peer (control-plane payload, not the sandbox).
+const CTRL_MB_PER_JOB: f64 = 0.01;
 
 pub struct World {
     pub cfg: GridConfig,
@@ -75,6 +93,10 @@ pub struct World {
     blocked: BTreeMap<u64, usize>,
     /// parent job → dependent children.
     children: BTreeMap<u64, Vec<u64>>,
+    /// Hierarchical federation runtime (`federation.peers >= 1`); `None`
+    /// runs the classic central leader. One peer degenerates to the
+    /// central event stream bit-for-bit.
+    federation: Option<Federation>,
 }
 
 impl World {
@@ -120,6 +142,7 @@ impl World {
             discovery.register(i, &format!("diana://{}", site.name), 0.0);
         }
         World {
+            federation: Federation::from_config(&cfg),
             recorder: Recorder::new(n, 60.0),
             alive: vec![true; n],
             pristine_topo: topo.clone(),
@@ -217,6 +240,20 @@ impl World {
                 );
                 self.blackout_until = self.blackout_until.max(t + duration_s);
             }
+            ResolvedFault::PeerDown(p) => {
+                crate::info!("t={t:.1}: fault — federation peer {p} down");
+                if let Some(fed) = self.federation.as_mut() {
+                    fed.peer_down(p);
+                } else {
+                    crate::warn!("peer fault on a non-federated run ignored");
+                }
+            }
+            ResolvedFault::PeerUp(p) => {
+                crate::info!("t={t:.1}: fault — federation peer {p} recovered");
+                if let Some(fed) = self.federation.as_mut() {
+                    fed.peer_up(p);
+                }
+            }
         }
     }
 
@@ -230,6 +267,11 @@ impl World {
 
     pub fn policy_name(&self) -> &'static str {
         self.picker.name()
+    }
+
+    /// The federation runtime, if this world runs in federated mode.
+    pub fn federation(&self) -> Option<&Federation> {
+        self.federation.as_ref()
     }
 
     /// Inject a site failure / recovery (exercises dead-site masking and
@@ -311,6 +353,18 @@ impl World {
             self.events
                 .schedule(self.cfg.scheduler.migration_period_s, Ev::MigrationCheck);
         }
+        // Federation bootstrap (§IX-style join): peers exchange state
+        // once at t=0, then on the gossip period. A 1-peer federation
+        // has no neighbours — nothing is exchanged or scheduled, keeping
+        // its event stream identical to the central leader's.
+        if self.federation.as_ref().map_or(false, |f| f.n_peers() > 1) {
+            let snap = self.snapshot();
+            if let Some(fed) = self.federation.as_mut() {
+                fed.gossip_round(&snap, 0.0);
+            }
+            self.events
+                .schedule(self.cfg.federation.gossip_period_s, Ev::Gossip);
+        }
         while let Some((t, ev)) = self.events.pop() {
             crate::ensure!(
                 self.events.processed() < self.cfg.max_events,
@@ -329,6 +383,21 @@ impl World {
                 Ev::Finish { job, site } => self.on_finish(JobId(job), site, t),
                 Ev::Deliver { job } => self.on_deliver(JobId(job), t),
                 Ev::Fault(i) => self.apply_fault(i, t),
+                Ev::Gossip => {
+                    let snap = self.snapshot();
+                    if let Some(fed) = self.federation.as_mut() {
+                        fed.gossip_round(&snap, t);
+                    }
+                    if self.delivered < self.total_jobs {
+                        self.events.schedule_in(
+                            self.cfg.federation.gossip_period_s,
+                            Ev::Gossip,
+                        );
+                    }
+                }
+                Ev::Forward { jobs, group, peer, hops } => {
+                    self.on_forward(jobs, group, peer, hops, t)?
+                }
                 Ev::Monitor => {
                     // A blacked-out monitor neither sweeps nor heartbeats
                     // — peers keep acting on stale beliefs (§IX).
@@ -398,30 +467,139 @@ impl World {
             return Ok(());
         }
 
-        let snap = self.snapshot();
+        // DIANA treats the group as one unit (§VIII plan — the *ready*
+        // subset; gated subjobs are placed individually on release);
+        // baselines place per-job like the EGEE broker.
+        let group = if self.cfg.scheduler.policy == Policy::Diana {
+            Some(Group {
+                jobs: jobs.iter().map(|j| j.id).collect(),
+                ..sub.group.clone()
+            })
+        } else {
+            None
+        };
+
+        // Federation: the submission lands at the home peer of its
+        // submitting site.
+        let peer = self.home_route(sub.jobs[0].submit_site);
+
+        // The incoming batch is part of the queue pressure Q (§IV): on
+        // an idle grid this is what makes capability Pi matter (Q/Pi·W6
+        // term — the Fig-4 "pick the 600-CPU site").
+        self.place_batch(&jobs, group.as_ref(), sub.jobs.len(), peer, 0, t)
+    }
+
+    /// A delegated submission arrived at `peer` (federation mode). The
+    /// destination may have died while the forward was in flight — route
+    /// on to the nearest alive peer, then schedule with its fresh local
+    /// view (and possibly delegate again, up to the hop limit).
+    fn on_forward(
+        &mut self,
+        ids: Vec<u64>,
+        group: Option<Group>,
+        peer: usize,
+        hops: u32,
+        t: f64,
+    ) -> Result<()> {
+        let peer = match self.federation.as_mut() {
+            Some(fed) => {
+                fed.forwards += 1;
+                fed.route_alive(peer)
+            }
+            None => peer,
+        };
+        let jobs: Vec<Job> =
+            ids.iter().map(|id| self.jobs[id].clone()).collect();
+        self.place_batch(&jobs, group.as_ref(), jobs.len(), Some(peer), hops, t)
+    }
+
+    /// Place a batch of schedulable jobs (one submission's ready set, a
+    /// forwarded batch, or a single released subjob).
+    ///
+    /// Central mode (`peer == None`): the picker sees the full fresh
+    /// grid — the classic leader path. Federated mode: the picker sees
+    /// `peer`'s partition only; before placing, the batch may be
+    /// delegated to a better-ranked remote peer seen through gossip.
+    fn place_batch(
+        &mut self,
+        jobs: &[Job],
+        group: Option<&Group>,
+        incoming: usize,
+        peer: Option<usize>,
+        hops: u32,
+        t: f64,
+    ) -> Result<()> {
+        let fresh = self.snapshot();
+        let q_local = match (&self.federation, peer) {
+            (Some(fed), Some(p)) => fed
+                .partition
+                .sites_of(p)
+                .iter()
+                .map(|&s| fresh[s].queue_len)
+                .sum::<usize>(),
+            _ => self.q_total(),
+        };
+        let q_total = q_local + incoming;
+
+        // Federated delegation check (no-op with < 2 peers, so the
+        // degenerate 1-peer run performs no extra picker calls).
+        if let (Some(p), Some(fed)) = (peer, self.federation.as_ref()) {
+            let target = Self::delegation_target(
+                self.picker.as_mut(),
+                fed,
+                &self.monitor,
+                &self.catalog,
+                &self.cfg,
+                p,
+                hops,
+                &jobs[0],
+                &fresh,
+                q_total,
+                t,
+            )?;
+            if let Some(to) = target {
+                let latency = self.forward_latency(p, to, jobs.len());
+                // Count each job once, at its first forward — multi-hop
+                // re-delegations are visible in `Federation::forwards`
+                // (hop-weighted batches), keeping this column comparable
+                // with the completed-job count.
+                if hops == 0 {
+                    self.recorder.delegations += jobs.len() as u64;
+                }
+                crate::debug!(
+                    "t={t:.1}: peer {p} delegates {} job(s) to peer {to} \
+                     (hop {})",
+                    jobs.len(),
+                    hops + 1
+                );
+                self.events.schedule(
+                    t + latency,
+                    Ev::Forward {
+                        jobs: jobs.iter().map(|j| j.id.0).collect(),
+                        group: group.cloned(),
+                        peer: to,
+                        hops: hops + 1,
+                    },
+                );
+                return Ok(());
+            }
+        }
+
+        let snap = match (&self.federation, peer) {
+            (Some(fed), Some(p)) => fed.placement_view(p, &fresh),
+            _ => fresh,
+        };
         let view = GridView {
             now: t,
             sites: &snap,
             monitor: &self.monitor,
             catalog: &self.catalog,
-            // The incoming batch is part of the global queue pressure Q
-            // (§IV): on an idle grid this is what makes capability Pi
-            // matter (Q/Pi·W6 term — the Fig-4 "pick the 600-CPU site").
-            q_total: self.q_total() + sub.jobs.len(),
+            q_total,
         };
 
-        // DIANA treats the group as one unit (§VIII plan); baselines place
-        // per-job like the EGEE broker.
         let mut by_site: BTreeMap<usize, Vec<JobId>> = BTreeMap::new();
-        if self.cfg.scheduler.policy == Policy::Diana {
-            // Plan the *ready* subset as the group (§VIII); gated
-            // subjobs are placed individually on release.
-            let ready_group = crate::job::Group {
-                jobs: jobs.iter().map(|j| j.id).collect(),
-                ..sub.group.clone()
-            };
-            let plan =
-                plan_group(self.picker.as_mut(), &ready_group, &jobs, &view)?;
+        if let Some(g) = group {
+            let plan = plan_group(self.picker.as_mut(), g, jobs, &view)?;
             if plan.single_site {
                 self.recorder.groups_whole += 1;
             } else {
@@ -434,7 +612,7 @@ impl World {
                     .extend(idxs.iter().map(|&i| jobs[i].id));
             }
         } else {
-            let picks = self.picker.pick(&jobs, &view)?;
+            let picks = self.picker.pick(jobs, &view)?;
             for (job, site) in jobs.iter().zip(picks) {
                 by_site.entry(site).or_default().push(job.id);
             }
@@ -450,6 +628,85 @@ impl World {
             self.events.schedule(t, Ev::Dispatch(site));
         }
         Ok(())
+    }
+
+    /// Decide whether `peer` should delegate this batch: evaluate the
+    /// representative job's §IV cost row over the delegation view (own
+    /// sites fresh, adjacent peers' sites as of the last gossip), add
+    /// the peering penalty to every remote site, and forward iff the
+    /// best remote beats `delegation_threshold ×` the local best.
+    /// Free-function-style over disjoint `World` fields so the picker
+    /// can borrow mutably next to the monitor/catalog.
+    #[allow(clippy::too_many_arguments)]
+    fn delegation_target(
+        picker: &mut dyn SitePicker,
+        fed: &Federation,
+        monitor: &PingerMonitor,
+        catalog: &Catalog,
+        cfg: &GridConfig,
+        peer: usize,
+        hops: u32,
+        job: &Job,
+        fresh: &[SiteSnapshot],
+        q_total: usize,
+        now: f64,
+    ) -> Result<Option<usize>> {
+        if fed.n_peers() <= 1 || hops >= fed.fed_cfg().max_hops {
+            return Ok(None);
+        }
+        let Some(snap) = fed.delegation_view(peer, fresh) else {
+            return Ok(None); // nothing gossiped / no alive neighbour
+        };
+        let view = GridView {
+            now,
+            sites: &snap,
+            monitor,
+            catalog,
+            q_total,
+        };
+        let costs = picker.site_costs(job, &view)?;
+        let mut local_best = f64::INFINITY;
+        for &s in fed.partition.sites_of(peer) {
+            local_best = local_best.min(costs[s]);
+        }
+        let gw = fed.partition.gateway(peer);
+        let mut cands = Vec::new();
+        for (s, &c) in costs.iter().enumerate() {
+            let q = fed.partition.peer_of(s);
+            if q == peer || !snap[s].alive || !c.is_finite() {
+                continue;
+            }
+            // Inter-peer link priced from the monitor's *beliefs* about
+            // the gateway↔gateway path, like every other cost input.
+            let o = monitor.observe(gw, fed.partition.gateway(q));
+            let pen = peering_penalty(
+                job.exe_mb,
+                o.bandwidth_mbps,
+                o.loss,
+                cfg.scheduler.w_net,
+                cfg.scheduler.w_dtc,
+            );
+            cands.push(DelegationCandidate { site: s, peer: q, cost: c + pen });
+        }
+        Ok(choose_delegation(
+            local_best,
+            &cands,
+            fed.fed_cfg().delegation_threshold,
+        ))
+    }
+
+    /// Ground-truth latency of forwarding a batch from `from` to `to`:
+    /// a two-RTT control handshake plus the job descriptors over the
+    /// gateway↔gateway link.
+    fn forward_latency(&self, from: usize, to: usize, n_jobs: usize) -> f64 {
+        let fed = self.federation.as_ref().expect("federated mode");
+        let a = fed.partition.gateway(from);
+        let b = fed.partition.gateway(to);
+        let link = self.topo.link(a, b);
+        2.0 * link.rtt_ms / 1000.0
+            + self
+                .topo
+                .transfer_seconds(a, b, CTRL_MB_PER_JOB * n_jobs as f64)
     }
 
     /// Feed the local batch system from the meta queues, keeping at most
@@ -555,23 +812,27 @@ impl World {
     }
 
     /// Place a dependency-released subjob (individually, via the
-    /// configured policy) and enqueue it.
+    /// configured policy) and enqueue it. Under federation it arrives at
+    /// the home peer of its submitting site like any fresh submission —
+    /// and may be delegated from there.
     fn release_job(&mut self, job: JobId, t: f64) -> Result<()> {
         let j = self.jobs[&job.0].clone();
-        let snap = self.snapshot();
-        let view = GridView {
-            now: t,
-            sites: &snap,
-            monitor: &self.monitor,
-            catalog: &self.catalog,
-            q_total: self.q_total() + 1,
-        };
-        let site = self.picker.pick(std::slice::from_ref(&j), &view)?[0];
-        self.recorder.job_mut(job).placed = t;
-        let batch = [&self.jobs[&job.0]];
-        self.metas[site].enqueue_batch(self.engine.as_mut(), &batch, t)?;
-        self.events.schedule(t, Ev::Dispatch(site));
-        Ok(())
+        let peer = self.home_route(j.submit_site);
+        self.place_batch(std::slice::from_ref(&j), None, 1, peer, 0, t)
+    }
+
+    /// Home-peer routing for a fresh arrival (submission or released
+    /// subjob): the partition owner of `submit_site`, re-routed (and
+    /// counted) to the nearest alive peer when the home scheduler is
+    /// down. `None` on central runs.
+    fn home_route(&mut self, submit_site: usize) -> Option<usize> {
+        let fed = self.federation.as_mut()?;
+        let home = fed.home_peer(submit_site);
+        let routed = fed.route_alive(home);
+        if routed != home {
+            fed.rehomed += 1;
+        }
+        Some(routed)
     }
 
     /// §IX/§X migration sweep over all congested (or dead) sites.
@@ -633,10 +894,25 @@ impl World {
                     local.jobs_ahead = usize::MAX;
                     local.total_cost = f32::INFINITY;
                 }
-                let peers: Vec<PeerReport> = (0..self.sites.len())
-                    .filter(|&s| s != site)
-                    .map(report)
-                    .collect();
+                // §IX peer polling. Under federation the poll stays
+                // inside the owning peer's partition — cross-partition
+                // movement is the delegation layer's job — EXCEPT for a
+                // dead site (force), where any alive site may rescue the
+                // stranded queue (the dead-partition escape hatch).
+                let peers: Vec<PeerReport> = match (&self.federation, force) {
+                    (Some(fed), false) => fed
+                        .partition
+                        .sites_of(fed.partition.peer_of(site))
+                        .iter()
+                        .copied()
+                        .filter(|&s| s != site)
+                        .map(report)
+                        .collect(),
+                    _ => (0..self.sites.len())
+                        .filter(|&s| s != site)
+                        .map(report)
+                        .collect(),
+                };
                 match decide(
                     local,
                     &peers,
@@ -1042,5 +1318,62 @@ mod tests {
         for g in &w.group_results {
             assert!(g.total_output_mb > 0.0);
         }
+    }
+
+    #[test]
+    fn single_peer_federation_matches_central_event_stream() {
+        let central = run_with(small_cfg(40), Policy::Diana);
+        let mut cfg = small_cfg(40);
+        cfg.federation.peers = 1;
+        let fed = run_with(cfg, Policy::Diana);
+        assert!(fed.federation().is_some());
+        assert_eq!(fed.events_processed(), central.events_processed());
+        assert_eq!(fed.recorder.delegations, 0);
+        let qa = central.recorder.summary(crate::metrics::JobRecord::queue_time);
+        let qb = fed.recorder.summary(crate::metrics::JobRecord::queue_time);
+        assert_eq!(qa.mean(), qb.mean());
+    }
+
+    #[test]
+    fn federated_run_confines_placement_to_partitions_or_delegates() {
+        let mut cfg = small_cfg(60);
+        cfg.federation.peers = 2;
+        cfg.federation.gossip_period_s = 20.0;
+        let w = run_with(cfg, Policy::Diana);
+        assert_eq!(w.completion(), 1.0);
+        // Gossip ran: the bootstrap round plus periodic exchanges.
+        assert!(w.federation().unwrap().gossip_rounds >= 1);
+    }
+
+    #[test]
+    fn peer_down_fault_rehomes_submissions_and_completes() {
+        use crate::scenario::faults::{FaultEvent, FaultKind, FaultPlan};
+        let mut cfg = small_cfg(0);
+        cfg.federation.peers = 4; // uniform 4x4 → one site per peer
+        let mut world = build_world(cfg, Policy::Diana);
+        let mut rng = Pcg64::new(6);
+        world.catalog = Catalog::from_config(&world.cfg, &mut rng);
+        let plan = FaultPlan {
+            events: vec![FaultEvent {
+                at: 0.0,
+                kind: FaultKind::PeerDown { peer: 0 },
+            }],
+        };
+        world.load_faults(&plan).unwrap();
+        // Every submission homes at dead peer 0 (site 0) → re-routed.
+        let mut gen = WorkloadGen::new(9);
+        let cat = world.catalog.clone();
+        let subs: Vec<_> = (0..4)
+            .map(|i| {
+                gen.bulk(&world.cfg, &cat, crate::job::UserId(i), 0,
+                         1.0 + i as f64, 5)
+            })
+            .collect();
+        world.load_submissions(subs);
+        world.run().unwrap();
+        assert_eq!(world.completion(), 1.0);
+        let fed = world.federation().unwrap();
+        assert!(!fed.peer_alive(0));
+        assert_eq!(fed.rehomed, 4, "every submission should be re-homed");
     }
 }

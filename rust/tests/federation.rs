@@ -1,0 +1,220 @@
+//! Federation acceptance properties (ISSUE 3):
+//!
+//! * `--federation 1` reproduces the central leader bit-for-bit;
+//! * federated sweep output is stable across `-j` thread counts;
+//! * bulk load on a weak partition provably delegates to a strong one;
+//! * the built-in central-vs-federated scenario shows ≥ 1 delegated job
+//!   and a measurable makespan difference between the two modes.
+
+use diana::config::{presets, PeerTopology, Policy};
+use diana::coordinator::{generate_workload, run_simulation,
+                         run_simulation_with};
+use diana::cost::RustEngine;
+use diana::job::UserId;
+use diana::scenario::{library, run_sweep, SweepSpec};
+use diana::scheduler::make_picker;
+use diana::sim::World;
+use diana::util::Pcg64;
+use diana::workload::WorkloadGen;
+
+/// `federation.peers = 1` must be indistinguishable from the central
+/// leader on the same seed and workload: same event count, same metric
+/// distributions, field-for-field — the degenerate federation runs the
+/// same code path with nothing to gossip and nobody to delegate to.
+#[test]
+fn one_peer_federation_is_bit_identical_to_central() {
+    let mut central_cfg = presets::uniform_grid(5, 4);
+    central_cfg.workload.jobs = 60;
+    central_cfg.workload.bulk_size = 12;
+    central_cfg.workload.cpu_sec_median = 90.0;
+    let mut fed_cfg = central_cfg.clone();
+    fed_cfg.federation.peers = 1;
+
+    let subs = generate_workload(&central_cfg);
+    let (_, central) = run_simulation_with(&central_cfg, subs.clone()).unwrap();
+    let (world, fed) = run_simulation_with(&fed_cfg, subs).unwrap();
+
+    assert!(world.federation().is_some(), "1 peer still builds the runtime");
+    assert_eq!(fed.delegations, 0);
+    // Debug-format the whole report: every field (all Summary tails,
+    // event counts, counters) must match byte for byte.
+    assert_eq!(format!("{central:?}"), format!("{fed:?}"));
+}
+
+/// The same equivalence through the generated-workload front door (what
+/// `diana run --federation 1` does vs plain `diana run`).
+#[test]
+fn one_peer_federation_matches_central_via_run_simulation() {
+    let mut cfg = presets::paper_testbed();
+    cfg.workload.jobs = 50;
+    let (_, a) = run_simulation(&cfg).unwrap();
+    cfg.federation.peers = 1;
+    let (_, b) = run_simulation(&cfg).unwrap();
+    assert_eq!(format!("{a:?}"), format!("{b:?}"));
+}
+
+/// A 4-peer federated sweep is byte-identical for any `-j`: runs are
+/// self-contained, the federation state lives per-world, and nothing
+/// leaks across workers.
+#[test]
+fn four_peer_sweep_is_stable_across_thread_counts() {
+    let spec = SweepSpec::from_str_named(
+        "name = \"fed4\"\npreset = \"uniform-8x2\"\nbase_seed = 31\n\
+         repeats = 2\n\
+         [axes]\nfederation.peers = [4]\n\
+         [set]\njobs = 40\nbulk_size = 10\ncpu_sec_median = 60.0\n\
+         cpu_sec_sigma = 0.3\nexe_mb = 1.0\n\
+         federation.gossip_period_s = 20.0\n",
+        "fed4",
+    )
+    .unwrap();
+    let a = run_sweep(&spec, 1).unwrap();
+    let b = run_sweep(&spec, 4).unwrap();
+    assert_eq!(a.runs_csv(), b.runs_csv());
+    assert_eq!(a.aggregate_csv(), b.aggregate_csv());
+    assert_eq!(a.to_json(), b.to_json());
+    for r in &a.runs {
+        assert_eq!(r.jobs, 40, "run {} incomplete", r.index);
+    }
+}
+
+fn weak_west_strong_east_cfg() -> diana::config::GridConfig {
+    // Peers over 8 sites: {0,1} {2,3} {4,5} {6,7}; only peer 3 has
+    // capacity. Compute-only jobs make the §IV cost row queue-dominated,
+    // so a 20-job bulk at site 0 *must* beat the 0.8 threshold east.
+    let mut cfg = presets::uniform_grid(8, 1);
+    cfg.sites[6].cpus = 24;
+    cfg.sites[7].cpus = 24;
+    cfg.workload.frac_compute = 1.0;
+    cfg.workload.frac_data = 0.0;
+    cfg.workload.frac_both = 0.0;
+    cfg.workload.max_procs = 1;
+    cfg.workload.exe_mb = 1.0;
+    cfg.workload.cpu_sec_median = 60.0;
+    cfg.workload.cpu_sec_sigma = 0.2;
+    cfg.federation.peers = 4;
+    cfg.federation.topology = PeerTopology::Flat;
+    cfg.federation.gossip_period_s = 20.0;
+    cfg.validate().unwrap();
+    cfg
+}
+
+fn federated_world(cfg: diana::config::GridConfig) -> World {
+    let picker = make_picker(
+        cfg.scheduler.policy,
+        Box::new(RustEngine::new()),
+        &cfg.scheduler,
+        cfg.seed,
+    );
+    World::new(cfg, picker, Box::new(RustEngine::new()))
+}
+
+/// Deterministic delegation: every bulk submitted at the starved western
+/// partition is forwarded east, lands on the strong sites, and the run
+/// still delivers everything.
+#[test]
+fn bulk_load_on_weak_partition_delegates_to_strong_peer() {
+    let mut world = federated_world(weak_west_strong_east_cfg());
+    let mut rng = Pcg64::new(2);
+    world.catalog =
+        diana::data::Catalog::from_config(&world.cfg, &mut rng);
+    let cat = world.catalog.clone();
+    let mut gen = WorkloadGen::new(4);
+    let subs: Vec<_> = (0..3)
+        .map(|i| {
+            gen.bulk(&world.cfg, &cat, UserId(i), 0, i as f64 * 5.0, 20)
+        })
+        .collect();
+    world.load_submissions(subs);
+    world.run().unwrap();
+    assert_eq!(world.completion(), 1.0);
+    assert!(
+        world.recorder.delegations >= 20,
+        "expected at least the first bulk delegated, got {}",
+        world.recorder.delegations
+    );
+    let fed = world.federation().unwrap();
+    assert!(fed.forwards > 0);
+    // The delegated jobs really execute in the eastern partition.
+    let east = world
+        .recorder
+        .completed_records()
+        .filter(|r| r.exec_site >= 6)
+        .count();
+    assert!(east >= 20, "only {east} jobs ran east");
+}
+
+/// Policy-independence: the delegation layer rides on the generic
+/// `SitePicker::site_costs` contract, so baselines federate too.
+#[test]
+fn fcfs_policy_also_federates_and_completes() {
+    let mut cfg = weak_west_strong_east_cfg();
+    cfg.scheduler.policy = Policy::FcfsBroker;
+    let mut world = federated_world(cfg);
+    let mut rng = Pcg64::new(3);
+    world.catalog =
+        diana::data::Catalog::from_config(&world.cfg, &mut rng);
+    let cat = world.catalog.clone();
+    let mut gen = WorkloadGen::new(5);
+    let subs = vec![gen.bulk(&world.cfg, &cat, UserId(0), 0, 0.0, 20)];
+    world.load_submissions(subs);
+    world.run().unwrap();
+    assert_eq!(world.completion(), 1.0);
+}
+
+/// Acceptance: the shipped scenario demonstrates ≥ 1 delegated job in
+/// federated mode, zero in central mode, and a measurable makespan
+/// difference between the two matrix points.
+#[test]
+fn central_vs_federated_scenario_delegates_and_shifts_makespan() {
+    let spec = library::load("central-vs-federated").unwrap();
+    let rep = run_sweep(&spec, 2).unwrap();
+    assert_eq!(rep.runs.len(), 2);
+    let central = &rep.runs[0];
+    let federated = &rep.runs[1];
+    assert_eq!(central.labels[0], ("federation.peers".into(), "1".into()));
+    assert_eq!(federated.labels[0], ("federation.peers".into(), "4".into()));
+    assert_eq!(central.jobs, 160);
+    assert_eq!(federated.jobs, 160);
+    assert_eq!(central.delegations, 0, "central mode must not delegate");
+    assert!(
+        federated.delegations > 0,
+        "federated bulk load produced no delegations"
+    );
+    let diff = (central.makespan_s - federated.makespan_s).abs();
+    assert!(
+        diff > 1e-6,
+        "central and federated makespans are indistinguishable: {} vs {}",
+        central.makespan_s,
+        federated.makespan_s
+    );
+}
+
+/// Peer faults steer load without losing jobs: with the eastern peer's
+/// scheduler dead, western bulks can no longer delegate east and the
+/// federation still completes; after `peer-up` it can delegate again.
+#[test]
+fn peer_fault_scenario_completes_without_the_strong_peer() {
+    use diana::scenario::faults::{FaultEvent, FaultKind, FaultPlan};
+    let mut world = federated_world(weak_west_strong_east_cfg());
+    let mut rng = Pcg64::new(8);
+    world.catalog =
+        diana::data::Catalog::from_config(&world.cfg, &mut rng);
+    let plan = FaultPlan {
+        events: vec![FaultEvent {
+            at: 0.0,
+            kind: FaultKind::PeerDown { peer: 3 },
+        }],
+    };
+    world.load_faults(&plan).unwrap();
+    let cat = world.catalog.clone();
+    let mut gen = WorkloadGen::new(6);
+    let subs = vec![gen.bulk(&world.cfg, &cat, UserId(0), 0, 1.0, 10)];
+    world.load_submissions(subs);
+    world.run().unwrap();
+    assert_eq!(world.completion(), 1.0);
+    // Peer 3 is unreachable: nothing may execute on its sites.
+    for r in world.recorder.completed_records() {
+        assert!(r.exec_site < 6, "job ran on dead peer's site");
+    }
+}
