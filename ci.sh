@@ -13,6 +13,13 @@ cargo build --release --benches
 echo "== tier-1: tests =="
 cargo test -q
 
+echo "== clippy (best effort) =="
+if cargo clippy --version >/dev/null 2>&1; then
+  cargo clippy --all-targets -- -D warnings
+else
+  echo "ci.sh: clippy not installed in this toolchain — skipping"
+fi
+
 echo "== docs (warnings are errors) =="
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 
@@ -59,6 +66,30 @@ else
   cp "$SWEEP_OUT/fed-j1/federation-smoke_runs.csv" "$FED_GOLDEN"
   echo "ci.sh: bootstrapped $FED_GOLDEN — commit it"
 fi
+
+echo "== incremental matchmaking == from-scratch rebuild (bit-for-bit) =="
+# The workspace/cache hot path must produce byte-identical sweep output
+# to the paranoid rebuild-everything path (same discipline as the
+# peers=1 ≡ central check; the in-crate equivalence suite covers more
+# matrices, this guards the shipped scenarios end-to-end).
+DIANA_PARANOID_REBUILD=1 ./target/release/diana sweep \
+    rust/examples/sweeps/smoke.toml -j 1 --out "$SWEEP_OUT/paranoid"
+DIANA_PARANOID_REBUILD=1 ./target/release/diana sweep \
+    rust/examples/sweeps/federation_smoke.toml -j 1 \
+    --out "$SWEEP_OUT/fed-paranoid"
+for f in smoke_runs.csv smoke_aggregate.csv; do
+  cmp "$SWEEP_OUT/j1/$f" "$SWEEP_OUT/paranoid/$f" \
+    || { echo "ci.sh: $f diverged under DIANA_PARANOID_REBUILD"; exit 1; }
+done
+for f in federation-smoke_runs.csv federation-smoke_aggregate.csv; do
+  cmp "$SWEEP_OUT/fed-j1/$f" "$SWEEP_OUT/fed-paranoid/$f" \
+    || { echo "ci.sh: $f diverged under DIANA_PARANOID_REBUILD"; exit 1; }
+done
+
+echo "== matchmaker bench (smoke) =="
+cargo bench --bench bench_matchmaker -- --smoke | tee "$SWEEP_OUT/bench.txt"
+grep -q "matchmaker events/s" "$SWEEP_OUT/bench.txt" \
+  || { echo "ci.sh: matchmaker bench lost its events/s line"; exit 1; }
 
 echo "== federation 1-peer == central (CLI, bit-for-bit) =="
 ./target/release/diana run --preset uniform --jobs 40 --seed 11 \

@@ -1,0 +1,147 @@
+//! Bench: the §V matchmaking core, old-style vs workspace path.
+//!
+//! Measures rounds/s of the full J×S evaluation (input build + kernel +
+//! argmins) at three shapes, comparing:
+//!
+//!  * `old-style` — what every round did before the incremental
+//!    refactor: fresh `CostInputs` + fresh `ScheduleOut` + per-pair
+//!    monitor observation, ~10 allocations per round;
+//!  * `workspace` — `build_cost_inputs_into` + `schedule_step_into`
+//!    through a reused `CostWorkspace` with an epoch-stable
+//!    `ReplicaCache`: zero steady-state allocation.
+//!
+//! The closing `matchmaker events/s` line (jobs matched per second on
+//! the workspace path at the largest shape) is the throughput counter
+//! ci.sh smoke-greps and BENCH trajectories track; the sweep runner
+//! surfaces the same counter per matrix point in its aggregate table.
+//!
+//! Smoke mode (`--smoke` argument or `DIANA_BENCH_SMOKE=1`): tiny
+//! sample counts, same output shape — used by ci.sh.
+
+mod common;
+use common::{bench, black_box};
+
+use diana::config::presets;
+use diana::cost::{CostWorkspace, RustEngine, CostEngine, Weights};
+use diana::data::{Catalog, ReplicaCache};
+use diana::job::{Job, JobClass, JobId, UserId};
+use diana::network::{PingerMonitor, Topology};
+use diana::scheduler::{build_cost_inputs, build_cost_inputs_into, GridView,
+                       SiteSnapshot};
+use diana::util::Pcg64;
+
+struct Fixture {
+    monitor: PingerMonitor,
+    catalog: Catalog,
+    sites: Vec<SiteSnapshot>,
+    jobs: Vec<Job>,
+}
+
+fn fixture(n_jobs: usize, n_sites: usize) -> Fixture {
+    let cfg = presets::uniform_grid(n_sites, 32);
+    let topo = Topology::from_config(&cfg);
+    let monitor = PingerMonitor::new(&topo, 0.0, 1);
+    let mut rng = Pcg64::new(0x5eed ^ (n_jobs as u64) ^ ((n_sites as u64) << 20));
+    let mut catalog = Catalog::new();
+    let n_ds = 32.min(n_sites * 2);
+    for d in 0..n_ds {
+        catalog.add(&format!("d{d}"), rng.uniform(100.0, 30_000.0),
+                    vec![rng.below(n_sites as u64) as usize]);
+    }
+    let sites = (0..n_sites)
+        .map(|_| SiteSnapshot {
+            queue_len: rng.below(100) as usize,
+            capability: 32.0,
+            load: rng.next_f64(),
+            free_slots: rng.below(33) as usize,
+            cpus: 32,
+            alive: true,
+        })
+        .collect();
+    let jobs = (0..n_jobs as u64)
+        .map(|i| Job {
+            id: JobId(i),
+            user: UserId((i % 10) as u32),
+            group: None,
+            class: match i % 3 {
+                0 => JobClass::ComputeIntensive,
+                1 => JobClass::DataIntensive,
+                _ => JobClass::Both,
+            },
+            input: if i % 4 == 3 {
+                None
+            } else {
+                Some(rng.below(n_ds as u64) as usize)
+            },
+            in_mb: rng.uniform(10.0, 10_000.0),
+            out_mb: 50.0,
+            exe_mb: 20.0,
+            cpu_sec: rng.uniform(60.0, 3600.0),
+            procs: 1,
+            submit_site: 0,
+            submit_time: 0.0,
+            quota: 1000.0,
+            migrations: 0,
+        })
+        .collect();
+    Fixture { monitor, catalog, sites, jobs }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke")
+        || std::env::var("DIANA_BENCH_SMOKE")
+            .map_or(false, |v| !v.is_empty() && v != "0");
+    let (warmup, samples) = if smoke { (1, 3) } else { (20, 200) };
+    println!("== bench_matchmaker: §V cost rounds, old-style vs workspace \
+              {}==", if smoke { "(smoke) " } else { "" });
+
+    let mut closing_events_per_s = 0.0;
+    for (nj, ns) in [(1usize, 10usize), (32, 50), (256, 200)] {
+        let f = fixture(nj, ns);
+        let view = GridView {
+            now: 0.0,
+            sites: &f.sites,
+            monitor: &f.monitor,
+            catalog: &f.catalog,
+            q_total: 500,
+            epoch: 0,
+        };
+        let w = Weights { q_total: 500.0, ..Weights::default() };
+
+        let mut engine = RustEngine::new();
+        let r_old = bench(
+            &format!("old-style  J={nj:<3} S={ns:<3} (alloc per round)"),
+            warmup, samples, || {
+                let inp = build_cost_inputs(&f.jobs, &view);
+                black_box(engine.schedule_step(&inp, &w).unwrap());
+            });
+        r_old.throughput(nj as f64, "jobs");
+
+        let mut ws = CostWorkspace::new();
+        let mut replicas = ReplicaCache::new();
+        let r_new = bench(
+            &format!("workspace  J={nj:<3} S={ns:<3} (reused buffers)"),
+            warmup, samples, || {
+                build_cost_inputs_into(&f.jobs, &view, &mut ws.inputs,
+                                       &mut replicas);
+                engine
+                    .schedule_step_into(&ws.inputs, &w, &mut ws.out)
+                    .unwrap();
+                black_box(ws.out.best_total[0]);
+            });
+        r_new.throughput(nj as f64, "jobs");
+        println!("  └ workspace speedup: {:.2}x",
+                 r_old.mean_ns() / r_new.mean_ns());
+
+        // Sanity: both paths agree on every argmin.
+        let inp = build_cost_inputs(&f.jobs, &view);
+        let old = engine.schedule_step(&inp, &w).unwrap();
+        assert_eq!(old.best_total, ws.out.best_total);
+        assert_eq!(old.best_compute, ws.out.best_compute);
+        assert_eq!(old.best_data, ws.out.best_data);
+
+        closing_events_per_s = nj as f64 / (r_new.mean_ns() / 1e9);
+    }
+    println!("matchmaker events/s (J=256 S=200, workspace): {:.0}",
+             closing_events_per_s);
+}

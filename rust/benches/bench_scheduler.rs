@@ -62,6 +62,7 @@ fn main() {
         monitor: &monitor,
         catalog: &catalog,
         q_total: 500,
+        epoch: 0,
     };
 
     for policy in [Policy::Diana, Policy::FcfsBroker, Policy::Greedy,

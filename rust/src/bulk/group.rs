@@ -10,6 +10,7 @@
 //!      ranked sites, assigning each subgroup to the next site with room
 //!      (spilling to the best site when capacity runs out everywhere).
 
+use crate::cost::top_k_sites_by_cost;
 use crate::job::{Group, Job};
 use crate::scheduler::{GridView, SitePicker};
 use crate::util::error::Result;
@@ -73,16 +74,21 @@ pub fn plan_group(
             single_site: true,
         });
     }
-    let costs = picker.site_costs(&jobs[0], view)?;
-    let mut ranked: Vec<usize> =
-        (0..view.n_sites()).filter(|&s| costs[s].is_finite()).collect();
-    ranked.sort_by(|&a, &b| costs[a].partial_cmp(&costs[b]).unwrap());
-    if ranked.is_empty() {
+    let mut costs = Vec::new();
+    picker.site_costs_into(&jobs[0], view, &mut costs)?;
+
+    // Only the best `division_factor` sites are ever consumed below, so
+    // select top-k on the cost row instead of fully sorting it (the §V
+    // SortSites step collapses to O(S·k)). `top_k_sites_by_cost` keeps
+    // the stable ascending (cost, site) order the full sort produced.
+    let mut chosen = Vec::new();
+    top_k_sites_by_cost(&costs, group.division_factor.max(1), &mut chosen);
+    if chosen.is_empty() {
         crate::bail!("no alive sites to place group {:?}", group.id);
     }
 
     // Whole group on the best site if it fits its cap.
-    let best = ranked[0];
+    let best = chosen[0];
     if jobs.len() <= site_cap(group, view, best) {
         return Ok(GroupPlan {
             assignments: vec![(best, (0..jobs.len()).collect())],
@@ -99,8 +105,7 @@ pub fn plan_group(
     // data-intensive group the replica sites' tiny DTC keeps the bulk
     // of the group with its data. Per-site JDL caps are respected;
     // overflow spills to the best-ranked site's queue.
-    let k = group.division_factor.max(1).min(ranked.len());
-    let chosen: Vec<usize> = ranked[..k].to_vec();
+    let k = chosen.len();
     let total = jobs.len();
     let best_cost = costs[chosen[0]];
     let mean_cost =
@@ -271,6 +276,7 @@ mod tests {
             monitor: &f.monitor,
             catalog: &f.catalog,
             q_total: 0,
+            epoch: 0,
         }
     }
 

@@ -57,6 +57,7 @@ pub fn load_str(text: &str) -> Result<GridConfig> {
         scheduler: SchedulerConfig::default(),
         workload: WorkloadConfig::default(),
         federation: FederationConfig::default(),
+        paranoid_rebuild: false,
     };
 
     let sites = root

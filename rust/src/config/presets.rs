@@ -60,6 +60,7 @@ pub fn paper_testbed() -> GridConfig {
             ..WorkloadConfig::default()
         },
         federation: FederationConfig::default(),
+        paranoid_rebuild: false,
     }
 }
 
@@ -106,6 +107,7 @@ pub fn fig4_grid() -> GridConfig {
             ..WorkloadConfig::default()
         },
         federation: FederationConfig::default(),
+        paranoid_rebuild: false,
     }
 }
 
@@ -174,6 +176,7 @@ pub fn cms_tier_grid() -> GridConfig {
             ..WorkloadConfig::default()
         },
         federation: FederationConfig::default(),
+        paranoid_rebuild: false,
     }
 }
 
@@ -197,6 +200,7 @@ pub fn uniform_grid(n: usize, cpus: usize) -> GridConfig {
         scheduler: SchedulerConfig::default(),
         workload: WorkloadConfig::default(),
         federation: FederationConfig::default(),
+        paranoid_rebuild: false,
     }
 }
 

@@ -326,6 +326,13 @@ pub struct GridConfig {
     pub scheduler: SchedulerConfig,
     pub workload: WorkloadConfig,
     pub federation: FederationConfig,
+    /// Debug/verification mode: rebuild every scheduling input from
+    /// scratch each round instead of using the incremental
+    /// `GridStateCache` + replica-row caches. Bit-identical to the
+    /// cached path by construction — `rust/tests/equivalence.rs` and
+    /// `ci.sh` assert it. Not a TOML key; toggled programmatically or
+    /// via the `DIANA_PARANOID_REBUILD` environment variable.
+    pub paranoid_rebuild: bool,
 }
 
 impl GridConfig {

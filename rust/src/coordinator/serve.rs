@@ -30,10 +30,21 @@ use crate::scheduler::{GridView, SitePicker, SiteSnapshot};
 use crate::util::error::{Context, Result};
 use crate::util::Pcg64;
 
+/// Reused per-request buffers (snapshot rows + placements), guarded by
+/// one lock alongside the picker: after the first SUBMIT the serve path
+/// performs no per-request heap allocation for matchmaking (the picker's
+/// own `CostWorkspace` buffers are behind `pick_into`).
+#[derive(Default)]
+struct ServeScratch {
+    snaps: Vec<SiteSnapshot>,
+    picks: Vec<usize>,
+}
+
 /// Shared server state: one picker + a live (synthetic) grid snapshot.
 pub struct Server {
     cfg: GridConfig,
     picker: Mutex<Box<dyn SitePicker>>,
+    scratch: Mutex<ServeScratch>,
     monitor: PingerMonitor,
     catalog: Catalog,
     queue_depths: Vec<AtomicU64>,
@@ -51,6 +62,7 @@ impl Server {
         Server {
             cfg,
             picker: Mutex::new(picker),
+            scratch: Mutex::new(ServeScratch::default()),
             monitor,
             catalog,
             queue_depths,
@@ -58,23 +70,20 @@ impl Server {
         }
     }
 
-    fn snapshot(&self) -> Vec<SiteSnapshot> {
-        self.cfg
-            .sites
-            .iter()
-            .enumerate()
-            .map(|(i, s)| {
-                let q = self.queue_depths[i].load(Ordering::Relaxed) as usize;
-                SiteSnapshot {
-                    queue_len: q,
-                    capability: s.capability(),
-                    load: (q as f64 / s.cpus as f64).min(1.0),
-                    free_slots: s.cpus.saturating_sub(q),
-                    cpus: s.cpus,
-                    alive: true,
-                }
-            })
-            .collect()
+    /// Refresh the snapshot rows in place from the queue-depth counters.
+    fn fill_snapshot(&self, snaps: &mut Vec<SiteSnapshot>) {
+        snaps.clear();
+        snaps.extend(self.cfg.sites.iter().enumerate().map(|(i, s)| {
+            let q = self.queue_depths[i].load(Ordering::Relaxed) as usize;
+            SiteSnapshot {
+                queue_len: q,
+                capability: s.capability(),
+                load: (q as f64 / s.cpus as f64).min(1.0),
+                free_slots: s.cpus.saturating_sub(q),
+                cpus: s.cpus,
+                alive: true,
+            }
+        }));
     }
 
     /// Handle one SUBMIT: parse the JDL, build the job batch, matchmake.
@@ -108,17 +117,24 @@ impl Server {
             quota: self.cfg.scheduler.default_quota,
             migrations: 0,
         };
-        let snap = self.snapshot();
-        let view = GridView {
-            now: 0.0,
-            sites: &snap,
-            monitor: &self.monitor,
-            catalog: &self.catalog,
-            q_total: snap.iter().map(|s| s.queue_len).sum(),
-        };
         let site = {
+            let mut scratch = self.scratch.lock().unwrap();
+            let ServeScratch { snaps, picks } = &mut *scratch;
+            self.fill_snapshot(snaps);
+            let view = GridView {
+                now: 0.0,
+                sites: &snaps[..],
+                monitor: &self.monitor,
+                catalog: &self.catalog,
+                q_total: snaps.iter().map(|s| s.queue_len).sum(),
+                // The serve grid's beliefs are fixed at construction
+                // (no monitor sweeps, no catalog writes), so every
+                // request shares one replica-cache epoch.
+                epoch: 0,
+            };
             let mut picker = self.picker.lock().unwrap();
-            picker.pick(std::slice::from_ref(&job), &view)?[0]
+            picker.pick_into(std::slice::from_ref(&job), &view, picks)?;
+            picks[0]
         };
         self.queue_depths[site]
             .fetch_add(spec.group_size as u64, Ordering::Relaxed);
@@ -219,6 +235,29 @@ mod tests {
     fn bad_jdl_is_an_error() {
         let s = server();
         assert!(s.submit("[ oops").is_err());
+    }
+
+    #[test]
+    fn repeated_serves_reuse_buffers() {
+        // The serve path must settle into zero-allocation steady state:
+        // scratch (snapshot + placements) capacities stop moving after
+        // the first request.
+        let s = server();
+        s.submit("[ GroupSize = 1; CpuSeconds = 60; ]").unwrap();
+        let caps = {
+            let sc = s.scratch.lock().unwrap();
+            (sc.snaps.capacity(), sc.picks.capacity())
+        };
+        assert!(caps.0 >= 3 && caps.1 >= 1);
+        for _ in 0..50 {
+            s.submit("[ GroupSize = 2; CpuSeconds = 120; \
+                      JobClass = \"compute\"; ]").unwrap();
+        }
+        let after = {
+            let sc = s.scratch.lock().unwrap();
+            (sc.snaps.capacity(), sc.picks.capacity())
+        };
+        assert_eq!(caps, after, "serve scratch reallocated mid-steady-state");
     }
 
     #[test]

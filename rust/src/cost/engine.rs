@@ -11,7 +11,8 @@
 
 use crate::util::error::Result;
 
-use super::model::{schedule_step_rust, CostInputs, ScheduleOut, Weights};
+use super::model::{schedule_step_into, schedule_step_rust, CostInputs,
+                   ScheduleOut, Weights};
 
 // NOTE: not `Send` — the XLA backend holds a PJRT client (internally an
 // `Rc`); each thread builds its own engine instead of sharing one.
@@ -19,6 +20,23 @@ pub trait CostEngine {
     /// Evaluate the full cost matrix + per-class argmins for one round.
     fn schedule_step(&mut self, inputs: &CostInputs, weights: &Weights)
         -> Result<ScheduleOut>;
+
+    /// [`CostEngine::schedule_step`] into a caller-owned [`ScheduleOut`]
+    /// — the steady-state matchmaking entry point: with a reused `out`
+    /// (see [`CostWorkspace`](crate::cost::CostWorkspace)) a round
+    /// performs no heap allocation. Default-impl'd over `schedule_step`
+    /// so existing backends (the XLA stub included) keep working; the
+    /// pure-rust engine overrides it with the truly allocation-free
+    /// kernel.
+    fn schedule_step_into(
+        &mut self,
+        inputs: &CostInputs,
+        weights: &Weights,
+        out: &mut ScheduleOut,
+    ) -> Result<()> {
+        *out = self.schedule_step(inputs, weights)?;
+        Ok(())
+    }
 
     /// Batch re-prioritization (§X): jobs[L,4] + totals[4] → (pr, queue).
     fn reprioritize(&mut self, jobs: &[f32], totals: &[f32; 4])
@@ -41,6 +59,16 @@ impl CostEngine for RustEngine {
     fn schedule_step(&mut self, inputs: &CostInputs, weights: &Weights)
         -> Result<ScheduleOut> {
         Ok(schedule_step_rust(inputs, weights))
+    }
+
+    fn schedule_step_into(
+        &mut self,
+        inputs: &CostInputs,
+        weights: &Weights,
+        out: &mut ScheduleOut,
+    ) -> Result<()> {
+        schedule_step_into(inputs, weights, out);
+        Ok(())
     }
 
     fn reprioritize(&mut self, jobs: &[f32], totals: &[f32; 4])
@@ -99,6 +127,37 @@ mod tests {
         let (pr, q) = e.reprioritize(&jobs, &[1.0, 1000.0, 1.0, 0.0]).unwrap();
         assert_eq!(pr.len(), 1);
         assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn default_schedule_step_into_matches_override() {
+        // A backend that only implements the allocating entry point must
+        // produce the same rounds through the default `_into` shim.
+        struct Legacy;
+        impl CostEngine for Legacy {
+            fn schedule_step(&mut self, i: &CostInputs, w: &Weights)
+                -> Result<ScheduleOut> {
+                Ok(schedule_step_rust(i, w))
+            }
+            fn reprioritize(&mut self, j: &[f32], t: &[f32; 4])
+                -> Result<(Vec<f32>, Vec<i32>)> {
+                Ok(reprioritize_rust(j, t))
+            }
+            fn name(&self) -> &'static str {
+                "legacy"
+            }
+        }
+        let mut inp = CostInputs::new(3, 4);
+        for (i, v) in inp.site_feats.iter_mut().enumerate() {
+            *v = (i % 7) as f32;
+        }
+        let w = Weights { q_total: 9.0, ..Weights::default() };
+        let mut a = ScheduleOut::default();
+        let mut b = ScheduleOut::default();
+        Legacy.schedule_step_into(&inp, &w, &mut a).unwrap();
+        RustEngine::new().schedule_step_into(&inp, &w, &mut b).unwrap();
+        assert_eq!(a.total, b.total);
+        assert_eq!(a.best_total, b.best_total);
     }
 
     #[test]

@@ -3,9 +3,12 @@
 
 pub mod engine;
 pub mod model;
+pub mod workspace;
 
 pub use engine::{reprioritize_rust, CostEngine, RustEngine};
 pub use model::{
-    schedule_step_rust, sort_sites_by_cost, CostInputs, ScheduleOut, Weights,
-    BIG, EPS, JOB_FEATS, N_WEIGHTS, SITE_FEATS,
+    schedule_step_into, schedule_step_rust, sort_sites_by_cost,
+    sort_sites_by_cost_into, top_k_sites_by_cost, CostInputs, ScheduleOut,
+    Weights, BIG, EPS, JOB_FEATS, N_WEIGHTS, SITE_FEATS,
 };
+pub use workspace::CostWorkspace;

@@ -129,6 +129,23 @@ impl CostInputs {
         }
     }
 
+    /// Reshape in place for a new round **without shedding capacity** —
+    /// the [`CostWorkspace`](crate::cost::CostWorkspace) steady-state
+    /// entry point. Newly exposed cells get the [`CostInputs::new`]
+    /// defaults; cells that survive a shrink/regrow keep stale values,
+    /// so builders (e.g.
+    /// [`build_cost_inputs_into`](crate::scheduler::build_cost_inputs_into))
+    /// must overwrite every cell the kernel reads — they do, and the
+    /// equivalence suite asserts it.
+    pub fn resize(&mut self, n_jobs: usize, n_sites: usize) {
+        self.n_jobs = n_jobs;
+        self.n_sites = n_sites;
+        self.job_feats.resize(n_jobs * JOB_FEATS, 0.0);
+        self.site_feats.resize(n_sites * SITE_FEATS, 0.0);
+        self.link_bw.resize(n_jobs * n_sites, 1.0);
+        self.link_loss.resize(n_jobs * n_sites, 0.0);
+    }
+
     /// Mutable view of job `j`'s feature row (length [`JOB_FEATS`]).
     #[inline]
     pub fn job_row_mut(&mut self, j: usize) -> &mut [f32] {
@@ -167,36 +184,51 @@ impl ScheduleOut {
     pub fn total_at(&self, j: usize, s: usize) -> f32 {
         self.total[j * self.n_sites + s]
     }
+
+    /// Reshape in place without shedding capacity (see
+    /// [`CostInputs::resize`]); [`schedule_step_into`] overwrites every
+    /// cell, so stale values never escape.
+    pub fn resize(&mut self, n_jobs: usize, n_sites: usize) {
+        self.n_jobs = n_jobs;
+        self.n_sites = n_sites;
+        self.total.resize(n_jobs * n_sites, 0.0);
+        self.best_total.resize(n_jobs, 0);
+        self.best_compute.resize(n_jobs, 0);
+        self.best_data.resize(n_jobs, 0);
+        self.comp.resize(n_sites, 0.0);
+        self.dtc.resize(n_jobs * n_sites, 0.0);
+        self.net.resize(n_jobs * n_sites, 0.0);
+    }
 }
 
 /// Pure-rust evaluation of the full §V matchmaking round.
 /// Mirrors `model.schedule_step` (kernel + class keys) op-for-op in f32.
+///
+/// Allocating convenience over [`schedule_step_into`]; the steady-state
+/// matchmaking path reuses a [`ScheduleOut`] via the `_into` variant
+/// instead.
 pub fn schedule_step_rust(inp: &CostInputs, w: &Weights) -> ScheduleOut {
+    let mut out = ScheduleOut::default();
+    schedule_step_into(inp, w, &mut out);
+    out
+}
+
+/// [`schedule_step_rust`] writing into a caller-owned [`ScheduleOut`]:
+/// zero heap allocation once `out` has grown to the round's (J, S)
+/// shape. The per-site `client`/`dead` helper terms are recomputed
+/// inline per (j, s) pair instead of being staged in scratch vectors —
+/// the same f32 expressions in the same order, so results stay
+/// bit-identical to the allocating path (asserted in tests).
+pub fn schedule_step_into(inp: &CostInputs, w: &Weights, out: &mut ScheduleOut) {
     let (nj, ns) = (inp.n_jobs, inp.n_sites);
-    let mut out = ScheduleOut {
-        n_jobs: nj,
-        n_sites: ns,
-        total: vec![0.0; nj * ns],
-        best_total: vec![0; nj],
-        best_compute: vec![0; nj],
-        best_data: vec![0; nj],
-        comp: vec![0.0; ns],
-        dtc: vec![0.0; nj * ns],
-        net: vec![0.0; nj * ns],
-    };
+    out.resize(nj, ns);
 
     // comp[s] = (Qi/Pi)·w5 + (Q/Pi)·w6 + load·w7  — site-only term.
-    let mut client = vec![0.0f32; ns];
-    let mut dead = vec![0.0f32; ns];
     for s in 0..ns {
         let row = &inp.site_feats[s * SITE_FEATS..(s + 1) * SITE_FEATS];
         let (qi, pi_raw, load) = (row[0], row[1], row[2]);
-        let (cbw_raw, closs, alive) = (row[3], row[4], row[5]);
         let pi = pi_raw.max(w.eps);
-        let cbw = cbw_raw.max(w.eps);
         out.comp[s] = (qi / pi) * w.w5 + (w.q_total / pi) * w.w6 + load * w.w7;
-        client[s] = (1.0 + closs) / cbw;
-        dead[s] = (1.0 - alive) * w.big;
     }
 
     for j in 0..nj {
@@ -207,17 +239,21 @@ pub fn schedule_step_rust(inp: &CostInputs, w: &Weights) -> ScheduleOut {
         let (mut mt, mut mc, mut md) =
             (f32::INFINITY, f32::INFINITY, f32::INFINITY);
         for s in 0..ns {
+            let srow = &inp.site_feats[s * SITE_FEATS..(s + 1) * SITE_FEATS];
+            let (cbw_raw, closs, alive) = (srow[3], srow[4], srow[5]);
+            let client = (1.0 + closs) / cbw_raw.max(w.eps);
+            let dead = (1.0 - alive) * w.big;
             let bw = inp.link_bw[base + s].max(w.eps);
             let loss = inp.link_loss[base + s];
             let net = loss / bw;
-            let dtc = (in_mb / bw) * (1.0 + loss) + (out_mb + exe_mb) * client[s];
-            let total = w.w_net * net + out.comp[s] + w.w_dtc * dtc + dead[s];
+            let dtc = (in_mb / bw) * (1.0 + loss) + (out_mb + exe_mb) * client;
+            let total = w.w_net * net + out.comp[s] + w.w_dtc * dtc + dead;
             out.net[base + s] = net;
             out.dtc[base + s] = dtc;
             out.total[base + s] = total;
             // §V class-specific sort keys (same dead-site masking as L2).
-            let ckey = out.comp[s] + w.w_net * net + dead[s];
-            let dkey = w.w_dtc * dtc + w.w_net * net + dead[s];
+            let ckey = out.comp[s] + w.w_net * net + dead;
+            let dkey = w.w_dtc * dtc + w.w_net * net + dead;
             if total < mt {
                 mt = total;
                 bt = s;
@@ -235,18 +271,57 @@ pub fn schedule_step_rust(inp: &CostInputs, w: &Weights) -> ScheduleOut {
         out.best_compute[j] = bc as i32;
         out.best_data[j] = bd as i32;
     }
-    out
 }
 
 /// Rank all sites for one job by a cost row, ascending — the §V
 /// "SortSites" step (the scheduler walks this order looking for an alive
-/// site with room).
+/// site with room). Allocating convenience over
+/// [`sort_sites_by_cost_into`].
 pub fn sort_sites_by_cost(cost_row: &[f32]) -> Vec<usize> {
-    let mut idx: Vec<usize> = (0..cost_row.len()).collect();
-    idx.sort_by(|&a, &b| {
-        cost_row[a].partial_cmp(&cost_row[b]).unwrap_or(std::cmp::Ordering::Equal)
-    });
+    let mut idx = Vec::new();
+    sort_sites_by_cost_into(cost_row, &mut idx);
     idx
+}
+
+/// [`sort_sites_by_cost`] into a caller-owned index buffer (cleared
+/// first). Ordering is `f32::total_cmp` — NaN rows sort after `+∞`
+/// deterministically instead of depending on their position (the old
+/// `partial_cmp(..).unwrap_or(Equal)` made NaN costs order-unstable);
+/// equal costs keep ascending site order (stable sort).
+pub fn sort_sites_by_cost_into(cost_row: &[f32], out: &mut Vec<usize>) {
+    out.clear();
+    out.extend(0..cost_row.len());
+    out.sort_by(|&a, &b| cost_row[a].total_cmp(&cost_row[b]));
+}
+
+/// Top-k selection on a cost row: the `k` cheapest **finite** entries in
+/// ascending `(cost, site)` order, written into `out` (cleared first).
+/// Exactly the first `k` finite entries of the full stable sort — for
+/// consumers that only walk the best few candidates (§VIII subgroup
+/// spreading, §IX migration targets, federation delegation) this does
+/// O(S·k) work with no allocation instead of an O(S log S) full sort.
+pub fn top_k_sites_by_cost(costs: &[f64], k: usize, out: &mut Vec<usize>) {
+    out.clear();
+    if k == 0 {
+        return;
+    }
+    for (s, &c) in costs.iter().enumerate() {
+        if !c.is_finite() {
+            continue;
+        }
+        // Position of (c, s) in the kept prefix; ties keep site order,
+        // matching a stable ascending sort on cost.
+        let pos = out
+            .iter()
+            .position(|&t| c.total_cmp(&costs[t]).is_lt())
+            .unwrap_or(out.len());
+        if pos < k {
+            if out.len() == k {
+                out.pop();
+            }
+            out.insert(pos, s);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -313,6 +388,97 @@ mod tests {
     fn sort_sites_ascending() {
         let order = sort_sites_by_cost(&[3.0, 1.0, 2.0]);
         assert_eq!(order, vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn sort_sites_nan_and_infinity_are_order_stable() {
+        // NaN must sort after +∞ (total_cmp), never shuffle finite rows.
+        let row = [f32::NAN, 1.0, f32::INFINITY, 0.5, f32::NAN];
+        let order = sort_sites_by_cost(&row);
+        assert_eq!(order, vec![3, 1, 2, 0, 4]);
+        // Same answer on every call — the old unwrap_or(Equal) comparator
+        // made this dependent on the sort's encounter order.
+        for _ in 0..10 {
+            assert_eq!(sort_sites_by_cost(&row), order);
+        }
+    }
+
+    #[test]
+    fn sort_into_reuses_buffer() {
+        let mut buf = Vec::new();
+        sort_sites_by_cost_into(&[2.0, 1.0], &mut buf);
+        assert_eq!(buf, vec![1, 0]);
+        let cap = buf.capacity();
+        sort_sites_by_cost_into(&[0.5, 3.0], &mut buf);
+        assert_eq!(buf, vec![0, 1]);
+        assert_eq!(buf.capacity(), cap);
+    }
+
+    #[test]
+    fn top_k_matches_full_sort_prefix() {
+        let costs = [5.0, 1.0, f64::INFINITY, 1.0, 0.5, f64::NAN, 2.0];
+        let mut finite: Vec<usize> = (0..costs.len())
+            .filter(|&s| costs[s].is_finite())
+            .collect();
+        finite.sort_by(|&a, &b| costs[a].total_cmp(&costs[b]));
+        let mut out = Vec::new();
+        for k in 0..=costs.len() {
+            top_k_sites_by_cost(&costs, k, &mut out);
+            assert_eq!(out, finite[..k.min(finite.len())].to_vec(), "k={k}");
+        }
+        // Ties (sites 1 and 3 both cost 1.0) keep ascending site order.
+        top_k_sites_by_cost(&costs, 3, &mut out);
+        assert_eq!(out, vec![4, 1, 3]);
+    }
+
+    #[test]
+    fn schedule_step_into_matches_allocating_path() {
+        let (inp, w) = tiny_inputs();
+        let base = schedule_step_rust(&inp, &w);
+        let mut out = ScheduleOut::default();
+        // Pre-dirty the buffer with a different shape + garbage values:
+        // the into-path must fully overwrite.
+        schedule_step_into(&CostInputs::new(5, 7), &w, &mut out);
+        for v in out.total.iter_mut() {
+            *v = f32::NAN;
+        }
+        schedule_step_into(&inp, &w, &mut out);
+        assert_eq!(out.total, base.total);
+        assert_eq!(out.net, base.net);
+        assert_eq!(out.dtc, base.dtc);
+        assert_eq!(out.comp, base.comp);
+        assert_eq!(out.best_total, base.best_total);
+        assert_eq!(out.best_compute, base.best_compute);
+        assert_eq!(out.best_data, base.best_data);
+    }
+
+    #[test]
+    fn resize_keeps_capacity_across_rounds() {
+        let mut inp = CostInputs::new(64, 32);
+        let mut out = ScheduleOut::default();
+        schedule_step_into(&inp, &Weights::default(), &mut out);
+        let caps = (
+            inp.job_feats.capacity(),
+            inp.link_bw.capacity(),
+            out.total.capacity(),
+            out.comp.capacity(),
+        );
+        for nj in [1usize, 17, 64, 3] {
+            inp.resize(nj, 32);
+            schedule_step_into(&inp, &Weights::default(), &mut out);
+            assert_eq!(out.n_jobs, nj);
+            assert_eq!(out.total.len(), nj * 32);
+        }
+        assert_eq!(
+            caps,
+            (
+                inp.job_feats.capacity(),
+                inp.link_bw.capacity(),
+                out.total.capacity(),
+                out.comp.capacity(),
+            ),
+            "steady-state rounds must not reallocate"
+        );
     }
 
     #[test]

@@ -1,0 +1,77 @@
+//! `CostWorkspace` — the reusable buffer set behind an allocation-free
+//! §V matchmaking round.
+//!
+//! Every hot caller of the cost engine (the DIANA picker, the `World`'s
+//! batched migration sweep, the `diana serve` front end) owns one
+//! workspace and threads it through
+//! [`CostEngine::schedule_step_into`](crate::cost::CostEngine::schedule_step_into):
+//! the input matrices, the output tuple and the sort/cost scratch
+//! vectors are resized in place and never shed capacity, so after the
+//! first round at a given (J, S) shape the steady-state path performs
+//! zero heap allocation (asserted by capacity-stability tests here and
+//! in `scheduler::diana`).
+
+use super::model::{CostInputs, ScheduleOut};
+
+/// Reusable buffers for one evaluation site (picker, migration sweep or
+/// serve loop). Not shared across threads — like the engines themselves,
+/// each thread owns its workspace.
+#[derive(Default)]
+pub struct CostWorkspace {
+    /// Kernel input matrices, reshaped per round via [`CostInputs::resize`].
+    pub inputs: CostInputs,
+    /// Kernel outputs, reshaped per round via [`ScheduleOut::resize`].
+    pub out: ScheduleOut,
+    /// Site-index scratch for §V SortSites / top-k selection.
+    pub order: Vec<usize>,
+    /// Class-matched per-site cost row scratch (f32, kernel units).
+    pub row: Vec<f32>,
+    /// Per-site cost scratch in `SitePicker::site_costs` units (f64,
+    /// dead sites `+∞`).
+    pub costs: Vec<f64>,
+}
+
+impl CostWorkspace {
+    pub fn new() -> CostWorkspace {
+        CostWorkspace::default()
+    }
+
+    /// Capacities of every owned buffer — the probe the
+    /// capacity-stability tests compare across rounds to prove the
+    /// steady state allocates nothing.
+    pub fn capacities(&self) -> [usize; 9] {
+        [
+            self.inputs.job_feats.capacity(),
+            self.inputs.site_feats.capacity(),
+            self.inputs.link_bw.capacity(),
+            self.inputs.link_loss.capacity(),
+            self.out.total.capacity(),
+            self.out.comp.capacity(),
+            self.order.capacity(),
+            self.row.capacity(),
+            self.costs.capacity(),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::{schedule_step_into, Weights};
+
+    #[test]
+    fn capacities_stabilise_after_first_round() {
+        let mut ws = CostWorkspace::new();
+        ws.inputs.resize(16, 8);
+        schedule_step_into(&ws.inputs, &Weights::default(), &mut ws.out);
+        ws.order.extend(0..8);
+        ws.row.resize(8, 0.0);
+        ws.costs.resize(8, 0.0);
+        let caps = ws.capacities();
+        for nj in [1usize, 9, 16] {
+            ws.inputs.resize(nj, 8);
+            schedule_step_into(&ws.inputs, &Weights::default(), &mut ws.out);
+        }
+        assert_eq!(ws.capacities(), caps);
+    }
+}

@@ -5,4 +5,5 @@ pub mod catalog;
 pub mod placement;
 
 pub use catalog::{Catalog, Dataset, DatasetId};
-pub use placement::{best_replica, replica_rows};
+pub use placement::{best_replica, fill_replica_rows, replica_rows,
+                    ReplicaCache};

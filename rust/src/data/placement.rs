@@ -38,24 +38,105 @@ pub fn replica_rows(
     ds: Option<DatasetId>,
     n_sites: usize,
 ) -> (Vec<f64>, Vec<f64>) {
-    let mut bw = vec![0.0; n_sites];
-    let mut loss = vec![0.0; n_sites];
-    for s in 0..n_sites {
+    let mut bw = vec![0.0f32; n_sites];
+    let mut loss = vec![0.0f32; n_sites];
+    fill_replica_rows(cat, monitor, ds, &mut bw, &mut loss);
+    (
+        bw.into_iter().map(f64::from).collect(),
+        loss.into_iter().map(f64::from).collect(),
+    )
+}
+
+/// [`replica_rows`] written straight into kernel-layout `f32` rows —
+/// the allocation-free path `build_cost_inputs_into` and the
+/// [`ReplicaCache`] share. The values are computed in f64 and narrowed
+/// exactly like the allocating path, so cached and from-scratch rounds
+/// stay bit-identical.
+pub fn fill_replica_rows(
+    cat: &Catalog,
+    monitor: &PingerMonitor,
+    ds: Option<DatasetId>,
+    bw_row: &mut [f32],
+    loss_row: &mut [f32],
+) {
+    debug_assert_eq!(bw_row.len(), loss_row.len());
+    for s in 0..bw_row.len() {
         match ds {
             Some(d) => {
                 let (_, b, l) = best_replica(cat, monitor, d, s);
-                bw[s] = b;
-                loss[s] = l;
+                bw_row[s] = b as f32;
+                loss_row[s] = l as f32;
             }
             None => {
                 // No input data: transfers are free — model as a perfect
                 // local path so the DTC input term vanishes.
-                bw[s] = 1e9;
-                loss[s] = 0.0;
+                bw_row[s] = 1e9;
+                loss_row[s] = 0.0;
             }
         }
     }
-    (bw, loss)
+}
+
+/// Per-dataset (bw, loss) rows cached against a **belief epoch**.
+///
+/// The rows depend only on the monitor's link beliefs and the dataset's
+/// replica set — not on the scheduling view — so they stay valid until
+/// either changes. Owners (the `World`, each `DianaScheduler`) bump the
+/// epoch whenever beliefs may have moved: a monitor sweep, a topology
+/// mutation (`set_link`/`degrade_link`/heal faults) or a catalog write.
+/// A lookup whose cached epoch differs recomputes in place, reusing the
+/// row buffers; matching epochs return the cached rows without touching
+/// the monitor at all — this is what stops `build_cost_inputs` from
+/// re-observing every (job, site) pair every round.
+#[derive(Default)]
+pub struct ReplicaCache {
+    rows: std::collections::BTreeMap<DatasetId, CachedRows>,
+}
+
+struct CachedRows {
+    epoch: u64,
+    bw: Vec<f32>,
+    loss: Vec<f32>,
+}
+
+impl ReplicaCache {
+    pub fn new() -> ReplicaCache {
+        ReplicaCache::default()
+    }
+
+    /// The (bw, loss) rows of `ds` at `epoch`, recomputing on epoch or
+    /// shape mismatch.
+    pub fn rows(
+        &mut self,
+        cat: &Catalog,
+        monitor: &PingerMonitor,
+        ds: DatasetId,
+        n_sites: usize,
+        epoch: u64,
+    ) -> (&[f32], &[f32]) {
+        let entry = self.rows.entry(ds).or_insert_with(|| CachedRows {
+            epoch: epoch.wrapping_add(1), // force the first fill
+            bw: Vec::new(),
+            loss: Vec::new(),
+        });
+        if entry.epoch != epoch || entry.bw.len() != n_sites {
+            entry.bw.resize(n_sites, 0.0);
+            entry.loss.resize(n_sites, 0.0);
+            fill_replica_rows(cat, monitor, Some(ds), &mut entry.bw,
+                              &mut entry.loss);
+            entry.epoch = epoch;
+        }
+        (&entry.bw, &entry.loss)
+    }
+
+    /// Cached datasets (test/introspection hook).
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
 }
 
 #[cfg(test)]
@@ -93,6 +174,55 @@ mod tests {
         // Site 1 sees its local replica: fastest row entry.
         assert!(bw[1] > bw[0] && bw[1] > bw[2]);
         assert!(loss[1] <= loss[0]);
+    }
+
+    #[test]
+    fn cache_hits_skip_the_monitor_and_misses_refresh() {
+        let cfg = presets::uniform_grid(4, 4);
+        let topo = Topology::from_config(&cfg);
+        let mut monitor = PingerMonitor::new(&topo, 0.0, 9);
+        let mut cat = Catalog::new();
+        let id = cat.add("d", 10.0, vec![1]);
+        let mut cache = ReplicaCache::new();
+        let (fresh_bw, fresh_loss) = replica_rows(&cat, &monitor, Some(id), 4);
+        {
+            let (bw, loss) = cache.rows(&cat, &monitor, id, 4, 0);
+            assert_eq!(bw.len(), 4);
+            for s in 0..4 {
+                assert_eq!(bw[s], fresh_bw[s] as f32);
+                assert_eq!(loss[s], fresh_loss[s] as f32);
+            }
+        }
+        // Same epoch → same rows (bit-for-bit), no recompute needed.
+        let before: Vec<f32> = cache.rows(&cat, &monitor, id, 4, 0).0.to_vec();
+        // Beliefs move (replica added + sweep) behind a bumped epoch.
+        cat.add_replica(id, 3);
+        monitor.sweep(&topo);
+        let stale: Vec<f32> = cache.rows(&cat, &monitor, id, 4, 0).0.to_vec();
+        assert_eq!(stale, before, "same epoch must not re-observe");
+        let fresh: Vec<f32> = cache.rows(&cat, &monitor, id, 4, 1).0.to_vec();
+        // Site 3 now has a local replica: its bandwidth row jumps.
+        assert!(fresh[3] > stale[3]);
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn fill_matches_allocating_rows() {
+        let cfg = presets::uniform_grid(3, 4);
+        let topo = Topology::from_config(&cfg);
+        let monitor = PingerMonitor::new(&topo, 0.0, 2);
+        let mut cat = Catalog::new();
+        let id = cat.add("d", 10.0, vec![1]);
+        for ds in [Some(id), None] {
+            let (bw64, loss64) = replica_rows(&cat, &monitor, ds, 3);
+            let mut bw = [0.0f32; 3];
+            let mut loss = [0.0f32; 3];
+            fill_replica_rows(&cat, &monitor, ds, &mut bw, &mut loss);
+            for s in 0..3 {
+                assert_eq!(bw[s], bw64[s] as f32);
+                assert_eq!(loss[s], loss64[s] as f32);
+            }
+        }
     }
 
     #[test]

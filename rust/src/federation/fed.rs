@@ -129,13 +129,27 @@ impl Federation {
     /// unchanged.
     pub fn placement_view(&self, peer: usize, fresh: &[SiteSnapshot])
         -> Vec<SiteSnapshot> {
-        let mut out = fresh.to_vec();
+        let mut out = Vec::new();
+        self.placement_view_into(peer, fresh, &mut out);
+        out
+    }
+
+    /// [`Federation::placement_view`] into a caller-owned buffer
+    /// (cleared first) — the DES reuses one scratch vector across
+    /// scheduling events instead of allocating a masked copy per batch.
+    pub fn placement_view_into(
+        &self,
+        peer: usize,
+        fresh: &[SiteSnapshot],
+        out: &mut Vec<SiteSnapshot>,
+    ) {
+        out.clear();
+        out.extend_from_slice(fresh);
         for (s, snap) in out.iter_mut().enumerate() {
             if self.partition.peer_of(s) != peer {
                 snap.alive = false;
             }
         }
-        out
     }
 
     /// The delegation view: own sites fresh; each *adjacent, currently
@@ -147,18 +161,31 @@ impl Federation {
     /// run free of extra picker calls.
     pub fn delegation_view(&self, peer: usize, fresh: &[SiteSnapshot])
         -> Option<Vec<SiteSnapshot>> {
+        let mut out = Vec::new();
+        self.delegation_view_into(peer, fresh, &mut out)
+            .then_some(out)
+    }
+
+    /// [`Federation::delegation_view`] into a caller-owned buffer
+    /// (cleared first). Returns whether any remote site is visible —
+    /// `false` means the caller must skip the delegation check (the
+    /// buffer still holds the masked view, but it offers nothing the
+    /// placement view doesn't).
+    pub fn delegation_view_into(
+        &self,
+        peer: usize,
+        fresh: &[SiteSnapshot],
+        out: &mut Vec<SiteSnapshot>,
+    ) -> bool {
         let mut any_remote = false;
-        let mut out: Vec<SiteSnapshot> = fresh
-            .iter()
-            .enumerate()
-            .map(|(s, snap)| {
-                let mut sn = *snap;
-                if self.partition.peer_of(s) != peer {
-                    sn.alive = false;
-                }
-                sn
-            })
-            .collect();
+        out.clear();
+        out.extend(fresh.iter().enumerate().map(|(s, snap)| {
+            let mut sn = *snap;
+            if self.partition.peer_of(s) != peer {
+                sn.alive = false;
+            }
+            sn
+        }));
         for &q in &self.neighbors[peer] {
             if !self.alive[q] {
                 continue;
@@ -170,7 +197,7 @@ impl Federation {
                 }
             }
         }
-        any_remote.then_some(out)
+        any_remote
     }
 
     /// One gossip round at time `now`: every alive peer sends the

@@ -45,6 +45,7 @@ fn analytic_makespan(division: usize) -> Result<(Vec<usize>, f64)> {
         monitor: &monitor,
         catalog: &catalog,
         q_total: 10_000, // the bulk being scheduled is the queue pressure
+        epoch: 0,
     };
     let mut gen = crate::workload::WorkloadGen::new(4);
     let mut sub = gen.bulk(&cfg, &catalog, crate::job::UserId(0), 0, 0.0, 10_000);

@@ -36,6 +36,12 @@ pub struct RunResult {
     pub groups_whole: u64,
     pub groups_split: u64,
     pub events: u64,
+    /// Wall-clock seconds this run took on its worker. **Not** written
+    /// to the CSV/JSON outputs (those must stay byte-identical across
+    /// thread counts and machines); it only feeds the events/s column of
+    /// the terminal aggregate table, the scheduler-throughput trend the
+    /// matchmaker bench tracks end-to-end.
+    pub wall_s: f64,
 }
 
 impl RunResult {
@@ -76,6 +82,21 @@ pub struct AggregateRow {
     pub migrations: u64,
     pub delegations: u64,
     pub events: u64,
+    /// Total wall-clock seconds across the point's runs (terminal table
+    /// only — see [`RunResult::wall_s`]).
+    pub wall_s: f64,
+}
+
+impl AggregateRow {
+    /// DES events processed per wall-clock second across the point's
+    /// runs — the sweep-level scheduler-throughput counter.
+    pub fn events_per_s(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.events as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
 }
 
 /// The full sweep report.
@@ -131,6 +152,7 @@ impl SweepReport {
                     migrations: rs.iter().map(|r| r.migrations).sum(),
                     delegations: rs.iter().map(|r| r.delegations).sum(),
                     events: rs.iter().map(|r| r.events).sum(),
+                    wall_s: rs.iter().map(|r| r.wall_s).sum(),
                 }
             })
             .collect();
@@ -317,12 +339,17 @@ impl SweepReport {
                     a.migrations.to_string(),
                     a.delegations.to_string(),
                     a.events.to_string(),
+                    if a.wall_s > 0.0 {
+                        format!("{:.0}", a.events_per_s())
+                    } else {
+                        "-".into()
+                    },
                 ]
             })
             .collect();
         render_table(
             &["point", "runs", "makespan", "queue", "q-p95", "turnaround",
-              "migr", "deleg", "events"],
+              "migr", "deleg", "events", "events/s"],
             &rows,
         )
     }
@@ -450,6 +477,7 @@ mod tests {
             groups_whole: 1,
             groups_split: 0,
             events: 50,
+            wall_s: 0.5,
         }
     }
 
@@ -479,6 +507,14 @@ mod tests {
         assert_eq!(a.makespan.mean, 105.0);
         assert_eq!(rep.aggregates[1].runs, 1);
         assert_eq!(rep.total_migrations(), 9);
+        // events/s: 100 events over 1.0 wall-seconds for the first point.
+        assert_eq!(a.wall_s, 1.0);
+        assert_eq!(a.events_per_s(), 100.0);
+        // Wall time is terminal-table-only: never serialized.
+        assert!(!rep.runs_csv().contains("wall"));
+        assert!(!rep.aggregate_csv().contains("wall"));
+        assert!(!rep.to_json().contains("wall"));
+        assert!(rep.aggregate_table().contains("events/s"));
     }
 
     #[test]

@@ -21,8 +21,10 @@ use super::spec::{RunSpec, SweepSpec};
 /// fault plan (assembly and reporting go through `coordinator::leader`,
 /// the same path every example and repro figure uses).
 pub fn run_one(run: &RunSpec, faults: &FaultPlan) -> Result<RunResult> {
+    let t0 = std::time::Instant::now();
     let subs = generate_workload(&run.cfg);
     let (_world, report) = run_simulation_with_faults(&run.cfg, subs, faults)?;
+    let wall_s = t0.elapsed().as_secs_f64();
     Ok(RunResult {
         index: run.index,
         seed: run.seed,
@@ -40,6 +42,7 @@ pub fn run_one(run: &RunSpec, faults: &FaultPlan) -> Result<RunResult> {
         groups_whole: report.groups_whole,
         groups_split: report.groups_split,
         events: report.events,
+        wall_s,
     })
 }
 

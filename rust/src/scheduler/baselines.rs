@@ -230,6 +230,7 @@ mod tests {
             monitor: &f.monitor,
             catalog: &f.catalog,
             q_total: 17,
+            epoch: 0,
         };
         assert_eq!(FcfsBroker.pick(&[job(None)], &view).unwrap(), vec![1]);
         let order = FcfsBroker.rank_sites(&job(None), &view).unwrap();
@@ -246,6 +247,7 @@ mod tests {
             monitor: &f.monitor,
             catalog: &f.catalog,
             q_total: 0,
+            epoch: 0,
         };
         assert_eq!(Greedy.pick(&[job(None)], &view).unwrap(), vec![1]);
     }
@@ -260,6 +262,7 @@ mod tests {
             monitor: &f.monitor,
             catalog: &f.catalog,
             q_total: 99,
+            epoch: 0,
         };
         let ds = f.catalog.lookup("d");
         // Even with a huge queue at site 2, data-local goes there.
@@ -278,6 +281,7 @@ mod tests {
             monitor: &f.monitor,
             catalog: &f.catalog,
             q_total: 8,
+            epoch: 0,
         };
         assert_ne!(FcfsBroker.pick(&[job(None)], &view).unwrap()[0], 0);
         assert_ne!(Greedy.pick(&[job(None)], &view).unwrap()[0], 0);
@@ -297,6 +301,7 @@ mod tests {
             monitor: &f.monitor,
             catalog: &f.catalog,
             q_total: 0,
+            epoch: 0,
         };
         let jobs: Vec<Job> = (0..10).map(|_| job(None)).collect();
         let a = RandomPick::new(9).pick(&jobs, &view).unwrap();

@@ -8,19 +8,38 @@
 
 use crate::util::error::Result;
 
-use crate::cost::{sort_sites_by_cost, CostEngine, CostInputs, ScheduleOut,
-                  Weights};
-use crate::data::replica_rows;
+use crate::cost::{sort_sites_by_cost_into, CostEngine, CostInputs,
+                  CostWorkspace, ScheduleOut, Weights};
+use crate::data::ReplicaCache;
 use crate::job::{Job, JobClass};
 
 use super::traits::{GridView, Placement, SitePicker};
 
 /// Build the §IV kernel input matrices for a batch of jobs (shared
-/// submitting client). Free function so the migration checker and the
-/// runtime cross-check suite can build inputs without a scheduler.
+/// submitting client). Allocating convenience over
+/// [`build_cost_inputs_into`] for one-off callers (the runtime
+/// cross-check suite, tests); hot paths reuse a
+/// [`CostWorkspace`](crate::cost::CostWorkspace) instead.
 pub fn build_cost_inputs(jobs: &[Job], view: &GridView<'_>) -> CostInputs {
+    let mut inp = CostInputs::default();
+    let mut replicas = ReplicaCache::new();
+    build_cost_inputs_into(jobs, view, &mut inp, &mut replicas);
+    inp
+}
+
+/// [`build_cost_inputs`] into a caller-owned [`CostInputs`] (reshaped in
+/// place, capacity preserved) with per-dataset replica rows served from
+/// `replicas` — on a cache hit at `view.epoch` the monitor is not
+/// observed per (job, site) pair at all. Every cell the kernel reads is
+/// overwritten, so buffer reuse never leaks stale state.
+pub fn build_cost_inputs_into(
+    jobs: &[Job],
+    view: &GridView<'_>,
+    inp: &mut CostInputs,
+    replicas: &mut ReplicaCache,
+) {
     let ns = view.n_sites();
-    let mut inp = CostInputs::new(jobs.len(), ns);
+    inp.resize(jobs.len(), ns);
     for (s, snap) in view.sites.iter().enumerate() {
         let row = inp.site_row_mut(s);
         row[0] = snap.queue_len as f32;
@@ -45,19 +64,32 @@ pub fn build_cost_inputs(jobs: &[Job], view: &GridView<'_>) -> CostInputs {
         row[2] = job.exe_mb as f32;
         row[3] = job.cpu_sec as f32;
         row[4] = job.class.as_f32();
-        let (bw, loss) =
-            replica_rows(view.catalog, view.monitor, job.input, ns);
-        for s in 0..ns {
-            inp.link_bw[j * ns + s] = bw[s] as f32;
-            inp.link_loss[j * ns + s] = loss[s] as f32;
+        let dst = j * ns..(j + 1) * ns;
+        match job.input {
+            Some(ds) => {
+                let (bw, loss) = replicas.rows(
+                    view.catalog, view.monitor, ds, ns, view.epoch,
+                );
+                inp.link_bw[dst.clone()].copy_from_slice(bw);
+                inp.link_loss[dst].copy_from_slice(loss);
+            }
+            None => {
+                // No input data (see `fill_replica_rows`): free path.
+                inp.link_bw[dst.clone()].fill(1e9);
+                inp.link_loss[dst].fill(0.0);
+            }
         }
     }
-    inp
 }
 
 pub struct DianaScheduler {
     engine: Box<dyn CostEngine>,
     cfg: crate::config::SchedulerConfig,
+    /// Reused input/output/scratch buffers — one allocation-free §V
+    /// round per call once warm.
+    ws: CostWorkspace,
+    /// Per-dataset replica rows cached against `GridView::epoch`.
+    replicas: ReplicaCache,
 }
 
 impl DianaScheduler {
@@ -65,7 +97,12 @@ impl DianaScheduler {
         engine: Box<dyn CostEngine>,
         cfg: crate::config::SchedulerConfig,
     ) -> DianaScheduler {
-        DianaScheduler { engine, cfg }
+        DianaScheduler {
+            engine,
+            cfg,
+            ws: CostWorkspace::new(),
+            replicas: ReplicaCache::new(),
+        }
     }
 
     /// Build the kernel input matrices for a batch (shared submit site).
@@ -77,32 +114,56 @@ impl DianaScheduler {
         Weights::from_scheduler(&self.cfg, view.q_total as f32)
     }
 
+    /// Run one full matchmaking round into the internal workspace; the
+    /// results are readable via [`DianaScheduler::last_round`] until the
+    /// next evaluation. This is the allocation-free core every
+    /// `SitePicker` entry point shares.
+    pub fn evaluate_into(&mut self, jobs: &[Job], view: &GridView<'_>)
+        -> Result<()> {
+        let w = Weights::from_scheduler(&self.cfg, view.q_total as f32);
+        let DianaScheduler { engine, ws, replicas, .. } = self;
+        build_cost_inputs_into(jobs, view, &mut ws.inputs, replicas);
+        engine.schedule_step_into(&ws.inputs, &w, &mut ws.out)
+    }
+
     /// Run one full matchmaking round and return the raw cost outputs
-    /// (used by the bulk splitter, which needs the whole matrix).
+    /// (cloned out of the workspace — use [`DianaScheduler::evaluate_into`]
+    /// + [`DianaScheduler::last_round`] on hot paths).
     pub fn evaluate(&mut self, jobs: &[Job], view: &GridView<'_>)
         -> Result<ScheduleOut> {
-        let inp = self.build_inputs(jobs, view);
-        let w = self.weights(view);
-        self.engine.schedule_step(&inp, &w)
+        self.evaluate_into(jobs, view)?;
+        Ok(self.ws.out.clone())
+    }
+
+    /// The outputs of the most recent round (whatever shape it had).
+    pub fn last_round(&self) -> &ScheduleOut {
+        &self.ws.out
     }
 
     pub fn engine_mut(&mut self) -> &mut dyn CostEngine {
         self.engine.as_mut()
     }
 
-    /// Class-matched per-site cost row for one job (§V sort key).
-    fn cost_row(&mut self, job: &Job, view: &GridView<'_>) -> Result<Vec<f32>> {
-        let out = self.evaluate(std::slice::from_ref(job), view)?;
+    /// Workspace buffer capacities (capacity-stability assertions).
+    pub fn workspace_capacities(&self) -> [usize; 9] {
+        self.ws.capacities()
+    }
+
+    /// Class-matched per-site cost row for one job (§V sort key) into
+    /// `ws.row`.
+    fn fill_cost_row(&mut self, job: &Job, view: &GridView<'_>) -> Result<()> {
+        self.evaluate_into(std::slice::from_ref(job), view)?;
         let ns = view.n_sites();
-        let mut row = vec![0.0f32; ns];
+        let ws = &mut self.ws;
+        ws.row.resize(ns, 0.0);
         for s in 0..ns {
-            row[s] = match job.class {
-                JobClass::ComputeIntensive => out.comp[s] + out.net[s],
-                JobClass::DataIntensive => out.dtc[s] + out.net[s],
-                JobClass::Both => out.total_at(0, s),
+            ws.row[s] = match job.class {
+                JobClass::ComputeIntensive => ws.out.comp[s] + ws.out.net[s],
+                JobClass::DataIntensive => ws.out.dtc[s] + ws.out.net[s],
+                JobClass::Both => ws.out.total_at(0, s),
             };
         }
-        Ok(row)
+        Ok(())
     }
 
     /// §V per-class choice from an evaluated round.
@@ -121,31 +182,70 @@ impl DianaScheduler {
 impl SitePicker for DianaScheduler {
     fn pick(&mut self, jobs: &[Job], view: &GridView<'_>)
         -> Result<Vec<Placement>> {
+        let mut out = Vec::with_capacity(jobs.len());
+        self.pick_into(jobs, view, &mut out)?;
+        Ok(out)
+    }
+
+    fn pick_into(
+        &mut self,
+        jobs: &[Job],
+        view: &GridView<'_>,
+        out: &mut Vec<Placement>,
+    ) -> Result<()> {
+        out.clear();
         if jobs.is_empty() {
-            return Ok(Vec::new());
+            return Ok(());
         }
-        let out = self.evaluate(jobs, view)?;
-        Ok(Self::choose(&out, jobs))
+        self.evaluate_into(jobs, view)?;
+        let o = &self.ws.out;
+        out.extend(jobs.iter().enumerate().map(|(j, job)| match job.class {
+            JobClass::ComputeIntensive => o.best_compute[j] as usize,
+            JobClass::DataIntensive => o.best_data[j] as usize,
+            JobClass::Both => o.best_total[j] as usize,
+        }));
+        Ok(())
     }
 
     fn rank_sites(&mut self, job: &Job, view: &GridView<'_>)
         -> Result<Vec<usize>> {
-        let row = self.cost_row(job, view)?;
+        let mut out = Vec::new();
+        self.rank_sites_into(job, view, &mut out)?;
+        Ok(out)
+    }
+
+    fn rank_sites_into(
+        &mut self,
+        job: &Job,
+        view: &GridView<'_>,
+        out: &mut Vec<usize>,
+    ) -> Result<()> {
+        self.fill_cost_row(job, view)?;
         // §V SortSites on the class-matched cost row, alive sites only.
-        let order = sort_sites_by_cost(&row);
-        Ok(order.into_iter().filter(|&s| view.sites[s].alive).collect())
+        sort_sites_by_cost_into(&self.ws.row, out);
+        out.retain(|&s| view.sites[s].alive);
+        Ok(())
     }
 
     fn site_costs(&mut self, job: &Job, view: &GridView<'_>)
         -> Result<Vec<f64>> {
-        let row = self.cost_row(job, view)?;
-        Ok(row
-            .iter()
-            .enumerate()
-            .map(|(s, &c)| {
-                if view.sites[s].alive { c as f64 } else { f64::INFINITY }
-            })
-            .collect())
+        let mut out = Vec::new();
+        self.site_costs_into(job, view, &mut out)?;
+        Ok(out)
+    }
+
+    fn site_costs_into(
+        &mut self,
+        job: &Job,
+        view: &GridView<'_>,
+        out: &mut Vec<f64>,
+    ) -> Result<()> {
+        self.fill_cost_row(job, view)?;
+        out.clear();
+        out.extend(self.ws.row.iter().enumerate().map(|(s, &c)| {
+            if view.sites[s].alive { c as f64 } else { f64::INFINITY }
+        }));
+        Ok(())
     }
 
     fn name(&self) -> &'static str {
@@ -231,6 +331,7 @@ mod tests {
             monitor: &f.monitor,
             catalog: &f.catalog,
             q_total: 62,
+            epoch: 0,
         };
         let mut d = diana();
         let picks = d
@@ -248,6 +349,7 @@ mod tests {
             monitor: &f.monitor,
             catalog: &f.catalog,
             q_total: 62,
+            epoch: 0,
         };
         let mut d = diana();
         let ds = f.catalog.lookup("ds-at-2");
@@ -267,6 +369,7 @@ mod tests {
             monitor: &f.monitor,
             catalog: &f.catalog,
             q_total: 0,
+            epoch: 0,
         };
         let mut d = diana();
         let picks = d
@@ -288,6 +391,7 @@ mod tests {
             monitor: &f.monitor,
             catalog: &f.catalog,
             q_total: 62,
+            epoch: 0,
         };
         let mut d = diana();
         let order = d
@@ -299,6 +403,90 @@ mod tests {
     }
 
     #[test]
+    fn workspace_capacities_stable_across_rounds() {
+        let f = fixture();
+        let view = GridView {
+            now: 0.0,
+            sites: &f.sites,
+            monitor: &f.monitor,
+            catalog: &f.catalog,
+            q_total: 62,
+            epoch: 0,
+        };
+        let mut d = diana();
+        let ds = f.catalog.lookup("ds-at-2");
+        let jobs: Vec<Job> = (0..8)
+            .map(|i| job(i, JobClass::Both, 100.0 * i as f64,
+                         if i % 2 == 0 { ds } else { None }))
+            .collect();
+        // Warm every entry point once at the round's largest shape.
+        let mut picks = Vec::new();
+        let mut order = Vec::new();
+        let mut costs = Vec::new();
+        d.pick_into(&jobs, &view, &mut picks).unwrap();
+        d.rank_sites_into(&jobs[0], &view, &mut order).unwrap();
+        d.site_costs_into(&jobs[0], &view, &mut costs).unwrap();
+        let caps = d.workspace_capacities();
+        let out_caps = (picks.capacity(), order.capacity(), costs.capacity());
+        for round in 0..20 {
+            let n = 1 + round % 8;
+            d.pick_into(&jobs[..n], &view, &mut picks).unwrap();
+            assert_eq!(picks.len(), n);
+            d.rank_sites_into(&jobs[round % 8], &view, &mut order).unwrap();
+            d.site_costs_into(&jobs[round % 8], &view, &mut costs).unwrap();
+        }
+        assert_eq!(d.workspace_capacities(), caps,
+                   "steady-state rounds must not grow the workspace");
+        assert_eq!((picks.capacity(), order.capacity(), costs.capacity()),
+                   out_caps, "caller buffers must be reused too");
+    }
+
+    #[test]
+    fn replica_cache_is_correct_across_epoch_bumps() {
+        // A cached picker must match a freshly-built picker both while
+        // beliefs are stable (epoch constant) and after they change
+        // (epoch bumped).
+        let cfg = presets::uniform_grid(4, 8);
+        let topo = Topology::from_config(&cfg);
+        let mut monitor = PingerMonitor::new(&topo, 0.0, 1);
+        let mut catalog = Catalog::new();
+        catalog.add("ds-at-2", 5000.0, vec![2]);
+        let sites = vec![
+            snapshot(8, 8, 0),
+            snapshot(4, 8, 2),
+            snapshot(2, 8, 10),
+            snapshot(0, 8, 50),
+        ];
+        let mut cached = diana();
+        let j = job(1, JobClass::DataIntensive, 5000.0,
+                    catalog.lookup("ds-at-2"));
+        for epoch_bump in [false, true] {
+            let epoch = u64::from(epoch_bump);
+            if epoch_bump {
+                // Beliefs move: replica added + a monitor sweep.
+                catalog.add_replica(catalog.lookup("ds-at-2").unwrap(), 0);
+                monitor.sweep(&topo);
+            }
+            let view = GridView {
+                now: 0.0,
+                sites: &sites,
+                monitor: &monitor,
+                catalog: &catalog,
+                q_total: 62,
+                epoch,
+            };
+            for _ in 0..3 {
+                let mut fresh = diana();
+                assert_eq!(
+                    cached.site_costs(&j, &view).unwrap(),
+                    fresh.site_costs(&j, &view).unwrap(),
+                    "cached picker diverged (epoch_bump={epoch_bump})"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn batch_pick_is_consistent_with_singletons() {
         let f = fixture();
         let view = GridView {
@@ -307,6 +495,7 @@ mod tests {
             monitor: &f.monitor,
             catalog: &f.catalog,
             q_total: 62,
+            epoch: 0,
         };
         let mut d = diana();
         let jobs = vec![

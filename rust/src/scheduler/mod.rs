@@ -5,5 +5,5 @@ pub mod diana;
 pub mod traits;
 
 pub use baselines::{make_picker, DataLocal, FcfsBroker, Greedy, RandomPick};
-pub use diana::{build_cost_inputs, DianaScheduler};
+pub use diana::{build_cost_inputs, build_cost_inputs_into, DianaScheduler};
 pub use traits::{GridView, Placement, SitePicker, SiteSnapshot};

@@ -79,6 +79,14 @@ pub struct GridView<'a> {
     pub catalog: &'a Catalog,
     /// Total queued jobs across the grid (the §IV global Q).
     pub q_total: usize,
+    /// Monotonic version of the (monitor beliefs, topology, catalog)
+    /// triple: two views with equal epochs promise identical replica
+    /// paths and link observations, so pickers may reuse per-dataset
+    /// rows cached at this epoch (see
+    /// [`ReplicaCache`](crate::data::ReplicaCache)). Producers bump it
+    /// on every monitor sweep, topology mutation or catalog write; a
+    /// static fixture can pass `0` forever.
+    pub epoch: u64,
 }
 
 impl GridView<'_> {
@@ -119,6 +127,22 @@ pub trait SitePicker {
     fn pick(&mut self, jobs: &[Job], view: &GridView<'_>)
         -> Result<Vec<Placement>>;
 
+    /// [`SitePicker::pick`] into a caller-owned buffer (cleared first) —
+    /// the steady-state entry point the DES and the serve loop use so a
+    /// matchmaking round allocates nothing. Default: delegate to `pick`.
+    /// Implementations with internal workspaces (DIANA) override this
+    /// and make `pick` the thin wrapper instead.
+    fn pick_into(
+        &mut self,
+        jobs: &[Job],
+        view: &GridView<'_>,
+        out: &mut Vec<Placement>,
+    ) -> Result<()> {
+        out.clear();
+        out.extend(self.pick(jobs, view)?);
+        Ok(())
+    }
+
     /// Ranked site order (ascending cost) for one representative job —
     /// used by the §VIII bulk splitter to spread subgroups. The default
     /// ranks by whatever `pick` would choose, falling back to free-slot
@@ -133,6 +157,19 @@ pub trait SitePicker {
         Ok(order)
     }
 
+    /// [`SitePicker::rank_sites`] into a caller-owned buffer (cleared
+    /// first). Default: delegate to `rank_sites`.
+    fn rank_sites_into(
+        &mut self,
+        job: &Job,
+        view: &GridView<'_>,
+        out: &mut Vec<usize>,
+    ) -> Result<()> {
+        out.clear();
+        out.extend(self.rank_sites(job, view)?);
+        Ok(())
+    }
+
     /// Per-site placement cost for one representative job (class-matched
     /// for DIANA) — lets the §VIII splitter weight subgroup sizes by how
     /// *competitive* each site is, not just its CPU count. Dead sites
@@ -145,6 +182,21 @@ pub trait SitePicker {
             costs[s] = 1.0 + pos as f64;
         }
         Ok(costs)
+    }
+
+    /// [`SitePicker::site_costs`] into a caller-owned buffer (cleared
+    /// and resized to `view.n_sites()`). Default: delegate to
+    /// `site_costs`. The §VIII splitter, the federation delegation
+    /// check and the serve loop call this variant with reused buffers.
+    fn site_costs_into(
+        &mut self,
+        job: &Job,
+        view: &GridView<'_>,
+        out: &mut Vec<f64>,
+    ) -> Result<()> {
+        out.clear();
+        out.extend(self.site_costs(job, view)?);
+        Ok(())
     }
 
     /// Short stable policy name (used in reports and the CLI).

@@ -1,0 +1,198 @@
+//! `GridStateCache` — the event-driven replacement for the per-event
+//! `snapshot()` / `q_total()` full rebuilds the `World` used to do.
+//!
+//! The cache owns one [`SiteSnapshot`] row per site plus the global
+//! queued-job count Q. Event handlers that mutate a site's queues or
+//! liveness mark that row dirty ([`GridStateCache::touch`]); the next
+//! [`GridStateCache::sync`] refreshes **only the dirty rows** from
+//! ground truth and adjusts Q incrementally (`Q += new − old` per
+//! refreshed row). A steady-state scheduling event therefore costs
+//! O(dirty sites), not O(sites), and allocates nothing.
+//!
+//! Alongside the rows the cache carries the **belief epoch**: a
+//! monotonic counter the `World` bumps whenever the (monitor beliefs,
+//! topology, catalog) triple may have moved — a monitor sweep, a
+//! `set_link`/`degrade_link`/heal fault, a catalog write. The epoch is
+//! threaded into every [`GridView`](crate::scheduler::GridView) so
+//! per-dataset replica rows cached downstream
+//! ([`ReplicaCache`](crate::data::ReplicaCache)) invalidate exactly when
+//! the paths they priced can have changed. Bumping the epoch is always
+//! safe (it only forces recomputation of identical values); *missing* a
+//! bump is the bug class the equivalence suite exists to catch.
+//!
+//! Invalidation rules (who dirties what) are tabulated in
+//! `docs/PERFORMANCE.md`.
+
+use crate::scheduler::SiteSnapshot;
+
+pub struct GridStateCache {
+    snaps: Vec<SiteSnapshot>,
+    q_total: usize,
+    dirty: Vec<bool>,
+    /// Dirty-row worklist (indices with `dirty[i] == true`, unordered).
+    pending: Vec<usize>,
+    epoch: u64,
+    /// Paranoid mode: every `sync` refreshes every row and bumps the
+    /// epoch, degenerating to the historical rebuild-from-scratch path.
+    paranoid: bool,
+}
+
+impl GridStateCache {
+    /// A cache for `n` sites, fully dirty so the first `sync` populates
+    /// every row.
+    pub fn new(n: usize, paranoid: bool) -> GridStateCache {
+        GridStateCache {
+            snaps: vec![
+                SiteSnapshot {
+                    queue_len: 0,
+                    capability: 0.0,
+                    load: 0.0,
+                    free_slots: 0,
+                    cpus: 0,
+                    alive: false,
+                };
+                n
+            ],
+            q_total: 0,
+            dirty: vec![true; n],
+            pending: (0..n).collect(),
+            epoch: 0,
+            paranoid,
+        }
+    }
+
+    /// Mark site `s`'s row stale (its queues/liveness/load changed).
+    pub fn touch(&mut self, s: usize) {
+        if !self.dirty[s] {
+            self.dirty[s] = true;
+            self.pending.push(s);
+        }
+    }
+
+    /// Mark every row stale (topology-scale changes, paranoid sync).
+    pub fn touch_all(&mut self) {
+        for s in 0..self.dirty.len() {
+            self.touch(s);
+        }
+    }
+
+    /// Advance the belief epoch (monitor sweep / topology mutation /
+    /// catalog write). Downstream replica-row caches recompute on first
+    /// use at the new epoch.
+    pub fn bump_epoch(&mut self) {
+        self.epoch = self.epoch.wrapping_add(1);
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Refresh the dirty rows from ground truth via `refresh(site)` and
+    /// settle Q. Call before reading [`GridStateCache::snaps`] /
+    /// [`GridStateCache::q_total`] for a scheduling round.
+    pub fn sync(&mut self, mut refresh: impl FnMut(usize) -> SiteSnapshot) {
+        if self.paranoid {
+            self.touch_all();
+            self.bump_epoch();
+        }
+        while let Some(s) = self.pending.pop() {
+            let new = refresh(s);
+            self.q_total = self.q_total - self.snaps[s].queue_len
+                + new.queue_len;
+            self.snaps[s] = new;
+            self.dirty[s] = false;
+        }
+    }
+
+    /// The current rows. Only valid after [`GridStateCache::sync`]; a
+    /// debug build asserts no row is pending.
+    pub fn snaps(&self) -> &[SiteSnapshot] {
+        debug_assert!(self.pending.is_empty(), "read of an unsynced cache");
+        &self.snaps
+    }
+
+    /// The §IV global Q (sum of every site's `queue_len`), maintained
+    /// incrementally. Only valid after [`GridStateCache::sync`].
+    pub fn q_total(&self) -> usize {
+        debug_assert!(self.pending.is_empty(), "read of an unsynced cache");
+        self.q_total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(queue_len: usize, alive: bool) -> SiteSnapshot {
+        SiteSnapshot {
+            queue_len,
+            capability: 4.0,
+            load: 0.25,
+            free_slots: 3,
+            cpus: 4,
+            alive,
+        }
+    }
+
+    #[test]
+    fn sync_refreshes_only_dirty_rows() {
+        let mut c = GridStateCache::new(3, false);
+        let mut calls = Vec::new();
+        c.sync(|s| {
+            calls.push(s);
+            snap(s, true)
+        });
+        calls.sort_unstable();
+        assert_eq!(calls, vec![0, 1, 2]);
+        assert_eq!(c.q_total(), 3); // queue lengths 0 + 1 + 2
+
+        // Clean cache: sync touches nothing.
+        let mut called = false;
+        c.sync(|_| {
+            called = true;
+            snap(0, true)
+        });
+        assert!(!called, "clean rows must not be refreshed");
+
+        // One dirty row: exactly one refresh, Q adjusted incrementally.
+        c.touch(1);
+        c.touch(1); // idempotent
+        let mut calls = Vec::new();
+        c.sync(|s| {
+            calls.push(s);
+            snap(10, false)
+        });
+        assert_eq!(calls, vec![1]);
+        assert_eq!(c.q_total(), 12); // 0 + 10 + 2
+        assert!(!c.snaps()[1].alive);
+        assert!(c.snaps()[0].alive);
+    }
+
+    #[test]
+    fn paranoid_mode_refreshes_everything_and_bumps_epoch() {
+        let mut c = GridStateCache::new(2, true);
+        let e0 = c.epoch();
+        c.sync(|s| snap(s, true));
+        let e1 = c.epoch();
+        assert_ne!(e0, e1);
+        let mut calls = 0;
+        c.sync(|s| {
+            calls += 1;
+            snap(s + 5, true)
+        });
+        assert_eq!(calls, 2, "paranoid sync refreshes every row");
+        assert_ne!(c.epoch(), e1);
+        assert_eq!(c.q_total(), 11); // 5 + 6
+    }
+
+    #[test]
+    fn epoch_bumps_are_monotonic_and_manual() {
+        let mut c = GridStateCache::new(1, false);
+        c.sync(|_| snap(0, true));
+        let e = c.epoch();
+        c.sync(|_| snap(0, true));
+        assert_eq!(c.epoch(), e, "non-paranoid sync keeps the epoch");
+        c.bump_epoch();
+        assert_eq!(c.epoch(), e + 1);
+    }
+}

@@ -2,9 +2,11 @@
 //! local batch systems and the composed `World`.
 
 pub mod engine;
+pub mod grid_cache;
 pub mod site;
 pub mod world;
 
 pub use engine::{EventQueue, SimTime};
+pub use grid_cache::GridStateCache;
 pub use site::{LocalEntry, SiteSim};
 pub use world::World;

@@ -8,8 +8,8 @@ use std::collections::BTreeMap;
 use crate::bulk::{plan_group, Aggregator, GroupResult};
 use crate::config::{GridConfig, Policy};
 use crate::coordinator::MetaScheduler;
-use crate::cost::{CostEngine, Weights};
-use crate::data::Catalog;
+use crate::cost::{CostEngine, CostWorkspace, Weights};
+use crate::data::{Catalog, ReplicaCache};
 use crate::federation::{choose_delegation, peering_penalty, Federation};
 use crate::federation::DelegationCandidate;
 use crate::job::{Group, Job, JobId};
@@ -17,13 +17,16 @@ use crate::metrics::Recorder;
 use crate::migration::{decide, MigrationDecision, PeerReport};
 use crate::network::{Link, PingerMonitor, Topology};
 use crate::p2p::{Discovery, Overlay, PeerState};
+use crate::queues::MetaJob;
 use crate::scenario::faults::{FaultPlan, ResolvedFault};
-use crate::scheduler::{build_cost_inputs, GridView, SitePicker, SiteSnapshot};
+use crate::scheduler::{build_cost_inputs_into, GridView, SitePicker,
+                       SiteSnapshot};
 use crate::util::error::Result;
 use crate::util::Pcg64;
 use crate::workload::Submission;
 
 use super::engine::EventQueue;
+use super::grid_cache::GridStateCache;
 use super::site::{LocalEntry, SiteSim};
 
 #[derive(Clone, Debug)]
@@ -97,6 +100,18 @@ pub struct World {
     /// runs the classic central leader. One peer degenerates to the
     /// central event stream bit-for-bit.
     federation: Option<Federation>,
+    /// Event-driven site-state rows + incremental Q + belief epoch —
+    /// replaces the per-event `Vec<SiteSnapshot>` rebuilds.
+    cache: GridStateCache,
+    /// Reused J×S buffers for the batched migration sweep.
+    ws: CostWorkspace,
+    /// Per-dataset replica rows for the migration sweep's input builder,
+    /// invalidated by the cache's belief epoch.
+    replicas: ReplicaCache,
+    /// Scratch for federation-masked views (placement/delegation).
+    view_scratch: Vec<SiteSnapshot>,
+    /// Scratch for per-job placements from `SitePicker::pick_into`.
+    picks_scratch: Vec<usize>,
 }
 
 impl World {
@@ -141,6 +156,13 @@ impl World {
             }
             discovery.register(i, &format!("diana://{}", site.name), 0.0);
         }
+        // Debug/verification escape hatch: rebuild all scheduling inputs
+        // from scratch every round (see GridConfig::paranoid_rebuild and
+        // docs/PERFORMANCE.md). The env var lets ci.sh diff the two
+        // paths end-to-end without a config change.
+        let paranoid = cfg.paranoid_rebuild
+            || std::env::var("DIANA_PARANOID_REBUILD")
+                .map_or(false, |v| !v.is_empty() && v != "0");
         World {
             federation: Federation::from_config(&cfg),
             recorder: Recorder::new(n, 60.0),
@@ -149,6 +171,11 @@ impl World {
             topo,
             monitor,
             catalog,
+            cache: GridStateCache::new(n, paranoid),
+            ws: CostWorkspace::new(),
+            replicas: ReplicaCache::new(),
+            view_scratch: Vec::new(),
+            picks_scratch: Vec::new(),
             jobs: BTreeMap::new(),
             sites,
             metas,
@@ -210,6 +237,7 @@ impl World {
                 self.topo.degrade_link(
                     from, to, rtt_factor, loss_add, capacity_factor,
                 );
+                self.cache.bump_epoch();
             }
             ResolvedFault::Partition {
                 members,
@@ -229,10 +257,12 @@ impl World {
                         }
                     }
                 }
+                self.cache.bump_epoch();
             }
             ResolvedFault::Heal => {
                 crate::info!("t={t:.1}: fault — topology healed");
                 self.topo = self.pristine_topo.clone();
+                self.cache.bump_epoch();
             }
             ResolvedFault::MonitorBlackout { duration_s } => {
                 crate::info!(
@@ -279,6 +309,7 @@ impl World {
     /// if one exists; recovery re-joins the overlay).
     pub fn set_alive(&mut self, site: usize, alive: bool) {
         self.alive[site] = alive;
+        self.cache.touch(site);
         if !alive {
             if let Some(sg) =
                 self.overlay.subgrids.iter_mut().find(|sg| sg.site == site)
@@ -321,27 +352,22 @@ impl World {
         self.submissions = subs;
     }
 
-    fn snapshot(&self) -> Vec<SiteSnapshot> {
-        self.sites
-            .iter()
-            .enumerate()
-            .map(|(i, s)| SiteSnapshot {
-                queue_len: s.queue_len() + self.metas[i].queue_len(),
-                capability: s.capability(),
-                load: s.load(),
-                free_slots: s.free_slots(),
-                cpus: s.cpus,
-                alive: self.alive[i],
-            })
-            .collect()
-    }
-
-    fn q_total(&self) -> usize {
-        self.sites
-            .iter()
-            .zip(&self.metas)
-            .map(|(s, m)| s.queue_len() + m.queue_len())
-            .sum()
+    /// Refresh the grid-state cache's dirty rows from ground truth.
+    /// Every consumer of per-site state (placement, gossip, migration)
+    /// calls this first, then reads `self.cache.snaps()` /
+    /// `self.cache.q_total()` — a steady-state event refreshes only the
+    /// few rows its predecessors touched instead of rebuilding a
+    /// `Vec<SiteSnapshot>` per event.
+    fn sync_grid(&mut self) {
+        let World { cache, sites, metas, alive, .. } = self;
+        cache.sync(|i| SiteSnapshot {
+            queue_len: sites[i].queue_len() + metas[i].queue_len(),
+            capability: sites[i].capability(),
+            load: sites[i].load(),
+            free_slots: sites[i].free_slots(),
+            cpus: sites[i].cpus,
+            alive: alive[i],
+        });
     }
 
     /// Run to completion (all jobs delivered). Returns delivered count.
@@ -358,9 +384,10 @@ impl World {
         // has no neighbours — nothing is exchanged or scheduled, keeping
         // its event stream identical to the central leader's.
         if self.federation.as_ref().map_or(false, |f| f.n_peers() > 1) {
-            let snap = self.snapshot();
-            if let Some(fed) = self.federation.as_mut() {
-                fed.gossip_round(&snap, 0.0);
+            self.sync_grid();
+            let World { federation, cache, .. } = self;
+            if let Some(fed) = federation.as_mut() {
+                fed.gossip_round(cache.snaps(), 0.0);
             }
             self.events
                 .schedule(self.cfg.federation.gossip_period_s, Ev::Gossip);
@@ -384,9 +411,10 @@ impl World {
                 Ev::Deliver { job } => self.on_deliver(JobId(job), t),
                 Ev::Fault(i) => self.apply_fault(i, t),
                 Ev::Gossip => {
-                    let snap = self.snapshot();
-                    if let Some(fed) = self.federation.as_mut() {
-                        fed.gossip_round(&snap, t);
+                    self.sync_grid();
+                    let World { federation, cache, .. } = self;
+                    if let Some(fed) = federation.as_mut() {
+                        fed.gossip_round(cache.snaps(), t);
                     }
                     if self.delivered < self.total_jobs {
                         self.events.schedule_in(
@@ -403,6 +431,9 @@ impl World {
                     // — peers keep acting on stale beliefs (§IX).
                     if t >= self.blackout_until {
                         self.monitor.sweep(&self.topo);
+                        // Link beliefs moved: cached replica rows are
+                        // stale from here on.
+                        self.cache.bump_epoch();
                         for s in 0..self.sites.len() {
                             self.publish_state(s); // heartbeat to discovery
                         }
@@ -529,34 +560,44 @@ impl World {
         hops: u32,
         t: f64,
     ) -> Result<()> {
-        let fresh = self.snapshot();
+        self.sync_grid();
         let q_local = match (&self.federation, peer) {
-            (Some(fed), Some(p)) => fed
-                .partition
-                .sites_of(p)
-                .iter()
-                .map(|&s| fresh[s].queue_len)
-                .sum::<usize>(),
-            _ => self.q_total(),
+            (Some(fed), Some(p)) => {
+                let snaps = self.cache.snaps();
+                fed.partition
+                    .sites_of(p)
+                    .iter()
+                    .map(|&s| snaps[s].queue_len)
+                    .sum::<usize>()
+            }
+            _ => self.cache.q_total(),
         };
         let q_total = q_local + incoming;
 
         // Federated delegation check (no-op with < 2 peers, so the
         // degenerate 1-peer run performs no extra picker calls).
-        if let (Some(p), Some(fed)) = (peer, self.federation.as_ref()) {
-            let target = Self::delegation_target(
-                self.picker.as_mut(),
-                fed,
-                &self.monitor,
-                &self.catalog,
-                &self.cfg,
-                p,
-                hops,
-                &jobs[0],
-                &fresh,
-                q_total,
-                t,
-            )?;
+        if let (Some(p), Some(_)) = (peer, self.federation.as_ref()) {
+            let target = {
+                let World {
+                    picker, federation, monitor, catalog, cfg, cache,
+                    view_scratch, ws, ..
+                } = self;
+                Self::delegation_target(
+                    picker.as_mut(),
+                    federation.as_ref().expect("federated mode"),
+                    monitor,
+                    catalog,
+                    cfg,
+                    p,
+                    hops,
+                    &jobs[0],
+                    cache,
+                    view_scratch,
+                    &mut ws.costs,
+                    q_total,
+                    t,
+                )?
+            };
             if let Some(to) = target {
                 let latency = self.forward_latency(p, to, jobs.len());
                 // Count each job once, at its first forward — multi-hop
@@ -585,36 +626,49 @@ impl World {
             }
         }
 
-        let snap = match (&self.federation, peer) {
-            (Some(fed), Some(p)) => fed.placement_view(p, &fresh),
-            _ => fresh,
-        };
-        let view = GridView {
-            now: t,
-            sites: &snap,
-            monitor: &self.monitor,
-            catalog: &self.catalog,
-            q_total,
-        };
-
         let mut by_site: BTreeMap<usize, Vec<JobId>> = BTreeMap::new();
-        if let Some(g) = group {
-            let plan = plan_group(self.picker.as_mut(), g, jobs, &view)?;
-            if plan.single_site {
-                self.recorder.groups_whole += 1;
+        {
+            // Matchmaking proper: the picker sees the cache's rows
+            // directly on the central path, or the reusable masked-view
+            // scratch under federation — no per-event snapshot rebuild
+            // either way.
+            let World {
+                picker, federation, monitor, catalog, cache, view_scratch,
+                picks_scratch, recorder, ..
+            } = self;
+            let sites: &[SiteSnapshot] = match (federation.as_ref(), peer) {
+                (Some(fed), Some(p)) => {
+                    fed.placement_view_into(p, cache.snaps(), view_scratch);
+                    view_scratch
+                }
+                _ => cache.snaps(),
+            };
+            let view = GridView {
+                now: t,
+                sites,
+                monitor,
+                catalog,
+                q_total,
+                epoch: cache.epoch(),
+            };
+            if let Some(g) = group {
+                let plan = plan_group(picker.as_mut(), g, jobs, &view)?;
+                if plan.single_site {
+                    recorder.groups_whole += 1;
+                } else {
+                    recorder.groups_split += 1;
+                }
+                for (site, idxs) in &plan.assignments {
+                    by_site
+                        .entry(*site)
+                        .or_default()
+                        .extend(idxs.iter().map(|&i| jobs[i].id));
+                }
             } else {
-                self.recorder.groups_split += 1;
-            }
-            for (site, idxs) in &plan.assignments {
-                by_site
-                    .entry(*site)
-                    .or_default()
-                    .extend(idxs.iter().map(|&i| jobs[i].id));
-            }
-        } else {
-            let picks = self.picker.pick(jobs, &view)?;
-            for (job, site) in jobs.iter().zip(picks) {
-                by_site.entry(site).or_default().push(job.id);
+                picker.pick_into(jobs, &view, picks_scratch)?;
+                for (job, &site) in jobs.iter().zip(picks_scratch.iter()) {
+                    by_site.entry(site).or_default().push(job.id);
+                }
             }
         }
 
@@ -625,6 +679,7 @@ impl World {
                 self.recorder.job_mut(*id).placed = t;
             }
             self.metas[site].enqueue_batch(self.engine.as_mut(), &batch, t)?;
+            self.cache.touch(site);
             self.events.schedule(t, Ev::Dispatch(site));
         }
         Ok(())
@@ -636,7 +691,10 @@ impl World {
     /// the peering penalty to every remote site, and forward iff the
     /// best remote beats `delegation_threshold ×` the local best.
     /// Free-function-style over disjoint `World` fields so the picker
-    /// can borrow mutably next to the monitor/catalog.
+    /// can borrow mutably next to the monitor/catalog; the masked view
+    /// and cost row land in caller-owned scratch, and only the single
+    /// best remote candidate is materialised (top-1 of the §V sort —
+    /// delegation never consumes more).
     #[allow(clippy::too_many_arguments)]
     fn delegation_target(
         picker: &mut dyn SitePicker,
@@ -647,33 +705,39 @@ impl World {
         peer: usize,
         hops: u32,
         job: &Job,
-        fresh: &[SiteSnapshot],
+        cache: &GridStateCache,
+        view_scratch: &mut Vec<SiteSnapshot>,
+        costs: &mut Vec<f64>,
         q_total: usize,
         now: f64,
     ) -> Result<Option<usize>> {
         if fed.n_peers() <= 1 || hops >= fed.fed_cfg().max_hops {
             return Ok(None);
         }
-        let Some(snap) = fed.delegation_view(peer, fresh) else {
+        if !fed.delegation_view_into(peer, cache.snaps(), view_scratch) {
             return Ok(None); // nothing gossiped / no alive neighbour
-        };
+        }
         let view = GridView {
             now,
-            sites: &snap,
+            sites: &view_scratch[..],
             monitor,
             catalog,
             q_total,
+            epoch: cache.epoch(),
         };
-        let costs = picker.site_costs(job, &view)?;
+        picker.site_costs_into(job, &view, costs)?;
         let mut local_best = f64::INFINITY;
         for &s in fed.partition.sites_of(peer) {
             local_best = local_best.min(costs[s]);
         }
         let gw = fed.partition.gateway(peer);
-        let mut cands = Vec::new();
+        // Track only the minimum-(cost, site) remote candidate — the
+        // same winner a full candidate list would hand the §IX-style
+        // decision rule.
+        let mut best: Option<DelegationCandidate> = None;
         for (s, &c) in costs.iter().enumerate() {
             let q = fed.partition.peer_of(s);
-            if q == peer || !snap[s].alive || !c.is_finite() {
+            if q == peer || !view_scratch[s].alive || !c.is_finite() {
                 continue;
             }
             // Inter-peer link priced from the monitor's *beliefs* about
@@ -686,11 +750,22 @@ impl World {
                 cfg.scheduler.w_net,
                 cfg.scheduler.w_dtc,
             );
-            cands.push(DelegationCandidate { site: s, peer: q, cost: c + pen });
+            let cand = DelegationCandidate { site: s, peer: q, cost: c + pen };
+            let wins = best.as_ref().map_or(true, |b| {
+                cand.cost
+                    .partial_cmp(&b.cost)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(cand.site.cmp(&b.site))
+                    .is_lt()
+            });
+            if wins {
+                best = Some(cand);
+            }
         }
+        let Some(best) = best else { return Ok(None) };
         Ok(choose_delegation(
             local_best,
-            &cands,
+            std::slice::from_ref(&best),
             fed.fed_cfg().delegation_threshold,
         ))
     }
@@ -715,6 +790,8 @@ impl World {
         if !self.alive[site] {
             return;
         }
+        // Queue depth / load / free slots may change below.
+        self.cache.touch(site);
         loop {
             let buffered = self.sites[site].queue_len();
             if buffered >= self.sites[site].cpus.max(1) {
@@ -761,6 +838,7 @@ impl World {
 
     fn on_finish(&mut self, job: JobId, site: usize, t: f64) {
         self.recorder.job_mut(job).finished = t;
+        self.cache.touch(site);
         for started in self.sites[site].complete(job) {
             self.start_entry(started, site, t);
         }
@@ -793,6 +871,9 @@ impl World {
                 j.out_mb.max(1.0),
                 vec![exec_site],
             );
+            // New dataset: replica-row caches keyed on the old epoch
+            // must not survive a catalog write.
+            self.cache.bump_epoch();
             for kid in kids {
                 {
                     let child = self.jobs.get_mut(&kid).unwrap();
@@ -836,6 +917,15 @@ impl World {
     }
 
     /// §IX/§X migration sweep over all congested (or dead) sites.
+    ///
+    /// Each swept site's candidate queue is costed through **batched**
+    /// J×S `schedule_step_into` rounds — one round per distinct
+    /// submitting client within the batch (usually one: bulk groups
+    /// share the submitter), so the §IV client-link columns stay exact —
+    /// instead of one single-job round per candidate. Q and the site
+    /// rows settle once per batch round; the live per-candidate
+    /// `jobs_ahead` polling (and therefore the §IX decision ordering)
+    /// is unchanged.
     fn migration_check(&mut self, t: f64) -> Result<()> {
         let thrs = self.cfg.scheduler.congestion_thrs;
         for site in 0..self.sites.len() {
@@ -850,95 +940,160 @@ impl World {
             if cands.is_empty() {
                 continue;
             }
-            let snap = self.snapshot();
-            let mut keep = Vec::new();
-            for meta in cands {
-                let job = self.jobs[&meta.job.0].clone();
-                if job.migrations >= self.cfg.scheduler.max_migrations && !force {
-                    keep.push(meta);
-                    continue;
+            // Draining the candidates changed this site's queue depth.
+            self.cache.touch(site);
+            // Candidates over their migration budget stay queued (§IX
+            // no-cycling) — unless the site is dead, where the escape
+            // hatch must still move them. `migrated` marks the rest as
+            // they leave so the reinsert keeps the original drain order.
+            let evaluable: Vec<usize> = (0..cands.len())
+                .filter(|&i| {
+                    force
+                        || self.jobs[&cands[i].job.0].migrations
+                            < self.cfg.scheduler.max_migrations
+                })
+                .collect();
+            let mut migrated = vec![false; cands.len()];
+            // Batch by submitting client, preserving drain order.
+            let mut start = 0;
+            while start < evaluable.len() {
+                let submit =
+                    self.jobs[&cands[evaluable[start]].job.0].submit_site;
+                let mut end = start + 1;
+                while end < evaluable.len()
+                    && self.jobs[&cands[evaluable[end]].job.0].submit_site
+                        == submit
+                {
+                    end += 1;
                 }
-                // One-job cost row across all sites (§IX "minimum cost").
-                let view = GridView {
-                    now: t,
-                    sites: &snap,
-                    monitor: &self.monitor,
-                    catalog: &self.catalog,
-                    q_total: self.q_total(),
-                };
-                let inp = build_cost_inputs(std::slice::from_ref(&job), &view);
-                let w = Weights::from_scheduler(
-                    &self.cfg.scheduler,
-                    view.q_total as f32,
-                );
-                let out = self.engine.schedule_step(&inp, &w)?;
-                let report = |s: usize| PeerReport {
-                    site: s,
-                    // An arriving job joins the back of its class (+inf).
-                    jobs_ahead: self.metas[s]
-                        .jobs_ahead(meta.priority, f64::INFINITY)
-                        + self.sites[s].queue_len(),
-                    queue_len: self.metas[s].queue_len()
-                        + self.sites[s].queue_len(),
-                    total_cost: out.total_at(0, s),
-                    alive: self.alive[s],
-                };
-                let mut local = report(site);
-                // Locally the job keeps its FCFS slot.
-                local.jobs_ahead = self.metas[site]
-                    .jobs_ahead(meta.priority, meta.enqueued_at)
-                    + self.sites[site].queue_len();
-                if force {
-                    // A dead site is an impossible host: poison its report
-                    // so any alive peer wins the §IX comparison.
-                    local.jobs_ahead = usize::MAX;
-                    local.total_cost = f32::INFINITY;
-                }
-                // §IX peer polling. Under federation the poll stays
-                // inside the owning peer's partition — cross-partition
-                // movement is the delegation layer's job — EXCEPT for a
-                // dead site (force), where any alive site may rescue the
-                // stranded queue (the dead-partition escape hatch).
-                let peers: Vec<PeerReport> = match (&self.federation, force) {
-                    (Some(fed), false) => fed
-                        .partition
-                        .sites_of(fed.partition.peer_of(site))
-                        .iter()
-                        .copied()
-                        .filter(|&s| s != site)
-                        .map(report)
-                        .collect(),
-                    _ => (0..self.sites.len())
-                        .filter(|&s| s != site)
-                        .map(report)
-                        .collect(),
-                };
-                match decide(
-                    local,
-                    &peers,
-                    self.cfg.scheduler.max_migrations + u32::from(force),
-                    job.migrations,
-                ) {
-                    MigrationDecision::Migrate { to } => {
-                        self.jobs.get_mut(&meta.job.0).unwrap().migrations += 1;
-                        // A migrated job *leaves* this queue — it counts
-                        // as service in the §X rate balance, which makes
-                        // Thrs self-limiting (migration relieves the
-                        // congestion signal that triggered it).
-                        self.metas[site].congestion.record_service(t);
-                        self.recorder.on_export(site, to, t);
-                        self.recorder.job_mut(meta.job).migrations += 1;
-                        self.metas[to].accept_migrated(
-                            self.engine.as_mut(),
-                            meta,
-                            t,
-                        )?;
-                        self.events.schedule(t, Ev::Dispatch(to));
-                    }
-                    MigrationDecision::StayLocal => keep.push(meta),
-                }
+                let group: Vec<Job> = evaluable[start..end]
+                    .iter()
+                    .map(|&i| self.jobs[&cands[i].job.0].clone())
+                    .collect();
+                self.migrate_group(
+                    site,
+                    force,
+                    &cands,
+                    &evaluable[start..end],
+                    &group,
+                    &mut migrated,
+                    t,
+                )?;
+                start = end;
             }
+            let keep: Vec<MetaJob> = cands
+                .iter()
+                .enumerate()
+                .filter(|&(i, _)| !migrated[i])
+                .map(|(_, m)| *m)
+                .collect();
             self.metas[site].reinsert(keep);
+            self.cache.touch(site);
+        }
+        Ok(())
+    }
+
+    /// Cost one submit-site-coherent batch of migration candidates in a
+    /// single J×S round (through the world's `CostWorkspace`), then run
+    /// the per-candidate §IX decision against live peer queues.
+    #[allow(clippy::too_many_arguments)]
+    fn migrate_group(
+        &mut self,
+        site: usize,
+        force: bool,
+        cands: &[MetaJob],
+        idxs: &[usize],
+        group: &[Job],
+        migrated: &mut [bool],
+        t: f64,
+    ) -> Result<()> {
+        // Rows + Q settle at this batch round's entry (earlier rounds of
+        // the same sweep may have migrated jobs into peer queues).
+        self.sync_grid();
+        let q_total = self.cache.q_total();
+        let World {
+            ws, engine, replicas, cache, monitor, catalog, cfg, metas,
+            sites, alive, jobs, recorder, events, federation, ..
+        } = self;
+        {
+            // One batched cost round — site rows from the grid cache,
+            // replica rows from the epoch cache (§IX "minimum cost").
+            let view = GridView {
+                now: t,
+                sites: cache.snaps(),
+                monitor,
+                catalog,
+                q_total,
+                epoch: cache.epoch(),
+            };
+            build_cost_inputs_into(group, &view, &mut ws.inputs, replicas);
+            let w = Weights::from_scheduler(&cfg.scheduler, q_total as f32);
+            engine.schedule_step_into(&ws.inputs, &w, &mut ws.out)?;
+        }
+        for (j, &i) in idxs.iter().enumerate() {
+            let meta = cands[i];
+            let out = &ws.out;
+            let report = |s: usize| PeerReport {
+                site: s,
+                // An arriving job joins the back of its class (+inf).
+                jobs_ahead: metas[s].jobs_ahead(meta.priority, f64::INFINITY)
+                    + sites[s].queue_len(),
+                queue_len: metas[s].queue_len() + sites[s].queue_len(),
+                total_cost: out.total_at(j, s),
+                alive: alive[s],
+            };
+            let mut local = report(site);
+            // Locally the job keeps its FCFS slot.
+            local.jobs_ahead = metas[site]
+                .jobs_ahead(meta.priority, meta.enqueued_at)
+                + sites[site].queue_len();
+            if force {
+                // A dead site is an impossible host: poison its report
+                // so any alive peer wins the §IX comparison.
+                local.jobs_ahead = usize::MAX;
+                local.total_cost = f32::INFINITY;
+            }
+            // §IX peer polling. Under federation the poll stays
+            // inside the owning peer's partition — cross-partition
+            // movement is the delegation layer's job — EXCEPT for a
+            // dead site (force), where any alive site may rescue the
+            // stranded queue (the dead-partition escape hatch).
+            let peers: Vec<PeerReport> = match (&*federation, force) {
+                (Some(fed), false) => fed
+                    .partition
+                    .sites_of(fed.partition.peer_of(site))
+                    .iter()
+                    .copied()
+                    .filter(|&s| s != site)
+                    .map(report)
+                    .collect(),
+                _ => (0..sites.len())
+                    .filter(|&s| s != site)
+                    .map(report)
+                    .collect(),
+            };
+            match decide(
+                local,
+                &peers,
+                cfg.scheduler.max_migrations + u32::from(force),
+                group[j].migrations,
+            ) {
+                MigrationDecision::Migrate { to } => {
+                    migrated[i] = true;
+                    jobs.get_mut(&meta.job.0).unwrap().migrations += 1;
+                    // A migrated job *leaves* this queue — it counts
+                    // as service in the §X rate balance, which makes
+                    // Thrs self-limiting (migration relieves the
+                    // congestion signal that triggered it).
+                    metas[site].congestion.record_service(t);
+                    recorder.on_export(site, to, t);
+                    recorder.job_mut(meta.job).migrations += 1;
+                    metas[to].accept_migrated(engine.as_mut(), meta, t)?;
+                    cache.touch(to);
+                    events.schedule(t, Ev::Dispatch(to));
+                }
+                MigrationDecision::StayLocal => {}
+            }
         }
         Ok(())
     }
@@ -1317,6 +1472,40 @@ mod tests {
         assert_eq!(w.group_results.len(), 3);
         for g in &w.group_results {
             assert!(g.total_output_mb > 0.0);
+        }
+    }
+
+    #[test]
+    fn cached_path_matches_paranoid_rebuild() {
+        // The incremental GridStateCache / replica-cache path must be
+        // bit-identical to rebuilding every input from scratch, central
+        // and federated, with migration pressure in the mix.
+        for peers in [0usize, 2] {
+            let mut cfg = small_cfg(80);
+            cfg.federation.peers = peers;
+            cfg.scheduler.congestion_thrs = 0.3;
+            cfg.scheduler.migration_period_s = 20.0;
+            let normal = run_with(cfg.clone(), Policy::Diana);
+            let mut pcfg = cfg;
+            pcfg.paranoid_rebuild = true;
+            let paranoid = run_with(pcfg, Policy::Diana);
+            assert_eq!(
+                normal.events_processed(),
+                paranoid.events_processed(),
+                "event stream diverged (peers={peers})"
+            );
+            assert_eq!(normal.recorder.migrations, paranoid.recorder.migrations);
+            assert_eq!(normal.recorder.delegations,
+                       paranoid.recorder.delegations);
+            let rec = |w: &World| -> Vec<_> {
+                w.recorder
+                    .completed_records()
+                    .map(|r| (r.submit, r.placed, r.started, r.finished,
+                              r.delivered, r.exec_site, r.migrations))
+                    .collect()
+            };
+            assert_eq!(rec(&normal), rec(&paranoid),
+                       "job records diverged (peers={peers})");
         }
     }
 

@@ -1,4 +1,4 @@
-//! Smoke tests mirroring the five `harness = false` bench binaries
+//! Smoke tests mirroring the seven `harness = false` bench binaries
 //! (benches/bench_*.rs): each test constructs the same workload the
 //! bench constructs (at a reduced scale) and runs one iteration of the
 //! benched operation. This guards the bench wiring — the types, builder
@@ -114,6 +114,7 @@ fn scheduler_workload_constructs_and_runs() {
         monitor: &monitor,
         catalog: &catalog,
         q_total: 50,
+        epoch: 0,
     };
     for policy in [Policy::Diana, Policy::FcfsBroker, Policy::Greedy,
                    Policy::DataLocal, Policy::Random] {
@@ -156,4 +157,74 @@ fn figures_workload_constructs_and_runs() {
         let text = diana::repro::run_figure(fig).unwrap();
         assert!(!text.is_empty(), "{fig} produced no output");
     }
+}
+
+/// bench_matchmaker: old-style vs workspace round, reduced (J, S), with
+/// the same argmin cross-check the bench performs.
+#[test]
+fn matchmaker_workload_constructs_and_runs() {
+    use diana::cost::CostWorkspace;
+    use diana::data::ReplicaCache;
+    use diana::scheduler::{build_cost_inputs, build_cost_inputs_into};
+
+    let (nj, ns) = (8usize, 6usize);
+    let cfg = presets::uniform_grid(ns, 32);
+    let topo = Topology::from_config(&cfg);
+    let monitor = PingerMonitor::new(&topo, 0.0, 1);
+    let mut rng = Pcg64::new(0x5eed);
+    let mut catalog = Catalog::new();
+    for d in 0..4 {
+        catalog.add(&format!("d{d}"), 1000.0,
+                    vec![rng.below(ns as u64) as usize]);
+    }
+    let sites: Vec<SiteSnapshot> = (0..ns)
+        .map(|_| SiteSnapshot {
+            queue_len: rng.below(50) as usize,
+            capability: 32.0,
+            load: rng.next_f64(),
+            free_slots: rng.below(33) as usize,
+            cpus: 32,
+            alive: true,
+        })
+        .collect();
+    let jobs: Vec<Job> = (0..nj as u64)
+        .map(|i| Job {
+            id: JobId(i),
+            user: UserId(0),
+            group: None,
+            class: JobClass::Both,
+            input: if i % 4 == 3 { None } else { Some((i % 4) as usize) },
+            in_mb: 100.0 * (1 + i) as f64,
+            out_mb: 50.0,
+            exe_mb: 20.0,
+            cpu_sec: 600.0,
+            procs: 1,
+            submit_site: 0,
+            submit_time: 0.0,
+            quota: 1000.0,
+            migrations: 0,
+        })
+        .collect();
+    let view = GridView {
+        now: 0.0,
+        sites: &sites,
+        monitor: &monitor,
+        catalog: &catalog,
+        q_total: 50,
+        epoch: 0,
+    };
+    let w = Weights { q_total: 50.0, ..Weights::default() };
+    let mut engine = RustEngine::new();
+    let inp = build_cost_inputs(&jobs, &view);
+    let old = engine.schedule_step(&inp, &w).unwrap();
+    let mut ws = CostWorkspace::new();
+    let mut replicas = ReplicaCache::new();
+    for _ in 0..3 {
+        build_cost_inputs_into(&jobs, &view, &mut ws.inputs, &mut replicas);
+        engine.schedule_step_into(&ws.inputs, &w, &mut ws.out).unwrap();
+    }
+    assert_eq!(old.best_total, ws.out.best_total);
+    assert_eq!(old.best_compute, ws.out.best_compute);
+    assert_eq!(old.best_data, ws.out.best_data);
+    assert_eq!(old.total, ws.out.total);
 }

@@ -1,0 +1,156 @@
+//! Workspace/cache ≡ from-scratch equivalence suite.
+//!
+//! The incremental matchmaking core (reused `CostWorkspace` buffers,
+//! event-driven `GridStateCache` rows, epoch-keyed `ReplicaCache`) must
+//! be **behavior-preserving**: every placement, event and report column
+//! must be byte-identical to the paranoid rebuild path
+//! (`GridConfig::paranoid_rebuild`), which reconstructs every scheduling
+//! input from scratch each round. (The one deliberate semantic change
+//! of the refactor — the migration sweep's batch-frozen Q, see
+//! docs/PERFORMANCE.md — applies to both sides of this diff; what the
+//! suite proves is that the *caching* never changes behavior.)
+//!
+//! The check runs a randomized fixture sweep — several topologies ×
+//! workloads × seeds, central and federated, faults included — through
+//! the real sweep runner and diffs the rendered runs/aggregate CSVs
+//! (the same artifacts ci.sh compares between `-j` counts).
+
+use diana::scenario::{run_one, SweepReport, SweepSpec};
+
+/// Run one spec's matrix twice — cached vs paranoid — and assert the
+/// serialized reports match byte-for-byte.
+fn assert_sweep_equivalence(spec_toml: &str, name: &str) {
+    let spec = SweepSpec::from_str_named(spec_toml, name).unwrap();
+    let runs = spec.expand().unwrap();
+    assert!(!runs.is_empty(), "{name}: empty matrix");
+    let mut cached = Vec::with_capacity(runs.len());
+    let mut paranoid = Vec::with_capacity(runs.len());
+    for run in &runs {
+        cached.push(run_one(run, &spec.faults).unwrap());
+        let mut p = run.clone();
+        p.cfg.paranoid_rebuild = true;
+        paranoid.push(run_one(&p, &spec.faults).unwrap());
+    }
+    let a = SweepReport::build(&spec, cached);
+    let b = SweepReport::build(&spec, paranoid);
+    assert_eq!(a.runs_csv(), b.runs_csv(), "{name}: runs CSV diverged");
+    assert_eq!(a.aggregate_csv(), b.aggregate_csv(),
+               "{name}: aggregate CSV diverged");
+    assert_eq!(a.to_json(), b.to_json(), "{name}: JSON diverged");
+}
+
+#[test]
+fn central_matrix_is_equivalent() {
+    // Two topologies (uniform grid, heterogeneous paper testbed) ×
+    // workload axis × seeds.
+    for preset in ["uniform-4x4", "paper-testbed"] {
+        assert_sweep_equivalence(
+            &format!(
+                "name = \"eq-central-{preset}\"\n\
+                 preset = \"{preset}\"\n\
+                 repeats = 2\n\
+                 base_seed = 101\n\
+                 [axes]\n\
+                 jobs = [40, 80]\n\
+                 [set]\n\
+                 bulk_size = 10\n\
+                 cpu_sec_median = 60.0\n\
+                 cpu_sec_sigma = 0.3\n\
+                 in_mb_median = 50.0\n"
+            ),
+            preset,
+        );
+    }
+}
+
+#[test]
+fn migration_pressure_is_equivalent() {
+    // Bursty one-site submission pattern: congestion, §IX sweeps and
+    // batched J×S migration rounds all fire.
+    // NOTE: a `seed` axis and `repeats > 1` are mutually exclusive in
+    // SweepSpec — the explicit axis supplies the repeats here.
+    assert_sweep_equivalence(
+        "name = \"eq-migration\"\n\
+         preset = \"uniform-4x4\"\n\
+         base_seed = 7\n\
+         [axes]\n\
+         seed = [3, 9]\n\
+         [set]\n\
+         jobs = 150\n\
+         bulk_size = 75\n\
+         arrival_rate = 10.0\n\
+         cpu_sec_median = 600.0\n\
+         max_group_per_site = 100\n\
+         congestion_thrs = 0.05\n\
+         migration_period_s = 10.0\n",
+        "eq-migration",
+    );
+}
+
+#[test]
+fn federated_matrix_is_equivalent() {
+    // Peer counts × gossip cadence: delegation views, forwards and
+    // partition-scoped migration all exercised.
+    assert_sweep_equivalence(
+        "name = \"eq-federated\"\n\
+         preset = \"uniform-6x4\"\n\
+         repeats = 2\n\
+         base_seed = 23\n\
+         [axes]\n\
+         federation.peers = [2, 3]\n\
+         [set]\n\
+         jobs = 60\n\
+         bulk_size = 12\n\
+         cpu_sec_median = 120.0\n\
+         federation.gossip_period_s = 20.0\n",
+        "eq-federated",
+    );
+}
+
+#[test]
+fn faulted_run_is_equivalent() {
+    // Faults drive the epoch-invalidation paths: site death (forced
+    // migration), link degradation + heal (topology epoch), blackout.
+    let spec = SweepSpec::from_str_named(
+        "name = \"eq-faults\"\n\
+         preset = \"uniform-4x4\"\n\
+         base_seed = 5\n\
+         [set]\n\
+         jobs = 60\n\
+         bulk_size = 10\n\
+         cpu_sec_median = 60.0\n\
+         [[fault]]\n\
+         at = 10.0\n\
+         kind = \"site-down\"\n\
+         site = \"s2\"\n\
+         [[fault]]\n\
+         at = 40.0\n\
+         kind = \"link-degrade\"\n\
+         from = \"s0\"\n\
+         to = \"s1\"\n\
+         rtt_factor = 10.0\n\
+         loss_add = 0.05\n\
+         capacity_factor = 0.1\n\
+         [[fault]]\n\
+         at = 300.0\n\
+         kind = \"heal\"\n\
+         [[fault]]\n\
+         at = 500.0\n\
+         kind = \"site-up\"\n\
+         site = \"s2\"\n",
+        "eq-faults",
+    )
+    .unwrap();
+    let runs = spec.expand().unwrap();
+    for run in &runs {
+        let a = run_one(run, &spec.faults).unwrap();
+        let mut p = run.clone();
+        p.cfg.paranoid_rebuild = true;
+        let b = run_one(&p, &spec.faults).unwrap();
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.makespan_s, b.makespan_s);
+        assert_eq!(a.migrations, b.migrations);
+        assert_eq!(a.queue.mean, b.queue.mean);
+        assert_eq!(a.turnaround.p99, b.turnaround.p99);
+    }
+}
