@@ -91,6 +91,36 @@ cargo bench --bench bench_matchmaker -- --smoke | tee "$SWEEP_OUT/bench.txt"
 grep -q "matchmaker events/s" "$SWEEP_OUT/bench.txt" \
   || { echo "ci.sh: matchmaker bench lost its events/s line"; exit 1; }
 
+echo "== world bench (smoke) + BENCH_world.json perf trajectory =="
+cargo bench --bench bench_world -- --smoke \
+    --json "$SWEEP_OUT/BENCH_world.json" | tee "$SWEEP_OUT/bench_world.txt"
+grep -q "world events/s" "$SWEEP_OUT/bench_world.txt" \
+  || { echo "ci.sh: world bench lost its events/s line"; exit 1; }
+grep -q '"shapes"' "$SWEEP_OUT/BENCH_world.json" \
+  || { echo "ci.sh: BENCH_world.json malformed"; exit 1; }
+# Soft regression gate against the committed trajectory point: warn
+# (never fail — smoke numbers are noisy) when a shape's events/s drops
+# more than 15% below the recorded value.
+if [ -f BENCH_world.json ]; then
+  for shape in small flood federated; do
+    old=$(grep -o "\"name\": \"$shape\", \"events_per_s\": [0-9.]*" \
+            BENCH_world.json | grep -o '[0-9.]*$' || true)
+    new=$(grep -o "\"name\": \"$shape\", \"events_per_s\": [0-9.]*" \
+            "$SWEEP_OUT/BENCH_world.json" | grep -o '[0-9.]*$' || true)
+    if [ -n "$old" ] && [ -n "$new" ]; then
+      awk -v o="$old" -v n="$new" -v s="$shape" 'BEGIN {
+        if (o > 0 && n < 0.85 * o)
+          printf "ci.sh: ⚠ events/s regression on %s: %.0f -> %.0f (-%.0f%%)\n",
+                 s, o, n, (1 - n / o) * 100
+      }'
+    fi
+  done
+else
+  echo "ci.sh: no committed BENCH_world.json yet — bootstrapping"
+fi
+cp "$SWEEP_OUT/BENCH_world.json" BENCH_world.json
+echo "ci.sh: BENCH_world.json refreshed — commit it to record the trajectory point"
+
 echo "== federation 1-peer == central (CLI, bit-for-bit) =="
 ./target/release/diana run --preset uniform --jobs 40 --seed 11 \
     > "$SWEEP_OUT/central.txt"

@@ -1,0 +1,163 @@
+//! Bench: the whole event loop, end to end — DES **events/s** through
+//! `run_simulation_with` across three workload shapes:
+//!
+//!  * `small`     — the 4-site uniform grid, gentle bulk arrivals (the
+//!                  steady-state baseline every PR must at least hold);
+//!  * `flood`     — a §XI-style bulk flood: big groups, fast arrivals,
+//!                  deep queues (stresses the job slab, the placement
+//!                  buckets and the event heap's high-water mark);
+//!  * `federated` — the flood under a 4-peer federation (adds gossip,
+//!                  delegation and the forward side-table).
+//!
+//! Besides events/s it reports each shape's **peak live jobs** (slab
+//! high-water mark) and **peak heap depth** (pending events) — the two
+//! sizes that bound the event loop's memory footprint.
+//!
+//! `--json <path>` serializes the results; ci.sh writes them to
+//! `BENCH_world.json`, the perf-trajectory data point future PRs
+//! soft-compare against (⚠ at >15% events/s regression). Smoke mode
+//! (`--smoke` / `DIANA_BENCH_SMOKE=1`): fewer samples and jobs, same
+//! output shape.
+
+mod common;
+use common::{bench, black_box};
+
+use diana::config::{presets, GridConfig};
+use diana::coordinator::{generate_workload, run_simulation_with};
+
+struct ShapeResult {
+    name: &'static str,
+    events_per_s: f64,
+    events: u64,
+    peak_live_jobs: usize,
+    peak_heap_depth: usize,
+}
+
+fn small_cfg(smoke: bool) -> GridConfig {
+    let mut cfg = presets::uniform_grid(4, 4);
+    cfg.workload.jobs = if smoke { 60 } else { 300 };
+    cfg.workload.bulk_size = 10;
+    cfg.workload.cpu_sec_median = 60.0;
+    cfg.workload.cpu_sec_sigma = 0.3;
+    cfg.workload.in_mb_median = 50.0;
+    cfg.seed = 11;
+    cfg
+}
+
+fn flood_cfg(smoke: bool) -> GridConfig {
+    let mut cfg = presets::uniform_grid(8, 16);
+    cfg.workload.jobs = if smoke { 200 } else { 2000 };
+    cfg.workload.bulk_size = 50;
+    cfg.workload.arrival_rate = 5.0;
+    cfg.workload.cpu_sec_median = 120.0;
+    cfg.workload.cpu_sec_sigma = 0.4;
+    cfg.workload.in_mb_median = 100.0;
+    cfg.seed = 12;
+    cfg
+}
+
+fn federated_cfg(smoke: bool) -> GridConfig {
+    let mut cfg = flood_cfg(smoke);
+    cfg.workload.jobs = if smoke { 160 } else { 1600 };
+    cfg.federation.peers = 4;
+    cfg.federation.gossip_period_s = 60.0;
+    cfg.seed = 13;
+    cfg
+}
+
+/// Peak resident set (kB) from /proc/self/status, if readable (Linux).
+fn peak_rss_kb() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("VmHWM:"))?;
+    line.split_whitespace().nth(1)?.parse().ok()
+}
+
+fn write_json(path: &str, smoke: bool, shapes: &[ShapeResult]) {
+    let mut out = String::new();
+    out.push_str("{\n  \"bench\": \"bench_world\",\n");
+    out.push_str(&format!("  \"smoke\": {smoke},\n"));
+    out.push_str("  \"shapes\": [\n");
+    for (i, s) in shapes.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"name\": \"{}\", \"events_per_s\": {:.1}, \
+             \"events\": {}, \"peak_live_jobs\": {}, \
+             \"peak_heap_depth\": {}}}{}\n",
+            s.name,
+            s.events_per_s,
+            s.events,
+            s.peak_live_jobs,
+            s.peak_heap_depth,
+            if i + 1 < shapes.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ],\n");
+    match peak_rss_kb() {
+        Some(kb) => out.push_str(&format!("  \"peak_rss_kb\": {kb}\n")),
+        None => out.push_str("  \"peak_rss_kb\": null\n"),
+    }
+    out.push_str("}\n");
+    if let Err(e) = std::fs::write(path, out) {
+        eprintln!("bench_world: could not write {path}: {e}");
+        std::process::exit(1);
+    }
+    println!("bench_world: wrote {path}");
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let smoke = args.iter().any(|a| a == "--smoke")
+        || std::env::var("DIANA_BENCH_SMOKE")
+            .map_or(false, |v| !v.is_empty() && v != "0");
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+    let (warmup, samples) = if smoke { (1, 2) } else { (2, 10) };
+    println!("== bench_world: end-to-end DES events/s {}==",
+             if smoke { "(smoke) " } else { "" });
+
+    let shapes: [(&'static str, GridConfig); 3] = [
+        ("small", small_cfg(smoke)),
+        ("flood", flood_cfg(smoke)),
+        ("federated", federated_cfg(smoke)),
+    ];
+    let mut results = Vec::new();
+    for (name, cfg) in shapes {
+        let subs = generate_workload(&cfg);
+        let mut events = 0u64;
+        let mut peak_live = 0usize;
+        let mut peak_heap = 0usize;
+        let r = bench(
+            &format!("world {name:<9} jobs={}", cfg.workload.jobs),
+            warmup,
+            samples,
+            || {
+                let (w, report) =
+                    run_simulation_with(&cfg, subs.clone()).unwrap();
+                assert_eq!(report.jobs, cfg.workload.jobs, "{name}: dropped jobs");
+                events = w.events_processed();
+                peak_live = w.peak_live_jobs();
+                peak_heap = w.peak_heap_depth();
+                black_box(&w);
+            },
+        );
+        r.throughput(events as f64, "events");
+        let events_per_s = events as f64 / (r.mean_ns() / 1e9);
+        println!(
+            "  └ peak live jobs {peak_live}, peak heap depth {peak_heap}, \
+             {events} events/run"
+        );
+        println!("world events/s ({name}): {events_per_s:.0}");
+        results.push(ShapeResult {
+            name,
+            events_per_s,
+            events,
+            peak_live_jobs: peak_live,
+            peak_heap_depth: peak_heap,
+        });
+    }
+    if let Some(path) = json_path {
+        write_json(&path, smoke, &results);
+    }
+}

@@ -10,7 +10,7 @@
 use crate::util::error::Result;
 
 use crate::cost::CostEngine;
-use crate::job::{Job, JobId};
+use crate::job::{JobId, JobIdx, JobStore};
 use crate::migration::CongestionTracker;
 use crate::priority;
 use crate::queues::{MetaJob, MultilevelQueue};
@@ -37,16 +37,22 @@ impl MetaScheduler {
 
     /// Enqueue a batch (one bulk subgroup arrives as a unit, §VIII) and
     /// run ONE §X re-prioritization sweep over the whole population.
+    /// Jobs arrive as [`JobIdx`] slab handles resolved against `store` —
+    /// the queue entry keeps the handle so dispatch reaches the job row
+    /// without any id lookup.
     pub fn enqueue_batch(
         &mut self,
         engine: &mut dyn CostEngine,
-        jobs: &[&Job],
+        store: &JobStore,
+        idxs: &[JobIdx],
         now: f64,
     ) -> Result<()> {
-        for job in jobs {
+        for &idx in idxs {
+            let job = store.get(idx);
             // Staged unsorted — the sweep below rebuilds global order.
             self.queues.stage(MetaJob {
                 job: job.id,
+                slot: idx,
                 user: job.user,
                 procs: job.procs as u32,
                 quota: job.quota as f32,
@@ -124,7 +130,7 @@ impl MetaScheduler {
 mod tests {
     use super::*;
     use crate::cost::RustEngine;
-    use crate::job::{JobClass, UserId};
+    use crate::job::{Job, JobClass, UserId};
 
     fn job(id: u64, user: u32, procs: usize) -> Job {
         Job {
@@ -145,28 +151,35 @@ mod tests {
         }
     }
 
+    /// Insert jobs into a fresh store, returning it with the handles.
+    fn store_of(jobs: Vec<Job>) -> (JobStore, Vec<JobIdx>) {
+        let mut store = JobStore::new();
+        let idxs = jobs.into_iter().map(|j| store.insert(j)).collect();
+        (store, idxs)
+    }
+
     #[test]
     fn batch_enqueue_prioritizes_fig6_style() {
         let mut ms = MetaScheduler::new(0, 0.0, 60.0);
         let mut e = RustEngine::new();
-        let a1 = job(1, 1, 1);
-        let a2 = job(2, 1, 5);
         let mut b1 = job(3, 2, 1);
         b1.quota = 1700.0;
-        ms.enqueue_batch(&mut e, &[&a1, &a2, &b1], 0.0).unwrap();
+        let (store, idxs) = store_of(vec![job(1, 1, 1), job(2, 1, 5), b1]);
+        ms.enqueue_batch(&mut e, &store, &idxs, 0.0).unwrap();
         assert_eq!(ms.queue_len(), 3);
         // Fig 6: B1 lands in Q1 and is dispatched first.
         let first = ms.pop(1.0).unwrap();
         assert_eq!(first.job, JobId(3));
+        assert_eq!(first.slot, idxs[2]);
     }
 
     #[test]
     fn service_and_arrival_feed_congestion() {
         let mut ms = MetaScheduler::new(0, 0.0, 100.0);
         let mut e = RustEngine::new();
-        let jobs: Vec<Job> = (0..20).map(|i| job(i, 1, 1)).collect();
-        let refs: Vec<&Job> = jobs.iter().collect();
-        ms.enqueue_batch(&mut e, &refs, 0.0).unwrap();
+        let (store, idxs) =
+            store_of((0..20).map(|i| job(i, 1, 1)).collect());
+        ms.enqueue_batch(&mut e, &store, &idxs, 0.0).unwrap();
         // No services yet → fully congested at any threshold < 1.
         assert!(ms.is_congested(10.0, 0.5));
         for t in 0..20 {
@@ -181,10 +194,9 @@ mod tests {
         let mut e = RustEngine::new();
         // One user floods with *heavy* (high-t) jobs: for those,
         // N = T/t < n, so Pr(n) goes negative → Q3/Q4 populate.
-        let jobs: Vec<Job> =
-            (0..10).map(|i| job(i, 1, 1 + (i as usize % 8))).collect();
-        let refs: Vec<&Job> = jobs.iter().collect();
-        ms.enqueue_batch(&mut e, &refs, 0.0).unwrap();
+        let (store, idxs) =
+            store_of((0..10).map(|i| job(i, 1, 1 + (i as usize % 8))).collect());
+        ms.enqueue_batch(&mut e, &store, &idxs, 0.0).unwrap();
         let before = ms.queue_len();
         let cands = ms.migration_candidates(3);
         assert!(!cands.is_empty());
@@ -197,8 +209,8 @@ mod tests {
     fn accept_migrated_requeues() {
         let mut ms = MetaScheduler::new(1, 0.0, 60.0);
         let mut e = RustEngine::new();
-        let j = job(7, 3, 1);
-        ms.enqueue_batch(&mut e, &[&j], 0.0).unwrap();
+        let (store, idxs) = store_of(vec![job(7, 3, 1)]);
+        ms.enqueue_batch(&mut e, &store, &idxs, 0.0).unwrap();
         let meta = ms.remove(JobId(7)).unwrap();
         assert_eq!(ms.queue_len(), 0);
         ms.accept_migrated(&mut e, meta, 50.0).unwrap();

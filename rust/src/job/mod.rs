@@ -5,7 +5,9 @@ pub mod dag;
 pub mod jdl;
 #[allow(clippy::module_inception)]
 pub mod job;
+pub mod store;
 
 pub use dag::{DagError, DataflowDag};
 pub use jdl::{BulkSpec, Jdl, JdlError, JdlValue};
 pub use job::{Group, GroupId, Job, JobClass, JobId, JobState, UserId};
+pub use store::{JobIdx, JobStore};

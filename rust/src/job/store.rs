@@ -1,0 +1,265 @@
+//! Slab-arena job store: the simulation's single owner of all live
+//! [`Job`] rows.
+//!
+//! Jobs enter the store once, at submission, and receive a dense
+//! [`JobIdx`] handle — an index into a flat `Vec<Job>`. Every event that
+//! touches a job afterwards (dispatch, finish, delivery, migration,
+//! federation forwarding) carries the handle and resolves it with one
+//! bounds-checked vector index: no `BTreeMap` walk, no hash, no clone.
+//! The metrics recorder keys its `JobRecord`s by the same index, so the
+//! whole Finish/Deliver path is lookup-free.
+//!
+//! §II dataflow gating lives here too, as slab columns instead of the
+//! old `blocked`/`children` maps: `pending_parents` counts undelivered
+//! parents per job, and the parent→children adjacency is a CSR layout
+//! (`child_start`/`child_count` ranges into one shared `edges` pool),
+//! built per submission by [`JobStore::link_deps`]. Child order within a
+//! parent is the dependency-list order, preserving the exact release
+//! order the map-based implementation produced.
+//!
+//! A `JobId → JobIdx` map is kept for **boundary** queries only (tests,
+//! external inspection via `World::job_by_id`); the event loop never
+//! consults it.
+
+use std::collections::BTreeMap;
+
+use super::job::{Job, JobId};
+
+/// Dense handle of a job in a [`JobStore`] — resolved once at submit,
+/// carried by every event thereafter.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct JobIdx(pub u32);
+
+impl JobIdx {
+    #[inline]
+    pub fn as_usize(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// The slab arena. See the module docs for the layout.
+#[derive(Default)]
+pub struct JobStore {
+    jobs: Vec<Job>,
+    /// §II gating: undelivered parents per job (0 = schedulable).
+    pending_parents: Vec<u32>,
+    /// CSR adjacency: `edges[child_start[p] .. +child_count[p]]` are
+    /// `p`'s dependent children.
+    child_start: Vec<u32>,
+    child_count: Vec<u32>,
+    edges: Vec<JobIdx>,
+    /// Boundary-only reverse lookup (never touched by the event loop).
+    by_id: BTreeMap<u64, JobIdx>,
+    /// Reused per-submission out-degree scratch for `link_deps`.
+    deg_scratch: Vec<u32>,
+}
+
+impl JobStore {
+    pub fn new() -> JobStore {
+        JobStore::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.jobs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.jobs.is_empty()
+    }
+
+    /// Insert a job, returning its dense handle. Handles are assigned
+    /// sequentially: a submission's jobs occupy a contiguous index range.
+    pub fn insert(&mut self, job: Job) -> JobIdx {
+        let idx = JobIdx(self.jobs.len() as u32);
+        self.by_id.insert(job.id.0, idx);
+        self.jobs.push(job);
+        self.pending_parents.push(0);
+        self.child_start.push(0);
+        self.child_count.push(0);
+        idx
+    }
+
+    #[inline]
+    pub fn get(&self, idx: JobIdx) -> &Job {
+        &self.jobs[idx.as_usize()]
+    }
+
+    #[inline]
+    pub fn get_mut(&mut self, idx: JobIdx) -> &mut Job {
+        &mut self.jobs[idx.as_usize()]
+    }
+
+    /// Boundary lookup by job id (tests / external inspection only —
+    /// the event loop resolves ids exactly once, at submit).
+    pub fn lookup(&self, id: JobId) -> Option<JobIdx> {
+        self.by_id.get(&id.0).copied()
+    }
+
+    /// Record one submission's dataflow DAG. `first` is the handle of
+    /// the submission's first job, `n` its job count (handles
+    /// `first .. first+n` — `insert` assigns them contiguously), and
+    /// `deps` the `(parent, child)` pairs as positions within the
+    /// submission. Fills `pending_parents` for the children and the CSR
+    /// child ranges for the parents; within a parent, children keep the
+    /// `deps` order.
+    pub fn link_deps(&mut self, first: JobIdx, n: usize, deps: &[(usize, usize)]) {
+        if deps.is_empty() {
+            return;
+        }
+        let base = first.as_usize();
+        debug_assert!(base + n <= self.jobs.len());
+        self.deg_scratch.clear();
+        self.deg_scratch.resize(n, 0);
+        for &(p, c) in deps {
+            debug_assert!(p < n && c < n && p != c);
+            self.deg_scratch[p] += 1;
+            self.pending_parents[base + c] += 1;
+        }
+        let mut off = self.edges.len() as u32;
+        for p in 0..n {
+            if self.deg_scratch[p] > 0 {
+                self.child_start[base + p] = off;
+                off += self.deg_scratch[p];
+            }
+        }
+        self.edges.resize(off as usize, JobIdx(0));
+        // Second pass fills in deps order; `child_count` doubles as the
+        // per-parent write cursor.
+        for &(p, c) in deps {
+            let slot = self.child_start[base + p] + self.child_count[base + p];
+            self.edges[slot as usize] = JobIdx((base + c) as u32);
+            self.child_count[base + p] += 1;
+        }
+    }
+
+    /// Dependent children of `idx` (empty for non-DAG jobs).
+    #[inline]
+    pub fn children(&self, idx: JobIdx) -> &[JobIdx] {
+        let i = idx.as_usize();
+        let start = self.child_start[i] as usize;
+        let end = start + self.child_count[i] as usize;
+        &self.edges[start..end]
+    }
+
+    #[inline]
+    pub fn has_children(&self, idx: JobIdx) -> bool {
+        self.child_count[idx.as_usize()] > 0
+    }
+
+    /// Undelivered-parent count (0 = schedulable now).
+    #[inline]
+    pub fn pending_parents(&self, idx: JobIdx) -> u32 {
+        self.pending_parents[idx.as_usize()]
+    }
+
+    /// One parent of `idx` delivered. Returns `true` when the last
+    /// parent released and the job became schedulable.
+    #[inline]
+    pub fn release_parent(&mut self, idx: JobIdx) -> bool {
+        let p = &mut self.pending_parents[idx.as_usize()];
+        assert!(*p > 0, "release_parent on an unblocked job {idx:?}");
+        *p -= 1;
+        *p == 0
+    }
+
+    /// Allocated capacities `[jobs, edges]` — for capacity-stability
+    /// assertions (the slab only grows by amortized pushes at submit;
+    /// the event loop itself never allocates here).
+    pub fn capacities(&self) -> [usize; 2] {
+        [self.jobs.capacity(), self.edges.capacity()]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::job::{JobClass, UserId};
+
+    fn job(id: u64) -> Job {
+        Job {
+            id: JobId(id),
+            user: UserId(0),
+            group: None,
+            class: JobClass::Both,
+            input: None,
+            in_mb: 0.0,
+            out_mb: 1.0,
+            exe_mb: 1.0,
+            cpu_sec: 60.0,
+            procs: 1,
+            submit_site: 0,
+            submit_time: 0.0,
+            quota: 1000.0,
+            migrations: 0,
+        }
+    }
+
+    #[test]
+    fn insert_assigns_dense_handles_and_boundary_lookup() {
+        let mut s = JobStore::new();
+        let a = s.insert(job(100));
+        let b = s.insert(job(7));
+        assert_eq!((a, b), (JobIdx(0), JobIdx(1)));
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.get(a).id, JobId(100));
+        assert_eq!(s.lookup(JobId(7)), Some(b));
+        assert_eq!(s.lookup(JobId(1)), None);
+        s.get_mut(b).migrations += 1;
+        assert_eq!(s.get(b).migrations, 1);
+    }
+
+    #[test]
+    fn link_deps_builds_csr_in_dep_order() {
+        let mut s = JobStore::new();
+        let first = s.insert(job(0));
+        for i in 1..5 {
+            s.insert(job(i));
+        }
+        // 0 → {2, 1}; 1 → {3}; 4 independent. Child order within a
+        // parent must be the dependency-list order (2 before 1).
+        s.link_deps(first, 5, &[(0, 2), (0, 1), (1, 3)]);
+        assert_eq!(s.children(JobIdx(0)), &[JobIdx(2), JobIdx(1)]);
+        assert_eq!(s.children(JobIdx(1)), &[JobIdx(3)]);
+        assert!(s.children(JobIdx(4)).is_empty());
+        assert!(!s.has_children(JobIdx(2)));
+        assert_eq!(s.pending_parents(JobIdx(0)), 0);
+        assert_eq!(s.pending_parents(JobIdx(1)), 1);
+        assert_eq!(s.pending_parents(JobIdx(2)), 1);
+        assert_eq!(s.pending_parents(JobIdx(3)), 1);
+    }
+
+    #[test]
+    fn release_parent_counts_down_to_schedulable() {
+        let mut s = JobStore::new();
+        let first = s.insert(job(0));
+        s.insert(job(1));
+        s.insert(job(2));
+        // 2 waits on both 0 and 1.
+        s.link_deps(first, 3, &[(0, 2), (1, 2)]);
+        assert_eq!(s.pending_parents(JobIdx(2)), 2);
+        assert!(!s.release_parent(JobIdx(2)));
+        assert!(s.release_parent(JobIdx(2)));
+    }
+
+    #[test]
+    fn multiple_submissions_share_the_edge_pool() {
+        let mut s = JobStore::new();
+        let f1 = s.insert(job(0));
+        s.insert(job(1));
+        s.link_deps(f1, 2, &[(0, 1)]);
+        let f2 = s.insert(job(2));
+        s.insert(job(3));
+        s.link_deps(f2, 2, &[(0, 1)]);
+        assert_eq!(s.children(JobIdx(0)), &[JobIdx(1)]);
+        assert_eq!(s.children(JobIdx(2)), &[JobIdx(3)]);
+        assert!(s.capacities()[1] >= 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "release_parent on an unblocked job")]
+    fn over_release_panics() {
+        let mut s = JobStore::new();
+        s.insert(job(0));
+        s.release_parent(JobIdx(0));
+    }
+}

@@ -1,10 +1,14 @@
 //! Per-job lifecycle metrics (§VI definitions): queue time, execution
 //! time, turnaround, waiting and response time; plus per-site counters
 //! and the Fig-9/10/11 rate series.
+//!
+//! `JobRecord`s live in a dense `Vec` keyed by the simulation's
+//! [`JobIdx`] slab handle — the **same** index the
+//! [`JobStore`](crate::job::JobStore) assigns at submit — so the
+//! Finish/Deliver hot path updates a record with one vector index
+//! instead of the `BTreeMap` walk the old id-keyed layout required.
 
-use std::collections::BTreeMap;
-
-use crate::job::JobId;
+use crate::job::JobIdx;
 use crate::util::{RateSeries, Summary};
 
 /// Timestamps of one job's lifecycle.
@@ -71,7 +75,8 @@ impl SiteSeries {
 /// The run-wide recorder.
 #[derive(Clone, Debug)]
 pub struct Recorder {
-    jobs: BTreeMap<u64, JobRecord>,
+    /// Dense, `JobIdx`-keyed (shared index with the `JobStore`).
+    jobs: Vec<JobRecord>,
     sites: Vec<SiteSeries>,
     pub migrations: u64,
     /// Jobs delegated away from their home federation peer, counted
@@ -85,7 +90,7 @@ pub struct Recorder {
 impl Recorder {
     pub fn new(n_sites: usize, bucket_s: f64) -> Recorder {
         Recorder {
-            jobs: BTreeMap::new(),
+            jobs: Vec::new(),
             sites: (0..n_sites).map(|_| SiteSeries::new(bucket_s)).collect(),
             migrations: 0,
             delegations: 0,
@@ -94,16 +99,22 @@ impl Recorder {
         }
     }
 
-    pub fn job_mut(&mut self, id: JobId) -> &mut JobRecord {
-        self.jobs.entry(id.0).or_default()
+    /// The record for `idx`, growing the dense table on first touch.
+    /// Steady state (records exist) is a plain vector index.
+    pub fn job_mut(&mut self, idx: JobIdx) -> &mut JobRecord {
+        let i = idx.as_usize();
+        if i >= self.jobs.len() {
+            self.jobs.resize(i + 1, JobRecord::default());
+        }
+        &mut self.jobs[i]
     }
 
-    pub fn job(&self, id: JobId) -> Option<&JobRecord> {
-        self.jobs.get(&id.0)
+    pub fn job(&self, idx: JobIdx) -> Option<&JobRecord> {
+        self.jobs.get(idx.as_usize())
     }
 
-    pub fn on_submit(&mut self, id: JobId, site: usize, t: f64) {
-        self.job_mut(id).submit = t;
+    pub fn on_submit(&mut self, idx: JobIdx, site: usize, t: f64) {
+        self.job_mut(idx).submit = t;
         if site < self.sites.len() {
             self.sites[site].submitted.record(t, 1.0);
         }
@@ -130,7 +141,7 @@ impl Recorder {
     }
 
     pub fn completed_records(&self) -> impl Iterator<Item = &JobRecord> {
-        self.jobs.values().filter(|r| r.delivered > 0.0)
+        self.jobs.iter().filter(|r| r.delivered > 0.0)
     }
 
     pub fn n_completed(&self) -> usize {
@@ -165,7 +176,7 @@ mod tests {
     #[test]
     fn lifecycle_metrics() {
         let mut rec = Recorder::new(2, 10.0);
-        let id = JobId(1);
+        let id = JobIdx(1);
         rec.on_submit(id, 0, 100.0);
         {
             let r = rec.job_mut(id);
@@ -182,12 +193,14 @@ mod tests {
         assert_eq!(r.turnaround(), 160.0);
         assert_eq!(r.response_time(), 1.0);
         assert_eq!(rec.n_completed(), 1);
+        // The sparse slot 0 exists (dense table) but never completed.
+        assert_eq!(rec.n_tracked(), 2);
     }
 
     #[test]
     fn rate_series_track_sites() {
         let mut rec = Recorder::new(2, 10.0);
-        rec.on_submit(JobId(1), 0, 5.0);
+        rec.on_submit(JobIdx(1), 0, 5.0);
         rec.on_execute(1, 6.0);
         rec.on_export(0, 1, 7.0);
         assert_eq!(rec.migrations, 1);
@@ -199,10 +212,10 @@ mod tests {
     #[test]
     fn summaries_only_count_completed() {
         let mut rec = Recorder::new(1, 10.0);
-        rec.on_submit(JobId(1), 0, 0.0); // never completes
-        rec.on_submit(JobId(2), 0, 0.0);
+        rec.on_submit(JobIdx(0), 0, 0.0); // never completes
+        rec.on_submit(JobIdx(1), 0, 0.0);
         {
-            let r = rec.job_mut(JobId(2));
+            let r = rec.job_mut(JobIdx(1));
             r.started = 10.0;
             r.finished = 20.0;
             r.delivered = 21.0;
@@ -215,9 +228,9 @@ mod tests {
     #[test]
     fn throughput() {
         let mut rec = Recorder::new(1, 10.0);
-        for i in 1..=4u64 {
-            rec.on_submit(JobId(i), 0, 0.0);
-            let r = rec.job_mut(JobId(i));
+        for i in 0..4u32 {
+            rec.on_submit(JobIdx(i), 0, 0.0);
+            let r = rec.job_mut(JobIdx(i));
             r.started = 1.0;
             r.finished = 2.0;
             r.delivered = 100.0;

@@ -6,10 +6,21 @@
 
 use std::fmt::Write as _;
 
+use crate::util::stats::order_stats_in_place;
 use crate::util::Summary;
 
 /// Compact distribution snapshot of a [`Summary`]: mean plus p50/p95/p99
-/// and the range, computed with a single sort.
+/// and the range.
+///
+/// Extracting 3 quantiles does not need a sort: the six interpolation
+/// ranks come from `select_nth_unstable` partitions
+/// ([`order_stats_in_place`]) — O(n) expected instead of O(n log n) —
+/// and min/max/mean are single passes over the raw values. The full
+/// sort survives only inside `order_stats_in_place` for the degenerate
+/// "every rank requested" case, and as the reference oracle in the
+/// differential test below. The quantile values are bit-identical to
+/// the sorted implementation (exact order statistics either way); the
+/// mean is defined as the submission-order sum of the raw values.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct SummaryStats {
     pub n: usize,
@@ -24,26 +35,36 @@ pub struct SummaryStats {
 impl SummaryStats {
     /// Snapshot `s` (all-zero for an empty summary).
     pub fn of(s: &Summary) -> SummaryStats {
-        let mut v: Vec<f64> = s.values().to_vec();
-        if v.is_empty() {
+        let vals = s.values();
+        if vals.is_empty() {
             return SummaryStats::default();
         }
-        v.sort_by(f64::total_cmp);
-        let pct = |p: f64| {
-            let rank = (p / 100.0) * (v.len() - 1) as f64;
-            let lo = rank.floor() as usize;
-            let hi = rank.ceil() as usize;
-            let frac = rank - lo as f64;
-            v[lo] * (1.0 - frac) + v[hi] * frac
+        let n = vals.len();
+        let rank = |p: f64| (p / 100.0) * (n - 1) as f64;
+        let (r50, r95, r99) = (rank(50.0), rank(95.0), rank(99.0));
+        let ranks = [
+            r50.floor() as usize,
+            r50.ceil() as usize,
+            r95.floor() as usize,
+            r95.ceil() as usize,
+            r99.floor() as usize,
+            r99.ceil() as usize,
+        ];
+        let mut v = vals.to_vec();
+        let mut stats = [0.0f64; 6];
+        order_stats_in_place(&mut v, &ranks, &mut stats);
+        let interp = |r: f64, lo: f64, hi: f64| {
+            let frac = r - r.floor();
+            lo * (1.0 - frac) + hi * frac
         };
         SummaryStats {
-            n: v.len(),
-            mean: v.iter().sum::<f64>() / v.len() as f64,
-            p50: pct(50.0),
-            p95: pct(95.0),
-            p99: pct(99.0),
-            min: v[0],
-            max: v[v.len() - 1],
+            n,
+            mean: vals.iter().sum::<f64>() / n as f64,
+            p50: interp(r50, stats[0], stats[1]),
+            p95: interp(r95, stats[2], stats[3]),
+            p99: interp(r99, stats[4], stats[5]),
+            min: vals.iter().copied().fold(f64::INFINITY, f64::min),
+            max: vals.iter().copied().fold(f64::NEG_INFINITY, f64::max),
         }
     }
 }
@@ -143,5 +164,54 @@ mod tests {
     #[test]
     fn summary_stats_empty_is_zero() {
         assert_eq!(SummaryStats::of(&Summary::new()), SummaryStats::default());
+    }
+
+    /// Differential: the selection-based snapshot must equal the
+    /// full-sort implementation exactly — quantiles, range and mean —
+    /// across sizes, duplicates and negative values. (The reference's
+    /// mean deliberately sums the *unsorted* values: that is the
+    /// documented definition of `SummaryStats::mean`. The historical
+    /// implementation summed after sorting, which differed in the last
+    /// ULPs; no committed full-content golden predates the change.)
+    #[test]
+    fn summary_stats_selection_matches_sorted_reference() {
+        fn of_sorted(s: &Summary) -> SummaryStats {
+            let vals = s.values();
+            let mut v: Vec<f64> = vals.to_vec();
+            if v.is_empty() {
+                return SummaryStats::default();
+            }
+            v.sort_by(f64::total_cmp);
+            let pct = |p: f64| {
+                let rank = (p / 100.0) * (v.len() - 1) as f64;
+                let lo = rank.floor() as usize;
+                let hi = rank.ceil() as usize;
+                let frac = rank - lo as f64;
+                v[lo] * (1.0 - frac) + v[hi] * frac
+            };
+            SummaryStats {
+                n: v.len(),
+                mean: vals.iter().sum::<f64>() / v.len() as f64,
+                p50: pct(50.0),
+                p95: pct(95.0),
+                p99: pct(99.0),
+                min: v[0],
+                max: v[v.len() - 1],
+            }
+        }
+        let mut state = 0x0dd_ba11_u64;
+        let mut rnd = move || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(11);
+            ((state >> 33) as f64 / 1e5) - 5000.0
+        };
+        for n in [1usize, 2, 3, 5, 19, 100, 777] {
+            let mut vals: Vec<f64> = (0..n).map(|_| rnd()).collect();
+            if n > 6 {
+                vals[1] = vals[n - 2]; // duplicates across the range
+                vals[n / 3] = vals[2 * n / 3];
+            }
+            let s = Summary::from_values(vals);
+            assert_eq!(SummaryStats::of(&s), of_sorted(&s), "n={n}");
+        }
     }
 }

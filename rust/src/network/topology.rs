@@ -13,12 +13,16 @@ pub struct Link {
     pub capacity_mbps: f64,
 }
 
-/// Dense `n×n` link table; index by site indices.
+/// Dense `n×n` link table; index by site indices. Also the single owner
+/// of the site display names: everything that renders a site (logs,
+/// discovery URIs, reports) resolves `site_name(i)` here instead of
+/// carrying per-object `String` clones through sweep setup.
 #[derive(Clone, Debug)]
 pub struct Topology {
     n: usize,
     links: Vec<Link>,
     mss_bytes: f64,
+    names: Vec<String>,
 }
 
 impl Topology {
@@ -53,11 +57,22 @@ impl Topology {
             links[a * n + b] = link;
             links[b * n + a] = link; // symmetric
         }
-        Topology { n, links, mss_bytes: net.mss_bytes }
+        Topology {
+            n,
+            links,
+            mss_bytes: net.mss_bytes,
+            names: cfg.sites.iter().map(|s| s.name.clone()).collect(),
+        }
     }
 
     pub fn n_sites(&self) -> usize {
         self.n
+    }
+
+    /// Display name of site `i` (stored once here — `SiteSim` carries
+    /// only its index).
+    pub fn site_name(&self, i: usize) -> &str {
+        &self.names[i]
     }
 
     #[inline]
@@ -85,6 +100,16 @@ impl Topology {
 
     pub fn mss_bytes(&self) -> f64 {
         self.mss_bytes
+    }
+
+    /// Restore this topology's link state (links + MSS) from `other`
+    /// without touching the name table — the `heal` fault's in-loop
+    /// path, so recovering from a partition allocates nothing (a full
+    /// `clone` would re-allocate every site name mid-run).
+    pub fn restore_links_from(&mut self, other: &Topology) {
+        debug_assert_eq!(self.n, other.n, "topology size mismatch");
+        self.links.copy_from_slice(&other.links);
+        self.mss_bytes = other.mss_bytes;
     }
 
     /// Symmetrically overwrite the link between `a` and `b` — the
@@ -168,6 +193,31 @@ mod tests {
             },
         );
         assert_eq!(t.transfer_seconds(0, 1, 100.0), before);
+    }
+
+    #[test]
+    fn site_names_resolve_from_config() {
+        let cfg = presets::uniform_grid(3, 4);
+        let t = Topology::from_config(&cfg);
+        for (i, s) in cfg.sites.iter().enumerate() {
+            assert_eq!(t.site_name(i), s.name);
+        }
+    }
+
+    #[test]
+    fn restore_links_undoes_degradation_in_place() {
+        let cfg = presets::uniform_grid(3, 4);
+        let pristine = Topology::from_config(&cfg);
+        let mut t = pristine.clone();
+        t.degrade_link(0, 1, 10.0, 0.1, 0.5);
+        assert_ne!(t.link(0, 1), pristine.link(0, 1));
+        t.restore_links_from(&pristine);
+        for a in 0..3 {
+            for b in 0..3 {
+                assert_eq!(t.link(a, b), pristine.link(a, b));
+            }
+        }
+        assert_eq!(t.site_name(1), pristine.site_name(1));
     }
 
     #[test]

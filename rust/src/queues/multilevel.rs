@@ -6,7 +6,7 @@
 //! migrate between queues ("feedback", §VI-B); dispatch pops the best job
 //! of the highest non-empty queue.
 
-use crate::job::{JobId, UserId};
+use crate::job::{JobId, JobIdx, UserId};
 use crate::priority::{aged_priority, queue_for_priority, Assignment,
                       QueuedFacts};
 
@@ -16,6 +16,11 @@ pub const N_QUEUES: usize = 4;
 #[derive(Clone, Copy, Debug)]
 pub struct MetaJob {
     pub job: JobId,
+    /// Slab handle into the world's `JobStore` — what the dispatch and
+    /// migration paths use to reach the full `Job` row in O(1). (`job`
+    /// stays alongside for the §X priority machinery and logs, which
+    /// are id-keyed.)
+    pub slot: JobIdx,
     pub user: UserId,
     pub procs: u32,
     pub quota: f32,
@@ -243,6 +248,7 @@ mod tests {
     fn mj(id: u64, pr: f32, at: f64) -> MetaJob {
         MetaJob {
             job: JobId(id),
+            slot: JobIdx(id as u32),
             user: UserId(1),
             procs: 1,
             quota: 1000.0,

@@ -6,7 +6,7 @@ pub mod grid_cache;
 pub mod site;
 pub mod world;
 
-pub use engine::{EventQueue, SimTime};
+pub use engine::{EventQueue, SidePool, SimTime};
 pub use grid_cache::GridStateCache;
 pub use site::{LocalEntry, SiteSim};
 pub use world::World;

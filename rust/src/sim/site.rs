@@ -1,15 +1,21 @@
 //! Local batch system of one Grid site: `cpus` slots, FCFS local queue —
 //! the Condor/gLite layer DIANA sits on top of (§IV: "We do not replace
 //! the local Schedulers; rather we have added a layer over each").
+//!
+//! Jobs are identified by their [`JobIdx`] slab handle; the site never
+//! resolves ids. Display names live once in
+//! [`Topology`](crate::network::Topology) (`site_name`) — `SiteSim`
+//! carries only its site index, so cloning or rebuilding sites (sweep
+//! setup does this per matrix point) allocates no strings.
 
 use std::collections::VecDeque;
 
-use crate::job::JobId;
+use crate::job::JobIdx;
 
 /// A job occupying slots on the site.
 #[derive(Clone, Copy, Debug)]
 struct Running {
-    job: JobId,
+    job: JobIdx,
     procs: usize,
 }
 
@@ -17,7 +23,7 @@ struct Running {
 /// (staging + execution), decided at dispatch time.
 #[derive(Clone, Copy, Debug)]
 pub struct LocalEntry {
-    pub job: JobId,
+    pub job: JobIdx,
     pub procs: usize,
     /// Seconds of input/executable staging before CPU work starts.
     pub stage_s: f64,
@@ -26,11 +32,13 @@ pub struct LocalEntry {
     pub enqueued_at: f64,
 }
 
-/// The site simulator. The world calls `offer` / `complete` and receives
-/// newly started entries to schedule completion events for.
+/// The site simulator. The world calls `offer_into` / `complete_into`
+/// with a reused output buffer and receives newly started entries to
+/// schedule completion events for.
 #[derive(Clone, Debug)]
 pub struct SiteSim {
-    pub name: String,
+    /// Site index (display names live in `Topology::site_name`).
+    pub site: usize,
     pub cpus: usize,
     pub cpu_speed: f64,
     free: usize,
@@ -42,9 +50,9 @@ pub struct SiteSim {
 }
 
 impl SiteSim {
-    pub fn new(name: impl Into<String>, cpus: usize, cpu_speed: f64) -> SiteSim {
+    pub fn new(site: usize, cpus: usize, cpu_speed: f64) -> SiteSim {
         SiteSim {
-            name: name.into(),
+            site,
             cpus,
             cpu_speed,
             free: cpus,
@@ -80,32 +88,48 @@ impl SiteSim {
         self.cpus as f64 * self.cpu_speed
     }
 
-    /// Offer a job to the local system. Returns the entries that *start*
-    /// right now (the offered one and/or queued ones that now fit).
-    pub fn offer(&mut self, entry: LocalEntry) -> Vec<LocalEntry> {
+    /// Offer a job to the local system, appending the entries that
+    /// *start* right now (the offered one and/or queued ones that now
+    /// fit) to `started` — a caller-owned, reused buffer, so the
+    /// steady-state dispatch path allocates nothing.
+    pub fn offer_into(&mut self, entry: LocalEntry, started: &mut Vec<LocalEntry>) {
         self.queue.push_back(entry);
-        self.drain_startable()
+        self.drain_startable(started);
     }
 
-    /// A running job finished: release slots, start whatever now fits.
-    pub fn complete(&mut self, job: JobId) -> Vec<LocalEntry> {
+    /// A running job finished: release slots, start whatever now fits
+    /// (appended to the reused `started` buffer).
+    pub fn complete_into(&mut self, job: JobIdx, started: &mut Vec<LocalEntry>) {
         if let Some(pos) = self.running.iter().position(|r| r.job == job) {
             let r = self.running.swap_remove(pos);
             self.free += r.procs;
             self.completed += 1;
         }
-        self.drain_startable()
+        self.drain_startable(started);
+    }
+
+    /// Allocating convenience wrapper over [`SiteSim::offer_into`].
+    pub fn offer(&mut self, entry: LocalEntry) -> Vec<LocalEntry> {
+        let mut started = Vec::new();
+        self.offer_into(entry, &mut started);
+        started
+    }
+
+    /// Allocating convenience wrapper over [`SiteSim::complete_into`].
+    pub fn complete(&mut self, job: JobIdx) -> Vec<LocalEntry> {
+        let mut started = Vec::new();
+        self.complete_into(job, &mut started);
+        started
     }
 
     /// FCFS head-of-line start: strict order, no backfilling (the simple
     /// local model the paper assumes; backfilling would blur queue-time
     /// attribution between layers).
-    fn drain_startable(&mut self) -> Vec<LocalEntry> {
-        let mut started = Vec::new();
+    fn drain_startable(&mut self, started: &mut Vec<LocalEntry>) {
         while let Some(head) = self.queue.front() {
             let procs = head.procs.min(self.cpus).max(1);
             if procs <= self.free {
-                let e = self.queue.pop_front().unwrap();
+                let e = self.queue.pop_front().expect("non-empty");
                 self.free -= procs;
                 self.running.push(Running { job: e.job, procs });
                 self.started += 1;
@@ -114,11 +138,10 @@ impl SiteSim {
                 break;
             }
         }
-        started
     }
 
     /// Remove a not-yet-started job (meta-layer migration pulls it back).
-    pub fn cancel_queued(&mut self, job: JobId) -> Option<LocalEntry> {
+    pub fn cancel_queued(&mut self, job: JobIdx) -> Option<LocalEntry> {
         let pos = self.queue.iter().position(|e| e.job == job)?;
         self.queue.remove(pos)
     }
@@ -132,9 +155,9 @@ impl SiteSim {
 mod tests {
     use super::*;
 
-    fn entry(id: u64, procs: usize) -> LocalEntry {
+    fn entry(id: u32, procs: usize) -> LocalEntry {
         LocalEntry {
-            job: JobId(id),
+            job: JobIdx(id),
             procs,
             stage_s: 0.0,
             run_s: 100.0,
@@ -144,7 +167,7 @@ mod tests {
 
     #[test]
     fn starts_until_full_then_queues() {
-        let mut s = SiteSim::new("x", 4, 1.0);
+        let mut s = SiteSim::new(0, 4, 1.0);
         assert_eq!(s.offer(entry(1, 2)).len(), 1);
         assert_eq!(s.offer(entry(2, 2)).len(), 1);
         assert_eq!(s.offer(entry(3, 1)).len(), 0); // full
@@ -155,19 +178,34 @@ mod tests {
 
     #[test]
     fn completion_releases_and_starts_queued() {
-        let mut s = SiteSim::new("x", 4, 1.0);
+        let mut s = SiteSim::new(0, 4, 1.0);
         s.offer(entry(1, 4));
         s.offer(entry(2, 2));
         s.offer(entry(3, 2));
-        let started = s.complete(JobId(1));
+        let started = s.complete(JobIdx(1));
         assert_eq!(started.len(), 2); // both queued jobs fit now
         assert_eq!(s.free_slots(), 0);
         assert_eq!(s.completed, 1);
     }
 
     #[test]
+    fn into_variants_append_to_reused_buffer() {
+        let mut s = SiteSim::new(0, 2, 1.0);
+        let mut started = Vec::new();
+        s.offer_into(entry(1, 2), &mut started);
+        s.offer_into(entry(2, 1), &mut started);
+        assert_eq!(started.len(), 1); // only job 1 started
+        started.clear();
+        let cap = started.capacity();
+        s.complete_into(JobIdx(1), &mut started);
+        assert_eq!(started.len(), 1);
+        assert_eq!(started[0].job, JobIdx(2));
+        assert_eq!(started.capacity(), cap, "reused buffer reallocated");
+    }
+
+    #[test]
     fn fcfs_no_backfill() {
-        let mut s = SiteSim::new("x", 4, 1.0);
+        let mut s = SiteSim::new(0, 4, 1.0);
         s.offer(entry(1, 3));
         s.offer(entry(2, 4)); // blocks (only 1 free)
         s.offer(entry(3, 1)); // would fit but must wait behind job 2
@@ -177,7 +215,7 @@ mod tests {
 
     #[test]
     fn oversized_job_clamped_to_site() {
-        let mut s = SiteSim::new("x", 2, 1.0);
+        let mut s = SiteSim::new(0, 2, 1.0);
         let started = s.offer(entry(1, 10));
         assert_eq!(started.len(), 1); // clamped to 2 slots, runs
         assert_eq!(s.free_slots(), 0);
@@ -185,18 +223,18 @@ mod tests {
 
     #[test]
     fn cancel_queued_job() {
-        let mut s = SiteSim::new("x", 1, 1.0);
+        let mut s = SiteSim::new(0, 1, 1.0);
         s.offer(entry(1, 1));
         s.offer(entry(2, 1));
-        assert!(s.cancel_queued(JobId(2)).is_some());
-        assert!(s.cancel_queued(JobId(2)).is_none());
-        assert!(s.cancel_queued(JobId(1)).is_none()); // already running
+        assert!(s.cancel_queued(JobIdx(2)).is_some());
+        assert!(s.cancel_queued(JobIdx(2)).is_none());
+        assert!(s.cancel_queued(JobIdx(1)).is_none()); // already running
         assert_eq!(s.queue_len(), 0);
     }
 
     #[test]
     fn load_fraction() {
-        let mut s = SiteSim::new("x", 4, 2.0);
+        let mut s = SiteSim::new(0, 4, 2.0);
         s.offer(entry(1, 1));
         assert_eq!(s.load(), 0.25);
         assert_eq!(s.capability(), 8.0);

@@ -1,6 +1,50 @@
 //! Summary statistics, percentiles and fixed-width histograms used by the
 //! metrics recorder and the bench harness.
 
+/// Fill `out[k]` with the `ranks[k]`-th smallest element of `v` (0-based
+/// order statistics) via successive `select_nth_unstable` partitions —
+/// O(n) expected per distinct rank instead of the O(n log n) full sort.
+/// Each partition confines the next selection to the right subslice, so
+/// ascending ranks cost less than independent selections. Ranks may
+/// arrive in any order (duplicates allowed); `v` is partitioned in
+/// place. When the rank set covers the whole slice anyway, one sort is
+/// cheaper than n partitions — that is the only case that still sorts.
+pub(crate) fn order_stats_in_place(
+    v: &mut [f64],
+    ranks: &[usize],
+    out: &mut [f64],
+) {
+    debug_assert_eq!(ranks.len(), out.len());
+    debug_assert!(ranks.iter().all(|&r| r < v.len()));
+    if ranks.len() >= v.len() {
+        v.sort_unstable_by(f64::total_cmp);
+        for (k, &r) in ranks.iter().enumerate() {
+            out[k] = v[r];
+        }
+        return;
+    }
+    let mut order: Vec<usize> = (0..ranks.len()).collect();
+    order.sort_unstable_by_key(|&k| ranks[k]);
+    let mut base = 0usize;
+    let mut prev: Option<(usize, f64)> = None;
+    for &k in &order {
+        let r = ranks[k];
+        if let Some((pr, pv)) = prev {
+            if r == pr {
+                out[k] = pv;
+                continue;
+            }
+        }
+        // Elements below `base` are already known ≤ every remaining
+        // rank's element, so the selection narrows to `v[base..]`.
+        let (_, x, _) =
+            v[base..].select_nth_unstable_by(r - base, f64::total_cmp);
+        out[k] = *x;
+        base = r + 1;
+        prev = Some((r, out[k]));
+    }
+}
+
 /// Running summary of a scalar series.
 #[derive(Clone, Debug, Default)]
 pub struct Summary {
@@ -57,21 +101,25 @@ impl Summary {
         self.values.iter().copied().fold(f64::NEG_INFINITY, f64::max)
     }
 
-    /// Percentile via linear interpolation on the sorted values (p in [0,100]).
+    /// Percentile via linear interpolation on the order statistics
+    /// (p in [0,100]). Selection-based — two `select_nth_unstable`
+    /// partitions instead of a full sort, same values exactly.
     pub fn percentile(&self, p: f64) -> f64 {
         if self.values.is_empty() {
             return 0.0;
         }
-        let mut sorted = self.values.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let rank = (p / 100.0) * (sorted.len() - 1) as f64;
+        let rank = (p / 100.0) * (self.values.len() - 1) as f64;
         let lo = rank.floor() as usize;
         let hi = rank.ceil() as usize;
+        let mut v = self.values.clone();
         if lo == hi {
-            sorted[lo]
+            let (_, x, _) = v.select_nth_unstable_by(lo, f64::total_cmp);
+            *x
         } else {
+            let mut out = [0.0f64; 2];
+            order_stats_in_place(&mut v, &[lo, hi], &mut out);
             let frac = rank - lo as f64;
-            sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+            out[0] * (1.0 - frac) + out[1] * frac
         }
     }
 
@@ -193,6 +241,55 @@ mod tests {
         let s2 = Summary::from_values((0..101).map(|i| i as f64));
         assert_eq!(s2.percentile(95.0), 95.0);
         assert_eq!(s2.median(), 50.0);
+    }
+
+    #[test]
+    fn percentile_selection_matches_sorted_reference() {
+        // Differential: the selection path must reproduce the full-sort
+        // implementation bit-for-bit, including duplicates & negatives.
+        let sorted_pct = |values: &[f64], p: f64| {
+            let mut sorted = values.to_vec();
+            sorted.sort_by(f64::total_cmp);
+            let rank = (p / 100.0) * (sorted.len() - 1) as f64;
+            let (lo, hi) = (rank.floor() as usize, rank.ceil() as usize);
+            let frac = rank - lo as f64;
+            sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+        };
+        let mut state = 0xfeed_5eed_u64;
+        let mut rnd = move || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(7);
+            ((state >> 33) as f64 / 1e6) - 1000.0
+        };
+        for n in [1usize, 2, 3, 7, 100, 501] {
+            let mut vals: Vec<f64> = (0..n).map(|_| rnd()).collect();
+            // Force duplicates into the bigger cases.
+            if n > 4 {
+                vals[n / 2] = vals[0];
+                vals[n - 1] = vals[0];
+            }
+            let s = Summary::from_values(vals.iter().copied());
+            for p in [0.0, 1.0, 25.0, 50.0, 90.0, 95.0, 99.0, 100.0] {
+                assert_eq!(
+                    s.percentile(p),
+                    sorted_pct(&vals, p),
+                    "n={n} p={p}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn order_stats_handle_unsorted_and_duplicate_ranks() {
+        let vals = [5.0, 1.0, 4.0, 2.0, 3.0];
+        let mut v = vals.to_vec();
+        let mut out = [0.0f64; 4];
+        order_stats_in_place(&mut v, &[4, 0, 2, 0], &mut out);
+        assert_eq!(out, [5.0, 1.0, 3.0, 1.0]);
+        // Full-coverage rank set takes the single-sort path.
+        let mut v = vals.to_vec();
+        let mut out = [0.0f64; 5];
+        order_stats_in_place(&mut v, &[0, 1, 2, 3, 4], &mut out);
+        assert_eq!(out, [1.0, 2.0, 3.0, 4.0, 5.0]);
     }
 
     #[test]

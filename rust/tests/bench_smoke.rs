@@ -1,4 +1,4 @@
-//! Smoke tests mirroring the seven `harness = false` bench binaries
+//! Smoke tests mirroring the eight `harness = false` bench binaries
 //! (benches/bench_*.rs): each test constructs the same workload the
 //! bench constructs (at a reduced scale) and runs one iteration of the
 //! benched operation. This guards the bench wiring — the types, builder
@@ -148,6 +148,40 @@ fn sim_workload_constructs_and_runs() {
         diana::coordinator::run_simulation_with(&cfg, subs).unwrap();
     assert_eq!(report.jobs, 20);
     assert!(w.events_processed() > 20);
+}
+
+/// bench_world: the three end-to-end shapes (small / flood / federated)
+/// build and run once each, and the peak counters the bench reports are
+/// live.
+#[test]
+fn world_bench_workloads_construct_and_run() {
+    // Miniature versions of the bench's three shapes.
+    let mut small = presets::uniform_grid(4, 4);
+    small.workload.jobs = 20;
+    small.workload.bulk_size = 10;
+    small.workload.cpu_sec_median = 60.0;
+    small.seed = 11;
+    let mut flood = presets::uniform_grid(8, 16);
+    flood.workload.jobs = 50;
+    flood.workload.bulk_size = 25;
+    flood.workload.arrival_rate = 5.0;
+    flood.workload.cpu_sec_median = 120.0;
+    flood.seed = 12;
+    let mut federated = flood.clone();
+    federated.federation.peers = 4;
+    federated.federation.gossip_period_s = 60.0;
+    federated.seed = 13;
+    for (name, cfg) in
+        [("small", small), ("flood", flood), ("federated", federated)]
+    {
+        let subs = diana::coordinator::generate_workload(&cfg);
+        let (w, report) =
+            diana::coordinator::run_simulation_with(&cfg, subs).unwrap();
+        assert_eq!(report.jobs, cfg.workload.jobs, "{name}");
+        assert!(w.events_processed() > 0, "{name}");
+        assert!(w.peak_live_jobs() > 0, "{name}");
+        assert!(w.peak_heap_depth() > 0, "{name}");
+    }
 }
 
 /// bench_figures: the cheap closed-form figures regenerate.

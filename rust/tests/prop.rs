@@ -6,10 +6,11 @@
 
 use diana::cost::{reprioritize_rust, schedule_step_rust, CostInputs,
                   Weights};
-use diana::job::{JobId, UserId};
+use diana::job::{JobId, JobIdx, UserId};
 use diana::migration::{decide, MigrationDecision, PeerReport};
 use diana::priority::{self, queue_for_priority};
 use diana::queues::{MetaJob, MultilevelQueue};
+use diana::sim::EventQueue;
 use diana::util::Pcg64;
 
 /// Run `cases` random cases; panics with the failing seed.
@@ -170,6 +171,7 @@ fn prop_multilevel_queue_conserves_jobs() {
         for i in 0..n {
             q.insert(MetaJob {
                 job: JobId(i as u64),
+                slot: JobIdx(i as u32),
                 user: UserId(rng.below(5) as u32),
                 procs: 1 + rng.below(8) as u32,
                 quota: rng.uniform(10.0, 5000.0) as f32,
@@ -219,6 +221,7 @@ fn prop_pop_order_respects_queue_levels() {
         for i in 0..n {
             q.insert(MetaJob {
                 job: JobId(i as u64),
+                slot: JobIdx(i as u32),
                 user: UserId(0),
                 procs: 1,
                 quota: 1.0,
@@ -340,6 +343,132 @@ fn prop_padding_preserves_results() {
         for j in 0..inp.n_jobs {
             if padded.best_total[j] != direct.best_total[j] {
                 return Err(format!("job {j} argmin changed by padding"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Reference model for the event queue: the `BinaryHeap`-based
+/// implementation the 4-ary indexed heap replaced, kept verbatim (clamp
+/// semantics included) as the determinism oracle. The golden sweep CSVs
+/// depend on the pop order `(time, seq)` being exactly FIFO for
+/// simultaneous events — this is the contract under test.
+mod reference_heap {
+    use std::cmp::Ordering;
+    use std::collections::BinaryHeap;
+
+    struct Entry<E> {
+        time: f64,
+        seq: u64,
+        event: E,
+    }
+
+    impl<E> PartialEq for Entry<E> {
+        fn eq(&self, other: &Self) -> bool {
+            self.time == other.time && self.seq == other.seq
+        }
+    }
+
+    impl<E> Eq for Entry<E> {}
+
+    impl<E> Ord for Entry<E> {
+        fn cmp(&self, other: &Self) -> Ordering {
+            other
+                .time
+                .total_cmp(&self.time)
+                .then_with(|| other.seq.cmp(&self.seq))
+        }
+    }
+
+    impl<E> PartialOrd for Entry<E> {
+        fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+            Some(self.cmp(other))
+        }
+    }
+
+    pub struct RefQueue<E> {
+        heap: BinaryHeap<Entry<E>>,
+        now: f64,
+        seq: u64,
+    }
+
+    impl<E> Default for RefQueue<E> {
+        fn default() -> Self {
+            Self::new()
+        }
+    }
+
+    impl<E> RefQueue<E> {
+        pub fn new() -> Self {
+            RefQueue { heap: BinaryHeap::new(), now: 0.0, seq: 0 }
+        }
+
+        pub fn schedule(&mut self, at: f64, event: E) {
+            assert!(at.is_finite() && at >= 0.0);
+            let t = if at < self.now { self.now } else { at };
+            self.heap.push(Entry { time: t, seq: self.seq, event });
+            self.seq += 1;
+        }
+
+        pub fn pop(&mut self) -> Option<(f64, u64, E)> {
+            let e = self.heap.pop()?;
+            self.now = e.time;
+            Some((e.time, e.seq, e.event))
+        }
+    }
+}
+
+#[test]
+fn prop_event_heap_matches_binary_heap_reference() {
+    use reference_heap::RefQueue;
+    prop("event heap vs BinaryHeap reference", 60, |rng| {
+        let mut new_q: EventQueue<u64> = EventQueue::new();
+        let mut ref_q: RefQueue<u64> = RefQueue::new();
+        let mut tag = 0u64; // payload = schedule order = expected seq
+        let ops = 200 + rng.below(800);
+        for _ in 0..ops {
+            if rng.next_f64() < 0.6 {
+                // Coarse time grid (×0.25) forces plenty of exact ties,
+                // including past times that exercise the now-clamp.
+                let at = rng.below(400) as f64 * 0.25;
+                new_q.schedule(at, tag);
+                ref_q.schedule(at, tag);
+                tag += 1;
+            } else {
+                let got = new_q.pop();
+                let want = ref_q.pop();
+                match (got, want) {
+                    (None, None) => {}
+                    (Some((t, e)), Some((rt, rseq, re))) => {
+                        if t != rt || e != re || e != rseq {
+                            return Err(format!(
+                                "pop diverged: got ({t}, {e}), reference \
+                                 ({rt}, seq {rseq}, {re})"
+                            ));
+                        }
+                    }
+                    (g, w) => {
+                        return Err(format!(
+                            "emptiness diverged: {g:?} vs reference {w:?}"
+                        ));
+                    }
+                }
+            }
+        }
+        // Drain both: the tails must agree event-for-event too.
+        loop {
+            match (new_q.pop(), ref_q.pop()) {
+                (None, None) => break,
+                (Some((t, e)), Some((rt, rseq, re))) => {
+                    if t != rt || e != re || e != rseq {
+                        return Err(format!(
+                            "drain diverged: got ({t}, {e}), reference \
+                             ({rt}, seq {rseq}, {re})"
+                        ));
+                    }
+                }
+                _ => return Err("drain emptiness diverged".into()),
             }
         }
         Ok(())
