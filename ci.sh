@@ -102,7 +102,7 @@ grep -q '"shapes"' "$SWEEP_OUT/BENCH_world.json" \
 # (never fail — smoke numbers are noisy) when a shape's events/s drops
 # more than 15% below the recorded value.
 if [ -f BENCH_world.json ]; then
-  for shape in small flood federated; do
+  for shape in small flood federated federated-t2 federated-t4; do
     old=$(grep -o "\"name\": \"$shape\", \"events_per_s\": [0-9.]*" \
             BENCH_world.json | grep -o '[0-9.]*$' || true)
     new=$(grep -o "\"name\": \"$shape\", \"events_per_s\": [0-9.]*" \
@@ -120,6 +120,20 @@ else
 fi
 cp "$SWEEP_OUT/BENCH_world.json" BENCH_world.json
 echo "ci.sh: BENCH_world.json refreshed — commit it to record the trajectory point"
+
+echo "== PDES smoke (--sim-threads 1 == 4, CLI, bit-for-bit) =="
+# The conservative parallel engine must be behavior-preserving: the
+# sharded run's full metrics table (every row, incl. the DES event
+# count) must byte-match the serial reference. The in-crate
+# pdes_equivalence suite sweeps whole matrices; this guards the shipped
+# binary end-to-end, and bench_world --smoke above aborts if the
+# federated shape ever silently declines the parallel path.
+./target/release/diana run --preset uniform --jobs 80 --seed 7 \
+    --federation 4 --sim-threads 1 > "$SWEEP_OUT/pdes-t1.txt"
+./target/release/diana run --preset uniform --jobs 80 --seed 7 \
+    --federation 4 --sim-threads 4 > "$SWEEP_OUT/pdes-t4.txt"
+cmp "$SWEEP_OUT/pdes-t1.txt" "$SWEEP_OUT/pdes-t4.txt" \
+  || { echo "ci.sh: --sim-threads 4 diverged from --sim-threads 1"; exit 1; }
 
 echo "== federation 1-peer == central (CLI, bit-for-bit) =="
 ./target/release/diana run --preset uniform --jobs 40 --seed 11 \

@@ -9,6 +9,11 @@
 //!  * `federated` — the flood under a 4-peer federation (adds gossip,
 //!                  delegation and the forward side-table).
 //!
+//! The `federated` shape is then re-run at `--sim-threads 2` and `4`
+//! (`federated-t2` / `federated-t4`) — the conservative-PDES scaling
+//! curve (events/s vs shard threads), asserted event-count-identical
+//! to the serial baseline on every sample.
+//!
 //! Besides events/s it reports each shape's **peak live jobs** (slab
 //! high-water mark) and **peak heap depth** (pending events) — the two
 //! sizes that bound the event loop's memory footprint.
@@ -24,6 +29,8 @@ use common::{bench, black_box};
 
 use diana::config::{presets, GridConfig};
 use diana::coordinator::{generate_workload, run_simulation_with};
+use diana::scenario::FaultPlan;
+use diana::sim::{try_run_parallel, PdesOutcome};
 
 struct ShapeResult {
     name: &'static str,
@@ -155,6 +162,67 @@ fn main() {
             events,
             peak_live_jobs: peak_live,
             peak_heap_depth: peak_heap,
+        });
+    }
+    // PDES scaling shape: the federated workload again, sharded one
+    // EventQueue+JobStore per peer on 2 and 4 threads (`--sim-threads`).
+    // The serial `federated` entry above is the threads=1 baseline, so
+    // the three rows together are the events/s-vs-threads curve that
+    // lands in BENCH_world.json. Each sample must process exactly the
+    // serial event count — anything else means the conservative windows
+    // leaked and the numbers would be fiction.
+    let serial_events = results
+        .iter()
+        .find(|r| r.name == "federated")
+        .map(|r| r.events)
+        .unwrap();
+    {
+        // Guard against a silently-declined (and therefore serial, and
+        // therefore flat) scaling curve.
+        let mut probe = federated_cfg(smoke);
+        probe.sim.threads = 2;
+        let subs = generate_workload(&probe);
+        match try_run_parallel(&probe, subs, &FaultPlan::default()).unwrap() {
+            PdesOutcome::Done(..) => {}
+            PdesOutcome::Declined(_) => {
+                panic!("federated bench shape declined the PDES path")
+            }
+        }
+    }
+    for (name, threads) in [("federated-t2", 2usize), ("federated-t4", 4)] {
+        let mut cfg = federated_cfg(smoke);
+        cfg.sim.threads = threads;
+        let subs = generate_workload(&cfg);
+        let mut events = 0u64;
+        let r = bench(
+            &format!("world {name:<9} jobs={}", cfg.workload.jobs),
+            warmup,
+            samples,
+            || {
+                let (w, report) =
+                    run_simulation_with(&cfg, subs.clone()).unwrap();
+                assert_eq!(report.jobs, cfg.workload.jobs, "{name}: dropped jobs");
+                assert_eq!(
+                    report.events, serial_events,
+                    "{name}: event count diverged from the serial baseline"
+                );
+                // Merged across shards by the PDES assembly (the world's
+                // own counter only covers shard 0 here).
+                events = report.events;
+                black_box(&w);
+            },
+        );
+        r.throughput(events as f64, "events");
+        let events_per_s = events as f64 / (r.mean_ns() / 1e9);
+        println!("world events/s ({name}): {events_per_s:.0}");
+        results.push(ShapeResult {
+            name,
+            events_per_s,
+            events,
+            // Per-shard peaks are not comparable to the single-queue
+            // serial shapes; report the scaling rows as curve-only.
+            peak_live_jobs: 0,
+            peak_heap_depth: 0,
         });
     }
     if let Some(path) = json_path {

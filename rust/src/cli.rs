@@ -14,6 +14,7 @@ USAGE:
   diana run|simulate [--config FILE | --preset NAME] [--policy P]
                  [--jobs N] [--bulk N] [--seed S] [--engine rust|xla|auto]
                  [--federation N] [--fed-topology flat|tree|ring]
+                 [--sim-threads N]
   diana sweep <spec.toml> [-j N] [--out DIR]
   diana sweep --scenario NAME [-j N] [--out DIR]
   diana repro --figure fig3|fig4|fig6|fig7|fig8|fig9|fig10|fig11|all
@@ -24,6 +25,11 @@ USAGE:
 `--federation N` splits the grid across N peer meta-schedulers that
 gossip state and delegate submissions (0 = classic central leader;
 1 reproduces the central run bit-for-bit). See docs/FEDERATION.md.
+
+`--sim-threads N` runs an eligible federated simulation as a
+conservative parallel DES — one event-queue shard per peer, merged at
+lookahead barriers — with bit-identical results to `--sim-threads 1`
+(the serial reference). See docs/PERFORMANCE.md.
 
 PRESETS: paper-testbed (default) | fig4 | cms-tiers | uniform
 SCENARIOS: flash-crowd | diurnal-load | black-hole-site |
@@ -73,6 +79,11 @@ pub fn load_config(args: &Args) -> Result<GridConfig> {
             .ok_or_else(|| {
                 crate::err!("unknown federation topology `{t}` (flat | tree | ring)")
             })?;
+    }
+    if let Some(n) = args.get("sim-threads") {
+        cfg.sim.threads = n.parse().map_err(|_| {
+            crate::err!("--sim-threads wants a thread count, got `{n}`")
+        })?;
     }
     cfg.seed = args.get_u64("seed", cfg.seed);
     cfg.validate().map_err(DianaError::msg)?;

@@ -57,6 +57,7 @@ pub fn load_str(text: &str) -> Result<GridConfig> {
         scheduler: SchedulerConfig::default(),
         workload: WorkloadConfig::default(),
         federation: FederationConfig::default(),
+        sim: SimConfig::default(),
         paranoid_rebuild: false,
     };
 
@@ -182,6 +183,14 @@ pub fn load_str(text: &str) -> Result<GridConfig> {
         d.max_hops = hops as u32;
     }
 
+    if let Some(s) = root.get("sim").and_then(Value::as_table) {
+        let threads = int_or(s, "threads", cfg.sim.threads as i64);
+        if threads <= 0 {
+            bail!("invalid config: sim.threads must be >= 1, got {threads}");
+        }
+        cfg.sim.threads = threads as usize;
+    }
+
     if let Err(e) = cfg.validate() {
         bail!("invalid config: {e}");
     }
@@ -302,6 +311,26 @@ bulk_size = 7
         assert_eq!(cfg.max_events, 1234);
         assert!(load_str(
             "max_events = 0\n[[site]]\nname = \"a\"\ncpus = 1\n"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn sim_section_loads_and_validates() {
+        let cfg = load_str(
+            "[[site]]\nname = \"a\"\ncpus = 1\n[sim]\nthreads = 4\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.sim.threads, 4);
+        let cfg =
+            load_str("[[site]]\nname = \"a\"\ncpus = 1\n").unwrap();
+        assert_eq!(cfg.sim.threads, 1, "default is the serial path");
+        assert!(load_str(
+            "[[site]]\nname = \"a\"\ncpus = 1\n[sim]\nthreads = 0\n"
+        )
+        .is_err());
+        assert!(load_str(
+            "[[site]]\nname = \"a\"\ncpus = 1\n[sim]\nthreads = -2\n"
         )
         .is_err());
     }

@@ -9,6 +9,6 @@ pub mod toml;
 pub use loader::{load_file, load_str};
 pub use schema::{
     EngineKind, FederationConfig, GridConfig, LinkConfig, NetworkConfig,
-    PeerTopology, Policy, SchedulerConfig, SiteConfig, WorkloadConfig,
-    DEFAULT_MAX_EVENTS,
+    PeerTopology, Policy, SchedulerConfig, SimConfig, SiteConfig,
+    WorkloadConfig, DEFAULT_MAX_EVENTS,
 };

@@ -60,6 +60,7 @@ pub fn paper_testbed() -> GridConfig {
             ..WorkloadConfig::default()
         },
         federation: FederationConfig::default(),
+        sim: SimConfig::default(),
         paranoid_rebuild: false,
     }
 }
@@ -107,6 +108,7 @@ pub fn fig4_grid() -> GridConfig {
             ..WorkloadConfig::default()
         },
         federation: FederationConfig::default(),
+        sim: SimConfig::default(),
         paranoid_rebuild: false,
     }
 }
@@ -176,6 +178,7 @@ pub fn cms_tier_grid() -> GridConfig {
             ..WorkloadConfig::default()
         },
         federation: FederationConfig::default(),
+        sim: SimConfig::default(),
         paranoid_rebuild: false,
     }
 }
@@ -200,6 +203,7 @@ pub fn uniform_grid(n: usize, cpus: usize) -> GridConfig {
         scheduler: SchedulerConfig::default(),
         workload: WorkloadConfig::default(),
         federation: FederationConfig::default(),
+        sim: SimConfig::default(),
         paranoid_rebuild: false,
     }
 }

@@ -310,6 +310,26 @@ impl Default for WorkloadConfig {
     }
 }
 
+/// Simulation-engine knobs: how the DES itself executes, not what it
+/// models (no paper parameter lives here).
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    /// Worker threads for the conservative-PDES event loop
+    /// (`sim::pdes`): with `threads >= 2` on an eligible federated run,
+    /// each peer partition drains its own event-queue shard between
+    /// lookahead barriers. 1 (the default) is the serial reference
+    /// path. Results are bit-identical across values —
+    /// `rust/tests/pdes_equivalence.rs` pins it. TOML `[sim] threads`,
+    /// CLI `--sim-threads N`.
+    pub threads: usize,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        Self { threads: 1 }
+    }
+}
+
 /// Default simulation event budget (see [`GridConfig::max_events`]).
 pub const DEFAULT_MAX_EVENTS: u64 = 50_000_000;
 
@@ -326,6 +346,7 @@ pub struct GridConfig {
     pub scheduler: SchedulerConfig,
     pub workload: WorkloadConfig,
     pub federation: FederationConfig,
+    pub sim: SimConfig,
     /// Debug/verification mode: rebuild every scheduling input from
     /// scratch each round instead of using the incremental
     /// `GridStateCache` + replica-row caches. Bit-identical to the
@@ -361,6 +382,9 @@ impl GridConfig {
         }
         if self.max_events == 0 {
             return Err("max_events must be >= 1".into());
+        }
+        if self.sim.threads == 0 {
+            return Err("sim.threads must be >= 1".into());
         }
         if self.scheduler.group_division_factor == 0 {
             return Err("group_division_factor must be ≥ 1".into());
@@ -450,6 +474,10 @@ mod tests {
 
         let mut cfg = presets::uniform_grid(2, 4);
         cfg.max_events = 0;
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = presets::uniform_grid(2, 4);
+        cfg.sim.threads = 0;
         assert!(cfg.validate().is_err());
 
         let mut cfg = presets::uniform_grid(2, 4);

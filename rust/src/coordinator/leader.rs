@@ -66,25 +66,37 @@ pub struct RunReport {
 
 impl RunReport {
     pub fn from_world(w: &World) -> RunReport {
-        let makespan = w
-            .recorder
+        RunReport::from_parts(w.policy_name(), &w.recorder, w.events_processed())
+    }
+
+    /// Build a report straight from a recorder — everything a report
+    /// states lives there. The PDES assembly (`sim::pdes`) calls this
+    /// with its deterministically merged recorder and re-assembled
+    /// event count; keeping the serial path on the same constructor is
+    /// what makes the two reports comparable field-for-field.
+    pub fn from_parts(
+        policy: &'static str,
+        recorder: &crate::metrics::Recorder,
+        events: u64,
+    ) -> RunReport {
+        let makespan = recorder
             .completed_records()
             .map(|r| r.delivered)
             .fold(0.0, f64::max);
         RunReport {
-            policy: w.policy_name(),
-            jobs: w.recorder.n_completed(),
+            policy,
+            jobs: recorder.n_completed(),
             makespan_s: makespan,
-            queue_time: w.recorder.summary(JobRecord::queue_time),
-            exec_time: w.recorder.summary(JobRecord::exec_time),
-            turnaround: w.recorder.summary(JobRecord::turnaround),
-            response_time: w.recorder.summary(JobRecord::response_time),
-            throughput_jobs_per_s: w.recorder.throughput(),
-            migrations: w.recorder.migrations,
-            groups_split: w.recorder.groups_split,
-            groups_whole: w.recorder.groups_whole,
-            delegations: w.recorder.delegations,
-            events: w.events_processed(),
+            queue_time: recorder.summary(JobRecord::queue_time),
+            exec_time: recorder.summary(JobRecord::exec_time),
+            turnaround: recorder.summary(JobRecord::turnaround),
+            response_time: recorder.summary(JobRecord::response_time),
+            throughput_jobs_per_s: recorder.throughput(),
+            migrations: recorder.migrations,
+            groups_split: recorder.groups_split,
+            groups_whole: recorder.groups_whole,
+            delegations: recorder.delegations,
+            events,
         }
     }
 }
@@ -115,6 +127,19 @@ pub fn run_simulation_with_faults(
     subs: Vec<Submission>,
     faults: &FaultPlan,
 ) -> Result<(World, RunReport)> {
+    let mut subs = subs;
+    // `--sim-threads N` / `[sim] threads`: run an eligible federated
+    // simulation as a conservative PDES (one shard per peer — see
+    // `sim::pdes`). Ineligible configs hand the workload back and fall
+    // through to the serial reference path, bit-identical to threads=1.
+    if cfg.sim.threads > 1 {
+        match crate::sim::try_run_parallel(cfg, subs, faults)? {
+            crate::sim::PdesOutcome::Done(world, report) => {
+                return Ok((*world, report));
+            }
+            crate::sim::PdesOutcome::Declined(returned) => subs = returned,
+        }
+    }
     let engine_for_picker = make_engine(cfg.scheduler.engine)?;
     let engine_for_world = make_engine(cfg.scheduler.engine)?;
     let picker = make_picker(

@@ -136,6 +136,14 @@ impl Recorder {
         }
     }
 
+    /// Install a site's full activity series wholesale — the PDES merge
+    /// (`sim::pdes`) adopts each series from the shard that owns the
+    /// site, since every series has exactly one writer under the
+    /// partition protocol.
+    pub(crate) fn adopt_site_series(&mut self, site: usize, series: SiteSeries) {
+        self.sites[site] = series;
+    }
+
     pub fn site_series(&self, site: usize) -> &SiteSeries {
         &self.sites[site]
     }

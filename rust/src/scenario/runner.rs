@@ -49,6 +49,44 @@ pub fn run_one(run: &RunSpec, faults: &FaultPlan) -> Result<RunResult> {
 /// Run the whole sweep on up to `threads` workers and aggregate.
 pub fn run_sweep(spec: &SweepSpec, threads: usize) -> Result<SweepReport> {
     let runs = spec.expand()?;
+    let results = run_matrix(&runs, &spec.faults, threads, run_one)?;
+    Ok(SweepReport::build(spec, results))
+}
+
+/// The run's matrix position for error messages: `index [k=v, ...]`.
+fn matrix_position(run: &RunSpec) -> String {
+    let labels: Vec<String> = run
+        .labels
+        .iter()
+        .map(|(k, v)| format!("{k}={v}"))
+        .collect();
+    format!("run {} [{}]", run.index, labels.join(", "))
+}
+
+/// Best-effort text of a worker panic payload.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    payload
+        .downcast_ref::<&str>()
+        .map(|s| s.to_string())
+        .or_else(|| payload.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "non-string panic payload".to_string())
+}
+
+/// Drain the matrix on a scoped worker pool. A `runner` panic is
+/// caught in the worker and converted into that slot's error — carrying
+/// the run's matrix position and the panic text — instead of poisoning
+/// the scoped join with an anonymous "a scoped thread panicked" abort
+/// that says nothing about *which* run died (and would leave sibling
+/// slot mutexes poisoned behind it).
+fn run_matrix<F>(
+    runs: &[RunSpec],
+    faults: &FaultPlan,
+    threads: usize,
+    runner: F,
+) -> Result<Vec<RunResult>>
+where
+    F: Fn(&RunSpec, &FaultPlan) -> Result<RunResult> + Sync,
+{
     let n = runs.len();
     let workers = threads.clamp(1, n.max(1));
     let next = AtomicUsize::new(0);
@@ -64,7 +102,16 @@ pub fn run_sweep(spec: &SweepSpec, threads: usize) -> Result<SweepReport> {
                 if i >= n {
                     break;
                 }
-                let res = run_one(&runs[i], &spec.faults);
+                let res = std::panic::catch_unwind(
+                    std::panic::AssertUnwindSafe(|| runner(&runs[i], faults)),
+                )
+                .unwrap_or_else(|payload| {
+                    Err(crate::err!(
+                        "{} panicked: {}",
+                        matrix_position(&runs[i]),
+                        panic_message(payload.as_ref())
+                    ))
+                });
                 *slots[i].lock().unwrap() = Some(res);
             });
         }
@@ -83,7 +130,7 @@ pub fn run_sweep(spec: &SweepSpec, threads: usize) -> Result<SweepReport> {
             }
         }
     }
-    Ok(SweepReport::build(spec, results))
+    Ok(results)
 }
 
 #[cfg(test)]
@@ -128,6 +175,26 @@ mod tests {
         assert_eq!(a.runs_csv(), b.runs_csv());
         assert_eq!(a.aggregate_csv(), b.aggregate_csv());
         assert_eq!(a.to_json(), b.to_json());
+    }
+
+    #[test]
+    fn panicking_run_reports_matrix_position() {
+        let spec = tiny_spec();
+        let runs = spec.expand().unwrap();
+        let err = run_matrix(&runs, &spec.faults, 2, |run, faults| {
+            if run.index == 2 {
+                panic!("boom in the cost model");
+            }
+            run_one(run, faults)
+        })
+        .unwrap_err()
+        .to_string();
+        // The worker panic must surface as an error naming the exact
+        // matrix position, not abort the scoped join anonymously.
+        assert!(err.contains("sweep run 2 failed"), "got: {err}");
+        assert!(err.contains("run 2 ["), "got: {err}");
+        assert!(err.contains("policy="), "got: {err}");
+        assert!(err.contains("boom in the cost model"), "got: {err}");
     }
 
     #[test]

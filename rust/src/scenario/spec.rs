@@ -525,6 +525,8 @@ pub fn apply_param(cfg: &mut GridConfig, key: &str, v: &ParamValue) -> Result<()
         "federation.max_hops" | "federation_max_hops" => {
             cfg.federation.max_hops = u(key, v)? as u32
         }
+        // simulation engine
+        "sim.threads" | "sim_threads" => cfg.sim.threads = u(key, v)?,
         // network defaults
         "default_rtt_ms" => cfg.network.default_rtt_ms = f(key, v)?,
         "default_loss" => cfg.network.default_loss = f(key, v)?,
@@ -545,7 +547,7 @@ pub fn apply_param(cfg: &mut GridConfig, key: &str, v: &ParamValue) -> Result<()
              default_quota, migration_period_s, max_migrations; \
              federation: federation.peers, federation.topology, \
              federation.gossip_period_s, federation.delegation_threshold, \
-             federation.max_hops; network: \
+             federation.max_hops; sim: sim.threads; network: \
              default_rtt_ms, default_loss, default_capacity_mbps, \
              local_bw_mbps, local_loss, mss_bytes, monitor_noise, \
              monitor_period_s; top level: seed, max_events)"

@@ -171,6 +171,57 @@ impl<E> EventQueue<E> {
         self.heap.first().map(|e| e.time)
     }
 
+    /// Pop the next event only if it fires **strictly before**
+    /// `horizon`. The conservative-PDES window drain: a shard may
+    /// consume its local timeline up to (but excluding) the current
+    /// lookahead barrier; events at or past the barrier stay pending
+    /// for a later window.
+    pub fn pop_before(&mut self, horizon: SimTime) -> Option<(SimTime, E)> {
+        match self.peek_time() {
+            Some(t) if t < horizon => self.pop(),
+            _ => None,
+        }
+    }
+
+    /// Remove every pending entry whose event matches `pred`, appending
+    /// them to `out` as `(time, seq, event)` sorted by `(time, seq)` —
+    /// exactly the order they would have popped in. The clock and the
+    /// processed count are untouched: drained events were *extracted*,
+    /// not processed (the PDES barrier hands them to another shard's
+    /// queue, where each is popped exactly once). The surviving entries
+    /// are re-heapified in place; no buffer is reallocated.
+    pub fn drain_matching_into(
+        &mut self,
+        mut pred: impl FnMut(&E) -> bool,
+        out: &mut Vec<(SimTime, u64, E)>,
+    ) {
+        let first_new = out.len();
+        // Swap matches past `n`, keeping survivors (in arbitrary heap
+        // order) in the prefix.
+        let mut i = 0;
+        let mut n = self.heap.len();
+        while i < n {
+            if pred(&self.heap[i].event) {
+                n -= 1;
+                self.heap.swap(i, n);
+            } else {
+                i += 1;
+            }
+        }
+        out.extend(self.heap.drain(n..).map(|e| (e.time, e.seq, e.event)));
+        if out.len() == first_new {
+            return; // nothing matched; heap order is untouched
+        }
+        // Floyd heapify restores the 4-ary invariant over the survivors.
+        if n > 1 {
+            for i in (0..=(n - 2) / D).rev() {
+                self.sift_down(i);
+            }
+        }
+        out[first_new..]
+            .sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+    }
+
     #[inline]
     fn sift_up(&mut self, mut i: usize) {
         while i > 0 {
@@ -443,6 +494,70 @@ mod tests {
         assert_eq!(q.peak_len(), 8);
         assert_eq!(q.len(), 1);
         assert!(q.capacity() >= 8);
+    }
+
+    #[test]
+    fn pop_before_respects_the_horizon() {
+        let mut q = EventQueue::new();
+        q.schedule(1.0, "a");
+        q.schedule(2.0, "b");
+        q.schedule(2.0, "b2"); // exactly at a horizon → stays pending
+        q.schedule(3.0, "c");
+        let mut drained = Vec::new();
+        while let Some((_, e)) = q.pop_before(2.0) {
+            drained.push(e);
+        }
+        assert_eq!(drained, vec!["a"]);
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.now(), 1.0);
+        // A later window picks up where the last one stopped.
+        while let Some((_, e)) = q.pop_before(10.0) {
+            drained.push(e);
+        }
+        assert_eq!(drained, vec!["a", "b", "b2", "c"]);
+        assert!(q.pop_before(f64::INFINITY).is_none());
+    }
+
+    #[test]
+    fn drain_matching_extracts_in_pop_order_and_keeps_the_rest() {
+        let mut q = EventQueue::new();
+        for i in 0..50u32 {
+            q.schedule(((i * 7) % 10) as f64, i);
+        }
+        let mut cross = Vec::new();
+        q.drain_matching_into(|e| e % 3 == 0, &mut cross);
+        // Extracted events come out sorted by (time, seq) …
+        assert!(cross.windows(2).all(|w| {
+            (w[0].0, w[0].1) < (w[1].0, w[1].1)
+        }));
+        assert!(cross.iter().all(|&(_, _, e)| e % 3 == 0));
+        assert_eq!(cross.len(), 17);
+        // … extraction is not processing …
+        assert_eq!(q.processed(), 0);
+        // … and the survivors still pop in exact (time, seq) order.
+        let mut last = (f64::NEG_INFINITY, 0u64);
+        let mut kept = 0;
+        while let Some((t, e)) = q.pop() {
+            assert!(e % 3 != 0, "extracted event still popped");
+            let key = (t, e as u64);
+            assert!(t > last.0 || t == last.0, "heap order broken");
+            last = key;
+            kept += 1;
+        }
+        assert_eq!(kept, 33);
+    }
+
+    #[test]
+    fn drain_matching_with_no_match_is_inert() {
+        let mut q = EventQueue::new();
+        q.schedule(1.0, 1);
+        q.schedule(2.0, 2);
+        let mut out: Vec<(f64, u64, i32)> = Vec::new();
+        q.drain_matching_into(|_| false, &mut out);
+        assert!(out.is_empty());
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop(), Some((1.0, 1)));
+        assert_eq!(q.pop(), Some((2.0, 2)));
     }
 
     #[test]

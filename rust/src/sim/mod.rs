@@ -3,10 +3,12 @@
 
 pub mod engine;
 pub mod grid_cache;
+pub mod pdes;
 pub mod site;
 pub mod world;
 
 pub use engine::{EventQueue, SidePool, SimTime};
 pub use grid_cache::GridStateCache;
+pub use pdes::{try_run_parallel, Mailbox, PdesOutcome};
 pub use site::{LocalEntry, SiteSim};
 pub use world::World;

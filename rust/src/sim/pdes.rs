@@ -1,0 +1,955 @@
+//! Conservative parallel discrete-event simulation of the peer
+//! federation: one event-queue/job-store shard per peer, synchronized
+//! at lookahead barriers (`[sim] threads` / `--sim-threads N`).
+//!
+//! # Protocol
+//!
+//! Each federation peer runs as a full `World` replica (identical
+//! config and seeds ⇒ bit-identical topology, monitor RNG stream,
+//! catalog and federation tables on every shard) that is authoritative
+//! only for its own partition: its sites, meta queues, home submissions
+//! and recorder rows. Grid-global services — monitor sweeps, gossip
+//! exchanges, migration checks and fault injection — run on a small
+//! coordinator event queue and are replayed identically on every
+//! replica, exactly where the serial loop would have processed them.
+//!
+//! Between coordinator events the shards advance concurrently through
+//! *conservative windows*: with `T_min` the earliest pending shard
+//! event and `L` the lookahead (the cheapest possible cross-peer
+//! latency, derived below), every event strictly before
+//!
+//! ```text
+//! window_end = min(t_fault, t_service, T_min + L)
+//! ```
+//!
+//! is causally independent of any message another shard could still
+//! send — a cross-peer event generated at `t ≥ T_min` arrives at
+//! `t + latency ≥ T_min + L ≥ window_end`. Shards therefore drain
+//! their windows in parallel (scoped threads over shard chunks, the
+//! `scenario::runner` worker-pool pattern) without ever seeing a
+//! straggler from the past.
+//!
+//! At each barrier the cross-shard events still pending in the source
+//! heaps — `Forward` batches (delegation always targets a remote peer)
+//! and `Deliver`s homing to another partition — are extracted as
+//! timestamped messages, merged deterministically on
+//! `(time, sender_peer, sender_seq)` (see [`Mailbox`]), and injected
+//! into their destination shards. Merge order fixes the receiver-side
+//! sequence numbers, so the pop order among simultaneous arrivals does
+//! not depend on thread count or OS scheduling.
+//!
+//! # Lookahead derivation
+//!
+//! Only two event kinds cross shards, and both carry a topology-priced
+//! latency:
+//!
+//! * delegation forwards: `2·rtt(gw_a, gw_b) + transfer(gw_a, gw_b,
+//!   CTRL_MB_PER_JOB · n_jobs)` over gateway links — minimized over
+//!   ordered peer pairs at `n_jobs = 1` (transfer time is monotone in
+//!   payload);
+//! * output delivery home: `transfer(exec_site, submit_site, out_mb)`
+//!   — minimized over cross-partition site pairs at the smallest
+//!   `out_mb` in the loaded workload.
+//!
+//! `L` is the minimum of the two, recomputed after every replicated
+//! topology fault (degrade/partition/heal can only tighten or relax
+//! link prices). A non-positive `L` declines the parallel path up
+//! front; a fault collapsing it mid-run is an error directing the user
+//! back to `--sim-threads 1`.
+//!
+//! # Determinism
+//!
+//! `--sim-threads 1` (or any ineligible config) runs the unmodified
+//! serial path, which stays the reference oracle; `--sim-threads N`
+//! for any `N` produces byte-identical reports because every source of
+//! order is derived from simulation state, never from execution
+//! interleaving. Coordinator-vs-shard ties at equal timestamps follow
+//! the serial sequence discipline: faults (lowest serial seqs — loaded
+//! before submissions) win every tie; services win ties against shard
+//! events because the only shard events that land *exactly* on a
+//! service tick are the ones a same-tick barrier service just created
+//! (the migration sweep's `Dispatch(t)`), which carry serially higher
+//! seqs than every service armed before the barrier. Remaining
+//! collision classes — a pre-existing shard event (or two derived
+//! events from different shards) at the exact same float timestamp —
+//! sit on a measure-zero set of the continuous event-time distribution
+//! and are documented in `docs/PERFORMANCE.md`; the equivalence suite
+//! (`tests/pdes_equivalence.rs`) pins the committed scenarios.
+//!
+//! Known replica divergences, none observable in reports: discovery
+//! heartbeats are skipped (the registry feeds no scheduling decision
+//! or serialized output), shard catalogs accumulate only the datasets
+//! their jobs referenced, and `World::group_results` is concatenated
+//! in peer order rather than completion order (not serialized).
+
+use crate::config::{EngineKind, GridConfig, Policy};
+use crate::coordinator::RunReport;
+use crate::cost::RustEngine;
+use crate::federation::Partition;
+use crate::job::{JobId, JobIdx};
+use crate::metrics::Recorder;
+use crate::scenario::{FaultPlan, ResolvedFault};
+use crate::scheduler::{make_picker, SiteSnapshot};
+use crate::sim::engine::EventQueue;
+use crate::sim::world::{PdesMsg, World, CTRL_MB_PER_JOB, RECORDER_BUCKET_S};
+use crate::util::{DianaError, Result};
+use crate::workload::Submission;
+
+/// What `try_run_parallel` did with the run.
+pub enum PdesOutcome {
+    /// The parallel engine ran to completion: the merged world (shard 0
+    /// carrying the deterministically merged recorder/results) and its
+    /// report.
+    Done(Box<World>, RunReport),
+    /// The config or workload is outside the parallel envelope; the
+    /// untouched submissions come back so the caller can run the serial
+    /// reference path.
+    Declined(Vec<Submission>),
+}
+
+/// Deterministic cross-shard message merge: barriers collect
+/// `(arrival_time, sender_peer, sender_seq, message)` from every shard
+/// and drain them in `(time, sender_peer, sender_seq)` order, so the
+/// receiver assigns sequence numbers — and therefore pop order among
+/// simultaneous arrivals — identically for every thread count. The
+/// backing buffer keeps its capacity across barriers.
+///
+/// Generic so the property suite can drive the merge discipline with a
+/// synthetic payload against a single-queue oracle.
+pub struct Mailbox<T> {
+    msgs: Vec<(f64, usize, u64, T)>,
+}
+
+impl<T> Default for Mailbox<T> {
+    fn default() -> Self {
+        Mailbox::new()
+    }
+}
+
+impl<T> Mailbox<T> {
+    pub fn new() -> Mailbox<T> {
+        Mailbox { msgs: Vec::new() }
+    }
+
+    pub fn push(&mut self, time: f64, sender_peer: usize, sender_seq: u64, msg: T) {
+        self.msgs.push((time, sender_peer, sender_seq, msg));
+    }
+
+    pub fn len(&self) -> usize {
+        self.msgs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.msgs.is_empty()
+    }
+
+    /// Allocated capacity of the backing buffer (capacity-stability
+    /// assertions).
+    pub fn capacity(&self) -> usize {
+        self.msgs.capacity()
+    }
+
+    /// Drain every queued message in `(time, sender_peer, sender_seq)`
+    /// order. The key is total — `(sender_peer, sender_seq)` is unique
+    /// per message — so the order is independent of push order.
+    pub fn drain_merged(
+        &mut self,
+    ) -> std::vec::Drain<'_, (f64, usize, u64, T)> {
+        self.msgs.sort_by(|a, b| {
+            a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2))
+        });
+        self.msgs.drain(..)
+    }
+}
+
+/// A chunk of shards handed to one worker thread for a window drain.
+///
+/// `World` is not `Send` in general: its `Box<dyn SitePicker>` /
+/// `Box<dyn CostEngine>` may hold the XLA backend's PJRT client (an
+/// `Rc` internally — see `scheduler::traits`). The parallel gate
+/// ([`eligible`]) is what makes shipping a shard across a scoped join
+/// sound here.
+struct ShardChunk<'a>(&'a mut [World]);
+
+// SAFETY: every `World` reaching `drain_parallel` was built by
+// `build_shard`, which instantiates both trait objects from
+// `RustEngine::new()`-backed concrete types (`RustEngine` and the
+// pickers `make_picker` returns for it) — plain owned data, no `Rc`,
+// `RefCell` or raw pointers anywhere in their reach — and `eligible`
+// guarantees the engine resolves to the Rust backend (an `Auto` config
+// that would pick XLA declines). Every other `World` field is owned
+// `std` data. The wrapper exists only for the duration of one scoped
+// spawn; exclusive `&mut` access per chunk is enforced by
+// `chunks_mut`.
+unsafe impl Send for ShardChunk<'_> {}
+
+/// One coordinator service event. Faults live in a separate sorted
+/// list (they are known up front and never re-arm); keeping services
+/// in an `EventQueue` reproduces the serial heap's seq discipline for
+/// equal-time service collisions — e.g. the bootstrap `Gossip` seq
+/// predating the first `Monitor` re-arm, which decides the t=60 order.
+#[derive(Clone, Copy, Debug)]
+enum CoordEv {
+    Monitor,
+    MigrationCheck,
+    Gossip,
+}
+
+/// The sharded simulation: per-peer `World` replicas plus the
+/// coordinator state driving windows and barriers. Re-runnable like
+/// the serial `World` (load more, run again) so steady-state floods
+/// can pin buffer reuse across rounds.
+struct ShardedWorld {
+    worlds: Vec<World>,
+    partition: Partition,
+    /// Worker threads for window drains (≤ shard count).
+    threads: usize,
+    coord: EventQueue<CoordEv>,
+    faults: Vec<(f64, ResolvedFault)>,
+    next_fault: usize,
+    /// Conservative lookahead `L` (see module docs); +∞ until a
+    /// workload is loaded.
+    lookahead: f64,
+    /// Smallest `out_mb` across every job ever loaded — the deliver
+    /// term of `L`.
+    min_out_mb: f64,
+    services_started: bool,
+    /// Scratch: assembled global site rows (gossip / migration input).
+    global: Vec<SiteSnapshot>,
+    /// Cross-shard messages in flight at a barrier.
+    mailbox: Mailbox<PdesMsg>,
+    /// Scratch for per-shard extraction.
+    extract: Vec<(f64, u64, PdesMsg)>,
+    /// `(job id, submit site)` in serial submission order — rank `r`
+    /// here is the serial run's `JobIdx(r)`, the recorder-merge key.
+    job_order: Vec<(JobId, usize)>,
+}
+
+fn build_shard(cfg: &GridConfig) -> World {
+    let picker = make_picker(
+        cfg.scheduler.policy,
+        Box::new(RustEngine::new()),
+        &cfg.scheduler,
+        cfg.seed,
+    );
+    World::new(cfg.clone(), picker, Box::new(RustEngine::new()))
+}
+
+/// The minimum latency any cross-shard event can carry under the
+/// current topology (module docs: forward term over gateway pairs,
+/// deliver term over cross-partition site pairs at `min_out_mb`).
+fn compute_lookahead(w: &World, part: &Partition, min_out_mb: f64) -> f64 {
+    let topo = &w.topo;
+    let n_peers = part.n_peers();
+    let mut l = f64::INFINITY;
+    for p in 0..n_peers {
+        for q in 0..n_peers {
+            if p == q {
+                continue;
+            }
+            let a = part.gateway(p);
+            let b = part.gateway(q);
+            let link = topo.link(a, b);
+            l = l.min(
+                2.0 * link.rtt_ms / 1000.0
+                    + topo.transfer_seconds(a, b, CTRL_MB_PER_JOB),
+            );
+        }
+    }
+    if min_out_mb.is_finite() {
+        for a in 0..topo.n_sites() {
+            for b in 0..topo.n_sites() {
+                if part.peer_of(a) != part.peer_of(b) {
+                    l = l.min(topo.transfer_seconds(a, b, min_out_mb));
+                }
+            }
+        }
+    }
+    l
+}
+
+/// Is this run inside the parallel envelope? Anything `false` here
+/// silently runs the bit-identical serial path instead.
+fn eligible(
+    cfg: &GridConfig,
+    subs: &[Submission],
+    faults: &[(f64, ResolvedFault)],
+) -> bool {
+    // Multiple live peers: one shard per peer is the decomposition.
+    if cfg.sim.threads < 2 {
+        return false;
+    }
+    if cfg.federation.peers == 0
+        || cfg.federation.peers.min(cfg.sites.len()) < 2
+    {
+        return false;
+    }
+    // RandomPick holds a PRNG whose draw order is the serial event
+    // order; replicas would diverge from the reference stream.
+    if cfg.scheduler.policy == Policy::Random {
+        return false;
+    }
+    // The `ShardChunk` Send justification requires the pure-Rust cost
+    // engine (an XLA engine holds a thread-bound PJRT client).
+    let rust_engine = match cfg.scheduler.engine {
+        EngineKind::Rust => true,
+        EngineKind::Xla => false,
+        EngineKind::Auto => {
+            !(cfg!(feature = "xla")
+                && crate::runtime::client::artifacts_available())
+        }
+    };
+    if !rust_engine {
+        return false;
+    }
+    if subs.is_empty() || subs.iter().any(|s| s.jobs.is_empty()) {
+        return false;
+    }
+    // One home peer per submission: the generator submits each bulk
+    // from a single client site, and the shard protocol (home recorder
+    // rows, owner-only site series) depends on it. Defensive for
+    // programmatically built workloads.
+    if subs.iter().any(|s| {
+        let home = s.jobs[0].submit_site;
+        s.jobs.iter().any(|j| j.submit_site != home)
+    }) {
+        return false;
+    }
+    // Topology-class faults replicate cleanly; site/peer lifecycle
+    // faults would re-route submissions and wake the §IX dead-site
+    // escape hatch, whose polling crosses partitions.
+    faults.iter().all(|(_, f)| {
+        matches!(
+            f,
+            ResolvedFault::LinkDegrade { .. }
+                | ResolvedFault::Partition { .. }
+                | ResolvedFault::Heal
+                | ResolvedFault::MonitorBlackout { .. }
+        )
+    })
+}
+
+/// Drain one conservative window on every shard, in parallel chunks.
+/// Chunk boundaries depend only on shard count and `threads`, never on
+/// execution order. Worker panics resume on the caller; worker errors
+/// surface as the first shard's error in index order.
+fn drain_parallel(
+    worlds: &mut [World],
+    window_end: f64,
+    threads: usize,
+) -> Result<()> {
+    if threads <= 1 || worlds.len() <= 1 {
+        for w in worlds.iter_mut() {
+            w.pdes_drain_window(window_end)?;
+        }
+        return Ok(());
+    }
+    let per = (worlds.len() + threads - 1) / threads;
+    let mut first_err: Option<DianaError> = None;
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(threads);
+        for chunk in worlds.chunks_mut(per) {
+            let chunk = ShardChunk(chunk);
+            handles.push(scope.spawn(move || -> Result<()> {
+                let ShardChunk(shards) = chunk;
+                for w in shards.iter_mut() {
+                    w.pdes_drain_window(window_end)?;
+                }
+                Ok(())
+            }));
+        }
+        for h in handles {
+            match h.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+                Err(payload) => std::panic::resume_unwind(payload),
+            }
+        }
+    });
+    match first_err {
+        Some(e) => Err(e),
+        None => Ok(()),
+    }
+}
+
+impl ShardedWorld {
+    fn new(cfg: &GridConfig, faults: Vec<(f64, ResolvedFault)>) -> ShardedWorld {
+        let probe = build_shard(cfg);
+        let fed = probe.federation().expect("eligible() requires peers >= 2");
+        let partition = fed.partition.clone();
+        let n_peers = fed.n_peers();
+        let mut worlds = Vec::with_capacity(n_peers);
+        worlds.push(probe);
+        for _ in 1..n_peers {
+            worlds.push(build_shard(cfg));
+        }
+        let threads = cfg.sim.threads.min(n_peers);
+        ShardedWorld {
+            worlds,
+            partition,
+            threads,
+            coord: EventQueue::new(),
+            faults,
+            next_fault: 0,
+            lookahead: f64::INFINITY,
+            min_out_mb: f64::INFINITY,
+            services_started: false,
+            global: Vec::new(),
+            mailbox: Mailbox::new(),
+            extract: Vec::new(),
+            job_order: Vec::new(),
+        }
+    }
+
+    /// Distribute a workload across the home shards, preserving the
+    /// serial pop order inside each shard (load order per peer) and
+    /// extending the serial-rank map: submissions stable-sorted by
+    /// arrival time, jobs in submission order — the order the single
+    /// queue pops `Submit`s and inserts rows.
+    fn load(&mut self, subs: Vec<Submission>) {
+        let mut order: Vec<usize> = (0..subs.len()).collect();
+        order.sort_by(|&a, &b| subs[a].at.total_cmp(&subs[b].at));
+        for &i in &order {
+            for j in &subs[i].jobs {
+                self.job_order.push((j.id, j.submit_site));
+            }
+        }
+        for j in subs.iter().flat_map(|s| s.jobs.iter()) {
+            self.min_out_mb = self.min_out_mb.min(j.out_mb);
+        }
+        let mut per_peer: Vec<Vec<Submission>> =
+            (0..self.worlds.len()).map(|_| Vec::new()).collect();
+        for sub in subs {
+            per_peer[self.partition.peer_of(sub.jobs[0].submit_site)].push(sub);
+        }
+        for (w, subs_p) in self.worlds.iter_mut().zip(per_peer) {
+            w.load_submissions(subs_p);
+        }
+        self.lookahead =
+            compute_lookahead(&self.worlds[0], &self.partition, self.min_out_mb);
+    }
+
+    fn delivered(&self) -> usize {
+        self.worlds.iter().map(|w| w.pdes_delivered()).sum()
+    }
+
+    fn total_jobs(&self) -> usize {
+        self.worlds.iter().map(|w| w.total_jobs()).sum()
+    }
+
+    /// Events processed so far across shards, coordinator services and
+    /// applied faults — the serial loop's single counter, re-assembled.
+    fn events_processed(&self) -> u64 {
+        self.worlds
+            .iter()
+            .map(|w| w.events_processed())
+            .sum::<u64>()
+            + self.coord.processed()
+            + self.next_fault as u64
+    }
+
+    /// Barrier: pull every pending cross-shard event out of its source
+    /// heap, merge deterministically, inject at the destinations.
+    fn exchange(&mut self) {
+        for p in 0..self.worlds.len() {
+            let mut buf = std::mem::take(&mut self.extract);
+            self.worlds[p].pdes_extract_cross_into(p, &mut buf);
+            for (t, seq, msg) in buf.drain(..) {
+                self.mailbox.push(t, p, seq, msg);
+            }
+            self.extract = buf;
+        }
+        for (t, _peer, _seq, msg) in self.mailbox.drain_merged() {
+            let dest = msg.dest_peer();
+            self.worlds[dest].pdes_inject(dest, t, msg);
+        }
+    }
+
+    /// The windowed main loop (module docs). Mirrors the serial
+    /// `World::run` contract: re-runnable, completion breaks at the
+    /// final delivery, periodic services stay armed across calls.
+    fn run(&mut self) -> Result<()> {
+        let cfg = self.worlds[0].cfg.clone();
+        if !self.services_started {
+            self.services_started = true;
+            // Same schedule order as the serial bootstrap: Monitor,
+            // MigrationCheck, direct t=0 gossip exchange, Gossip.
+            self.coord
+                .schedule(cfg.network.monitor_period_s, CoordEv::Monitor);
+            if cfg.scheduler.policy == Policy::Diana
+                && cfg.scheduler.max_migrations > 0
+            {
+                self.coord.schedule(
+                    cfg.scheduler.migration_period_s,
+                    CoordEv::MigrationCheck,
+                );
+            }
+            World::pdes_assemble_global(&mut self.worlds, &mut self.global);
+            for w in self.worlds.iter_mut() {
+                w.pdes_gossip(&self.global, 0.0);
+            }
+            self.coord
+                .schedule(cfg.federation.gossip_period_s, CoordEv::Gossip);
+        }
+        loop {
+            if self.delivered() >= self.total_jobs() {
+                break;
+            }
+            crate::ensure!(
+                self.events_processed() < cfg.max_events,
+                "event budget exceeded: {} events processed with {} of {} \
+                 jobs delivered (max_events = {}) — livelock?",
+                self.events_processed(),
+                self.delivered(),
+                self.total_jobs(),
+                cfg.max_events
+            );
+            self.exchange();
+            let t_min = self
+                .worlds
+                .iter()
+                .filter_map(|w| w.pdes_next_event_time())
+                .fold(f64::INFINITY, f64::min);
+            let t_fault = self
+                .faults
+                .get(self.next_fault)
+                .map_or(f64::INFINITY, |f| f.0);
+            let t_svc = self.coord.peek_time().unwrap_or(f64::INFINITY);
+            if t_min.is_infinite()
+                && t_fault.is_infinite()
+                && t_svc.is_infinite()
+            {
+                // Drained out without completing — the serial while-let
+                // exit for dataflow-gated stragglers.
+                break;
+            }
+            // Tie discipline (module docs): faults carry the lowest
+            // serial seqs (loaded before submissions) and win equal-time
+            // ties against everything.
+            if t_fault <= t_min && t_fault <= t_svc {
+                let (t, fault) = self.faults[self.next_fault].clone();
+                self.next_fault += 1;
+                for w in self.worlds.iter_mut() {
+                    w.pdes_apply_replicated_fault(&fault, t);
+                }
+                if !matches!(fault, ResolvedFault::MonitorBlackout { .. }) {
+                    // Link prices moved: re-derive the lookahead bound.
+                    self.lookahead = compute_lookahead(
+                        &self.worlds[0],
+                        &self.partition,
+                        self.min_out_mb,
+                    );
+                    crate::ensure!(
+                        self.lookahead > 0.0,
+                        "fault at t={t:.1}s collapsed the inter-peer \
+                         lookahead to zero; this scenario cannot run \
+                         conservatively parallel — rerun with \
+                         --sim-threads 1",
+                    );
+                }
+                continue;
+            }
+            // `<=`: a shard event at exactly `t_svc` is (almost surely)
+            // one a same-tick barrier service just created — e.g. the
+            // migration sweep's `Dispatch(t)` — whose serial seq is
+            // higher than every service armed before the barrier, so
+            // service-first IS the serial order (and a strict `<` would
+            // livelock: nothing pops strictly before `t_min == t_svc`).
+            // A *pre-existing* shard event landing exactly on a service
+            // tick is the measure-zero coincidence the module docs
+            // cover.
+            if t_svc <= t_min && t_svc < t_fault {
+                let (t, ev) =
+                    self.coord.pop().expect("peeked service exists");
+                match ev {
+                    CoordEv::Monitor => {
+                        // Blackout state is replicated, so shard 0
+                        // speaks for all.
+                        if t >= self.worlds[0].pdes_blackout_until() {
+                            for w in self.worlds.iter_mut() {
+                                w.pdes_monitor_sweep();
+                            }
+                        }
+                        self.coord.schedule_in(
+                            cfg.network.monitor_period_s,
+                            CoordEv::Monitor,
+                        );
+                    }
+                    CoordEv::MigrationCheck => {
+                        World::pdes_migration_check(
+                            &mut self.worlds,
+                            t,
+                            &mut self.global,
+                        )?;
+                        self.coord.schedule_in(
+                            cfg.scheduler.migration_period_s,
+                            CoordEv::MigrationCheck,
+                        );
+                    }
+                    CoordEv::Gossip => {
+                        World::pdes_assemble_global(
+                            &mut self.worlds,
+                            &mut self.global,
+                        );
+                        for w in self.worlds.iter_mut() {
+                            w.pdes_gossip(&self.global, t);
+                        }
+                        self.coord.schedule_in(
+                            cfg.federation.gossip_period_s,
+                            CoordEv::Gossip,
+                        );
+                    }
+                }
+                continue;
+            }
+            let window_end = (t_min + self.lookahead).min(t_svc).min(t_fault);
+            drain_parallel(&mut self.worlds, window_end, self.threads)?;
+        }
+        Ok(())
+    }
+
+    /// Deterministic assembly: merge the shard recorders into the
+    /// serial layout and return the merged world plus its report.
+    fn finish(mut self) -> (Box<World>, RunReport) {
+        let completed = self.delivered() >= self.total_jobs();
+        // Completion trimming: the serial loop breaks *at* the final
+        // Deliver (time Tc); the shard that processed it ran its window
+        // out, popping stranded same-timestamp no-ops the serial run
+        // never counted. Everything past Tc on *other* shards is
+        // untouched (nothing exists there before Tc + L), so only the
+        // last-delivering shard over-counts.
+        let mut trim = 0u64;
+        if completed {
+            let mut best_t = f64::NEG_INFINITY;
+            for w in &self.worlds {
+                let (t, after) = w.pdes_completion_trim();
+                if t > best_t {
+                    best_t = t;
+                    trim = after;
+                }
+            }
+            if best_t == f64::NEG_INFINITY {
+                trim = 0;
+            }
+        }
+        let events = self.events_processed() - trim;
+
+        let n_sites = self.partition.n_sites();
+        let mut merged = Recorder::new(n_sites, RECORDER_BUCKET_S);
+        // Job rows in serial JobIdx order: rank r of the load-order map
+        // is row r of the single-store recorder. The home shard owns
+        // the complete row — exec-side fields came home with the
+        // Deliver patch.
+        for (rank, &(id, site)) in self.job_order.iter().enumerate() {
+            let home = self.partition.peer_of(site);
+            let row = self.worlds[home]
+                .job_record(id)
+                .copied()
+                .unwrap_or_default();
+            *merged.job_mut(JobIdx(rank as u32)) = row;
+        }
+        // Site series: submissions land at the owner (home) shard,
+        // execution/import/export activity at the site's owner too —
+        // each series has exactly one writer.
+        for s in 0..n_sites {
+            let owner = self.partition.peer_of(s);
+            merged.adopt_site_series(
+                s,
+                self.worlds[owner].recorder.site_series(s).clone(),
+            );
+        }
+        for w in &self.worlds {
+            merged.migrations += w.recorder.migrations;
+            merged.delegations += w.recorder.delegations;
+            merged.groups_split += w.recorder.groups_split;
+            merged.groups_whole += w.recorder.groups_whole;
+        }
+        let report = RunReport::from_parts(
+            self.worlds[0].policy_name(),
+            &merged,
+            events,
+        );
+        let delivered = self.delivered();
+        let total = self.total_jobs();
+        let mut group_results = Vec::new();
+        for w in self.worlds.iter_mut() {
+            group_results.append(&mut w.group_results);
+        }
+        let mut world =
+            self.worlds.into_iter().next().expect("peers >= 2");
+        world.pdes_adopt_merged(merged, group_results, delivered, total);
+        (Box::new(world), report)
+    }
+}
+
+/// Run `cfg`'s simulation as a conservative PDES if the config and
+/// workload are inside the parallel envelope, else hand the
+/// submissions back untouched for the serial path. The parallel result
+/// is bit-identical to the serial reference for every eligible
+/// scenario (see module docs for the measure-zero tie caveat).
+pub fn try_run_parallel(
+    cfg: &GridConfig,
+    subs: Vec<Submission>,
+    faults: &FaultPlan,
+) -> Result<PdesOutcome> {
+    let resolved = faults.resolve(cfg)?;
+    if !eligible(cfg, &subs, &resolved) {
+        return Ok(PdesOutcome::Declined(subs));
+    }
+    let mut sharded = ShardedWorld::new(cfg, resolved);
+    let min_out_mb = subs
+        .iter()
+        .flat_map(|s| s.jobs.iter())
+        .map(|j| j.out_mb)
+        .fold(f64::INFINITY, f64::min);
+    let lookahead =
+        compute_lookahead(&sharded.worlds[0], &sharded.partition, min_out_mb);
+    // A zero-latency cross-peer path (e.g. a zero-size output crossing
+    // partitions) leaves no conservative window; run serial instead.
+    if !(lookahead > 0.0) {
+        return Ok(PdesOutcome::Declined(subs));
+    }
+    sharded.load(subs);
+    sharded.run()?;
+    let (world, report) = sharded.finish();
+    Ok(PdesOutcome::Done(world, report))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::coordinator::run_simulation_with_faults;
+    use crate::data::Catalog;
+    use crate::scenario::{FaultEvent, FaultKind};
+    use crate::util::Pcg64;
+    use crate::workload::WorkloadGen;
+
+    fn fed_cfg(jobs: usize, peers: usize, seed: u64) -> GridConfig {
+        let mut cfg = presets::uniform_grid(6, 4);
+        cfg.seed = seed;
+        cfg.workload.jobs = jobs;
+        cfg.workload.bulk_size = 10;
+        cfg.workload.cpu_sec_median = 60.0;
+        cfg.workload.cpu_sec_sigma = 0.3;
+        cfg.workload.in_mb_median = 50.0;
+        cfg.federation.peers = peers;
+        cfg.federation.gossip_period_s = 30.0;
+        cfg
+    }
+
+    fn workload(cfg: &GridConfig) -> Vec<Submission> {
+        crate::coordinator::generate_workload(cfg)
+    }
+
+    fn assert_reports_match(serial: &RunReport, parallel: &RunReport) {
+        assert_eq!(serial.jobs, parallel.jobs);
+        assert_eq!(serial.events, parallel.events, "event counts diverged");
+        assert_eq!(serial.migrations, parallel.migrations);
+        assert_eq!(serial.delegations, parallel.delegations);
+        assert_eq!(serial.groups_split, parallel.groups_split);
+        assert_eq!(serial.groups_whole, parallel.groups_whole);
+        assert!(
+            serial.makespan_s.to_bits() == parallel.makespan_s.to_bits(),
+            "makespan diverged: {} vs {}",
+            serial.makespan_s,
+            parallel.makespan_s
+        );
+        assert!(
+            serial.throughput_jobs_per_s.to_bits()
+                == parallel.throughput_jobs_per_s.to_bits()
+        );
+        assert!(
+            serial.turnaround.mean().to_bits()
+                == parallel.turnaround.mean().to_bits(),
+            "turnaround mean diverged"
+        );
+        assert!(
+            serial.queue_time.mean().to_bits()
+                == parallel.queue_time.mean().to_bits()
+        );
+    }
+
+    #[test]
+    fn parallel_matches_serial_bit_for_bit() {
+        for &(peers, threads, seed) in
+            &[(2usize, 2usize, 7u64), (3, 2, 11), (3, 3, 42)]
+        {
+            let mut cfg = fed_cfg(60, peers, seed);
+            let subs = workload(&cfg);
+            let ids: Vec<JobId> = subs
+                .iter()
+                .flat_map(|s| s.jobs.iter().map(|j| j.id))
+                .collect();
+            let (sw, sr) = run_simulation_with_faults(
+                &cfg,
+                subs.clone(),
+                &FaultPlan::default(),
+            )
+            .unwrap();
+            cfg.sim.threads = threads;
+            let outcome =
+                try_run_parallel(&cfg, subs, &FaultPlan::default()).unwrap();
+            let (pw, pr) = match outcome {
+                PdesOutcome::Done(w, r) => (w, r),
+                PdesOutcome::Declined(_) => {
+                    panic!("eligible config declined (peers={peers})")
+                }
+            };
+            assert_reports_match(&sr, &pr);
+            // Row-for-row recorder equivalence through the public
+            // accessor: every job's full lifecycle must agree bitwise.
+            for id in &ids {
+                let a = sw.job_record(*id).copied().unwrap_or_default();
+                let b = pw.job_record(*id).copied().unwrap_or_default();
+                for (x, y) in [
+                    (a.submit, b.submit),
+                    (a.placed, b.placed),
+                    (a.enqueued_local, b.enqueued_local),
+                    (a.started, b.started),
+                    (a.finished, b.finished),
+                    (a.delivered, b.delivered),
+                ] {
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "job {id:?} lifecycle diverged (peers={peers}, \
+                         threads={threads})"
+                    );
+                }
+                assert_eq!(a.exec_site, b.exec_site, "job {id:?} exec site");
+                assert_eq!(a.migrations, b.migrations);
+            }
+        }
+    }
+
+    #[test]
+    fn ineligible_configs_decline_with_workload_intact() {
+        // peers = 1: the serial path is the federated degenerate case.
+        let mut cfg = fed_cfg(20, 1, 3);
+        cfg.sim.threads = 4;
+        let subs = workload(&cfg);
+        let n = subs.len();
+        match try_run_parallel(&cfg, subs, &FaultPlan::default()).unwrap() {
+            PdesOutcome::Declined(back) => assert_eq!(back.len(), n),
+            PdesOutcome::Done(..) => panic!("1-peer run took the PDES path"),
+        }
+        // Random policy holds an order-sensitive PRNG.
+        let mut cfg = fed_cfg(20, 2, 3);
+        cfg.sim.threads = 2;
+        cfg.scheduler.policy = Policy::Random;
+        let subs = workload(&cfg);
+        match try_run_parallel(&cfg, subs, &FaultPlan::default()).unwrap() {
+            PdesOutcome::Declined(_) => {}
+            PdesOutcome::Done(..) => panic!("Random policy took the PDES path"),
+        }
+        // Site lifecycle faults are outside the replicated-fault set.
+        let mut cfg = fed_cfg(20, 2, 3);
+        cfg.sim.threads = 2;
+        let subs = workload(&cfg);
+        let mut plan = FaultPlan::default();
+        plan.events.push(FaultEvent {
+            at: 50.0,
+            kind: FaultKind::SiteDown { site: "s0".into() },
+        });
+        match try_run_parallel(&cfg, subs, &plan).unwrap() {
+            PdesOutcome::Declined(_) => {}
+            PdesOutcome::Done(..) => {
+                panic!("site-fault plan took the PDES path")
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_flood_rounds_reuse_buffers() {
+        // The sharded counterpart of the serial
+        // `flood_rounds_reuse_event_loop_buffers`: repeated flood
+        // rounds through ONE ShardedWorld must stop growing every
+        // reusable buffer — per-shard event-loop scratch (heap,
+        // forward slots, batch rows, ...), the barrier mailbox, the
+        // extraction scratch and the assembled-global rows.
+        let mut cfg = fed_cfg(0, 2, 0);
+        cfg.sim.threads = 2;
+        // Same catalog construction as `World::new`, so the generated
+        // jobs' dataset references resolve identically on every shard.
+        let mut rng = Pcg64::new(cfg.seed ^ 0xca7a);
+        let catalog = Catalog::from_config(&cfg, &mut rng);
+        let mut gen = WorkloadGen::new(12);
+        let mut sw = ShardedWorld::new(&cfg, Vec::new());
+        let mut round = |sw: &mut ShardedWorld, gen: &mut WorkloadGen| {
+            let subs: Vec<_> = (0..4)
+                .map(|u| {
+                    gen.bulk(
+                        &cfg,
+                        &catalog,
+                        crate::job::UserId(u),
+                        (u as usize) % cfg.sites.len(),
+                        1.0 + u as f64,
+                        10,
+                    )
+                })
+                .collect();
+            sw.load(subs);
+            sw.run().unwrap();
+        };
+        for _ in 0..3 {
+            round(&mut sw, &mut gen);
+        }
+        let shard_caps: Vec<_> = sw
+            .worlds
+            .iter()
+            .map(|w| w.event_loop_capacities())
+            .collect();
+        let coord_caps = (
+            sw.mailbox.capacity(),
+            sw.extract.capacity(),
+            sw.global.capacity(),
+        );
+        round(&mut sw, &mut gen);
+        round(&mut sw, &mut gen);
+        assert!(sw.delivered() >= sw.total_jobs());
+        let shard_caps_after: Vec<_> = sw
+            .worlds
+            .iter()
+            .map(|w| w.event_loop_capacities())
+            .collect();
+        assert_eq!(
+            shard_caps, shard_caps_after,
+            "shard event-loop buffers reallocated in steady state"
+        );
+        assert_eq!(
+            coord_caps,
+            (
+                sw.mailbox.capacity(),
+                sw.extract.capacity(),
+                sw.global.capacity(),
+            ),
+            "coordinator barrier buffers reallocated in steady state"
+        );
+    }
+
+    #[test]
+    fn mailbox_merges_on_time_peer_seq() {
+        let mut mb: Mailbox<&'static str> = Mailbox::new();
+        mb.push(5.0, 1, 9, "d");
+        mb.push(3.0, 2, 1, "b");
+        mb.push(3.0, 0, 7, "a");
+        mb.push(5.0, 1, 2, "c");
+        let order: Vec<_> =
+            mb.drain_merged().map(|(_, _, _, m)| m).collect();
+        assert_eq!(order, ["a", "b", "c", "d"]);
+        assert!(mb.is_empty());
+    }
+
+    #[test]
+    fn lookahead_positive_on_uniform_grid() {
+        let cfg = fed_cfg(10, 2, 1);
+        let sw = ShardedWorld::new(&cfg, Vec::new());
+        let l = compute_lookahead(&sw.worlds[0], &sw.partition, 10.0);
+        assert!(l > 0.0 && l.is_finite(), "lookahead {l}");
+    }
+}

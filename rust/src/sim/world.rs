@@ -79,8 +79,15 @@ struct ForwardPayload {
 const MIGRATION_BATCH: usize = 8;
 
 /// Job-descriptor size shipped per job when a submission is forwarded to
-/// a remote peer (control-plane payload, not the sandbox).
-const CTRL_MB_PER_JOB: f64 = 0.01;
+/// a remote peer (control-plane payload, not the sandbox). Crate-visible
+/// because the PDES lookahead bound (`sim::pdes`) prices the minimum
+/// forward against the same constant.
+pub(crate) const CTRL_MB_PER_JOB: f64 = 0.01;
+
+/// Rate-series bucket width every `World`'s recorder is built with —
+/// shared with the PDES merge (`sim::pdes`), whose merged recorder must
+/// bucket identically to the serial reference.
+pub(crate) const RECORDER_BUCKET_S: f64 = 60.0;
 
 pub struct World {
     pub cfg: GridConfig,
@@ -150,6 +157,19 @@ pub struct World {
     /// map's iteration order).
     site_buckets: Vec<Vec<JobIdx>>,
     touched_sites: Vec<usize>,
+    /// Reused frozen-snapshot buffer for the migration sweep (the batch
+    /// round's J×S cost view; under PDES the coordinator assembles the
+    /// cross-shard global view into the same shape).
+    mig_snaps: Vec<SiteSnapshot>,
+    /// PDES barrier scratch: raw cross-shard events extracted from the
+    /// heap before they could be popped locally.
+    pdes_ev_scratch: Vec<(f64, u64, Ev)>,
+    /// PDES completion trimming: time of the most recent locally
+    /// processed Deliver, and events processed since it (see
+    /// `sim::pdes` — the serial loop stops *at* the final delivery, so
+    /// the shard that delivered last subtracts its overshoot).
+    pdes_last_deliver_t: f64,
+    pdes_after_deliver: u64,
     /// High-water mark of live (submitted, undelivered) jobs.
     peak_live: usize,
     /// Periodic services (monitor / migration / gossip) are bootstrapped
@@ -211,7 +231,7 @@ impl World {
                 .map_or(false, |v| !v.is_empty() && v != "0");
         World {
             federation: Federation::from_config(&cfg),
-            recorder: Recorder::new(n, 60.0),
+            recorder: Recorder::new(n, RECORDER_BUCKET_S),
             alive: vec![true; n],
             pristine_topo: topo.clone(),
             topo,
@@ -245,6 +265,10 @@ impl World {
             kids_scratch: Vec::new(),
             site_buckets: vec![Vec::new(); n],
             touched_sites: Vec::new(),
+            mig_snaps: Vec::new(),
+            pdes_ev_scratch: Vec::new(),
+            pdes_last_deliver_t: f64::NEG_INFINITY,
+            pdes_after_deliver: 0,
             peak_live: 0,
             services_started: false,
             cfg,
@@ -383,9 +407,10 @@ impl World {
     /// Allocated capacities of the event-loop's reusable buffers, for
     /// capacity-stability assertions (`[event heap, forward slots,
     /// batch rows, ready set, started, kids, view, picks, site buckets,
-    /// touched sites]`). A steady-state flood must stop growing these.
+    /// touched sites, migration snaps]`). A steady-state flood must
+    /// stop growing these.
     #[doc(hidden)]
-    pub fn event_loop_capacities(&self) -> [usize; 10] {
+    pub fn event_loop_capacities(&self) -> [usize; 11] {
         [
             self.events.capacity(),
             self.forwards.slot_count(),
@@ -397,6 +422,7 @@ impl World {
             self.picks_scratch.capacity(),
             self.site_buckets.iter().map(Vec::capacity).sum::<usize>(),
             self.touched_sites.capacity(),
+            self.mig_snaps.capacity(),
         ]
     }
 
@@ -1145,7 +1171,16 @@ impl World {
                     .iter()
                     .map(|&i| self.store.get(cands[i].slot).clone())
                     .collect();
-                self.migrate_group(
+                // Rows + Q settle at this batch round's entry (earlier
+                // rounds of the same sweep may have migrated jobs into
+                // peer queues); the round then costs against a frozen
+                // copy of the rows.
+                self.sync_grid();
+                let mut snaps = std::mem::take(&mut self.mig_snaps);
+                snaps.clear();
+                snaps.extend_from_slice(self.cache.snaps());
+                let q_total = self.cache.q_total();
+                let r = self.migrate_group(
                     site,
                     force,
                     &cands,
@@ -1153,7 +1188,11 @@ impl World {
                     &group,
                     &mut migrated,
                     t,
-                )?;
+                    &snaps,
+                    q_total,
+                );
+                self.mig_snaps = snaps;
+                r?;
                 start = end;
             }
             let keep: Vec<MetaJob> = cands
@@ -1171,6 +1210,12 @@ impl World {
     /// Cost one submit-site-coherent batch of migration candidates in a
     /// single J×S round (through the world's `CostWorkspace`), then run
     /// the per-candidate §IX decision against live peer queues.
+    ///
+    /// `snaps`/`q_total` are the round's frozen site rows and global Q —
+    /// the caller settles them (serial: this world's grid cache; PDES:
+    /// the coordinator's cross-shard assembly, see `Self::
+    /// pdes_migration_check`) so the decision inputs are identical
+    /// either way.
     #[allow(clippy::too_many_arguments)]
     fn migrate_group(
         &mut self,
@@ -1181,21 +1226,20 @@ impl World {
         group: &[Job],
         migrated: &mut [bool],
         t: f64,
+        snaps: &[SiteSnapshot],
+        q_total: usize,
     ) -> Result<()> {
-        // Rows + Q settle at this batch round's entry (earlier rounds of
-        // the same sweep may have migrated jobs into peer queues).
-        self.sync_grid();
-        let q_total = self.cache.q_total();
         let World {
             ws, engine, replicas, cache, monitor, catalog, cfg, metas,
             sites, alive, store, recorder, events, federation, ..
         } = self;
         {
-            // One batched cost round — site rows from the grid cache,
-            // replica rows from the epoch cache (§IX "minimum cost").
+            // One batched cost round — site rows from the caller's
+            // frozen view, replica rows from the epoch cache (§IX
+            // "minimum cost").
             let view = GridView {
                 now: t,
-                sites: cache.snaps(),
+                sites: snaps,
                 monitor,
                 catalog,
                 q_total,
@@ -1284,6 +1328,513 @@ impl World {
 
     pub fn total_jobs(&self) -> usize {
         self.total_jobs
+    }
+}
+
+// ---------------------------------------------------------------------
+// Conservative-PDES shard support (see `sim::pdes`).
+//
+// Under `[sim] threads > 1` each federation peer runs as a *full World
+// replica* that is authoritative only for its own partition's sites,
+// meta-queues and jobs. Shared substrate (topology, monitor beliefs,
+// federation tables, config datasets) is kept bit-identical across
+// replicas by construction (same config/seeds) and by replaying
+// coordinator actions — monitor sweeps, gossip, faults — identically on
+// every replica at the lookahead barriers. The methods below are the
+// shard-side half of that protocol; the window/barrier loop lives in
+// `sim::pdes`.
+// ---------------------------------------------------------------------
+
+/// Portable dataset identity for a cross-shard forward: dataset ids are
+/// shard-local (runtime `out-*` datasets exist only where they were
+/// produced), so a forwarded job ships its input's (name, size,
+/// replicas) and the receiver re-resolves — `Catalog::lookup` by name,
+/// else `Catalog::add`.
+pub(crate) struct DatasetSpec {
+    pub(crate) name: String,
+    pub(crate) size_mb: f64,
+    pub(crate) replicas: Vec<usize>,
+}
+
+/// A delegated batch crossing shards: the serialized form of one
+/// in-flight `Ev::Forward` (job rows by value + bulk group + hop
+/// count), extracted from the sender's heap at a barrier.
+pub(crate) struct PdesForward {
+    pub(crate) to_peer: u32,
+    pub(crate) hops: u32,
+    pub(crate) jobs: Vec<Job>,
+    pub(crate) specs: Vec<Option<DatasetSpec>>,
+    pub(crate) group: Option<Group>,
+}
+
+/// A finished delegated job returning home: the home shard owns the
+/// authoritative job row, recorder row, aggregator and dataflow links,
+/// so only the id plus the exec-side lifecycle fields travel. Every
+/// patched field is final by finish time, which precedes the Deliver's
+/// arrival.
+pub(crate) struct PdesDeliver {
+    pub(crate) id: JobId,
+    pub(crate) home_peer: u32,
+    pub(crate) patch: JobRecord,
+}
+
+/// A cross-shard event in flight between barriers.
+pub(crate) enum PdesMsg {
+    Fwd(PdesForward),
+    Del(PdesDeliver),
+}
+
+impl PdesMsg {
+    /// The shard whose queue this message must be injected into.
+    pub(crate) fn dest_peer(&self) -> usize {
+        match self {
+            PdesMsg::Fwd(f) => f.to_peer as usize,
+            PdesMsg::Del(d) => d.home_peer as usize,
+        }
+    }
+}
+
+impl World {
+    /// One conservative window: pop-and-handle every local event
+    /// strictly before `window_end`. Coordinator-class events (Monitor,
+    /// MigrationCheck, Gossip, Fault) never live in shard queues — the
+    /// `sim::pdes` coordinator executes them at barriers.
+    pub(crate) fn pdes_drain_window(&mut self, window_end: f64) -> Result<()> {
+        while let Some((t, ev)) = self.events.pop_before(window_end) {
+            crate::ensure!(
+                self.events.processed() < self.cfg.max_events,
+                "event budget exceeded: {} events processed at sim time \
+                 {:.1}s with {} of {} jobs delivered (max_events = {}) — \
+                 livelock?",
+                self.events.processed(),
+                t,
+                self.delivered,
+                self.total_jobs,
+                self.cfg.max_events
+            );
+            match ev {
+                Ev::Submit(i) => self.on_submit(i as usize, t)?,
+                Ev::Dispatch(site) => self.dispatch(site as usize, t),
+                Ev::Finish { job, site } => {
+                    self.on_finish(job, site as usize, t)
+                }
+                Ev::Deliver { job } => self.on_deliver(job, t),
+                Ev::Forward { slot, peer, hops } => {
+                    self.on_forward(slot, peer as usize, hops, t)?
+                }
+                Ev::Monitor | Ev::MigrationCheck | Ev::Gossip
+                | Ev::Fault(_) => {
+                    unreachable!("coordinator event in a PDES shard queue")
+                }
+            }
+            // Completion trimming: the serial loop stops *at* the final
+            // delivery, while a window runs to its end — remember how
+            // far past the last local delivery this shard ran.
+            if matches!(ev, Ev::Deliver { .. }) {
+                self.pdes_last_deliver_t = t;
+                self.pdes_after_deliver = 0;
+            } else {
+                self.pdes_after_deliver += 1;
+            }
+        }
+        Ok(())
+    }
+
+    /// Barrier extraction: remove every pending cross-shard event (any
+    /// `Forward` — delegation targets are always remote — and every
+    /// `Deliver` homing to another peer) from the heap and serialize it.
+    /// Appends `(send_time, sender_seq, msg)` to `out` in exact
+    /// would-be pop order; merged across shards by `(time, sender_peer,
+    /// seq)` before injection. Extraction is not processing: each such
+    /// event is popped exactly once, on the receiving shard, keeping
+    /// the global processed-events count identical to the serial run.
+    pub(crate) fn pdes_extract_cross_into(
+        &mut self,
+        self_peer: usize,
+        out: &mut Vec<(f64, u64, PdesMsg)>,
+    ) {
+        let mut scratch = std::mem::take(&mut self.pdes_ev_scratch);
+        scratch.clear();
+        {
+            let World { events, store, federation, .. } = self;
+            let fed = federation.as_ref().expect("PDES runs are federated");
+            events.drain_matching_into(
+                |ev| match *ev {
+                    // Delegation always targets a remote peer; the
+                    // comparison is defensive against a future
+                    // self-loop in the adjacency tables.
+                    Ev::Forward { peer, .. } => peer as usize != self_peer,
+                    Ev::Deliver { job } => {
+                        fed.partition.peer_of(store.get(job).submit_site)
+                            != self_peer
+                    }
+                    _ => false,
+                },
+                &mut scratch,
+            );
+        }
+        for &(t, seq, ev) in scratch.iter() {
+            match ev {
+                Ev::Forward { slot, peer, hops } => {
+                    let (jobs_idx, group) = {
+                        let p = self.forwards.get_mut(slot);
+                        (std::mem::take(&mut p.jobs), p.group.take())
+                    };
+                    let mut jobs = Vec::with_capacity(jobs_idx.len());
+                    let mut specs = Vec::with_capacity(jobs_idx.len());
+                    for &ji in &jobs_idx {
+                        let job = self.store.get(ji).clone();
+                        specs.push(job.input.map(|ds| {
+                            let d = self.catalog.get(ds);
+                            DatasetSpec {
+                                name: d.name.clone(),
+                                size_mb: d.size_mb,
+                                replicas: d.replicas.clone(),
+                            }
+                        }));
+                        jobs.push(job);
+                    }
+                    // Recycle the side-table slot like `on_forward`.
+                    let mut buf = jobs_idx;
+                    buf.clear();
+                    self.forwards.get_mut(slot).jobs = buf;
+                    self.forwards.release(slot);
+                    out.push((
+                        t,
+                        seq,
+                        PdesMsg::Fwd(PdesForward {
+                            to_peer: peer,
+                            hops,
+                            jobs,
+                            specs,
+                            group,
+                        }),
+                    ));
+                }
+                Ev::Deliver { job } => {
+                    let id = self.store.get(job).id;
+                    let home = self
+                        .federation
+                        .as_ref()
+                        .expect("federated")
+                        .partition
+                        .peer_of(self.store.get(job).submit_site);
+                    let patch =
+                        *self.recorder.job(job).expect("executed job recorded");
+                    out.push((
+                        t,
+                        seq,
+                        PdesMsg::Del(PdesDeliver {
+                            id,
+                            home_peer: home as u32,
+                            patch,
+                        }),
+                    ));
+                }
+                _ => unreachable!("predicate only extracts cross events"),
+            }
+        }
+        scratch.clear();
+        self.pdes_ev_scratch = scratch;
+    }
+
+    /// Barrier injection: materialize one extracted cross-shard message
+    /// in this shard's queue at its original arrival time `at`. The
+    /// caller injects messages in merged `(time, sender_peer, seq)`
+    /// order, so the receiver-side seq assignment — and therefore the
+    /// pop order among simultaneous arrivals — is deterministic.
+    pub(crate) fn pdes_inject(&mut self, self_peer: usize, at: f64, msg: PdesMsg) {
+        match msg {
+            PdesMsg::Fwd(f) => {
+                let PdesForward { to_peer, hops, jobs, specs, group } = f;
+                debug_assert_eq!(to_peer as usize, self_peer);
+                let slot = self.forwards.alloc();
+                let mut buf =
+                    std::mem::take(&mut self.forwards.get_mut(slot).jobs);
+                buf.clear();
+                for (mut job, spec) in jobs.into_iter().zip(specs) {
+                    let home = self
+                        .federation
+                        .as_ref()
+                        .expect("federated")
+                        .partition
+                        .peer_of(job.submit_site);
+                    if home == self_peer {
+                        // Forwarded back home: the original slab row
+                        // (with its dataflow links and recorder row) is
+                        // authoritative — reuse it instead of inserting
+                        // a disconnected copy.
+                        buf.push(
+                            self.store.lookup(job.id).expect("home job row"),
+                        );
+                        continue;
+                    }
+                    if let Some(spec) = spec {
+                        let ds = match self.catalog.lookup(&spec.name) {
+                            Some(id) => id,
+                            None => {
+                                let id = self.catalog.add(
+                                    &spec.name,
+                                    spec.size_mb,
+                                    spec.replicas,
+                                );
+                                // New dataset: same invalidation rule as
+                                // `on_deliver`'s catalog write.
+                                self.cache.bump_epoch();
+                                id
+                            }
+                        };
+                        job.input = Some(ds);
+                    }
+                    buf.push(self.store.insert(job));
+                }
+                let payload = self.forwards.get_mut(slot);
+                payload.jobs = buf;
+                payload.group = group;
+                self.events.schedule(
+                    at,
+                    Ev::Forward { slot, peer: to_peer, hops },
+                );
+            }
+            PdesMsg::Del(d) => {
+                let idx = self.store.lookup(d.id).expect("home job row");
+                {
+                    // Exec-side lifecycle fields come home; submit-side
+                    // fields (submit, delivered) are owned here.
+                    let rec = self.recorder.job_mut(idx);
+                    rec.placed = d.patch.placed;
+                    rec.enqueued_local = d.patch.enqueued_local;
+                    rec.started = d.patch.started;
+                    rec.finished = d.patch.finished;
+                    rec.exec_site = d.patch.exec_site;
+                    rec.migrations = d.patch.migrations;
+                }
+                self.events.schedule(at, Ev::Deliver { job: idx });
+            }
+        }
+    }
+
+    /// Assemble the authoritative global site rows — each row copied
+    /// from its owner shard's freshly synced cache — into `global`.
+    /// Returns the global queued-job count Q (the §IV term the serial
+    /// path reads as `cache.q_total()`).
+    pub(crate) fn pdes_assemble_global(
+        worlds: &mut [World],
+        global: &mut Vec<SiteSnapshot>,
+    ) -> usize {
+        let n = worlds[0].sites.len();
+        for w in worlds.iter_mut() {
+            w.sync_grid();
+        }
+        global.clear();
+        global.resize(
+            n,
+            SiteSnapshot {
+                queue_len: 0,
+                capability: 0.0,
+                load: 0.0,
+                free_slots: 0,
+                cpus: 0,
+                alive: false,
+            },
+        );
+        for (p, w) in worlds.iter().enumerate() {
+            let fed = w.federation.as_ref().expect("federated");
+            for &s in fed.partition.sites_of(p) {
+                global[s] = w.cache.snaps()[s];
+            }
+        }
+        global.iter().map(|r| r.queue_len).sum()
+    }
+
+    /// Replay one gossip round on this replica from the coordinator's
+    /// assembled global rows. Every replica sees identical input, so
+    /// the gossiped digest tables stay bit-identical across shards —
+    /// exactly what the serial `Ev::Gossip` handler feeds its single
+    /// federation from `sync_grid`.
+    pub(crate) fn pdes_gossip(&mut self, global: &[SiteSnapshot], t: f64) {
+        if let Some(fed) = self.federation.as_mut() {
+            fed.gossip_round(global, t);
+        }
+    }
+
+    /// Replay one monitor sweep on this replica (identical RNG stream on
+    /// every shard ⇒ identical beliefs). Discovery heartbeats are
+    /// skipped: the registry is not an input to any scheduling decision
+    /// or serialized report, and a replica only has ground truth for its
+    /// own partition.
+    pub(crate) fn pdes_monitor_sweep(&mut self) {
+        self.monitor.sweep(&self.topo);
+        self.cache.bump_epoch();
+    }
+
+    /// Replay a topology-class fault on this replica — the same
+    /// mutations `apply_fault` makes, minus logging (the coordinator
+    /// logs once). Site/peer faults are gated off the parallel path.
+    pub(crate) fn pdes_apply_replicated_fault(
+        &mut self,
+        fault: &ResolvedFault,
+        t: f64,
+    ) {
+        match fault.clone() {
+            ResolvedFault::LinkDegrade {
+                from,
+                to,
+                rtt_factor,
+                loss_add,
+                capacity_factor,
+            } => {
+                self.topo
+                    .degrade_link(from, to, rtt_factor, loss_add, capacity_factor);
+                self.cache.bump_epoch();
+            }
+            ResolvedFault::Partition { members, rtt_ms, loss, capacity_mbps } => {
+                let link = Link { rtt_ms, loss, capacity_mbps };
+                let inside = |s: usize| members.contains(&s);
+                for a in 0..self.topo.n_sites() {
+                    for b in (a + 1)..self.topo.n_sites() {
+                        if inside(a) != inside(b) {
+                            self.topo.set_link(a, b, link);
+                        }
+                    }
+                }
+                self.cache.bump_epoch();
+            }
+            ResolvedFault::Heal => {
+                self.topo.restore_links_from(&self.pristine_topo);
+                self.cache.bump_epoch();
+            }
+            ResolvedFault::MonitorBlackout { duration_s } => {
+                self.blackout_until = self.blackout_until.max(t + duration_s);
+            }
+            _ => unreachable!("fault kind gated off the parallel path"),
+        }
+    }
+
+    /// Coordinator-driven §IX/§X migration sweep across all shards:
+    /// sites are swept in ascending order exactly like the serial
+    /// `migration_check`, each site by its owner shard, with the frozen
+    /// J×S cost view re-assembled **globally** per batch round (the
+    /// serial sweep's `sync_grid`-per-round equivalent — earlier sites'
+    /// migrations must be visible in Q and the rows). All queue
+    /// mutations stay inside the owner shard: without the dead-site
+    /// escape hatch (site faults are gated off), §IX polling and
+    /// migration targets never leave the owning partition.
+    pub(crate) fn pdes_migration_check(
+        worlds: &mut [World],
+        t: f64,
+        global: &mut Vec<SiteSnapshot>,
+    ) -> Result<()> {
+        let n_sites = worlds[0].sites.len();
+        let thrs = worlds[0].cfg.scheduler.congestion_thrs;
+        for site in 0..n_sites {
+            let owner = worlds[0]
+                .federation
+                .as_ref()
+                .expect("PDES runs are federated")
+                .partition
+                .peer_of(site);
+            {
+                let w = &worlds[owner];
+                debug_assert!(w.alive[site], "PDES shard saw a dead site");
+                if !(w.metas[site].queue_len() > 0
+                    && w.metas[site].is_congested(t, thrs))
+                {
+                    continue;
+                }
+            }
+            let cands =
+                worlds[owner].metas[site].migration_candidates(MIGRATION_BATCH);
+            if cands.is_empty() {
+                continue;
+            }
+            worlds[owner].cache.touch(site);
+            let evaluable: Vec<usize> = {
+                let w = &worlds[owner];
+                (0..cands.len())
+                    .filter(|&i| {
+                        w.store.get(cands[i].slot).migrations
+                            < w.cfg.scheduler.max_migrations
+                    })
+                    .collect()
+            };
+            let mut migrated = vec![false; cands.len()];
+            let mut start = 0;
+            while start < evaluable.len() {
+                let (end, group) = {
+                    let w = &worlds[owner];
+                    let submit =
+                        w.store.get(cands[evaluable[start]].slot).submit_site;
+                    let mut end = start + 1;
+                    while end < evaluable.len()
+                        && w.store.get(cands[evaluable[end]].slot).submit_site
+                            == submit
+                    {
+                        end += 1;
+                    }
+                    let group: Vec<Job> = evaluable[start..end]
+                        .iter()
+                        .map(|&i| w.store.get(cands[i].slot).clone())
+                        .collect();
+                    (end, group)
+                };
+                let q_total = World::pdes_assemble_global(worlds, global);
+                worlds[owner].migrate_group(
+                    site,
+                    false,
+                    &cands,
+                    &evaluable[start..end],
+                    &group,
+                    &mut migrated,
+                    t,
+                    global,
+                    q_total,
+                )?;
+                start = end;
+            }
+            let keep: Vec<MetaJob> = cands
+                .iter()
+                .enumerate()
+                .filter(|&(i, _)| !migrated[i])
+                .map(|(_, m)| *m)
+                .collect();
+            worlds[owner].metas[site].reinsert(keep);
+            worlds[owner].cache.touch(site);
+        }
+        Ok(())
+    }
+
+    /// Install the deterministically merged run outputs on this shard,
+    /// turning it into the `World` the parallel assembly returns.
+    pub(crate) fn pdes_adopt_merged(
+        &mut self,
+        recorder: Recorder,
+        group_results: Vec<GroupResult>,
+        delivered: usize,
+        total_jobs: usize,
+    ) {
+        self.recorder = recorder;
+        self.group_results = group_results;
+        self.delivered = delivered;
+        self.total_jobs = total_jobs;
+    }
+
+    pub(crate) fn pdes_delivered(&self) -> usize {
+        self.delivered
+    }
+
+    pub(crate) fn pdes_blackout_until(&self) -> f64 {
+        self.blackout_until
+    }
+
+    /// `(time of last local Deliver, events processed since it)` — the
+    /// completion-trimming inputs (see `sim::pdes`).
+    pub(crate) fn pdes_completion_trim(&self) -> (f64, u64) {
+        (self.pdes_last_deliver_t, self.pdes_after_deliver)
+    }
+
+    pub(crate) fn pdes_next_event_time(&self) -> Option<f64> {
+        self.events.peek_time()
     }
 }
 

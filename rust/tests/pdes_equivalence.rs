@@ -1,0 +1,202 @@
+//! Serial ≡ parallel (PDES) equivalence suite.
+//!
+//! The conservative parallel engine (`sim::pdes`, `--sim-threads N`)
+//! must be **behavior-preserving**: for every eligible scenario the
+//! sharded run's reports must be byte-identical to the serial
+//! reference (`--sim-threads 1`), for every thread count. The check
+//! runs a randomized fixture sweep — two topologies × flat/tree/ring
+//! peer wiring × seeds × fault plans — through the real sweep runner
+//! and diffs the rendered runs/aggregate CSVs and JSON (the same
+//! artifacts ci.sh compares between thread counts), exactly like the
+//! cached-vs-paranoid harness in `tests/equivalence.rs`.
+
+use diana::coordinator::generate_workload;
+use diana::scenario::{run_one, SweepReport, SweepSpec};
+use diana::sim::{try_run_parallel, PdesOutcome};
+
+/// Run one spec's matrix serially, then once per parallel thread
+/// count, and assert the serialized reports match byte-for-byte.
+fn assert_threads_equivalence(spec_toml: &str, name: &str) {
+    let spec = SweepSpec::from_str_named(spec_toml, name).unwrap();
+    let runs = spec.expand().unwrap();
+    assert!(!runs.is_empty(), "{name}: empty matrix");
+    let mut serial = Vec::with_capacity(runs.len());
+    for run in &runs {
+        let mut r = run.clone();
+        r.cfg.sim.threads = 1;
+        serial.push(run_one(&r, &spec.faults).unwrap());
+    }
+    let a = SweepReport::build(&spec, serial);
+    for threads in [2usize, 4, 8] {
+        let mut parallel = Vec::with_capacity(runs.len());
+        for run in &runs {
+            let mut r = run.clone();
+            r.cfg.sim.threads = threads;
+            parallel.push(run_one(&r, &spec.faults).unwrap());
+        }
+        let b = SweepReport::build(&spec, parallel);
+        assert_eq!(
+            a.runs_csv(),
+            b.runs_csv(),
+            "{name}: runs CSV diverged at --sim-threads {threads}"
+        );
+        assert_eq!(
+            a.aggregate_csv(),
+            b.aggregate_csv(),
+            "{name}: aggregate CSV diverged at --sim-threads {threads}"
+        );
+        assert_eq!(
+            a.to_json(),
+            b.to_json(),
+            "{name}: JSON diverged at --sim-threads {threads}"
+        );
+    }
+}
+
+/// Guard against a vacuous pass: the fixture configs must actually be
+/// inside the parallel envelope (a silently declined run would compare
+/// serial against serial).
+fn assert_parallel_path_taken(spec_toml: &str, name: &str) {
+    let spec = SweepSpec::from_str_named(spec_toml, name).unwrap();
+    let runs = spec.expand().unwrap();
+    let mut cfg = runs[0].cfg.clone();
+    cfg.sim.threads = 2;
+    let subs = generate_workload(&cfg);
+    match try_run_parallel(&cfg, subs, &spec.faults).unwrap() {
+        PdesOutcome::Done(..) => {}
+        PdesOutcome::Declined(_) => {
+            panic!("{name}: fixture config declined the parallel path")
+        }
+    }
+}
+
+fn federated_spec(peer_topology: &str) -> String {
+    format!(
+        "name = \"pdes-eq-{peer_topology}\"\n\
+         preset = \"uniform-6x4\"\n\
+         repeats = 2\n\
+         base_seed = 31\n\
+         [axes]\n\
+         federation.peers = [2, 3]\n\
+         [set]\n\
+         jobs = 60\n\
+         bulk_size = 12\n\
+         cpu_sec_median = 120.0\n\
+         federation.topology = \"{peer_topology}\"\n\
+         federation.gossip_period_s = 20.0\n"
+    )
+}
+
+#[test]
+fn flat_federation_matches_serial_bitwise() {
+    assert_parallel_path_taken(&federated_spec("flat"), "pdes-eq-flat");
+    assert_threads_equivalence(&federated_spec("flat"), "pdes-eq-flat");
+}
+
+#[test]
+fn tree_federation_matches_serial_bitwise() {
+    assert_threads_equivalence(&federated_spec("tree"), "pdes-eq-tree");
+}
+
+#[test]
+fn ring_federation_matches_serial_bitwise() {
+    assert_threads_equivalence(&federated_spec("ring"), "pdes-eq-ring");
+}
+
+#[test]
+fn paper_testbed_matches_serial_bitwise() {
+    // The heterogeneous paper topology across a seed axis: uneven
+    // links and capacities stress the lookahead bound and the
+    // delegation/deliver latency extraction.
+    let spec = "name = \"pdes-eq-testbed\"\n\
+                preset = \"paper-testbed\"\n\
+                base_seed = 13\n\
+                [axes]\n\
+                seed = [3, 9, 27]\n\
+                [set]\n\
+                jobs = 50\n\
+                bulk_size = 10\n\
+                cpu_sec_median = 90.0\n\
+                federation.peers = 2\n\
+                federation.gossip_period_s = 25.0\n";
+    assert_parallel_path_taken(spec, "pdes-eq-testbed");
+    assert_threads_equivalence(spec, "pdes-eq-testbed");
+}
+
+#[test]
+fn faulted_federation_matches_serial_bitwise() {
+    // Every fault kind the parallel path replicates: link degradation,
+    // a WAN partition, its heal, and a monitor blackout. Fault times
+    // deliberately sit on monitor/migration ticks — the coordinator's
+    // tie discipline (faults first) must match the serial seq order.
+    let spec = "name = \"pdes-eq-faults\"\n\
+                preset = \"uniform-6x4\"\n\
+                base_seed = 17\n\
+                [axes]\n\
+                seed = [5, 21]\n\
+                [set]\n\
+                jobs = 60\n\
+                bulk_size = 12\n\
+                cpu_sec_median = 120.0\n\
+                federation.peers = 3\n\
+                federation.gossip_period_s = 20.0\n\
+                [[fault]]\n\
+                at = 30.0\n\
+                kind = \"link-degrade\"\n\
+                from = \"s0\"\n\
+                to = \"s2\"\n\
+                rtt_factor = 8.0\n\
+                loss_add = 0.03\n\
+                capacity_factor = 0.2\n\
+                [[fault]]\n\
+                at = 60.0\n\
+                kind = \"partition\"\n\
+                members = [\"s4\", \"s5\"]\n\
+                rtt_ms = 400.0\n\
+                loss = 0.05\n\
+                capacity_mbps = 5.0\n\
+                [[fault]]\n\
+                at = 240.0\n\
+                kind = \"heal\"\n\
+                [[fault]]\n\
+                at = 300.0\n\
+                kind = \"monitor-blackout\"\n\
+                duration_s = 120.0\n";
+    assert_parallel_path_taken(spec, "pdes-eq-faults");
+    assert_threads_equivalence(spec, "pdes-eq-faults");
+}
+
+#[test]
+fn ineligible_scenarios_fall_back_to_serial() {
+    // A site-lifecycle fault is outside the replicated set: the run
+    // must decline (and therefore still match serial trivially), not
+    // crash or diverge.
+    let spec_toml = "name = \"pdes-eq-sitedown\"\n\
+                     preset = \"uniform-6x4\"\n\
+                     base_seed = 19\n\
+                     [set]\n\
+                     jobs = 40\n\
+                     bulk_size = 10\n\
+                     cpu_sec_median = 60.0\n\
+                     federation.peers = 2\n\
+                     [[fault]]\n\
+                     at = 20.0\n\
+                     kind = \"site-down\"\n\
+                     site = \"s1\"\n\
+                     [[fault]]\n\
+                     at = 200.0\n\
+                     kind = \"site-up\"\n\
+                     site = \"s1\"\n";
+    let spec = SweepSpec::from_str_named(spec_toml, "pdes-eq-sitedown").unwrap();
+    let runs = spec.expand().unwrap();
+    let mut cfg = runs[0].cfg.clone();
+    cfg.sim.threads = 4;
+    let subs = generate_workload(&cfg);
+    match try_run_parallel(&cfg, subs, &spec.faults).unwrap() {
+        PdesOutcome::Declined(_) => {}
+        PdesOutcome::Done(..) => {
+            panic!("site-fault scenario must not take the PDES path")
+        }
+    }
+    assert_threads_equivalence(spec_toml, "pdes-eq-sitedown");
+}

@@ -474,3 +474,60 @@ fn prop_event_heap_matches_binary_heap_reference() {
         Ok(())
     });
 }
+
+#[test]
+fn prop_barrier_merge_matches_single_queue_reference() {
+    use diana::sim::Mailbox;
+    prop("barrier merge vs single-queue reference", 400, |rng| {
+        // Random cross-peer event batches: per sender, seqs increase
+        // and times are nondecreasing (the extraction contract), drawn
+        // from a coarse grid so simultaneous timestamps — including
+        // cross-sender ties — occur constantly.
+        let n_peers = 2 + rng.below(5) as usize;
+        let mut msgs: Vec<(f64, usize, u64, u32)> = Vec::new();
+        let mut payload = 0u32;
+        for peer in 0..n_peers {
+            let n = rng.below(12);
+            let mut seq = rng.below(4);
+            let mut t = 0.0;
+            for _ in 0..n {
+                t += rng.below(3) as f64 * 0.5; // plateaus => time ties
+                msgs.push((t, peer, seq, payload));
+                seq += 1 + rng.below(3); // gaps: seqs need not be dense
+                payload += 1;
+            }
+        }
+        // Single-queue reference order on (time, sender_peer, seq),
+        // built by successive stable sorts (LSD radix) — a different
+        // algorithm from the Mailbox comparator.
+        let mut oracle = msgs.clone();
+        oracle.sort_by_key(|m| m.2);
+        oracle.sort_by_key(|m| m.1);
+        oracle.sort_by(|a, b| a.0.total_cmp(&b.0));
+        // Two different shuffled "extraction orders" (different thread
+        // interleavings at a barrier) must both drain in oracle order.
+        for round in 0..2u32 {
+            let mut shuffled = msgs.clone();
+            for i in (1..shuffled.len()).rev() {
+                let j = rng.below(i as u64 + 1) as usize;
+                shuffled.swap(i, j);
+            }
+            let mut mb: Mailbox<u32> = Mailbox::new();
+            for &(t, p, s, m) in &shuffled {
+                mb.push(t, p, s, m);
+            }
+            let merged: Vec<(f64, usize, u64, u32)> =
+                mb.drain_merged().collect();
+            if merged != oracle {
+                return Err(format!(
+                    "round {round}: merge diverged from the single-queue \
+                     reference:\n  got  {merged:?}\n  want {oracle:?}"
+                ));
+            }
+            if !mb.is_empty() {
+                return Err("mailbox not empty after drain".into());
+            }
+        }
+        Ok(())
+    });
+}
