@@ -102,7 +102,8 @@ grep -q '"shapes"' "$SWEEP_OUT/BENCH_world.json" \
 # (never fail — smoke numbers are noisy) when a shape's events/s drops
 # more than 15% below the recorded value.
 if [ -f BENCH_world.json ]; then
-  for shape in small flood federated federated-t2 federated-t4; do
+  for shape in small flood federated federated-t2 federated-t4 \
+               streamed-flood; do
     old=$(grep -o "\"name\": \"$shape\", \"events_per_s\": [0-9.]*" \
             BENCH_world.json | grep -o '[0-9.]*$' || true)
     new=$(grep -o "\"name\": \"$shape\", \"events_per_s\": [0-9.]*" \
@@ -145,5 +146,39 @@ if ! diff <(tail -n +2 "$SWEEP_OUT/central.txt") \
           <(tail -n +2 "$SWEEP_OUT/fed1.txt"); then
   echo "ci.sh: --federation 1 diverged from the central run"; exit 1
 fi
+
+echo "== streamed source == eager (CLI, bit-for-bit) =="
+# The streamed route replays the same generator lazily through the
+# SourceRefill chain; every metric row must byte-match the eager run.
+# Only the banner (which names the source) and the streamed run's
+# trailing peak-live line may differ.
+./target/release/diana run --preset uniform --jobs 60 --seed 21 \
+    > "$SWEEP_OUT/eager.txt"
+./target/release/diana run --preset uniform --jobs 60 --seed 21 \
+    --source streamed > "$SWEEP_OUT/streamed.txt"
+if ! diff <(tail -n +2 "$SWEEP_OUT/eager.txt") \
+          <(tail -n +2 "$SWEEP_OUT/streamed.txt" \
+            | grep -v '^peak live jobs'); then
+  echo "ci.sh: --source streamed diverged from the eager run"; exit 1
+fi
+
+echo "== streamed 1M-job run (bounded memory, hard RSS ceiling) =="
+# One million diurnal-arrival jobs pulled lazily with spill + slot
+# recycling: peak RSS must track *live* jobs (a few hundred at this
+# utilization), not the job total — an eager 1M-job run materializes
+# the submission list, the slab and the recorder (hundreds of MB).
+# --max-rss-mb makes the binary itself assert VmHWM afterwards, so any
+# regression back to O(total) memory fails CI loudly.
+./target/release/diana run --preset uniform --sites 16 --cpus 64 \
+    --jobs 1000000 --bulk 25 --arrival diurnal --rate-mult 0.01 \
+    --seed 42 --spill "$SWEEP_OUT/spill" --max-rss-mb 256 \
+    > "$SWEEP_OUT/streamed-1m.txt"
+grep -Eq "jobs completed.*1000000" "$SWEEP_OUT/streamed-1m.txt" \
+  || { echo "ci.sh: streamed 1M-job run dropped jobs"; exit 1; }
+grep -q "peak RSS" "$SWEEP_OUT/streamed-1m.txt" \
+  || { echo "ci.sh: streamed 1M-job run lost its peak-RSS line"; exit 1; }
+
+echo "== trace reader 1M-line parse smoke (release, ignored test) =="
+cargo test --release -q --lib million_line_trace_parse_smoke -- --ignored
 
 echo "ci.sh: all green"

@@ -14,6 +14,11 @@
 //! curve (events/s vs shard threads), asserted event-count-identical
 //! to the serial baseline on every sample.
 //!
+//! A final `streamed-flood` shape drives the bounded-memory pipeline:
+//! a diurnal arrival stream pulled lazily with spill + slot recycling
+//! on, so the job slab holds *live* jobs only — it reports peak live
+//! jobs (the resident bound) and process peak RSS next to events/s.
+//!
 //! Besides events/s it reports each shape's **peak live jobs** (slab
 //! high-water mark) and **peak heap depth** (pending events) — the two
 //! sizes that bound the event loop's memory footprint.
@@ -27,8 +32,9 @@
 mod common;
 use common::{bench, black_box};
 
-use diana::config::{presets, GridConfig};
-use diana::coordinator::{generate_workload, run_simulation_with};
+use diana::config::{presets, ArrivalKind, GridConfig, SourceMode};
+use diana::coordinator::{generate_workload, run_simulation,
+                         run_simulation_with};
 use diana::scenario::FaultPlan;
 use diana::sim::{try_run_parallel, PdesOutcome};
 
@@ -69,6 +75,23 @@ fn federated_cfg(smoke: bool) -> GridConfig {
     cfg.federation.peers = 4;
     cfg.federation.gossip_period_s = 60.0;
     cfg.seed = 13;
+    cfg
+}
+
+/// The bounded-memory shape: a diurnal arrival stream (≈0.86 jobs/s
+/// effective vs ≈2 jobs/s of service capacity, so queues stay shallow)
+/// pulled lazily through the streamed path with spill + slot recycling.
+fn streamed_cfg(smoke: bool) -> GridConfig {
+    let mut cfg = presets::uniform_grid(8, 16);
+    cfg.workload.jobs = if smoke { 300 } else { 10_000 };
+    cfg.workload.bulk_size = 25;
+    cfg.workload.source = SourceMode::Arrival;
+    cfg.workload.arrival = ArrivalKind::Diurnal;
+    cfg.workload.arrival_rate = 0.06;
+    cfg.workload.cpu_sec_median = 60.0;
+    cfg.workload.cpu_sec_sigma = 0.3;
+    cfg.workload.in_mb_median = 50.0;
+    cfg.seed = 14;
     cfg
 }
 
@@ -224,6 +247,64 @@ fn main() {
             peak_live_jobs: 0,
             peak_heap_depth: 0,
         });
+    }
+    // Streamed-flood: the bounded-memory shape. The workload is pulled
+    // lazily (no materialized submission list), completed records spill
+    // to sorted shards and the job slab recycles — peak live jobs is
+    // the resident bound the run actually paid for, and it must sit far
+    // below the total job count or the streaming pipeline regressed.
+    {
+        let mut cfg = streamed_cfg(smoke);
+        let spill = std::env::temp_dir().join("diana-bench-streamed-spill");
+        cfg.sim.spill_dir = spill.to_string_lossy().into_owned();
+        let mut events = 0u64;
+        let mut peak_live = 0usize;
+        let mut peak_heap = 0usize;
+        let mut submitted = 0usize;
+        let r = bench(
+            &format!("world streamed-flood jobs={}", cfg.workload.jobs),
+            warmup,
+            samples,
+            || {
+                let (w, report) = run_simulation(&cfg).unwrap();
+                assert_eq!(
+                    report.jobs, cfg.workload.jobs,
+                    "streamed-flood: dropped jobs"
+                );
+                events = w.events_processed();
+                peak_live = w.peak_live_jobs();
+                peak_heap = w.peak_heap_depth();
+                submitted = w.submitted_jobs();
+                black_box(&w);
+            },
+        );
+        r.throughput(events as f64, "events");
+        let events_per_s = events as f64 / (r.mean_ns() / 1e9);
+        assert!(
+            peak_live < submitted,
+            "streamed-flood: slab never recycled \
+             (peak live {peak_live} of {submitted})"
+        );
+        println!(
+            "  └ peak live jobs {peak_live} of {submitted} submitted \
+             (slab recycled), peak heap depth {peak_heap}"
+        );
+        if let Some(kb) = peak_rss_kb() {
+            println!(
+                "  └ process peak RSS {:.1} MB (high-water across all \
+                 shapes)",
+                kb as f64 / 1024.0
+            );
+        }
+        println!("world events/s (streamed-flood): {events_per_s:.0}");
+        results.push(ShapeResult {
+            name: "streamed-flood",
+            events_per_s,
+            events,
+            peak_live_jobs: peak_live,
+            peak_heap_depth: peak_heap,
+        });
+        std::fs::remove_dir_all(&spill).ok();
     }
     if let Some(path) = json_path {
         write_json(&path, smoke, &results);

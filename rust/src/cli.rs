@@ -15,6 +15,9 @@ USAGE:
                  [--jobs N] [--bulk N] [--seed S] [--engine rust|xla|auto]
                  [--federation N] [--fed-topology flat|tree|ring]
                  [--sim-threads N]
+                 [--source eager|streamed|arrival|trace]
+                 [--arrival poisson|diurnal|flash-crowd] [--rate-mult X]
+                 [--trace FILE] [--spill DIR] [--max-rss-mb N]
   diana sweep <spec.toml> [-j N] [--out DIR]
   diana sweep --scenario NAME [-j N] [--out DIR]
   diana repro --figure fig3|fig4|fig6|fig7|fig8|fig9|fig10|fig11|all
@@ -31,11 +34,19 @@ conservative parallel DES — one event-queue shard per peer, merged at
 lookahead barriers — with bit-identical results to `--sim-threads 1`
 (the serial reference). See docs/PERFORMANCE.md.
 
+`--source streamed` pulls the generated workload lazily (byte-identical
+to eager); `--arrival KIND` drives submissions from a stochastic
+process (implies --source arrival); `--trace FILE` replays a CSV/JSONL
+log (implies --source trace). `--spill DIR` streams completed job
+records to disk and recycles job slots so peak RSS tracks *live* jobs —
+`--max-rss-mb N` asserts that afterwards (VmHWM). See
+docs/PERFORMANCE.md for the bounded-memory pipeline.
+
 PRESETS: paper-testbed (default) | fig4 | cms-tiers | uniform
-SCENARIOS: flash-crowd | diurnal-load | black-hole-site |
-           cascading-failure | wan-partition | hetero-tiers |
-           central-vs-federated | federation-smoke | smoke
-           (spec files in rust/examples/sweeps/)
+SCENARIOS: flash-crowd | flash-crowd-streamed | diurnal-load |
+           black-hole-site | cascading-failure | wan-partition |
+           hetero-tiers | central-vs-federated | federation-smoke |
+           smoke (spec files in rust/examples/sweeps/)
 ";
 
 /// Resolve the config from --config / --preset / flags.
@@ -85,6 +96,40 @@ pub fn load_config(args: &Args) -> Result<GridConfig> {
             crate::err!("--sim-threads wants a thread count, got `{n}`")
         })?;
     }
+    if let Some(s) = args.get("source") {
+        cfg.workload.source =
+            config::SourceMode::from_name(s).ok_or_else(|| {
+                crate::err!(
+                    "unknown workload source `{s}` \
+                     (eager | streamed | arrival | trace)"
+                )
+            })?;
+    }
+    if let Some(a) = args.get("arrival") {
+        cfg.workload.arrival =
+            config::ArrivalKind::from_name(a).ok_or_else(|| {
+                crate::err!(
+                    "unknown arrival process `{a}` \
+                     (poisson | diurnal | flash-crowd)"
+                )
+            })?;
+        // Naming a process means using it, unless --source overrides.
+        if args.get("source").is_none() {
+            cfg.workload.source = config::SourceMode::Arrival;
+        }
+    }
+    if let Some(m) = args.get("rate-mult") {
+        cfg.workload.rate_multiplier = m.parse().map_err(|_| {
+            crate::err!("--rate-mult wants a rate multiplier, got `{m}`")
+        })?;
+    }
+    if let Some(path) = args.get("trace") {
+        cfg.workload.source = config::SourceMode::Trace;
+        cfg.workload.trace_path = path.to_string();
+    }
+    if let Some(dir) = args.get("spill") {
+        cfg.sim.spill_dir = dir.to_string();
+    }
     cfg.seed = args.get_u64("seed", cfg.seed);
     cfg.validate().map_err(DianaError::msg)?;
     Ok(cfg)
@@ -128,16 +173,58 @@ pub fn simulate(args: &Args) -> Result<()> {
             cfg.federation.topology.name()
         ),
     };
+    let workload = if cfg.workload.source.is_streaming() {
+        let spill = if cfg.sim.spill_dir.is_empty() { "" } else { "+spill" };
+        format!(" (source {}{spill})", cfg.workload.source.name())
+    } else {
+        String::new()
+    };
     println!(
-        "simulating `{}` — {} sites, {} jobs, policy {}, {mode}",
+        "simulating `{}` — {} sites, {} jobs{workload}, policy {}, {mode}",
         cfg.name,
         cfg.sites.len(),
         cfg.workload.jobs,
         cfg.scheduler.policy.name()
     );
-    let (_, report) = run_simulation(&cfg)?;
+    let (world, report) = run_simulation(&cfg)?;
     print_report(&report);
+    if cfg.workload.source.is_streaming() {
+        println!(
+            "peak live jobs {} (of {} submitted)",
+            world.peak_live_jobs(),
+            world.submitted_jobs()
+        );
+    }
+    if let Some(cap) = args.get("max-rss-mb") {
+        let cap_mb: u64 = cap.parse().map_err(|_| {
+            crate::err!("--max-rss-mb wants a size in MB, got `{cap}`")
+        })?;
+        let kb = peak_rss_kb().ok_or_else(|| {
+            crate::err!(
+                "--max-rss-mb: cannot read VmHWM from /proc/self/status"
+            )
+        })?;
+        println!("peak RSS {:.1} MB (cap {} MB)", kb as f64 / 1024.0, cap_mb);
+        crate::ensure!(
+            kb <= cap_mb * 1024,
+            "peak RSS {:.1} MB exceeds --max-rss-mb {}",
+            kb as f64 / 1024.0,
+            cap_mb
+        );
+    }
     Ok(())
+}
+
+/// Peak resident set (VmHWM) of this process, in kB — the `--max-rss-mb`
+/// assertion ci.sh uses to pin bounded-memory streamed runs.
+fn peak_rss_kb() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            return rest.trim().trim_end_matches("kB").trim().parse().ok();
+        }
+    }
+    None
 }
 
 /// `diana sweep`: expand a declarative spec into a run matrix, execute
@@ -276,6 +363,57 @@ mod tests {
         assert!(
             load_config(&parse("run --preset uniform --federation 9"))
                 .is_err()
+        );
+    }
+
+    #[test]
+    fn streaming_flags_load_and_validate() {
+        let cfg = load_config(&parse(
+            "run --preset uniform --source streamed --spill /tmp/d-spill",
+        ))
+        .unwrap();
+        assert_eq!(cfg.workload.source, crate::config::SourceMode::Streamed);
+        assert_eq!(cfg.sim.spill_dir, "/tmp/d-spill");
+        // --arrival implies the arrival source.
+        let cfg = load_config(&parse(
+            "run --preset uniform --arrival flash-crowd --rate-mult 2.5",
+        ))
+        .unwrap();
+        assert_eq!(cfg.workload.source, crate::config::SourceMode::Arrival);
+        assert_eq!(
+            cfg.workload.arrival,
+            crate::config::ArrivalKind::FlashCrowd
+        );
+        assert_eq!(cfg.workload.rate_multiplier, 2.5);
+        // --trace implies the trace source and carries the path.
+        let cfg = load_config(&parse(
+            "run --preset uniform --trace /tmp/diana-t.csv",
+        ))
+        .unwrap();
+        assert_eq!(cfg.workload.source, crate::config::SourceMode::Trace);
+        assert_eq!(cfg.workload.trace_path, "/tmp/diana-t.csv");
+        // Bad values are errors, not silent defaults.
+        assert!(load_config(&parse("run --source magic")).is_err());
+        assert!(load_config(&parse("run --arrival storm")).is_err());
+        assert!(load_config(&parse("run --rate-mult fast")).is_err());
+        // validate(): spill without a streaming source is rejected.
+        assert!(load_config(&parse(
+            "run --preset uniform --spill /tmp/d-spill"
+        ))
+        .is_err());
+    }
+
+    #[test]
+    fn max_rss_flag_asserts_vm_hwm() {
+        let base = "run --preset uniform --jobs 20 --source streamed";
+        // A generous cap passes; 1 MB is below any real process HWM.
+        simulate(&parse(&format!("{base} --max-rss-mb 65536"))).unwrap();
+        assert!(
+            simulate(&parse(&format!("{base} --max-rss-mb 1"))).is_err()
+        );
+        // Bad value is a parse error up front.
+        assert!(
+            simulate(&parse(&format!("{base} --max-rss-mb big"))).is_err()
         );
     }
 

@@ -156,6 +156,25 @@ pub fn load_str(text: &str) -> Result<GridConfig> {
         d.max_procs = int_or(w, "max_procs", d.max_procs as i64) as usize;
         d.datasets = int_or(w, "datasets", d.datasets as i64) as usize;
         d.replicas = int_or(w, "replicas", d.replicas as i64) as usize;
+        if let Some(src) = w.get("source").and_then(Value::as_str) {
+            d.source = SourceMode::from_name(src).ok_or_else(|| {
+                err!(
+                    "unknown workload source `{src}` \
+                     (eager | streamed | arrival | trace)"
+                )
+            })?;
+        }
+        if let Some(a) = w.get("arrival").and_then(Value::as_str) {
+            d.arrival = ArrivalKind::from_name(a).ok_or_else(|| {
+                err!(
+                    "unknown arrival process `{a}` \
+                     (poisson | diurnal | flash-crowd)"
+                )
+            })?;
+        }
+        d.rate_multiplier =
+            float_or(w, "rate_multiplier", d.rate_multiplier);
+        d.trace_path = str_or(w, "trace_path", &d.trace_path.clone());
     }
 
     if let Some(f) = root.get("federation").and_then(Value::as_table) {
@@ -189,6 +208,8 @@ pub fn load_str(text: &str) -> Result<GridConfig> {
             bail!("invalid config: sim.threads must be >= 1, got {threads}");
         }
         cfg.sim.threads = threads as usize;
+        cfg.sim.spill_dir =
+            str_or(s, "spill_dir", &cfg.sim.spill_dir.clone());
     }
 
     if let Err(e) = cfg.validate() {
@@ -331,6 +352,49 @@ bulk_size = 7
         .is_err());
         assert!(load_str(
             "[[site]]\nname = \"a\"\ncpus = 1\n[sim]\nthreads = -2\n"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn workload_source_section_loads_and_validates() {
+        let cfg = load_str(
+            "[[site]]\nname = \"a\"\ncpus = 1\n[workload]\n\
+             source = \"arrival\"\narrival = \"diurnal\"\n\
+             rate_multiplier = 2.5\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.workload.source, SourceMode::Arrival);
+        assert_eq!(cfg.workload.arrival, ArrivalKind::Diurnal);
+        assert_eq!(cfg.workload.rate_multiplier, 2.5);
+        let cfg = load_str(
+            "[[site]]\nname = \"a\"\ncpus = 1\n[workload]\n\
+             source = \"trace\"\ntrace_path = \"/tmp/t.jsonl\"\n\
+             [sim]\nspill_dir = \"/tmp/spill\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.workload.source, SourceMode::Trace);
+        assert_eq!(cfg.workload.trace_path, "/tmp/t.jsonl");
+        assert_eq!(cfg.sim.spill_dir, "/tmp/spill");
+        // Unknown names and incoherent combinations are errors.
+        assert!(load_str(
+            "[[site]]\nname = \"a\"\ncpus = 1\n[workload]\n\
+             source = \"psychic\"\n"
+        )
+        .is_err());
+        assert!(load_str(
+            "[[site]]\nname = \"a\"\ncpus = 1\n[workload]\n\
+             source = \"arrival\"\narrival = \"bursty\"\n"
+        )
+        .is_err());
+        assert!(load_str(
+            "[[site]]\nname = \"a\"\ncpus = 1\n[workload]\n\
+             source = \"trace\"\n"
+        )
+        .is_err());
+        assert!(load_str(
+            "[[site]]\nname = \"a\"\ncpus = 1\n\
+             [sim]\nspill_dir = \"/tmp/spill\"\n"
         )
         .is_err());
     }

@@ -8,7 +8,7 @@ pub mod toml;
 
 pub use loader::{load_file, load_str};
 pub use schema::{
-    EngineKind, FederationConfig, GridConfig, LinkConfig, NetworkConfig,
-    PeerTopology, Policy, SchedulerConfig, SimConfig, SiteConfig,
-    WorkloadConfig, DEFAULT_MAX_EVENTS,
+    ArrivalKind, EngineKind, FederationConfig, GridConfig, LinkConfig,
+    NetworkConfig, PeerTopology, Policy, SchedulerConfig, SimConfig,
+    SiteConfig, SourceMode, WorkloadConfig, DEFAULT_MAX_EVENTS,
 };

@@ -256,6 +256,84 @@ impl Default for SchedulerConfig {
     }
 }
 
+/// How the run's workload reaches the DES (`[workload] source`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SourceMode {
+    /// Materialize the full submission list up front (the default; the
+    /// only mode the conservative PDES accepts).
+    Eager,
+    /// The same generator stream, pulled lazily one submission at a
+    /// time — byte-identical output to `Eager` at bounded memory.
+    Streamed,
+    /// A stochastic arrival process (see [`ArrivalKind`]) drives the
+    /// submission times; bulk contents come from the generator.
+    Arrival,
+    /// Replay a CSV/JSONL trace from `workload.trace_path`.
+    Trace,
+}
+
+impl SourceMode {
+    pub fn from_name(name: &str) -> Option<SourceMode> {
+        match name {
+            "eager" | "materialized" => Some(SourceMode::Eager),
+            "streamed" | "generator" => Some(SourceMode::Streamed),
+            "arrival" => Some(SourceMode::Arrival),
+            "trace" => Some(SourceMode::Trace),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SourceMode::Eager => "eager",
+            SourceMode::Streamed => "streamed",
+            SourceMode::Arrival => "arrival",
+            SourceMode::Trace => "trace",
+        }
+    }
+
+    /// Every mode but `Eager` pulls submissions lazily through a
+    /// `workload::WorkloadSource`.
+    pub fn is_streaming(&self) -> bool {
+        !matches!(self, SourceMode::Eager)
+    }
+}
+
+/// Arrival-process shape for `source = "arrival"`
+/// (`[workload] arrival`). All three are deterministic per seed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArrivalKind {
+    /// Homogeneous Poisson at `arrival_rate × rate_multiplier`.
+    Poisson,
+    /// 24 h sinusoid: the rate swings between 15% and 100% of the
+    /// Poisson rate, peaking mid-cycle.
+    Diurnal,
+    /// Baseline Poisson with an 8× burst for the first 300 s of every
+    /// hour.
+    FlashCrowd,
+}
+
+impl ArrivalKind {
+    pub fn from_name(name: &str) -> Option<ArrivalKind> {
+        match name {
+            "poisson" => Some(ArrivalKind::Poisson),
+            "diurnal" => Some(ArrivalKind::Diurnal),
+            "flash-crowd" | "flash_crowd" | "flashcrowd" => {
+                Some(ArrivalKind::FlashCrowd)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArrivalKind::Poisson => "poisson",
+            ArrivalKind::Diurnal => "diurnal",
+            ArrivalKind::FlashCrowd => "flash-crowd",
+        }
+    }
+}
+
 /// Job class mix and size distributions (§II CMS estimates by default).
 #[derive(Clone, Debug)]
 pub struct WorkloadConfig {
@@ -285,6 +363,15 @@ pub struct WorkloadConfig {
     pub datasets: usize,
     /// Replicas per dataset.
     pub replicas: usize,
+    /// Where submissions come from (TOML `[workload] source`, CLI
+    /// `--source`). Non-eager modes stream batches on demand.
+    pub source: SourceMode,
+    /// Arrival-process shape when `source = "arrival"`.
+    pub arrival: ArrivalKind,
+    /// Scales the arrival-process rate (`source = "arrival"` only).
+    pub rate_multiplier: f64,
+    /// Trace file for `source = "trace"` (CSV or JSONL; CLI `--trace`).
+    pub trace_path: String,
 }
 
 impl Default for WorkloadConfig {
@@ -306,6 +393,10 @@ impl Default for WorkloadConfig {
             max_procs: 4,
             datasets: 50,
             replicas: 2,
+            source: SourceMode::Eager,
+            arrival: ArrivalKind::Poisson,
+            rate_multiplier: 1.0,
+            trace_path: String::new(),
         }
     }
 }
@@ -322,11 +413,18 @@ pub struct SimConfig {
     /// `rust/tests/pdes_equivalence.rs` pins it. TOML `[sim] threads`,
     /// CLI `--sim-threads N`.
     pub threads: usize,
+    /// When non-empty (TOML `[sim] spill_dir`, CLI `--spill DIR`) a
+    /// streamed run seals each delivered job's record to sorted on-disk
+    /// CSV shards in this directory and recycles its `JobStore` slot,
+    /// bounding peak RSS by *live* jobs. The shards are merged back in
+    /// submission order at report time, so the report stays
+    /// byte-identical to the in-memory path. Ignored for eager runs.
+    pub spill_dir: String,
 }
 
 impl Default for SimConfig {
     fn default() -> Self {
-        Self { threads: 1 }
+        Self { threads: 1, spill_dir: String::new() }
     }
 }
 
@@ -385,6 +483,26 @@ impl GridConfig {
         }
         if self.sim.threads == 0 {
             return Err("sim.threads must be >= 1".into());
+        }
+        if !(w.rate_multiplier > 0.0 && w.rate_multiplier.is_finite()) {
+            return Err(format!(
+                "workload.rate_multiplier must be finite and > 0, got {}",
+                w.rate_multiplier
+            ));
+        }
+        if w.source == SourceMode::Trace && w.trace_path.is_empty() {
+            return Err(
+                "workload.source = \"trace\" needs workload.trace_path \
+                 (or --trace FILE)"
+                    .into(),
+            );
+        }
+        if !self.sim.spill_dir.is_empty() && !w.source.is_streaming() {
+            return Err(format!(
+                "sim.spill_dir requires a streaming workload source \
+                 (workload.source is \"{}\"; use streamed | arrival | trace)",
+                w.source.name()
+            ));
         }
         if self.scheduler.group_division_factor == 0 {
             return Err("group_division_factor must be ≥ 1".into());
@@ -519,6 +637,48 @@ mod tests {
         let mut cfg = presets::uniform_grid(4, 4);
         cfg.federation.max_hops = 0;
         cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn streaming_source_validation() {
+        // A trace source without a path is rejected.
+        let mut cfg = presets::uniform_grid(2, 4);
+        cfg.workload.source = SourceMode::Trace;
+        assert!(cfg.validate().is_err());
+        cfg.workload.trace_path = "/tmp/t.csv".into();
+        cfg.validate().unwrap();
+
+        // Spilling needs a streaming source to seal records against.
+        let mut cfg = presets::uniform_grid(2, 4);
+        cfg.sim.spill_dir = "/tmp/spill".into();
+        assert!(cfg.validate().is_err());
+        cfg.workload.source = SourceMode::Streamed;
+        cfg.validate().unwrap();
+
+        let mut cfg = presets::uniform_grid(2, 4);
+        cfg.workload.rate_multiplier = 0.0;
+        assert!(cfg.validate().is_err());
+        cfg.workload.rate_multiplier = f64::NAN;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn source_and_arrival_names_roundtrip() {
+        for m in [SourceMode::Eager, SourceMode::Streamed,
+                  SourceMode::Arrival, SourceMode::Trace] {
+            assert_eq!(SourceMode::from_name(m.name()), Some(m));
+            assert_eq!(m.is_streaming(), m != SourceMode::Eager);
+        }
+        assert_eq!(SourceMode::from_name("nope"), None);
+        for a in [ArrivalKind::Poisson, ArrivalKind::Diurnal,
+                  ArrivalKind::FlashCrowd] {
+            assert_eq!(ArrivalKind::from_name(a.name()), Some(a));
+        }
+        assert_eq!(
+            ArrivalKind::from_name("flash_crowd"),
+            Some(ArrivalKind::FlashCrowd)
+        );
+        assert_eq!(ArrivalKind::from_name("bursty"), None);
     }
 
     #[test]

@@ -19,20 +19,25 @@
 //!   the federation degenerates to the central event stream
 //!   bit-for-bit, which `rust/tests/federation.rs` asserts.
 //!
-//! Both modes flow through [`run_simulation`]; there is deliberately no
-//! second assembly function to drift from this one.
+//! Both modes flow through [`run_simulation`]. Orthogonally, the
+//! *workload* either arrives materialized (eager — the default) or is
+//! pulled on demand from a streaming source
+//! ([`run_simulation_streamed`], selected by `[workload] source`); the
+//! streamed assembly builds the identical engine/picker/world and the
+//! equivalence suite pins its event stream to the eager one
+//! byte-for-byte.
 
 use crate::util::error::Result;
 
 use crate::config::GridConfig;
 use crate::data::Catalog;
-use crate::metrics::JobRecord;
+use crate::metrics::{JobRecord, Recorder};
 use crate::runtime::make_engine;
 use crate::scenario::faults::FaultPlan;
 use crate::scheduler::make_picker;
 use crate::sim::World;
 use crate::util::{Pcg64, Summary};
-use crate::workload::{Submission, WorkloadGen};
+use crate::workload::{source_from_config, Submission, WorkloadGen};
 
 /// Summary of one end-to-end run (central or federated — the report
 /// shape is identical so modes compare column-for-column).
@@ -99,6 +104,58 @@ impl RunReport {
             events,
         }
     }
+
+    /// Build a report from a spilled run's on-disk shards. The k-way
+    /// merge replays sealed records in submission-ordinal order — the
+    /// exact order `completed_records()` iterates the eager slab — and
+    /// floats round-trip as raw bits, so every field here is
+    /// **byte-identical** to what `from_parts` computes in memory.
+    /// (The four metric vectors are O(completed) transiently; the run
+    /// itself stayed bounded by live jobs.)
+    pub fn from_spill(
+        policy: &'static str,
+        recorder: &mut Recorder,
+        events: u64,
+    ) -> Result<RunReport> {
+        let mut rows = recorder.finish_spill()?;
+        let mut queue = Vec::new();
+        let mut exec = Vec::new();
+        let mut turnaround = Vec::new();
+        let mut response = Vec::new();
+        let mut makespan = 0.0f64;
+        while let Some((_ordinal, r)) = rows.next_row()? {
+            // Same completion filter as `completed_records()`; every
+            // sealed record was delivered, so nothing is dropped.
+            if r.delivered > 0.0 {
+                queue.push(r.queue_time());
+                exec.push(r.exec_time());
+                turnaround.push(r.turnaround());
+                response.push(r.response_time());
+                makespan = makespan.max(r.delivered);
+            }
+        }
+        let jobs = queue.len();
+        let throughput = if makespan <= 0.0 {
+            0.0
+        } else {
+            jobs as f64 / makespan
+        };
+        Ok(RunReport {
+            policy,
+            jobs,
+            makespan_s: makespan,
+            queue_time: Summary::from_values(queue),
+            exec_time: Summary::from_values(exec),
+            turnaround: Summary::from_values(turnaround),
+            response_time: Summary::from_values(response),
+            throughput_jobs_per_s: throughput,
+            migrations: recorder.migrations,
+            groups_split: recorder.groups_split,
+            groups_whole: recorder.groups_whole,
+            delegations: recorder.delegations,
+            events,
+        })
+    }
 }
 
 /// Build a world for `cfg` (engine + picker per the config) with a
@@ -108,8 +165,59 @@ impl RunReport {
 /// docs): 0 runs the central leader, N ≥ 1 the peer federation. CLI:
 /// `diana run [--federation N]`.
 pub fn run_simulation(cfg: &GridConfig) -> Result<(World, RunReport)> {
+    if cfg.workload.source.is_streaming() {
+        return run_simulation_streamed(cfg, &FaultPlan::default());
+    }
     let subs = generate_workload(cfg);
     run_simulation_with(cfg, subs)
+}
+
+/// Streamed assembly: same engine/picker/world as the serial path, but
+/// the workload is pulled on demand from the configured
+/// [`WorkloadSource`](crate::workload::WorkloadSource) instead of being
+/// materialized up front, so resident state tracks *live* jobs. When
+/// `cfg.sim.spill_dir` is non-empty the job store recycles delivered
+/// slots and sealed records stream to disk (see
+/// [`Recorder`](crate::metrics::Recorder)); the report is then rebuilt
+/// from the ordinal-order spill merge, byte-identical to the in-memory
+/// one. Always serial: the PDES shards by federation partition, which
+/// has no decomposition of a single serial refill chain — `sim::pdes`
+/// declines streaming configs for the same reason.
+pub fn run_simulation_streamed(
+    cfg: &GridConfig,
+    faults: &FaultPlan,
+) -> Result<(World, RunReport)> {
+    let source = source_from_config(cfg)?.ok_or_else(|| {
+        crate::err!(
+            "run_simulation_streamed needs a streaming workload source \
+             (workload.source is \"{}\")",
+            cfg.workload.source.name()
+        )
+    })?;
+    let engine_for_picker = make_engine(cfg.scheduler.engine)?;
+    let engine_for_world = make_engine(cfg.scheduler.engine)?;
+    let picker = make_picker(
+        cfg.scheduler.policy,
+        engine_for_picker,
+        &cfg.scheduler,
+        cfg.seed,
+    );
+    let mut world = World::new(cfg.clone(), picker, engine_for_world);
+    world.load_faults(faults)?;
+    world.set_source(source)?;
+    let spilling = !cfg.sim.spill_dir.is_empty();
+    if spilling {
+        world.enable_spill(&cfg.sim.spill_dir)?;
+    }
+    world.run()?;
+    let report = if spilling {
+        let policy = world.policy_name();
+        let events = world.events_processed();
+        RunReport::from_spill(policy, &mut world.recorder, events)?
+    } else {
+        RunReport::from_world(&world)
+    };
+    Ok((world, report))
 }
 
 /// Same, but with an explicit (replayed) workload.
@@ -193,6 +301,66 @@ mod tests {
         let (_, b) = run_simulation_with(&cfg, subs).unwrap();
         assert_eq!(a.makespan_s, b.makespan_s);
         assert_eq!(a.queue_time.mean(), b.queue_time.mean());
+    }
+
+    #[test]
+    fn streamed_route_reproduces_eager_report() {
+        let mut cfg = presets::uniform_grid(3, 4);
+        cfg.workload.jobs = 40;
+        cfg.workload.bulk_size = 10;
+        cfg.workload.cpu_sec_median = 30.0;
+        let (_, eager) = run_simulation(&cfg).unwrap();
+        let mut streamed_cfg = cfg.clone();
+        streamed_cfg.workload.source = crate::config::SourceMode::Streamed;
+        let (_, streamed) = run_simulation(&streamed_cfg).unwrap();
+        assert_eq!(eager.jobs, streamed.jobs);
+        assert_eq!(eager.events, streamed.events);
+        assert_eq!(
+            eager.makespan_s.to_bits(),
+            streamed.makespan_s.to_bits()
+        );
+        assert_eq!(
+            eager.queue_time.mean().to_bits(),
+            streamed.queue_time.mean().to_bits()
+        );
+    }
+
+    #[test]
+    fn spilled_report_is_bit_identical_to_in_memory() {
+        let dir = std::env::temp_dir().join("diana-leader-spill-test");
+        let mut cfg = presets::uniform_grid(3, 4);
+        cfg.workload.jobs = 60;
+        cfg.workload.bulk_size = 15;
+        cfg.workload.cpu_sec_median = 30.0;
+        cfg.workload.source = crate::config::SourceMode::Streamed;
+        let (_, in_mem) = run_simulation(&cfg).unwrap();
+        let mut spill_cfg = cfg.clone();
+        spill_cfg.sim.spill_dir = dir.to_str().unwrap().to_string();
+        let (world, spilled) = run_simulation(&spill_cfg).unwrap();
+        // Bounded-memory mode actually engaged: slab drained + recycled.
+        assert_eq!(world.submitted_jobs(), 60);
+        assert_eq!(in_mem.jobs, spilled.jobs);
+        assert_eq!(in_mem.events, spilled.events);
+        assert_eq!(in_mem.makespan_s.to_bits(), spilled.makespan_s.to_bits());
+        assert_eq!(
+            in_mem.throughput_jobs_per_s.to_bits(),
+            spilled.throughput_jobs_per_s.to_bits()
+        );
+        for (a, b) in [
+            (&in_mem.queue_time, &spilled.queue_time),
+            (&in_mem.exec_time, &spilled.exec_time),
+            (&in_mem.turnaround, &spilled.turnaround),
+            (&in_mem.response_time, &spilled.response_time),
+        ] {
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.values().iter().zip(b.values()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        assert_eq!(in_mem.migrations, spilled.migrations);
+        assert_eq!(in_mem.groups_split, spilled.groups_split);
+        assert_eq!(in_mem.groups_whole, spilled.groups_whole);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

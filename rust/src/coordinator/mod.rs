@@ -17,6 +17,6 @@ pub mod leader;
 pub mod meta_scheduler;
 pub mod serve;
 
-pub use leader::{generate_workload, run_simulation, run_simulation_with,
-                 run_simulation_with_faults, RunReport};
+pub use leader::{generate_workload, run_simulation, run_simulation_streamed,
+                 run_simulation_with, run_simulation_with_faults, RunReport};
 pub use meta_scheduler::MetaScheduler;

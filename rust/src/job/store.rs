@@ -17,9 +17,19 @@
 //! parent is the dependency-list order, preserving the exact release
 //! order the map-based implementation produced.
 //!
+//! **Recycling** (streamed runs): once a delivered job's metrics record
+//! is sealed, [`JobStore::recycle`] returns its slot to a free list and
+//! the next `insert` reuses it — so a 10M-job streamed run keeps the
+//! slab sized to the peak *live* job count, not the total. A recycled
+//! handle is poisoned: `get`/`get_mut` panic naming the evicted job id
+//! rather than silently serving another job's row. The CSR `edges` pool
+//! is not reclaimed, but only DAG submissions create edges and the
+//! streaming sources emit flat bulks.
+//!
 //! A `JobId → JobIdx` map is kept for **boundary** queries only (tests,
 //! external inspection via `World::job_by_id`); the event loop never
-//! consults it.
+//! consults it. `recycle` evicts the mapping, so a recycled id resolves
+//! to `None` instead of a stranger's slot.
 
 use std::collections::BTreeMap;
 
@@ -52,6 +62,11 @@ pub struct JobStore {
     by_id: BTreeMap<u64, JobIdx>,
     /// Reused per-submission out-degree scratch for `link_deps`.
     deg_scratch: Vec<u32>,
+    /// Recycled slots awaiting reuse (LIFO keeps the hot slots hot).
+    free: Vec<u32>,
+    /// Poison bit per slot: true between `recycle` and the reusing
+    /// `insert`, when the row's handle must not resolve.
+    freed: Vec<bool>,
 }
 
 impl JobStore {
@@ -59,6 +74,8 @@ impl JobStore {
         JobStore::default()
     }
 
+    /// Slab size (high-water live jobs), NOT total jobs ever inserted —
+    /// recycled slots are counted once.
     pub fn len(&self) -> usize {
         self.jobs.len()
     }
@@ -67,58 +84,101 @@ impl JobStore {
         self.jobs.is_empty()
     }
 
-    /// Insert a job, returning its dense handle. Handles are assigned
-    /// sequentially: a submission's jobs occupy a contiguous index range.
+    /// Jobs currently resident (slab size minus free slots).
+    pub fn live(&self) -> usize {
+        self.jobs.len() - self.free.len()
+    }
+
+    /// Insert a job, returning its dense handle: a recycled slot when
+    /// one is free, otherwise a fresh push at the slab's end.
     pub fn insert(&mut self, job: Job) -> JobIdx {
+        if let Some(slot) = self.free.pop() {
+            let i = slot as usize;
+            self.by_id.insert(job.id.0, JobIdx(slot));
+            self.jobs[i] = job;
+            self.pending_parents[i] = 0;
+            self.child_start[i] = 0;
+            self.child_count[i] = 0;
+            self.freed[i] = false;
+            return JobIdx(slot);
+        }
         let idx = JobIdx(self.jobs.len() as u32);
         self.by_id.insert(job.id.0, idx);
         self.jobs.push(job);
         self.pending_parents.push(0);
         self.child_start.push(0);
         self.child_count.push(0);
+        self.freed.push(false);
         idx
+    }
+
+    /// Return a delivered job's slot to the free list (streamed runs,
+    /// after its metrics record is sealed). Evicts the `JobId` mapping
+    /// and poisons the handle: any later `get`/`get_mut` through it
+    /// panics naming this job instead of aliasing the slot's next
+    /// tenant.
+    pub fn recycle(&mut self, idx: JobIdx) {
+        let i = idx.as_usize();
+        assert!(!self.freed[i], "double recycle of {idx:?}");
+        self.by_id.remove(&self.jobs[i].id.0);
+        self.freed[i] = true;
+        self.free.push(idx.0);
+    }
+
+    #[inline]
+    fn check_live(&self, idx: JobIdx) {
+        let i = idx.as_usize();
+        if self.freed[i] {
+            panic!(
+                "stale JobIdx({}) — job {} was recycled",
+                idx.0, self.jobs[i].id.0
+            );
+        }
     }
 
     #[inline]
     pub fn get(&self, idx: JobIdx) -> &Job {
+        self.check_live(idx);
         &self.jobs[idx.as_usize()]
     }
 
     #[inline]
     pub fn get_mut(&mut self, idx: JobIdx) -> &mut Job {
+        self.check_live(idx);
         &mut self.jobs[idx.as_usize()]
     }
 
     /// Boundary lookup by job id (tests / external inspection only —
-    /// the event loop resolves ids exactly once, at submit).
+    /// the event loop resolves ids exactly once, at submit). Recycled
+    /// jobs resolve to `None`.
     pub fn lookup(&self, id: JobId) -> Option<JobIdx> {
         self.by_id.get(&id.0).copied()
     }
 
-    /// Record one submission's dataflow DAG. `first` is the handle of
-    /// the submission's first job, `n` its job count (handles
-    /// `first .. first+n` — `insert` assigns them contiguously), and
+    /// Record one submission's dataflow DAG. `handles` are the
+    /// submission's job handles in submission order (contiguous for
+    /// eager runs, arbitrary recycled slots for streamed ones), and
     /// `deps` the `(parent, child)` pairs as positions within the
     /// submission. Fills `pending_parents` for the children and the CSR
     /// child ranges for the parents; within a parent, children keep the
     /// `deps` order.
-    pub fn link_deps(&mut self, first: JobIdx, n: usize, deps: &[(usize, usize)]) {
+    pub fn link_deps(&mut self, handles: &[JobIdx], deps: &[(usize, usize)]) {
         if deps.is_empty() {
             return;
         }
-        let base = first.as_usize();
-        debug_assert!(base + n <= self.jobs.len());
+        let n = handles.len();
+        debug_assert!(handles.iter().all(|h| h.as_usize() < self.jobs.len()));
         self.deg_scratch.clear();
         self.deg_scratch.resize(n, 0);
         for &(p, c) in deps {
             debug_assert!(p < n && c < n && p != c);
             self.deg_scratch[p] += 1;
-            self.pending_parents[base + c] += 1;
+            self.pending_parents[handles[c].as_usize()] += 1;
         }
         let mut off = self.edges.len() as u32;
         for p in 0..n {
             if self.deg_scratch[p] > 0 {
-                self.child_start[base + p] = off;
+                self.child_start[handles[p].as_usize()] = off;
                 off += self.deg_scratch[p];
             }
         }
@@ -126,9 +186,10 @@ impl JobStore {
         // Second pass fills in deps order; `child_count` doubles as the
         // per-parent write cursor.
         for &(p, c) in deps {
-            let slot = self.child_start[base + p] + self.child_count[base + p];
-            self.edges[slot as usize] = JobIdx((base + c) as u32);
-            self.child_count[base + p] += 1;
+            let pi = handles[p].as_usize();
+            let slot = self.child_start[pi] + self.child_count[pi];
+            self.edges[slot as usize] = handles[c];
+            self.child_count[pi] += 1;
         }
     }
 
@@ -164,7 +225,8 @@ impl JobStore {
 
     /// Allocated capacities `[jobs, edges]` — for capacity-stability
     /// assertions (the slab only grows by amortized pushes at submit;
-    /// the event loop itself never allocates here).
+    /// the event loop itself never allocates here, and recycling keeps
+    /// `jobs` at the peak-live watermark on streamed runs).
     pub fn capacities(&self) -> [usize; 2] {
         [self.jobs.capacity(), self.edges.capacity()]
     }
@@ -194,6 +256,10 @@ mod tests {
         }
     }
 
+    fn handles(first: JobIdx, n: usize) -> Vec<JobIdx> {
+        (0..n).map(|i| JobIdx(first.0 + i as u32)).collect()
+    }
+
     #[test]
     fn insert_assigns_dense_handles_and_boundary_lookup() {
         let mut s = JobStore::new();
@@ -217,7 +283,7 @@ mod tests {
         }
         // 0 → {2, 1}; 1 → {3}; 4 independent. Child order within a
         // parent must be the dependency-list order (2 before 1).
-        s.link_deps(first, 5, &[(0, 2), (0, 1), (1, 3)]);
+        s.link_deps(&handles(first, 5), &[(0, 2), (0, 1), (1, 3)]);
         assert_eq!(s.children(JobIdx(0)), &[JobIdx(2), JobIdx(1)]);
         assert_eq!(s.children(JobIdx(1)), &[JobIdx(3)]);
         assert!(s.children(JobIdx(4)).is_empty());
@@ -229,13 +295,33 @@ mod tests {
     }
 
     #[test]
+    fn link_deps_follows_non_contiguous_handles() {
+        // Streamed path: a submission's handles may be recycled slots in
+        // arbitrary order. 0 → 1 in submission positions must map to the
+        // actual slots.
+        let mut s = JobStore::new();
+        for i in 0..3 {
+            s.insert(job(i));
+        }
+        s.recycle(JobIdx(0));
+        s.recycle(JobIdx(2));
+        let a = s.insert(job(10)); // reuses slot 2 (LIFO)
+        let b = s.insert(job(11)); // reuses slot 0
+        assert_eq!((a, b), (JobIdx(2), JobIdx(0)));
+        s.link_deps(&[a, b], &[(0, 1)]);
+        assert_eq!(s.children(a), &[b]);
+        assert_eq!(s.pending_parents(b), 1);
+        assert!(!s.has_children(b));
+    }
+
+    #[test]
     fn release_parent_counts_down_to_schedulable() {
         let mut s = JobStore::new();
         let first = s.insert(job(0));
         s.insert(job(1));
         s.insert(job(2));
         // 2 waits on both 0 and 1.
-        s.link_deps(first, 3, &[(0, 2), (1, 2)]);
+        s.link_deps(&handles(first, 3), &[(0, 2), (1, 2)]);
         assert_eq!(s.pending_parents(JobIdx(2)), 2);
         assert!(!s.release_parent(JobIdx(2)));
         assert!(s.release_parent(JobIdx(2)));
@@ -246,13 +332,70 @@ mod tests {
         let mut s = JobStore::new();
         let f1 = s.insert(job(0));
         s.insert(job(1));
-        s.link_deps(f1, 2, &[(0, 1)]);
+        s.link_deps(&handles(f1, 2), &[(0, 1)]);
         let f2 = s.insert(job(2));
         s.insert(job(3));
-        s.link_deps(f2, 2, &[(0, 1)]);
+        s.link_deps(&handles(f2, 2), &[(0, 1)]);
         assert_eq!(s.children(JobIdx(0)), &[JobIdx(1)]);
         assert_eq!(s.children(JobIdx(2)), &[JobIdx(3)]);
         assert!(s.capacities()[1] >= 2);
+    }
+
+    #[test]
+    fn recycle_reuses_slots_and_evicts_id_mapping() {
+        let mut s = JobStore::new();
+        let a = s.insert(job(1));
+        let b = s.insert(job(2));
+        assert_eq!(s.live(), 2);
+        s.recycle(a);
+        assert_eq!(s.live(), 1);
+        // The recycled id no longer resolves (no aliasing a future
+        // tenant), the live one still does.
+        assert_eq!(s.lookup(JobId(1)), None);
+        assert_eq!(s.lookup(JobId(2)), Some(b));
+        // Reuse keeps the slab at its high-water size.
+        let c = s.insert(job(3));
+        assert_eq!(c, a);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.live(), 2);
+        assert_eq!(s.lookup(JobId(3)), Some(c));
+        assert_eq!(s.get(c).id, JobId(3));
+        // Reset slot state: fresh tenant starts unblocked, no children.
+        assert_eq!(s.pending_parents(c), 0);
+        assert!(!s.has_children(c));
+    }
+
+    #[test]
+    fn recycling_churn_keeps_slab_at_peak_live() {
+        let mut s = JobStore::new();
+        for wave in 0..100u64 {
+            let h: Vec<JobIdx> =
+                (0..10).map(|i| s.insert(job(wave * 10 + i))).collect();
+            assert!(s.len() <= 10, "slab grew past peak live: {}", s.len());
+            for idx in h {
+                s.recycle(idx);
+            }
+        }
+        assert_eq!(s.live(), 0);
+        assert_eq!(s.len(), 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "stale JobIdx(0) — job 42 was recycled")]
+    fn stale_handle_panics_naming_the_job() {
+        let mut s = JobStore::new();
+        let a = s.insert(job(42));
+        s.recycle(a);
+        let _ = s.get(a);
+    }
+
+    #[test]
+    #[should_panic(expected = "double recycle")]
+    fn double_recycle_panics() {
+        let mut s = JobStore::new();
+        let a = s.insert(job(0));
+        s.recycle(a);
+        s.recycle(a);
     }
 
     #[test]

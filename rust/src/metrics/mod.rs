@@ -4,5 +4,5 @@
 pub mod recorder;
 pub mod report;
 
-pub use recorder::{JobRecord, Recorder, SiteSeries};
+pub use recorder::{JobRecord, Recorder, SiteSeries, SpillRows};
 pub use report::{fmt_secs, render_csv, render_table, SummaryStats};

@@ -7,8 +7,22 @@
 //! [`JobStore`](crate::job::JobStore) assigns at submit — so the
 //! Finish/Deliver hot path updates a record with one vector index
 //! instead of the `BTreeMap` walk the old id-keyed layout required.
+//!
+//! **Spill mode** (streamed runs): when the job store recycles slots,
+//! a slot's record must leave the dense table before the next tenant
+//! moves in. [`Recorder::seal`] evacuates a delivered job's record —
+//! tagged with its *submission ordinal* — into a bounded buffer that
+//! flushes to sorted on-disk CSV shards; [`Recorder::finish_spill`]
+//! k-way-merges the shards back into ordinal order at report time.
+//! Ordinal order is exactly the eager run's slab order, and float
+//! fields round-trip as raw bits, so a report built from the merge is
+//! **byte-identical** to the in-memory path's.
+
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::{Path, PathBuf};
 
 use crate::job::JobIdx;
+use crate::util::error::{Context, Result};
 use crate::util::{RateSeries, Summary};
 
 /// Timestamps of one job's lifecycle.
@@ -72,12 +86,26 @@ impl SiteSeries {
     }
 }
 
+/// Records buffered between shard flushes (~4.5 MB of spill buffer).
+pub const SPILL_BUF_RECORDS: usize = 64 * 1024;
+
+/// Sealed-record spill state: bounded ordinal-tagged buffer + the count
+/// of sorted shards already on disk.
+#[derive(Clone, Debug)]
+struct Spill {
+    dir: PathBuf,
+    buf: Vec<(u64, JobRecord)>,
+    shards: usize,
+    limit: usize,
+}
+
 /// The run-wide recorder.
 #[derive(Clone, Debug)]
 pub struct Recorder {
     /// Dense, `JobIdx`-keyed (shared index with the `JobStore`).
     jobs: Vec<JobRecord>,
     sites: Vec<SiteSeries>,
+    spill: Option<Spill>,
     pub migrations: u64,
     /// Jobs delegated away from their home federation peer, counted
     /// once at the first forward (multi-hop re-delegations are tracked
@@ -92,6 +120,7 @@ impl Recorder {
         Recorder {
             jobs: Vec::new(),
             sites: (0..n_sites).map(|_| SiteSeries::new(bucket_s)).collect(),
+            spill: None,
             migrations: 0,
             delegations: 0,
             groups_split: 0,
@@ -175,6 +204,201 @@ impl Recorder {
         }
         if last <= 0.0 { 0.0 } else { n as f64 / last }
     }
+
+    /// Turn on spill mode with the default buffer size. `dir` is
+    /// created if absent; stale `shard-*.csv` files from an earlier run
+    /// are removed.
+    pub fn enable_spill(&mut self, dir: impl AsRef<Path>) -> Result<()> {
+        self.enable_spill_with_buffer(dir, SPILL_BUF_RECORDS)
+    }
+
+    /// Spill mode with an explicit buffer size (tests exercise multi-
+    /// shard merges with tiny buffers).
+    pub fn enable_spill_with_buffer(
+        &mut self,
+        dir: impl AsRef<Path>,
+        limit: usize,
+    ) -> Result<()> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir).with_context(|| {
+            format!("creating spill dir {}", dir.display())
+        })?;
+        for entry in std::fs::read_dir(&dir)
+            .with_context(|| format!("listing spill dir {}", dir.display()))?
+        {
+            let entry = entry?;
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            if name.starts_with("shard-") && name.ends_with(".csv") {
+                std::fs::remove_file(entry.path())?;
+            }
+        }
+        self.spill =
+            Some(Spill { dir, buf: Vec::new(), shards: 0, limit: limit.max(1) });
+        Ok(())
+    }
+
+    pub fn spill_enabled(&self) -> bool {
+        self.spill.is_some()
+    }
+
+    /// Evacuate a delivered job's record from the dense table (spill
+    /// mode only — the caller is about to recycle the slot for the next
+    /// tenant). `ordinal` is the job's global submission ordinal, which
+    /// in a streamed run equals the slab index the eager run would have
+    /// assigned — the merge key that restores eager report order.
+    pub fn seal(&mut self, idx: JobIdx, ordinal: u64) -> Result<()> {
+        let rec = std::mem::take(&mut self.jobs[idx.as_usize()]);
+        let spill = self.spill.as_mut().expect("seal without spill enabled");
+        spill.buf.push((ordinal, rec));
+        if spill.buf.len() >= spill.limit {
+            Self::flush_shard(spill)?;
+        }
+        Ok(())
+    }
+
+    fn flush_shard(spill: &mut Spill) -> Result<()> {
+        if spill.buf.is_empty() {
+            return Ok(());
+        }
+        spill.buf.sort_unstable_by_key(|(o, _)| *o);
+        let path = spill.dir.join(format!("shard-{:05}.csv", spill.shards));
+        let mut f = BufWriter::new(std::fs::File::create(&path).with_context(
+            || format!("creating spill shard {}", path.display()),
+        )?);
+        // Floats as raw bits: the merge must reproduce values exactly.
+        for (o, r) in &spill.buf {
+            writeln!(
+                f,
+                "{o},{:x},{:x},{:x},{:x},{:x},{:x},{},{}",
+                r.submit.to_bits(),
+                r.placed.to_bits(),
+                r.enqueued_local.to_bits(),
+                r.started.to_bits(),
+                r.finished.to_bits(),
+                r.delivered.to_bits(),
+                r.exec_site,
+                r.migrations
+            )?;
+        }
+        f.flush()?;
+        spill.shards += 1;
+        spill.buf.clear();
+        Ok(())
+    }
+
+    /// Flush the tail shard and open a streaming ordinal-order merge
+    /// over every sealed record. Call once, at report time.
+    pub fn finish_spill(&mut self) -> Result<SpillRows> {
+        let spill =
+            self.spill.as_mut().expect("finish_spill without spill enabled");
+        Self::flush_shard(spill)?;
+        let mut heads = Vec::with_capacity(spill.shards);
+        for s in 0..spill.shards {
+            let path = spill.dir.join(format!("shard-{s:05}.csv"));
+            let mut head = ShardHead {
+                path: path.display().to_string(),
+                reader: BufReader::new(std::fs::File::open(&path).with_context(
+                    || format!("opening spill shard {}", path.display()),
+                )?),
+                buf: String::new(),
+                ln: 0,
+                next: None,
+            };
+            head.advance()?;
+            heads.push(head);
+        }
+        Ok(SpillRows { heads })
+    }
+
+    /// Number of spill shards written so far (reporting/tests).
+    pub fn spill_shards(&self) -> usize {
+        self.spill.as_ref().map_or(0, |s| s.shards)
+    }
+}
+
+/// One shard's read cursor inside the k-way merge.
+struct ShardHead {
+    path: String,
+    reader: BufReader<std::fs::File>,
+    buf: String,
+    ln: usize,
+    next: Option<(u64, JobRecord)>,
+}
+
+impl ShardHead {
+    fn advance(&mut self) -> Result<()> {
+        self.buf.clear();
+        if self.reader.read_line(&mut self.buf)? == 0 {
+            self.next = None;
+            return Ok(());
+        }
+        self.ln += 1;
+        let (path, ln) = (&self.path, self.ln);
+        let mut cols = [""; 9];
+        let mut n = 0;
+        for (i, c) in self.buf.trim_end().split(',').enumerate() {
+            crate::ensure!(i < 9, "{path}:{ln}: want 9 columns");
+            cols[i] = c;
+            n = i + 1;
+        }
+        crate::ensure!(n == 9, "{path}:{ln}: want 9 columns, got {n}");
+        let bits = |i: usize| -> Result<f64> {
+            u64::from_str_radix(cols[i], 16).map(f64::from_bits).map_err(
+                |_| crate::err!("{path}:{ln}: bad hex field `{}`", cols[i]),
+            )
+        };
+        let ordinal: u64 = cols[0]
+            .parse()
+            .map_err(|_| crate::err!("{path}:{ln}: bad ordinal `{}`", cols[0]))?;
+        self.next = Some((
+            ordinal,
+            JobRecord {
+                submit: bits(1)?,
+                placed: bits(2)?,
+                enqueued_local: bits(3)?,
+                started: bits(4)?,
+                finished: bits(5)?,
+                delivered: bits(6)?,
+                exec_site: cols[7].parse().map_err(|_| {
+                    crate::err!("{path}:{ln}: bad exec_site `{}`", cols[7])
+                })?,
+                migrations: cols[8].parse().map_err(|_| {
+                    crate::err!("{path}:{ln}: bad migrations `{}`", cols[8])
+                })?,
+            },
+        ));
+        Ok(())
+    }
+}
+
+/// Streaming k-way merge over sorted spill shards, yielding sealed
+/// records in global submission-ordinal order. Memory is O(shards):
+/// one buffered line per shard, never the full record set.
+pub struct SpillRows {
+    heads: Vec<ShardHead>,
+}
+
+impl SpillRows {
+    /// The next `(ordinal, record)` in ascending ordinal order.
+    pub fn next_row(&mut self) -> Result<Option<(u64, JobRecord)>> {
+        let mut min: Option<(usize, u64)> = None;
+        for (i, h) in self.heads.iter().enumerate() {
+            if let Some((o, _)) = h.next {
+                if min.map_or(true, |(_, mo)| o < mo) {
+                    min = Some((i, o));
+                }
+            }
+        }
+        match min {
+            None => Ok(None),
+            Some((i, _)) => {
+                let row = self.heads[i].next.take();
+                self.heads[i].advance()?;
+                Ok(row)
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -244,5 +468,64 @@ mod tests {
             r.delivered = 100.0;
         }
         assert!((rec.throughput() - 0.04).abs() < 1e-12);
+    }
+
+    fn spill_dir(name: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join("diana-spill-test").join(name);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn spill_merge_restores_ordinal_order_bit_exactly() {
+        let dir = spill_dir("merge");
+        let mut rec = Recorder::new(1, 10.0);
+        // Tiny buffer → many shards; seal in a scrambled (delivery)
+        // order unlike the ordinal (submission) order.
+        rec.enable_spill_with_buffer(&dir, 3).unwrap();
+        let n = 20u64;
+        let order: Vec<u64> = (0..n).map(|i| (i * 7) % n).collect();
+        for &ord in &order {
+            // One slot, recycled per job — the streamed pattern.
+            let r = rec.job_mut(JobIdx(0));
+            r.submit = ord as f64 * 0.1;
+            r.started = ord as f64 * 0.1 + 1.0;
+            r.finished = ord as f64 * 0.1 + 2.5;
+            r.delivered = ord as f64 * 0.1 + 3.0;
+            r.exec_site = (ord % 3) as usize;
+            r.migrations = ord as u32;
+            rec.seal(JobIdx(0), ord).unwrap();
+            // Sealing resets the slot for the next tenant.
+            assert_eq!(rec.job(JobIdx(0)).unwrap().delivered, 0.0);
+        }
+        assert!(rec.spill_shards() >= 6, "shards: {}", rec.spill_shards());
+        let mut rows = rec.finish_spill().unwrap();
+        let mut seen = 0u64;
+        while let Some((ord, r)) = rows.next_row().unwrap() {
+            assert_eq!(ord, seen, "merge out of order");
+            assert_eq!(r.submit.to_bits(), (ord as f64 * 0.1).to_bits());
+            assert_eq!(
+                r.delivered.to_bits(),
+                (ord as f64 * 0.1 + 3.0).to_bits()
+            );
+            assert_eq!(r.exec_site, (ord % 3) as usize);
+            assert_eq!(r.migrations, ord as u32);
+            seen += 1;
+        }
+        assert_eq!(seen, n);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn enable_spill_clears_stale_shards() {
+        let dir = spill_dir("stale");
+        std::fs::write(dir.join("shard-00099.csv"), "junk\n").unwrap();
+        let mut rec = Recorder::new(1, 10.0);
+        rec.enable_spill(&dir).unwrap();
+        assert!(!dir.join("shard-00099.csv").exists());
+        // A fresh spill with zero sealed records merges to nothing.
+        let mut rows = rec.finish_spill().unwrap();
+        assert!(rows.next_row().unwrap().is_none());
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -14,6 +14,10 @@ pub const SCENARIOS: &[(&str, &str)] = &[
         include_str!("../../examples/sweeps/flash_crowd.toml"),
     ),
     (
+        "flash-crowd-streamed",
+        include_str!("../../examples/sweeps/flash_crowd_streamed.toml"),
+    ),
+    (
         "diurnal-load",
         include_str!("../../examples/sweeps/diurnal_load.toml"),
     ),
@@ -91,6 +95,22 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn streamed_scenario_uses_a_streaming_source() {
+        let spec = load("flash-crowd-streamed").unwrap();
+        let runs = spec.expand().unwrap();
+        assert!(!runs.is_empty());
+        for r in &runs {
+            assert!(r.cfg.workload.source.is_streaming());
+            assert_eq!(
+                r.cfg.workload.arrival,
+                crate::config::ArrivalKind::FlashCrowd
+            );
+        }
+        // Streaming refills overlap the site-down/up plan.
+        assert!(!spec.faults.is_empty());
     }
 
     #[test]

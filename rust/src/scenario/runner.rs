@@ -9,7 +9,8 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
-use crate::coordinator::{generate_workload, run_simulation_with_faults};
+use crate::coordinator::{generate_workload, run_simulation_streamed,
+                         run_simulation_with_faults};
 use crate::metrics::SummaryStats;
 use crate::util::error::Result;
 
@@ -22,8 +23,15 @@ use super::spec::{RunSpec, SweepSpec};
 /// the same path every example and repro figure uses).
 pub fn run_one(run: &RunSpec, faults: &FaultPlan) -> Result<RunResult> {
     let t0 = std::time::Instant::now();
-    let subs = generate_workload(&run.cfg);
-    let (_world, report) = run_simulation_with_faults(&run.cfg, subs, faults)?;
+    // Streaming sources pull their workload on demand; sweeps never
+    // spill (spec expansion cannot set `sim.spill_dir` — parallel
+    // workers would collide in one shared shard directory).
+    let (_world, report) = if run.cfg.workload.source.is_streaming() {
+        run_simulation_streamed(&run.cfg, faults)?
+    } else {
+        let subs = generate_workload(&run.cfg);
+        run_simulation_with_faults(&run.cfg, subs, faults)?
+    };
     let wall_s = t0.elapsed().as_secs_f64();
     Ok(RunResult {
         index: run.index,
@@ -175,6 +183,50 @@ mod tests {
         assert_eq!(a.runs_csv(), b.runs_csv());
         assert_eq!(a.aggregate_csv(), b.aggregate_csv());
         assert_eq!(a.to_json(), b.to_json());
+    }
+
+    #[test]
+    fn streamed_source_axis_reproduces_eager_runs() {
+        // Crossing `source` with a pinned `seed` axis pairs every eager
+        // run with a streamed run of identical seed/config — the lazy
+        // path must reproduce each metric column bit-for-bit.
+        let spec = SweepSpec::from_str_named(
+            "name = \"stream-eq\"\npreset = \"uniform-4x4\"\n\
+             [axes]\nsource = [\"eager\", \"streamed\"]\nseed = [5, 9]\n\
+             [set]\njobs = 30\nbulk_size = 10\ncpu_sec_median = 60.0\n",
+            "stream-eq",
+        )
+        .unwrap();
+        let rep = run_sweep(&spec, 2).unwrap();
+        assert_eq!(rep.runs.len(), 4);
+        let mut by_seed: std::collections::BTreeMap<u64, Vec<_>> =
+            Default::default();
+        for r in &rep.runs {
+            by_seed.entry(r.seed).or_default().push(r);
+        }
+        assert_eq!(by_seed.len(), 2);
+        for (seed, rs) in by_seed {
+            assert_eq!(rs.len(), 2, "seed {seed}");
+            let (a, b) = (rs[0], rs[1]);
+            assert_eq!(a.jobs, b.jobs, "seed {seed}");
+            assert_eq!(a.events, b.events, "seed {seed}");
+            assert_eq!(
+                a.makespan_s.to_bits(),
+                b.makespan_s.to_bits(),
+                "seed {seed}"
+            );
+            assert_eq!(
+                a.queue.mean.to_bits(),
+                b.queue.mean.to_bits(),
+                "seed {seed}"
+            );
+            assert_eq!(
+                a.queue.p99.to_bits(),
+                b.queue.p99.to_bits(),
+                "seed {seed}"
+            );
+            assert_eq!(a.migrations, b.migrations, "seed {seed}");
+        }
     }
 
     #[test]

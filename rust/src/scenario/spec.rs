@@ -34,8 +34,8 @@
 
 use std::path::Path;
 
-use crate::config::{self, EngineKind, GridConfig, LinkConfig, PeerTopology,
-                    Policy};
+use crate::config::{self, ArrivalKind, EngineKind, GridConfig, LinkConfig,
+                    PeerTopology, Policy, SourceMode};
 use crate::config::toml::{self, Table, Value};
 use crate::util::error::{Context, Result};
 use crate::{bail, err};
@@ -478,6 +478,33 @@ pub fn apply_param(cfg: &mut GridConfig, key: &str, v: &ParamValue) -> Result<()
         "max_procs" => cfg.workload.max_procs = u(key, v)?,
         "datasets" => cfg.workload.datasets = u(key, v)?,
         "replicas" => cfg.workload.replicas = u(key, v)?,
+        // streaming sources (sweeps cross arrival shapes with fault
+        // plans; spill stays per-run-CLI only — parallel sweep workers
+        // would collide in one shared spill dir)
+        "source" | "workload.source" | "workload_source" => {
+            let m = s(key, v)?;
+            cfg.workload.source = SourceMode::from_name(m).ok_or_else(|| {
+                err!(
+                    "unknown workload source `{m}` \
+                     (eager | streamed | arrival | trace)"
+                )
+            })?;
+        }
+        "arrival" | "workload.arrival" | "workload_arrival" => {
+            let a = s(key, v)?;
+            cfg.workload.arrival = ArrivalKind::from_name(a).ok_or_else(|| {
+                err!(
+                    "unknown arrival process `{a}` \
+                     (poisson | diurnal | flash-crowd)"
+                )
+            })?;
+        }
+        "rate_multiplier" | "workload.rate_multiplier" => {
+            cfg.workload.rate_multiplier = f(key, v)?
+        }
+        "trace_path" | "workload.trace_path" => {
+            cfg.workload.trace_path = s(key, v)?.to_string()
+        }
         // scheduler
         "policy" => {
             let p = s(key, v)?;
@@ -541,7 +568,8 @@ pub fn apply_param(cfg: &mut GridConfig, key: &str, v: &ParamValue) -> Result<()
         _ => bail!(
             "unknown sweep parameter `{key}` (workload: jobs, bulk_size, \
              users, arrival_rate, frac_*, in_mb_*, out_mb_median, exe_mb, \
-             cpu_sec_*, max_procs, datasets, replicas; scheduler: policy, \
+             cpu_sec_*, max_procs, datasets, replicas, source, arrival, \
+             rate_multiplier, trace_path; scheduler: policy, \
              engine, w5..w7, w_net, w_dtc, congestion_thrs, \
              group_division_factor, max_group_per_site, aging_halflife_s, \
              default_quota, migration_period_s, max_migrations; \
@@ -739,6 +767,60 @@ rtt_ms = 200.0
         let e = spec.expand().unwrap_err().to_string();
         assert!(e.contains("bulk_size"), "error must name the axis: {e}");
         assert!(e.contains("empty"), "got: {e}");
+    }
+
+    #[test]
+    fn workload_source_axis_keys_apply() {
+        let spec = SweepSpec::from_str_named(
+            "preset = \"uniform-4x4\"\n\
+             [axes]\nworkload.arrival = [\"poisson\", \"flash-crowd\"]\n\
+             [set]\nworkload.source = \"arrival\"\n\
+             workload.rate_multiplier = 2.0\n",
+            "stream",
+        )
+        .unwrap();
+        let runs = spec.expand().unwrap();
+        assert_eq!(runs.len(), 2);
+        assert_eq!(runs[0].cfg.workload.arrival, ArrivalKind::Poisson);
+        assert_eq!(runs[1].cfg.workload.arrival, ArrivalKind::FlashCrowd);
+        for r in &runs {
+            assert_eq!(r.cfg.workload.source, SourceMode::Arrival);
+            assert_eq!(r.cfg.workload.rate_multiplier, 2.0);
+        }
+        // Unprefixed aliases hit the same fields.
+        let mut cfg = config::presets::uniform_grid(2, 2);
+        apply_param(&mut cfg, "source", &ParamValue::Str("streamed".into()))
+            .unwrap();
+        assert_eq!(cfg.workload.source, SourceMode::Streamed);
+        apply_param(
+            &mut cfg,
+            "trace_path",
+            &ParamValue::Str("/tmp/t.csv".into()),
+        )
+        .unwrap();
+        assert_eq!(cfg.workload.trace_path, "/tmp/t.csv");
+        // Bad values are errors naming the choices.
+        let e = apply_param(
+            &mut cfg,
+            "source",
+            &ParamValue::Str("magic".into()),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("eager | streamed"), "got: {e}");
+        assert!(apply_param(
+            &mut cfg,
+            "arrival",
+            &ParamValue::Str("storm".into())
+        )
+        .is_err());
+        // Expansion validates: rate_multiplier must be positive.
+        let bad = SweepSpec::from_str_named(
+            "preset = \"uniform-2x2\"\n[axes]\nrate_multiplier = [-1.0]\n",
+            "x",
+        )
+        .unwrap();
+        assert!(bad.expand().is_err());
     }
 
     #[test]

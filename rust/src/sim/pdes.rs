@@ -275,6 +275,13 @@ fn eligible(
     subs: &[Submission],
     faults: &[(f64, ResolvedFault)],
 ) -> bool {
+    // Streaming sources feed the DES through a serial SourceRefill
+    // chain (one pull of lookahead, optional slab recycling/spill) —
+    // there is no per-shard decomposition of a lazily produced
+    // workload. Streamed runs always take the serial path.
+    if cfg.workload.source.is_streaming() {
+        return false;
+    }
     // Multiple live peers: one shard per peer is the decomposition.
     if cfg.sim.threads < 2 {
         return false;

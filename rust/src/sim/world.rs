@@ -34,7 +34,7 @@ use crate::scheduler::{build_cost_inputs_into, GridView, SitePicker,
                        SiteSnapshot};
 use crate::util::error::Result;
 use crate::util::Pcg64;
-use crate::workload::Submission;
+use crate::workload::{Submission, WorkloadSource};
 
 use super::engine::{EventQueue, SidePool};
 use super::grid_cache::GridStateCache;
@@ -62,6 +62,12 @@ enum Ev {
     /// inter-peer forward latency. `slot` indexes the forward
     /// side-table holding the job batch + bulk group.
     Forward { slot: u32, peer: u32, hops: u32 },
+    /// Streaming-source refill: admit the pulled-ahead submission
+    /// (`World::pending_sub`) and pull the next one. Exactly one of
+    /// these lives in the heap per pending submission, replacing the
+    /// eager path's one-`Submit`-per-submission — the processed event
+    /// count is identical.
+    SourceRefill,
 }
 
 /// Out-of-line payload of one in-flight `Ev::Forward`: the batch's slab
@@ -113,6 +119,27 @@ pub struct World {
     /// Pending workload; each entry is consumed (not cloned) by its
     /// `Ev::Submit`.
     submissions: Vec<Option<Submission>>,
+    /// Streaming workload source (tentpole path): submissions are
+    /// pulled on demand through a `SourceRefill` chain instead of being
+    /// materialized into `submissions`. `None` = classic eager path.
+    source: Option<Box<dyn WorkloadSource>>,
+    /// The pulled-ahead submission whose `Ev::SourceRefill` is in the
+    /// heap (one submission of lookahead, so heap timing matches the
+    /// eager schedule exactly).
+    pending_sub: Option<Submission>,
+    /// The source returned `None`: no further refills will be scheduled.
+    source_done: bool,
+    /// Jobs admitted so far. Equals `store.len()` on eager runs; on
+    /// streamed runs with recycling the slab stays at peak-live size
+    /// while this keeps counting.
+    submitted_jobs: usize,
+    /// Recycle delivered job slots (streamed spill runs only — sealing
+    /// a record into the spill is what frees its slot).
+    recycle_on: bool,
+    /// Global submission ordinal per slab slot — the slab index an
+    /// eager run would have assigned, used as the spill merge key.
+    ordinals: Vec<u64>,
+    next_ordinal: u64,
     delivered: usize,
     total_jobs: usize,
     migration_on: bool,
@@ -145,8 +172,11 @@ pub struct World {
     /// Reused gather buffer: slab rows copied for the picker's `&[Job]`
     /// entry points (plain POD memcpy, no heap traffic).
     batch_jobs: Vec<Job>,
-    /// Reused ready-set buffer for `on_submit`.
+    /// Reused ready-set buffer for `admit_submission`.
     ready_scratch: Vec<JobIdx>,
+    /// Reused handle buffer for `admit_submission` (streamed handles
+    /// may be non-contiguous recycled slots, so a range won't do).
+    handle_scratch: Vec<JobIdx>,
     /// Reused newly-started buffer for dispatch/finish.
     started_scratch: Vec<LocalEntry>,
     /// Reused child-release buffer for `on_deliver`.
@@ -253,6 +283,13 @@ impl World {
             discovery,
             group_results: Vec::new(),
             submissions: Vec::new(),
+            source: None,
+            pending_sub: None,
+            source_done: false,
+            submitted_jobs: 0,
+            recycle_on: false,
+            ordinals: Vec::new(),
+            next_ordinal: 0,
             delivered: 0,
             total_jobs: 0,
             migration_on,
@@ -261,6 +298,7 @@ impl World {
             forwards: SidePool::new(),
             batch_jobs: Vec::new(),
             ready_scratch: Vec::new(),
+            handle_scratch: Vec::new(),
             started_scratch: Vec::new(),
             kids_scratch: Vec::new(),
             site_buckets: vec![Vec::new(); n],
@@ -406,16 +444,17 @@ impl World {
 
     /// Allocated capacities of the event-loop's reusable buffers, for
     /// capacity-stability assertions (`[event heap, forward slots,
-    /// batch rows, ready set, started, kids, view, picks, site buckets,
-    /// touched sites, migration snaps]`). A steady-state flood must
-    /// stop growing these.
+    /// batch rows, ready set, handles, started, kids, view, picks,
+    /// site buckets, touched sites, migration snaps]`). A steady-state
+    /// flood must stop growing these.
     #[doc(hidden)]
-    pub fn event_loop_capacities(&self) -> [usize; 11] {
+    pub fn event_loop_capacities(&self) -> [usize; 12] {
         [
             self.events.capacity(),
             self.forwards.slot_count(),
             self.batch_jobs.capacity(),
             self.ready_scratch.capacity(),
+            self.handle_scratch.capacity(),
             self.started_scratch.capacity(),
             self.kids_scratch.capacity(),
             self.view_scratch.capacity(),
@@ -482,6 +521,62 @@ impl World {
         self.submissions.extend(subs.into_iter().map(Some));
     }
 
+    /// Attach a streaming workload source; call before `run` instead of
+    /// `load_submissions`. Pulls one submission of lookahead and
+    /// schedules its `Ev::SourceRefill` — at most one pending
+    /// submission (plus the live jobs) is ever resident. May be called
+    /// again after the previous source drained and its run completed
+    /// (streamed flood rounds through one world).
+    pub fn set_source(
+        &mut self,
+        mut source: Box<dyn WorkloadSource>,
+    ) -> Result<()> {
+        assert!(
+            self.submissions.is_empty()
+                && self.pending_sub.is_none()
+                && (self.source.is_none() || self.source_done),
+            "set_source on a world that already has a workload"
+        );
+        self.source_done = false;
+        match source.next_submission()? {
+            Some(sub) => {
+                self.events.schedule(sub.at, Ev::SourceRefill);
+                self.pending_sub = Some(sub);
+            }
+            None => self.source_done = true,
+        }
+        self.source = Some(source);
+        Ok(())
+    }
+
+    /// Bounded-memory mode for streamed runs: completed job records are
+    /// sealed into on-disk spill shards (merged back in submission
+    /// order at report time — see `metrics::Recorder`), and the job
+    /// store recycles delivered slots, so resident state tracks *live*
+    /// jobs rather than total jobs.
+    pub fn enable_spill(&mut self, dir: &str) -> Result<()> {
+        assert!(
+            self.source.is_some() || self.submissions.is_empty(),
+            "spill mode requires a streaming source (enable it before \
+             loading an eager workload)"
+        );
+        self.recorder.enable_spill(dir)?;
+        self.recycle_on = true;
+        Ok(())
+    }
+
+    /// The spill-merge ordinal of a slab slot's current tenant (the
+    /// slab index an eager run would have assigned).
+    pub(crate) fn ordinal_of(&self, idx: JobIdx) -> u64 {
+        self.ordinals[idx.as_usize()]
+    }
+
+    /// Jobs admitted so far (streamed runs keep counting while the slab
+    /// stays at peak-live size).
+    pub fn submitted_jobs(&self) -> usize {
+        self.submitted_jobs
+    }
+
     /// Refresh the grid-state cache's dirty rows from ground truth.
     /// Every consumer of per-site state (placement, gossip, migration)
     /// calls this first, then reads `self.cache.snaps()` /
@@ -545,9 +640,10 @@ impl World {
             );
             match ev {
                 Ev::Submit(i) => self.on_submit(i as usize, t)?,
+                Ev::SourceRefill => self.on_source_refill(t)?,
                 Ev::Dispatch(site) => self.dispatch(site as usize, t),
                 Ev::Finish { job, site } => self.on_finish(job, site as usize, t),
-                Ev::Deliver { job } => self.on_deliver(job, t),
+                Ev::Deliver { job } => self.on_deliver(job, t)?,
                 Ev::Fault(i) => self.apply_fault(i as usize, t),
                 Ev::Gossip => {
                     self.sync_grid();
@@ -593,11 +689,50 @@ impl World {
                     );
                 }
             }
-            if self.delivered >= self.total_jobs {
+            // Streamed runs: `total_jobs` only counts admitted work, so
+            // completion additionally requires the source to be drained
+            // (no pulled-ahead submission, no more pulls).
+            if self.delivered >= self.total_jobs
+                && self.pending_sub.is_none()
+                && (self.source.is_none() || self.source_done)
+            {
                 break;
             }
         }
         Ok(self.delivered)
+    }
+
+    /// Admit the pulled-ahead submission and pull its successor. The
+    /// successor's refill is scheduled *before* admission so that at
+    /// equal timestamps the refill's heap seq precedes any event the
+    /// admission schedules — mirroring the eager heap, where every
+    /// `Submit` predates the run's derived events.
+    fn on_source_refill(&mut self, t: f64) -> Result<()> {
+        let sub = self
+            .pending_sub
+            .take()
+            .expect("SourceRefill without a pending submission");
+        match self
+            .source
+            .as_mut()
+            .expect("SourceRefill without a source")
+            .next_submission()?
+        {
+            Some(next) => {
+                crate::ensure!(
+                    next.at >= sub.at,
+                    "workload source went backwards in time: submission \
+                     at t={} after t={}",
+                    next.at,
+                    sub.at
+                );
+                self.events.schedule(next.at, Ev::SourceRefill);
+                self.pending_sub = Some(next);
+            }
+            None => self.source_done = true,
+        }
+        self.total_jobs += sub.jobs.len();
+        self.admit_submission(sub, t)
     }
 
     fn on_submit(&mut self, idx: usize, t: f64) -> Result<()> {
@@ -606,23 +741,43 @@ impl World {
         let sub = self.submissions[idx]
             .take()
             .expect("Ev::Submit fired twice for one submission");
-        let n = sub.jobs.len();
-        let first = JobIdx(self.store.len() as u32);
-        for job in sub.jobs {
+        self.admit_submission(sub, t)
+    }
+
+    /// Move one submission's jobs into the slab and place its ready
+    /// set. Shared by the eager path (`Ev::Submit`) and the streaming
+    /// path (`Ev::SourceRefill`) — both hand over an owned submission,
+    /// so the downstream placement machinery is identical.
+    fn admit_submission(&mut self, sub: Submission, t: f64) -> Result<()> {
+        let Submission { at: _, group: bulk_group, jobs, deps } = sub;
+        let n = jobs.len();
+        let mut handles = std::mem::take(&mut self.handle_scratch);
+        handles.clear();
+        for job in jobs {
             let site = job.submit_site;
             let i = self.store.insert(job);
+            // Tag the slot with its submission ordinal — the slab index
+            // an eager run would have assigned (spill merge key).
+            let u = i.as_usize();
+            if u >= self.ordinals.len() {
+                self.ordinals.resize(u + 1, 0);
+            }
+            self.ordinals[u] = self.next_ordinal;
+            self.next_ordinal += 1;
             self.recorder.on_submit(i, site, t);
+            handles.push(i);
         }
-        let live = self.store.len() - self.delivered;
+        self.submitted_jobs += n;
+        let live = self.submitted_jobs - self.delivered;
         if live > self.peak_live {
             self.peak_live = live;
         }
         self.aggregator
-            .open(sub.group.id, n, sub.group.output_site);
+            .open(bulk_group.id, n, bulk_group.output_site);
 
         // §II dataflow gating: only subjobs with all parents delivered
         // are schedulable now; the rest wait for dependency release.
-        self.store.link_deps(first, n, &sub.deps);
+        self.store.link_deps(&handles, &deps);
 
         // §VII SJF pre-arrangement before queue placement (ready set) —
         // a stable sort of the handles by the same key `arrange_sjf`
@@ -630,8 +785,9 @@ impl World {
         let mut ready = std::mem::take(&mut self.ready_scratch);
         ready.clear();
         ready.extend(
-            (first.0..first.0 + n as u32)
-                .map(JobIdx)
+            handles
+                .iter()
+                .copied()
                 .filter(|&i| self.store.pending_parents(i) == 0),
         );
         {
@@ -640,6 +796,7 @@ impl World {
         }
         if ready.is_empty() {
             self.ready_scratch = ready;
+            self.handle_scratch = handles;
             return Ok(());
         }
 
@@ -649,7 +806,7 @@ impl World {
         let group = if self.cfg.scheduler.policy == Policy::Diana {
             Some(Group {
                 jobs: ready.iter().map(|&i| self.store.get(i).id).collect(),
-                ..sub.group
+                ..bulk_group
             })
         } else {
             None
@@ -657,7 +814,8 @@ impl World {
 
         // Federation: the submission lands at the home peer of its
         // submitting site.
-        let peer = self.home_route(self.store.get(first).submit_site);
+        let peer = self.home_route(self.store.get(handles[0]).submit_site);
+        self.handle_scratch = handles;
 
         // The incoming batch is part of the queue pressure Q (§IV): on
         // an idle grid this is what makes capability Pi matter (Q/Pi·W6
@@ -1044,7 +1202,7 @@ impl World {
         self.events.schedule(t, Ev::Dispatch(site as u32));
     }
 
-    fn on_deliver(&mut self, job: JobIdx, t: f64) {
+    fn on_deliver(&mut self, job: JobIdx, t: f64) -> Result<()> {
         self.recorder.job_mut(job).delivered = t;
         self.delivered += 1;
         // POD field reads off the slab row — no clone, no lookup.
@@ -1092,6 +1250,15 @@ impl World {
             }
             self.kids_scratch = kids;
         }
+        // Streamed spill runs: this job is finished with — seal its
+        // record into the spill (evacuating the recorder slot) and
+        // recycle its slab slot for the next submission's tenant. The
+        // handle is poisoned from here on.
+        if self.recycle_on {
+            self.recorder.seal(job, self.ordinal_of(job))?;
+            self.store.recycle(job);
+        }
+        Ok(())
     }
 
     /// Place a dependency-released subjob (individually, via the
@@ -1418,12 +1585,15 @@ impl World {
                 Ev::Finish { job, site } => {
                     self.on_finish(job, site as usize, t)
                 }
-                Ev::Deliver { job } => self.on_deliver(job, t),
+                Ev::Deliver { job } => self.on_deliver(job, t)?,
                 Ev::Forward { slot, peer, hops } => {
                     self.on_forward(slot, peer as usize, hops, t)?
                 }
+                // Streaming sources decline PDES (`pdes::eligible`), so
+                // a refill can no more reach a shard queue than a
+                // coordinator event can.
                 Ev::Monitor | Ev::MigrationCheck | Ev::Gossip
-                | Ev::Fault(_) => {
+                | Ev::Fault(_) | Ev::SourceRefill => {
                     unreachable!("coordinator event in a PDES shard queue")
                 }
             }
@@ -2351,5 +2521,151 @@ mod tests {
             "event-loop buffers reallocated in steady state"
         );
         assert_eq!(world.recorder.n_completed(), 200);
+    }
+
+    /// Eager reference for the streaming tests: the production pairing
+    /// (World::new's own seed^0xca7a catalog drives the generator),
+    /// exactly what `GeneratedSource` replays.
+    fn run_eager(cfg: GridConfig, policy: Policy) -> World {
+        let mut world = build_world(cfg, policy);
+        let subs = WorkloadGen::new(world.cfg.seed)
+            .schedule(&world.cfg, &world.catalog);
+        world.load_submissions(subs);
+        world.run().unwrap();
+        world
+    }
+
+    fn run_streamed(
+        cfg: GridConfig,
+        policy: Policy,
+        spill: Option<&std::path::Path>,
+    ) -> World {
+        let mut world = build_world(cfg, policy);
+        let src = crate::workload::GeneratedSource::new(&world.cfg);
+        world.set_source(Box::new(src)).unwrap();
+        if let Some(dir) = spill {
+            world.enable_spill(dir.to_str().unwrap()).unwrap();
+        }
+        world.run().unwrap();
+        world
+    }
+
+    #[test]
+    fn streamed_run_matches_eager_bit_for_bit() {
+        let cfg = small_cfg(120);
+        let eager = run_eager(cfg.clone(), Policy::Diana);
+        let streamed = run_streamed(cfg, Policy::Diana, None);
+        assert_eq!(eager.completion(), 1.0);
+        assert_eq!(streamed.completion(), 1.0);
+        // One SourceRefill per submission replaces one Submit per
+        // submission: the processed event count is identical.
+        assert_eq!(eager.events_processed(), streamed.events_processed());
+        assert_eq!(eager.now().to_bits(), streamed.now().to_bits());
+        assert_eq!(eager.recorder.n_completed(), 120);
+        assert_eq!(streamed.recorder.n_completed(), 120);
+        // Without recycling, streamed slab order == eager slab order —
+        // every lifecycle record must be bit-identical.
+        for i in 0..120u32 {
+            let a = eager.recorder.job(JobIdx(i)).unwrap();
+            let b = streamed.recorder.job(JobIdx(i)).unwrap();
+            assert_eq!(a.submit.to_bits(), b.submit.to_bits(), "job {i}");
+            assert_eq!(a.started.to_bits(), b.started.to_bits(), "job {i}");
+            assert_eq!(a.finished.to_bits(), b.finished.to_bits(), "job {i}");
+            assert_eq!(
+                a.delivered.to_bits(),
+                b.delivered.to_bits(),
+                "job {i}"
+            );
+            assert_eq!(a.exec_site, b.exec_site, "job {i}");
+        }
+        assert_eq!(eager.group_results.len(), streamed.group_results.len());
+        assert_eq!(eager.peak_live_jobs(), streamed.peak_live_jobs());
+    }
+
+    #[test]
+    fn streamed_spill_recycles_slots_and_merges_identically() {
+        let dir = std::env::temp_dir().join("diana-world-spill-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let cfg = small_cfg(150);
+        let eager = run_eager(cfg.clone(), Policy::Diana);
+        let mut streamed = run_streamed(cfg, Policy::Diana, Some(&dir));
+        assert_eq!(streamed.completion(), 1.0);
+        assert_eq!(
+            eager.events_processed(),
+            streamed.events_processed()
+        );
+        // Recycling keeps the slab at the peak-live watermark — far
+        // below the 150 total jobs — and drains it to zero at the end.
+        assert_eq!(streamed.store.live(), 0);
+        assert_eq!(streamed.store.len(), streamed.peak_live_jobs());
+        assert_eq!(streamed.peak_live_jobs(), eager.peak_live_jobs());
+        assert_eq!(streamed.submitted_jobs(), 150);
+        // The spill merge restores eager slab order bit-for-bit.
+        let mut rows = streamed.recorder.finish_spill().unwrap();
+        let mut ord = 0u64;
+        while let Some((o, r)) = rows.next_row().unwrap() {
+            assert_eq!(o, ord, "merge out of ordinal order");
+            let e = eager.recorder.job(JobIdx(ord as u32)).unwrap();
+            assert_eq!(e.submit.to_bits(), r.submit.to_bits(), "job {ord}");
+            assert_eq!(e.started.to_bits(), r.started.to_bits(), "job {ord}");
+            assert_eq!(
+                e.finished.to_bits(),
+                r.finished.to_bits(),
+                "job {ord}"
+            );
+            assert_eq!(
+                e.delivered.to_bits(),
+                r.delivered.to_bits(),
+                "job {ord}"
+            );
+            assert_eq!(e.exec_site, r.exec_site, "job {ord}");
+            ord += 1;
+        }
+        assert_eq!(ord, 150);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn streamed_rounds_reuse_buffers_and_bound_the_slab() {
+        // The streaming analogue of the flood capacity test: push
+        // repeated streamed+spill rounds through ONE world. After the
+        // warm-up rounds, refills must not grow any reusable event-loop
+        // buffer, and — unlike the eager flood, whose slab accumulates
+        // jobs — recycling must hold the job slab (and the recorder's
+        // dense table behind it) at the peak-live watermark.
+        let dir = std::env::temp_dir().join("diana-stream-caps-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut world = build_world(small_cfg(100), Policy::Diana);
+        world.enable_spill(dir.to_str().unwrap()).unwrap();
+        let round = |world: &mut World| {
+            // Same seed per round: job/group ids repeat, which recycling
+            // makes legal — the previous tenants' id mappings are
+            // evicted and their groups fully aggregated.
+            let src =
+                crate::workload::GeneratedSource::new(&world.cfg);
+            world.set_source(Box::new(src)).unwrap();
+            world.run().unwrap();
+        };
+        for _ in 0..3 {
+            round(&mut world);
+        }
+        let caps = world.event_loop_capacities();
+        let store_caps = world.store.capacities();
+        round(&mut world);
+        round(&mut world);
+        assert_eq!(
+            caps,
+            world.event_loop_capacities(),
+            "event-loop buffers reallocated in streamed steady state"
+        );
+        assert_eq!(
+            store_caps,
+            world.store.capacities(),
+            "job slab grew across streamed rounds despite recycling"
+        );
+        assert_eq!(world.submitted_jobs(), 500);
+        assert_eq!(world.store.live(), 0);
+        assert_eq!(world.store.len(), world.peak_live_jobs());
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

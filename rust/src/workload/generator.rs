@@ -24,7 +24,9 @@ pub struct Submission {
 
 /// Deterministic workload generator.
 pub struct WorkloadGen {
-    rng: Pcg64,
+    /// Exposed to `workload::source` so the streaming generator can
+    /// replay `schedule()`'s exact draw order (site, bulk, inter-arrival).
+    pub(crate) rng: Pcg64,
     next_job: u64,
     next_group: u64,
 }

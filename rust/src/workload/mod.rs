@@ -1,8 +1,14 @@
-//! Workload substrate: the CMS-like bulk generator (§II) and replayable
-//! trace I/O.
+//! Workload substrate: the CMS-like bulk generator (§II), replayable
+//! trace I/O and the streaming submission sources feeding the DES on
+//! demand.
 
 pub mod generator;
+pub mod source;
 pub mod trace;
 
 pub use generator::{Submission, WorkloadGen};
-pub use trace::{read_trace, write_trace};
+pub use source::{
+    source_from_config, ArrivalSource, GeneratedSource, TraceSource,
+    WorkloadSource,
+};
+pub use trace::{read_trace, write_trace, write_trace_jsonl, TraceReader};

@@ -1,0 +1,406 @@
+//! Streaming workload sources: pull-based submission streams feeding
+//! the DES on demand (`sim::world`'s `SourceRefill` chain) so a run
+//! holds only *live* jobs in memory instead of the full schedule.
+//!
+//! Three implementations:
+//!
+//! * [`GeneratedSource`] — the eager generator refitted behind the
+//!   trait. It replays [`WorkloadGen::schedule`]'s exact per-iteration
+//!   draw order (submit site → bulk contents → inter-arrival gap), so
+//!   the streamed submission sequence is **byte-identical** to the
+//!   materialized one for the same seed/config
+//!   (`tests/streamed_equivalence.rs` pins it end to end).
+//! * [`ArrivalSource`] — stochastic arrival processes
+//!   (Poisson / diurnal / flash-crowd via Lewis–Shedler thinning),
+//!   deterministic per seed, with bulk contents from the same
+//!   generator stream.
+//! * [`TraceSource`] — buffered replay of a CSV/JSONL trace
+//!   (`workload::trace::TraceReader`), one submission batch per pull.
+//!
+//! Sources promise non-decreasing `at` across pulls; the trace reader
+//! enforces it up front and the process sources guarantee it by
+//! construction.
+
+use crate::config::{ArrivalKind, GridConfig, SourceMode};
+use crate::data::Catalog;
+use crate::job::UserId;
+use crate::util::error::Result;
+use crate::util::Pcg64;
+
+use super::generator::{Submission, WorkloadGen};
+use super::trace::TraceReader;
+
+/// A pull-based iterator of timed submission batches. `None` ends the
+/// stream; errors (I/O, malformed trace rows) abort the run.
+pub trait WorkloadSource {
+    /// The next submission batch, with `at` ≥ every previous batch's.
+    fn next_submission(&mut self) -> Result<Option<Submission>>;
+
+    /// Human label for logs and error messages.
+    fn describe(&self) -> String;
+}
+
+/// Shared generator-side state: the bulk-content stream plus the
+/// round-robin user / emitted-job accounting `schedule()` keeps.
+struct GenState {
+    cfg: GridConfig,
+    catalog: Catalog,
+    gen: WorkloadGen,
+    emitted: usize,
+    user: u32,
+}
+
+impl GenState {
+    fn new(cfg: &GridConfig) -> GenState {
+        // Same catalog construction as `World::new` /
+        // `coordinator::generate_workload`, so streamed jobs' dataset
+        // references resolve identically.
+        let mut rng = Pcg64::new(cfg.seed ^ 0xca7a);
+        let catalog = Catalog::from_config(cfg, &mut rng);
+        GenState {
+            cfg: cfg.clone(),
+            catalog,
+            gen: WorkloadGen::new(cfg.seed),
+            emitted: 0,
+            user: 0,
+        }
+    }
+
+    fn exhausted(&self) -> bool {
+        self.emitted >= self.cfg.workload.jobs
+    }
+
+    /// Draw the next bulk at time `t`: submit site uniform, then the
+    /// homogeneous bulk — the exact draw order of `schedule()`.
+    fn next_bulk(&mut self, t: f64) -> Submission {
+        let (jobs, bulk_size, users) = {
+            let w = &self.cfg.workload;
+            (w.jobs, w.bulk_size, w.users)
+        };
+        let n = if bulk_size == 0 {
+            1
+        } else {
+            bulk_size.min(jobs - self.emitted)
+        };
+        let site =
+            self.gen.rng.below(self.cfg.sites.len() as u64) as usize;
+        let sub = self.gen.bulk(
+            &self.cfg,
+            &self.catalog,
+            UserId(self.user % users.max(1) as u32),
+            site,
+            t,
+            n,
+        );
+        self.emitted += n;
+        self.user += 1;
+        sub
+    }
+}
+
+/// The eager generator behind the streaming trait: pull-by-pull replay
+/// of [`WorkloadGen::schedule`] with identical RNG draw order.
+pub struct GeneratedSource {
+    state: GenState,
+    t: f64,
+}
+
+impl GeneratedSource {
+    pub fn new(cfg: &GridConfig) -> GeneratedSource {
+        GeneratedSource { state: GenState::new(cfg), t: 0.0 }
+    }
+}
+
+impl WorkloadSource for GeneratedSource {
+    fn next_submission(&mut self) -> Result<Option<Submission>> {
+        if self.state.exhausted() {
+            return Ok(None);
+        }
+        let sub = self.state.next_bulk(self.t);
+        // Gap drawn *after* the bulk, exactly like `schedule()`.
+        let rate = self.state.cfg.workload.arrival_rate.max(1e-9);
+        self.t += self.state.gen.rng.exponential(rate);
+        Ok(Some(sub))
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "generated stream (seed {}, {} jobs)",
+            self.state.cfg.seed, self.state.cfg.workload.jobs
+        )
+    }
+}
+
+/// Flash-crowd burst: the first `FLASH_BURST_S` of every
+/// `FLASH_PERIOD_S` runs at `FLASH_MULT ×` the baseline rate.
+const FLASH_PERIOD_S: f64 = 3600.0;
+const FLASH_BURST_S: f64 = 300.0;
+const FLASH_MULT: f64 = 8.0;
+/// Diurnal floor: the overnight trough keeps 15% of the peak rate.
+const DIURNAL_FLOOR: f64 = 0.15;
+const DAY_S: f64 = 86_400.0;
+
+/// Non-homogeneous Poisson arrivals by Lewis–Shedler thinning: draw
+/// candidates at the envelope rate `λ_max`, accept with probability
+/// `λ(t)/λ_max`. The arrival stream has its own RNG, so the bulk
+/// contents stay on the same generator stream regardless of process
+/// shape.
+pub struct ArrivalSource {
+    state: GenState,
+    arrivals: Pcg64,
+    kind: ArrivalKind,
+    base_rate: f64,
+    rate_max: f64,
+    t: f64,
+    first: bool,
+}
+
+impl ArrivalSource {
+    pub fn new(cfg: &GridConfig) -> ArrivalSource {
+        let w = &cfg.workload;
+        let base_rate =
+            w.arrival_rate.max(1e-9) * w.rate_multiplier;
+        let rate_max = match w.arrival {
+            ArrivalKind::Poisson | ArrivalKind::Diurnal => base_rate,
+            ArrivalKind::FlashCrowd => base_rate * FLASH_MULT,
+        };
+        ArrivalSource {
+            state: GenState::new(cfg),
+            arrivals: Pcg64::new(cfg.seed ^ 0xa221),
+            kind: w.arrival,
+            base_rate,
+            rate_max,
+            t: 0.0,
+            first: true,
+        }
+    }
+
+    /// Instantaneous rate λ(t) ≤ `rate_max` for every t.
+    fn rate_at(&self, t: f64) -> f64 {
+        match self.kind {
+            ArrivalKind::Poisson => self.base_rate,
+            ArrivalKind::Diurnal => {
+                let phase = (t / DAY_S) * std::f64::consts::TAU;
+                let shape = DIURNAL_FLOOR
+                    + (1.0 - DIURNAL_FLOOR) * 0.5 * (1.0 - phase.cos());
+                self.base_rate * shape
+            }
+            ArrivalKind::FlashCrowd => {
+                if t.rem_euclid(FLASH_PERIOD_S) < FLASH_BURST_S {
+                    self.base_rate * FLASH_MULT
+                } else {
+                    self.base_rate
+                }
+            }
+        }
+    }
+
+    fn next_arrival(&mut self) -> f64 {
+        loop {
+            self.t += self.arrivals.exponential(self.rate_max);
+            let lam = self.rate_at(self.t);
+            if self.arrivals.next_f64() * self.rate_max <= lam {
+                return self.t;
+            }
+        }
+    }
+}
+
+impl WorkloadSource for ArrivalSource {
+    fn next_submission(&mut self) -> Result<Option<Submission>> {
+        if self.state.exhausted() {
+            return Ok(None);
+        }
+        // First batch at t=0 (the flood's leading edge, matching the
+        // generator's schedule); later batches at process arrivals.
+        let at = if self.first {
+            self.first = false;
+            0.0
+        } else {
+            self.next_arrival()
+        };
+        Ok(Some(self.state.next_bulk(at)))
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "{} arrivals (seed {}, base rate {:.3}/s, {} jobs)",
+            self.kind.name(),
+            self.state.cfg.seed,
+            self.base_rate,
+            self.state.cfg.workload.jobs
+        )
+    }
+}
+
+/// Buffered trace replay: one submission batch per pull, validated and
+/// time-ordered by [`TraceReader`].
+pub struct TraceSource {
+    reader: TraceReader,
+    path: String,
+}
+
+impl TraceSource {
+    pub fn open(path: &str) -> Result<TraceSource> {
+        Ok(TraceSource {
+            reader: TraceReader::open(path)?,
+            path: path.to_string(),
+        })
+    }
+}
+
+impl WorkloadSource for TraceSource {
+    fn next_submission(&mut self) -> Result<Option<Submission>> {
+        self.reader.next_submission()
+    }
+
+    fn describe(&self) -> String {
+        format!("trace replay ({})", self.path)
+    }
+}
+
+/// Build the configured streaming source, or `None` for the eager
+/// (materialized) path.
+pub fn source_from_config(
+    cfg: &GridConfig,
+) -> Result<Option<Box<dyn WorkloadSource>>> {
+    Ok(match cfg.workload.source {
+        SourceMode::Eager => None,
+        SourceMode::Streamed => Some(Box::new(GeneratedSource::new(cfg))),
+        SourceMode::Arrival => Some(Box::new(ArrivalSource::new(cfg))),
+        SourceMode::Trace => {
+            Some(Box::new(TraceSource::open(&cfg.workload.trace_path)?))
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    fn cfg(jobs: usize, seed: u64) -> GridConfig {
+        let mut cfg = presets::uniform_grid(4, 4);
+        cfg.workload.jobs = jobs;
+        cfg.workload.bulk_size = 10;
+        cfg.seed = seed;
+        cfg
+    }
+
+    fn drain(src: &mut dyn WorkloadSource) -> Vec<Submission> {
+        let mut out = Vec::new();
+        while let Some(s) = src.next_submission().unwrap() {
+            out.push(s);
+        }
+        out
+    }
+
+    #[test]
+    fn generated_source_replays_schedule_exactly() {
+        let cfg = cfg(137, 42); // non-multiple of bulk: final short batch
+        let mut rng = Pcg64::new(cfg.seed ^ 0xca7a);
+        let catalog = Catalog::from_config(&cfg, &mut rng);
+        let eager = WorkloadGen::new(cfg.seed).schedule(&cfg, &catalog);
+        let streamed = drain(&mut GeneratedSource::new(&cfg));
+        assert_eq!(eager.len(), streamed.len());
+        for (a, b) in eager.iter().zip(&streamed) {
+            assert_eq!(a.at.to_bits(), b.at.to_bits(), "arrival diverged");
+            assert_eq!(a.group.id, b.group.id);
+            assert_eq!(a.jobs.len(), b.jobs.len());
+            for (x, y) in a.jobs.iter().zip(&b.jobs) {
+                assert_eq!(x.id, y.id);
+                assert_eq!(x.class, y.class);
+                assert_eq!(x.input, y.input);
+                assert_eq!(x.cpu_sec.to_bits(), y.cpu_sec.to_bits());
+                assert_eq!(x.out_mb.to_bits(), y.out_mb.to_bits());
+                assert_eq!(x.procs, y.procs);
+                assert_eq!(x.submit_site, y.submit_site);
+            }
+        }
+        let total: usize = streamed.iter().map(|s| s.jobs.len()).sum();
+        assert_eq!(total, cfg.workload.jobs);
+    }
+
+    #[test]
+    fn arrival_sources_are_deterministic_and_ordered() {
+        for kind in [
+            ArrivalKind::Poisson,
+            ArrivalKind::Diurnal,
+            ArrivalKind::FlashCrowd,
+        ] {
+            let mut c = cfg(200, 7);
+            c.workload.source = SourceMode::Arrival;
+            c.workload.arrival = kind;
+            let a = drain(&mut ArrivalSource::new(&c));
+            let b = drain(&mut ArrivalSource::new(&c));
+            assert_eq!(a.len(), b.len(), "{kind:?} run length diverged");
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.at.to_bits(), y.at.to_bits(), "{kind:?}");
+                assert_eq!(x.jobs.len(), y.jobs.len());
+            }
+            assert!(
+                a.windows(2).all(|w| w[0].at <= w[1].at),
+                "{kind:?} arrivals out of order"
+            );
+            let total: usize = a.iter().map(|s| s.jobs.len()).sum();
+            assert_eq!(total, 200, "{kind:?} dropped jobs");
+        }
+    }
+
+    #[test]
+    fn flash_crowd_bursts_beat_poisson_early() {
+        // Within the first burst window the flash-crowd process runs at
+        // 8× the baseline, so it lands more submissions before t=300 s.
+        let mut c = cfg(400, 9);
+        c.workload.arrival_rate = 0.02;
+        c.workload.arrival = ArrivalKind::FlashCrowd;
+        let flash = drain(&mut ArrivalSource::new(&c));
+        c.workload.arrival = ArrivalKind::Poisson;
+        let poisson = drain(&mut ArrivalSource::new(&c));
+        let early = |subs: &[Submission]| {
+            subs.iter().filter(|s| s.at < FLASH_BURST_S).count()
+        };
+        assert!(
+            early(&flash) > early(&poisson),
+            "flash {} vs poisson {}",
+            early(&flash),
+            early(&poisson)
+        );
+    }
+
+    #[test]
+    fn rate_multiplier_speeds_up_arrivals() {
+        let mut c = cfg(300, 11);
+        c.workload.arrival = ArrivalKind::Poisson;
+        let slow = drain(&mut ArrivalSource::new(&c));
+        c.workload.rate_multiplier = 4.0;
+        let fast = drain(&mut ArrivalSource::new(&c));
+        assert!(
+            fast.last().unwrap().at < slow.last().unwrap().at,
+            "4× rate should compress the schedule: {} vs {}",
+            fast.last().unwrap().at,
+            slow.last().unwrap().at
+        );
+    }
+
+    #[test]
+    fn source_from_config_dispatches_on_mode() {
+        let c = cfg(10, 1);
+        assert!(source_from_config(&c).unwrap().is_none());
+        let mut c = cfg(10, 1);
+        c.workload.source = SourceMode::Streamed;
+        let mut src = source_from_config(&c).unwrap().unwrap();
+        assert!(src.describe().contains("generated"));
+        assert!(src.next_submission().unwrap().is_some());
+        let mut c = cfg(10, 1);
+        c.workload.source = SourceMode::Arrival;
+        c.workload.arrival = ArrivalKind::FlashCrowd;
+        let src = source_from_config(&c).unwrap().unwrap();
+        assert!(src.describe().contains("flash-crowd"));
+        // A missing trace file is an open-time error, not a run-time one.
+        let mut c = cfg(10, 1);
+        c.workload.source = SourceMode::Trace;
+        c.workload.trace_path = "/nonexistent/diana-trace.csv".into();
+        assert!(source_from_config(&c).is_err());
+    }
+}

@@ -1,7 +1,18 @@
-//! Workload trace I/O: persist a generated submission schedule as CSV so
-//! runs are replayable and figures are regenerable from identical inputs.
+//! Workload trace I/O: persist a generated submission schedule as CSV or
+//! JSONL so runs are replayable and figures are regenerable from
+//! identical inputs.
+//!
+//! Reading goes through [`TraceReader`], a buffered streaming parser
+//! that yields one submission batch per pull (so `workload::TraceSource`
+//! can replay million-job traces at bounded memory). Validation is
+//! strict and errors name the exact spot: `path:line: bad \`field\``.
+//! Timestamps must be non-decreasing and a group's rows contiguous with
+//! one shared submit time — violations are rejected before the batch
+//! ever reaches the simulator ([`read_trace`] therefore rejects a bad
+//! file up front, before a run starts).
 
-use std::io::{BufRead, Write};
+use std::collections::HashSet;
+use std::io::{BufRead, BufReader, Write};
 use std::path::Path;
 
 use crate::job::{Group, GroupId, Job, JobClass, JobId, UserId};
@@ -12,19 +23,18 @@ use super::generator::Submission;
 const HEADER: &str = "at,group,user,job,class,input,in_mb,out_mb,exe_mb,\
 cpu_sec,procs,submit_site,quota,max_per_site,division_factor";
 
+/// Column names in `HEADER` order (JSONL rows carry the same keys).
+const COLS: [&str; 15] = [
+    "at", "group", "user", "job", "class", "input", "in_mb", "out_mb",
+    "exe_mb", "cpu_sec", "procs", "submit_site", "quota", "max_per_site",
+    "division_factor",
+];
+
 fn class_code(c: JobClass) -> u8 {
     match c {
         JobClass::ComputeIntensive => 0,
         JobClass::DataIntensive => 1,
         JobClass::Both => 2,
-    }
-}
-
-fn class_from(code: u8) -> JobClass {
-    match code {
-        0 => JobClass::ComputeIntensive,
-        1 => JobClass::DataIntensive,
-        _ => JobClass::Both,
     }
 }
 
@@ -60,60 +70,304 @@ pub fn write_trace(path: impl AsRef<Path>, subs: &[Submission]) -> Result<()> {
     Ok(())
 }
 
-pub fn read_trace(path: impl AsRef<Path>) -> Result<Vec<Submission>> {
-    let f = std::io::BufReader::new(
-        std::fs::File::open(path.as_ref())
-            .with_context(|| format!("opening {}", path.as_ref().display()))?,
+/// Same rows as [`write_trace`], one flat JSON object per line (keys =
+/// CSV column names). [`TraceReader`] picks the format by extension.
+pub fn write_trace_jsonl(
+    path: impl AsRef<Path>,
+    subs: &[Submission],
+) -> Result<()> {
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path.as_ref())
+            .with_context(|| format!("creating {}", path.as_ref().display()))?,
     );
-    let mut subs: Vec<Submission> = Vec::new();
-    for (ln, line) in f.lines().enumerate() {
-        let line = line?;
-        if ln == 0 || line.trim().is_empty() {
-            continue;
+    for s in subs {
+        for j in &s.jobs {
+            writeln!(
+                f,
+                "{{\"at\":{},\"group\":{},\"user\":{},\"job\":{},\
+                 \"class\":{},\"input\":{},\"in_mb\":{},\"out_mb\":{},\
+                 \"exe_mb\":{},\"cpu_sec\":{},\"procs\":{},\
+                 \"submit_site\":{},\"quota\":{},\"max_per_site\":{},\
+                 \"division_factor\":{}}}",
+                s.at,
+                s.group.id.0,
+                j.user.0,
+                j.id.0,
+                class_code(j.class),
+                j.input.map(|d| d as i64).unwrap_or(-1),
+                j.in_mb,
+                j.out_mb,
+                j.exe_mb,
+                j.cpu_sec,
+                j.procs,
+                j.submit_site,
+                j.quota,
+                s.group.max_per_site,
+                s.group.division_factor,
+            )?;
         }
-        let cols: Vec<&str> = line.split(',').collect();
-        crate::ensure!(cols.len() == 15, "line {}: want 15 cols", ln + 1);
-        let at: f64 = cols[0].parse()?;
-        let gid = GroupId(cols[1].parse()?);
-        let input: i64 = cols[5].parse()?;
-        let job = Job {
-            id: JobId(cols[3].parse()?),
-            user: UserId(cols[2].parse()?),
-            group: Some(gid),
-            class: class_from(cols[4].parse()?),
-            input: (input >= 0).then_some(input as usize),
-            in_mb: cols[6].parse()?,
-            out_mb: cols[7].parse()?,
-            exe_mb: cols[8].parse()?,
-            cpu_sec: cols[9].parse()?,
-            procs: cols[10].parse()?,
-            submit_site: cols[11].parse()?,
-            submit_time: at,
-            quota: cols[12].parse()?,
-            migrations: 0,
+    }
+    Ok(())
+}
+
+/// One validated trace row (line number kept for error reporting).
+struct Row {
+    ln: usize,
+    at: f64,
+    gid: u64,
+    max_per_site: usize,
+    division_factor: usize,
+    job: Job,
+}
+
+/// Parse one typed field, naming file, line and column on failure.
+fn parse_field<T: std::str::FromStr>(
+    path: &str,
+    ln: usize,
+    name: &str,
+    raw: &str,
+) -> Result<T> {
+    raw.trim()
+        .parse::<T>()
+        .map_err(|_| crate::err!("{path}:{ln}: bad `{name}` field: `{raw}`"))
+}
+
+fn row_from_fields(path: &str, ln: usize, f: &[&str; 15]) -> Result<Row> {
+    let at: f64 = parse_field(path, ln, "at", f[0])?;
+    crate::ensure!(
+        at.is_finite() && at >= 0.0,
+        "{path}:{ln}: bad `at` field: `{}` (want finite ≥ 0)",
+        f[0]
+    );
+    let gid: u64 = parse_field(path, ln, "group", f[1])?;
+    let class = match parse_field::<u8>(path, ln, "class", f[4])? {
+        0 => JobClass::ComputeIntensive,
+        1 => JobClass::DataIntensive,
+        2 => JobClass::Both,
+        _ => crate::bail!(
+            "{path}:{ln}: bad `class` field: `{}` (want 0 | 1 | 2)",
+            f[4]
+        ),
+    };
+    let input: i64 = parse_field(path, ln, "input", f[5])?;
+    let job = Job {
+        id: JobId(parse_field(path, ln, "job", f[3])?),
+        user: UserId(parse_field(path, ln, "user", f[2])?),
+        group: Some(GroupId(gid)),
+        class,
+        input: (input >= 0).then_some(input as usize),
+        in_mb: parse_field(path, ln, "in_mb", f[6])?,
+        out_mb: parse_field(path, ln, "out_mb", f[7])?,
+        exe_mb: parse_field(path, ln, "exe_mb", f[8])?,
+        cpu_sec: parse_field(path, ln, "cpu_sec", f[9])?,
+        procs: parse_field(path, ln, "procs", f[10])?,
+        submit_site: parse_field(path, ln, "submit_site", f[11])?,
+        submit_time: at,
+        quota: parse_field(path, ln, "quota", f[12])?,
+        migrations: 0,
+    };
+    Ok(Row {
+        ln,
+        at,
+        gid,
+        max_per_site: parse_field(path, ln, "max_per_site", f[13])?,
+        division_factor: parse_field(path, ln, "division_factor", f[14])?,
+        job,
+    })
+}
+
+/// Buffered streaming trace parser: one [`Submission`] batch per
+/// [`next_submission`](TraceReader::next_submission) pull, holding at
+/// most one lookahead row in memory.
+pub struct TraceReader {
+    path: String,
+    reader: BufReader<std::fs::File>,
+    buf: String,
+    ln: usize,
+    jsonl: bool,
+    pending: Option<Row>,
+    last_at: f64,
+    /// Group ids whose row run has ended — reappearing later is an error
+    /// (a split group would silently become two half-groups).
+    closed: HashSet<u64>,
+}
+
+impl TraceReader {
+    /// Open a trace; format by extension (`.jsonl` → JSONL, else CSV).
+    /// A CSV trace's header is validated here, so a wrong file fails at
+    /// open time rather than mid-run.
+    pub fn open(path: impl AsRef<Path>) -> Result<TraceReader> {
+        let display = path.as_ref().display().to_string();
+        let file = std::fs::File::open(path.as_ref())
+            .with_context(|| format!("opening trace {display}"))?;
+        let jsonl = display.ends_with(".jsonl");
+        let mut r = TraceReader {
+            path: display,
+            reader: BufReader::new(file),
+            buf: String::new(),
+            ln: 0,
+            jsonl,
+            pending: None,
+            last_at: f64::NEG_INFINITY,
+            closed: HashSet::new(),
         };
-        match subs.last_mut().filter(|s| s.group.id == gid) {
-            Some(s) => {
-                s.group.jobs.push(job.id);
-                s.jobs.push(job);
+        if !r.jsonl {
+            r.buf.clear();
+            r.reader.read_line(&mut r.buf)?;
+            r.ln = 1;
+            crate::ensure!(
+                r.buf.trim_end() == HEADER,
+                "{}:1: bad header `{}` (want `{HEADER}`)",
+                r.path,
+                r.buf.trim_end()
+            );
+        }
+        Ok(r)
+    }
+
+    /// Read the next non-blank line into `self.buf`; false at EOF.
+    fn next_line(&mut self) -> Result<bool> {
+        loop {
+            self.buf.clear();
+            if self.reader.read_line(&mut self.buf)? == 0 {
+                return Ok(false);
             }
-            None => {
-                subs.push(Submission {
-                    at,
-                    deps: Vec::new(),
-                    group: Group {
-                        id: gid,
-                        user: job.user,
-                        jobs: vec![job.id],
-                        max_per_site: cols[13].parse()?,
-                        division_factor: cols[14].parse()?,
-                        output_site: job.submit_site,
-                        pin_site: None,
-                    },
-                    jobs: vec![job],
-                });
+            self.ln += 1;
+            if !self.buf.trim().is_empty() {
+                return Ok(true);
             }
         }
+    }
+
+    fn next_row(&mut self) -> Result<Option<Row>> {
+        if !self.next_line()? {
+            return Ok(None);
+        }
+        let (path, ln) = (&self.path, self.ln);
+        let line = self.buf.trim_end();
+        let mut fields = [""; 15];
+        if self.jsonl {
+            let inner = line
+                .trim()
+                .strip_prefix('{')
+                .and_then(|s| s.strip_suffix('}'))
+                .ok_or_else(|| {
+                    crate::err!("{path}:{ln}: not a flat JSON object: `{line}`")
+                })?;
+            for part in inner.split(',') {
+                let (k, v) = part.split_once(':').ok_or_else(|| {
+                    crate::err!("{path}:{ln}: bad `{part}` pair")
+                })?;
+                let key = k.trim().trim_matches('"');
+                let idx =
+                    COLS.iter().position(|c| *c == key).ok_or_else(|| {
+                        crate::err!("{path}:{ln}: unknown key `{key}`")
+                    })?;
+                fields[idx] = v.trim();
+            }
+            for (i, f) in fields.iter().enumerate() {
+                crate::ensure!(
+                    !f.is_empty(),
+                    "{path}:{ln}: missing `{}` key",
+                    COLS[i]
+                );
+            }
+        } else {
+            let mut n = 0;
+            for (i, col) in line.split(',').enumerate() {
+                crate::ensure!(
+                    i < 15,
+                    "{path}:{ln}: want 15 columns, got more: `{line}`"
+                );
+                fields[i] = col;
+                n = i + 1;
+            }
+            crate::ensure!(
+                n == 15,
+                "{path}:{ln}: want 15 columns, got {n}: `{line}`"
+            );
+        }
+        row_from_fields(path, ln, &fields).map(Some)
+    }
+
+    /// The next submission batch: a maximal run of consecutive rows
+    /// sharing one group id (and one submit time). Enforces the stream
+    /// contract `workload::WorkloadSource` promises: non-decreasing
+    /// `at` across batches.
+    pub fn next_submission(&mut self) -> Result<Option<Submission>> {
+        let first = match self.pending.take() {
+            Some(r) => r,
+            None => match self.next_row()? {
+                Some(r) => r,
+                None => return Ok(None),
+            },
+        };
+        crate::ensure!(
+            first.at >= self.last_at,
+            "{}:{}: out of order: submission at t={} after t={}",
+            self.path,
+            first.ln,
+            first.at,
+            self.last_at
+        );
+        crate::ensure!(
+            self.closed.insert(first.gid),
+            "{}:{}: group {} rows are not contiguous",
+            self.path,
+            first.ln,
+            first.gid
+        );
+        self.last_at = first.at;
+        let gid = first.gid;
+        let at = first.at;
+        let mut sub = Submission {
+            at,
+            group: Group {
+                id: GroupId(gid),
+                user: first.job.user,
+                jobs: vec![first.job.id],
+                max_per_site: first.max_per_site,
+                division_factor: first.division_factor,
+                output_site: first.job.submit_site,
+                pin_site: None,
+            },
+            jobs: vec![first.job],
+            deps: Vec::new(),
+        };
+        loop {
+            match self.next_row()? {
+                None => break,
+                Some(r) if r.gid == gid => {
+                    crate::ensure!(
+                        r.at == at,
+                        "{}:{}: group {} rows must share one submit time \
+                         (t={} vs t={})",
+                        self.path,
+                        r.ln,
+                        gid,
+                        r.at,
+                        at
+                    );
+                    sub.group.jobs.push(r.job.id);
+                    sub.jobs.push(r.job);
+                }
+                Some(r) => {
+                    self.pending = Some(r);
+                    break;
+                }
+            }
+        }
+        Ok(Some(sub))
+    }
+}
+
+/// Read and validate a whole trace up front (errors before a run ever
+/// starts). Streaming replay should use `workload::TraceSource` instead.
+pub fn read_trace(path: impl AsRef<Path>) -> Result<Vec<Submission>> {
+    let mut r = TraceReader::open(path)?;
+    let mut subs = Vec::new();
+    while let Some(s) = r.next_submission()? {
+        subs.push(s);
     }
     Ok(subs)
 }
@@ -126,16 +380,23 @@ mod tests {
     use crate::util::Pcg64;
     use crate::workload::WorkloadGen;
 
-    #[test]
-    fn roundtrip_preserves_everything() {
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("diana-trace-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn sample() -> Vec<Submission> {
         let cfg = presets::uniform_grid(3, 4);
         let mut rng = Pcg64::new(1);
         let cat = Catalog::from_config(&cfg, &mut rng);
-        let subs = WorkloadGen::new(2).schedule(&cfg, &cat);
+        WorkloadGen::new(2).schedule(&cfg, &cat)
+    }
 
-        let dir = std::env::temp_dir().join("diana-trace-test");
-        std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join("trace.csv");
+    #[test]
+    fn roundtrip_preserves_everything() {
+        let subs = sample();
+        let path = tmp("trace.csv");
         write_trace(&path, &subs).unwrap();
         let back = read_trace(&path).unwrap();
 
@@ -151,6 +412,26 @@ mod tests {
                 assert_eq!(x.input, y.input);
                 assert_eq!(x.cpu_sec, y.cpu_sec);
                 assert_eq!(x.procs, y.procs);
+                assert_eq!(x.quota, y.quota);
+            }
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn jsonl_roundtrip_matches_csv() {
+        let subs = sample();
+        let path = tmp("trace.jsonl");
+        write_trace_jsonl(&path, &subs).unwrap();
+        let back = read_trace(&path).unwrap();
+        assert_eq!(subs.len(), back.len());
+        for (a, b) in subs.iter().zip(&back) {
+            assert_eq!(a.at, b.at);
+            assert_eq!(a.group.id, b.group.id);
+            assert_eq!(a.jobs.len(), b.jobs.len());
+            for (x, y) in a.jobs.iter().zip(&b.jobs) {
+                assert_eq!(x.id, y.id);
+                assert_eq!(x.cpu_sec, y.cpu_sec);
             }
         }
         std::fs::remove_file(&path).ok();
@@ -158,11 +439,114 @@ mod tests {
 
     #[test]
     fn read_rejects_malformed() {
-        let dir = std::env::temp_dir().join("diana-trace-test");
-        std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join("bad.csv");
+        let path = tmp("bad.csv");
         std::fs::write(&path, "header\n1,2,3\n").unwrap();
-        assert!(read_trace(&path).is_err());
+        let e = read_trace(&path).unwrap_err().to_string();
+        assert!(e.contains(":1:") && e.contains("header"), "{e}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn errors_name_file_line_and_field() {
+        let path = tmp("badfield.csv");
+        let good = "0,0,0,0,1,2,10,5,25,abc,1,0,1.0,50,2";
+        std::fs::write(&path, format!("{HEADER}\n{good}\n")).unwrap();
+        let e = read_trace(&path).unwrap_err().to_string();
+        assert!(e.contains(":2:"), "no line number: {e}");
+        assert!(e.contains("`cpu_sec`"), "no field name: {e}");
+        assert!(e.contains("`abc`"), "no offending value: {e}");
+
+        std::fs::write(&path, format!("{HEADER}\n1,2,3\n")).unwrap();
+        let e = read_trace(&path).unwrap_err().to_string();
+        assert!(e.contains("15 columns, got 3"), "{e}");
+
+        let bad_class = "0,0,0,0,7,2,10,5,25,60,1,0,1.0,50,2";
+        std::fs::write(&path, format!("{HEADER}\n{bad_class}\n")).unwrap();
+        let e = read_trace(&path).unwrap_err().to_string();
+        assert!(e.contains("`class`") && e.contains("0 | 1 | 2"), "{e}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn out_of_order_timestamps_rejected() {
+        let path = tmp("ooo.csv");
+        let rows = "5,0,0,0,0,-1,0,5,25,60,1,0,1.0,50,2\n\
+                    1,1,0,1,0,-1,0,5,25,60,1,0,1.0,50,2\n";
+        std::fs::write(&path, format!("{HEADER}\n{rows}")).unwrap();
+        let e = read_trace(&path).unwrap_err().to_string();
+        assert!(e.contains(":3:") && e.contains("out of order"), "{e}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn split_group_rejected() {
+        let path = tmp("split.csv");
+        let rows = "0,0,0,0,0,-1,0,5,25,60,1,0,1.0,50,2\n\
+                    0,1,0,1,0,-1,0,5,25,60,1,0,1.0,50,2\n\
+                    0,0,0,2,0,-1,0,5,25,60,1,0,1.0,50,2\n";
+        std::fs::write(&path, format!("{HEADER}\n{rows}")).unwrap();
+        let e = read_trace(&path).unwrap_err().to_string();
+        assert!(e.contains("not contiguous"), "{e}");
+
+        // A group whose rows disagree on submit time is also rejected.
+        let rows = "0,0,0,0,0,-1,0,5,25,60,1,0,1.0,50,2\n\
+                    3,0,0,1,0,-1,0,5,25,60,1,0,1.0,50,2\n";
+        std::fs::write(&path, format!("{HEADER}\n{rows}")).unwrap();
+        let e = read_trace(&path).unwrap_err().to_string();
+        assert!(e.contains("one submit time"), "{e}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn streaming_reader_holds_one_batch_at_a_time() {
+        let subs = sample();
+        let path = tmp("stream.csv");
+        write_trace(&path, &subs).unwrap();
+        let mut r = TraceReader::open(&path).unwrap();
+        let mut n = 0;
+        while let Some(s) = r.next_submission().unwrap() {
+            assert_eq!(s.at, subs[n].at);
+            assert_eq!(s.jobs.len(), subs[n].jobs.len());
+            n += 1;
+        }
+        assert_eq!(n, subs.len());
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// Satellite: 1M-line parse smoke. Ignored by default (seconds of
+    /// runtime in debug); ci.sh runs it in release via `-- --ignored`.
+    #[test]
+    #[ignore = "1M-line smoke; ci.sh runs it in release"]
+    fn million_line_trace_parse_smoke() {
+        let path = tmp("million.csv");
+        {
+            let mut f = std::io::BufWriter::new(
+                std::fs::File::create(&path).unwrap(),
+            );
+            writeln!(f, "{HEADER}").unwrap();
+            let (mut job, bulk) = (0u64, 25u64);
+            for g in 0..40_000u64 {
+                let at = g as f64 * 0.5;
+                for _ in 0..bulk {
+                    writeln!(
+                        f,
+                        "{at},{g},{},{job},1,2,100,5,25,60,1,{},1.0,50,2",
+                        g % 20,
+                        g % 3
+                    )
+                    .unwrap();
+                    job += 1;
+                }
+            }
+        }
+        let mut r = TraceReader::open(&path).unwrap();
+        let (mut batches, mut jobs) = (0usize, 0usize);
+        while let Some(s) = r.next_submission().unwrap() {
+            batches += 1;
+            jobs += s.jobs.len();
+        }
+        assert_eq!(batches, 40_000);
+        assert_eq!(jobs, 1_000_000);
         std::fs::remove_file(&path).ok();
     }
 }

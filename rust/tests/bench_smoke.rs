@@ -150,9 +150,9 @@ fn sim_workload_constructs_and_runs() {
     assert!(w.events_processed() > 20);
 }
 
-/// bench_world: the three end-to-end shapes (small / flood / federated)
-/// build and run once each, and the peak counters the bench reports are
-/// live.
+/// bench_world: the end-to-end shapes (small / flood / federated, plus
+/// the streamed-flood bounded-memory shape) build and run once each,
+/// and the peak counters the bench reports are live.
 #[test]
 fn world_bench_workloads_construct_and_run() {
     // Miniature versions of the bench's three shapes.
@@ -182,6 +182,24 @@ fn world_bench_workloads_construct_and_run() {
         assert!(w.peak_live_jobs() > 0, "{name}");
         assert!(w.peak_heap_depth() > 0, "{name}");
     }
+    // Miniature streamed-flood: lazy diurnal arrivals + spill/recycle,
+    // the same wiring the bench's bounded-memory shape drives.
+    let mut streamed = presets::uniform_grid(8, 16);
+    streamed.workload.jobs = 60;
+    streamed.workload.bulk_size = 25;
+    streamed.workload.source = diana::config::SourceMode::Arrival;
+    streamed.workload.arrival = diana::config::ArrivalKind::Diurnal;
+    streamed.workload.arrival_rate = 0.06;
+    streamed.workload.cpu_sec_median = 60.0;
+    streamed.seed = 14;
+    let spill = std::env::temp_dir().join("diana-bench-smoke-spill");
+    streamed.sim.spill_dir = spill.to_string_lossy().into_owned();
+    let (w, report) =
+        diana::coordinator::run_simulation(&streamed).unwrap();
+    assert_eq!(report.jobs, 60, "streamed-flood");
+    assert!(w.peak_live_jobs() > 0, "streamed-flood");
+    assert_eq!(w.submitted_jobs(), 60, "streamed-flood");
+    std::fs::remove_dir_all(&spill).ok();
 }
 
 /// bench_figures: the cheap closed-form figures regenerate.

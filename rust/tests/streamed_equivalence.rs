@@ -1,0 +1,151 @@
+//! Streamed ≡ eager equivalence, end to end through the public
+//! assembly entry points (`run_simulation` / `run_simulation_streamed`
+//! — not the world-test helpers): the lazy `--source streamed` route
+//! must reproduce the eager report **bit for bit** on central,
+//! federated and fault-injected runs, with and without spilling. Any
+//! drift means the SourceRefill chain reordered events, the generator
+//! replay diverged, or the spill merge lost a bit — all of which this
+//! suite exists to catch before a million-job run hides them.
+
+use diana::config::{presets, GridConfig, SourceMode};
+use diana::coordinator::{
+    generate_workload, run_simulation, run_simulation_streamed,
+    run_simulation_with_faults, RunReport,
+};
+use diana::scenario::{FaultEvent, FaultKind, FaultPlan};
+use diana::util::Summary;
+
+/// Field-for-field, bit-for-bit report comparison. Floats are compared
+/// as raw bits: "close" is drift, and drift compounds at 10^6 jobs.
+fn assert_reports_identical(a: &RunReport, b: &RunReport, ctx: &str) {
+    assert_eq!(a.policy, b.policy, "{ctx}: policy");
+    assert_eq!(a.jobs, b.jobs, "{ctx}: jobs");
+    assert_eq!(a.events, b.events, "{ctx}: DES event count");
+    assert_eq!(
+        a.makespan_s.to_bits(),
+        b.makespan_s.to_bits(),
+        "{ctx}: makespan"
+    );
+    assert_eq!(
+        a.throughput_jobs_per_s.to_bits(),
+        b.throughput_jobs_per_s.to_bits(),
+        "{ctx}: throughput"
+    );
+    for (name, sa, sb) in [
+        ("queue_time", &a.queue_time, &b.queue_time),
+        ("exec_time", &a.exec_time, &b.exec_time),
+        ("turnaround", &a.turnaround, &b.turnaround),
+        ("response_time", &a.response_time, &b.response_time),
+    ] {
+        assert_summaries_identical(sa, sb, ctx, name);
+    }
+    assert_eq!(a.migrations, b.migrations, "{ctx}: migrations");
+    assert_eq!(a.groups_split, b.groups_split, "{ctx}: groups_split");
+    assert_eq!(a.groups_whole, b.groups_whole, "{ctx}: groups_whole");
+    assert_eq!(a.delegations, b.delegations, "{ctx}: delegations");
+}
+
+fn assert_summaries_identical(a: &Summary, b: &Summary, ctx: &str, name: &str) {
+    assert_eq!(a.values().len(), b.values().len(), "{ctx}: {name} length");
+    for (i, (x, y)) in a.values().iter().zip(b.values()).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{ctx}: {name}[{i}] {x} != {y}"
+        );
+    }
+}
+
+fn central_cfg() -> GridConfig {
+    let mut cfg = presets::uniform_grid(4, 8);
+    cfg.workload.jobs = 60;
+    cfg.workload.bulk_size = 20;
+    cfg.workload.cpu_sec_median = 120.0;
+    cfg.workload.cpu_sec_sigma = 0.5;
+    cfg.seed = 31;
+    cfg
+}
+
+/// Run `cfg` eagerly, then again with `source = "streamed"`, through
+/// the same public entry point the CLI uses.
+fn eager_vs_streamed(mut cfg: GridConfig, ctx: &str) {
+    cfg.workload.source = SourceMode::Eager;
+    let (_, eager) = run_simulation(&cfg).unwrap();
+    cfg.workload.source = SourceMode::Streamed;
+    let (world, streamed) = run_simulation(&cfg).unwrap();
+    assert_reports_identical(&eager, &streamed, ctx);
+    // The streamed run counted its lazy submissions.
+    assert_eq!(world.submitted_jobs(), cfg.workload.jobs, "{ctx}");
+}
+
+#[test]
+fn central_streamed_matches_eager_bit_for_bit() {
+    eager_vs_streamed(central_cfg(), "central");
+}
+
+#[test]
+fn federated_streamed_matches_eager_bit_for_bit() {
+    let mut cfg = central_cfg();
+    cfg.workload.jobs = 80;
+    cfg.federation.peers = 3;
+    cfg.federation.gossip_period_s = 60.0;
+    cfg.seed = 33;
+    eager_vs_streamed(cfg, "federated");
+}
+
+#[test]
+fn faulted_streamed_matches_eager_bit_for_bit() {
+    // Site2 drops while the refill chain is still pulling submissions
+    // and recovers mid-run — streaming must not shift the fault clock.
+    let plan = FaultPlan {
+        events: vec![
+            FaultEvent {
+                at: 120.0,
+                kind: FaultKind::SiteDown { site: "site2".into() },
+            },
+            FaultEvent {
+                at: 700.0,
+                kind: FaultKind::SiteUp { site: "site2".into() },
+            },
+        ],
+    };
+    let mut cfg = presets::paper_testbed();
+    cfg.workload.jobs = 80;
+    cfg.workload.bulk_size = 20;
+    cfg.seed = 35;
+    cfg.workload.source = SourceMode::Eager;
+    let subs = generate_workload(&cfg);
+    let (_, eager) = run_simulation_with_faults(&cfg, subs, &plan).unwrap();
+    cfg.workload.source = SourceMode::Streamed;
+    let (_, streamed) = run_simulation_streamed(&cfg, &plan).unwrap();
+    assert_reports_identical(&eager, &streamed, "faulted");
+}
+
+#[test]
+fn spilled_streamed_report_matches_eager_bit_for_bit() {
+    // The full pipeline: lazy source + slot recycling + on-disk shard
+    // merge, compared against the eager in-memory report. This is the
+    // CLI `--source streamed --spill DIR` route end to end.
+    let mut cfg = central_cfg();
+    cfg.seed = 37;
+    // Spread the bulks far apart (mean gap ≫ drain time) so earlier
+    // bulks deliver — and recycle — before later ones arrive; the
+    // slab's high-water mark then provably sits below the job total.
+    cfg.workload.bulk_size = 5;
+    cfg.workload.arrival_rate = 0.002;
+    let (_, eager) = run_simulation(&cfg).unwrap();
+    cfg.workload.source = SourceMode::Streamed;
+    let dir = std::env::temp_dir().join("diana-streamed-equiv-spill");
+    cfg.sim.spill_dir = dir.to_string_lossy().into_owned();
+    let (world, spilled) = run_simulation(&cfg).unwrap();
+    assert_reports_identical(&eager, &spilled, "spilled");
+    // Recycling actually happened: the slab's high-water mark stayed
+    // below the total submitted.
+    assert!(
+        world.peak_live_jobs() < world.submitted_jobs(),
+        "spill run never recycled (peak live {} of {})",
+        world.peak_live_jobs(),
+        world.submitted_jobs()
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
