@@ -4,6 +4,9 @@
 set -euo pipefail
 cd "$(dirname "$0")"
 
+SWEEP_OUT=$(mktemp -d)
+trap 'rm -rf "$SWEEP_OUT"' EXIT
+
 echo "== tier-1: build =="
 cargo build --release
 
@@ -12,6 +15,29 @@ cargo build --release --benches
 
 echo "== tier-1: tests =="
 cargo test -q
+
+echo "== kernel gate: differential (bitwise) + golden parity, release =="
+# Both suites already ran in the debug `cargo test -q` above; the release
+# rerun is the one that matters for the SoA kernel — the scalar-vs-
+# vectorized bit-identity claim must hold under -O autovectorization,
+# not just in the unoptimized build.
+cargo test --release -q --test kernel_differential --test kernel_parity
+
+echo "== kernel goldens: regenerate from ref.py + byte-diff (needs JAX) =="
+# The committed goldens are the cross-language contract; when a Python
+# toolchain with JAX is available, re-derive them from ref.py into a
+# scratch dir and byte-compare, so contract drift fails CI instead of
+# silently rewriting the committed files.
+if python3 -c "import jax" >/dev/null 2>&1; then
+  python3 python/tests/dump_goldens.py --out "$SWEEP_OUT/goldens"
+  for f in rust/tests/golden/kernels/*.golden; do
+    cmp "$f" "$SWEEP_OUT/goldens/$(basename "$f")" \
+      || { echo "ci.sh: $(basename "$f") drifted from the ref.py contract \
+— rerun python3 python/tests/dump_goldens.py and commit"; exit 1; }
+  done
+else
+  echo "ci.sh: python3/JAX unavailable — replaying committed goldens only"
+fi
 
 echo "== clippy (best effort) =="
 if cargo clippy --version >/dev/null 2>&1; then
@@ -24,8 +50,6 @@ echo "== docs (warnings are errors) =="
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 
 echo "== smoke sweep (thread-count determinism + golden schema) =="
-SWEEP_OUT=$(mktemp -d)
-trap 'rm -rf "$SWEEP_OUT"' EXIT
 ./target/release/diana sweep rust/examples/sweeps/smoke.toml -j 1 \
     --out "$SWEEP_OUT/j1"
 ./target/release/diana sweep rust/examples/sweeps/smoke.toml -j 2 \
@@ -86,10 +110,40 @@ for f in federation-smoke_runs.csv federation-smoke_aggregate.csv; do
     || { echo "ci.sh: $f diverged under DIANA_PARANOID_REBUILD"; exit 1; }
 done
 
-echo "== matchmaker bench (smoke) =="
-cargo bench --bench bench_matchmaker -- --smoke | tee "$SWEEP_OUT/bench.txt"
+echo "== matchmaker bench (smoke) + BENCH_matchmaker.json trajectory =="
+# Runs the old-vs-scalar-vs-SoA comparison (incl. the per-shape argmin
+# and to_bits cross-checks baked into the bench binary).
+cargo bench --bench bench_matchmaker -- --smoke \
+    --json "$SWEEP_OUT/BENCH_matchmaker.json" | tee "$SWEEP_OUT/bench.txt"
 grep -q "matchmaker events/s" "$SWEEP_OUT/bench.txt" \
   || { echo "ci.sh: matchmaker bench lost its events/s line"; exit 1; }
+grep -q '"shapes"' "$SWEEP_OUT/BENCH_matchmaker.json" \
+  || { echo "ci.sh: BENCH_matchmaker.json malformed"; exit 1; }
+# Soft regression gate, same policy as BENCH_world.json: warn (never
+# fail — smoke numbers are noisy) when a shape's rounds/s drops more
+# than 15% below the committed trajectory point.
+if [ -f BENCH_matchmaker.json ]; then
+  for shape in J1xS10 J32xS50 J256xS200 J1024xS500; do
+    for col in scalar_rounds_per_s soa_rounds_per_s; do
+      old=$(grep -o "\"name\": \"$shape\"[^}]*" BENCH_matchmaker.json \
+              | grep -o "\"$col\": [0-9.]*" | grep -o '[0-9.]*$' || true)
+      new=$(grep -o "\"name\": \"$shape\"[^}]*" \
+              "$SWEEP_OUT/BENCH_matchmaker.json" \
+              | grep -o "\"$col\": [0-9.]*" | grep -o '[0-9.]*$' || true)
+      if [ -n "$old" ] && [ -n "$new" ]; then
+        awk -v o="$old" -v n="$new" -v s="$shape/$col" 'BEGIN {
+          if (o > 0 && n < 0.85 * o)
+            printf "ci.sh: ⚠ rounds/s regression on %s: %.1f -> %.1f (-%.0f%%)\n",
+                   s, o, n, (1 - n / o) * 100
+        }'
+      fi
+    done
+  done
+else
+  echo "ci.sh: no committed BENCH_matchmaker.json yet — bootstrapping"
+fi
+cp "$SWEEP_OUT/BENCH_matchmaker.json" BENCH_matchmaker.json
+echo "ci.sh: BENCH_matchmaker.json refreshed — commit it to record the trajectory point"
 
 echo "== world bench (smoke) + BENCH_world.json perf trajectory =="
 cargo bench --bench bench_world -- --smoke \

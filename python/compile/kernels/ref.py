@@ -9,9 +9,16 @@ This file is the *numerical contract* of the whole stack:
 The Pallas kernels in ``cost_matrix.py`` / ``priority.py`` are checked
 against these functions by pytest (exact same op order), and the rust
 ``cost::model`` / ``priority::formula`` modules mirror the same f32
-expressions; the rust↔XLA cross-check test tolerates 1e-5 relative.
+expressions. The cross-language contract is *enforced*, not just
+documented: ``python/tests/dump_goldens.py`` evaluates this file on a
+fixed fixture set and commits the inputs+outputs (floats as f32 bit
+patterns) under ``rust/tests/golden/kernels/``, which
+``rust/tests/kernel_parity.rs`` replays through ``RustEngine`` within
+1e-5 relative (argmins and queue order exact). Any numerical change
+here must regenerate the goldens or the Rust suite fails.
 
-Feature layouts (mirrored in rust/src/cost/engine.rs — keep in sync!):
+Feature layouts (mirrored in rust/src/cost/model.rs — keep in sync!
+the SoA columns there are these same features, one column per index):
 
   job_feats[J, 6]  : 0 in_mb      input dataset size (MB) from its replica
                      1 out_mb     output size (MB), shipped to the client

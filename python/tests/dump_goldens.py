@@ -1,0 +1,356 @@
+#!/usr/bin/env python3
+"""Dump Rust↔Pallas parity goldens from the ref.py numerical contract.
+
+Evaluates ``cost_matrix_ref`` + ``priority_ref`` (the pure-jnp oracle the
+Pallas kernels are pytest-checked against) on a fixed set of fixtures and
+writes the inputs *and* expected outputs under
+``rust/tests/golden/kernels/`` — floats serialized as the 8-hex-digit bit
+pattern of their f32 value, so the files are byte-reproducible and the
+Rust side (``rust/tests/kernel_parity.rs``) replays them with zero
+parsing ambiguity and **without JAX installed**.
+
+Tolerances baked into the contract:
+
+  * float matrices (total/comp/dtc/net, pr): 1e-5 relative on the Rust
+    side — XLA may fuse multiply-adds, rustc may not, so bit-equality
+    across the language boundary is NOT promised (it is only promised
+    between the two Rust paths, see kernel_differential.rs).
+  * argmin / queue indices: compared exactly. To keep that stable under
+    FMA-level drift this tool *asserts a margin*: every fixture's
+    second-best site beats the best by > 1e-4 relative, and every pr
+    value sits > 1e-4 away from the §X queue boundaries. A fixture that
+    violates the margin fails the dump instead of committing a flaky
+    golden.
+
+Regenerate with:  python3 python/tests/dump_goldens.py
+CI byte-diffs the regenerated files against the committed copies when a
+Python toolchain with JAX is available (see ci.sh); ``--out DIR`` dumps
+somewhere else (that is what ci.sh uses, so a drifted contract fails the
+byte-diff instead of silently rewriting the committed goldens).
+"""
+
+import os
+import struct
+import sys
+
+import numpy as np
+
+sys.path.insert(
+    0,
+    os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "compile"),
+)
+
+from kernels.ref import (  # noqa: E402
+    DEFAULT_BIG,
+    DEFAULT_EPS,
+    cost_matrix_ref,
+    priority_ref,
+)
+
+GOLDEN_DIR = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)),
+    "..", "..", "rust", "tests", "golden", "kernels",
+)
+
+ARGMIN_MARGIN = 1e-4   # relative gap best vs second-best total
+BOUNDARY_MARGIN = 1e-4  # |pr - {0.5, 0.0, -0.5}| floor
+
+
+def f32(x):
+    return np.asarray(x, dtype=np.float32)
+
+
+def hex_bits(arr):
+    """f32 array -> space-separated 8-hex-digit bit patterns."""
+    flat = f32(arr).reshape(-1)
+    return " ".join(
+        f"{struct.unpack('<I', struct.pack('<f', float(v)))[0]:08x}"
+        for v in flat
+    )
+
+
+def weights_vec(w5=1.0, w6=0.25, w7=2.0, q_total=0.0, w_net=1.0, w_dtc=1.0):
+    return f32([w5, w6, w7, q_total, w_net, w_dtc, DEFAULT_EPS, DEFAULT_BIG])
+
+
+# ---------------------------------------------------------------------------
+# numpy mirror of the *Rust scalar oracle* op order (f32, no FMA): the
+# self-check proving the committed goldens will pass kernel_parity.rs's
+# 1e-5 gate without needing a Rust toolchain at dump time.
+# ---------------------------------------------------------------------------
+
+def rust_mirror(job_feats, site_feats, link_bw, link_loss, weights):
+    jf, sf = f32(job_feats), f32(site_feats)
+    bw_m, loss = f32(link_bw), f32(link_loss)
+    w5, w6, w7, q_total, w_net, w_dtc, eps, big = (
+        f32(weights)[i] for i in range(8)
+    )
+    pi = np.maximum(sf[:, 1], eps)
+    comp = (sf[:, 0] / pi) * w5 + (q_total / pi) * w6 + sf[:, 2] * w7
+    client = (f32(1.0) + sf[:, 4]) / np.maximum(sf[:, 3], eps)
+    dead = (f32(1.0) - sf[:, 5]) * big
+    bw = np.maximum(bw_m, eps)
+    net = loss / bw
+    dtc = (jf[:, 0:1] / bw) * (f32(1.0) + loss) \
+        + (jf[:, 1:2] + jf[:, 2:3]) * client[None, :]
+    total = w_net * net + comp[None, :] + w_dtc * dtc + dead[None, :]
+    best = np.argmin(total, axis=1).astype(np.int32)
+    return total, best, comp, dtc, net
+
+
+def rust_priority_mirror(jobs, totals):
+    """numpy f32 mirror of rust `reprioritize_rust` (same guards/order)."""
+    j, t = f32(jobs), f32(totals)
+    n = j[:, 0]
+    tt = np.maximum(j[:, 1], f32(1e-6))
+    q = j[:, 2]
+    cap_t = np.maximum(t[0], f32(1e-6))
+    cap_q = np.maximum(t[1], f32(1e-6))
+    big_n = (q * cap_t) / (cap_q * tt)
+    pr = np.where(
+        n <= big_n,
+        (big_n - n) / np.maximum(big_n, f32(1e-6)),
+        (big_n - n) / np.maximum(n, f32(1e-6)),
+    ).astype(np.float32)
+    queue = np.where(
+        pr >= 0.5, 0, np.where(pr >= 0.0, 1, np.where(pr >= -0.5, 2, 3))
+    ).astype(np.int32)
+    return pr, queue
+
+
+def rel_close(a, b, tol=1e-5):
+    a, b = np.asarray(a, np.float64), np.asarray(b, np.float64)
+    return np.all(np.abs(a - b) / np.maximum(np.abs(b), 1e-3) < tol)
+
+
+# ---------------------------------------------------------------------------
+# fixtures
+# ---------------------------------------------------------------------------
+
+def random_cost_fixture(rng, nj, ns, dead_sites=(), bw_override=None):
+    job = np.zeros((nj, 6), np.float32)
+    job[:, 0] = rng.uniform(0.0, 30_000.0, nj)
+    job[:, 1] = rng.uniform(0.0, 2_000.0, nj)
+    job[:, 2] = rng.uniform(1.0, 200.0, nj)
+    job[:, 3] = rng.uniform(1.0, 7200.0, nj)
+    job[:, 4] = rng.integers(0, 3, nj)
+    site = np.zeros((ns, 8), np.float32)
+    site[:, 0] = rng.integers(0, 500, ns)
+    site[:, 1] = rng.uniform(1.0, 600.0, ns)
+    site[:, 2] = rng.uniform(0.0, 1.0, ns)
+    site[:, 3] = rng.uniform(10.0, 10_000.0, ns)
+    site[:, 4] = rng.uniform(0.0, 0.1, ns)
+    site[:, 5] = 1.0
+    for s in dead_sites:
+        site[s, 5] = 0.0
+    bw = f32(rng.uniform(1.0, 10_000.0, (nj, ns)))
+    if bw_override is not None:
+        bw = bw_override(bw)
+    loss = f32(rng.uniform(0.0, 0.1, (nj, ns)))
+    return job, site, bw, loss
+
+
+def paper_testbed():
+    """Hand-crafted J=8, S=4 in the spirit of the paper's testbed: one
+    idle fast site, one loaded site, one far site, one dead site."""
+    job = f32([
+        # in_mb  out_mb exe_mb cpu_sec class pad
+        [10_000.0,  50.0, 10.0, 3600.0, 1.0, 0.0],
+        [0.0,        5.0, 10.0,   60.0, 0.0, 0.0],
+        [2_500.0,  200.0, 25.0, 1800.0, 2.0, 0.0],
+        [300.0,     20.0,  5.0,  600.0, 0.0, 0.0],
+        [25_000.0, 100.0, 50.0, 7200.0, 1.0, 0.0],
+        [0.0,        1.0,  1.0,   30.0, 0.0, 0.0],
+        [800.0,     80.0, 15.0,  900.0, 2.0, 0.0],
+        [5_000.0,   10.0,  8.0, 2400.0, 1.0, 0.0],
+    ])
+    site = f32([
+        # Qi    Pi    load  cbw     closs  alive
+        [0.0,  100.0, 0.05, 1000.0, 0.001, 1.0, 0.0, 0.0],
+        [40.0, 100.0, 0.90,  800.0, 0.002, 1.0, 0.0, 0.0],
+        [5.0,   50.0, 0.30,   45.0, 0.020, 1.0, 0.0, 0.0],
+        [0.0,  200.0, 0.00,  900.0, 0.001, 0.0, 0.0, 0.0],
+    ])
+    bw = np.full((8, 4), 100.0, np.float32)
+    loss = np.full((8, 4), 0.01, np.float32)
+    bw[0, 1], loss[0, 1] = 10_000.0, 0.0001   # job 0's replica local to 1
+    bw[4, 2], loss[4, 2] = 2_000.0, 0.0005    # job 4's replica near 2
+    bw[7, 0], loss[7, 0] = 5_000.0, 0.0002
+    return job, site, bw, loss
+
+
+def extreme_bw_loss(rng):
+    """Zero bandwidths (eps clamp), enormous bandwidths, zero in_mb and
+    near-saturated loss in one fixture."""
+    job, site, bw, loss = random_cost_fixture(rng, 10, 7)
+    job[3, 0] = 0.0          # zero input against huge bw
+    site[2, 3] = 0.0         # client bw zero → eps clamp
+    site[5, 1] = 0.5         # tiny capability
+    bw[0, :] = 0.0           # whole row on the eps guard
+    bw[1, :] = 1e8
+    loss[4, :] = 0.9
+    loss[5, :] = 0.0
+    return job, site, bw, loss
+
+
+def priority_fixture(rng, l):
+    jobs = np.zeros((l, 4), np.float32)
+    jobs[:, 0] = rng.integers(1, 50, l)
+    jobs[:, 1] = rng.integers(1, 32, l)
+    jobs[:, 2] = rng.uniform(100.0, 5000.0, l)
+    totals = f32([
+        float(jobs[:, 1].sum()),
+        float(rng.uniform(1000.0, 50_000.0)),
+        float(l),
+        0.0,
+    ])
+    return jobs, totals
+
+
+def fig6_priority():
+    """The paper's Fig-6 worked example (exact values the Rust unit tests
+    already pin)."""
+    jobs = f32([
+        [2.0, 1.0, 1900.0, 0.0],
+        [2.0, 5.0, 1900.0, 0.0],
+        [1.0, 1.0, 1700.0, 0.0],
+    ])
+    totals = f32([7.0, 3600.0, 3.0, 0.0])
+    return jobs, totals
+
+
+def build_fixtures():
+    fixtures = []
+
+    def add(name, cost, weights, prio):
+        fixtures.append((name, cost, weights, prio))
+
+    rng = np.random.default_rng(0xD1A7A)
+    add("paper_testbed", paper_testbed(),
+        weights_vec(q_total=45.0), fig6_priority())
+    add("uniform_64x8", random_cost_fixture(rng, 64, 8),
+        weights_vec(w5=1.5, w6=0.5, w7=1.0, q_total=321.0),
+        priority_fixture(rng, 16))
+    add("dead_sites", random_cost_fixture(rng, 12, 9, dead_sites=(0, 3, 8)),
+        weights_vec(q_total=77.0), priority_fixture(rng, 8))
+    add("extreme_bw_loss", extreme_bw_loss(rng),
+        weights_vec(w_net=2.0, w_dtc=0.5, q_total=10.0),
+        priority_fixture(rng, 5))
+    add("single_site", random_cost_fixture(rng, 5, 1),
+        weights_vec(q_total=5.0), priority_fixture(rng, 3))
+    add("big_256x32", random_cost_fixture(rng, 256, 32),
+        weights_vec(w5=2.0, w6=0.25, w7=3.0, q_total=1024.0),
+        priority_fixture(rng, 64))
+    return fixtures
+
+
+# ---------------------------------------------------------------------------
+# margin + self checks
+# ---------------------------------------------------------------------------
+
+def check_argmin_margin(name, total, best):
+    t = np.asarray(total, np.float64)
+    for j in range(t.shape[0]):
+        row = np.sort(t[j])
+        if len(row) < 2:
+            continue
+        gap = (row[1] - row[0]) / max(abs(row[0]), 1e-3)
+        assert gap > ARGMIN_MARGIN, (
+            f"{name}: job {j} argmin margin {gap:.2e} <= {ARGMIN_MARGIN:.0e}"
+            " — exact index compare would be flaky under FMA drift;"
+            " adjust the fixture"
+        )
+
+
+def check_boundary_margin(name, pr):
+    p = np.asarray(pr, np.float64)
+    for b in (0.5, 0.0, -0.5):
+        d = np.abs(p - b).min()
+        assert d > BOUNDARY_MARGIN, (
+            f"{name}: a pr value sits {d:.2e} from queue boundary {b}"
+            " — queue_idx compare would be flaky; adjust the fixture"
+        )
+
+
+def dump_fixture(name, cost_inputs, weights, prio_inputs, out_dir=GOLDEN_DIR):
+    job, site, bw, loss = (f32(a) for a in cost_inputs)
+    nj, ns = job.shape[0], site.shape[0]
+    total, best, comp, dtc, net = cost_matrix_ref(job, site, bw, loss, weights)
+    total, best, comp, dtc, net = (
+        np.asarray(a) for a in (total, best, comp, dtc, net)
+    )
+    check_argmin_margin(name, total, best)
+
+    # Self-check: the numpy mirror of the Rust scalar op order must land
+    # within the Rust-side gate (1e-5 rel, exact argmin) — if it doesn't,
+    # the golden would fail kernel_parity.rs and we find out *now*.
+    m_total, m_best, m_comp, m_dtc, m_net = rust_mirror(
+        job, site, bw, loss, weights
+    )
+    assert rel_close(m_total, total), f"{name}: mirror total drifted"
+    assert rel_close(m_comp, comp), f"{name}: mirror comp drifted"
+    assert rel_close(m_dtc, dtc), f"{name}: mirror dtc drifted"
+    assert rel_close(m_net, net), f"{name}: mirror net drifted"
+    assert np.array_equal(m_best, best), f"{name}: mirror argmin diverged"
+
+    pj, pt = (f32(a) for a in prio_inputs)
+    pr, queue = priority_ref(pj, pt)
+    pr, queue = np.asarray(pr), np.asarray(queue)
+    check_boundary_margin(name, pr)
+    m_pr, m_queue = rust_priority_mirror(pj, pt)
+    assert rel_close(m_pr, pr), f"{name}: priority mirror drifted"
+    assert np.array_equal(m_queue, queue), f"{name}: queue mirror diverged"
+
+    lines = [
+        "# kernel parity golden — generated by python/tests/dump_goldens.py",
+        "# from the ref.py contract; floats are f32 bit patterns in hex.",
+        f"nj {nj}",
+        f"ns {ns}",
+        f"weights {hex_bits(weights)}",
+        f"job_in_mb {hex_bits(job[:, 0])}",
+        f"job_out_mb {hex_bits(job[:, 1])}",
+        f"job_exe_mb {hex_bits(job[:, 2])}",
+        f"job_cpu_sec {hex_bits(job[:, 3])}",
+        f"job_class {hex_bits(job[:, 4])}",
+        f"site_queue {hex_bits(site[:, 0])}",
+        f"site_cap {hex_bits(site[:, 1])}",
+        f"site_load {hex_bits(site[:, 2])}",
+        f"site_client_bw {hex_bits(site[:, 3])}",
+        f"site_client_loss {hex_bits(site[:, 4])}",
+        f"site_alive {hex_bits(site[:, 5])}",
+        f"link_bw {hex_bits(bw)}",
+        f"link_loss {hex_bits(loss)}",
+        f"total {hex_bits(total)}",
+        f"best_total {' '.join(str(int(b)) for b in best)}",
+        f"comp {hex_bits(comp)}",
+        f"dtc {hex_bits(dtc)}",
+        f"net {hex_bits(net)}",
+        f"pr_l {pj.shape[0]}",
+        f"pr_jobs {hex_bits(pj)}",
+        f"pr_totals {hex_bits(pt)}",
+        f"pr {hex_bits(pr)}",
+        f"pr_queue {' '.join(str(int(q)) for q in queue)}",
+    ]
+    path = os.path.join(out_dir, f"{name}.golden")
+    with open(path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    return path
+
+
+def main():
+    out_dir = GOLDEN_DIR
+    argv = sys.argv[1:]
+    if argv[:1] == ["--out"]:
+        if len(argv) != 2:
+            sys.exit("usage: dump_goldens.py [--out DIR]")
+        out_dir = argv[1]
+    elif argv:
+        sys.exit("usage: dump_goldens.py [--out DIR]")
+    os.makedirs(out_dir, exist_ok=True)
+    for name, cost, weights, prio in build_fixtures():
+        path = dump_fixture(name, cost, weights, prio, out_dir)
+        print(f"wrote {os.path.relpath(path)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -11,20 +11,26 @@ use diana::util::Pcg64;
 fn inputs(rng: &mut Pcg64, nj: usize, ns: usize) -> CostInputs {
     let mut inp = CostInputs::new(nj, ns);
     for j in 0..nj {
-        let row = inp.job_row_mut(j);
-        row[0] = rng.uniform(0.0, 30_000.0) as f32;
-        row[1] = rng.uniform(0.0, 2_000.0) as f32;
-        row[2] = rng.uniform(1.0, 200.0) as f32;
-        row[3] = rng.uniform(1.0, 7200.0) as f32;
+        inp.set_job_row(j, &[
+            rng.uniform(0.0, 30_000.0) as f32,
+            rng.uniform(0.0, 2_000.0) as f32,
+            rng.uniform(1.0, 200.0) as f32,
+            rng.uniform(1.0, 7200.0) as f32,
+            0.0,
+            0.0,
+        ]);
     }
     for s in 0..ns {
-        let row = inp.site_row_mut(s);
-        row[0] = rng.below(500) as f32;
-        row[1] = rng.uniform(1.0, 600.0) as f32;
-        row[2] = rng.next_f64() as f32;
-        row[3] = rng.uniform(10.0, 10_000.0) as f32;
-        row[4] = rng.uniform(0.0, 0.1) as f32;
-        row[5] = 1.0;
+        inp.set_site_row(s, &[
+            rng.below(500) as f32,
+            rng.uniform(1.0, 600.0) as f32,
+            rng.next_f64() as f32,
+            rng.uniform(10.0, 10_000.0) as f32,
+            rng.uniform(0.0, 0.1) as f32,
+            1.0,
+            0.0,
+            0.0,
+        ]);
     }
     for v in inp.link_bw.iter_mut() {
         *v = rng.uniform(1.0, 10_000.0) as f32;

@@ -1,19 +1,30 @@
-//! Bench: the §V matchmaking core, old-style vs workspace path.
+//! Bench: the §V matchmaking core — old-style vs scalar-workspace vs the
+//! SoA-vectorized kernel.
 //!
 //! Measures rounds/s of the full J×S evaluation (input build + kernel +
-//! argmins) at three shapes, comparing:
+//! argmins) at four shapes, comparing:
 //!
 //!  * `old-style` — what every round did before the incremental
 //!    refactor: fresh `CostInputs` + fresh `ScheduleOut` + per-pair
-//!    monitor observation, ~10 allocations per round;
-//!  * `workspace` — `build_cost_inputs_into` + `schedule_step_into`
-//!    through a reused `CostWorkspace` with an epoch-stable
-//!    `ReplicaCache`: zero steady-state allocation.
+//!    monitor observation, ~10 allocations per round (runs the scalar
+//!    oracle);
+//!  * `scalar` — `build_cost_inputs_into` + `schedule_step_scalar_into`
+//!    through a reused `CostWorkspace`: zero steady-state allocation,
+//!    pre-SIMD arithmetic — the PR-4 baseline the SoA rows are measured
+//!    against;
+//!  * `soa` — same workspace path through the vectorized
+//!    `schedule_step_into`: hoisted per-site columns + chunked
+//!    branch-free column sweep + separate argmin pass.
+//!
+//! Every shape cross-checks the three paths: argmins `==` across all
+//! three, and scalar vs SoA `to_bits`-identical on the float matrices
+//! (the kernel_differential.rs contract, re-asserted on bench inputs).
 //!
 //! The closing `matchmaker events/s` line (jobs matched per second on
-//! the workspace path at the largest shape) is the throughput counter
-//! ci.sh smoke-greps and BENCH trajectories track; the sweep runner
-//! surfaces the same counter per matrix point in its aggregate table.
+//! the SoA path at the largest shape) is the throughput counter ci.sh
+//! smoke-greps; `--json <path>` serializes per-shape rows, which ci.sh
+//! snapshots into BENCH_matchmaker.json alongside BENCH_world.json and
+//! soft-warns on >15% regressions.
 //!
 //! Smoke mode (`--smoke` argument or `DIANA_BENCH_SMOKE=1`): tiny
 //! sample counts, same output shape — used by ci.sh.
@@ -22,7 +33,8 @@ mod common;
 use common::{bench, black_box};
 
 use diana::config::presets;
-use diana::cost::{CostWorkspace, RustEngine, CostEngine, Weights};
+use diana::cost::{schedule_step_scalar_into, CostEngine, CostWorkspace,
+                  RustEngine, Weights};
 use diana::data::{Catalog, ReplicaCache};
 use diana::job::{Job, JobClass, JobId, UserId};
 use diana::network::{PingerMonitor, Topology};
@@ -87,16 +99,63 @@ fn fixture(n_jobs: usize, n_sites: usize) -> Fixture {
     Fixture { monitor, catalog, sites, jobs }
 }
 
+struct ShapeResult {
+    nj: usize,
+    ns: usize,
+    old_rounds_per_s: f64,
+    scalar_rounds_per_s: f64,
+    soa_rounds_per_s: f64,
+    soa_speedup_vs_scalar: f64,
+}
+
+fn write_json(path: &str, smoke: bool, shapes: &[ShapeResult]) {
+    let mut out = String::new();
+    out.push_str("{\n  \"bench\": \"bench_matchmaker\",\n");
+    out.push_str(&format!("  \"smoke\": {smoke},\n"));
+    out.push_str("  \"shapes\": [\n");
+    for (i, s) in shapes.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"name\": \"J{}xS{}\", \"old_rounds_per_s\": {:.1}, \
+             \"scalar_rounds_per_s\": {:.1}, \"soa_rounds_per_s\": {:.1}, \
+             \"soa_speedup_vs_scalar\": {:.3}}}{}\n",
+            s.nj,
+            s.ns,
+            s.old_rounds_per_s,
+            s.scalar_rounds_per_s,
+            s.soa_rounds_per_s,
+            s.soa_speedup_vs_scalar,
+            if i + 1 < shapes.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    if let Err(e) = std::fs::write(path, out) {
+        eprintln!("bench_matchmaker: could not write {path}: {e}");
+        std::process::exit(1);
+    }
+    println!("bench_matchmaker: wrote {path}");
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
 fn main() {
-    let smoke = std::env::args().any(|a| a == "--smoke")
+    let args: Vec<String> = std::env::args().collect();
+    let smoke = args.iter().any(|a| a == "--smoke")
         || std::env::var("DIANA_BENCH_SMOKE")
             .map_or(false, |v| !v.is_empty() && v != "0");
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
     let (warmup, samples) = if smoke { (1, 3) } else { (20, 200) };
-    println!("== bench_matchmaker: §V cost rounds, old-style vs workspace \
-              {}==", if smoke { "(smoke) " } else { "" });
+    println!("== bench_matchmaker: §V cost rounds, old-style vs scalar vs \
+              SoA {}==", if smoke { "(smoke) " } else { "" });
 
+    let mut results = Vec::new();
     let mut closing_events_per_s = 0.0;
-    for (nj, ns) in [(1usize, 10usize), (32, 50), (256, 200)] {
+    for (nj, ns) in [(1usize, 10usize), (32, 50), (256, 200), (1024, 500)] {
         let f = fixture(nj, ns);
         let view = GridView {
             now: 0.0,
@@ -110,17 +169,29 @@ fn main() {
 
         let mut engine = RustEngine::new();
         let r_old = bench(
-            &format!("old-style  J={nj:<3} S={ns:<3} (alloc per round)"),
+            &format!("old-style  J={nj:<4} S={ns:<3} (alloc, scalar oracle)"),
             warmup, samples, || {
                 let inp = build_cost_inputs(&f.jobs, &view);
                 black_box(engine.schedule_step(&inp, &w).unwrap());
             });
         r_old.throughput(nj as f64, "jobs");
 
-        let mut ws = CostWorkspace::new();
+        let mut scalar_ws = CostWorkspace::new();
         let mut replicas = ReplicaCache::new();
-        let r_new = bench(
-            &format!("workspace  J={nj:<3} S={ns:<3} (reused buffers)"),
+        let r_scalar = bench(
+            &format!("scalar     J={nj:<4} S={ns:<3} (workspace, pre-SIMD)"),
+            warmup, samples, || {
+                build_cost_inputs_into(&f.jobs, &view, &mut scalar_ws.inputs,
+                                       &mut replicas);
+                schedule_step_scalar_into(&scalar_ws.inputs, &w,
+                                          &mut scalar_ws.out);
+                black_box(scalar_ws.out.best_total[0]);
+            });
+        r_scalar.throughput(nj as f64, "jobs");
+
+        let mut ws = CostWorkspace::new();
+        let r_soa = bench(
+            &format!("soa        J={nj:<4} S={ns:<3} (workspace, vectorized)"),
             warmup, samples, || {
                 build_cost_inputs_into(&f.jobs, &view, &mut ws.inputs,
                                        &mut replicas);
@@ -129,19 +200,39 @@ fn main() {
                     .unwrap();
                 black_box(ws.out.best_total[0]);
             });
-        r_new.throughput(nj as f64, "jobs");
-        println!("  └ workspace speedup: {:.2}x",
-                 r_old.mean_ns() / r_new.mean_ns());
+        r_soa.throughput(nj as f64, "jobs");
+        println!("  └ soa vs scalar: {:.2}x · vs old-style: {:.2}x",
+                 r_scalar.mean_ns() / r_soa.mean_ns(),
+                 r_old.mean_ns() / r_soa.mean_ns());
 
-        // Sanity: both paths agree on every argmin.
+        // Cross-check: all three paths agree on every argmin, and the
+        // scalar/SoA float matrices are bit-identical (the
+        // kernel_differential.rs contract, re-asserted on bench inputs).
         let inp = build_cost_inputs(&f.jobs, &view);
         let old = engine.schedule_step(&inp, &w).unwrap();
-        assert_eq!(old.best_total, ws.out.best_total);
-        assert_eq!(old.best_compute, ws.out.best_compute);
-        assert_eq!(old.best_data, ws.out.best_data);
+        for out in [&scalar_ws.out, &ws.out] {
+            assert_eq!(old.best_total, out.best_total);
+            assert_eq!(old.best_compute, out.best_compute);
+            assert_eq!(old.best_data, out.best_data);
+        }
+        assert_eq!(bits(&scalar_ws.out.total), bits(&ws.out.total));
+        assert_eq!(bits(&scalar_ws.out.net), bits(&ws.out.net));
+        assert_eq!(bits(&scalar_ws.out.dtc), bits(&ws.out.dtc));
+        assert_eq!(bits(&scalar_ws.out.comp), bits(&ws.out.comp));
 
-        closing_events_per_s = nj as f64 / (r_new.mean_ns() / 1e9);
+        results.push(ShapeResult {
+            nj,
+            ns,
+            old_rounds_per_s: 1e9 / r_old.mean_ns(),
+            scalar_rounds_per_s: 1e9 / r_scalar.mean_ns(),
+            soa_rounds_per_s: 1e9 / r_soa.mean_ns(),
+            soa_speedup_vs_scalar: r_scalar.mean_ns() / r_soa.mean_ns(),
+        });
+        closing_events_per_s = nj as f64 / (r_soa.mean_ns() / 1e9);
     }
-    println!("matchmaker events/s (J=256 S=200, workspace): {:.0}",
+    println!("matchmaker events/s (J=1024 S=500, soa): {:.0}",
              closing_events_per_s);
+    if let Some(path) = json_path {
+        write_json(&path, smoke, &results);
+    }
 }

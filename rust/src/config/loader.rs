@@ -439,4 +439,28 @@ bulk_size = 7
                                  "congestion_thrs = 3.0");
         assert!(load_str(&bad).is_err());
     }
+
+    #[test]
+    fn non_finite_cost_weights_rejected_at_load() {
+        // `1e400` overflows f64 → parses to +inf; `1e40` is f64-finite
+        // but overflows the kernel's f32. Both would turn the `max(eps)`
+        // divide-guards into NaN factories, so load_str must refuse
+        // them with the field named in the error.
+        for (field, line) in [
+            ("scheduler.w5", "w5 = 1e400"),
+            ("scheduler.w6", "w6 = -1e400"),
+            ("scheduler.w_net", "w_net = 1e40"),
+            ("scheduler.w_dtc", "w_dtc = 1e400"),
+        ] {
+            let bad = SAMPLE.replace("w5 = 1.5", line);
+            let err = match load_str(&bad) {
+                Err(e) => e.to_string(),
+                Ok(_) => panic!("accepted `{line}`"),
+            };
+            assert!(err.contains(field),
+                    "error for `{line}` lost its field name: {err}");
+        }
+        // A finite weight loads fine through the same path.
+        assert_eq!(load_str(SAMPLE).unwrap().scheduler.w5, 1.5);
+    }
 }

@@ -478,6 +478,24 @@ impl GridConfig {
         if !(0.0..=1.0).contains(&self.scheduler.congestion_thrs) {
             return Err("congestion_thrs must be in [0,1]".into());
         }
+        // §IV cost weights feed the kernel as f32; non-finite values (or
+        // values that overflow f32, like 1e40) turn the cost matrix into
+        // a NaN/∞ factory that poisons every argmin downstream. Reject
+        // them here, by name, instead of letting the kernel mis-schedule.
+        for (name, v) in [
+            ("scheduler.w5", self.scheduler.w5),
+            ("scheduler.w6", self.scheduler.w6),
+            ("scheduler.w7", self.scheduler.w7),
+            ("scheduler.w_net", self.scheduler.w_net),
+            ("scheduler.w_dtc", self.scheduler.w_dtc),
+        ] {
+            if !(v.is_finite() && (v as f32).is_finite()) {
+                return Err(format!(
+                    "{name} must be finite (and within f32 range — the \
+                     kernel runs in f32), got {v}"
+                ));
+            }
+        }
         if self.max_events == 0 {
             return Err("max_events must be >= 1".into());
         }
@@ -607,6 +625,27 @@ mod tests {
             capacity_mbps: 1.0,
         });
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn non_finite_cost_weights_rejected_by_name() {
+        // NaN / ∞ weights would turn the f32 kernel into a NaN factory;
+        // the error must name the offending field.
+        let cases: [(&str, fn(&mut GridConfig)); 5] = [
+            ("scheduler.w5", |c| c.scheduler.w5 = f64::NAN),
+            ("scheduler.w6", |c| c.scheduler.w6 = f64::INFINITY),
+            ("scheduler.w7", |c| c.scheduler.w7 = f64::NEG_INFINITY),
+            ("scheduler.w_net", |c| c.scheduler.w_net = f64::NAN),
+            // Finite in f64 but overflows the kernel's f32.
+            ("scheduler.w_dtc", |c| c.scheduler.w_dtc = 1e40),
+        ];
+        for (field, poison) in cases {
+            let mut cfg = presets::uniform_grid(2, 4);
+            poison(&mut cfg);
+            let err = cfg.validate().unwrap_err();
+            assert!(err.contains(field),
+                    "error for {field} lost its field name: {err}");
+        }
     }
 
     #[test]

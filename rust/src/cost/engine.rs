@@ -8,6 +8,14 @@
 //!
 //! Schedulers talk to the trait only, so the whole stack can run with or
 //! without artifacts and the cross-check suite can diff the two backends.
+//!
+//! Numerical contract: feature meanings and f32 op order are defined by
+//! `python/compile/kernels/ref.py` and **enforced** by the committed
+//! goldens under `rust/tests/golden/kernels/` (dumped from ref.py by
+//! `python/tests/dump_goldens.py`, replayed through [`RustEngine`] by
+//! `rust/tests/kernel_parity.rs`). Edit the kernel on either side and
+//! the parity suite — not a comment — tells you whether they still
+//! agree.
 
 use crate::util::error::Result;
 
@@ -58,6 +66,7 @@ impl RustEngine {
 impl CostEngine for RustEngine {
     fn schedule_step(&mut self, inputs: &CostInputs, weights: &Weights)
         -> Result<ScheduleOut> {
+        debug_assert!(weights.validate().is_ok(), "{:?}", weights.validate());
         Ok(schedule_step_rust(inputs, weights))
     }
 
@@ -67,6 +76,7 @@ impl CostEngine for RustEngine {
         weights: &Weights,
         out: &mut ScheduleOut,
     ) -> Result<()> {
+        debug_assert!(weights.validate().is_ok(), "{:?}", weights.validate());
         schedule_step_into(inputs, weights, out);
         Ok(())
     }
@@ -148,8 +158,12 @@ mod tests {
             }
         }
         let mut inp = CostInputs::new(3, 4);
-        for (i, v) in inp.site_feats.iter_mut().enumerate() {
-            *v = (i % 7) as f32;
+        for s in 0..4 {
+            let mut row = [0.0f32; 8];
+            for (k, v) in row.iter_mut().enumerate() {
+                *v = ((s * 8 + k) % 7) as f32;
+            }
+            inp.set_site_row(s, &row);
         }
         let w = Weights { q_total: 9.0, ..Weights::default() };
         let mut a = ScheduleOut::default();

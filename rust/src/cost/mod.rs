@@ -7,8 +7,9 @@ pub mod workspace;
 
 pub use engine::{reprioritize_rust, CostEngine, RustEngine};
 pub use model::{
-    schedule_step_into, schedule_step_rust, sort_sites_by_cost,
-    sort_sites_by_cost_into, top_k_sites_by_cost, CostInputs, ScheduleOut,
-    Weights, BIG, EPS, JOB_FEATS, N_WEIGHTS, SITE_FEATS,
+    schedule_step_into, schedule_step_rust, schedule_step_scalar_into,
+    sort_sites_by_cost, sort_sites_by_cost_into, top_k_sites_by_cost,
+    CostInputs, ScheduleOut, Weights, BIG, EPS, JOB_FEATS, LANES, N_WEIGHTS,
+    SITE_FEATS,
 };
 pub use workspace::CostWorkspace;

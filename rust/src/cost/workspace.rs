@@ -38,19 +38,18 @@ impl CostWorkspace {
 
     /// Capacities of every owned buffer — the probe the
     /// capacity-stability tests compare across rounds to prove the
-    /// steady state allocates nothing.
-    pub fn capacities(&self) -> [usize; 9] {
-        [
-            self.inputs.job_feats.capacity(),
-            self.inputs.site_feats.capacity(),
-            self.inputs.link_bw.capacity(),
-            self.inputs.link_loss.capacity(),
-            self.out.total.capacity(),
-            self.out.comp.capacity(),
+    /// steady state allocates nothing. Covers all 13 SoA input columns,
+    /// all 9 output buffers (the hoisted `client`/`dead` scratch
+    /// included) and the three sort/cost scratch vectors.
+    pub fn capacities(&self) -> Vec<usize> {
+        let mut caps = self.inputs.capacities();
+        caps.extend(self.out.capacities());
+        caps.extend([
             self.order.capacity(),
             self.row.capacity(),
             self.costs.capacity(),
-        ]
+        ]);
+        caps
     }
 }
 

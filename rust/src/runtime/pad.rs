@@ -7,7 +7,7 @@
 //!  * jobs   → zero rows with link_bw = 1 (finite, sliced off afterwards);
 //!  * queue  → zero rows (Pr = 0, sliced off afterwards).
 
-use crate::cost::{CostInputs, JOB_FEATS, SITE_FEATS};
+use crate::cost::CostInputs;
 
 /// AOT shapes — must match python/compile/model.py.
 pub const AOT_JOBS: usize = 256;
@@ -27,15 +27,21 @@ pub fn pad_inputs_to(inp: &CostInputs, aot_jobs: usize) -> CostInputs {
     assert!(inp.n_jobs <= aot_jobs, "job tile too large: {}", inp.n_jobs);
     assert!(inp.n_sites <= AOT_SITES, "too many sites: {}", inp.n_sites);
     let mut out = CostInputs::new(aot_jobs, AOT_SITES);
-    for j in 0..inp.n_jobs {
-        out.job_feats[j * JOB_FEATS..(j + 1) * JOB_FEATS]
-            .copy_from_slice(&inp.job_feats[j * JOB_FEATS..(j + 1) * JOB_FEATS]);
-    }
-    for s in 0..inp.n_sites {
-        out.site_feats[s * SITE_FEATS..(s + 1) * SITE_FEATS].copy_from_slice(
-            &inp.site_feats[s * SITE_FEATS..(s + 1) * SITE_FEATS],
-        );
-    }
+    // SoA: copy each real column prefix; padded tails keep the zeroed
+    // `new()` defaults.
+    let nj = inp.n_jobs;
+    out.job_in_mb[..nj].copy_from_slice(&inp.job_in_mb[..nj]);
+    out.job_out_mb[..nj].copy_from_slice(&inp.job_out_mb[..nj]);
+    out.job_exe_mb[..nj].copy_from_slice(&inp.job_exe_mb[..nj]);
+    out.job_cpu_sec[..nj].copy_from_slice(&inp.job_cpu_sec[..nj]);
+    out.job_class[..nj].copy_from_slice(&inp.job_class[..nj]);
+    let ns = inp.n_sites;
+    out.site_queue[..ns].copy_from_slice(&inp.site_queue[..ns]);
+    out.site_cap[..ns].copy_from_slice(&inp.site_cap[..ns]);
+    out.site_load[..ns].copy_from_slice(&inp.site_load[..ns]);
+    out.site_client_bw[..ns].copy_from_slice(&inp.site_client_bw[..ns]);
+    out.site_client_loss[..ns].copy_from_slice(&inp.site_client_loss[..ns]);
+    out.site_alive[..ns].copy_from_slice(&inp.site_alive[..ns]);
     // Padded sites stay all-zero: alive = 0 → +BIG in the kernel.
     for j in 0..inp.n_jobs {
         for s in 0..inp.n_sites {
@@ -92,13 +98,11 @@ mod tests {
     fn padded_run_matches_unpadded() {
         // The padded problem must give identical answers on the real rows.
         let mut inp = CostInputs::new(3, 2);
-        inp.job_row_mut(0).copy_from_slice(&[100.0, 1.0, 1.0, 60.0, 2.0, 0.0]);
-        inp.job_row_mut(1).copy_from_slice(&[0.0, 1.0, 1.0, 60.0, 0.0, 0.0]);
-        inp.job_row_mut(2).copy_from_slice(&[50.0, 2.0, 1.0, 30.0, 1.0, 0.0]);
-        inp.site_row_mut(0)
-            .copy_from_slice(&[1.0, 10.0, 0.2, 100.0, 0.01, 1.0, 0.0, 0.0]);
-        inp.site_row_mut(1)
-            .copy_from_slice(&[5.0, 20.0, 0.8, 200.0, 0.02, 1.0, 0.0, 0.0]);
+        inp.set_job_row(0, &[100.0, 1.0, 1.0, 60.0, 2.0, 0.0]);
+        inp.set_job_row(1, &[0.0, 1.0, 1.0, 60.0, 0.0, 0.0]);
+        inp.set_job_row(2, &[50.0, 2.0, 1.0, 30.0, 1.0, 0.0]);
+        inp.set_site_row(0, &[1.0, 10.0, 0.2, 100.0, 0.01, 1.0, 0.0, 0.0]);
+        inp.set_site_row(1, &[5.0, 20.0, 0.8, 200.0, 0.02, 1.0, 0.0, 0.0]);
         for v in inp.link_bw.iter_mut() {
             *v = 123.0;
         }

@@ -44,9 +44,11 @@ impl XlaEngine {
             (&self.rt.cost_matrix, AOT_JOBS)
         };
         let padded = pad_inputs_to(inp, tile_jobs);
+        // The artifact consumes the packed row-major matrices; packing
+        // (allocating) is fine here — the PJRT literal upload dominates.
         let args = vec![
-            literal_2d(&padded.job_feats, tile_jobs, JOB_FEATS)?,
-            literal_2d(&padded.site_feats, AOT_SITES, SITE_FEATS)?,
+            literal_2d(&padded.packed_job_feats(), tile_jobs, JOB_FEATS)?,
+            literal_2d(&padded.packed_site_feats(), AOT_SITES, SITE_FEATS)?,
             literal_2d(&padded.link_bw, tile_jobs, AOT_SITES)?,
             literal_2d(&padded.link_loss, tile_jobs, AOT_SITES)?,
             literal_1d(&w.to_array()),
@@ -71,6 +73,7 @@ impl XlaEngine {
             comp: comp_pad[..ns].to_vec(),
             dtc: unpad_matrix(&dtc_pad, nj, ns),
             net: unpad_matrix(&net_pad, nj, ns),
+            ..Default::default()
         })
     }
 }
@@ -95,10 +98,18 @@ impl CostEngine for XlaEngine {
         };
         for range in tiles(inputs.n_jobs, AOT_JOBS) {
             let mut tile = CostInputs::new(range.len(), inputs.n_sites);
-            tile.site_feats.copy_from_slice(&inputs.site_feats);
-            tile.job_feats.copy_from_slice(
-                &inputs.job_feats[range.start * JOB_FEATS..range.end * JOB_FEATS],
-            );
+            tile.site_queue.copy_from_slice(&inputs.site_queue);
+            tile.site_cap.copy_from_slice(&inputs.site_cap);
+            tile.site_load.copy_from_slice(&inputs.site_load);
+            tile.site_client_bw.copy_from_slice(&inputs.site_client_bw);
+            tile.site_client_loss.copy_from_slice(&inputs.site_client_loss);
+            tile.site_alive.copy_from_slice(&inputs.site_alive);
+            let jr = range.clone();
+            tile.job_in_mb.copy_from_slice(&inputs.job_in_mb[jr.clone()]);
+            tile.job_out_mb.copy_from_slice(&inputs.job_out_mb[jr.clone()]);
+            tile.job_exe_mb.copy_from_slice(&inputs.job_exe_mb[jr.clone()]);
+            tile.job_cpu_sec.copy_from_slice(&inputs.job_cpu_sec[jr.clone()]);
+            tile.job_class.copy_from_slice(&inputs.job_class[jr]);
             let (a, b) =
                 (range.start * inputs.n_sites, range.end * inputs.n_sites);
             tile.link_bw.copy_from_slice(&inputs.link_bw[a..b]);
@@ -223,20 +234,26 @@ mod tests {
     fn random_inputs(rng: &mut Pcg64, nj: usize, ns: usize) -> CostInputs {
         let mut inp = CostInputs::new(nj, ns);
         for j in 0..nj {
-            let row = inp.job_row_mut(j);
-            row[0] = rng.uniform(0.0, 30_000.0) as f32;
-            row[1] = rng.uniform(0.0, 2_000.0) as f32;
-            row[2] = rng.uniform(1.0, 200.0) as f32;
-            row[3] = rng.uniform(1.0, 7200.0) as f32;
+            inp.set_job_row(j, &[
+                rng.uniform(0.0, 30_000.0) as f32,
+                rng.uniform(0.0, 2_000.0) as f32,
+                rng.uniform(1.0, 200.0) as f32,
+                rng.uniform(1.0, 7200.0) as f32,
+                0.0,
+                0.0,
+            ]);
         }
         for s in 0..ns {
-            let row = inp.site_row_mut(s);
-            row[0] = rng.below(500) as f32;
-            row[1] = rng.uniform(1.0, 600.0) as f32;
-            row[2] = rng.next_f64() as f32;
-            row[3] = rng.uniform(10.0, 10_000.0) as f32;
-            row[4] = rng.uniform(0.0, 0.1) as f32;
-            row[5] = 1.0;
+            inp.set_site_row(s, &[
+                rng.below(500) as f32,
+                rng.uniform(1.0, 600.0) as f32,
+                rng.next_f64() as f32,
+                rng.uniform(10.0, 10_000.0) as f32,
+                rng.uniform(0.0, 0.1) as f32,
+                1.0,
+                0.0,
+                0.0,
+            ]);
         }
         for v in inp.link_bw.iter_mut() {
             *v = rng.uniform(1.0, 10_000.0) as f32;

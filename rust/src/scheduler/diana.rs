@@ -40,30 +40,32 @@ pub fn build_cost_inputs_into(
 ) {
     let ns = view.n_sites();
     inp.resize(jobs.len(), ns);
+    // Site features land directly in the SoA columns — one unit-stride
+    // write per feature instead of the old stride-8 row pokes.
     for (s, snap) in view.sites.iter().enumerate() {
-        let row = inp.site_row_mut(s);
-        row[0] = snap.queue_len as f32;
-        row[1] = snap.capability as f32;
-        row[2] = snap.load as f32;
-        row[5] = if snap.alive { 1.0 } else { 0.0 };
+        inp.site_queue[s] = snap.queue_len as f32;
+        inp.site_cap[s] = snap.capability as f32;
+        inp.site_load[s] = snap.load as f32;
+        inp.site_alive[s] = if snap.alive { 1.0 } else { 0.0 };
     }
     if let Some(first) = jobs.first() {
         // Client link: execution site → submitting client (§IV output
         // cost). One client per round — bulk groups share the submitter.
         for s in 0..ns {
             let o = view.monitor.observe(s, first.submit_site);
-            let row = inp.site_row_mut(s);
-            row[3] = o.bandwidth_mbps as f32;
-            row[4] = o.loss as f32;
+            inp.site_client_bw[s] = o.bandwidth_mbps as f32;
+            inp.site_client_loss[s] = o.loss as f32;
         }
+    } else {
+        inp.site_client_bw.fill(1.0);
+        inp.site_client_loss.fill(0.0);
     }
     for (j, job) in jobs.iter().enumerate() {
-        let row = inp.job_row_mut(j);
-        row[0] = job.in_mb as f32;
-        row[1] = job.out_mb as f32;
-        row[2] = job.exe_mb as f32;
-        row[3] = job.cpu_sec as f32;
-        row[4] = job.class.as_f32();
+        inp.job_in_mb[j] = job.in_mb as f32;
+        inp.job_out_mb[j] = job.out_mb as f32;
+        inp.job_exe_mb[j] = job.exe_mb as f32;
+        inp.job_cpu_sec[j] = job.cpu_sec as f32;
+        inp.job_class[j] = job.class.as_f32();
         let dst = j * ns..(j + 1) * ns;
         match job.input {
             Some(ds) => {
@@ -145,7 +147,7 @@ impl DianaScheduler {
     }
 
     /// Workspace buffer capacities (capacity-stability assertions).
-    pub fn workspace_capacities(&self) -> [usize; 9] {
+    pub fn workspace_capacities(&self) -> Vec<usize> {
         self.ws.capacities()
     }
 

@@ -23,17 +23,26 @@ fn cost_engine_workload_constructs_and_runs() {
     let (nj, ns) = (25, 5);
     let mut inp = CostInputs::new(nj, ns);
     for j in 0..nj {
-        let row = inp.job_row_mut(j);
-        row[0] = rng.uniform(0.0, 30_000.0) as f32;
-        row[1] = rng.uniform(0.0, 2_000.0) as f32;
-        row[2] = rng.uniform(1.0, 200.0) as f32;
-        row[3] = rng.uniform(1.0, 7200.0) as f32;
+        inp.set_job_row(j, &[
+            rng.uniform(0.0, 30_000.0) as f32,
+            rng.uniform(0.0, 2_000.0) as f32,
+            rng.uniform(1.0, 200.0) as f32,
+            rng.uniform(1.0, 7200.0) as f32,
+            0.0,
+            0.0,
+        ]);
     }
     for s in 0..ns {
-        let row = inp.site_row_mut(s);
-        row[0] = rng.below(500) as f32;
-        row[1] = rng.uniform(1.0, 600.0) as f32;
-        row[5] = 1.0;
+        inp.set_site_row(s, &[
+            rng.below(500) as f32,
+            rng.uniform(1.0, 600.0) as f32,
+            0.0,
+            0.0,
+            0.0,
+            1.0,
+            0.0,
+            0.0,
+        ]);
     }
     let w = Weights { q_total: 500.0, ..Weights::default() };
     let mut engine = RustEngine::new();
@@ -211,11 +220,12 @@ fn figures_workload_constructs_and_runs() {
     }
 }
 
-/// bench_matchmaker: old-style vs workspace round, reduced (J, S), with
-/// the same argmin cross-check the bench performs.
+/// bench_matchmaker: old-style vs scalar-workspace vs SoA-vectorized
+/// round, reduced (J, S), with the same argmin + `to_bits` cross-checks
+/// the bench performs.
 #[test]
 fn matchmaker_workload_constructs_and_runs() {
-    use diana::cost::CostWorkspace;
+    use diana::cost::{schedule_step_scalar_into, CostWorkspace};
     use diana::data::ReplicaCache;
     use diana::scheduler::{build_cost_inputs, build_cost_inputs_into};
 
@@ -279,4 +289,16 @@ fn matchmaker_workload_constructs_and_runs() {
     assert_eq!(old.best_compute, ws.out.best_compute);
     assert_eq!(old.best_data, ws.out.best_data);
     assert_eq!(old.total, ws.out.total);
+    // Scalar oracle through a reused workspace — the bench's third
+    // variant — must be bit-identical to the vectorized round.
+    let mut scalar = CostWorkspace::new();
+    build_cost_inputs_into(&jobs, &view, &mut scalar.inputs, &mut replicas);
+    schedule_step_scalar_into(&scalar.inputs, &w, &mut scalar.out);
+    let bits =
+        |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+    assert_eq!(bits(&scalar.out.total), bits(&ws.out.total));
+    assert_eq!(bits(&scalar.out.net), bits(&ws.out.net));
+    assert_eq!(bits(&scalar.out.dtc), bits(&ws.out.dtc));
+    assert_eq!(bits(&scalar.out.comp), bits(&ws.out.comp));
+    assert_eq!(scalar.out.best_total, ws.out.best_total);
 }

@@ -1,0 +1,252 @@
+//! Differential property suite: the vectorized §V kernel
+//! (`schedule_step_into`) vs the scalar oracle (`schedule_step_rust`),
+//! `to_bits`-exact.
+//!
+//! The vectorized path hoists per-site terms, chunks the J×S sweep into
+//! `LANES`-wide spans and runs a separate argmin pass — every one of
+//! those restructurings is claimed to be bit-preserving. This suite is
+//! the proof: randomized shapes (0/1 jobs, S = 1, non-multiple-of-LANES
+//! remainders), dead sites, NaN/∞ link rows and eps-clamped zero
+//! bandwidths, all compared bit-for-bit on the four output matrices and
+//! all three per-class argmin columns. Any re-association, FMA fusion
+//! or reduction reorder that changes even one ULP fails here.
+
+use diana::cost::{
+    schedule_step_into, schedule_step_rust, CostInputs, ScheduleOut, Weights,
+    LANES,
+};
+use diana::util::Pcg64;
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Compare oracle vs vectorized on one input, bitwise.
+fn assert_bit_identical(
+    inp: &CostInputs,
+    w: &Weights,
+    out: &mut ScheduleOut,
+    label: &str,
+) {
+    let oracle = schedule_step_rust(inp, w);
+    schedule_step_into(inp, w, out);
+    assert_eq!(bits(&out.total), bits(&oracle.total), "{label}: total");
+    assert_eq!(bits(&out.net), bits(&oracle.net), "{label}: net");
+    assert_eq!(bits(&out.dtc), bits(&oracle.dtc), "{label}: dtc");
+    assert_eq!(bits(&out.comp), bits(&oracle.comp), "{label}: comp");
+    assert_eq!(out.best_total, oracle.best_total, "{label}: best_total");
+    assert_eq!(out.best_compute, oracle.best_compute, "{label}: best_compute");
+    assert_eq!(out.best_data, oracle.best_data, "{label}: best_data");
+}
+
+/// Random well-formed inputs: finite features, ~20% dead sites, link
+/// bandwidth spanning zero (the eps guard) to very fast.
+fn random_inputs(rng: &mut Pcg64, nj: usize, ns: usize) -> (CostInputs, Weights) {
+    let mut inp = CostInputs::new(nj, ns);
+    for j in 0..nj {
+        inp.set_job_row(j, &[
+            rng.uniform(0.0, 50_000.0) as f32,
+            rng.uniform(0.0, 5_000.0) as f32,
+            rng.uniform(0.0, 500.0) as f32,
+            rng.uniform(1.0, 7200.0) as f32,
+            rng.below(3) as f32,
+            0.0,
+        ]);
+    }
+    for s in 0..ns {
+        inp.set_site_row(s, &[
+            rng.below(1000) as f32,
+            rng.uniform(0.0, 1000.0) as f32, // 0 exercises the Pi guard
+            rng.next_f64() as f32,
+            rng.uniform(0.0, 10_000.0) as f32, // 0 exercises client guard
+            rng.uniform(0.0, 0.2) as f32,
+            if rng.next_f64() < 0.8 { 1.0 } else { 0.0 },
+            0.0,
+            0.0,
+        ]);
+    }
+    for v in inp.link_bw.iter_mut() {
+        // 0 exercises the max(eps) divide-guard.
+        *v = if rng.next_f64() < 0.05 {
+            0.0
+        } else {
+            rng.uniform(0.0, 10_000.0) as f32
+        };
+    }
+    for v in inp.link_loss.iter_mut() {
+        *v = rng.uniform(0.0, 0.3) as f32;
+    }
+    let w = Weights {
+        w5: rng.uniform(0.1, 4.0) as f32,
+        w6: rng.uniform(0.0, 2.0) as f32,
+        w7: rng.uniform(0.0, 4.0) as f32,
+        q_total: rng.below(5000) as f32,
+        w_net: rng.uniform(0.1, 2.0) as f32,
+        w_dtc: rng.uniform(0.1, 2.0) as f32,
+        ..Weights::default()
+    };
+    (inp, w)
+}
+
+#[test]
+fn random_shapes_bit_identical() {
+    let mut out = ScheduleOut::default();
+    for case in 0..300u64 {
+        let seed = 0x51AD ^ case.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Pcg64::new(seed);
+        let nj = rng.below(80) as usize; // 0 jobs included
+        let ns = 1 + rng.below(70) as usize; // S = 1 included
+        let (inp, w) = random_inputs(&mut rng, nj, ns);
+        assert_bit_identical(&inp, &w, &mut out,
+                             &format!("seed {seed:#x} ({nj}x{ns})"));
+    }
+}
+
+#[test]
+fn lane_remainder_shapes_bit_identical() {
+    // Every remainder class around the LANES chunk width, plus S = 1 and
+    // the exact-multiple shapes where the remainder span is empty.
+    let mut out = ScheduleOut::default();
+    let mut rng = Pcg64::new(0xC0FFEE);
+    for ns in 1..=(3 * LANES + 1) {
+        for nj in [0usize, 1, 2, 7] {
+            let (inp, w) = random_inputs(&mut rng, nj, ns);
+            assert_bit_identical(&inp, &w, &mut out, &format!("({nj}x{ns})"));
+        }
+    }
+}
+
+#[test]
+fn nan_and_infinity_link_rows_bit_identical() {
+    // NaN / ∞ in the link matrices must propagate identically through
+    // both paths (NaN.max(eps) = eps in Rust; 0 · ∞ = NaN; NaN never
+    // wins an argmin). One poisoned row per pattern, sites wide enough
+    // to cover full lanes and the remainder.
+    let mut out = ScheduleOut::default();
+    let mut rng = Pcg64::new(0xBADF00D);
+    let (nj, ns) = (6usize, 2 * LANES + 3);
+    for pattern in 0..6 {
+        let (mut inp, w) = random_inputs(&mut rng, nj, ns);
+        match pattern {
+            0 => inp.link_bw[ns..2 * ns].fill(f32::NAN),
+            1 => inp.link_loss[ns..2 * ns].fill(f32::NAN),
+            2 => inp.link_bw[0..ns].fill(f32::INFINITY),
+            3 => inp.link_loss[2 * ns..3 * ns].fill(f32::INFINITY),
+            4 => {
+                // in_mb = 0 against bw = ∞: 0/∞ = 0, then 0 · (1+loss).
+                inp.job_in_mb[3] = 0.0;
+                inp.link_bw[3 * ns..4 * ns].fill(f32::INFINITY);
+            }
+            _ => {
+                // Whole-row NaN: every key NaN → argmin stays at 0.
+                inp.link_bw[4 * ns..5 * ns].fill(f32::NAN);
+                inp.link_loss[4 * ns..5 * ns].fill(f32::NAN);
+            }
+        }
+        assert_bit_identical(&inp, &w, &mut out, &format!("pattern {pattern}"));
+    }
+}
+
+#[test]
+fn all_nan_row_leaves_argmin_at_zero() {
+    // Both paths must agree on the degenerate all-NaN row — and the
+    // agreed answer is index 0 (strict `<` never accepts NaN).
+    let mut inp = CostInputs::new(1, LANES + 2);
+    for s in 0..inp.n_sites {
+        inp.set_site_row(s, &[1.0, 8.0, 0.5, 100.0, 0.01, 1.0, 0.0, 0.0]);
+    }
+    inp.set_job_row(0, &[100.0, 10.0, 5.0, 60.0, 2.0, 0.0]);
+    inp.link_loss.fill(f32::NAN);
+    let w = Weights::default();
+    let oracle = schedule_step_rust(&inp, &w);
+    let mut out = ScheduleOut::default();
+    schedule_step_into(&inp, &w, &mut out);
+    assert!(out.total.iter().all(|t| t.is_nan()));
+    assert_eq!(out.best_total, vec![0]);
+    assert_eq!(out.best_total, oracle.best_total);
+    assert_eq!(bits(&out.total), bits(&oracle.total));
+}
+
+#[test]
+fn dead_site_masking_bit_identical_and_masked() {
+    // Kill every site except one; both paths must produce the same bits
+    // and both argmins must land on the lone alive site.
+    let mut rng = Pcg64::new(0xDEAD);
+    let (nj, ns) = (5usize, 3 * LANES - 1);
+    let (mut inp, w) = random_inputs(&mut rng, nj, ns);
+    let alive = (rng.below(ns as u64)) as usize;
+    for s in 0..ns {
+        inp.site_alive[s] = if s == alive { 1.0 } else { 0.0 };
+    }
+    let mut out = ScheduleOut::default();
+    assert_bit_identical(&inp, &w, &mut out, "dead mask");
+    for j in 0..nj {
+        assert_eq!(out.best_total[j] as usize, alive);
+        assert_eq!(out.best_compute[j] as usize, alive);
+        assert_eq!(out.best_data[j] as usize, alive);
+    }
+}
+
+#[test]
+fn argmin_tie_break_picks_lowest_site_index() {
+    // Identical sites + identical links ⇒ every cost column is constant
+    // per job; the strict-`<` scan must keep index 0 on both paths.
+    let (nj, ns) = (3usize, 2 * LANES + 5);
+    let mut inp = CostInputs::new(nj, ns);
+    for s in 0..ns {
+        inp.set_site_row(s, &[5.0, 16.0, 0.25, 500.0, 0.02, 1.0, 0.0, 0.0]);
+    }
+    for j in 0..nj {
+        inp.set_job_row(j, &[1000.0, 20.0, 5.0, 600.0, 1.0, 0.0]);
+    }
+    inp.link_bw.fill(250.0);
+    inp.link_loss.fill(0.05);
+    let w = Weights { q_total: 40.0, ..Weights::default() };
+    let mut out = ScheduleOut::default();
+    assert_bit_identical(&inp, &w, &mut out, "tie break");
+    assert_eq!(out.best_total, vec![0; nj]);
+    assert_eq!(out.best_compute, vec![0; nj]);
+    assert_eq!(out.best_data, vec![0; nj]);
+}
+
+#[test]
+fn eps_clamped_zero_bandwidth_bit_identical() {
+    // All-zero bandwidths everywhere: every divide runs on the eps
+    // guard. Costs are huge but finite, and identical across paths.
+    let (nj, ns) = (4usize, LANES + 1);
+    let mut inp = CostInputs::new(nj, ns);
+    for s in 0..ns {
+        inp.set_site_row(s, &[2.0, 8.0, 0.5, 0.0, 0.1, 1.0, 0.0, 0.0]);
+    }
+    for j in 0..nj {
+        inp.set_job_row(j, &[10.0, 5.0, 1.0, 60.0, 0.0, 0.0]);
+    }
+    inp.link_bw.fill(0.0);
+    inp.link_loss.fill(0.2);
+    let w = Weights { q_total: 8.0, ..Weights::default() };
+    let mut out = ScheduleOut::default();
+    assert_bit_identical(&inp, &w, &mut out, "eps clamp");
+    assert!(out.total.iter().all(|t| t.is_finite()));
+}
+
+#[test]
+fn shrink_regrow_reuse_is_bit_identical_and_capacity_stable() {
+    // PR 4 capacity-stability discipline extended to the vectorized
+    // kernel: one ScheduleOut reused across shrinking/regrowing rounds
+    // must stay bit-identical to fresh evaluation and never reallocate
+    // once warmed at the largest shape.
+    let mut out = ScheduleOut::default();
+    let mut rng = Pcg64::new(0x5EED5);
+    let (max_j, max_s) = (48usize, 3 * LANES + 2);
+    let (warm, w) = random_inputs(&mut rng, max_j, max_s);
+    schedule_step_into(&warm, &w, &mut out);
+    let caps = out.capacities();
+    for (nj, ns) in
+        [(1usize, 1usize), (max_j, max_s), (3, LANES), (17, max_s), (0, 5)]
+    {
+        let (inp, w) = random_inputs(&mut rng, nj, ns);
+        assert_bit_identical(&inp, &w, &mut out, &format!("reuse ({nj}x{ns})"));
+    }
+    assert_eq!(out.capacities(), caps,
+               "reused ScheduleOut must not reallocate after warmup");
+}

@@ -1,0 +1,195 @@
+//! Rust↔Pallas golden parity: replay the committed goldens under
+//! `tests/golden/kernels/` — dumped from the JAX `ref.py` contract by
+//! `python/tests/dump_goldens.py` — through `RustEngine`.
+//!
+//! Floats travel as f32 bit patterns (8 hex digits), so this suite needs
+//! no JAX, no Python and no parsing tolerance: the inputs the Rust
+//! kernel sees are bit-for-bit the inputs the JAX oracle saw.
+//!
+//! Comparison gates (the cross-language contract):
+//!  * float outputs (total/comp/dtc/net, pr): 1e-5 relative with a 1e-3
+//!    absolute floor — XLA may fuse multiply-adds where rustc does not,
+//!    so cross-language bit-equality is not promised (the bitwise
+//!    promise is Rust-scalar vs Rust-vectorized; see
+//!    kernel_differential.rs).
+//!  * argmin / queue indices: exact. The dump tool asserts a margin
+//!    between best and runner-up so this can never flake under
+//!    FMA-level drift.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use diana::cost::{CostEngine, CostInputs, RustEngine, Weights};
+
+const REL_TOL: f64 = 1e-5;
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests")
+        .join("golden")
+        .join("kernels")
+}
+
+struct Golden {
+    fields: HashMap<String, Vec<String>>,
+}
+
+impl Golden {
+    fn load(path: &std::path::Path) -> Golden {
+        let text = std::fs::read_to_string(path)
+            .unwrap_or_else(|e| panic!("reading {}: {e}", path.display()));
+        let mut fields = HashMap::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut toks = line.split_whitespace().map(str::to_string);
+            let key = toks.next().expect("key");
+            fields.insert(key, toks.collect());
+        }
+        Golden { fields }
+    }
+
+    fn usize(&self, key: &str) -> usize {
+        self.fields[key][0].parse().unwrap_or_else(|e| {
+            panic!("field `{key}`: {e}")
+        })
+    }
+
+    fn f32s(&self, key: &str) -> Vec<f32> {
+        self.fields
+            .get(key)
+            .unwrap_or_else(|| panic!("missing field `{key}`"))
+            .iter()
+            .map(|t| {
+                let bits = u32::from_str_radix(t, 16)
+                    .unwrap_or_else(|e| panic!("field `{key}` token {t}: {e}"));
+                f32::from_bits(bits)
+            })
+            .collect()
+    }
+
+    fn i32s(&self, key: &str) -> Vec<i32> {
+        self.fields[key]
+            .iter()
+            .map(|t| t.parse().unwrap())
+            .collect()
+    }
+}
+
+fn assert_rel_close(got: &[f32], want: &[f32], what: &str, name: &str) {
+    assert_eq!(got.len(), want.len(), "{name}/{what}: length");
+    for (i, (&a, &b)) in got.iter().zip(want).enumerate() {
+        let (a, b) = (a as f64, b as f64);
+        let rel = (a - b).abs() / b.abs().max(1e-3);
+        assert!(
+            rel < REL_TOL,
+            "{name}/{what}[{i}]: rust {a} vs golden {b} (rel {rel:.2e})"
+        );
+    }
+}
+
+fn replay(path: &std::path::Path) {
+    let name = path.file_stem().unwrap().to_string_lossy().into_owned();
+    let g = Golden::load(path);
+    let (nj, ns) = (g.usize("nj"), g.usize("ns"));
+
+    let mut inp = CostInputs::new(nj, ns);
+    inp.job_in_mb = g.f32s("job_in_mb");
+    inp.job_out_mb = g.f32s("job_out_mb");
+    inp.job_exe_mb = g.f32s("job_exe_mb");
+    inp.job_cpu_sec = g.f32s("job_cpu_sec");
+    inp.job_class = g.f32s("job_class");
+    inp.site_queue = g.f32s("site_queue");
+    inp.site_cap = g.f32s("site_cap");
+    inp.site_load = g.f32s("site_load");
+    inp.site_client_bw = g.f32s("site_client_bw");
+    inp.site_client_loss = g.f32s("site_client_loss");
+    inp.site_alive = g.f32s("site_alive");
+    inp.link_bw = g.f32s("link_bw");
+    inp.link_loss = g.f32s("link_loss");
+    for (col, len, what) in [
+        (inp.job_in_mb.len(), nj, "job_in_mb"),
+        (inp.site_queue.len(), ns, "site_queue"),
+        (inp.link_bw.len(), nj * ns, "link_bw"),
+        (inp.link_loss.len(), nj * ns, "link_loss"),
+    ] {
+        assert_eq!(col, len, "{name}: {what} length");
+    }
+
+    let wv = g.f32s("weights");
+    assert_eq!(wv.len(), 8, "{name}: weights length");
+    let w = Weights {
+        w5: wv[0],
+        w6: wv[1],
+        w7: wv[2],
+        q_total: wv[3],
+        w_net: wv[4],
+        w_dtc: wv[5],
+        eps: wv[6],
+        big: wv[7],
+    };
+    w.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+
+    let mut engine = RustEngine::new();
+    let out = engine.schedule_step(&inp, &w).unwrap();
+
+    assert_rel_close(&out.total, &g.f32s("total"), "total", &name);
+    assert_rel_close(&out.comp, &g.f32s("comp"), "comp", &name);
+    assert_rel_close(&out.dtc, &g.f32s("dtc"), "dtc", &name);
+    assert_rel_close(&out.net, &g.f32s("net"), "net", &name);
+    assert_eq!(out.best_total, g.i32s("best_total"), "{name}: best_total");
+
+    // §X priority parity through the same engine.
+    let l = g.usize("pr_l");
+    let pj = g.f32s("pr_jobs");
+    assert_eq!(pj.len(), l * 4, "{name}: pr_jobs length");
+    let pt = g.f32s("pr_totals");
+    let totals = [pt[0], pt[1], pt[2], pt[3]];
+    let (pr, queue) = engine.reprioritize(&pj, &totals).unwrap();
+    assert_rel_close(&pr, &g.f32s("pr"), "pr", &name);
+    assert_eq!(queue, g.i32s("pr_queue"), "{name}: pr_queue");
+}
+
+#[test]
+fn all_committed_goldens_replay_within_tolerance() {
+    let dir = golden_dir();
+    let mut paths: Vec<PathBuf> = std::fs::read_dir(&dir)
+        .unwrap_or_else(|e| panic!("reading {}: {e}", dir.display()))
+        .map(|e| e.unwrap().path())
+        .filter(|p| p.extension().is_some_and(|x| x == "golden"))
+        .collect();
+    paths.sort();
+    assert!(
+        paths.len() >= 6,
+        "expected ≥ 6 committed goldens in {}, found {} — run \
+         python3 python/tests/dump_goldens.py",
+        dir.display(),
+        paths.len()
+    );
+    for p in &paths {
+        replay(p);
+    }
+}
+
+#[test]
+fn golden_fixture_set_is_the_expected_one() {
+    // The dump tool's fixture list and this suite must not drift apart:
+    // a renamed or dropped fixture should fail loudly, not shrink
+    // coverage silently.
+    let dir = golden_dir();
+    for name in [
+        "paper_testbed",
+        "uniform_64x8",
+        "dead_sites",
+        "extreme_bw_loss",
+        "single_site",
+        "big_256x32",
+    ] {
+        assert!(
+            dir.join(format!("{name}.golden")).exists(),
+            "missing golden `{name}` — run python3 python/tests/dump_goldens.py"
+        );
+    }
+}

@@ -29,25 +29,31 @@ fn random_inputs(rng: &mut Pcg64) -> (CostInputs, Weights) {
     let ns = 1 + rng.below(16) as usize;
     let mut inp = CostInputs::new(nj, ns);
     for j in 0..nj {
-        let row = inp.job_row_mut(j);
-        row[0] = rng.uniform(0.0, 50_000.0) as f32;
-        row[1] = rng.uniform(0.0, 5_000.0) as f32;
-        row[2] = rng.uniform(0.0, 500.0) as f32;
-        row[3] = rng.uniform(1.0, 7200.0) as f32;
+        inp.set_job_row(j, &[
+            rng.uniform(0.0, 50_000.0) as f32,
+            rng.uniform(0.0, 5_000.0) as f32,
+            rng.uniform(0.0, 500.0) as f32,
+            rng.uniform(1.0, 7200.0) as f32,
+            0.0,
+            0.0,
+        ]);
     }
     let mut any_alive = false;
     for s in 0..ns {
-        let row = inp.site_row_mut(s);
+        // Draw order matches the feature order (alive last) so seeds keep
+        // generating the same cases they did pre-SoA.
+        let mut row = [0.0f32; 8];
         row[0] = rng.below(1000) as f32;
         row[1] = rng.uniform(0.5, 1000.0) as f32;
         row[2] = rng.next_f64() as f32;
         row[3] = rng.uniform(1.0, 10_000.0) as f32;
         row[4] = rng.uniform(0.0, 0.2) as f32;
         row[5] = if rng.next_f64() < 0.8 { 1.0 } else { 0.0 };
+        inp.set_site_row(s, &row);
         any_alive |= row[5] == 1.0;
     }
     if !any_alive {
-        inp.site_row_mut(0)[5] = 1.0;
+        inp.site_alive[0] = 1.0;
     }
     for v in inp.link_bw.iter_mut() {
         *v = rng.uniform(0.0, 10_000.0) as f32; // 0 exercises the guard
@@ -96,8 +102,7 @@ fn prop_dead_sites_never_selected_while_alive_exists() {
     prop("dead site exclusion", 200, |rng| {
         let (inp, w) = random_inputs(rng);
         let alive: Vec<bool> =
-            (0..inp.n_sites).map(|s| inp.site_feats[s * 8 + 5] == 1.0)
-                .collect();
+            inp.site_alive.iter().map(|&a| a == 1.0).collect();
         if !alive.iter().any(|&a| a) {
             return Ok(());
         }
