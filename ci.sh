@@ -157,7 +157,7 @@ grep -q '"shapes"' "$SWEEP_OUT/BENCH_world.json" \
 # more than 15% below the recorded value.
 if [ -f BENCH_world.json ]; then
   for shape in small flood federated federated-t2 federated-t4 \
-               streamed-flood; do
+               central-t2 central-t4 faulted-fed-t4 streamed-flood; do
     old=$(grep -o "\"name\": \"$shape\", \"events_per_s\": [0-9.]*" \
             BENCH_world.json | grep -o '[0-9.]*$' || true)
     new=$(grep -o "\"name\": \"$shape\", \"events_per_s\": [0-9.]*" \
@@ -189,6 +189,50 @@ echo "== PDES smoke (--sim-threads 1 == 4, CLI, bit-for-bit) =="
     --federation 4 --sim-threads 4 > "$SWEEP_OUT/pdes-t4.txt"
 cmp "$SWEEP_OUT/pdes-t1.txt" "$SWEEP_OUT/pdes-t4.txt" \
   || { echo "ci.sh: --sim-threads 4 diverged from --sim-threads 1"; exit 1; }
+
+echo "== central PDES smoke (--sim-threads 1 == 4, no federation) =="
+# Plain-central runs are inside the envelope too: sites shard by
+# contiguous block and the single scheduler's placement rounds replay
+# at window barriers, so a non-federated run must byte-match serial.
+./target/release/diana run --preset uniform --jobs 80 --seed 7 \
+    --sim-threads 1 > "$SWEEP_OUT/central-pdes-t1.txt"
+./target/release/diana run --preset uniform --jobs 80 --seed 7 \
+    --sim-threads 4 > "$SWEEP_OUT/central-pdes-t4.txt"
+cmp "$SWEEP_OUT/central-pdes-t1.txt" "$SWEEP_OUT/central-pdes-t4.txt" \
+  || { echo "ci.sh: central --sim-threads 4 diverged from serial"; exit 1; }
+
+echo "== faulted federated smoke (site down/up, sim.threads 1 == 4) =="
+# Site-lifecycle faults are replicated events inside the PDES envelope:
+# a sweep that kills s2 mid-run (stranding queued work for the §IX
+# force-migration sweep) and revives it later must render byte-identical
+# CSV/JSON whether the sim is serial or sharded on 4 threads.
+for t in 1 4; do
+  cat > "$SWEEP_OUT/faulted-fed-t$t.toml" <<EOF
+name = "faulted-fed"
+preset = "uniform-6x4"
+base_seed = 9
+[set]
+jobs = 60
+bulk_size = 12
+cpu_sec_median = 90.0
+federation.peers = 2
+sim.threads = $t
+[[fault]]
+at = 30.0
+kind = "site-down"
+site = "s2"
+[[fault]]
+at = 300.0
+kind = "site-up"
+site = "s2"
+EOF
+  ./target/release/diana sweep "$SWEEP_OUT/faulted-fed-t$t.toml" -j 1 \
+      --out "$SWEEP_OUT/faulted-t$t"
+done
+for f in faulted-fed_runs.csv faulted-fed_aggregate.csv faulted-fed.json; do
+  cmp "$SWEEP_OUT/faulted-t1/$f" "$SWEEP_OUT/faulted-t4/$f" \
+    || { echo "ci.sh: $f differs between sim.threads 1 and 4"; exit 1; }
+done
 
 echo "== federation 1-peer == central (CLI, bit-for-bit) =="
 ./target/release/diana run --preset uniform --jobs 40 --seed 11 \

@@ -12,7 +12,13 @@
 //! The `federated` shape is then re-run at `--sim-threads 2` and `4`
 //! (`federated-t2` / `federated-t4`) — the conservative-PDES scaling
 //! curve (events/s vs shard threads), asserted event-count-identical
-//! to the serial baseline on every sample.
+//! to the serial baseline on every sample. PR 9 widens the curve:
+//! `central-t2` / `central-t4` shard the plain flood (no federation)
+//! by contiguous site block, and `faulted-fed-t4` runs the federated
+//! flood through a site-down/up plan at 4 threads. Every parallel row
+//! also reports its window stats (windows drained, mean events per
+//! window) — the conservative-window efficiency the dynamic lookahead
+//! is supposed to buy.
 //!
 //! A final `streamed-flood` shape drives the bounded-memory pipeline:
 //! a diurnal arrival stream pulled lazily with spill + slot recycling
@@ -35,7 +41,8 @@ use common::{bench, black_box};
 use diana::config::{presets, ArrivalKind, GridConfig, SourceMode};
 use diana::coordinator::{generate_workload, run_simulation,
                          run_simulation_with};
-use diana::scenario::FaultPlan;
+use diana::coordinator::run_simulation_with_faults;
+use diana::scenario::{FaultEvent, FaultKind, FaultPlan};
 use diana::sim::{try_run_parallel, PdesOutcome};
 
 struct ShapeResult {
@@ -44,6 +51,10 @@ struct ShapeResult {
     events: u64,
     peak_live_jobs: usize,
     peak_heap_depth: usize,
+    /// Conservative windows drained (0 on serial rows).
+    windows: u64,
+    /// Shard events processed inside those windows.
+    window_events: u64,
 }
 
 fn small_cfg(smoke: bool) -> GridConfig {
@@ -108,15 +119,23 @@ fn write_json(path: &str, smoke: bool, shapes: &[ShapeResult]) {
     out.push_str(&format!("  \"smoke\": {smoke},\n"));
     out.push_str("  \"shapes\": [\n");
     for (i, s) in shapes.iter().enumerate() {
+        let mean_per_window = if s.windows > 0 {
+            s.window_events as f64 / s.windows as f64
+        } else {
+            0.0
+        };
         out.push_str(&format!(
             "    {{\"name\": \"{}\", \"events_per_s\": {:.1}, \
              \"events\": {}, \"peak_live_jobs\": {}, \
-             \"peak_heap_depth\": {}}}{}\n",
+             \"peak_heap_depth\": {}, \"windows\": {}, \
+             \"mean_events_per_window\": {:.1}}}{}\n",
             s.name,
             s.events_per_s,
             s.events,
             s.peak_live_jobs,
             s.peak_heap_depth,
+            s.windows,
+            mean_per_window,
             if i + 1 < shapes.len() { "," } else { "" }
         ));
     }
@@ -185,6 +204,8 @@ fn main() {
             events,
             peak_live_jobs: peak_live,
             peak_heap_depth: peak_heap,
+            windows: 0,
+            window_events: 0,
         });
     }
     // PDES scaling shape: the federated workload again, sharded one
@@ -207,8 +228,8 @@ fn main() {
         let subs = generate_workload(&probe);
         match try_run_parallel(&probe, subs, &FaultPlan::default()).unwrap() {
             PdesOutcome::Done(..) => {}
-            PdesOutcome::Declined(_) => {
-                panic!("federated bench shape declined the PDES path")
+            PdesOutcome::Declined { reason, .. } => {
+                panic!("federated bench shape declined the PDES path: {reason}")
             }
         }
     }
@@ -217,6 +238,8 @@ fn main() {
         cfg.sim.threads = threads;
         let subs = generate_workload(&cfg);
         let mut events = 0u64;
+        let mut windows = 0u64;
+        let mut window_events = 0u64;
         let r = bench(
             &format!("world {name:<9} jobs={}", cfg.workload.jobs),
             warmup,
@@ -229,14 +252,25 @@ fn main() {
                     report.events, serial_events,
                     "{name}: event count diverged from the serial baseline"
                 );
+                assert!(report.pdes_parallel, "{name}: fell back to serial");
                 // Merged across shards by the PDES assembly (the world's
                 // own counter only covers shard 0 here).
                 events = report.events;
+                windows = report.pdes_windows;
+                window_events = report.pdes_window_events;
                 black_box(&w);
             },
         );
         r.throughput(events as f64, "events");
         let events_per_s = events as f64 / (r.mean_ns() / 1e9);
+        println!(
+            "  └ {windows} windows, {:.1} shard events/window",
+            if windows > 0 {
+                window_events as f64 / windows as f64
+            } else {
+                0.0
+            }
+        );
         println!("world events/s ({name}): {events_per_s:.0}");
         results.push(ShapeResult {
             name,
@@ -246,6 +280,155 @@ fn main() {
             // serial shapes; report the scaling rows as curve-only.
             peak_live_jobs: 0,
             peak_heap_depth: 0,
+            windows,
+            window_events,
+        });
+    }
+    // Central scaling shape (PR 9): the plain flood — no federation at
+    // all — sharded by contiguous site block on 2 and 4 threads, with
+    // the single DIANA scheduler's placement rounds replayed at window
+    // barriers on every replica. The serial `flood` row above is the
+    // threads=1 baseline of this curve.
+    let flood_events = results
+        .iter()
+        .find(|r| r.name == "flood")
+        .map(|r| r.events)
+        .unwrap();
+    {
+        let mut probe = flood_cfg(smoke);
+        probe.sim.threads = 2;
+        let subs = generate_workload(&probe);
+        match try_run_parallel(&probe, subs, &FaultPlan::default()).unwrap() {
+            PdesOutcome::Done(..) => {}
+            PdesOutcome::Declined { reason, .. } => {
+                panic!("central bench shape declined the PDES path: {reason}")
+            }
+        }
+    }
+    for (name, threads) in [("central-t2", 2usize), ("central-t4", 4)] {
+        let mut cfg = flood_cfg(smoke);
+        cfg.sim.threads = threads;
+        let subs = generate_workload(&cfg);
+        let mut events = 0u64;
+        let mut windows = 0u64;
+        let mut window_events = 0u64;
+        let r = bench(
+            &format!("world {name:<9} jobs={}", cfg.workload.jobs),
+            warmup,
+            samples,
+            || {
+                let (w, report) =
+                    run_simulation_with(&cfg, subs.clone()).unwrap();
+                assert_eq!(report.jobs, cfg.workload.jobs, "{name}: dropped jobs");
+                assert_eq!(
+                    report.events, flood_events,
+                    "{name}: event count diverged from the serial baseline"
+                );
+                assert!(report.pdes_parallel, "{name}: fell back to serial");
+                events = report.events;
+                windows = report.pdes_windows;
+                window_events = report.pdes_window_events;
+                black_box(&w);
+            },
+        );
+        r.throughput(events as f64, "events");
+        let events_per_s = events as f64 / (r.mean_ns() / 1e9);
+        println!(
+            "  └ {windows} windows, {:.1} shard events/window",
+            if windows > 0 {
+                window_events as f64 / windows as f64
+            } else {
+                0.0
+            }
+        );
+        println!("world events/s ({name}): {events_per_s:.0}");
+        results.push(ShapeResult {
+            name,
+            events_per_s,
+            events,
+            peak_live_jobs: 0,
+            peak_heap_depth: 0,
+            windows,
+            window_events,
+        });
+    }
+    // Faulted federated scaling shape (PR 9): the federated flood
+    // through a site-lifecycle plan — s2 dies mid-flood with queued work
+    // and recovers later — at 4 threads. Site liveness is a replicated
+    // event, so the parallel run must process exactly the event count of
+    // its own serial faulted baseline (computed once below; the clean
+    // `federated` row is NOT the baseline here — faults change the
+    // stream).
+    {
+        let plan = FaultPlan {
+            events: vec![
+                FaultEvent {
+                    at: 60.0,
+                    kind: FaultKind::SiteDown { site: "s2".into() },
+                },
+                FaultEvent {
+                    at: 360.0,
+                    kind: FaultKind::SiteUp { site: "s2".into() },
+                },
+            ],
+        };
+        let base_cfg = federated_cfg(smoke);
+        let base_subs = generate_workload(&base_cfg);
+        let (bw, _) =
+            run_simulation_with_faults(&base_cfg, base_subs, &plan).unwrap();
+        let faulted_serial_events = bw.events_processed();
+        let mut cfg = federated_cfg(smoke);
+        cfg.sim.threads = 4;
+        let subs = generate_workload(&cfg);
+        let mut events = 0u64;
+        let mut windows = 0u64;
+        let mut window_events = 0u64;
+        let r = bench(
+            &format!("world faulted-fed-t4 jobs={}", cfg.workload.jobs),
+            warmup,
+            samples,
+            || {
+                let (w, report) =
+                    run_simulation_with_faults(&cfg, subs.clone(), &plan)
+                        .unwrap();
+                assert_eq!(
+                    report.jobs, cfg.workload.jobs,
+                    "faulted-fed-t4: dropped jobs"
+                );
+                assert_eq!(
+                    report.events, faulted_serial_events,
+                    "faulted-fed-t4: event count diverged from the serial \
+                     faulted baseline"
+                );
+                assert!(
+                    report.pdes_parallel,
+                    "faulted-fed-t4: fell back to serial"
+                );
+                events = report.events;
+                windows = report.pdes_windows;
+                window_events = report.pdes_window_events;
+                black_box(&w);
+            },
+        );
+        r.throughput(events as f64, "events");
+        let events_per_s = events as f64 / (r.mean_ns() / 1e9);
+        println!(
+            "  └ {windows} windows, {:.1} shard events/window",
+            if windows > 0 {
+                window_events as f64 / windows as f64
+            } else {
+                0.0
+            }
+        );
+        println!("world events/s (faulted-fed-t4): {events_per_s:.0}");
+        results.push(ShapeResult {
+            name: "faulted-fed-t4",
+            events_per_s,
+            events,
+            peak_live_jobs: 0,
+            peak_heap_depth: 0,
+            windows,
+            window_events,
         });
     }
     // Streamed-flood: the bounded-memory shape. The workload is pulled
@@ -303,6 +486,8 @@ fn main() {
             events,
             peak_live_jobs: peak_live,
             peak_heap_depth: peak_heap,
+            windows: 0,
+            window_events: 0,
         });
         std::fs::remove_dir_all(&spill).ok();
     }

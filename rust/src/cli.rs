@@ -29,10 +29,14 @@ USAGE:
 gossip state and delegate submissions (0 = classic central leader;
 1 reproduces the central run bit-for-bit). See docs/FEDERATION.md.
 
-`--sim-threads N` runs an eligible federated simulation as a
-conservative parallel DES — one event-queue shard per peer, merged at
-lookahead barriers — with bit-identical results to `--sim-threads 1`
-(the serial reference). See docs/PERFORMANCE.md.
+`--sim-threads N` runs an eligible simulation as a conservative
+parallel DES with bit-identical results to `--sim-threads 1` (the
+serial reference). Federated runs shard per peer; central runs shard
+by contiguous site block. Per-window lookahead is re-derived from the
+live link matrix, so link faults only narrow the windows of the pairs
+they touch, and site down/up faults replay as replicated events. Runs
+outside the envelope fall back to serial with a named decline reason.
+See docs/PERFORMANCE.md.
 
 `--source streamed` pulls the generated workload lazily (byte-identical
 to eager); `--arrival KIND` drives submissions from a stochastic

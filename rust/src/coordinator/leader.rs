@@ -67,6 +67,16 @@ pub struct RunReport {
     pub delegations: u64,
     /// DES events processed.
     pub events: u64,
+    /// Parallel-engine annotations (diagnostic only — never serialized
+    /// into sweep CSV/JSON, which stay schema-identical across thread
+    /// counts): did the conservative PDES run, how many windows did it
+    /// drain, how many shard events did those windows process, and —
+    /// when it fell back to serial — the named reason
+    /// ([`PdesDecline::reason`](crate::sim::PdesDecline::reason)).
+    pub pdes_parallel: bool,
+    pub pdes_windows: u64,
+    pub pdes_window_events: u64,
+    pub pdes_decline: Option<&'static str>,
 }
 
 impl RunReport {
@@ -102,6 +112,10 @@ impl RunReport {
             groups_whole: recorder.groups_whole,
             delegations: recorder.delegations,
             events,
+            pdes_parallel: false,
+            pdes_windows: 0,
+            pdes_window_events: 0,
+            pdes_decline: None,
         }
     }
 
@@ -154,6 +168,10 @@ impl RunReport {
             groups_whole: recorder.groups_whole,
             delegations: recorder.delegations,
             events,
+            pdes_parallel: false,
+            pdes_windows: 0,
+            pdes_window_events: 0,
+            pdes_decline: None,
         })
     }
 }
@@ -180,13 +198,32 @@ pub fn run_simulation(cfg: &GridConfig) -> Result<(World, RunReport)> {
 /// slots and sealed records stream to disk (see
 /// [`Recorder`](crate::metrics::Recorder)); the report is then rebuilt
 /// from the ordinal-order spill merge, byte-identical to the in-memory
-/// one. Always serial: the PDES shards by federation partition, which
-/// has no decomposition of a single serial refill chain — `sim::pdes`
-/// declines streaming configs for the same reason.
+/// one. With `--sim-threads N` an eligible streamed run takes the
+/// conservative PDES (`sim::pdes`): the coordinator owns the refill
+/// chain and admits each pulled submission at a window-aligned
+/// barrier, bit-identical to this serial path. Spill runs stay serial
+/// (one on-disk recorder cannot be sharded) — see
+/// [`PdesDecline`](crate::sim::PdesDecline) for the full decline list.
 pub fn run_simulation_streamed(
     cfg: &GridConfig,
     faults: &FaultPlan,
 ) -> Result<(World, RunReport)> {
+    let mut pdes_decline = None;
+    if cfg.sim.threads > 1 {
+        match crate::sim::try_run_parallel_streamed(cfg, faults)? {
+            crate::sim::PdesStreamOutcome::Done(world, report) => {
+                return Ok((*world, report));
+            }
+            crate::sim::PdesStreamOutcome::Declined(reason) => {
+                crate::info!(
+                    "pdes declined (streamed, --sim-threads {}): {reason}; \
+                     running serial",
+                    cfg.sim.threads
+                );
+                pdes_decline = Some(reason.reason());
+            }
+        }
+    }
     let source = source_from_config(cfg)?.ok_or_else(|| {
         crate::err!(
             "run_simulation_streamed needs a streaming workload source \
@@ -210,13 +247,14 @@ pub fn run_simulation_streamed(
         world.enable_spill(&cfg.sim.spill_dir)?;
     }
     world.run()?;
-    let report = if spilling {
+    let mut report = if spilling {
         let policy = world.policy_name();
         let events = world.events_processed();
         RunReport::from_spill(policy, &mut world.recorder, events)?
     } else {
         RunReport::from_world(&world)
     };
+    report.pdes_decline = pdes_decline;
     Ok((world, report))
 }
 
@@ -236,16 +274,26 @@ pub fn run_simulation_with_faults(
     faults: &FaultPlan,
 ) -> Result<(World, RunReport)> {
     let mut subs = subs;
-    // `--sim-threads N` / `[sim] threads`: run an eligible federated
-    // simulation as a conservative PDES (one shard per peer — see
-    // `sim::pdes`). Ineligible configs hand the workload back and fall
+    // `--sim-threads N` / `[sim] threads`: run an eligible simulation
+    // as a conservative PDES — one shard per peer under federation, one
+    // per contiguous site block centrally (see `sim::pdes`). Declined
+    // configs hand the workload back with a named reason and fall
     // through to the serial reference path, bit-identical to threads=1.
+    let mut pdes_decline = None;
     if cfg.sim.threads > 1 {
         match crate::sim::try_run_parallel(cfg, subs, faults)? {
             crate::sim::PdesOutcome::Done(world, report) => {
                 return Ok((*world, report));
             }
-            crate::sim::PdesOutcome::Declined(returned) => subs = returned,
+            crate::sim::PdesOutcome::Declined { subs: returned, reason } => {
+                crate::info!(
+                    "pdes declined (--sim-threads {}): {reason}; running \
+                     serial",
+                    cfg.sim.threads
+                );
+                pdes_decline = Some(reason.reason());
+                subs = returned;
+            }
         }
     }
     let engine_for_picker = make_engine(cfg.scheduler.engine)?;
@@ -260,7 +308,8 @@ pub fn run_simulation_with_faults(
     world.load_faults(faults)?;
     world.load_submissions(subs);
     world.run()?;
-    let report = RunReport::from_world(&world);
+    let mut report = RunReport::from_world(&world);
+    report.pdes_decline = pdes_decline;
     Ok((world, report))
 }
 

@@ -156,10 +156,23 @@ impl Recorder {
     }
 
     pub fn on_export(&mut self, from: usize, to: usize, t: f64) {
+        self.on_export_src(from, t);
+        self.on_import_dst(to, t);
+    }
+
+    /// Source half of a migration: the counter plus the exporting
+    /// site's series. Split out so a PDES cross-shard move can charge
+    /// each half to the recorder that owns the respective site series
+    /// (series have exactly one writer under the partition protocol).
+    pub(crate) fn on_export_src(&mut self, from: usize, t: f64) {
         self.migrations += 1;
         if from < self.sites.len() {
             self.sites[from].exported.record(t, 1.0);
         }
+    }
+
+    /// Destination half of a migration (see [`Recorder::on_export_src`]).
+    pub(crate) fn on_import_dst(&mut self, to: usize, t: f64) {
         if to < self.sites.len() {
             self.sites[to].imported.record(t, 1.0);
         }

@@ -56,9 +56,42 @@ pub fn run_one(run: &RunSpec, faults: &FaultPlan) -> Result<RunResult> {
 
 /// Run the whole sweep on up to `threads` workers and aggregate.
 pub fn run_sweep(spec: &SweepSpec, threads: usize) -> Result<SweepReport> {
-    let runs = spec.expand()?;
+    let mut runs = spec.expand()?;
+    let workers = threads.clamp(1, runs.len().max(1));
+    let cores = std::thread::available_parallelism().map_or(1, |n| n.get());
+    let mut capped = None;
+    for run in runs.iter_mut() {
+        let eff = effective_sim_threads(run.cfg.sim.threads, workers, cores);
+        if eff != run.cfg.sim.threads {
+            capped = Some((run.cfg.sim.threads, eff));
+            run.cfg.sim.threads = eff;
+        }
+    }
+    if let Some((want, eff)) = capped {
+        crate::warn!(
+            "sweep -j {workers} x sim.threads {want} oversubscribes \
+             {cores} cores; capping sim threads to {eff}"
+        );
+    }
     let results = run_matrix(&runs, &spec.faults, threads, run_one)?;
     Ok(SweepReport::build(spec, results))
+}
+
+/// `-j workers` × `[sim] threads` would run `workers × threads` hot
+/// threads; cap each run's sim threads to `max(1, cores / workers)`.
+/// Results are unchanged by the cap — the PDES is bit-identical for
+/// every thread count, including the serial fallback at 1 — only
+/// scheduling pressure is. Serial configs (`threads <= 1`) pass
+/// through untouched.
+pub fn effective_sim_threads(
+    cfg_threads: usize,
+    workers: usize,
+    cores: usize,
+) -> usize {
+    if cfg_threads <= 1 {
+        return cfg_threads;
+    }
+    cfg_threads.min((cores / workers.max(1)).max(1))
 }
 
 /// The run's matrix position for error messages: `index [k=v, ...]`.
@@ -227,6 +260,23 @@ mod tests {
             );
             assert_eq!(a.migrations, b.migrations, "seed {seed}");
         }
+    }
+
+    #[test]
+    fn oversubscription_guard_caps_sim_threads() {
+        // 4 workers on 16 cores leave 4 cores per run.
+        assert_eq!(effective_sim_threads(8, 4, 16), 4);
+        // More workers than cores: every run drops to serial.
+        assert_eq!(effective_sim_threads(8, 32, 16), 1);
+        // Room to spare: the configured count stands.
+        assert_eq!(effective_sim_threads(2, 1, 16), 2);
+        assert_eq!(effective_sim_threads(8, 1, 4), 4);
+        // Serial configs pass through untouched (0 and 1 both mean
+        // "no PDES" to the leader).
+        assert_eq!(effective_sim_threads(1, 8, 16), 1);
+        assert_eq!(effective_sim_threads(0, 8, 16), 0);
+        // Degenerate inputs never panic or return 0 for a parallel ask.
+        assert_eq!(effective_sim_threads(4, 0, 0), 1);
     }
 
     #[test]

@@ -104,6 +104,22 @@ impl GridStateCache {
         }
     }
 
+    /// Overwrite every row from an externally assembled snapshot set
+    /// (the PDES central-mode barrier: each replica adopts the global
+    /// owner-row assembly before a replicated scheduling round). Clears
+    /// all dirty state — the rows ARE ground truth at the barrier — and
+    /// leaves the belief epoch alone (callers bump it when beliefs
+    /// moved, exactly as on the serial path).
+    pub(crate) fn seed(&mut self, rows: &[SiteSnapshot]) {
+        debug_assert_eq!(rows.len(), self.snaps.len());
+        self.snaps.copy_from_slice(rows);
+        self.q_total = rows.iter().map(|r| r.queue_len).sum();
+        for d in &mut self.dirty {
+            *d = false;
+        }
+        self.pending.clear();
+    }
+
     /// The current rows. Only valid after [`GridStateCache::sync`]; a
     /// debug build asserts no row is pending.
     pub fn snaps(&self) -> &[SiteSnapshot] {
@@ -183,6 +199,28 @@ mod tests {
         assert_eq!(calls, 2, "paranoid sync refreshes every row");
         assert_ne!(c.epoch(), e1);
         assert_eq!(c.q_total(), 11); // 5 + 6
+    }
+
+    #[test]
+    fn seed_overwrites_rows_and_clears_dirty_state() {
+        let mut c = GridStateCache::new(3, false);
+        c.sync(|s| snap(s, true));
+        c.touch(0);
+        c.touch(2);
+        let e = c.epoch();
+        let rows = [snap(4, true), snap(5, false), snap(6, true)];
+        c.seed(&rows);
+        // Dirty marks are gone: a sync refreshes nothing and the seeded
+        // rows stand as ground truth.
+        let mut called = false;
+        c.sync(|_| {
+            called = true;
+            snap(0, true)
+        });
+        assert!(!called, "seed must clear pending dirty rows");
+        assert_eq!(c.q_total(), 15); // 4 + 5 + 6
+        assert!(!c.snaps()[1].alive);
+        assert_eq!(c.epoch(), e, "seed leaves the belief epoch alone");
     }
 
     #[test]

@@ -9,6 +9,9 @@ pub mod world;
 
 pub use engine::{EventQueue, SidePool, SimTime};
 pub use grid_cache::GridStateCache;
-pub use pdes::{try_run_parallel, Mailbox, PdesOutcome};
+pub use pdes::{
+    pdes_lookahead_matrix, try_run_parallel, try_run_parallel_streamed,
+    Mailbox, PdesDecline, PdesOutcome, PdesStreamOutcome,
+};
 pub use site::{LocalEntry, SiteSim};
 pub use world::World;

@@ -1,86 +1,113 @@
-//! Conservative parallel discrete-event simulation of the peer
-//! federation: one event-queue/job-store shard per peer, synchronized
-//! at lookahead barriers (`[sim] threads` / `--sim-threads N`).
+//! Conservative parallel discrete-event simulation (`[sim] threads` /
+//! `--sim-threads N`): the grid is split into shards that advance
+//! concurrently between lookahead barriers, bit-identical to the
+//! serial reference for every eligible scenario.
+//!
+//! # Sharding keys
+//!
+//! Two decompositions share one engine:
+//!
+//! * **Federated** (`federation.peers >= 2`): one shard per peer, the
+//!   natural key — each shard is a full `World` replica authoritative
+//!   for its partition's sites, meta queues, home submissions and
+//!   recorder rows. Admissions land on the home shard; delegation
+//!   `Forward`s and homing `Deliver`s cross shards as messages.
+//! * **Central** (`federation.peers < 2`): contiguous site blocks,
+//!   one per worker thread. There is no per-shard scheduler to split —
+//!   the single DIANA picker's cost rounds are **replayed on every
+//!   replica** at admission barriers against one seeded global grid
+//!   view ([`World::pdes_seed_cache`]), so every replica computes the
+//!   identical placement and each site's owner alone feeds its queues
+//!   (the `pdes_owned` mask). Only `Deliver`s cross shards.
 //!
 //! # Protocol
 //!
-//! Each federation peer runs as a full `World` replica (identical
-//! config and seeds ⇒ bit-identical topology, monitor RNG stream,
-//! catalog and federation tables on every shard) that is authoritative
-//! only for its own partition: its sites, meta queues, home submissions
-//! and recorder rows. Grid-global services — monitor sweeps, gossip
-//! exchanges, migration checks and fault injection — run on a small
-//! coordinator event queue and are replayed identically on every
-//! replica, exactly where the serial loop would have processed them.
-//!
-//! Between coordinator events the shards advance concurrently through
-//! *conservative windows*: with `T_min` the earliest pending shard
-//! event and `L` the lookahead (the cheapest possible cross-peer
-//! latency, derived below), every event strictly before
+//! Grid-global actions — submissions and streamed source refills,
+//! monitor sweeps, gossip exchanges, migration checks, fault
+//! injection — run on a small coordinator event queue and are replayed
+//! exactly where the serial loop would have processed them. Between
+//! coordinator events the shards drain *conservative windows* in
+//! parallel (scoped threads over shard chunks). With `t_next(q)` shard
+//! `q`'s earliest pending event and `L[q][p]` the per-pair lookahead
+//! matrix (below), shard `p` may pop every event strictly before
 //!
 //! ```text
-//! window_end = min(t_fault, t_service, T_min + L)
+//! W(p) = min(t_fault, t_service, min over q != p of t_next(q) + L[q][p])
 //! ```
 //!
-//! is causally independent of any message another shard could still
-//! send — a cross-peer event generated at `t ≥ T_min` arrives at
-//! `t + latency ≥ T_min + L ≥ window_end`. Shards therefore drain
-//! their windows in parallel (scoped threads over shard chunks, the
-//! `scenario::runner` worker-pool pattern) without ever seeing a
-//! straggler from the past.
+//! — any message from `q` is generated at `t >= t_next(q)` and arrives
+//! at `t + latency >= t_next(q) + L[q][p] >= W(p)`. Cross-shard events
+//! never move mid-window: they sit in the sender's heap until the next
+//! barrier, where they are extracted, merged deterministically on
+//! `(time, sender_peer, sender_seq)` (see [`Mailbox`]) and injected at
+//! their destinations, fixing receiver-side sequence numbers
+//! independently of thread count.
 //!
-//! At each barrier the cross-shard events still pending in the source
-//! heaps — `Forward` batches (delegation always targets a remote peer)
-//! and `Deliver`s homing to another partition — are extracted as
-//! timestamped messages, merged deterministically on
-//! `(time, sender_peer, sender_seq)` (see [`Mailbox`]), and injected
-//! into their destination shards. Merge order fixes the receiver-side
-//! sequence numbers, so the pop order among simultaneous arrivals does
-//! not depend on thread count or OS scheduling.
+//! # Dynamic per-pair lookahead
 //!
-//! # Lookahead derivation
+//! `L[q][p]` (row-major `n × n`, `+∞` on the diagonal and for pairs
+//! that cannot exchange events) is the cheapest latency any `q → p`
+//! message can carry under the **current** link matrix:
 //!
-//! Only two event kinds cross shards, and both carry a topology-priced
-//! latency:
+//! * forward term (federated only): `2·rtt(gw_q, gw_p) +
+//!   transfer(gw_q, gw_p, CTRL_MB_PER_JOB)` over the gateway link;
+//! * deliver term (both modes): `min` over `a ∈ sites(q), b ∈
+//!   sites(p)` of `transfer(a, b, min_out_mb)`, with `min_out_mb` the
+//!   smallest job output seen so far.
 //!
-//! * delegation forwards: `2·rtt(gw_a, gw_b) + transfer(gw_a, gw_b,
-//!   CTRL_MB_PER_JOB · n_jobs)` over gateway links — minimized over
-//!   ordered peer pairs at `n_jobs = 1` (transfer time is monotone in
-//!   payload);
-//! * output delivery home: `transfer(exec_site, submit_site, out_mb)`
-//!   — minimized over cross-partition site pairs at the smallest
-//!   `out_mb` in the loaded workload.
+//! The matrix is re-derived after every replicated topology fault
+//! (degrade / partition / heal), so a degraded link shrinks only the
+//! windows of the shard pairs it actually prices — every other pair
+//! keeps its wide window. Streamed sources fold each submission's
+//! outputs into `min_out_mb` **at its refill barrier**, which is
+//! retroactively safe: no event of that submission exists before its
+//! admission. A matrix entry collapsing to zero mid-run (a zero-size
+//! output crossing shards) is an error directing the user back to
+//! `--sim-threads 1`; eager runs decline it up front.
 //!
-//! `L` is the minimum of the two, recomputed after every replicated
-//! topology fault (degrade/partition/heal can only tighten or relax
-//! link prices). A non-positive `L` declines the parallel path up
-//! front; a fault collapsing it mid-run is an error directing the user
-//! back to `--sim-threads 1`.
+//! # Replicated site-lifecycle faults
+//!
+//! `SiteDown` / `SiteUp` replay on every replica as deterministic
+//! shared-state mutations (liveness is a scheduling input everywhere);
+//! only the owner shard schedules the recovery `Dispatch` kick, so
+//! processed-event counts match the serial run. A dead site's stranded
+//! queue is rescued by the coordinator's migration sweep, whose §IX
+//! escape hatch may move jobs across shards at the barrier
+//! (`World::pdes_migrate_group`). Peer-lifecycle faults stay outside
+//! the envelope ([`PdesDecline::PeerFaultPlan`]): a dead home peer
+//! re-routes admissions into another shard's partition, splitting job
+//! rows from execution in a way the home-row protocol does not cover.
 //!
 //! # Determinism
 //!
-//! `--sim-threads 1` (or any ineligible config) runs the unmodified
+//! `--sim-threads 1` (or any declined config) runs the unmodified
 //! serial path, which stays the reference oracle; `--sim-threads N`
 //! for any `N` produces byte-identical reports because every source of
 //! order is derived from simulation state, never from execution
 //! interleaving. Coordinator-vs-shard ties at equal timestamps follow
 //! the serial sequence discipline: faults (lowest serial seqs — loaded
-//! before submissions) win every tie; services win ties against shard
-//! events because the only shard events that land *exactly* on a
-//! service tick are the ones a same-tick barrier service just created
-//! (the migration sweep's `Dispatch(t)`), which carry serially higher
-//! seqs than every service armed before the barrier. Remaining
-//! collision classes — a pre-existing shard event (or two derived
-//! events from different shards) at the exact same float timestamp —
-//! sit on a measure-zero set of the continuous event-time distribution
-//! and are documented in `docs/PERFORMANCE.md`; the equivalence suite
-//! (`tests/pdes_equivalence.rs`) pins the committed scenarios.
+//! before submissions) win every tie; coordinator events win ties
+//! against shard events because eager `Submit`s and the streamed
+//! refill chain carry load-time (low) serial seqs, while the only
+//! shard events landing *exactly* on a barrier tick are ones a
+//! same-tick barrier action just created (an admission's `Dispatch(t)`,
+//! the migration sweep's kicks) — serially higher seqs than anything
+//! armed before the barrier. Remaining collision classes — a
+//! pre-existing shard event at the exact same float timestamp as a
+//! barrier — sit on a measure-zero set of the continuous event-time
+//! distribution and are documented in `docs/PERFORMANCE.md`; the
+//! equivalence suite (`tests/pdes_equivalence.rs`) pins the committed
+//! scenarios.
 //!
 //! Known replica divergences, none observable in reports: discovery
 //! heartbeats are skipped (the registry feeds no scheduling decision
-//! or serialized output), shard catalogs accumulate only the datasets
-//! their jobs referenced, and `World::group_results` is concatenated
-//! in peer order rather than completion order (not serialized).
+//! or serialized output); shard catalogs accumulate only the datasets
+//! their jobs referenced; central replicas replay every admission, so
+//! their private `submitted_jobs` / aggregator / group counters run
+//! ahead of their partition's share (the merge takes each figure from
+//! its one authoritative writer); `World::group_results` is
+//! concatenated in peer order rather than completion order (not
+//! serialized).
 
 use crate::config::{EngineKind, GridConfig, Policy};
 use crate::coordinator::RunReport;
@@ -88,12 +115,92 @@ use crate::cost::RustEngine;
 use crate::federation::Partition;
 use crate::job::{JobId, JobIdx};
 use crate::metrics::Recorder;
+use crate::network::Topology;
 use crate::scenario::{FaultPlan, ResolvedFault};
 use crate::scheduler::{make_picker, SiteSnapshot};
 use crate::sim::engine::EventQueue;
 use crate::sim::world::{PdesMsg, World, CTRL_MB_PER_JOB, RECORDER_BUCKET_S};
 use crate::util::{DianaError, Result};
-use crate::workload::Submission;
+use crate::workload::{Submission, WorkloadSource};
+
+/// Why a run is outside the parallel envelope. Every decline is named
+/// — `coordinator::leader` logs the reason and stamps it into the
+/// `RunReport` — and the remaining-decline tests assert the exact
+/// variant, so an envelope regression cannot hide behind a silent
+/// serial fallback.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PdesDecline {
+    /// `Policy::Random` holds a PRNG whose draw order is the serial
+    /// event order; replicas would diverge from the reference stream.
+    RandomPolicy,
+    /// The XLA cost engine holds a thread-bound PJRT client; the
+    /// `ShardChunk` Send justification requires the pure-Rust engine.
+    XlaEngine,
+    /// No submissions (or an empty one) — nothing to shard.
+    EmptyWorkload,
+    /// A submission's jobs span several submit sites; the home-shard
+    /// protocol keys every row off one submitting client.
+    MixedHomeSubmission,
+    /// A zero-latency cross-shard path (e.g. a zero-size output)
+    /// leaves no conservative window.
+    ZeroLookahead,
+    /// Spill mode serializes completed rows through one on-disk
+    /// recorder; shards cannot share it.
+    SpillRun,
+    /// Central runs replay placement at barriers only; a DAG release
+    /// fires mid-window on one replica with an unseeded grid view.
+    DagDeps,
+    /// Fewer than two shards: `threads < 2`, or a central run with
+    /// fewer than two sites to block-partition.
+    SingleShard,
+    /// `paranoid_rebuild` re-dirties every cached row on each sync,
+    /// clobbering the seeded barrier rows central replicas price
+    /// against.
+    ParanoidCentral,
+    /// Peer-down/up faults re-route admissions across partitions,
+    /// splitting a submission's rows from its execution shard.
+    PeerFaultPlan,
+}
+
+impl PdesDecline {
+    /// Short operator-facing reason, used in run logs and reports.
+    pub fn reason(self) -> &'static str {
+        match self {
+            PdesDecline::RandomPolicy => {
+                "random policy holds an order-sensitive PRNG"
+            }
+            PdesDecline::XlaEngine => "XLA cost engine is thread-bound",
+            PdesDecline::EmptyWorkload => "no submissions to shard",
+            PdesDecline::MixedHomeSubmission => {
+                "a submission spans multiple submit sites"
+            }
+            PdesDecline::ZeroLookahead => {
+                "a zero-cost cross-shard path leaves no conservative window"
+            }
+            PdesDecline::SpillRun => {
+                "spill mode serializes through one on-disk recorder"
+            }
+            PdesDecline::DagDeps => {
+                "central DAG releases fire mid-window, off the barrier"
+            }
+            PdesDecline::SingleShard => {
+                "fewer than two shards (threads or sites)"
+            }
+            PdesDecline::ParanoidCentral => {
+                "paranoid rebuild clobbers seeded barrier rows"
+            }
+            PdesDecline::PeerFaultPlan => {
+                "peer-lifecycle faults re-route admissions across shards"
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for PdesDecline {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.reason())
+    }
+}
 
 /// What `try_run_parallel` did with the run.
 pub enum PdesOutcome {
@@ -103,8 +210,19 @@ pub enum PdesOutcome {
     Done(Box<World>, RunReport),
     /// The config or workload is outside the parallel envelope; the
     /// untouched submissions come back so the caller can run the serial
-    /// reference path.
-    Declined(Vec<Submission>),
+    /// reference path, with the named reason for the run log.
+    Declined { subs: Vec<Submission>, reason: PdesDecline },
+}
+
+/// What `try_run_parallel_streamed` did with the run. The streamed
+/// entry builds its own source *after* the eligibility gates, so a
+/// decline never hands back a partially consumed stream — the caller
+/// constructs a fresh source for the serial path.
+pub enum PdesStreamOutcome {
+    /// The parallel engine ran the stream to completion.
+    Done(Box<World>, RunReport),
+    /// Outside the envelope; no source was pulled.
+    Declined(PdesDecline),
 }
 
 /// Deterministic cross-shard message merge: barriers collect
@@ -167,15 +285,15 @@ impl<T> Mailbox<T> {
 /// `World` is not `Send` in general: its `Box<dyn SitePicker>` /
 /// `Box<dyn CostEngine>` may hold the XLA backend's PJRT client (an
 /// `Rc` internally — see `scheduler::traits`). The parallel gate
-/// ([`eligible`]) is what makes shipping a shard across a scoped join
-/// sound here.
+/// ([`shard_mode`]) is what makes shipping a shard across a scoped
+/// join sound here.
 struct ShardChunk<'a>(&'a mut [World]);
 
 // SAFETY: every `World` reaching `drain_parallel` was built by
 // `build_shard`, which instantiates both trait objects from
 // `RustEngine::new()`-backed concrete types (`RustEngine` and the
 // pickers `make_picker` returns for it) — plain owned data, no `Rc`,
-// `RefCell` or raw pointers anywhere in their reach — and `eligible`
+// `RefCell` or raw pointers anywhere in their reach — and `shard_mode`
 // guarantees the engine resolves to the Rust backend (an `Auto` config
 // that would pick XLA declines). Every other `World` field is owned
 // `std` data. The wrapper exists only for the duration of one scoped
@@ -183,121 +301,91 @@ struct ShardChunk<'a>(&'a mut [World]);
 // `chunks_mut`.
 unsafe impl Send for ShardChunk<'_> {}
 
-/// One coordinator service event. Faults live in a separate sorted
-/// list (they are known up front and never re-arm); keeping services
-/// in an `EventQueue` reproduces the serial heap's seq discipline for
-/// equal-time service collisions — e.g. the bootstrap `Gossip` seq
-/// predating the first `Monitor` re-arm, which decides the t=60 order.
+/// One coordinator event. Faults live in a separate sorted list (they
+/// are known up front and never re-arm); keeping everything else in an
+/// `EventQueue` reproduces the serial heap's seq discipline for
+/// equal-time collisions — eager `Submit`s and the streamed refill
+/// chain get load-time (low) seqs exactly like the serial queue, and
+/// the bootstrap `Gossip` seq predates the first `Monitor` re-arm.
 #[derive(Clone, Copy, Debug)]
 enum CoordEv {
+    /// Admit the indexed eager submission at its arrival barrier.
+    Submit(u32),
+    /// Admit the pulled-ahead streamed submission and pull the next.
+    SourceRefill,
     Monitor,
     MigrationCheck,
     Gossip,
 }
 
-/// The sharded simulation: per-peer `World` replicas plus the
-/// coordinator state driving windows and barriers. Re-runnable like
-/// the serial `World` (load more, run again) so steady-state floods
-/// can pin buffer reuse across rounds.
-struct ShardedWorld {
-    worlds: Vec<World>,
-    partition: Partition,
-    /// Worker threads for window drains (≤ shard count).
-    threads: usize,
-    coord: EventQueue<CoordEv>,
-    faults: Vec<(f64, ResolvedFault)>,
-    next_fault: usize,
-    /// Conservative lookahead `L` (see module docs); +∞ until a
-    /// workload is loaded.
-    lookahead: f64,
-    /// Smallest `out_mb` across every job ever loaded — the deliver
-    /// term of `L`.
+/// Fill `out` with the row-major `n_peers × n_peers` lookahead matrix
+/// for the current topology: `out[q·n + p]` bounds `q → p` messages
+/// (module docs), `+∞` on the diagonal and for pairs with no finite
+/// cross-event class.
+fn lookahead_matrix_into(
+    topo: &Topology,
+    part: &Partition,
+    fed_mode: bool,
     min_out_mb: f64,
-    services_started: bool,
-    /// Scratch: assembled global site rows (gossip / migration input).
-    global: Vec<SiteSnapshot>,
-    /// Cross-shard messages in flight at a barrier.
-    mailbox: Mailbox<PdesMsg>,
-    /// Scratch for per-shard extraction.
-    extract: Vec<(f64, u64, PdesMsg)>,
-    /// `(job id, submit site)` in serial submission order — rank `r`
-    /// here is the serial run's `JobIdx(r)`, the recorder-merge key.
-    job_order: Vec<(JobId, usize)>,
-}
-
-fn build_shard(cfg: &GridConfig) -> World {
-    let picker = make_picker(
-        cfg.scheduler.policy,
-        Box::new(RustEngine::new()),
-        &cfg.scheduler,
-        cfg.seed,
-    );
-    World::new(cfg.clone(), picker, Box::new(RustEngine::new()))
-}
-
-/// The minimum latency any cross-shard event can carry under the
-/// current topology (module docs: forward term over gateway pairs,
-/// deliver term over cross-partition site pairs at `min_out_mb`).
-fn compute_lookahead(w: &World, part: &Partition, min_out_mb: f64) -> f64 {
-    let topo = &w.topo;
-    let n_peers = part.n_peers();
-    let mut l = f64::INFINITY;
-    for p in 0..n_peers {
-        for q in 0..n_peers {
-            if p == q {
+    out: &mut Vec<f64>,
+) {
+    let n = part.n_peers();
+    out.clear();
+    out.resize(n * n, f64::INFINITY);
+    for q in 0..n {
+        for p in 0..n {
+            if q == p {
                 continue;
             }
-            let a = part.gateway(p);
-            let b = part.gateway(q);
-            let link = topo.link(a, b);
-            l = l.min(
-                2.0 * link.rtt_ms / 1000.0
-                    + topo.transfer_seconds(a, b, CTRL_MB_PER_JOB),
-            );
-        }
-    }
-    if min_out_mb.is_finite() {
-        for a in 0..topo.n_sites() {
-            for b in 0..topo.n_sites() {
-                if part.peer_of(a) != part.peer_of(b) {
-                    l = l.min(topo.transfer_seconds(a, b, min_out_mb));
+            let mut l = f64::INFINITY;
+            if fed_mode {
+                let a = part.gateway(q);
+                let b = part.gateway(p);
+                let link = topo.link(a, b);
+                l = 2.0 * link.rtt_ms / 1000.0
+                    + topo.transfer_seconds(a, b, CTRL_MB_PER_JOB);
+            }
+            if min_out_mb.is_finite() {
+                for &a in part.sites_of(q) {
+                    for &b in part.sites_of(p) {
+                        l = l.min(topo.transfer_seconds(a, b, min_out_mb));
+                    }
                 }
             }
+            out[q * n + p] = l;
         }
     }
-    l
 }
 
-/// Is this run inside the parallel envelope? Anything `false` here
-/// silently runs the bit-identical serial path instead.
-fn eligible(
+/// The per-pair conservative lookahead matrix for `topo` under
+/// `part` — public for the property suite, which brute-force checks it
+/// against mutated topologies (`tests/prop.rs`).
+pub fn pdes_lookahead_matrix(
+    topo: &Topology,
+    part: &Partition,
+    fed_mode: bool,
+    min_out_mb: f64,
+) -> Vec<f64> {
+    let mut m = Vec::new();
+    lookahead_matrix_into(topo, part, fed_mode, min_out_mb, &mut m);
+    m
+}
+
+/// Pick the sharding decomposition for `cfg`, or name why there is
+/// none. Federated runs shard by peer (the partition must equal
+/// `Federation::from_config`'s — both call `Partition::contiguous`
+/// with the clamped peer count); central runs shard by contiguous site
+/// block, one per worker thread.
+fn shard_mode(
     cfg: &GridConfig,
-    subs: &[Submission],
     faults: &[(f64, ResolvedFault)],
-) -> bool {
-    // Streaming sources feed the DES through a serial SourceRefill
-    // chain (one pull of lookahead, optional slab recycling/spill) —
-    // there is no per-shard decomposition of a lazily produced
-    // workload. Streamed runs always take the serial path.
-    if cfg.workload.source.is_streaming() {
-        return false;
-    }
-    // Multiple live peers: one shard per peer is the decomposition.
+) -> std::result::Result<(Partition, bool), PdesDecline> {
     if cfg.sim.threads < 2 {
-        return false;
+        return Err(PdesDecline::SingleShard);
     }
-    if cfg.federation.peers == 0
-        || cfg.federation.peers.min(cfg.sites.len()) < 2
-    {
-        return false;
-    }
-    // RandomPick holds a PRNG whose draw order is the serial event
-    // order; replicas would diverge from the reference stream.
     if cfg.scheduler.policy == Policy::Random {
-        return false;
+        return Err(PdesDecline::RandomPolicy);
     }
-    // The `ShardChunk` Send justification requires the pure-Rust cost
-    // engine (an XLA engine holds a thread-bound PJRT client).
     let rust_engine = match cfg.scheduler.engine {
         EngineKind::Rust => true,
         EngineKind::Xla => false,
@@ -307,47 +395,72 @@ fn eligible(
         }
     };
     if !rust_engine {
-        return false;
+        return Err(PdesDecline::XlaEngine);
     }
+    if faults.iter().any(|(_, f)| {
+        matches!(f, ResolvedFault::PeerDown(_) | ResolvedFault::PeerUp(_))
+    }) {
+        return Err(PdesDecline::PeerFaultPlan);
+    }
+    let n_sites = cfg.sites.len();
+    let eff_peers = cfg.federation.peers.min(n_sites);
+    if cfg.federation.peers > 0 && eff_peers >= 2 {
+        Ok((Partition::contiguous(n_sites, eff_peers), true))
+    } else {
+        // Central (peers == 0) and the degenerate 1-peer federation —
+        // bit-identical to central by construction — shard by site
+        // block.
+        if n_sites < 2 {
+            return Err(PdesDecline::SingleShard);
+        }
+        if cfg.paranoid_rebuild {
+            return Err(PdesDecline::ParanoidCentral);
+        }
+        Ok((
+            Partition::contiguous(n_sites, cfg.sim.threads.min(n_sites)),
+            false,
+        ))
+    }
+}
+
+/// Eager-workload gates that need the materialized submissions.
+fn eager_eligible(
+    subs: &[Submission],
+    fed_mode: bool,
+) -> std::result::Result<(), PdesDecline> {
     if subs.is_empty() || subs.iter().any(|s| s.jobs.is_empty()) {
-        return false;
+        return Err(PdesDecline::EmptyWorkload);
     }
-    // One home peer per submission: the generator submits each bulk
-    // from a single client site, and the shard protocol (home recorder
-    // rows, owner-only site series) depends on it. Defensive for
-    // programmatically built workloads.
+    // One submit site per submission: the generator submits each bulk
+    // from a single client site, and both decompositions key on it
+    // (home shard under federation, replicated-pick owner centrally).
     if subs.iter().any(|s| {
         let home = s.jobs[0].submit_site;
         s.jobs.iter().any(|j| j.submit_site != home)
     }) {
-        return false;
+        return Err(PdesDecline::MixedHomeSubmission);
     }
-    // Topology-class faults replicate cleanly; site/peer lifecycle
-    // faults would re-route submissions and wake the §IX dead-site
-    // escape hatch, whose polling crosses partitions.
-    faults.iter().all(|(_, f)| {
-        matches!(
-            f,
-            ResolvedFault::LinkDegrade { .. }
-                | ResolvedFault::Partition { .. }
-                | ResolvedFault::Heal
-                | ResolvedFault::MonitorBlackout { .. }
-        )
-    })
+    if !fed_mode && subs.iter().any(|s| !s.deps.is_empty()) {
+        return Err(PdesDecline::DagDeps);
+    }
+    Ok(())
 }
 
-/// Drain one conservative window on every shard, in parallel chunks.
-/// Chunk boundaries depend only on shard count and `threads`, never on
-/// execution order. Worker panics resume on the caller; worker errors
-/// surface as the first shard's error in index order.
+/// Drain one conservative window on every shard, in parallel chunks,
+/// each shard to its **own** bound (`ends[p]` — the per-pair matrix
+/// makes windows asymmetric). Chunk boundaries depend only on shard
+/// count and `threads`, never on execution order. Worker panics resume
+/// on the caller; worker errors surface as the first shard's error in
+/// index order.
 fn drain_parallel(
     worlds: &mut [World],
-    window_end: f64,
+    ends: &[f64],
     threads: usize,
 ) -> Result<()> {
+    debug_assert_eq!(worlds.len(), ends.len());
     if threads <= 1 || worlds.len() <= 1 {
-        for w in worlds.iter_mut() {
-            w.pdes_drain_window(window_end)?;
+        for (w, &end) in worlds.iter_mut().zip(ends) {
+            w.pdes_drain_window(end)?;
         }
         return Ok(());
     }
@@ -355,12 +468,13 @@ fn drain_parallel(
     let mut first_err: Option<DianaError> = None;
     std::thread::scope(|scope| {
         let mut handles = Vec::with_capacity(threads);
-        for chunk in worlds.chunks_mut(per) {
+        for (chunk, end_chunk) in worlds.chunks_mut(per).zip(ends.chunks(per))
+        {
             let chunk = ShardChunk(chunk);
             handles.push(scope.spawn(move || -> Result<()> {
                 let ShardChunk(shards) = chunk;
-                for w in shards.iter_mut() {
-                    w.pdes_drain_window(window_end)?;
+                for (w, &end) in shards.iter_mut().zip(end_chunk) {
+                    w.pdes_drain_window(end)?;
                 }
                 Ok(())
             }));
@@ -383,40 +497,155 @@ fn drain_parallel(
     }
 }
 
+fn build_shard(cfg: &GridConfig) -> World {
+    let picker = make_picker(
+        cfg.scheduler.policy,
+        Box::new(RustEngine::new()),
+        &cfg.scheduler,
+        cfg.seed,
+    );
+    World::new(cfg.clone(), picker, Box::new(RustEngine::new()))
+}
+
+/// The sharded simulation: `World` replicas plus the coordinator state
+/// driving windows and barriers. Re-runnable like the serial `World`
+/// (load more, run again) so steady-state floods can pin buffer reuse
+/// across rounds.
+struct ShardedWorld {
+    worlds: Vec<World>,
+    part: Partition,
+    /// Federated (shard = peer) vs central (shard = site block with
+    /// replicated picks).
+    fed_mode: bool,
+    /// Worker threads for window drains (≤ shard count).
+    threads: usize,
+    coord: EventQueue<CoordEv>,
+    faults: Vec<(f64, ResolvedFault)>,
+    next_fault: usize,
+    /// Row-major per-pair lookahead matrix (module docs); recomputed
+    /// on topology faults and `min_out_mb` decreases.
+    lookahead: Vec<f64>,
+    /// Smallest `out_mb` across every job admitted or loaded so far —
+    /// the deliver term of the matrix. Streamed runs tighten it at
+    /// refill barriers.
+    min_out_mb: f64,
+    services_started: bool,
+    /// Scratch: assembled global site rows (gossip / migration /
+    /// central-seed input).
+    global: Vec<SiteSnapshot>,
+    /// Cross-shard messages in flight at a barrier.
+    mailbox: Mailbox<PdesMsg>,
+    /// Scratch for per-shard extraction.
+    extract: Vec<(f64, u64, PdesMsg)>,
+    /// `(job id, submit site)` in serial submission order — rank `r`
+    /// here is the serial run's `JobIdx(r)`, the recorder-merge key.
+    job_order: Vec<(JobId, usize)>,
+    /// Coordinator-owned eager submissions (`CoordEv::Submit` payloads
+    /// index here; admitted entries are taken).
+    subs: Vec<Option<Submission>>,
+    /// Streaming source plus its one pulled-ahead submission — the
+    /// coordinator twin of the serial `World`'s refill chain.
+    source: Option<Box<dyn WorkloadSource>>,
+    pending: Option<Submission>,
+    source_done: bool,
+    /// Jobs known to the run (eager: counted at load; streamed:
+    /// counted per refill). The shard worlds never learn a total —
+    /// this is the single completion denominator.
+    total: usize,
+    /// Window stats for the report: rounds drained and the events they
+    /// processed.
+    windows: u64,
+    window_events: u64,
+    /// Scratch: per-shard next-event times and window bounds.
+    t_next: Vec<f64>,
+    wends: Vec<f64>,
+}
+
 impl ShardedWorld {
-    fn new(cfg: &GridConfig, faults: Vec<(f64, ResolvedFault)>) -> ShardedWorld {
-        let probe = build_shard(cfg);
-        let fed = probe.federation().expect("eligible() requires peers >= 2");
-        let partition = fed.partition.clone();
-        let n_peers = fed.n_peers();
-        let mut worlds = Vec::with_capacity(n_peers);
-        worlds.push(probe);
-        for _ in 1..n_peers {
+    fn new(
+        cfg: &GridConfig,
+        part: Partition,
+        fed_mode: bool,
+        faults: Vec<(f64, ResolvedFault)>,
+    ) -> ShardedWorld {
+        let n_shards = part.n_peers();
+        let mut worlds = Vec::with_capacity(n_shards);
+        for _ in 0..n_shards {
             worlds.push(build_shard(cfg));
         }
-        let threads = cfg.sim.threads.min(n_peers);
-        ShardedWorld {
+        if fed_mode {
+            debug_assert_eq!(
+                worlds[0]
+                    .federation()
+                    .expect("federated shard mode requires peers >= 2")
+                    .n_peers(),
+                n_shards,
+                "shard partition must mirror the federation partition"
+            );
+        } else {
+            for (p, w) in worlds.iter_mut().enumerate() {
+                let mask: Vec<bool> = (0..part.n_sites())
+                    .map(|s| part.peer_of(s) == p)
+                    .collect();
+                w.pdes_set_owned(mask);
+            }
+        }
+        let threads = cfg.sim.threads.min(n_shards);
+        let mut sw = ShardedWorld {
             worlds,
-            partition,
+            part,
+            fed_mode,
             threads,
             coord: EventQueue::new(),
             faults,
             next_fault: 0,
-            lookahead: f64::INFINITY,
+            lookahead: Vec::new(),
             min_out_mb: f64::INFINITY,
             services_started: false,
             global: Vec::new(),
             mailbox: Mailbox::new(),
             extract: Vec::new(),
             job_order: Vec::new(),
-        }
+            subs: Vec::new(),
+            source: None,
+            pending: None,
+            source_done: false,
+            total: 0,
+            windows: 0,
+            window_events: 0,
+            t_next: Vec::new(),
+            wends: Vec::new(),
+        };
+        sw.recompute_lookahead();
+        sw
     }
 
-    /// Distribute a workload across the home shards, preserving the
-    /// serial pop order inside each shard (load order per peer) and
-    /// extending the serial-rank map: submissions stable-sorted by
-    /// arrival time, jobs in submission order — the order the single
-    /// queue pops `Submit`s and inserts rows.
+    fn recompute_lookahead(&mut self) {
+        let mut m = std::mem::take(&mut self.lookahead);
+        lookahead_matrix_into(
+            &self.worlds[0].topo,
+            &self.part,
+            self.fed_mode,
+            self.min_out_mb,
+            &mut m,
+        );
+        self.lookahead = m;
+    }
+
+    /// Every matrix entry strictly positive (`+∞` entries pass — those
+    /// pairs exchange nothing). The progress guarantee needs this: the
+    /// shard holding the global `t_min` always gets a window strictly
+    /// past it.
+    fn lookahead_ok(&self) -> bool {
+        self.lookahead.iter().all(|&l| l > 0.0)
+    }
+
+    /// Queue an eager workload with the coordinator; call before
+    /// `run`. May be called again after a completed `run` (flood
+    /// rounds). Mirrors the serial `load_submissions` heap discipline:
+    /// `Submit` seqs in given order, so equal-time pops keep load
+    /// order — and extends the serial-rank map (submissions
+    /// stable-sorted by arrival, jobs in submission order).
     fn load(&mut self, subs: Vec<Submission>) {
         let mut order: Vec<usize> = (0..subs.len()).collect();
         order.sort_by(|&a, &b| subs[a].at.total_cmp(&subs[b].at));
@@ -425,30 +654,67 @@ impl ShardedWorld {
                 self.job_order.push((j.id, j.submit_site));
             }
         }
-        for j in subs.iter().flat_map(|s| s.jobs.iter()) {
-            self.min_out_mb = self.min_out_mb.min(j.out_mb);
+        let folded = subs
+            .iter()
+            .flat_map(|s| s.jobs.iter())
+            .map(|j| j.out_mb)
+            .fold(self.min_out_mb, f64::min);
+        if folded < self.min_out_mb {
+            self.min_out_mb = folded;
+            self.recompute_lookahead();
         }
-        let mut per_peer: Vec<Vec<Submission>> =
-            (0..self.worlds.len()).map(|_| Vec::new()).collect();
-        for sub in subs {
-            per_peer[self.partition.peer_of(sub.jobs[0].submit_site)].push(sub);
+        let base = self.subs.len();
+        self.coord.schedule_batch(
+            subs.iter()
+                .enumerate()
+                .map(|(i, s)| (s.at, CoordEv::Submit((base + i) as u32))),
+        );
+        for s in &subs {
+            self.total += s.jobs.len();
         }
-        for (w, subs_p) in self.worlds.iter_mut().zip(per_peer) {
-            w.load_submissions(subs_p);
+        self.subs.extend(subs.into_iter().map(Some));
+    }
+
+    /// Attach a streaming source; call before `run` instead of `load`.
+    /// The coordinator owns the serial `World`'s refill chain: one
+    /// pulled-ahead submission, its `SourceRefill` armed at the
+    /// arrival time.
+    fn set_source(
+        &mut self,
+        mut source: Box<dyn WorkloadSource>,
+    ) -> Result<()> {
+        assert!(
+            self.subs.is_empty()
+                && self.pending.is_none()
+                && (self.source.is_none() || self.source_done),
+            "set_source on a sharded world that already has a workload"
+        );
+        self.source_done = false;
+        match source.next_submission()? {
+            Some(sub) => {
+                self.coord.schedule(sub.at, CoordEv::SourceRefill);
+                self.pending = Some(sub);
+            }
+            None => self.source_done = true,
         }
-        self.lookahead =
-            compute_lookahead(&self.worlds[0], &self.partition, self.min_out_mb);
+        self.source = Some(source);
+        Ok(())
     }
 
     fn delivered(&self) -> usize {
         self.worlds.iter().map(|w| w.pdes_delivered()).sum()
     }
 
-    fn total_jobs(&self) -> usize {
-        self.worlds.iter().map(|w| w.total_jobs()).sum()
+    /// The serial completion predicate: all known jobs delivered and,
+    /// for streamed runs, the source drained with nothing pulled
+    /// ahead.
+    fn complete(&self) -> bool {
+        self.delivered() >= self.total
+            && self.pending.is_none()
+            && (self.source.is_none() || self.source_done)
     }
 
-    /// Events processed so far across shards, coordinator services and
+    /// Events processed so far across shards, coordinator events and
     /// applied faults — the serial loop's single counter, re-assembled.
     fn events_processed(&self) -> u64 {
         self.worlds
@@ -464,7 +730,7 @@ impl ShardedWorld {
     fn exchange(&mut self) {
         for p in 0..self.worlds.len() {
             let mut buf = std::mem::take(&mut self.extract);
-            self.worlds[p].pdes_extract_cross_into(p, &mut buf);
+            self.worlds[p].pdes_extract_cross_into(p, &self.part, &mut buf);
             for (t, seq, msg) in buf.drain(..) {
                 self.mailbox.push(t, p, seq, msg);
             }
@@ -472,8 +738,115 @@ impl ShardedWorld {
         }
         for (t, _peer, _seq, msg) in self.mailbox.drain_merged() {
             let dest = msg.dest_peer();
-            self.worlds[dest].pdes_inject(dest, t, msg);
+            self.worlds[dest].pdes_inject(dest, &self.part, t, msg);
         }
+    }
+
+    /// Admit one submission at its barrier, exactly where the serial
+    /// loop would have popped its `Submit` / `SourceRefill`.
+    ///
+    /// Federated: the home shard admits (rows, recorder, placement —
+    /// all shard-local; a delegation becomes a cross-shard `Forward`
+    /// at the next exchange). Central: every replica seeds the
+    /// assembled global rows and replays the identical admission, so
+    /// the picker's choice agrees bit-for-bit everywhere while only
+    /// each site's owner feeds its queues.
+    fn admit_at_barrier(&mut self, sub: Submission, t: f64) -> Result<()> {
+        crate::ensure!(
+            !sub.jobs.is_empty(),
+            "empty submission reached the parallel path at t={t:.1}s — \
+             rerun with --sim-threads 1"
+        );
+        let site0 = sub.jobs[0].submit_site;
+        // Eager runs decline these up front; a streamed source is
+        // checked per submission, at its barrier.
+        crate::ensure!(
+            sub.jobs.iter().all(|j| j.submit_site == site0),
+            "submission spanning multiple submit sites reached the \
+             parallel path at t={t:.1}s — rerun with --sim-threads 1"
+        );
+        if self.fed_mode {
+            let home = self.part.peer_of(site0);
+            let routed = self.worlds[home].pdes_home_route(site0);
+            crate::ensure!(
+                routed == Some(home),
+                "submission at t={t:.1}s re-routed off its dead home peer \
+                 {home}; outside the parallel envelope — rerun with \
+                 --sim-threads 1"
+            );
+            self.worlds[home].pdes_admit(sub, t)
+        } else {
+            crate::ensure!(
+                sub.deps.is_empty(),
+                "DAG-dependent submission reached the parallel central \
+                 path at t={t:.1}s — rerun with --sim-threads 1"
+            );
+            World::pdes_assemble_global(
+                &mut self.worlds,
+                &self.part,
+                &mut self.global,
+            );
+            let last = self.worlds.len() - 1;
+            for p in 0..last {
+                self.worlds[p].pdes_seed_cache(&self.global);
+                self.worlds[p].pdes_admit(sub.clone(), t)?;
+            }
+            self.worlds[last].pdes_seed_cache(&self.global);
+            self.worlds[last].pdes_admit(sub, t)
+        }
+    }
+
+    /// The coordinator twin of the serial `on_source_refill`: admit
+    /// the pulled-ahead submission, pull its successor (arming the
+    /// next refill *before* admission, for the same seq discipline),
+    /// and fold the new outputs into the deliver term.
+    fn refill_at_barrier(&mut self, t: f64) -> Result<()> {
+        let sub = self
+            .pending
+            .take()
+            .expect("SourceRefill without a pending submission");
+        match self
+            .source
+            .as_mut()
+            .expect("SourceRefill without a source")
+            .next_submission()?
+        {
+            Some(next) => {
+                crate::ensure!(
+                    next.at >= sub.at,
+                    "workload source went backwards in time: submission \
+                     at t={} after t={}",
+                    next.at,
+                    sub.at
+                );
+                self.coord.schedule(next.at, CoordEv::SourceRefill);
+                self.pending = Some(next);
+            }
+            None => self.source_done = true,
+        }
+        // Fold before admitting: no event of this submission exists
+        // before its barrier, so the tightened bound cannot invalidate
+        // any window already drained.
+        let folded = sub
+            .jobs
+            .iter()
+            .map(|j| j.out_mb)
+            .fold(f64::INFINITY, f64::min);
+        if folded < self.min_out_mb {
+            self.min_out_mb = folded;
+            self.recompute_lookahead();
+            crate::ensure!(
+                self.lookahead_ok(),
+                "a zero-size output at t={t:.1}s collapsed the \
+                 conservative lookahead; this stream cannot run parallel \
+                 — rerun with --sim-threads 1"
+            );
+        }
+        for j in &sub.jobs {
+            self.job_order.push((j.id, j.submit_site));
+        }
+        self.total += sub.jobs.len();
+        self.admit_at_barrier(sub, t)
     }
 
     /// The windowed main loop (module docs). Mirrors the serial
@@ -484,7 +857,9 @@ impl ShardedWorld {
         if !self.services_started {
             self.services_started = true;
             // Same schedule order as the serial bootstrap: Monitor,
-            // MigrationCheck, direct t=0 gossip exchange, Gossip.
+            // MigrationCheck, then (federated only — a 1-peer or
+            // central run exchanges nothing) the direct t=0 gossip and
+            // the Gossip chain.
             self.coord
                 .schedule(cfg.network.monitor_period_s, CoordEv::Monitor);
             if cfg.scheduler.policy == Policy::Diana
@@ -495,15 +870,24 @@ impl ShardedWorld {
                     CoordEv::MigrationCheck,
                 );
             }
-            World::pdes_assemble_global(&mut self.worlds, &mut self.global);
-            for w in self.worlds.iter_mut() {
-                w.pdes_gossip(&self.global, 0.0);
+            if self.worlds[0]
+                .federation()
+                .map_or(false, |f| f.n_peers() > 1)
+            {
+                World::pdes_assemble_global(
+                    &mut self.worlds,
+                    &self.part,
+                    &mut self.global,
+                );
+                for w in self.worlds.iter_mut() {
+                    w.pdes_gossip(&self.global, 0.0);
+                }
+                self.coord
+                    .schedule(cfg.federation.gossip_period_s, CoordEv::Gossip);
             }
-            self.coord
-                .schedule(cfg.federation.gossip_period_s, CoordEv::Gossip);
         }
         loop {
-            if self.delivered() >= self.total_jobs() {
+            if self.complete() {
                 break;
             }
             crate::ensure!(
@@ -512,15 +896,19 @@ impl ShardedWorld {
                  jobs delivered (max_events = {}) — livelock?",
                 self.events_processed(),
                 self.delivered(),
-                self.total_jobs(),
+                self.total,
                 cfg.max_events
             );
             self.exchange();
-            let t_min = self
-                .worlds
-                .iter()
-                .filter_map(|w| w.pdes_next_event_time())
-                .fold(f64::INFINITY, f64::min);
+            let n = self.worlds.len();
+            self.t_next.clear();
+            self.t_next.extend(
+                self.worlds
+                    .iter()
+                    .map(|w| w.pdes_next_event_time().unwrap_or(f64::INFINITY)),
+            );
+            let t_min =
+                self.t_next.iter().copied().fold(f64::INFINITY, f64::min);
             let t_fault = self
                 .faults
                 .get(self.next_fault)
@@ -540,19 +928,30 @@ impl ShardedWorld {
             if t_fault <= t_min && t_fault <= t_svc {
                 let (t, fault) = self.faults[self.next_fault].clone();
                 self.next_fault += 1;
-                for w in self.worlds.iter_mut() {
-                    w.pdes_apply_replicated_fault(&fault, t);
+                // Site-lifecycle side effects that touch an event heap
+                // (the recovery Dispatch kick) fire on the owner shard
+                // only; other fault kinds ignore the flag.
+                let owner_peer = match &fault {
+                    ResolvedFault::SiteDown(s) | ResolvedFault::SiteUp(s) => {
+                        self.part.peer_of(*s)
+                    }
+                    _ => usize::MAX,
+                };
+                for (p, w) in self.worlds.iter_mut().enumerate() {
+                    w.pdes_apply_replicated_fault(&fault, p == owner_peer, t);
                 }
-                if !matches!(fault, ResolvedFault::MonitorBlackout { .. }) {
-                    // Link prices moved: re-derive the lookahead bound.
-                    self.lookahead = compute_lookahead(
-                        &self.worlds[0],
-                        &self.partition,
-                        self.min_out_mb,
-                    );
+                if matches!(
+                    fault,
+                    ResolvedFault::LinkDegrade { .. }
+                        | ResolvedFault::Partition { .. }
+                        | ResolvedFault::Heal
+                ) {
+                    // Link prices moved: re-derive the matrix. Site /
+                    // peer liveness and blackouts price nothing.
+                    self.recompute_lookahead();
                     crate::ensure!(
-                        self.lookahead > 0.0,
-                        "fault at t={t:.1}s collapsed the inter-peer \
+                        self.lookahead_ok(),
+                        "fault at t={t:.1}s collapsed the cross-shard \
                          lookahead to zero; this scenario cannot run \
                          conservatively parallel — rerun with \
                          --sim-threads 1",
@@ -561,18 +960,25 @@ impl ShardedWorld {
                 continue;
             }
             // `<=`: a shard event at exactly `t_svc` is (almost surely)
-            // one a same-tick barrier service just created — e.g. the
-            // migration sweep's `Dispatch(t)` — whose serial seq is
-            // higher than every service armed before the barrier, so
-            // service-first IS the serial order (and a strict `<` would
-            // livelock: nothing pops strictly before `t_min == t_svc`).
-            // A *pre-existing* shard event landing exactly on a service
-            // tick is the measure-zero coincidence the module docs
-            // cover.
+            // one a same-tick barrier action just created — an
+            // admission's `Dispatch(t)`, the migration sweep's kicks —
+            // whose serial seq is higher than every coordinator event
+            // armed before the barrier, so coordinator-first IS the
+            // serial order (and a strict `<` would livelock: nothing
+            // pops strictly before `t_min == t_svc`). A *pre-existing*
+            // shard event landing exactly on a barrier tick is the
+            // measure-zero coincidence the module docs cover.
             if t_svc <= t_min && t_svc < t_fault {
                 let (t, ev) =
                     self.coord.pop().expect("peeked service exists");
                 match ev {
+                    CoordEv::Submit(i) => {
+                        let sub = self.subs[i as usize]
+                            .take()
+                            .expect("CoordEv::Submit fired twice");
+                        self.admit_at_barrier(sub, t)?;
+                    }
+                    CoordEv::SourceRefill => self.refill_at_barrier(t)?,
                     CoordEv::Monitor => {
                         // Blackout state is replicated, so shard 0
                         // speaks for all.
@@ -589,6 +995,8 @@ impl ShardedWorld {
                     CoordEv::MigrationCheck => {
                         World::pdes_migration_check(
                             &mut self.worlds,
+                            &self.part,
+                            self.fed_mode,
                             t,
                             &mut self.global,
                         )?;
@@ -600,6 +1008,7 @@ impl ShardedWorld {
                     CoordEv::Gossip => {
                         World::pdes_assemble_global(
                             &mut self.worlds,
+                            &self.part,
                             &mut self.global,
                         );
                         for w in self.worlds.iter_mut() {
@@ -613,8 +1022,32 @@ impl ShardedWorld {
                 }
                 continue;
             }
-            let window_end = (t_min + self.lookahead).min(t_svc).min(t_fault);
-            drain_parallel(&mut self.worlds, window_end, self.threads)?;
+            // Window round: each shard drains to its own bound.
+            let barrier = t_svc.min(t_fault);
+            self.wends.clear();
+            for p in 0..n {
+                let mut end = barrier;
+                for q in 0..n {
+                    if q != p && self.t_next[q].is_finite() {
+                        end = end
+                            .min(self.t_next[q] + self.lookahead[q * n + p]);
+                    }
+                }
+                self.wends.push(end);
+            }
+            let before: u64 = self
+                .worlds
+                .iter()
+                .map(|w| w.events_processed())
+                .sum();
+            drain_parallel(&mut self.worlds, &self.wends, self.threads)?;
+            let after: u64 = self
+                .worlds
+                .iter()
+                .map(|w| w.events_processed())
+                .sum();
+            self.windows += 1;
+            self.window_events += after - before;
         }
         Ok(())
     }
@@ -622,13 +1055,13 @@ impl ShardedWorld {
     /// Deterministic assembly: merge the shard recorders into the
     /// serial layout and return the merged world plus its report.
     fn finish(mut self) -> (Box<World>, RunReport) {
-        let completed = self.delivered() >= self.total_jobs();
+        let completed = self.complete();
         // Completion trimming: the serial loop breaks *at* the final
         // Deliver (time Tc); the shard that processed it ran its window
         // out, popping stranded same-timestamp no-ops the serial run
         // never counted. Everything past Tc on *other* shards is
-        // untouched (nothing exists there before Tc + L), so only the
-        // last-delivering shard over-counts.
+        // untouched (nothing exists there before Tc plus the pairwise
+        // lookahead), so only the last-delivering shard over-counts.
         let mut trim = 0u64;
         if completed {
             let mut best_t = f64::NEG_INFINITY;
@@ -645,58 +1078,75 @@ impl ShardedWorld {
         }
         let events = self.events_processed() - trim;
 
-        let n_sites = self.partition.n_sites();
+        let n_sites = self.part.n_sites();
         let mut merged = Recorder::new(n_sites, RECORDER_BUCKET_S);
         // Job rows in serial JobIdx order: rank r of the load-order map
         // is row r of the single-store recorder. The home shard owns
         // the complete row — exec-side fields came home with the
         // Deliver patch.
         for (rank, &(id, site)) in self.job_order.iter().enumerate() {
-            let home = self.partition.peer_of(site);
+            let home = self.part.peer_of(site);
             let row = self.worlds[home]
                 .job_record(id)
                 .copied()
                 .unwrap_or_default();
             *merged.job_mut(JobIdx(rank as u32)) = row;
         }
-        // Site series: submissions land at the owner (home) shard,
+        // Site series: submissions land at the home/owner shard,
         // execution/import/export activity at the site's owner too —
-        // each series has exactly one writer.
+        // each series has exactly one authoritative writer.
         for s in 0..n_sites {
-            let owner = self.partition.peer_of(s);
+            let owner = self.part.peer_of(s);
             merged.adopt_site_series(
                 s,
                 self.worlds[owner].recorder.site_series(s).clone(),
             );
         }
+        // Migration counters are written once, at the move's source /
+        // destination owners — summing is exact in both modes. The
+        // placement-side counters (delegations, group split/whole) are
+        // written by the admitting shard: under federation that is the
+        // home shard (sum), centrally every replica replays every
+        // admission identically (take one copy).
         for w in &self.worlds {
             merged.migrations += w.recorder.migrations;
-            merged.delegations += w.recorder.delegations;
-            merged.groups_split += w.recorder.groups_split;
-            merged.groups_whole += w.recorder.groups_whole;
         }
-        let report = RunReport::from_parts(
+        if self.fed_mode {
+            for w in &self.worlds {
+                merged.delegations += w.recorder.delegations;
+                merged.groups_split += w.recorder.groups_split;
+                merged.groups_whole += w.recorder.groups_whole;
+            }
+        } else {
+            merged.delegations = self.worlds[0].recorder.delegations;
+            merged.groups_split = self.worlds[0].recorder.groups_split;
+            merged.groups_whole = self.worlds[0].recorder.groups_whole;
+        }
+        let mut report = RunReport::from_parts(
             self.worlds[0].policy_name(),
             &merged,
             events,
         );
+        report.pdes_parallel = true;
+        report.pdes_windows = self.windows;
+        report.pdes_window_events = self.window_events;
         let delivered = self.delivered();
-        let total = self.total_jobs();
+        let total = self.total;
         let mut group_results = Vec::new();
         for w in self.worlds.iter_mut() {
             group_results.append(&mut w.group_results);
         }
         let mut world =
-            self.worlds.into_iter().next().expect("peers >= 2");
+            self.worlds.into_iter().next().expect("at least one shard");
         world.pdes_adopt_merged(merged, group_results, delivered, total);
         (Box::new(world), report)
     }
 }
 
-/// Run `cfg`'s simulation as a conservative PDES if the config and
-/// workload are inside the parallel envelope, else hand the
-/// submissions back untouched for the serial path. The parallel result
-/// is bit-identical to the serial reference for every eligible
+/// Run `cfg`'s eager-workload simulation as a conservative PDES if it
+/// is inside the parallel envelope, else hand the submissions back
+/// untouched (with the named reason) for the serial path. The parallel
+/// result is bit-identical to the serial reference for every eligible
 /// scenario (see module docs for the measure-zero tie caveat).
 pub fn try_run_parallel(
     cfg: &GridConfig,
@@ -704,26 +1154,68 @@ pub fn try_run_parallel(
     faults: &FaultPlan,
 ) -> Result<PdesOutcome> {
     let resolved = faults.resolve(cfg)?;
-    if !eligible(cfg, &subs, &resolved) {
-        return Ok(PdesOutcome::Declined(subs));
+    let (part, fed_mode) = match shard_mode(cfg, &resolved) {
+        Ok(mode) => mode,
+        Err(reason) => return Ok(PdesOutcome::Declined { subs, reason }),
+    };
+    if let Err(reason) = eager_eligible(&subs, fed_mode) {
+        return Ok(PdesOutcome::Declined { subs, reason });
     }
-    let mut sharded = ShardedWorld::new(cfg, resolved);
-    let min_out_mb = subs
+    let mut sharded = ShardedWorld::new(cfg, part, fed_mode, resolved);
+    sharded.min_out_mb = subs
         .iter()
         .flat_map(|s| s.jobs.iter())
         .map(|j| j.out_mb)
         .fold(f64::INFINITY, f64::min);
-    let lookahead =
-        compute_lookahead(&sharded.worlds[0], &sharded.partition, min_out_mb);
-    // A zero-latency cross-peer path (e.g. a zero-size output crossing
-    // partitions) leaves no conservative window; run serial instead.
-    if !(lookahead > 0.0) {
-        return Ok(PdesOutcome::Declined(subs));
+    sharded.recompute_lookahead();
+    if !sharded.lookahead_ok() {
+        return Ok(PdesOutcome::Declined {
+            subs,
+            reason: PdesDecline::ZeroLookahead,
+        });
     }
     sharded.load(subs);
     sharded.run()?;
     let (world, report) = sharded.finish();
     Ok(PdesOutcome::Done(world, report))
+}
+
+/// Run `cfg`'s **streamed** simulation as a conservative PDES: the
+/// source is constructed here, *after* every up-front gate, so a
+/// decline never returns a partially consumed stream. Submissions are
+/// admitted at window-aligned `SourceRefill` barriers; the deliver
+/// lookahead term tightens as each submission's outputs fold in.
+pub fn try_run_parallel_streamed(
+    cfg: &GridConfig,
+    faults: &FaultPlan,
+) -> Result<PdesStreamOutcome> {
+    let resolved = faults.resolve(cfg)?;
+    if !cfg.sim.spill_dir.is_empty() {
+        return Ok(PdesStreamOutcome::Declined(PdesDecline::SpillRun));
+    }
+    let (part, fed_mode) = match shard_mode(cfg, &resolved) {
+        Ok(mode) => mode,
+        Err(reason) => return Ok(PdesStreamOutcome::Declined(reason)),
+    };
+    let mut sharded = ShardedWorld::new(cfg, part, fed_mode, resolved);
+    // `min_out_mb` starts +∞ (the deliver term folds in lazily); a
+    // zero entry here can only come from the forward term.
+    if !sharded.lookahead_ok() {
+        return Ok(PdesStreamOutcome::Declined(PdesDecline::ZeroLookahead));
+    }
+    let source = match crate::workload::source_from_config(cfg)? {
+        Some(s) => s,
+        // An eager config has no stream to run.
+        None => {
+            return Ok(PdesStreamOutcome::Declined(
+                PdesDecline::EmptyWorkload,
+            ))
+        }
+    };
+    sharded.set_source(source)?;
+    sharded.run()?;
+    let (world, report) = sharded.finish();
+    Ok(PdesStreamOutcome::Done(world, report))
 }
 
 #[cfg(test)]
@@ -751,6 +1243,15 @@ mod tests {
 
     fn workload(cfg: &GridConfig) -> Vec<Submission> {
         crate::coordinator::generate_workload(cfg)
+    }
+
+    fn sharded(
+        cfg: &GridConfig,
+        faults: Vec<(f64, ResolvedFault)>,
+    ) -> ShardedWorld {
+        let (part, fed_mode) =
+            shard_mode(cfg, &faults).expect("inside the parallel envelope");
+        ShardedWorld::new(cfg, part, fed_mode, faults)
     }
 
     fn assert_reports_match(serial: &RunReport, parallel: &RunReport) {
@@ -781,93 +1282,182 @@ mod tests {
         );
     }
 
+    fn assert_lifecycles_match(
+        sw: &World,
+        pw: &World,
+        ids: &[JobId],
+        label: &str,
+    ) {
+        for id in ids {
+            let a = sw.job_record(*id).copied().unwrap_or_default();
+            let b = pw.job_record(*id).copied().unwrap_or_default();
+            for (x, y) in [
+                (a.submit, b.submit),
+                (a.placed, b.placed),
+                (a.enqueued_local, b.enqueued_local),
+                (a.started, b.started),
+                (a.finished, b.finished),
+                (a.delivered, b.delivered),
+            ] {
+                assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "job {id:?} lifecycle diverged ({label})"
+                );
+            }
+            assert_eq!(a.exec_site, b.exec_site, "job {id:?} exec site");
+            assert_eq!(a.migrations, b.migrations);
+        }
+    }
+
+    fn run_both(
+        cfg: &GridConfig,
+        threads: usize,
+        plan: &FaultPlan,
+        label: &str,
+    ) {
+        let mut cfg = cfg.clone();
+        let subs = workload(&cfg);
+        let ids: Vec<JobId> = subs
+            .iter()
+            .flat_map(|s| s.jobs.iter().map(|j| j.id))
+            .collect();
+        let (sw, sr) =
+            run_simulation_with_faults(&cfg, subs.clone(), plan).unwrap();
+        cfg.sim.threads = threads;
+        let outcome = try_run_parallel(&cfg, subs, plan).unwrap();
+        let (pw, pr) = match outcome {
+            PdesOutcome::Done(w, r) => (w, r),
+            PdesOutcome::Declined { reason, .. } => {
+                panic!("eligible config declined ({label}): {reason}")
+            }
+        };
+        assert!(pr.pdes_parallel, "parallel path not flagged ({label})");
+        assert!(pr.pdes_windows > 0, "no windows counted ({label})");
+        assert_reports_match(&sr, &pr);
+        assert_lifecycles_match(&sw, &pw, &ids, label);
+    }
+
     #[test]
     fn parallel_matches_serial_bit_for_bit() {
         for &(peers, threads, seed) in
             &[(2usize, 2usize, 7u64), (3, 2, 11), (3, 3, 42)]
         {
-            let mut cfg = fed_cfg(60, peers, seed);
-            let subs = workload(&cfg);
-            let ids: Vec<JobId> = subs
-                .iter()
-                .flat_map(|s| s.jobs.iter().map(|j| j.id))
-                .collect();
-            let (sw, sr) = run_simulation_with_faults(
+            let cfg = fed_cfg(60, peers, seed);
+            run_both(
                 &cfg,
-                subs.clone(),
+                threads,
                 &FaultPlan::default(),
-            )
-            .unwrap();
-            cfg.sim.threads = threads;
-            let outcome =
-                try_run_parallel(&cfg, subs, &FaultPlan::default()).unwrap();
-            let (pw, pr) = match outcome {
-                PdesOutcome::Done(w, r) => (w, r),
-                PdesOutcome::Declined(_) => {
-                    panic!("eligible config declined (peers={peers})")
-                }
-            };
-            assert_reports_match(&sr, &pr);
-            // Row-for-row recorder equivalence through the public
-            // accessor: every job's full lifecycle must agree bitwise.
-            for id in &ids {
-                let a = sw.job_record(*id).copied().unwrap_or_default();
-                let b = pw.job_record(*id).copied().unwrap_or_default();
-                for (x, y) in [
-                    (a.submit, b.submit),
-                    (a.placed, b.placed),
-                    (a.enqueued_local, b.enqueued_local),
-                    (a.started, b.started),
-                    (a.finished, b.finished),
-                    (a.delivered, b.delivered),
-                ] {
-                    assert_eq!(
-                        x.to_bits(),
-                        y.to_bits(),
-                        "job {id:?} lifecycle diverged (peers={peers}, \
-                         threads={threads})"
-                    );
-                }
-                assert_eq!(a.exec_site, b.exec_site, "job {id:?} exec site");
-                assert_eq!(a.migrations, b.migrations);
-            }
+                &format!("federated peers={peers} threads={threads}"),
+            );
         }
     }
 
     #[test]
-    fn ineligible_configs_decline_with_workload_intact() {
-        // peers = 1: the serial path is the federated degenerate case.
-        let mut cfg = fed_cfg(20, 1, 3);
-        cfg.sim.threads = 4;
-        let subs = workload(&cfg);
-        let n = subs.len();
-        match try_run_parallel(&cfg, subs, &FaultPlan::default()).unwrap() {
-            PdesOutcome::Declined(back) => assert_eq!(back.len(), n),
-            PdesOutcome::Done(..) => panic!("1-peer run took the PDES path"),
+    fn central_matches_serial_bit_for_bit() {
+        // The newly eligible class (c): no federation at all, sharded
+        // by contiguous site block — and the degenerate 1-peer
+        // federation, which must take the same central decomposition.
+        for &(peers, threads, seed) in
+            &[(0usize, 2usize, 7u64), (0, 3, 11), (1, 4, 3)]
+        {
+            let cfg = fed_cfg(60, peers, seed);
+            run_both(
+                &cfg,
+                threads,
+                &FaultPlan::default(),
+                &format!("central peers={peers} threads={threads}"),
+            );
         }
+    }
+
+    #[test]
+    fn site_fault_plans_match_serial_bit_for_bit() {
+        // The newly eligible class (b): a site dies with work queued
+        // and later recovers. Replayed liveness plus the owner-only
+        // Dispatch kick must reproduce the serial stream exactly —
+        // federated and central.
+        let mut plan = FaultPlan::default();
+        plan.events.push(FaultEvent {
+            at: 40.0,
+            kind: FaultKind::SiteDown { site: "s1".into() },
+        });
+        plan.events.push(FaultEvent {
+            at: 300.0,
+            kind: FaultKind::SiteUp { site: "s1".into() },
+        });
+        let cfg = fed_cfg(60, 2, 7);
+        run_both(&cfg, 2, &plan, "federated site-fault");
+        let cfg = fed_cfg(60, 0, 11);
+        run_both(&cfg, 4, &plan, "central site-fault");
+    }
+
+    #[test]
+    fn declines_carry_named_reasons() {
         // Random policy holds an order-sensitive PRNG.
         let mut cfg = fed_cfg(20, 2, 3);
         cfg.sim.threads = 2;
         cfg.scheduler.policy = Policy::Random;
         let subs = workload(&cfg);
+        let n = subs.len();
         match try_run_parallel(&cfg, subs, &FaultPlan::default()).unwrap() {
-            PdesOutcome::Declined(_) => {}
-            PdesOutcome::Done(..) => panic!("Random policy took the PDES path"),
+            PdesOutcome::Declined { subs, reason } => {
+                assert_eq!(reason, PdesDecline::RandomPolicy);
+                assert_eq!(subs.len(), n, "workload must come back intact");
+            }
+            PdesOutcome::Done(..) => panic!("Random policy took PDES"),
         }
-        // Site lifecycle faults are outside the replicated-fault set.
+        // One thread is no decomposition.
+        let mut cfg = fed_cfg(20, 2, 3);
+        cfg.sim.threads = 1;
+        let subs = workload(&cfg);
+        match try_run_parallel(&cfg, subs, &FaultPlan::default()).unwrap() {
+            PdesOutcome::Declined { reason, .. } => {
+                assert_eq!(reason, PdesDecline::SingleShard)
+            }
+            PdesOutcome::Done(..) => panic!("threads=1 took PDES"),
+        }
+        // Peer-lifecycle faults re-route admissions.
         let mut cfg = fed_cfg(20, 2, 3);
         cfg.sim.threads = 2;
         let subs = workload(&cfg);
         let mut plan = FaultPlan::default();
         plan.events.push(FaultEvent {
             at: 50.0,
-            kind: FaultKind::SiteDown { site: "s0".into() },
+            kind: FaultKind::PeerDown { peer: 0 },
         });
         match try_run_parallel(&cfg, subs, &plan).unwrap() {
-            PdesOutcome::Declined(_) => {}
-            PdesOutcome::Done(..) => {
-                panic!("site-fault plan took the PDES path")
+            PdesOutcome::Declined { reason, .. } => {
+                assert_eq!(reason, PdesDecline::PeerFaultPlan)
             }
+            PdesOutcome::Done(..) => panic!("peer-fault plan took PDES"),
+        }
+        // An empty workload has nothing to shard.
+        let mut cfg = fed_cfg(0, 2, 3);
+        cfg.sim.threads = 2;
+        match try_run_parallel(&cfg, Vec::new(), &FaultPlan::default())
+            .unwrap()
+        {
+            PdesOutcome::Declined { reason, .. } => {
+                assert_eq!(reason, PdesDecline::EmptyWorkload)
+            }
+            PdesOutcome::Done(..) => panic!("empty workload took PDES"),
+        }
+        // Every reason renders a non-empty operator string.
+        for d in [
+            PdesDecline::RandomPolicy,
+            PdesDecline::XlaEngine,
+            PdesDecline::EmptyWorkload,
+            PdesDecline::MixedHomeSubmission,
+            PdesDecline::ZeroLookahead,
+            PdesDecline::SpillRun,
+            PdesDecline::DagDeps,
+            PdesDecline::SingleShard,
+            PdesDecline::ParanoidCentral,
+            PdesDecline::PeerFaultPlan,
+        ] {
+            assert!(!d.reason().is_empty());
+            assert_eq!(format!("{d}"), d.reason());
         }
     }
 
@@ -878,7 +1468,8 @@ mod tests {
         // rounds through ONE ShardedWorld must stop growing every
         // reusable buffer — per-shard event-loop scratch (heap,
         // forward slots, batch rows, ...), the barrier mailbox, the
-        // extraction scratch and the assembled-global rows.
+        // extraction scratch, the assembled-global rows and the
+        // window-bound scratch.
         let mut cfg = fed_cfg(0, 2, 0);
         cfg.sim.threads = 2;
         // Same catalog construction as `World::new`, so the generated
@@ -886,7 +1477,7 @@ mod tests {
         let mut rng = Pcg64::new(cfg.seed ^ 0xca7a);
         let catalog = Catalog::from_config(&cfg, &mut rng);
         let mut gen = WorkloadGen::new(12);
-        let mut sw = ShardedWorld::new(&cfg, Vec::new());
+        let mut sw = sharded(&cfg, Vec::new());
         let mut round = |sw: &mut ShardedWorld, gen: &mut WorkloadGen| {
             let subs: Vec<_> = (0..4)
                 .map(|u| {
@@ -915,10 +1506,12 @@ mod tests {
             sw.mailbox.capacity(),
             sw.extract.capacity(),
             sw.global.capacity(),
+            sw.t_next.capacity(),
+            sw.wends.capacity(),
         );
         round(&mut sw, &mut gen);
         round(&mut sw, &mut gen);
-        assert!(sw.delivered() >= sw.total_jobs());
+        assert!(sw.complete());
         let shard_caps_after: Vec<_> = sw
             .worlds
             .iter()
@@ -934,6 +1527,8 @@ mod tests {
                 sw.mailbox.capacity(),
                 sw.extract.capacity(),
                 sw.global.capacity(),
+                sw.t_next.capacity(),
+                sw.wends.capacity(),
             ),
             "coordinator barrier buffers reallocated in steady state"
         );
@@ -953,10 +1548,84 @@ mod tests {
     }
 
     #[test]
-    fn lookahead_positive_on_uniform_grid() {
+    fn lookahead_matrix_shape_and_positivity() {
         let cfg = fed_cfg(10, 2, 1);
-        let sw = ShardedWorld::new(&cfg, Vec::new());
-        let l = compute_lookahead(&sw.worlds[0], &sw.partition, 10.0);
-        assert!(l > 0.0 && l.is_finite(), "lookahead {l}");
+        let sw = sharded(&cfg, Vec::new());
+        let n = sw.part.n_peers();
+        let m = pdes_lookahead_matrix(&sw.worlds[0].topo, &sw.part, true, 10.0);
+        assert_eq!(m.len(), n * n);
+        for q in 0..n {
+            for p in 0..n {
+                let l = m[q * n + p];
+                if q == p {
+                    assert!(l.is_infinite(), "diagonal must be +inf");
+                } else {
+                    assert!(
+                        l > 0.0 && l.is_finite(),
+                        "lookahead[{q}][{p}] = {l}"
+                    );
+                }
+            }
+        }
+        // Central mode with no finite out_mb yet: every entry is +inf
+        // (only delivers cross, and none are priced) — still "ok".
+        let mut central = fed_cfg(10, 0, 1);
+        central.sim.threads = 2;
+        let sw = sharded(&central, Vec::new());
+        assert!(sw.lookahead_ok());
+        assert!(sw.lookahead.iter().all(|l| l.is_infinite()));
+    }
+
+    #[test]
+    fn degraded_link_only_narrows_its_own_pairs() {
+        // The dynamic-lookahead point: degrading one inter-partition
+        // link must not shrink the bound for pairs it does not price.
+        let cfg = fed_cfg(10, 3, 1);
+        let mut sw = sharded(&cfg, Vec::new());
+        sw.min_out_mb = 25.0;
+        sw.recompute_lookahead();
+        let n = sw.part.n_peers();
+        let before = sw.lookahead.clone();
+        // Degrade the peer-0 <-> peer-1 gateway link hard.
+        let (g0, g1) = (sw.part.gateway(0), sw.part.gateway(1));
+        for w in sw.worlds.iter_mut() {
+            w.pdes_apply_replicated_fault(
+                &ResolvedFault::LinkDegrade {
+                    from: g0,
+                    to: g1,
+                    rtt_factor: 50.0,
+                    loss_add: 0.2,
+                    capacity_factor: 0.01,
+                },
+                false,
+                10.0,
+            );
+        }
+        sw.recompute_lookahead();
+        // The 2 <-> others pairs never price the degraded link when
+        // their site-pair minima avoid it; at minimum they must not
+        // shrink below the old bound's floor for untouched site pairs.
+        // The touched ordered pairs (0,1) and (1,0) must widen (slower
+        // link => larger minimum latency) or stay equal.
+        assert!(
+            sw.lookahead[n + 2] >= before[n + 2] * 0.999,
+            "pair (1,2) shrank: {} -> {}",
+            before[n + 2],
+            sw.lookahead[n + 2]
+        );
+        assert!(
+            sw.lookahead[1] >= before[1],
+            "degrading (0,1) cannot cheapen (0,1): {} -> {}",
+            before[1],
+            sw.lookahead[1]
+        );
+        // And healing restores the original matrix bit-for-bit.
+        for w in sw.worlds.iter_mut() {
+            w.pdes_apply_replicated_fault(&ResolvedFault::Heal, false, 20.0);
+        }
+        sw.recompute_lookahead();
+        for (a, b) in before.iter().zip(sw.lookahead.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "heal must restore L");
+        }
     }
 }

@@ -21,7 +21,8 @@ use crate::config::{GridConfig, Policy};
 use crate::coordinator::MetaScheduler;
 use crate::cost::{CostEngine, CostWorkspace, Weights};
 use crate::data::{Catalog, ReplicaCache};
-use crate::federation::{choose_delegation, peering_penalty, Federation};
+use crate::federation::{choose_delegation, peering_penalty, Federation,
+    Partition};
 use crate::federation::DelegationCandidate;
 use crate::job::{Group, Job, JobId, JobIdx, JobStore};
 use crate::metrics::{JobRecord, Recorder};
@@ -200,6 +201,13 @@ pub struct World {
     /// the shard that delivered last subtracts its overshoot).
     pdes_last_deliver_t: f64,
     pdes_after_deliver: u64,
+    /// PDES central-mode ownership mask: `Some(mask)` on a central-run
+    /// replica, where `mask[s]` ⇔ this shard owns site `s`'s queues.
+    /// Placement is replayed on every replica (identical inputs ⇒
+    /// identical picks), but only the owner enqueues/dispatches — the
+    /// non-owners' copies record `placed` and stop. `None` everywhere
+    /// else (serial runs and federated shards).
+    pdes_owned: Option<Vec<bool>>,
     /// High-water mark of live (submitted, undelivered) jobs.
     peak_live: usize,
     /// Periodic services (monitor / migration / gossip) are bootstrapped
@@ -305,6 +313,7 @@ impl World {
             touched_sites: Vec::new(),
             mig_snaps: Vec::new(),
             pdes_ev_scratch: Vec::new(),
+            pdes_owned: None,
             pdes_last_deliver_t: f64::NEG_INFINITY,
             pdes_after_deliver: 0,
             peak_live: 0,
@@ -1010,14 +1019,22 @@ impl World {
                 // `placed` = first response (§VI response time).
                 self.recorder.job_mut(i).placed = t;
             }
-            self.metas[site].enqueue_batch(
-                self.engine.as_mut(),
-                &self.store,
-                &bucket,
-                t,
-            )?;
-            self.cache.touch(site);
-            self.events.schedule(t, Ev::Dispatch(site as u32));
+            // PDES central replicas replay the pick everywhere but only
+            // the site's owner shard feeds its queues.
+            let owned = self
+                .pdes_owned
+                .as_ref()
+                .map_or(true, |mask| mask[site]);
+            if owned {
+                self.metas[site].enqueue_batch(
+                    self.engine.as_mut(),
+                    &self.store,
+                    &bucket,
+                    t,
+                )?;
+                self.cache.touch(site);
+                self.events.schedule(t, Ev::Dispatch(site as u32));
+            }
             bucket.clear();
             self.site_buckets[site] = bucket;
         }
@@ -1562,10 +1579,79 @@ impl PdesMsg {
 }
 
 impl World {
+    /// Install the central-mode ownership mask (see the `pdes_owned`
+    /// field): called once per replica when `sim::pdes` shards a
+    /// non-federated run by site block.
+    pub(crate) fn pdes_set_owned(&mut self, mask: Vec<bool>) {
+        debug_assert_eq!(mask.len(), self.sites.len());
+        self.pdes_owned = Some(mask);
+    }
+
+    /// Coordinator-driven admission: `sim::pdes` owns every submission
+    /// (eager `Submit`s and streamed `SourceRefill`s alike) and replays
+    /// it at the window barrier — on the home shard under federation,
+    /// on every replica for a central run. Does NOT bump `total_jobs`;
+    /// the sharded driver keeps the single global count.
+    pub(crate) fn pdes_admit(&mut self, sub: Submission, t: f64) -> Result<()> {
+        self.admit_submission(sub, t)
+    }
+
+    /// Replay home routing for one arrival on this replica. Federated
+    /// PDES admits on the home shard only; the coordinator calls this
+    /// there to learn whether a dead home peer would re-route the
+    /// submission (a case the parallel envelope excludes — see
+    /// `sim::pdes::PdesDecline::PeerFaultPlan`).
+    pub(crate) fn pdes_home_route(
+        &mut self,
+        submit_site: usize,
+    ) -> Option<usize> {
+        self.home_route(submit_site)
+    }
+
+    /// Adopt the coordinator's assembled global site rows as this
+    /// replica's ground-truth cache (the central-mode admission
+    /// barrier): every replica then prices the replayed placement round
+    /// against identical inputs, bit-for-bit the serial leader's view.
+    pub(crate) fn pdes_seed_cache(&mut self, rows: &[SiteSnapshot]) {
+        self.cache.seed(rows);
+    }
+
+    /// The portable (name, size, replicas) identity of a job's input
+    /// dataset, if any — see [`DatasetSpec`].
+    fn dataset_spec_of(&self, job: &Job) -> Option<DatasetSpec> {
+        job.input.map(|ds| {
+            let d = self.catalog.get(ds);
+            DatasetSpec {
+                name: d.name.clone(),
+                size_mb: d.size_mb,
+                replicas: d.replicas.clone(),
+            }
+        })
+    }
+
+    /// Re-resolve a shipped dataset identity against this shard's
+    /// catalog — `lookup` by name, else `add` (bumping the belief epoch
+    /// like any catalog write) — and point the job's input at it.
+    fn pdes_resolve_dataset(&mut self, job: &mut Job, spec: DatasetSpec) {
+        let ds = match self.catalog.lookup(&spec.name) {
+            Some(id) => id,
+            None => {
+                let id =
+                    self.catalog.add(&spec.name, spec.size_mb, spec.replicas);
+                // New dataset: same invalidation rule as `on_deliver`'s
+                // catalog write.
+                self.cache.bump_epoch();
+                id
+            }
+        };
+        job.input = Some(ds);
+    }
+
     /// One conservative window: pop-and-handle every local event
     /// strictly before `window_end`. Coordinator-class events (Monitor,
-    /// MigrationCheck, Gossip, Fault) never live in shard queues — the
-    /// `sim::pdes` coordinator executes them at barriers.
+    /// MigrationCheck, Gossip, Fault, Submit, SourceRefill) never live
+    /// in shard queues — the `sim::pdes` coordinator executes them at
+    /// barriers.
     pub(crate) fn pdes_drain_window(&mut self, window_end: f64) -> Result<()> {
         while let Some((t, ev)) = self.events.pop_before(window_end) {
             crate::ensure!(
@@ -1580,7 +1666,6 @@ impl World {
                 self.cfg.max_events
             );
             match ev {
-                Ev::Submit(i) => self.on_submit(i as usize, t)?,
                 Ev::Dispatch(site) => self.dispatch(site as usize, t),
                 Ev::Finish { job, site } => {
                     self.on_finish(job, site as usize, t)
@@ -1589,11 +1674,11 @@ impl World {
                 Ev::Forward { slot, peer, hops } => {
                     self.on_forward(slot, peer as usize, hops, t)?
                 }
-                // Streaming sources decline PDES (`pdes::eligible`), so
-                // a refill can no more reach a shard queue than a
-                // coordinator event can.
-                Ev::Monitor | Ev::MigrationCheck | Ev::Gossip
-                | Ev::Fault(_) | Ev::SourceRefill => {
+                // Submissions and source refills are coordinator-owned
+                // under PDES (admitted at window barriers via
+                // `pdes_admit`), exactly like the runtime services.
+                Ev::Submit(_) | Ev::Monitor | Ev::MigrationCheck
+                | Ev::Gossip | Ev::Fault(_) | Ev::SourceRefill => {
                     unreachable!("coordinator event in a PDES shard queue")
                 }
             }
@@ -1621,13 +1706,13 @@ impl World {
     pub(crate) fn pdes_extract_cross_into(
         &mut self,
         self_peer: usize,
+        part: &Partition,
         out: &mut Vec<(f64, u64, PdesMsg)>,
     ) {
         let mut scratch = std::mem::take(&mut self.pdes_ev_scratch);
         scratch.clear();
         {
-            let World { events, store, federation, .. } = self;
-            let fed = federation.as_ref().expect("PDES runs are federated");
+            let World { events, store, .. } = self;
             events.drain_matching_into(
                 |ev| match *ev {
                     // Delegation always targets a remote peer; the
@@ -1635,8 +1720,7 @@ impl World {
                     // self-loop in the adjacency tables.
                     Ev::Forward { peer, .. } => peer as usize != self_peer,
                     Ev::Deliver { job } => {
-                        fed.partition.peer_of(store.get(job).submit_site)
-                            != self_peer
+                        part.peer_of(store.get(job).submit_site) != self_peer
                     }
                     _ => false,
                 },
@@ -1654,14 +1738,7 @@ impl World {
                     let mut specs = Vec::with_capacity(jobs_idx.len());
                     for &ji in &jobs_idx {
                         let job = self.store.get(ji).clone();
-                        specs.push(job.input.map(|ds| {
-                            let d = self.catalog.get(ds);
-                            DatasetSpec {
-                                name: d.name.clone(),
-                                size_mb: d.size_mb,
-                                replicas: d.replicas.clone(),
-                            }
-                        }));
+                        specs.push(self.dataset_spec_of(&job));
                         jobs.push(job);
                     }
                     // Recycle the side-table slot like `on_forward`.
@@ -1683,12 +1760,7 @@ impl World {
                 }
                 Ev::Deliver { job } => {
                     let id = self.store.get(job).id;
-                    let home = self
-                        .federation
-                        .as_ref()
-                        .expect("federated")
-                        .partition
-                        .peer_of(self.store.get(job).submit_site);
+                    let home = part.peer_of(self.store.get(job).submit_site);
                     let patch =
                         *self.recorder.job(job).expect("executed job recorded");
                     out.push((
@@ -1713,7 +1785,13 @@ impl World {
     /// caller injects messages in merged `(time, sender_peer, seq)`
     /// order, so the receiver-side seq assignment — and therefore the
     /// pop order among simultaneous arrivals — is deterministic.
-    pub(crate) fn pdes_inject(&mut self, self_peer: usize, at: f64, msg: PdesMsg) {
+    pub(crate) fn pdes_inject(
+        &mut self,
+        self_peer: usize,
+        part: &Partition,
+        at: f64,
+        msg: PdesMsg,
+    ) {
         match msg {
             PdesMsg::Fwd(f) => {
                 let PdesForward { to_peer, hops, jobs, specs, group } = f;
@@ -1723,12 +1801,7 @@ impl World {
                     std::mem::take(&mut self.forwards.get_mut(slot).jobs);
                 buf.clear();
                 for (mut job, spec) in jobs.into_iter().zip(specs) {
-                    let home = self
-                        .federation
-                        .as_ref()
-                        .expect("federated")
-                        .partition
-                        .peer_of(job.submit_site);
+                    let home = part.peer_of(job.submit_site);
                     if home == self_peer {
                         // Forwarded back home: the original slab row
                         // (with its dataflow links and recorder row) is
@@ -1740,21 +1813,7 @@ impl World {
                         continue;
                     }
                     if let Some(spec) = spec {
-                        let ds = match self.catalog.lookup(&spec.name) {
-                            Some(id) => id,
-                            None => {
-                                let id = self.catalog.add(
-                                    &spec.name,
-                                    spec.size_mb,
-                                    spec.replicas,
-                                );
-                                // New dataset: same invalidation rule as
-                                // `on_deliver`'s catalog write.
-                                self.cache.bump_epoch();
-                                id
-                            }
-                        };
-                        job.input = Some(ds);
+                        self.pdes_resolve_dataset(&mut job, spec);
                     }
                     buf.push(self.store.insert(job));
                 }
@@ -1790,6 +1849,7 @@ impl World {
     /// path reads as `cache.q_total()`).
     pub(crate) fn pdes_assemble_global(
         worlds: &mut [World],
+        part: &Partition,
         global: &mut Vec<SiteSnapshot>,
     ) -> usize {
         let n = worlds[0].sites.len();
@@ -1809,8 +1869,7 @@ impl World {
             },
         );
         for (p, w) in worlds.iter().enumerate() {
-            let fed = w.federation.as_ref().expect("federated");
-            for &s in fed.partition.sites_of(p) {
+            for &s in part.sites_of(p) {
                 global[s] = w.cache.snaps()[s];
             }
         }
@@ -1838,15 +1897,44 @@ impl World {
         self.cache.bump_epoch();
     }
 
-    /// Replay a topology-class fault on this replica — the same
-    /// mutations `apply_fault` makes, minus logging (the coordinator
-    /// logs once). Site/peer faults are gated off the parallel path.
+    /// Replay one fault on this replica — the same mutations
+    /// `apply_fault` makes, minus logging (the coordinator logs once).
+    /// `owner` flags the shard that owns the faulted site's queues:
+    /// site-lifecycle side effects that touch the event heap (the
+    /// recovery Dispatch kick) fire there only, while the liveness /
+    /// topology / federation mutations — shared scheduling inputs —
+    /// replay everywhere.
     pub(crate) fn pdes_apply_replicated_fault(
         &mut self,
         fault: &ResolvedFault,
+        owner: bool,
         t: f64,
     ) {
         match fault.clone() {
+            ResolvedFault::SiteDown(s) => {
+                self.set_alive(s, false);
+            }
+            ResolvedFault::SiteUp(s) => {
+                self.set_alive(s, true);
+                // The serial handler kicks the dispatch loop to drain a
+                // queue stranded while the site was dead. Only the
+                // owner shard has that queue — a ghost Dispatch on the
+                // other replicas would skew their processed-event
+                // counts.
+                if owner {
+                    self.events.schedule(t, Ev::Dispatch(s as u32));
+                }
+            }
+            ResolvedFault::PeerDown(p) => {
+                if let Some(fed) = self.federation.as_mut() {
+                    fed.peer_down(p);
+                }
+            }
+            ResolvedFault::PeerUp(p) => {
+                if let Some(fed) = self.federation.as_mut() {
+                    fed.peer_up(p);
+                }
+            }
             ResolvedFault::LinkDegrade {
                 from,
                 to,
@@ -1877,7 +1965,6 @@ impl World {
             ResolvedFault::MonitorBlackout { duration_s } => {
                 self.blackout_until = self.blackout_until.max(t + duration_s);
             }
-            _ => unreachable!("fault kind gated off the parallel path"),
         }
     }
 
@@ -1886,29 +1973,31 @@ impl World {
     /// `migration_check`, each site by its owner shard, with the frozen
     /// J×S cost view re-assembled **globally** per batch round (the
     /// serial sweep's `sync_grid`-per-round equivalent — earlier sites'
-    /// migrations must be visible in Q and the rows). All queue
-    /// mutations stay inside the owner shard: without the dead-site
-    /// escape hatch (site faults are gated off), §IX polling and
-    /// migration targets never leave the owning partition.
+    /// migrations must be visible in Q and the rows). Queue mutations
+    /// usually stay inside the owner shard; a cross-owner migration
+    /// target (the dead-site escape hatch under federation, or any
+    /// migration across central site blocks) moves the job through
+    /// `pdes_migrate_group`'s cross-shard arm.
     pub(crate) fn pdes_migration_check(
         worlds: &mut [World],
+        part: &Partition,
+        fed_mode: bool,
         t: f64,
         global: &mut Vec<SiteSnapshot>,
     ) -> Result<()> {
         let n_sites = worlds[0].sites.len();
         let thrs = worlds[0].cfg.scheduler.congestion_thrs;
         for site in 0..n_sites {
-            let owner = worlds[0]
-                .federation
-                .as_ref()
-                .expect("PDES runs are federated")
-                .partition
-                .peer_of(site);
-            {
+            let owner = part.peer_of(site);
+            let force = {
                 let w = &worlds[owner];
-                debug_assert!(w.alive[site], "PDES shard saw a dead site");
-                if !(w.metas[site].queue_len() > 0
-                    && w.metas[site].is_congested(t, thrs))
+                !w.alive[site] && w.metas[site].queue_len() > 0
+            };
+            {
+                let w = &mut worlds[owner];
+                if !force
+                    && !(w.metas[site].queue_len() > 0
+                        && w.metas[site].is_congested(t, thrs))
                 {
                     continue;
                 }
@@ -1923,8 +2012,9 @@ impl World {
                 let w = &worlds[owner];
                 (0..cands.len())
                     .filter(|&i| {
-                        w.store.get(cands[i].slot).migrations
-                            < w.cfg.scheduler.max_migrations
+                        force
+                            || w.store.get(cands[i].slot).migrations
+                                < w.cfg.scheduler.max_migrations
                     })
                     .collect()
             };
@@ -1948,10 +2038,15 @@ impl World {
                         .collect();
                     (end, group)
                 };
-                let q_total = World::pdes_assemble_global(worlds, global);
-                worlds[owner].migrate_group(
+                let q_total =
+                    World::pdes_assemble_global(worlds, part, global);
+                World::pdes_migrate_group(
+                    worlds,
+                    part,
+                    fed_mode,
+                    owner,
                     site,
-                    false,
+                    force,
                     &cands,
                     &evaluable[start..end],
                     &group,
@@ -1970,6 +2065,185 @@ impl World {
                 .collect();
             worlds[owner].metas[site].reinsert(keep);
             worlds[owner].cache.touch(site);
+        }
+        Ok(())
+    }
+
+    /// The parallel twin of `migrate_group`: cost one submit-coherent
+    /// candidate batch on the owner shard, then run the per-candidate
+    /// §IX decision against **live** peer queues read across shards.
+    ///
+    /// A `Migrate { to }` whose target site lives on the owner shard
+    /// takes exactly the serial path. A cross-owner target moves the
+    /// job row, its lifecycle record and its meta-queue entry to the
+    /// destination shard; the home shard still receives the final
+    /// record through the ordinary `PdesDeliver` patch (the Deliver is
+    /// extracted from whichever shard executes the job).
+    #[allow(clippy::too_many_arguments)]
+    fn pdes_migrate_group(
+        worlds: &mut [World],
+        part: &Partition,
+        fed_mode: bool,
+        owner: usize,
+        site: usize,
+        force: bool,
+        cands: &[MetaJob],
+        idxs: &[usize],
+        group: &[Job],
+        migrated: &mut [bool],
+        t: f64,
+        snaps: &[SiteSnapshot],
+        q_total: usize,
+    ) -> Result<()> {
+        {
+            // One batched cost round on the owner — identical inputs to
+            // the serial round: the caller's frozen global rows and Q,
+            // the owner's replica-row cache (kept bit-identical to the
+            // serial cache by the barrier protocol).
+            let World {
+                ws, engine, replicas, cache, monitor, catalog, cfg, ..
+            } = &mut worlds[owner];
+            let view = GridView {
+                now: t,
+                sites: snaps,
+                monitor,
+                catalog,
+                q_total,
+                epoch: cache.epoch(),
+            };
+            build_cost_inputs_into(group, &view, &mut ws.inputs, replicas);
+            let w = Weights::from_scheduler(&cfg.scheduler, q_total as f32);
+            engine.schedule_step_into(&ws.inputs, &w, &mut ws.out)?;
+        }
+        let max = worlds[owner].cfg.scheduler.max_migrations;
+        // §IX poll set: the owning partition under federation, every
+        // site on a central run (the serial sweep's `federation: None`
+        // arm) — and any alive site when a dead site's stranded queue
+        // must be rescued (the escape hatch).
+        let poll: Vec<usize> = if fed_mode && !force {
+            part.sites_of(part.peer_of(site))
+                .iter()
+                .copied()
+                .filter(|&s| s != site)
+                .collect()
+        } else {
+            (0..worlds[0].sites.len()).filter(|&s| s != site).collect()
+        };
+        for (j, &i) in idxs.iter().enumerate() {
+            let meta = cands[i];
+            let peers: Vec<PeerReport> = poll
+                .iter()
+                .map(|&s| {
+                    let w = &worlds[part.peer_of(s)];
+                    PeerReport {
+                        site: s,
+                        // An arriving job joins the back of its class.
+                        jobs_ahead: w.metas[s]
+                            .jobs_ahead(meta.priority, f64::INFINITY)
+                            + w.sites[s].queue_len(),
+                        queue_len: w.metas[s].queue_len()
+                            + w.sites[s].queue_len(),
+                        total_cost: worlds[owner].ws.out.total_at(j, s),
+                        alive: w.alive[s],
+                    }
+                })
+                .collect();
+            let mut local = {
+                let w = &worlds[owner];
+                PeerReport {
+                    site,
+                    // Locally the job keeps its FCFS slot.
+                    jobs_ahead: w.metas[site]
+                        .jobs_ahead(meta.priority, meta.enqueued_at)
+                        + w.sites[site].queue_len(),
+                    queue_len: w.metas[site].queue_len()
+                        + w.sites[site].queue_len(),
+                    total_cost: w.ws.out.total_at(j, site),
+                    alive: w.alive[site],
+                }
+            };
+            if force {
+                // A dead site is an impossible host: poison its report
+                // so any alive peer wins the §IX comparison.
+                local.jobs_ahead = usize::MAX;
+                local.total_cost = f32::INFINITY;
+            }
+            match decide(
+                local,
+                &peers,
+                max + u32::from(force),
+                group[j].migrations,
+            ) {
+                MigrationDecision::Migrate { to } if part.peer_of(to) == owner => {
+                    // Same-owner move: exactly the serial arm, on the
+                    // owner world.
+                    migrated[i] = true;
+                    let w = &mut worlds[owner];
+                    w.store.get_mut(meta.slot).migrations += 1;
+                    w.metas[site].congestion.record_service(t);
+                    w.recorder.on_export(site, to, t);
+                    w.recorder.job_mut(meta.slot).migrations += 1;
+                    w.metas[to].accept_migrated(w.engine.as_mut(), meta, t)?;
+                    w.cache.touch(to);
+                    w.events.schedule(t, Ev::Dispatch(to as u32));
+                }
+                MigrationDecision::Migrate { to } => {
+                    // Cross-owner move: peel everything off the source
+                    // shard, then build the row on the destination.
+                    migrated[i] = true;
+                    let dst = part.peer_of(to);
+                    let (job_clone, spec, rec_copy) = {
+                        let w = &mut worlds[owner];
+                        w.store.get_mut(meta.slot).migrations += 1;
+                        // Leaving the queue counts as service in the §X
+                        // rate balance (migration relieves the signal
+                        // that triggered it).
+                        w.metas[site].congestion.record_service(t);
+                        w.recorder.on_export_src(site, t);
+                        let mut rec = *w
+                            .recorder
+                            .job(meta.slot)
+                            .expect("queued job recorded");
+                        rec.migrations += 1;
+                        let job = w.store.get(meta.slot).clone();
+                        let spec = w.dataset_spec_of(&job);
+                        (job, spec, rec)
+                    };
+                    let w2 = &mut worlds[dst];
+                    let tgt_slot = match w2.store.lookup(job_clone.id) {
+                        Some(ix) => {
+                            // Central replicas already hold this row
+                            // (admission is replayed everywhere) — sync
+                            // the migration count the owner just
+                            // bumped.
+                            w2.store.get_mut(ix).migrations =
+                                job_clone.migrations;
+                            ix
+                        }
+                        None => {
+                            let mut job = job_clone;
+                            if let Some(spec) = spec {
+                                w2.pdes_resolve_dataset(&mut job, spec);
+                            }
+                            w2.store.insert(job)
+                        }
+                    };
+                    // The destination executes the job, so its recorder
+                    // row becomes the `PdesDeliver` patch source: carry
+                    // the full lifecycle record over.
+                    *w2.recorder.job_mut(tgt_slot) = rec_copy;
+                    w2.recorder.on_import_dst(to, t);
+                    let meta2 = MetaJob { slot: tgt_slot, ..meta };
+                    w2.metas[to].accept_migrated(
+                        w2.engine.as_mut(),
+                        meta2,
+                        t,
+                    )?;
+                    w2.cache.touch(to);
+                    w2.events.schedule(t, Ev::Dispatch(to as u32));
+                }
+                MigrationDecision::StayLocal => {}
+            }
         }
         Ok(())
     }

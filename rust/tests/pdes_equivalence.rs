@@ -5,14 +5,19 @@
 //! sharded run's reports must be byte-identical to the serial
 //! reference (`--sim-threads 1`), for every thread count. The check
 //! runs a randomized fixture sweep — two topologies × flat/tree/ring
-//! peer wiring × seeds × fault plans — through the real sweep runner
-//! and diffs the rendered runs/aggregate CSVs and JSON (the same
-//! artifacts ci.sh compares between thread counts), exactly like the
-//! cached-vs-paranoid harness in `tests/equivalence.rs`.
+//! peer wiring × seeds × fault plans, plus the PR 9 envelope widening:
+//! site-lifecycle fault plans, central (peers < 2) runs and streamed
+//! sources — through the real sweep runner and diffs the rendered
+//! runs/aggregate CSVs and JSON (the same artifacts ci.sh compares
+//! between thread counts), exactly like the cached-vs-paranoid harness
+//! in `tests/equivalence.rs`.
 
 use diana::coordinator::generate_workload;
 use diana::scenario::{run_one, SweepReport, SweepSpec};
-use diana::sim::{try_run_parallel, PdesOutcome};
+use diana::sim::{
+    try_run_parallel, try_run_parallel_streamed, PdesDecline, PdesOutcome,
+    PdesStreamOutcome,
+};
 
 /// Run one spec's matrix serially, then once per parallel thread
 /// count, and assert the serialized reports match byte-for-byte.
@@ -55,17 +60,42 @@ fn assert_threads_equivalence(spec_toml: &str, name: &str) {
 
 /// Guard against a vacuous pass: the fixture configs must actually be
 /// inside the parallel envelope (a silently declined run would compare
-/// serial against serial).
+/// serial against serial). Checks every run in the matrix, eager and
+/// streamed alike, at every compared thread count.
 fn assert_parallel_path_taken(spec_toml: &str, name: &str) {
     let spec = SweepSpec::from_str_named(spec_toml, name).unwrap();
     let runs = spec.expand().unwrap();
-    let mut cfg = runs[0].cfg.clone();
-    cfg.sim.threads = 2;
-    let subs = generate_workload(&cfg);
-    match try_run_parallel(&cfg, subs, &spec.faults).unwrap() {
-        PdesOutcome::Done(..) => {}
-        PdesOutcome::Declined(_) => {
-            panic!("{name}: fixture config declined the parallel path")
+    for run in &runs {
+        for threads in [2usize, 4, 8] {
+            let mut cfg = run.cfg.clone();
+            cfg.sim.threads = threads;
+            if cfg.workload.source.is_streaming() {
+                match try_run_parallel_streamed(&cfg, &spec.faults).unwrap()
+                {
+                    PdesStreamOutcome::Done(_, report) => {
+                        assert!(report.pdes_parallel);
+                        assert!(report.pdes_windows > 0);
+                    }
+                    PdesStreamOutcome::Declined(reason) => panic!(
+                        "{name} run {} declined the parallel path at \
+                         --sim-threads {threads}: {reason}",
+                        run.index
+                    ),
+                }
+            } else {
+                let subs = generate_workload(&cfg);
+                match try_run_parallel(&cfg, subs, &spec.faults).unwrap() {
+                    PdesOutcome::Done(_, report) => {
+                        assert!(report.pdes_parallel);
+                        assert!(report.pdes_windows > 0);
+                    }
+                    PdesOutcome::Declined { reason, .. } => panic!(
+                        "{name} run {} declined the parallel path at \
+                         --sim-threads {threads}: {reason}",
+                        run.index
+                    ),
+                }
+            }
         }
     }
 }
@@ -124,6 +154,46 @@ fn paper_testbed_matches_serial_bitwise() {
 }
 
 #[test]
+fn central_runs_match_serial_bitwise() {
+    // Newly eligible class: no federation (peers = 0) and the
+    // degenerate 1-peer federation — both shard by contiguous site
+    // block with the single scheduler's placement rounds replayed at
+    // admission barriers.
+    let spec = "name = \"pdes-eq-central\"\n\
+                preset = \"uniform-6x4\"\n\
+                base_seed = 23\n\
+                [axes]\n\
+                federation.peers = [0, 1]\n\
+                seed = [3, 14]\n\
+                [set]\n\
+                jobs = 60\n\
+                bulk_size = 12\n\
+                cpu_sec_median = 120.0\n";
+    assert_parallel_path_taken(spec, "pdes-eq-central");
+    assert_threads_equivalence(spec, "pdes-eq-central");
+}
+
+#[test]
+fn streamed_sources_match_serial_bitwise() {
+    // Newly eligible class: lazily pulled workloads. The coordinator
+    // owns the refill chain and admits each submission at a
+    // window-aligned barrier — central and federated.
+    let spec = "name = \"pdes-eq-streamed\"\n\
+                preset = \"uniform-6x4\"\n\
+                base_seed = 29\n\
+                [axes]\n\
+                federation.peers = [0, 2]\n\
+                [set]\n\
+                source = \"streamed\"\n\
+                jobs = 60\n\
+                bulk_size = 12\n\
+                cpu_sec_median = 120.0\n\
+                federation.gossip_period_s = 20.0\n";
+    assert_parallel_path_taken(spec, "pdes-eq-streamed");
+    assert_threads_equivalence(spec, "pdes-eq-streamed");
+}
+
+#[test]
 fn faulted_federation_matches_serial_bitwise() {
     // Every fault kind the parallel path replicates: link degradation,
     // a WAN partition, its heal, and a monitor blackout. Fault times
@@ -167,36 +237,69 @@ fn faulted_federation_matches_serial_bitwise() {
 }
 
 #[test]
-fn ineligible_scenarios_fall_back_to_serial() {
-    // A site-lifecycle fault is outside the replicated set: the run
-    // must decline (and therefore still match serial trivially), not
-    // crash or diverge.
-    let spec_toml = "name = \"pdes-eq-sitedown\"\n\
+fn site_fault_plans_match_serial_bitwise() {
+    // Newly eligible class: site-lifecycle faults. A site dies at
+    // t=20 with queued work (waking the §IX force-migration escape
+    // hatch at the next sweep) and recovers at t=200 — replayed
+    // liveness plus the owner-only recovery kick must reproduce the
+    // serial stream bitwise, federated and central.
+    let spec = "name = \"pdes-eq-sitefault\"\n\
+                preset = \"uniform-6x4\"\n\
+                base_seed = 19\n\
+                [axes]\n\
+                federation.peers = [0, 2]\n\
+                [set]\n\
+                jobs = 40\n\
+                bulk_size = 10\n\
+                cpu_sec_median = 60.0\n\
+                [[fault]]\n\
+                at = 20.0\n\
+                kind = \"site-down\"\n\
+                site = \"s1\"\n\
+                [[fault]]\n\
+                at = 200.0\n\
+                kind = \"site-up\"\n\
+                site = \"s1\"\n";
+    assert_parallel_path_taken(spec, "pdes-eq-sitefault");
+    assert_threads_equivalence(spec, "pdes-eq-sitefault");
+}
+
+#[test]
+fn remaining_declines_fall_back_with_named_reasons() {
+    // Peer-lifecycle faults stay outside the envelope: a dead home
+    // peer re-routes admissions across partitions. The decline must be
+    // named — and the scenario must still match serial trivially.
+    let spec_toml = "name = \"pdes-eq-peerdown\"\n\
                      preset = \"uniform-6x4\"\n\
-                     base_seed = 19\n\
+                     base_seed = 37\n\
                      [set]\n\
                      jobs = 40\n\
                      bulk_size = 10\n\
                      cpu_sec_median = 60.0\n\
                      federation.peers = 2\n\
                      [[fault]]\n\
-                     at = 20.0\n\
-                     kind = \"site-down\"\n\
-                     site = \"s1\"\n\
+                     at = 25.0\n\
+                     kind = \"peer-down\"\n\
+                     peer = 1\n\
                      [[fault]]\n\
-                     at = 200.0\n\
-                     kind = \"site-up\"\n\
-                     site = \"s1\"\n";
-    let spec = SweepSpec::from_str_named(spec_toml, "pdes-eq-sitedown").unwrap();
+                     at = 250.0\n\
+                     kind = \"peer-up\"\n\
+                     peer = 1\n";
+    let spec =
+        SweepSpec::from_str_named(spec_toml, "pdes-eq-peerdown").unwrap();
     let runs = spec.expand().unwrap();
     let mut cfg = runs[0].cfg.clone();
     cfg.sim.threads = 4;
     let subs = generate_workload(&cfg);
+    let n = subs.len();
     match try_run_parallel(&cfg, subs, &spec.faults).unwrap() {
-        PdesOutcome::Declined(_) => {}
+        PdesOutcome::Declined { subs, reason } => {
+            assert_eq!(reason, PdesDecline::PeerFaultPlan);
+            assert_eq!(subs.len(), n, "workload must come back intact");
+        }
         PdesOutcome::Done(..) => {
-            panic!("site-fault scenario must not take the PDES path")
+            panic!("peer-fault scenario must not take the PDES path")
         }
     }
-    assert_threads_equivalence(spec_toml, "pdes-eq-sitedown");
+    assert_threads_equivalence(spec_toml, "pdes-eq-peerdown");
 }

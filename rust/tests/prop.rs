@@ -481,6 +481,115 @@ fn prop_event_heap_matches_binary_heap_reference() {
 }
 
 #[test]
+fn prop_dynamic_lookahead_never_exceeds_true_pair_constraint() {
+    use diana::federation::Partition;
+    use diana::network::Topology;
+    use diana::sim::pdes_lookahead_matrix;
+    prop("dynamic lookahead soundness", 80, |rng| {
+        // Random uniform grid, random contiguous partition, random
+        // smallest output size.
+        let sites = 4 + rng.below(6) as usize;
+        let cfg = diana::config::presets::uniform_grid(sites, 4);
+        let pristine = Topology::from_config(&cfg);
+        let mut topo = pristine.clone();
+        let peers = 2 + rng.below(3) as usize; // 2..=4, sites >= 4
+        let part = Partition::contiguous(sites, peers);
+        let min_out = rng.uniform(0.5, 200.0);
+        // Arbitrary degrade/heal sequence; after every step the matrix
+        // must stay sound against the *mutated* topology.
+        for _ in 0..(1 + rng.below(12)) {
+            if rng.next_f64() < 0.25 {
+                topo.restore_links_from(&pristine);
+            } else {
+                let a = rng.below(sites as u64) as usize;
+                let b = rng.below(sites as u64) as usize;
+                if a != b {
+                    topo.degrade_link(
+                        a,
+                        b,
+                        rng.uniform(0.5, 20.0),
+                        rng.uniform(0.0, 0.2),
+                        rng.uniform(0.05, 2.0),
+                    );
+                }
+            }
+            let central = pdes_lookahead_matrix(&topo, &part, false, min_out);
+            let fed = pdes_lookahead_matrix(&topo, &part, true, min_out);
+            for (name, m) in [("central", &central), ("federated", &fed)] {
+                if m.len() != peers * peers {
+                    return Err(format!("{name}: matrix len {}", m.len()));
+                }
+                for q in 0..peers {
+                    if !m[q * peers + q].is_infinite() {
+                        return Err(format!(
+                            "{name}: diagonal [{q}][{q}] = {} (a shard \
+                             never constrains itself)",
+                            m[q * peers + q]
+                        ));
+                    }
+                }
+            }
+            for q in 0..peers {
+                for p in 0..peers {
+                    if q == p {
+                        continue;
+                    }
+                    // Brute-force oracle over the mutated topology: the
+                    // cheapest latency a q→p output delivery can carry.
+                    // Every matrix entry must lower-bound it ("never
+                    // exceeds the true minimum constraint") — a bound
+                    // above it would let a shard drain past an arrival.
+                    let mut oracle = f64::INFINITY;
+                    for &a in part.sites_of(q) {
+                        for &b in part.sites_of(p) {
+                            oracle =
+                                oracle.min(topo.transfer_seconds(a, b, min_out));
+                        }
+                    }
+                    let c = central[q * peers + p];
+                    let f = fed[q * peers + p];
+                    if c > oracle {
+                        return Err(format!(
+                            "central [{q}][{p}] = {c} exceeds oracle {oracle}"
+                        ));
+                    }
+                    if f > oracle {
+                        return Err(format!(
+                            "federated [{q}][{p}] = {f} exceeds oracle \
+                             {oracle}"
+                        ));
+                    }
+                    // Federated adds the forward class: its bound can
+                    // only tighten, and the RTT clamp keeps it positive
+                    // (the progress guarantee).
+                    if f > c {
+                        return Err(format!(
+                            "federated [{q}][{p}] = {f} looser than \
+                             central {c}"
+                        ));
+                    }
+                    if !(f > 0.0) {
+                        return Err(format!(
+                            "federated [{q}][{p}] = {f} not positive"
+                        ));
+                    }
+                }
+            }
+        }
+        // A heal must restore the pristine matrix bit-for-bit.
+        topo.restore_links_from(&pristine);
+        let healed = pdes_lookahead_matrix(&topo, &part, true, min_out);
+        let original = pdes_lookahead_matrix(&pristine, &part, true, min_out);
+        for (i, (a, b)) in original.iter().zip(healed.iter()).enumerate() {
+            if a.to_bits() != b.to_bits() {
+                return Err(format!("entry {i} not restored: {a} vs {b}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_barrier_merge_matches_single_queue_reference() {
     use diana::sim::Mailbox;
     prop("barrier merge vs single-queue reference", 400, |rng| {
