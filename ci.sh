@@ -157,7 +157,8 @@ grep -q '"shapes"' "$SWEEP_OUT/BENCH_world.json" \
 # more than 15% below the recorded value.
 if [ -f BENCH_world.json ]; then
   for shape in small flood federated federated-t2 federated-t4 \
-               central-t2 central-t4 faulted-fed-t4 streamed-flood; do
+               central-t2 central-t4 faulted-fed-t4 streamed-flood \
+               streamed-flood-t2 streamed-flood-t4; do
     old=$(grep -o "\"name\": \"$shape\", \"events_per_s\": [0-9.]*" \
             BENCH_world.json | grep -o '[0-9.]*$' || true)
     new=$(grep -o "\"name\": \"$shape\", \"events_per_s\": [0-9.]*" \
@@ -259,6 +260,35 @@ if ! diff <(tail -n +2 "$SWEEP_OUT/eager.txt") \
             | grep -v '^peak live jobs'); then
   echo "ci.sh: --source streamed diverged from the eager run"; exit 1
 fi
+
+echo "== streamed+spilled PDES smoke (100k jobs, sim-threads 1 == 4) =="
+# The sharded-spill path end to end on the shipped binary: a 100k-job
+# diurnal stream with spill + slot recycling must take the parallel
+# engine at --sim-threads 4 (each shard sealing into its own shard-<p>/
+# subdirectory, report k-way merged back), stay under the same hard RSS
+# ceiling as the serial spill run, and render a byte-identical metrics
+# table. Only the peak-RSS line (process noise) and the peak-live line
+# (the parallel count is a barrier-sampled upper bound, see
+# docs/PERFORMANCE.md) are excluded from the comparison.
+for t in 1 4; do
+  ./target/release/diana run --preset uniform --sites 16 --cpus 64 \
+      --jobs 100000 --bulk 25 --arrival diurnal --rate-mult 0.01 \
+      --seed 43 --sim-threads $t --spill "$SWEEP_OUT/spill-t$t" \
+      --max-rss-mb 256 > "$SWEEP_OUT/streamed-spill-t$t.txt"
+done
+if ! diff <(grep -Ev '^(peak RSS|peak live jobs)' \
+              "$SWEEP_OUT/streamed-spill-t1.txt") \
+          <(grep -Ev '^(peak RSS|peak live jobs)' \
+              "$SWEEP_OUT/streamed-spill-t4.txt"); then
+  echo "ci.sh: spilled --sim-threads 4 diverged from the serial spill run"
+  exit 1
+fi
+grep -Eq "jobs completed.*100000" "$SWEEP_OUT/streamed-spill-t4.txt" \
+  || { echo "ci.sh: streamed+spilled PDES smoke dropped jobs"; exit 1; }
+grep -q "peak live jobs" "$SWEEP_OUT/streamed-spill-t4.txt" \
+  || { echo "ci.sh: streamed+spilled PDES smoke lost its peak-live line"; exit 1; }
+test -d "$SWEEP_OUT/spill-t4/shard-0" \
+  || { echo "ci.sh: parallel spill run left no shard-0/ subdirectory"; exit 1; }
 
 echo "== streamed 1M-job run (bounded memory, hard RSS ceiling) =="
 # One million diurnal-arrival jobs pulled lazily with spill + slot

@@ -24,6 +24,11 @@
 //! a diurnal arrival stream pulled lazily with spill + slot recycling
 //! on, so the job slab holds *live* jobs only — it reports peak live
 //! jobs (the resident bound) and process peak RSS next to events/s.
+//! `streamed-flood-t2` / `streamed-flood-t4` re-run that shape through
+//! the conservative PDES with per-shard spill subdirectories and the
+//! k-way report merge, asserting the event count matches the serial
+//! streamed baseline and that peak live jobs stays below the submitted
+//! total on every sample.
 //!
 //! Besides events/s it reports each shape's **peak live jobs** (slab
 //! high-water mark) and **peak heap depth** (pending events) — the two
@@ -488,6 +493,85 @@ fn main() {
             peak_heap_depth: peak_heap,
             windows: 0,
             window_events: 0,
+        });
+        std::fs::remove_dir_all(&spill).ok();
+    }
+    // Streamed-flood under the PDES (the sharded-spill shape): the same
+    // lazy diurnal stream at `--sim-threads 2` and `4`, each shard
+    // sealing into its own `shard-<p>/` spill subdirectory and the
+    // report k-way merged back together. Every sample must process
+    // exactly the serial streamed event count, actually take the
+    // parallel path, and keep peak live jobs below the submitted total
+    // — the per-shard recycling claim, measured.
+    let streamed_events = results
+        .iter()
+        .find(|r| r.name == "streamed-flood")
+        .map(|r| r.events)
+        .unwrap();
+    for (name, threads) in
+        [("streamed-flood-t2", 2usize), ("streamed-flood-t4", 4)]
+    {
+        let mut cfg = streamed_cfg(smoke);
+        cfg.sim.threads = threads;
+        let spill = std::env::temp_dir()
+            .join(format!("diana-bench-streamed-spill-t{threads}"));
+        cfg.sim.spill_dir = spill.to_string_lossy().into_owned();
+        let mut events = 0u64;
+        let mut windows = 0u64;
+        let mut window_events = 0u64;
+        let mut peak_live = 0usize;
+        let mut submitted = 0usize;
+        let r = bench(
+            &format!("world {name} jobs={}", cfg.workload.jobs),
+            warmup,
+            samples,
+            || {
+                let (w, report) = run_simulation(&cfg).unwrap();
+                assert_eq!(
+                    report.jobs, cfg.workload.jobs,
+                    "{name}: dropped jobs"
+                );
+                assert_eq!(
+                    report.events, streamed_events,
+                    "{name}: event count diverged from the serial \
+                     streamed baseline"
+                );
+                assert!(report.pdes_parallel, "{name}: fell back to serial");
+                events = report.events;
+                windows = report.pdes_windows;
+                window_events = report.pdes_window_events;
+                peak_live = w.peak_live_jobs();
+                submitted = w.submitted_jobs();
+                black_box(&w);
+            },
+        );
+        r.throughput(events as f64, "events");
+        let events_per_s = events as f64 / (r.mean_ns() / 1e9);
+        assert!(
+            peak_live < submitted,
+            "{name}: slab never recycled \
+             (peak live {peak_live} of {submitted})"
+        );
+        println!(
+            "  └ {windows} windows, {:.1} shard events/window, peak \
+             live jobs {peak_live} of {submitted} submitted",
+            if windows > 0 {
+                window_events as f64 / windows as f64
+            } else {
+                0.0
+            }
+        );
+        println!("world events/s ({name}): {events_per_s:.0}");
+        results.push(ShapeResult {
+            name,
+            events_per_s,
+            events,
+            peak_live_jobs: peak_live,
+            // Heap depth is per-shard here, not comparable to the
+            // single-queue serial rows.
+            peak_heap_depth: 0,
+            windows,
+            window_events,
         });
         std::fs::remove_dir_all(&spill).ok();
     }

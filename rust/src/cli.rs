@@ -2,7 +2,7 @@
 
 use crate::config::{self, GridConfig, Policy};
 use crate::coordinator::{run_simulation, RunReport};
-use crate::metrics::{fmt_secs, render_table, SummaryStats};
+use crate::metrics::{fmt_secs, render_table};
 use crate::priority::{aging_curve, frequency_curve};
 use crate::util::error::{DianaError, Result};
 use crate::util::Args;
@@ -43,8 +43,13 @@ to eager); `--arrival KIND` drives submissions from a stochastic
 process (implies --source arrival); `--trace FILE` replays a CSV/JSONL
 log (implies --source trace). `--spill DIR` streams completed job
 records to disk and recycles job slots so peak RSS tracks *live* jobs —
-`--max-rss-mb N` asserts that afterwards (VmHWM). See
-docs/PERFORMANCE.md for the bounded-memory pipeline.
+`--max-rss-mb N` asserts that afterwards (VmHWM, whole process — it
+covers all PDES workers). Spilled runs parallelize: with
+`--sim-threads N` each shard seals into `DIR/shard-<p>/` and the report
+comes from a streaming merge, byte-identical to the serial run. In
+sweep specs `sim.spill_dir` names a base directory; every run spills
+into its own `run-<index>` subdirectory. See docs/PERFORMANCE.md for
+the bounded-memory pipeline.
 
 PRESETS: paper-testbed (default) | fig4 | cms-tiers | uniform
 SCENARIOS: flash-crowd | flash-crowd-streamed | diurnal-load |
@@ -140,7 +145,7 @@ pub fn load_config(args: &Args) -> Result<GridConfig> {
 }
 
 pub fn print_report(r: &RunReport) {
-    let q = SummaryStats::of(&r.queue_time);
+    let q = r.queue_time;
     let rows = vec![
         vec!["policy".into(), r.policy.into()],
         vec!["jobs completed".into(), r.jobs.to_string()],
@@ -148,9 +153,9 @@ pub fn print_report(r: &RunReport) {
         vec!["queue time (mean)".into(), fmt_secs(q.mean)],
         vec!["queue time (p95)".into(), fmt_secs(q.p95)],
         vec!["queue time (p99)".into(), fmt_secs(q.p99)],
-        vec!["exec time (mean)".into(), fmt_secs(r.exec_time.mean())],
-        vec!["turnaround (mean)".into(), fmt_secs(r.turnaround.mean())],
-        vec!["response (mean)".into(), fmt_secs(r.response_time.mean())],
+        vec!["exec time (mean)".into(), fmt_secs(r.exec_time.mean)],
+        vec!["turnaround (mean)".into(), fmt_secs(r.turnaround.mean)],
+        vec!["response (mean)".into(), fmt_secs(r.response_time.mean)],
         vec![
             "throughput".into(),
             format!("{:.3} jobs/s", r.throughput_jobs_per_s),
@@ -258,9 +263,13 @@ pub fn sweep(args: &Args) -> Result<()> {
         spec.faults.events.len(),
         threads
     );
-    let report = crate::scenario::run_sweep(&spec, threads)?;
-    println!("{}", report.aggregate_table());
     let out = args.get_or("out", "sweep-out");
+    let report = crate::scenario::run_sweep_in(
+        &spec,
+        threads,
+        std::path::Path::new(out),
+    )?;
+    println!("{}", report.aggregate_table());
     for path in report.write_files(out)? {
         println!("wrote {path}");
     }
@@ -419,6 +428,16 @@ mod tests {
         assert!(
             simulate(&parse(&format!("{base} --max-rss-mb big"))).is_err()
         );
+        // Parallel spilled runs are covered too: VmHWM is process-wide
+        // and the assertion runs after the PDES workers have joined.
+        let dir = std::env::temp_dir().join("diana-cli-rss-spill");
+        std::fs::remove_dir_all(&dir).ok();
+        simulate(&parse(&format!(
+            "{base} --sim-threads 2 --spill {} --max-rss-mb 65536",
+            dir.display()
+        )))
+        .unwrap();
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -416,9 +416,14 @@ pub struct SimConfig {
     /// When non-empty (TOML `[sim] spill_dir`, CLI `--spill DIR`) a
     /// streamed run seals each delivered job's record to sorted on-disk
     /// CSV shards in this directory and recycles its `JobStore` slot,
-    /// bounding peak RSS by *live* jobs. The shards are merged back in
-    /// submission order at report time, so the report stays
-    /// byte-identical to the in-memory path. Ignored for eager runs.
+    /// bounding peak RSS by *live* jobs. Serial runs write here
+    /// directly; parallel (`threads >= 2`) runs give each PDES shard
+    /// its own `shard-<p>/` subdirectory. Either way the report is
+    /// assembled by a streaming k-way merge over the sorted shards in
+    /// submission order (`metrics::spill_merge`, O(shards) memory), so
+    /// it stays byte-identical to the in-memory path. Ignored for
+    /// eager runs. Sweep specs may set it (`sim.spill_dir`); the sweep
+    /// runner then gives every run its own `run-<index>` subdirectory.
     pub spill_dir: String,
 }
 

@@ -27,16 +27,18 @@
 //! equivalence suite pins its event stream to the eager one
 //! byte-for-byte.
 
+use std::path::PathBuf;
+
 use crate::util::error::Result;
 
 use crate::config::GridConfig;
 use crate::data::Catalog;
-use crate::metrics::{JobRecord, Recorder};
+use crate::metrics::{scan_stats, JobRecord, Recorder, SummaryStats};
 use crate::runtime::make_engine;
 use crate::scenario::faults::FaultPlan;
 use crate::scheduler::make_picker;
 use crate::sim::World;
-use crate::util::{Pcg64, Summary};
+use crate::util::Pcg64;
 use crate::workload::{source_from_config, Submission, WorkloadGen};
 
 /// Summary of one end-to-end run (central or federated — the report
@@ -49,12 +51,17 @@ pub struct RunReport {
     pub jobs: usize,
     pub makespan_s: f64,
     /// §VI queue/waiting time distribution (submission → CPU allocation).
-    pub queue_time: Summary,
-    pub exec_time: Summary,
+    /// A fixed-size [`SummaryStats`] snapshot (mean, p50/p95/p99,
+    /// range) rather than the raw value vector: everything downstream
+    /// reads off these fields, and the snapshot is what a bounded-memory
+    /// spilled run can assemble in O(shards) without materializing the
+    /// population.
+    pub queue_time: SummaryStats,
+    pub exec_time: SummaryStats,
     /// §VI turnaround (submission → output delivered).
-    pub turnaround: Summary,
+    pub turnaround: SummaryStats,
     /// §VI response time (submission → first placement).
-    pub response_time: Summary,
+    pub response_time: SummaryStats,
     pub throughput_jobs_per_s: f64,
     /// §IX queue-to-queue migrations performed.
     pub migrations: u64,
@@ -102,10 +109,10 @@ impl RunReport {
             policy,
             jobs: recorder.n_completed(),
             makespan_s: makespan,
-            queue_time: recorder.summary(JobRecord::queue_time),
-            exec_time: recorder.summary(JobRecord::exec_time),
-            turnaround: recorder.summary(JobRecord::turnaround),
-            response_time: recorder.summary(JobRecord::response_time),
+            queue_time: SummaryStats::of(&recorder.summary(JobRecord::queue_time)),
+            exec_time: SummaryStats::of(&recorder.summary(JobRecord::exec_time)),
+            turnaround: SummaryStats::of(&recorder.summary(JobRecord::turnaround)),
+            response_time: SummaryStats::of(&recorder.summary(JobRecord::response_time)),
             throughput_jobs_per_s: recorder.throughput(),
             migrations: recorder.migrations,
             groups_split: recorder.groups_split,
@@ -119,54 +126,51 @@ impl RunReport {
         }
     }
 
-    /// Build a report from a spilled run's on-disk shards. The k-way
-    /// merge replays sealed records in submission-ordinal order — the
-    /// exact order `completed_records()` iterates the eager slab — and
-    /// floats round-trip as raw bits, so every field here is
-    /// **byte-identical** to what `from_parts` computes in memory.
-    /// (The four metric vectors are O(completed) transiently; the run
-    /// itself stayed bounded by live jobs.)
+    /// Build a report from a serial spilled run's on-disk shards: flush
+    /// the recorder's buffered tail, then hand every shard file to the
+    /// streaming merge. See [`RunReport::from_spill_files`] for the
+    /// identity and memory guarantees.
     pub fn from_spill(
         policy: &'static str,
         recorder: &mut Recorder,
         events: u64,
     ) -> Result<RunReport> {
-        let mut rows = recorder.finish_spill()?;
-        let mut queue = Vec::new();
-        let mut exec = Vec::new();
-        let mut turnaround = Vec::new();
-        let mut response = Vec::new();
-        let mut makespan = 0.0f64;
-        while let Some((_ordinal, r)) = rows.next_row()? {
-            // Same completion filter as `completed_records()`; every
-            // sealed record was delivered, so nothing is dropped.
-            if r.delivered > 0.0 {
-                queue.push(r.queue_time());
-                exec.push(r.exec_time());
-                turnaround.push(r.turnaround());
-                response.push(r.response_time());
-                makespan = makespan.max(r.delivered);
-            }
-        }
-        let jobs = queue.len();
-        let throughput = if makespan <= 0.0 {
-            0.0
-        } else {
-            jobs as f64 / makespan
-        };
+        recorder.flush_spill_tail()?;
+        let files = recorder.spill_files();
+        RunReport::from_spill_files(policy, &files, recorder, events)
+    }
+
+    /// Build a report from spilled shard files — any number of them,
+    /// from one directory (serial run) or one directory per PDES shard.
+    /// The streaming merge ([`crate::metrics::spill_merge`]) replays
+    /// sealed records in submission-ordinal order — the exact order
+    /// `completed_records()` iterates the eager slab — with floats
+    /// round-tripped as raw bits and the percentiles radix-selected, so
+    /// every field here is **byte-identical** to what `from_parts`
+    /// computes in memory while assembly stays O(shards). `counters`
+    /// supplies the event-count tallies (migrations, splits,
+    /// delegations), which the PDES path has already merged across
+    /// shards.
+    pub fn from_spill_files(
+        policy: &'static str,
+        files: &[PathBuf],
+        counters: &Recorder,
+        events: u64,
+    ) -> Result<RunReport> {
+        let st = scan_stats(files)?;
         Ok(RunReport {
             policy,
-            jobs,
-            makespan_s: makespan,
-            queue_time: Summary::from_values(queue),
-            exec_time: Summary::from_values(exec),
-            turnaround: Summary::from_values(turnaround),
-            response_time: Summary::from_values(response),
-            throughput_jobs_per_s: throughput,
-            migrations: recorder.migrations,
-            groups_split: recorder.groups_split,
-            groups_whole: recorder.groups_whole,
-            delegations: recorder.delegations,
+            jobs: st.jobs,
+            makespan_s: st.makespan_s,
+            queue_time: st.queue,
+            exec_time: st.exec,
+            turnaround: st.turnaround,
+            response_time: st.response,
+            throughput_jobs_per_s: st.throughput_jobs_per_s,
+            migrations: counters.migrations,
+            groups_split: counters.groups_split,
+            groups_whole: counters.groups_whole,
+            delegations: counters.delegations,
             events,
             pdes_parallel: false,
             pdes_windows: 0,
@@ -201,9 +205,11 @@ pub fn run_simulation(cfg: &GridConfig) -> Result<(World, RunReport)> {
 /// one. With `--sim-threads N` an eligible streamed run takes the
 /// conservative PDES (`sim::pdes`): the coordinator owns the refill
 /// chain and admits each pulled submission at a window-aligned
-/// barrier, bit-identical to this serial path. Spill runs stay serial
-/// (one on-disk recorder cannot be sharded) — see
-/// [`PdesDecline`](crate::sim::PdesDecline) for the full decline list.
+/// barrier, bit-identical to this serial path. Spilled runs
+/// parallelize too — each shard seals into its own
+/// `<spill_dir>/shard-<p>/` subdirectory and the report comes from the
+/// global streaming merge — see
+/// [`PdesDecline`](crate::sim::PdesDecline) for what still declines.
 pub fn run_simulation_streamed(
     cfg: &GridConfig,
     faults: &FaultPlan,
@@ -349,7 +355,7 @@ mod tests {
         let (_, a) = run_simulation_with(&cfg, subs.clone()).unwrap();
         let (_, b) = run_simulation_with(&cfg, subs).unwrap();
         assert_eq!(a.makespan_s, b.makespan_s);
-        assert_eq!(a.queue_time.mean(), b.queue_time.mean());
+        assert_eq!(a.queue_time.mean, b.queue_time.mean);
     }
 
     #[test]
@@ -369,8 +375,8 @@ mod tests {
             streamed.makespan_s.to_bits()
         );
         assert_eq!(
-            eager.queue_time.mean().to_bits(),
-            streamed.queue_time.mean().to_bits()
+            eager.queue_time.mean.to_bits(),
+            streamed.queue_time.mean.to_bits()
         );
     }
 
@@ -401,9 +407,16 @@ mod tests {
             (&in_mem.turnaround, &spilled.turnaround),
             (&in_mem.response_time, &spilled.response_time),
         ] {
-            assert_eq!(a.len(), b.len());
-            for (x, y) in a.values().iter().zip(b.values()) {
-                assert_eq!(x.to_bits(), y.to_bits());
+            assert_eq!(a.n, b.n);
+            for (x, y, field) in [
+                (a.mean, b.mean, "mean"),
+                (a.p50, b.p50, "p50"),
+                (a.p95, b.p95, "p95"),
+                (a.p99, b.p99, "p99"),
+                (a.min, b.min, "min"),
+                (a.max, b.max, "max"),
+            ] {
+                assert_eq!(x.to_bits(), y.to_bits(), "{field}: {x} vs {y}");
             }
         }
         assert_eq!(in_mem.migrations, spilled.migrations);
@@ -427,8 +440,8 @@ mod tests {
         assert_eq!(diana.jobs, fcfs.jobs);
         // The §XI claim, at smoke-test scale: DIANA queues no worse than
         // the single-queue broker.
-        assert!(diana.queue_time.mean() <= fcfs.queue_time.mean() * 1.5,
-                "diana {} vs fcfs {}", diana.queue_time.mean(),
-                fcfs.queue_time.mean());
+        assert!(diana.queue_time.mean <= fcfs.queue_time.mean * 1.5,
+                "diana {} vs fcfs {}", diana.queue_time.mean,
+                fcfs.queue_time.mean);
     }
 }

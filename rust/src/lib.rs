@@ -25,7 +25,7 @@
 //! cfg.workload.jobs = 100;
 //! let (_world, report) = run_simulation(&cfg).expect("simulation failed");
 //! println!("policy: {}", report.policy);
-//! println!("mean queue time: {:.1}s", report.queue_time.mean());
+//! println!("mean queue time: {:.1}s", report.queue_time.mean);
 //! println!("makespan: {:.0}s over {} jobs", report.makespan_s, report.jobs);
 //! ```
 //!

@@ -3,6 +3,8 @@
 
 pub mod recorder;
 pub mod report;
+pub mod spill_merge;
 
 pub use recorder::{JobRecord, Recorder, SiteSeries, SpillRows};
 pub use report::{fmt_secs, render_csv, render_table, SummaryStats};
+pub use spill_merge::{scan_stats, MergedRows, SpillStats};

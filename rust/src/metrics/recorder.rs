@@ -17,6 +17,15 @@
 //! Ordinal order is exactly the eager run's slab order, and float
 //! fields round-trip as raw bits, so a report built from the merge is
 //! **byte-identical** to the in-memory path's.
+//!
+//! Under the parallel PDES each shard's recorder spills to its **own**
+//! subdirectory (`<spill_dir>/shard-<p>/`), keeping the single-writer
+//! discipline on the hot path; report assembly then streams a k-way
+//! merge over *every* shard's files in O(shards) memory
+//! ([`crate::metrics::spill_merge`]). [`Recorder::evict`] is the
+//! non-spilling counterpart of [`Recorder::seal`] for replica copies a
+//! shard holds but does not own — dropped, never written, so each
+//! job's record lands in exactly one shard directory.
 
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::path::{Path, PathBuf};
@@ -300,6 +309,43 @@ impl Recorder {
         Ok(())
     }
 
+    /// Drop a job's record from the dense table **without** spilling it
+    /// (spill mode only — the caller is about to recycle the slot).
+    /// PDES bounded-memory runs use this for replica copies whose
+    /// authoritative record lives on — and is sealed by — another
+    /// shard: evicting keeps every shard's resident state proportional
+    /// to its *live* share while the write-once invariant (exactly one
+    /// sealed record per job, at its home shard) keeps the merge exact.
+    pub fn evict(&mut self, idx: JobIdx) {
+        let i = idx.as_usize();
+        if i < self.jobs.len() {
+            self.jobs[i] = JobRecord::default();
+        }
+    }
+
+    /// Flush the buffered tail to a final sorted shard file (no-op when
+    /// the buffer is empty). The multi-recorder report assembly
+    /// (`metrics::spill_merge`) calls this on every shard's recorder
+    /// before collecting [`Recorder::spill_files`].
+    pub fn flush_spill_tail(&mut self) -> Result<()> {
+        let spill = self
+            .spill
+            .as_mut()
+            .expect("flush_spill_tail without spill enabled");
+        Self::flush_shard(spill)
+    }
+
+    /// Paths of every sorted shard file written so far, in write order
+    /// (each internally sorted by ordinal — the k-way merge's input).
+    pub fn spill_files(&self) -> Vec<PathBuf> {
+        match &self.spill {
+            None => Vec::new(),
+            Some(sp) => (0..sp.shards)
+                .map(|s| sp.dir.join(format!("shard-{s:05}.csv")))
+                .collect(),
+        }
+    }
+
     /// Flush the tail shard and open a streaming ordinal-order merge
     /// over every sealed record. Call once, at report time.
     pub fn finish_spill(&mut self) -> Result<SpillRows> {
@@ -347,42 +393,53 @@ impl ShardHead {
             return Ok(());
         }
         self.ln += 1;
-        let (path, ln) = (&self.path, self.ln);
-        let mut cols = [""; 9];
-        let mut n = 0;
-        for (i, c) in self.buf.trim_end().split(',').enumerate() {
-            crate::ensure!(i < 9, "{path}:{ln}: want 9 columns");
-            cols[i] = c;
-            n = i + 1;
-        }
-        crate::ensure!(n == 9, "{path}:{ln}: want 9 columns, got {n}");
-        let bits = |i: usize| -> Result<f64> {
-            u64::from_str_radix(cols[i], 16).map(f64::from_bits).map_err(
-                |_| crate::err!("{path}:{ln}: bad hex field `{}`", cols[i]),
-            )
-        };
-        let ordinal: u64 = cols[0]
-            .parse()
-            .map_err(|_| crate::err!("{path}:{ln}: bad ordinal `{}`", cols[0]))?;
-        self.next = Some((
-            ordinal,
-            JobRecord {
-                submit: bits(1)?,
-                placed: bits(2)?,
-                enqueued_local: bits(3)?,
-                started: bits(4)?,
-                finished: bits(5)?,
-                delivered: bits(6)?,
-                exec_site: cols[7].parse().map_err(|_| {
-                    crate::err!("{path}:{ln}: bad exec_site `{}`", cols[7])
-                })?,
-                migrations: cols[8].parse().map_err(|_| {
-                    crate::err!("{path}:{ln}: bad migrations `{}`", cols[8])
-                })?,
-            },
-        ));
+        self.next = Some(parse_spill_line(&self.path, self.ln, &self.buf)?);
         Ok(())
     }
+}
+
+/// Parse one spill CSV line (the 9-column format `flush_shard` writes,
+/// floats as raw hex bits). Shared by the in-recorder merge above and
+/// the multi-shard streaming merge (`metrics::spill_merge`), so both
+/// decode identical bits from identical bytes.
+pub(crate) fn parse_spill_line(
+    path: &str,
+    ln: usize,
+    line: &str,
+) -> Result<(u64, JobRecord)> {
+    let mut cols = [""; 9];
+    let mut n = 0;
+    for (i, c) in line.trim_end().split(',').enumerate() {
+        crate::ensure!(i < 9, "{path}:{ln}: want 9 columns");
+        cols[i] = c;
+        n = i + 1;
+    }
+    crate::ensure!(n == 9, "{path}:{ln}: want 9 columns, got {n}");
+    let bits = |i: usize| -> Result<f64> {
+        u64::from_str_radix(cols[i], 16).map(f64::from_bits).map_err(
+            |_| crate::err!("{path}:{ln}: bad hex field `{}`", cols[i]),
+        )
+    };
+    let ordinal: u64 = cols[0]
+        .parse()
+        .map_err(|_| crate::err!("{path}:{ln}: bad ordinal `{}`", cols[0]))?;
+    Ok((
+        ordinal,
+        JobRecord {
+            submit: bits(1)?,
+            placed: bits(2)?,
+            enqueued_local: bits(3)?,
+            started: bits(4)?,
+            finished: bits(5)?,
+            delivered: bits(6)?,
+            exec_site: cols[7].parse().map_err(|_| {
+                crate::err!("{path}:{ln}: bad exec_site `{}`", cols[7])
+            })?,
+            migrations: cols[8].parse().map_err(|_| {
+                crate::err!("{path}:{ln}: bad migrations `{}`", cols[8])
+            })?,
+        },
+    ))
 }
 
 /// Streaming k-way merge over sorted spill shards, yielding sealed

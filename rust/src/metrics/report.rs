@@ -32,6 +32,22 @@ pub struct SummaryStats {
     pub max: f64,
 }
 
+/// 0-based fractional interpolation rank of percentile `p` over `n`
+/// values — the one rank formula every percentile path shares (the
+/// in-memory snapshot below, `Summary::percentile`, and the spill-merge
+/// radix selection), so they agree to the bit.
+pub(crate) fn percentile_rank(p: f64, n: usize) -> f64 {
+    (p / 100.0) * (n - 1) as f64
+}
+
+/// Linear interpolation between the floor/ceil order statistics of a
+/// fractional rank. Shared verbatim by the in-memory and spill-merge
+/// percentile paths — both must emit identical bits.
+pub(crate) fn percentile_interp(r: f64, lo: f64, hi: f64) -> f64 {
+    let frac = r - r.floor();
+    lo * (1.0 - frac) + hi * frac
+}
+
 impl SummaryStats {
     /// Snapshot `s` (all-zero for an empty summary).
     pub fn of(s: &Summary) -> SummaryStats {
@@ -40,8 +56,11 @@ impl SummaryStats {
             return SummaryStats::default();
         }
         let n = vals.len();
-        let rank = |p: f64| (p / 100.0) * (n - 1) as f64;
-        let (r50, r95, r99) = (rank(50.0), rank(95.0), rank(99.0));
+        let (r50, r95, r99) = (
+            percentile_rank(50.0, n),
+            percentile_rank(95.0, n),
+            percentile_rank(99.0, n),
+        );
         let ranks = [
             r50.floor() as usize,
             r50.ceil() as usize,
@@ -53,16 +72,12 @@ impl SummaryStats {
         let mut v = vals.to_vec();
         let mut stats = [0.0f64; 6];
         order_stats_in_place(&mut v, &ranks, &mut stats);
-        let interp = |r: f64, lo: f64, hi: f64| {
-            let frac = r - r.floor();
-            lo * (1.0 - frac) + hi * frac
-        };
         SummaryStats {
             n,
             mean: vals.iter().sum::<f64>() / n as f64,
-            p50: interp(r50, stats[0], stats[1]),
-            p95: interp(r95, stats[2], stats[3]),
-            p99: interp(r99, stats[4], stats[5]),
+            p50: percentile_interp(r50, stats[0], stats[1]),
+            p95: percentile_interp(r95, stats[2], stats[3]),
+            p99: percentile_interp(r99, stats[4], stats[5]),
             min: vals.iter().copied().fold(f64::INFINITY, f64::min),
             max: vals.iter().copied().fold(f64::NEG_INFINITY, f64::max),
         }

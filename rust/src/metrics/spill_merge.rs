@@ -1,0 +1,587 @@
+//! Streaming report assembly over spilled job records: a k-way merge
+//! across **every** shard's sorted spill files plus a radix-selection
+//! percentile pass, all in O(shards) memory.
+//!
+//! A spilled run leaves its sealed records in sorted-by-ordinal CSV
+//! shard files — one directory per recorder (`<spill_dir>` serially,
+//! `<spill_dir>/shard-<p>/` per PDES shard). Report assembly needs the
+//! exact statistics the in-memory path computes from its dense record
+//! table, but materializing the records (the old `RunReport::from_spill`
+//! transient) is O(completed) — the one thing a bounded-memory run must
+//! not do. This module computes every reported figure straight off the
+//! files:
+//!
+//! * **Ordinal-order moments** ([`MergedRows`]): a binary heap over one
+//!   read cursor per file yields records in global submission-ordinal
+//!   order — exactly the order the eager recorder's slab iterates — so
+//!   the streaming mean/min/max/makespan folds reproduce the in-memory
+//!   folds bit-for-bit (float addition is order-sensitive; the order is
+//!   identical, so the bits are too).
+//! * **Exact percentiles** (radix selection): the p50/p95/p99 order
+//!   statistics are found by successive 16-bit counting passes over the
+//!   files on a `total_cmp`-order-preserving `u64` key — 4 sequential
+//!   re-scans, 65536-bucket histograms, no value vector. Selection is
+//!   order-insensitive, so these passes skip the heap and read each
+//!   file independently. The final interpolation shares the literal
+//!   rank/interp arithmetic of [`SummaryStats::of`]
+//!   ([`percentile_rank`] / [`percentile_interp`]), so both paths emit
+//!   identical bits.
+//!
+//! Floats are carried as raw bits end-to-end: written as hex bits by
+//! the recorder, parsed back with [`parse_spill_line`], selected via
+//! the bijective key transform — no decimal round-trip anywhere.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::io::{BufRead, BufReader};
+use std::path::{Path, PathBuf};
+
+use crate::metrics::recorder::parse_spill_line;
+use crate::metrics::report::{percentile_interp, percentile_rank};
+use crate::metrics::{JobRecord, SummaryStats};
+use crate::util::error::{Context, Result};
+
+/// One spill file's read cursor: a buffered line reader that decodes
+/// rows on demand. Working set: one line buffer.
+struct Cursor {
+    path: String,
+    reader: BufReader<std::fs::File>,
+    buf: String,
+    ln: usize,
+}
+
+impl Cursor {
+    fn open(path: &Path) -> Result<Cursor> {
+        Ok(Cursor {
+            path: path.display().to_string(),
+            reader: BufReader::new(
+                std::fs::File::open(path).with_context(|| {
+                    format!("opening spill shard {}", path.display())
+                })?,
+            ),
+            buf: String::new(),
+            ln: 0,
+        })
+    }
+
+    fn next_record(&mut self) -> Result<Option<(u64, JobRecord)>> {
+        self.buf.clear();
+        if self.reader.read_line(&mut self.buf)? == 0 {
+            return Ok(None);
+        }
+        self.ln += 1;
+        parse_spill_line(&self.path, self.ln, &self.buf).map(Some)
+    }
+}
+
+/// Streaming k-way merge over any number of sorted spill files (from
+/// one directory or many per-shard directories), yielding records in
+/// ascending global-ordinal order. Memory is O(files): one cursor, one
+/// buffered line and one decoded head row per file, plus the heap of
+/// `(ordinal, cursor)` keys — never the full record set.
+pub struct MergedRows {
+    cursors: Vec<Cursor>,
+    /// Decoded head row per cursor (`None` once drained).
+    heads: Vec<Option<JobRecord>>,
+    /// Min-heap of `(head ordinal, cursor index)` — the index tiebreak
+    /// makes pop order deterministic even if ordinals ever collided.
+    heap: BinaryHeap<Reverse<(u64, usize)>>,
+}
+
+impl MergedRows {
+    /// Open every file and prime the heap with each one's head row.
+    pub fn open(files: &[PathBuf]) -> Result<MergedRows> {
+        let mut cursors = Vec::with_capacity(files.len());
+        for p in files {
+            cursors.push(Cursor::open(p)?);
+        }
+        let mut heads = Vec::with_capacity(cursors.len());
+        let mut heap = BinaryHeap::with_capacity(cursors.len());
+        for (i, c) in cursors.iter_mut().enumerate() {
+            match c.next_record()? {
+                Some((o, r)) => {
+                    heads.push(Some(r));
+                    heap.push(Reverse((o, i)));
+                }
+                None => heads.push(None),
+            }
+        }
+        Ok(MergedRows { cursors, heads, heap })
+    }
+
+    /// The next `(ordinal, record)` in ascending ordinal order.
+    pub fn next_row(&mut self) -> Result<Option<(u64, JobRecord)>> {
+        let Reverse((o, i)) = match self.heap.pop() {
+            Some(top) => top,
+            None => return Ok(None),
+        };
+        let row = self.heads[i].take().expect("heap entry without head row");
+        if let Some((no, nr)) = self.cursors[i].next_record()? {
+            self.heads[i] = Some(nr);
+            self.heap.push(Reverse((no, i)));
+        }
+        Ok(Some((o, row)))
+    }
+
+    /// Number of open cursors — the merge's whole working set scales
+    /// with this, not with the record count (capacity assertions).
+    pub fn cursor_count(&self) -> usize {
+        self.cursors.len()
+    }
+
+    /// Largest line-buffer capacity across cursors. A spill line is
+    /// ~120 bytes; this staying small while millions of rows stream
+    /// through is the O(shards)-memory claim, pinned by tests.
+    pub fn max_line_capacity(&self) -> usize {
+        self.cursors.iter().map(|c| c.buf.capacity()).max().unwrap_or(0)
+    }
+}
+
+/// The four reported per-job metrics, in report-column order. The
+/// derivations run on the decoded bit-exact record, so each value is
+/// bit-identical to what the in-memory path derives from its table.
+fn metric_values(r: &JobRecord) -> [f64; 4] {
+    [r.queue_time(), r.exec_time(), r.turnaround(), r.response_time()]
+}
+
+/// Map `v` to a `u64` whose unsigned order equals `f64::total_cmp`
+/// order (sign-magnitude flip): non-negative bit patterns get the sign
+/// bit set, negative patterns are fully inverted. Bijective, so the
+/// selected key decodes back to the exact input bits.
+fn sortable_key(v: f64) -> u64 {
+    let b = v.to_bits();
+    if b >> 63 == 0 {
+        b ^ (1u64 << 63)
+    } else {
+        !b
+    }
+}
+
+/// Inverse of [`sortable_key`].
+fn key_value(k: u64) -> f64 {
+    f64::from_bits(if k >> 63 == 1 { k ^ (1u64 << 63) } else { !k })
+}
+
+/// Resolve the `wanted` 0-based order statistics — `(metric index,
+/// rank)` pairs over the completed population — by 16-bit radix
+/// selection: 4 sequential scans of `files`, each counting the next 16
+/// key bits into 65536-bucket histograms (one per distinct
+/// `(metric, resolved-prefix)` group). Returns the selected values
+/// aligned with `wanted`. Memory: histograms only — independent of the
+/// record count.
+fn select_order_stats(
+    files: &[PathBuf],
+    wanted: &[(usize, u64)],
+) -> Result<Vec<f64>> {
+    struct Sel {
+        metric: usize,
+        target: u64,
+        /// Key bits resolved so far (high bits; low bits zero).
+        prefix: u64,
+        /// Records known `< prefix` on the resolved bits.
+        below: u64,
+    }
+    let mut sels: Vec<Sel> = wanted
+        .iter()
+        .map(|&(m, t)| Sel { metric: m, target: t, prefix: 0, below: 0 })
+        .collect();
+    for pass in 0..4u32 {
+        let shift = 48 - 16 * pass;
+        let fixed_mask: u64 =
+            if pass == 0 { 0 } else { !0u64 << (shift + 16) };
+        let mut groups: Vec<(usize, u64, Vec<u64>)> = Vec::new();
+        for s in &sels {
+            if !groups
+                .iter()
+                .any(|(m, p, _)| *m == s.metric && *p == s.prefix)
+            {
+                groups.push((s.metric, s.prefix, vec![0u64; 1 << 16]));
+            }
+        }
+        for path in files {
+            let mut cur = Cursor::open(path)?;
+            while let Some((_, r)) = cur.next_record()? {
+                if r.delivered <= 0.0 {
+                    continue;
+                }
+                let v = metric_values(&r);
+                let keys = [
+                    sortable_key(v[0]),
+                    sortable_key(v[1]),
+                    sortable_key(v[2]),
+                    sortable_key(v[3]),
+                ];
+                for (m, p, hist) in groups.iter_mut() {
+                    let k = keys[*m];
+                    if k & fixed_mask == *p {
+                        hist[((k >> shift) & 0xFFFF) as usize] += 1;
+                    }
+                }
+            }
+        }
+        for s in sels.iter_mut() {
+            let hist = &groups
+                .iter()
+                .find(|(m, p, _)| *m == s.metric && *p == s.prefix)
+                .expect("selector group built above")
+                .2;
+            let mut below = s.below;
+            let mut found = None;
+            for (b, &c) in hist.iter().enumerate() {
+                if below + c > s.target {
+                    found = Some(b as u64);
+                    break;
+                }
+                below += c;
+            }
+            let b = found.ok_or_else(|| {
+                crate::err!(
+                    "spill percentile rank {} exceeds the completed \
+                     population",
+                    s.target
+                )
+            })?;
+            s.prefix |= b << shift;
+            s.below = below;
+        }
+    }
+    Ok(sels.iter().map(|s| key_value(s.prefix)).collect())
+}
+
+/// Every figure a [`RunReport`](crate::coordinator::RunReport) states
+/// about the job population, computed streaming from spill files.
+#[derive(Clone, Debug, Default)]
+pub struct SpillStats {
+    pub jobs: usize,
+    pub makespan_s: f64,
+    pub throughput_jobs_per_s: f64,
+    pub queue: SummaryStats,
+    pub exec: SummaryStats,
+    pub turnaround: SummaryStats,
+    pub response: SummaryStats,
+}
+
+/// Compute [`SpillStats`] over `files` (all shards' sorted spill files,
+/// any number of directories). One merged ordinal-order pass for the
+/// order-sensitive folds, then 4 selection scans for the exact
+/// percentiles — ≤ 5 sequential reads of the data, O(shards) + fixed
+/// histogram memory, and every field bit-identical to the in-memory
+/// snapshot over the same records.
+pub fn scan_stats(files: &[PathBuf]) -> Result<SpillStats> {
+    let mut rows = MergedRows::open(files)?;
+    let mut n = 0usize;
+    let mut sums = [0.0f64; 4];
+    let mut mins = [f64::INFINITY; 4];
+    let mut maxs = [f64::NEG_INFINITY; 4];
+    let mut makespan = 0.0f64;
+    let mut prev: Option<u64> = None;
+    while let Some((o, r)) = rows.next_row()? {
+        // Strictly ascending ordinals double as the write-once check:
+        // a record sealed by two shards would collide here.
+        crate::ensure!(
+            prev.map_or(true, |p| o > p),
+            "spill merge saw duplicate or unsorted ordinal {o} — was a \
+             job record sealed on two shards?"
+        );
+        prev = Some(o);
+        // Same completion filter as `completed_records()`.
+        if r.delivered > 0.0 {
+            let v = metric_values(&r);
+            for m in 0..4 {
+                sums[m] += v[m];
+                mins[m] = f64::min(mins[m], v[m]);
+                maxs[m] = f64::max(maxs[m], v[m]);
+            }
+            makespan = makespan.max(r.delivered);
+            n += 1;
+        }
+    }
+    if n == 0 {
+        return Ok(SpillStats::default());
+    }
+    let (r50, r95, r99) = (
+        percentile_rank(50.0, n),
+        percentile_rank(95.0, n),
+        percentile_rank(99.0, n),
+    );
+    let mut targets: Vec<u64> = [r50, r95, r99]
+        .iter()
+        .flat_map(|r| [r.floor() as u64, r.ceil() as u64])
+        .collect();
+    targets.sort_unstable();
+    targets.dedup();
+    let wanted: Vec<(usize, u64)> = (0..4)
+        .flat_map(|m| targets.iter().map(move |&t| (m, t)))
+        .collect();
+    let selected = select_order_stats(files, &wanted)?;
+    let stat = |m: usize, t: u64| -> f64 {
+        let i = wanted
+            .iter()
+            .position(|&(wm, wt)| wm == m && wt == t)
+            .expect("wanted covers every (metric, target)");
+        selected[i]
+    };
+    let summary = |m: usize| SummaryStats {
+        n,
+        mean: sums[m] / n as f64,
+        p50: percentile_interp(
+            r50,
+            stat(m, r50.floor() as u64),
+            stat(m, r50.ceil() as u64),
+        ),
+        p95: percentile_interp(
+            r95,
+            stat(m, r95.floor() as u64),
+            stat(m, r95.ceil() as u64),
+        ),
+        p99: percentile_interp(
+            r99,
+            stat(m, r99.floor() as u64),
+            stat(m, r99.ceil() as u64),
+        ),
+        min: mins[m],
+        max: maxs[m],
+    };
+    Ok(SpillStats {
+        jobs: n,
+        makespan_s: makespan,
+        throughput_jobs_per_s: if makespan <= 0.0 {
+            0.0
+        } else {
+            n as f64 / makespan
+        },
+        queue: summary(0),
+        exec: summary(1),
+        turnaround: summary(2),
+        response: summary(3),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::job::JobIdx;
+    use crate::metrics::Recorder;
+    use crate::util::Summary;
+
+    fn test_dir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join("diana-spill-merge-test").join(name);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    /// LCG over interesting f64s: spread, duplicates, negatives.
+    fn lcg_vals(seed: u64, n: usize) -> Vec<f64> {
+        let mut s = seed;
+        (0..n)
+            .map(|i| {
+                s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                let v = ((s >> 33) as f64 / 1e4) - 400.0;
+                if i % 7 == 0 { (i / 7) as f64 } else { v }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn sortable_key_is_total_cmp_order_and_bijective() {
+        let vals = [
+            0.0,
+            -0.0,
+            1.5,
+            -1.5,
+            f64::MIN_POSITIVE,
+            -f64::MIN_POSITIVE,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            1e300,
+            -1e300,
+            3.5e-200,
+        ];
+        for &a in &vals {
+            assert_eq!(
+                key_value(sortable_key(a)).to_bits(),
+                a.to_bits(),
+                "round-trip {a}"
+            );
+            for &b in &vals {
+                assert_eq!(
+                    sortable_key(a).cmp(&sortable_key(b)),
+                    a.total_cmp(&b),
+                    "order mismatch {a} vs {b}"
+                );
+            }
+        }
+    }
+
+    /// Seal records across three per-shard directories (tiny buffers →
+    /// many files each, plus an empty directory and an empty file) and
+    /// assert the global merge restores strict ordinal order with
+    /// bit-exact fields.
+    #[test]
+    fn merge_across_shard_directories_restores_global_order() {
+        let root = test_dir("multi-dir");
+        let n = 60u64;
+        let mut files = Vec::new();
+        for shard in 0..3u64 {
+            let dir = root.join(format!("shard-{shard}"));
+            let mut rec = Recorder::new(1, 10.0);
+            rec.enable_spill_with_buffer(&dir, 4).unwrap();
+            // Shard `s` seals ordinals ≡ s (mod 3), in scrambled order.
+            let mut ords: Vec<u64> =
+                (0..n).filter(|o| o % 3 == shard).collect();
+            ords.reverse();
+            for &o in &ords {
+                let r = rec.job_mut(JobIdx(0));
+                r.submit = o as f64 * 0.25;
+                r.started = o as f64 * 0.25 + 1.0;
+                r.finished = o as f64 * 0.25 + 2.0;
+                r.delivered = o as f64 * 0.25 + 3.0;
+                r.exec_site = (o % 5) as usize;
+                r.migrations = o as u32;
+                rec.seal(JobIdx(0), o).unwrap();
+            }
+            rec.flush_spill_tail().unwrap();
+            files.extend(rec.spill_files());
+        }
+        // A shard that sealed nothing contributes no files; an empty
+        // file must also be tolerated (cursor drains immediately).
+        let empty = root.join("empty.csv");
+        std::fs::write(&empty, "").unwrap();
+        files.push(empty);
+        assert!(files.len() > 9, "want multiple files per dir");
+        let mut rows = MergedRows::open(&files).unwrap();
+        assert_eq!(rows.cursor_count(), files.len());
+        let mut seen = 0u64;
+        while let Some((o, r)) = rows.next_row().unwrap() {
+            assert_eq!(o, seen, "global merge out of order");
+            assert_eq!(r.submit.to_bits(), (o as f64 * 0.25).to_bits());
+            assert_eq!(r.migrations, o as u32);
+            seen += 1;
+        }
+        assert_eq!(seen, n);
+        assert!(
+            rows.max_line_capacity() < 256,
+            "line buffers grew past one row: {}",
+            rows.max_line_capacity()
+        );
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    /// Differential: `scan_stats` over the files must equal the
+    /// in-memory `SummaryStats::of` over the same values, field for
+    /// field, bit for bit — including the radix-selected percentiles.
+    #[test]
+    fn scan_stats_matches_in_memory_snapshot_bit_for_bit() {
+        for &(n, shards, seed) in
+            &[(1usize, 1usize, 3u64), (2, 2, 4), (97, 3, 5), (500, 4, 6)]
+        {
+            let root =
+                test_dir(&format!("stats-{n}-{shards}"));
+            let starts = lcg_vals(seed, n);
+            let mut files = Vec::new();
+            let mut recs: Vec<Recorder> = (0..shards)
+                .map(|s| {
+                    let mut r = Recorder::new(1, 10.0);
+                    r.enable_spill_with_buffer(
+                        root.join(format!("shard-{s}")),
+                        7,
+                    )
+                    .unwrap();
+                    r
+                })
+                .collect();
+            for (o, &q) in starts.iter().enumerate() {
+                let rec = &mut recs[o % shards];
+                let r = rec.job_mut(JobIdx(0));
+                // Derived metrics get genuine spread: queue q.abs(),
+                // exec varies, delivered strictly positive.
+                r.submit = 10.0 + (o as f64) * 0.5;
+                r.placed = r.submit + (q.abs() % 3.0);
+                r.started = r.submit + q.abs();
+                r.finished = r.started + 1.0 + (q * q) % 50.0;
+                r.delivered = r.finished + 0.25;
+                r.exec_site = o % 4;
+                rec.seal(JobIdx(0), o as u64).unwrap();
+            }
+            for rec in recs.iter_mut() {
+                rec.flush_spill_tail().unwrap();
+                files.extend(rec.spill_files());
+            }
+            let st = scan_stats(&files).unwrap();
+            assert_eq!(st.jobs, n);
+            // Oracle: replay the records in ordinal order in memory.
+            let mut rows = MergedRows::open(&files).unwrap();
+            let mut mem: [Summary; 4] = Default::default();
+            let mut makespan = 0.0f64;
+            let mut count = 0usize;
+            while let Some((_, r)) = rows.next_row().unwrap() {
+                let v = metric_values(&r);
+                for m in 0..4 {
+                    mem[m].push(v[m]);
+                }
+                makespan = makespan.max(r.delivered);
+                count += 1;
+            }
+            assert_eq!(count, n);
+            assert_eq!(st.makespan_s.to_bits(), makespan.to_bits());
+            assert_eq!(
+                st.throughput_jobs_per_s.to_bits(),
+                (n as f64 / makespan).to_bits()
+            );
+            for (m, got) in
+                [&st.queue, &st.exec, &st.turnaround, &st.response]
+                    .into_iter()
+                    .enumerate()
+            {
+                let want = SummaryStats::of(&mem[m]);
+                assert_eq!(got.n, want.n, "n metric {m} (n={n})");
+                for (g, w, field) in [
+                    (got.mean, want.mean, "mean"),
+                    (got.p50, want.p50, "p50"),
+                    (got.p95, want.p95, "p95"),
+                    (got.p99, want.p99, "p99"),
+                    (got.min, want.min, "min"),
+                    (got.max, want.max, "max"),
+                ] {
+                    assert_eq!(
+                        g.to_bits(),
+                        w.to_bits(),
+                        "{field} diverged for metric {m} (n={n}): \
+                         {g} vs {w}"
+                    );
+                }
+            }
+            std::fs::remove_dir_all(&root).ok();
+        }
+    }
+
+    #[test]
+    fn empty_file_set_reports_zero() {
+        let st = scan_stats(&[]).unwrap();
+        assert_eq!(st.jobs, 0);
+        assert_eq!(st.makespan_s, 0.0);
+        assert_eq!(st.queue, SummaryStats::default());
+    }
+
+    #[test]
+    fn duplicate_ordinals_are_rejected() {
+        let root = test_dir("dup");
+        let mut files = Vec::new();
+        for s in 0..2 {
+            let mut rec = Recorder::new(1, 10.0);
+            rec.enable_spill_with_buffer(root.join(format!("d{s}")), 4)
+                .unwrap();
+            let r = rec.job_mut(JobIdx(0));
+            r.started = 1.0;
+            r.delivered = 2.0;
+            // Both shards seal ordinal 7 — the write-once invariant is
+            // broken and the merge must say so.
+            rec.seal(JobIdx(0), 7).unwrap();
+            rec.flush_spill_tail().unwrap();
+            files.extend(rec.spill_files());
+        }
+        let err = scan_stats(&files).unwrap_err().to_string();
+        assert!(err.contains("ordinal 7"), "got: {err}");
+        std::fs::remove_dir_all(&root).ok();
+    }
+}

@@ -49,10 +49,10 @@ pub fn series(job_counts: &[usize]) -> Result<Vec<Point>> {
         let (_, fcfs) = run_simulation_with(&fcfs_cfg, subs)?;
         out.push(Point {
             jobs,
-            diana_queue_s: diana.queue_time.mean(),
-            fcfs_queue_s: fcfs.queue_time.mean(),
-            diana_exec_s: diana.exec_time.mean(),
-            fcfs_exec_s: fcfs.exec_time.mean(),
+            diana_queue_s: diana.queue_time.mean,
+            fcfs_queue_s: fcfs.queue_time.mean,
+            diana_exec_s: diana.exec_time.mean,
+            fcfs_exec_s: fcfs.exec_time.mean,
         });
     }
     Ok(out)

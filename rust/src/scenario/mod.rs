@@ -20,7 +20,7 @@ pub mod spec;
 
 pub use faults::{FaultEvent, FaultKind, FaultPlan, ResolvedFault};
 pub use report::{AggregateRow, RunResult, SweepReport};
-pub use runner::{run_one, run_sweep};
+pub use runner::{run_one, run_sweep, run_sweep_in};
 pub use spec::{
     apply_param, preset_by_name, Axis, BaseConfig, ParamValue, RunSpec,
     SweepSpec,

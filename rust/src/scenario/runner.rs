@@ -6,12 +6,12 @@
 //! (3) aggregation happens single-threaded in matrix order after the
 //! pool drains.
 
+use std::path::Path;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use crate::coordinator::{generate_workload, run_simulation_streamed,
                          run_simulation_with_faults};
-use crate::metrics::SummaryStats;
 use crate::util::error::Result;
 
 use super::faults::FaultPlan;
@@ -23,9 +23,10 @@ use super::spec::{RunSpec, SweepSpec};
 /// the same path every example and repro figure uses).
 pub fn run_one(run: &RunSpec, faults: &FaultPlan) -> Result<RunResult> {
     let t0 = std::time::Instant::now();
-    // Streaming sources pull their workload on demand; sweeps never
-    // spill (spec expansion cannot set `sim.spill_dir` — parallel
-    // workers would collide in one shared shard directory).
+    // Streaming sources pull their workload on demand; bounded-memory
+    // runs spill into the per-run subdirectory the sweep entry point
+    // assigned (`run_sweep_in`), so parallel workers never share a
+    // shard directory.
     let (_world, report) = if run.cfg.workload.source.is_streaming() {
         run_simulation_streamed(&run.cfg, faults)?
     } else {
@@ -40,10 +41,10 @@ pub fn run_one(run: &RunSpec, faults: &FaultPlan) -> Result<RunResult> {
         policy: report.policy.to_string(),
         jobs: report.jobs,
         makespan_s: report.makespan_s,
-        queue: SummaryStats::of(&report.queue_time),
-        exec: SummaryStats::of(&report.exec_time),
-        turnaround: SummaryStats::of(&report.turnaround),
-        response: SummaryStats::of(&report.response_time),
+        queue: report.queue_time,
+        exec: report.exec_time,
+        turnaround: report.turnaround,
+        response: report.response_time,
         throughput_jobs_per_s: report.throughput_jobs_per_s,
         migrations: report.migrations,
         delegations: report.delegations,
@@ -54,8 +55,24 @@ pub fn run_one(run: &RunSpec, faults: &FaultPlan) -> Result<RunResult> {
     })
 }
 
-/// Run the whole sweep on up to `threads` workers and aggregate.
+/// Run the whole sweep on up to `threads` workers and aggregate,
+/// rooting relative spill bases at the current directory. Prefer
+/// [`run_sweep_in`] when an output directory is known.
 pub fn run_sweep(spec: &SweepSpec, threads: usize) -> Result<SweepReport> {
+    run_sweep_in(spec, threads, Path::new("."))
+}
+
+/// Run the whole sweep on up to `threads` workers and aggregate. A
+/// non-empty `sim.spill_dir` in the spec names a spill *base*: every
+/// run gets its own `run-<index>` subdirectory beneath it (an absolute
+/// base is used as-is, a relative one is rooted at `out`), so parallel
+/// workers — and repeat runs of one matrix point — never share a shard
+/// file.
+pub fn run_sweep_in(
+    spec: &SweepSpec,
+    threads: usize,
+    out: &Path,
+) -> Result<SweepReport> {
     let mut runs = spec.expand()?;
     let workers = threads.clamp(1, runs.len().max(1));
     let cores = std::thread::available_parallelism().map_or(1, |n| n.get());
@@ -65,6 +82,18 @@ pub fn run_sweep(spec: &SweepSpec, threads: usize) -> Result<SweepReport> {
         if eff != run.cfg.sim.threads {
             capped = Some((run.cfg.sim.threads, eff));
             run.cfg.sim.threads = eff;
+        }
+        if !run.cfg.sim.spill_dir.is_empty() {
+            let base = Path::new(&run.cfg.sim.spill_dir);
+            let rooted = if base.is_absolute() {
+                base.to_path_buf()
+            } else {
+                out.join(base)
+            };
+            run.cfg.sim.spill_dir = rooted
+                .join(format!("run-{}", run.index))
+                .display()
+                .to_string();
         }
     }
     if let Some((want, eff)) = capped {
@@ -260,6 +289,69 @@ mod tests {
             );
             assert_eq!(a.migrations, b.migrations, "seed {seed}");
         }
+    }
+
+    #[test]
+    fn spilled_sweep_runs_reproduce_in_memory_runs() {
+        // `sim.spill_dir` as an axis pairs an in-memory streamed run
+        // with a bounded-memory twin per seed; the runner hands every
+        // spilled run its own `run-<index>` subdirectory under the
+        // base and the merged reports must reproduce each metric
+        // column bit-for-bit.
+        let dir = std::env::temp_dir().join("diana-runner-spill-test");
+        std::fs::remove_dir_all(&dir).ok();
+        let spill = dir.join("sp");
+        let spec_text = format!(
+            "name = \"spill-eq\"\npreset = \"uniform-4x4\"\n\
+             [axes]\nsim.spill_dir = [\"\", \"{}\"]\nseed = [5, 9]\n\
+             [set]\nsource = \"streamed\"\njobs = 30\nbulk_size = 10\n\
+             cpu_sec_median = 60.0\n",
+            spill.display()
+        );
+        let spec =
+            SweepSpec::from_str_named(&spec_text, "spill-eq").unwrap();
+        let rep = run_sweep_in(&spec, 2, &dir).unwrap();
+        assert_eq!(rep.runs.len(), 4);
+        let mut by_seed: std::collections::BTreeMap<u64, Vec<_>> =
+            Default::default();
+        for r in &rep.runs {
+            by_seed.entry(r.seed).or_default().push(r);
+        }
+        assert_eq!(by_seed.len(), 2);
+        for (seed, rs) in by_seed {
+            assert_eq!(rs.len(), 2, "seed {seed}");
+            let (a, b) = (rs[0], rs[1]);
+            assert_eq!(a.jobs, b.jobs, "seed {seed}");
+            assert_eq!(a.events, b.events, "seed {seed}");
+            assert_eq!(
+                a.makespan_s.to_bits(),
+                b.makespan_s.to_bits(),
+                "seed {seed}"
+            );
+            for (x, y) in [
+                (&a.queue, &b.queue),
+                (&a.exec, &b.exec),
+                (&a.turnaround, &b.turnaround),
+                (&a.response, &b.response),
+            ] {
+                assert_eq!(x.n, y.n, "seed {seed}");
+                assert_eq!(x.mean.to_bits(), y.mean.to_bits(), "seed {seed}");
+                assert_eq!(x.p50.to_bits(), y.p50.to_bits(), "seed {seed}");
+                assert_eq!(x.p99.to_bits(), y.p99.to_bits(), "seed {seed}");
+                assert_eq!(x.min.to_bits(), y.min.to_bits(), "seed {seed}");
+                assert_eq!(x.max.to_bits(), y.max.to_bits(), "seed {seed}");
+            }
+            assert_eq!(a.migrations, b.migrations, "seed {seed}");
+        }
+        // Each spilled run sealed into its own subdirectory.
+        let mut subdirs: Vec<String> = std::fs::read_dir(&spill)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().into_string().unwrap())
+            .collect();
+        subdirs.sort();
+        assert_eq!(subdirs.len(), 2, "one spill dir per spilled run");
+        assert!(subdirs.iter().all(|n| n.starts_with("run-")), "{subdirs:?}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -479,8 +479,9 @@ pub fn apply_param(cfg: &mut GridConfig, key: &str, v: &ParamValue) -> Result<()
         "datasets" => cfg.workload.datasets = u(key, v)?,
         "replicas" => cfg.workload.replicas = u(key, v)?,
         // streaming sources (sweeps cross arrival shapes with fault
-        // plans; spill stays per-run-CLI only — parallel sweep workers
-        // would collide in one shared spill dir)
+        // plans; `sim.spill_dir` names a spill BASE — the runner gives
+        // every run its own `run-<index>` subdirectory, so parallel
+        // sweep workers never share a spill file)
         "source" | "workload.source" | "workload_source" => {
             let m = s(key, v)?;
             cfg.workload.source = SourceMode::from_name(m).ok_or_else(|| {
@@ -554,6 +555,9 @@ pub fn apply_param(cfg: &mut GridConfig, key: &str, v: &ParamValue) -> Result<()
         }
         // simulation engine
         "sim.threads" | "sim_threads" => cfg.sim.threads = u(key, v)?,
+        "sim.spill_dir" | "sim_spill_dir" | "spill_dir" => {
+            cfg.sim.spill_dir = s(key, v)?.to_string()
+        }
         // network defaults
         "default_rtt_ms" => cfg.network.default_rtt_ms = f(key, v)?,
         "default_loss" => cfg.network.default_loss = f(key, v)?,
@@ -575,7 +579,8 @@ pub fn apply_param(cfg: &mut GridConfig, key: &str, v: &ParamValue) -> Result<()
              default_quota, migration_period_s, max_migrations; \
              federation: federation.peers, federation.topology, \
              federation.gossip_period_s, federation.delegation_threshold, \
-             federation.max_hops; sim: sim.threads; network: \
+             federation.max_hops; sim: sim.threads, sim.spill_dir; \
+             network: \
              default_rtt_ms, default_loss, default_capacity_mbps, \
              local_bw_mbps, local_loss, mss_bytes, monitor_noise, \
              monitor_period_s; top level: seed, max_events)"
@@ -859,6 +864,35 @@ rtt_ms = 200.0
             &ParamValue::Str("star".into())
         )
         .is_err());
+    }
+
+    #[test]
+    fn spill_dir_axis_applies_and_validates() {
+        let mut cfg = config::presets::uniform_grid(2, 2);
+        apply_param(
+            &mut cfg,
+            "sim.spill_dir",
+            &ParamValue::Str("/tmp/sp".into()),
+        )
+        .unwrap();
+        assert_eq!(cfg.sim.spill_dir, "/tmp/sp");
+        apply_param(&mut cfg, "spill_dir", &ParamValue::Str("/tmp/sq".into()))
+            .unwrap();
+        assert_eq!(cfg.sim.spill_dir, "/tmp/sq");
+        // Expansion validates: spill needs a streaming source to bound.
+        let bad = SweepSpec::from_str_named(
+            "preset = \"uniform-2x2\"\n[set]\nsim.spill_dir = \"/tmp/sp\"\n",
+            "x",
+        )
+        .unwrap();
+        assert!(bad.expand().is_err());
+        let ok = SweepSpec::from_str_named(
+            "preset = \"uniform-2x2\"\n[set]\nsource = \"streamed\"\n\
+             sim.spill_dir = \"/tmp/sp\"\n",
+            "x",
+        )
+        .unwrap();
+        assert_eq!(ok.expand().unwrap().len(), 1);
     }
 
     #[test]

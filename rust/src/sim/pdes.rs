@@ -144,9 +144,6 @@ pub enum PdesDecline {
     /// A zero-latency cross-shard path (e.g. a zero-size output)
     /// leaves no conservative window.
     ZeroLookahead,
-    /// Spill mode serializes completed rows through one on-disk
-    /// recorder; shards cannot share it.
-    SpillRun,
     /// Central runs replay placement at barriers only; a DAG release
     /// fires mid-window on one replica with an unseeded grid view.
     DagDeps,
@@ -176,9 +173,6 @@ impl PdesDecline {
             }
             PdesDecline::ZeroLookahead => {
                 "a zero-cost cross-shard path leaves no conservative window"
-            }
-            PdesDecline::SpillRun => {
-                "spill mode serializes through one on-disk recorder"
             }
             PdesDecline::DagDeps => {
                 "central DAG releases fire mid-window, off the barrier"
@@ -552,6 +546,21 @@ struct ShardedWorld {
     /// counted per refill). The shard worlds never learn a total —
     /// this is the single completion denominator.
     total: usize,
+    /// Per-shard spill is live (streamed bounded-memory run): each
+    /// shard's recorder seals into `<spill_dir>/shard-<p>/`,
+    /// `job_order` stays empty, and the report comes from the global
+    /// streaming merge instead of the in-memory row loop.
+    spill: bool,
+    /// Next global submission ordinal — the serial slab rank the spill
+    /// merge keys on. Admissions happen in barrier order, which is the
+    /// serial submission order, so a running count is exact.
+    ordinal_base: u64,
+    /// Jobs admitted at barriers so far, plus the high-water of
+    /// admitted-undelivered jobs (the serial `peak_live_jobs` twin,
+    /// sampled at admission barriers — the only points where the count
+    /// grows).
+    admitted: usize,
+    peak_live: usize,
     /// Window stats for the report: rounds drained and the events they
     /// processed.
     windows: u64,
@@ -611,6 +620,10 @@ impl ShardedWorld {
             pending: None,
             source_done: false,
             total: 0,
+            spill: false,
+            ordinal_base: 0,
+            admitted: 0,
+            peak_live: 0,
             windows: 0,
             window_events: 0,
             t_next: Vec::new(),
@@ -701,6 +714,22 @@ impl ShardedWorld {
         Ok(())
     }
 
+    /// Bounded-memory mode for a streamed parallel run: shard `p`
+    /// seals its home jobs into `<base>/shard-<p>/` — one writer per
+    /// directory, no cross-thread file contention on the hot path —
+    /// and every shard world recycles delivered (and replica-copy)
+    /// slots, so each shard's resident state tracks its live share.
+    /// Call before `run`.
+    fn enable_spill(&mut self, base: &str) -> Result<()> {
+        for (p, w) in self.worlds.iter_mut().enumerate() {
+            let dir =
+                std::path::Path::new(base).join(format!("shard-{p}"));
+            w.enable_spill(&dir.display().to_string())?;
+        }
+        self.spill = true;
+        Ok(())
+    }
+
     fn delivered(&self) -> usize {
         self.worlds.iter().map(|w| w.pdes_delivered()).sum()
     }
@@ -765,7 +794,8 @@ impl ShardedWorld {
             "submission spanning multiple submit sites reached the \
              parallel path at t={t:.1}s — rerun with --sim-threads 1"
         );
-        if self.fed_mode {
+        let njobs = sub.jobs.len();
+        let r = if self.fed_mode {
             let home = self.part.peer_of(site0);
             let routed = self.worlds[home].pdes_home_route(site0);
             crate::ensure!(
@@ -774,6 +804,15 @@ impl ShardedWorld {
                  {home}; outside the parallel envelope — rerun with \
                  --sim-threads 1"
             );
+            if self.spill {
+                // Align the home shard's ordinal counter with the
+                // global submission rank before it tags this batch:
+                // home shards each see only their own admissions, so
+                // their local counters alone would drift off the
+                // serial slab ranks the spill merge keys on. (Central
+                // replicas replay every admission and stay aligned.)
+                self.worlds[home].pdes_set_next_ordinal(self.ordinal_base);
+            }
             self.worlds[home].pdes_admit(sub, t)
         } else {
             crate::ensure!(
@@ -793,7 +832,16 @@ impl ShardedWorld {
             }
             self.worlds[last].pdes_seed_cache(&self.global);
             self.worlds[last].pdes_admit(sub, t)
+        };
+        self.ordinal_base += njobs as u64;
+        self.admitted += njobs;
+        // Admissions are the only points where the admitted-undelivered
+        // count grows, so sampling here captures the true high-water.
+        let live = self.admitted - self.delivered();
+        if live > self.peak_live {
+            self.peak_live = live;
         }
+        r
     }
 
     /// The coordinator twin of the serial `on_source_refill`: admit
@@ -842,8 +890,13 @@ impl ShardedWorld {
                  — rerun with --sim-threads 1"
             );
         }
-        for j in &sub.jobs {
-            self.job_order.push((j.id, j.submit_site));
+        // Spill runs skip the serial-rank map — it is O(total jobs),
+        // exactly what bounded memory forbids; the spilled ordinals
+        // carry the same ranks to the report merge instead.
+        if !self.spill {
+            for j in &sub.jobs {
+                self.job_order.push((j.id, j.submit_site));
+            }
         }
         self.total += sub.jobs.len();
         self.admit_at_barrier(sub, t)
@@ -1053,8 +1106,11 @@ impl ShardedWorld {
     }
 
     /// Deterministic assembly: merge the shard recorders into the
-    /// serial layout and return the merged world plus its report.
-    fn finish(mut self) -> (Box<World>, RunReport) {
+    /// serial layout and return the merged world plus its report. For
+    /// spilled runs the job rows live on disk instead — assembly hands
+    /// every shard directory's sorted files to the streaming merge and
+    /// stays O(shards).
+    fn finish(mut self) -> Result<(Box<World>, RunReport)> {
         let completed = self.complete();
         // Completion trimming: the serial loop breaks *at* the final
         // Deliver (time Tc); the shard that processed it ran its window
@@ -1083,14 +1139,17 @@ impl ShardedWorld {
         // Job rows in serial JobIdx order: rank r of the load-order map
         // is row r of the single-store recorder. The home shard owns
         // the complete row — exec-side fields came home with the
-        // Deliver patch.
-        for (rank, &(id, site)) in self.job_order.iter().enumerate() {
-            let home = self.part.peer_of(site);
-            let row = self.worlds[home]
-                .job_record(id)
-                .copied()
-                .unwrap_or_default();
-            *merged.job_mut(JobIdx(rank as u32)) = row;
+        // Deliver patch. Spilled runs skipped the map (their rows were
+        // sealed to disk with the same ranks as ordinals).
+        if !self.spill {
+            for (rank, &(id, site)) in self.job_order.iter().enumerate() {
+                let home = self.part.peer_of(site);
+                let row = self.worlds[home]
+                    .job_record(id)
+                    .copied()
+                    .unwrap_or_default();
+                *merged.job_mut(JobIdx(rank as u32)) = row;
+            }
         }
         // Site series: submissions land at the home/owner shard,
         // execution/import/export activity at the site's owner too —
@@ -1122,24 +1181,58 @@ impl ShardedWorld {
             merged.groups_split = self.worlds[0].recorder.groups_split;
             merged.groups_whole = self.worlds[0].recorder.groups_whole;
         }
-        let mut report = RunReport::from_parts(
-            self.worlds[0].policy_name(),
-            &merged,
-            events,
-        );
+        let mut report = if self.spill {
+            // Per-shard spill: flush each recorder's buffered tail,
+            // then stream a k-way merge over every shard directory's
+            // sorted files — O(shards) report assembly, byte-identical
+            // to the eager `from_parts` fields.
+            let mut files = Vec::new();
+            for w in self.worlds.iter_mut() {
+                w.recorder.flush_spill_tail()?;
+                files.extend(w.recorder.spill_files());
+            }
+            RunReport::from_spill_files(
+                self.worlds[0].policy_name(),
+                &files,
+                &merged,
+                events,
+            )?
+        } else {
+            RunReport::from_parts(
+                self.worlds[0].policy_name(),
+                &merged,
+                events,
+            )
+        };
         report.pdes_parallel = true;
         report.pdes_windows = self.windows;
         report.pdes_window_events = self.window_events;
         let delivered = self.delivered();
         let total = self.total;
+        // Global admitted-job count: federated shards each admit their
+        // own partition's share (sum); central replicas replay every
+        // admission (any one copy is the global count).
+        let submitted = if self.fed_mode {
+            self.worlds.iter().map(|w| w.submitted_jobs()).sum()
+        } else {
+            self.worlds[0].submitted_jobs()
+        };
+        let peak_live = self.peak_live;
         let mut group_results = Vec::new();
         for w in self.worlds.iter_mut() {
             group_results.append(&mut w.group_results);
         }
         let mut world =
             self.worlds.into_iter().next().expect("at least one shard");
-        world.pdes_adopt_merged(merged, group_results, delivered, total);
-        (Box::new(world), report)
+        world.pdes_adopt_merged(
+            merged,
+            group_results,
+            delivered,
+            total,
+            peak_live,
+            submitted,
+        );
+        Ok((Box::new(world), report))
     }
 }
 
@@ -1176,7 +1269,7 @@ pub fn try_run_parallel(
     }
     sharded.load(subs);
     sharded.run()?;
-    let (world, report) = sharded.finish();
+    let (world, report) = sharded.finish()?;
     Ok(PdesOutcome::Done(world, report))
 }
 
@@ -1190,14 +1283,16 @@ pub fn try_run_parallel_streamed(
     faults: &FaultPlan,
 ) -> Result<PdesStreamOutcome> {
     let resolved = faults.resolve(cfg)?;
-    if !cfg.sim.spill_dir.is_empty() {
-        return Ok(PdesStreamOutcome::Declined(PdesDecline::SpillRun));
-    }
     let (part, fed_mode) = match shard_mode(cfg, &resolved) {
         Ok(mode) => mode,
         Err(reason) => return Ok(PdesStreamOutcome::Declined(reason)),
     };
     let mut sharded = ShardedWorld::new(cfg, part, fed_mode, resolved);
+    // Bounded-memory runs shard their spill too: one subdirectory per
+    // shard, merged back into one report stream at finish.
+    if !cfg.sim.spill_dir.is_empty() {
+        sharded.enable_spill(&cfg.sim.spill_dir)?;
+    }
     // `min_out_mb` starts +∞ (the deliver term folds in lazily); a
     // zero entry here can only come from the forward term.
     if !sharded.lookahead_ok() {
@@ -1214,7 +1309,7 @@ pub fn try_run_parallel_streamed(
     };
     sharded.set_source(source)?;
     sharded.run()?;
-    let (world, report) = sharded.finish();
+    let (world, report) = sharded.finish()?;
     Ok(PdesStreamOutcome::Done(world, report))
 }
 
@@ -1272,13 +1367,13 @@ mod tests {
                 == parallel.throughput_jobs_per_s.to_bits()
         );
         assert!(
-            serial.turnaround.mean().to_bits()
-                == parallel.turnaround.mean().to_bits(),
+            serial.turnaround.mean.to_bits()
+                == parallel.turnaround.mean.to_bits(),
             "turnaround mean diverged"
         );
         assert!(
-            serial.queue_time.mean().to_bits()
-                == parallel.queue_time.mean().to_bits()
+            serial.queue_time.mean.to_bits()
+                == parallel.queue_time.mean.to_bits()
         );
     }
 
@@ -1450,7 +1545,6 @@ mod tests {
             PdesDecline::EmptyWorkload,
             PdesDecline::MixedHomeSubmission,
             PdesDecline::ZeroLookahead,
-            PdesDecline::SpillRun,
             PdesDecline::DagDeps,
             PdesDecline::SingleShard,
             PdesDecline::ParanoidCentral,
@@ -1627,5 +1721,123 @@ mod tests {
         for (a, b) in before.iter().zip(sw.lookahead.iter()) {
             assert_eq!(a.to_bits(), b.to_bits(), "heal must restore L");
         }
+    }
+
+    #[test]
+    fn spilled_streamed_runs_take_pdes_and_match_serial() {
+        // The sharded-spill claim end to end: a bounded-memory
+        // (streamed + spilled) run no longer declines the PDES — each
+        // shard seals into its own subdirectory and the k-way merged
+        // report is bit-identical to BOTH the serial spill path and
+        // the in-memory streamed reference, in federated and central
+        // decompositions alike.
+        let root = std::env::temp_dir().join("diana-pdes-spill-test");
+        std::fs::remove_dir_all(&root).ok();
+        for &(peers, threads) in &[(2usize, 2usize), (3, 4), (0, 2), (0, 4)]
+        {
+            let label = format!("peers={peers}-threads={threads}");
+            let mut cfg = fed_cfg(60, peers, 7);
+            cfg.workload.source = crate::config::SourceMode::Streamed;
+            // In-memory streamed serial reference (threads 1, no spill).
+            let (_, in_mem) =
+                crate::coordinator::run_simulation(&cfg).unwrap();
+            // Serial spill reference.
+            let mut serial_cfg = cfg.clone();
+            serial_cfg.sim.spill_dir =
+                root.join(format!("serial-{label}")).display().to_string();
+            let (_, serial) =
+                crate::coordinator::run_simulation(&serial_cfg).unwrap();
+            // Parallel spill: must take the PDES, not decline.
+            let mut par_cfg = cfg.clone();
+            par_cfg.sim.threads = threads;
+            par_cfg.sim.spill_dir =
+                root.join(format!("par-{label}")).display().to_string();
+            let outcome =
+                try_run_parallel_streamed(&par_cfg, &FaultPlan::default())
+                    .unwrap();
+            let (pw, pr) = match outcome {
+                PdesStreamOutcome::Done(w, r) => (w, r),
+                PdesStreamOutcome::Declined(reason) => {
+                    panic!("spilled run declined ({label}): {reason}")
+                }
+            };
+            assert!(pr.pdes_parallel, "parallel path not flagged ({label})");
+            assert_reports_match(&in_mem, &pr);
+            assert_reports_match(&serial, &pr);
+            // Percentiles ride the radix selector on the spill path —
+            // pin every summary field against the in-memory ones.
+            for (a, b) in [
+                (&in_mem.queue_time, &pr.queue_time),
+                (&in_mem.exec_time, &pr.exec_time),
+                (&in_mem.turnaround, &pr.turnaround),
+                (&in_mem.response_time, &pr.response_time),
+            ] {
+                assert_eq!(a.n, b.n, "{label}");
+                for (x, y, field) in [
+                    (a.mean, b.mean, "mean"),
+                    (a.p50, b.p50, "p50"),
+                    (a.p95, b.p95, "p95"),
+                    (a.p99, b.p99, "p99"),
+                    (a.min, b.min, "min"),
+                    (a.max, b.max, "max"),
+                ] {
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "{label} {field}: {x} vs {y}"
+                    );
+                }
+            }
+            // The adopted world carries the coordinator-tracked totals.
+            assert_eq!(pw.submitted_jobs(), 60, "{label}");
+            let peak = pw.peak_live_jobs();
+            assert!(
+                peak > 0 && peak <= 60,
+                "peak live {peak} out of range ({label})"
+            );
+        }
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn spilled_pdes_report_assembly_is_o_shards() {
+        // Capacity pin for the streaming merge: a spilled parallel run
+        // keeps the coordinator's serial-rank row accumulator EMPTY
+        // (report assembly is the k-way spill merge, O(shards) memory)
+        // and every shard slab drains to zero live slots, bounded by
+        // its own high-water mark rather than the workload size.
+        let dir = std::env::temp_dir().join("diana-pdes-spill-caps-test");
+        std::fs::remove_dir_all(&dir).ok();
+        let mut cfg = fed_cfg(200, 2, 5);
+        cfg.workload.source = crate::config::SourceMode::Streamed;
+        cfg.sim.threads = 2;
+        let mut sw = sharded(&cfg, Vec::new());
+        sw.enable_spill(&dir.display().to_string()).unwrap();
+        assert!(sw.lookahead_ok());
+        let source = crate::workload::source_from_config(&cfg)
+            .unwrap()
+            .expect("streamed cfg has a source");
+        sw.set_source(source).unwrap();
+        sw.run().unwrap();
+        assert!(sw.complete());
+        assert_eq!(sw.total, 200);
+        assert!(
+            sw.job_order.is_empty(),
+            "spilled run accumulated {} in-memory job rows",
+            sw.job_order.len()
+        );
+        for (p, w) in sw.worlds.iter().enumerate() {
+            let [live, slab] = w.job_slab_stats();
+            assert_eq!(live, 0, "shard {p} leaked live slots");
+            assert!(
+                slab < 200,
+                "shard {p} slab grew to workload size: {slab}"
+            );
+        }
+        let (world, report) = sw.finish().unwrap();
+        assert_eq!(report.jobs, 200);
+        assert!(report.pdes_parallel);
+        assert_eq!(world.submitted_jobs(), 200);
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -474,6 +474,15 @@ impl World {
         ]
     }
 
+    /// Job-slab occupancy probe for bounded-memory assertions:
+    /// `[live slots, slab length]`. A spilled run must drain `live` to
+    /// zero and keep the slab at its live high-water mark, not the
+    /// workload size.
+    #[doc(hidden)]
+    pub fn job_slab_stats(&self) -> [usize; 2] {
+        [self.store.live(), self.store.len()]
+    }
+
     /// Inject a site failure / recovery (exercises dead-site masking and
     /// §IX failover behaviour: the crashed RootGrid's standby takes over
     /// if one exists; recovery re-joins the overlay).
@@ -1034,6 +1043,25 @@ impl World {
                 )?;
                 self.cache.touch(site);
                 self.events.schedule(t, Ev::Dispatch(site as u32));
+            } else if self.recycle_on {
+                // Central-replica spill runs: a replica that owns
+                // neither the exec site nor the job's home (submit)
+                // site never touches this row again — the exec owner
+                // runs it, the home replica receives the Deliver and
+                // seals. Evict now so each replica's resident rows
+                // track owned + home jobs only. (A later cross-owner
+                // migration onto this replica re-inserts on miss.)
+                for &i in &bucket {
+                    let home_site = self.store.get(i).submit_site;
+                    let is_home = self
+                        .pdes_owned
+                        .as_ref()
+                        .map_or(true, |mask| mask[home_site]);
+                    if !is_home {
+                        self.recorder.evict(i);
+                        self.store.recycle(i);
+                    }
+                }
             }
             bucket.clear();
             self.site_buckets[site] = bucket;
@@ -1596,6 +1624,16 @@ impl World {
         self.admit_submission(sub, t)
     }
 
+    /// Pre-set the next global submission ordinal (the serial slab
+    /// rank, i.e. the spill-merge key) before a barrier admission.
+    /// Federated spill runs need this: each home shard admits only its
+    /// own submissions, so its local counter would drift off the global
+    /// rank. Central replicas replay every admission and stay aligned
+    /// on their own.
+    pub(crate) fn pdes_set_next_ordinal(&mut self, base: u64) {
+        self.next_ordinal = base;
+    }
+
     /// Replay home routing for one arrival on this replica. Federated
     /// PDES admits on the home shard only; the coordinator calls this
     /// there to learn whether a dead home peer would re-route the
@@ -1741,6 +1779,21 @@ impl World {
                         specs.push(self.dataset_spec_of(&job));
                         jobs.push(job);
                     }
+                    // Spill runs: rows this shard held purely to
+                    // serialize the forward are dead weight once the
+                    // message leaves — evict every non-home copy (the
+                    // home shard's original row stays authoritative,
+                    // and is the one the final seal evacuates).
+                    if self.recycle_on {
+                        for &ji in &jobs_idx {
+                            let home_peer =
+                                part.peer_of(self.store.get(ji).submit_site);
+                            if home_peer != self_peer {
+                                self.recorder.evict(ji);
+                                self.store.recycle(ji);
+                            }
+                        }
+                    }
                     // Recycle the side-table slot like `on_forward`.
                     let mut buf = jobs_idx;
                     buf.clear();
@@ -1763,6 +1816,15 @@ impl World {
                     let home = part.peer_of(self.store.get(job).submit_site);
                     let patch =
                         *self.recorder.job(job).expect("executed job recorded");
+                    // Spill runs: the execution-side copy is finished
+                    // with — its lifecycle fields just left in the
+                    // patch, and the home shard owns the authoritative
+                    // row and the single seal. Evict so the executing
+                    // shard's resident state tracks its live share.
+                    if self.recycle_on {
+                        self.recorder.evict(job);
+                        self.store.recycle(job);
+                    }
                     out.push((
                         t,
                         seq,
@@ -2209,6 +2271,16 @@ impl World {
                         let spec = w.dataset_spec_of(&job);
                         (job, spec, rec)
                     };
+                    // Spill runs: the source shard's copy leaves with
+                    // the migration — evict it unless this shard is
+                    // the job's home (whose row the final seal needs).
+                    if worlds[owner].recycle_on
+                        && part.peer_of(job_clone.submit_site) != owner
+                    {
+                        let w = &mut worlds[owner];
+                        w.recorder.evict(meta.slot);
+                        w.store.recycle(meta.slot);
+                    }
                     let w2 = &mut worlds[dst];
                     let tgt_slot = match w2.store.lookup(job_clone.id) {
                         Some(ix) => {
@@ -2256,11 +2328,19 @@ impl World {
         group_results: Vec<GroupResult>,
         delivered: usize,
         total_jobs: usize,
+        peak_live: usize,
+        submitted: usize,
     ) {
         self.recorder = recorder;
         self.group_results = group_results;
         self.delivered = delivered;
         self.total_jobs = total_jobs;
+        // Run-wide annotations the CLI reads off the merged world:
+        // the coordinator's admitted-undelivered high-water (sampled
+        // at admission barriers) and the global admitted-job count —
+        // shard 0's own counters only cover its partition.
+        self.peak_live = peak_live;
+        self.submitted_jobs = submitted;
     }
 
     pub(crate) fn pdes_delivered(&self) -> usize {

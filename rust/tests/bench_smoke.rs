@@ -209,6 +209,22 @@ fn world_bench_workloads_construct_and_run() {
     assert!(w.peak_live_jobs() > 0, "streamed-flood");
     assert_eq!(w.submitted_jobs(), 60, "streamed-flood");
     std::fs::remove_dir_all(&spill).ok();
+    // The sharded-spill twins (streamed-flood-t2 / -t4): the same lazy
+    // stream through the parallel engine — each shard spilling into its
+    // own subdirectory, report k-way merged back.
+    for threads in [2usize, 4] {
+        let mut cfg = streamed.clone();
+        cfg.sim.threads = threads;
+        let spill = std::env::temp_dir()
+            .join(format!("diana-bench-smoke-spill-t{threads}"));
+        cfg.sim.spill_dir = spill.to_string_lossy().into_owned();
+        let (w, report) =
+            diana::coordinator::run_simulation(&cfg).unwrap();
+        assert_eq!(report.jobs, 60, "streamed-flood-t{threads}");
+        assert!(report.pdes_parallel, "streamed-flood-t{threads}");
+        assert_eq!(w.submitted_jobs(), 60, "streamed-flood-t{threads}");
+        std::fs::remove_dir_all(&spill).ok();
+    }
 }
 
 /// bench_figures: the cheap closed-form figures regenerate.

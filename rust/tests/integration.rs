@@ -42,10 +42,10 @@ fn diana_beats_fcfs_on_data_heavy_workload() {
     fcfs.scheduler.policy = Policy::FcfsBroker;
     let (_, fcfs) = run_simulation_with(&fcfs, subs).unwrap();
     assert!(
-        diana.turnaround.mean() < fcfs.turnaround.mean(),
+        diana.turnaround.mean < fcfs.turnaround.mean,
         "diana {:.0}s !< fcfs {:.0}s",
-        diana.turnaround.mean(),
-        fcfs.turnaround.mean()
+        diana.turnaround.mean,
+        fcfs.turnaround.mean
     );
 }
 
@@ -109,7 +109,7 @@ fn xla_engine_drives_identical_schedule() {
     assert_eq!(rx.jobs, rr.jobs);
     assert_eq!(rx.makespan_s, rr.makespan_s, "engines disagree");
     assert_eq!(rx.migrations, rr.migrations);
-    assert_eq!(rx.queue_time.mean(), rr.queue_time.mean());
+    assert_eq!(rx.queue_time.mean, rr.queue_time.mean);
 }
 
 #[test]
@@ -168,7 +168,7 @@ fn trace_replay_reproduces_simulation() {
     let (_, a) = run_simulation_with(&cfg, subs).unwrap();
     let (_, b) = run_simulation_with(&cfg, replayed).unwrap();
     assert_eq!(a.makespan_s, b.makespan_s);
-    assert_eq!(a.queue_time.mean(), b.queue_time.mean());
+    assert_eq!(a.queue_time.mean, b.queue_time.mean);
     std::fs::remove_file(&path).ok();
 }
 
@@ -181,8 +181,8 @@ fn summary_metrics_are_internally_consistent() {
         let rhs = r.queue_time() + r.exec_time();
         assert!(lhs + 1e-6 >= rhs, "{lhs} < {rhs}");
     }
-    assert!(report.turnaround.mean() + 1e-6
-        >= report.queue_time.mean());
+    assert!(report.turnaround.mean + 1e-6
+        >= report.queue_time.mean);
     assert_eq!(report.jobs, world.recorder.n_completed());
 }
 

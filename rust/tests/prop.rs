@@ -645,3 +645,113 @@ fn prop_barrier_merge_matches_single_queue_reference() {
         Ok(())
     });
 }
+
+#[test]
+fn prop_spill_merge_matches_single_sorted_oracle() {
+    use diana::metrics::{MergedRows, Recorder};
+    let root = std::env::temp_dir().join("diana-prop-spill-merge");
+    std::fs::remove_dir_all(&root).ok();
+    prop("k-way spill merge vs sorted-vector oracle", 50, |rng| {
+        // Random shard count; a shard that draws no ordinals stays
+        // empty and contributes no files. Tiny random flush buffers
+        // force many small files with overlapping ordinal ranges, the
+        // case the per-file heap cursors exist for.
+        let shards = 1 + rng.below(6) as usize;
+        let n = rng.below(120) as usize;
+        let dir = root.join("case");
+        std::fs::remove_dir_all(&dir).ok();
+        let mut recs: Vec<Recorder> = (0..shards)
+            .map(|s| {
+                let mut r = Recorder::new(1, 10.0);
+                r.enable_spill_with_buffer(
+                    dir.join(format!("shard-{s}")),
+                    1 + rng.below(9) as usize,
+                )
+                .map_err(|e| e.to_string())?;
+                Ok(r)
+            })
+            .collect::<Result<_, String>>()?;
+        // Duplicate-free ordinals 0..n, each sealed on one random
+        // shard in random global order; every f64 field carries raw
+        // random bits (signed zeros, subnormal magnitudes, either
+        // sign) that must round-trip the hex encoding exactly.
+        let mut order: Vec<u64> = (0..n as u64).collect();
+        for i in (1..order.len()).rev() {
+            let j = rng.below(i as u64 + 1) as usize;
+            order.swap(i, j);
+        }
+        let mut oracle: Vec<(u64, [u64; 6], usize, u32)> = Vec::new();
+        for &o in &order {
+            let draw = |rng: &mut Pcg64| -> f64 {
+                match rng.below(8) {
+                    0 => 0.0,
+                    1 => -0.0,
+                    2 => 1e-300 * rng.next_f64(),
+                    _ => (rng.next_f64() - 0.5) * 1e9,
+                }
+            };
+            let vals = [
+                draw(rng),
+                draw(rng),
+                draw(rng),
+                draw(rng),
+                draw(rng),
+                draw(rng),
+            ];
+            let site = rng.below(64) as usize;
+            let migs = rng.below(7) as u32;
+            let rec = &mut recs[rng.below(shards as u64) as usize];
+            let r = rec.job_mut(JobIdx(0));
+            r.submit = vals[0];
+            r.placed = vals[1];
+            r.enqueued_local = vals[2];
+            r.started = vals[3];
+            r.finished = vals[4];
+            r.delivered = vals[5];
+            r.exec_site = site;
+            r.migrations = migs;
+            rec.seal(JobIdx(0), o).map_err(|e| e.to_string())?;
+            oracle.push((o, vals.map(f64::to_bits), site, migs));
+        }
+        oracle.sort_by_key(|e| e.0);
+        let mut files = Vec::new();
+        for rec in recs.iter_mut() {
+            rec.flush_spill_tail().map_err(|e| e.to_string())?;
+            files.extend(rec.spill_files());
+        }
+        let mut rows =
+            MergedRows::open(&files).map_err(|e| e.to_string())?;
+        let mut got = 0usize;
+        while let Some((o, r)) =
+            rows.next_row().map_err(|e| e.to_string())?
+        {
+            let (wo, bits, site, migs) = oracle[got];
+            if o != wo {
+                return Err(format!("ordinal {o} at rank {got}, want {wo}"));
+            }
+            let have = [
+                r.submit,
+                r.placed,
+                r.enqueued_local,
+                r.started,
+                r.finished,
+                r.delivered,
+            ]
+            .map(f64::to_bits);
+            if have != bits {
+                return Err(format!(
+                    "ordinal {o}: bits {have:?} != {bits:?}"
+                ));
+            }
+            if r.exec_site != site || r.migrations != migs {
+                return Err(format!("ordinal {o}: int fields diverged"));
+            }
+            got += 1;
+        }
+        if got != n {
+            return Err(format!("merged {got} rows, sealed {n}"));
+        }
+        Ok(())
+    });
+    std::fs::remove_dir_all(&root).ok();
+}

@@ -12,8 +12,8 @@ use diana::coordinator::{
     generate_workload, run_simulation, run_simulation_streamed,
     run_simulation_with_faults, RunReport,
 };
+use diana::metrics::SummaryStats;
 use diana::scenario::{FaultEvent, FaultKind, FaultPlan};
-use diana::util::Summary;
 
 /// Field-for-field, bit-for-bit report comparison. Floats are compared
 /// as raw bits: "close" is drift, and drift compounds at 10^6 jobs.
@@ -45,13 +45,25 @@ fn assert_reports_identical(a: &RunReport, b: &RunReport, ctx: &str) {
     assert_eq!(a.delegations, b.delegations, "{ctx}: delegations");
 }
 
-fn assert_summaries_identical(a: &Summary, b: &Summary, ctx: &str, name: &str) {
-    assert_eq!(a.values().len(), b.values().len(), "{ctx}: {name} length");
-    for (i, (x, y)) in a.values().iter().zip(b.values()).enumerate() {
+fn assert_summaries_identical(
+    a: &SummaryStats,
+    b: &SummaryStats,
+    ctx: &str,
+    name: &str,
+) {
+    assert_eq!(a.n, b.n, "{ctx}: {name} count");
+    for (x, y, field) in [
+        (a.mean, b.mean, "mean"),
+        (a.p50, b.p50, "p50"),
+        (a.p95, b.p95, "p95"),
+        (a.p99, b.p99, "p99"),
+        (a.min, b.min, "min"),
+        (a.max, b.max, "max"),
+    ] {
         assert_eq!(
             x.to_bits(),
             y.to_bits(),
-            "{ctx}: {name}[{i}] {x} != {y}"
+            "{ctx}: {name}.{field} {x} != {y}"
         );
     }
 }
@@ -148,4 +160,59 @@ fn spilled_streamed_report_matches_eager_bit_for_bit() {
         world.submitted_jobs()
     );
     std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn parallel_spilled_matches_serial_spilled_and_eager() {
+    // The sharded-spill matrix row: eager in-memory vs serial spill vs
+    // parallel spill at `--sim-threads {2,4}`, all through
+    // `run_simulation`. The parallel runs must actually take the PDES
+    // (no decline recorded) and every report must be byte-identical —
+    // each shard spilled into its own `shard-<p>/` subdirectory and
+    // the k-way merge reassembled one global stream.
+    let root = std::env::temp_dir().join("diana-streamed-equiv-par-spill");
+    std::fs::remove_dir_all(&root).ok();
+    let mut cfg = central_cfg();
+    cfg.seed = 41;
+    cfg.workload.bulk_size = 5;
+    cfg.workload.arrival_rate = 0.002;
+    let (_, eager) = run_simulation(&cfg).unwrap();
+    cfg.workload.source = SourceMode::Streamed;
+    let mut serial_cfg = cfg.clone();
+    serial_cfg.sim.spill_dir =
+        root.join("serial").to_string_lossy().into_owned();
+    let (_, serial) = run_simulation(&serial_cfg).unwrap();
+    assert_reports_identical(&eager, &serial, "serial spill");
+    for threads in [2usize, 4] {
+        let ctx = format!("parallel spill t{threads}");
+        let mut par_cfg = cfg.clone();
+        par_cfg.sim.threads = threads;
+        par_cfg.sim.spill_dir = root
+            .join(format!("par-t{threads}"))
+            .to_string_lossy()
+            .into_owned();
+        let (world, parallel) = run_simulation(&par_cfg).unwrap();
+        assert!(parallel.pdes_parallel, "{ctx}: fell back to serial");
+        assert_eq!(parallel.pdes_decline, None, "{ctx}: decline recorded");
+        assert_reports_identical(&serial, &parallel, &ctx);
+        // Per-shard recycling engaged: peak live sits below the total.
+        assert!(
+            world.peak_live_jobs() < world.submitted_jobs(),
+            "{ctx}: never recycled (peak live {} of {})",
+            world.peak_live_jobs(),
+            world.submitted_jobs()
+        );
+        // The spill base really was sharded.
+        let shards: Vec<String> =
+            std::fs::read_dir(&par_cfg.sim.spill_dir)
+                .unwrap()
+                .map(|e| e.unwrap().file_name().into_string().unwrap())
+                .collect();
+        assert!(
+            shards.iter().all(|n| n.starts_with("shard-")),
+            "{ctx}: unexpected spill layout {shards:?}"
+        );
+        assert!(!shards.is_empty(), "{ctx}: no shard subdirectories");
+    }
+    std::fs::remove_dir_all(&root).ok();
 }
